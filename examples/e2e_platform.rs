@@ -1,0 +1,128 @@
+//! END-TO-END DRIVER (DESIGN.md E9): every layer composed on a real
+//! workload.
+//!
+//! - starts the Submarine server (REST over TCP) with the local PJRT
+//!   submitter,
+//! - a client registers the community template, then submits a DeepFM
+//!   CTR experiment through `POST /api/v1/template/.../submit`
+//!   (zero-code path) *and* a direct Listing-2 style spec,
+//! - the local runtime trains DeepFM for 300 real steps (L1 Pallas
+//!   kernels inside the L2 JAX train-step, executed via PJRT from the L3
+//!   coordinator),
+//! - the client polls status and pulls the loss curve over REST,
+//! - the trained model is registered in the model registry.
+//!
+//! Run: `cargo run --release --example e2e_platform`
+//! (results recorded in EXPERIMENTS.md §E9)
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use submarine::experiment::monitor::ExperimentMonitor;
+use submarine::experiment::spec::ExperimentSpec;
+use submarine::httpd::server::{Server, Services};
+use submarine::orchestrator::local::LocalSubmitter;
+use submarine::sdk::ExperimentClient;
+use submarine::storage::{MetaStore, MetricStore};
+
+fn main() -> anyhow::Result<()> {
+    println!("== Submarine-RS end-to-end (server + REST + real training) ==");
+
+    // ---- server side -------------------------------------------------
+    let store = Arc::new(MetaStore::in_memory());
+    let monitor = Arc::new(ExperimentMonitor::new());
+    let metrics = Arc::new(MetricStore::new());
+    let submitter = Arc::new(LocalSubmitter::new(
+        Arc::clone(&monitor),
+        Arc::clone(&metrics),
+        std::path::Path::new("artifacts"),
+    ));
+    let services = Arc::new(Services::with_parts(
+        store,
+        monitor,
+        Arc::clone(&metrics),
+        Arc::clone(&submitter) as Arc<dyn submarine::orchestrator::Submitter>,
+    ));
+    let server = Arc::new(Server::bind(Arc::clone(&services), 0, None)?);
+    let port = server.port();
+    let stop = server.stopper();
+    let handle = Arc::clone(&server).serve_background();
+    println!("server on 127.0.0.1:{port}");
+
+    // ---- client side (pure REST from here on) -------------------------
+    let client = ExperimentClient::new("127.0.0.1", port);
+
+    // register the community template over REST, then submit with only
+    // parameter values — the §3.2.3 zero-code path
+    client.register_template(&submarine::template::tf_mnist_template())?;
+    let mut params = BTreeMap::new();
+    params.insert("learning_rate".into(), "0.1".into());
+    params.insert("batch_size".into(), "128".into());
+    let mnist_id =
+        client.submit_template("tf-mnist-template", &params)?;
+    println!("zero-code template experiment: {mnist_id}");
+
+    // Listing-2 style explicit spec: DeepFM CTR, 300 real steps
+    let spec = ExperimentSpec::parse(
+        r#"{
+          "meta": {"name": "ctr-deepfm", "framework": "TensorFlow",
+                   "cmd": "python ctr.py"},
+          "environment": {"image": "submarine:deepfm"},
+          "spec": {
+            "Worker": {"replicas": 1, "resources": "cpu=4,memory=4G"}
+          },
+          "workload": {"model": "deepfm", "steps": 300, "lr": 0.8}
+        }"#,
+    )?;
+    let ctr_id = client.create_experiment(&spec)?;
+    println!("spec experiment: {ctr_id} (DeepFM, 300 steps)");
+
+    // poll both to completion over REST
+    for id in [&mnist_id, &ctr_id] {
+        let st =
+            client.wait(id, std::time::Duration::from_secs(1800))?;
+        println!("{id}: {}", st.as_str());
+        assert_eq!(st.as_str(), "Succeeded", "experiment failed");
+    }
+
+    // pull the loss curve over REST and render it
+    let curve = client.metrics(&ctr_id, "loss")?;
+    assert!(curve.len() >= 300, "expected 300 logged steps");
+    let first = curve.first().unwrap().1;
+    let last = curve.last().unwrap().1;
+    println!(
+        "DeepFM loss over {} steps: {:.4} -> {:.4}",
+        curve.len(),
+        first,
+        last
+    );
+    println!("loss curve: {}", services.metrics.sparkline(&ctr_id, "loss", 60));
+    assert!(last < first, "loss must decrease");
+    // print a small log of the curve for EXPERIMENTS.md
+    for (step, v) in curve.iter().step_by(60) {
+        println!("  step {step:>4}  loss {v:.4}");
+    }
+
+    // throughput metric logged by the runtime
+    if let Some((_, sps)) = client
+        .metrics(&ctr_id, "samples_per_s")?
+        .last()
+    {
+        println!("throughput: {sps:.0} samples/s");
+    }
+
+    // register the trained model (§4.2) — lineage back to the experiment
+    let v = services.models.register(
+        "ctr-deepfm",
+        &ctr_id,
+        &[vec![last as f32]],
+        &[("final_loss".into(), last)],
+    )?;
+    println!("model ctr-deepfm v{v} registered (lineage: {ctr_id})");
+
+    // ---- shutdown ------------------------------------------------------
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let _ = std::net::TcpStream::connect(("127.0.0.1", port));
+    handle.join().ok();
+    println!("e2e_platform OK");
+    Ok(())
+}

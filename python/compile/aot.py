@@ -1,0 +1,153 @@
+"""AOT compiler: lower every L2 model artifact to HLO text + emit the
+manifest the Rust runtime loads.
+
+Run once at build time (``make artifacts``); Python never runs on the
+request path.  Outputs, per model:
+
+- ``artifacts/<model>_<artifact>.hlo.txt``  — HLO text per entry point
+  (train_step / grad_step / apply_update / predict)
+- ``artifacts/<model>.params``              — initial parameters, raw
+  little-endian f32, tensors concatenated in PARAM_ORDER
+- ``artifacts/manifest.json``               — shapes/dtypes/offsets for all
+  of the above (the Rust side's single source of truth)
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hlo import to_hlo_text
+from .models import deepfm, mnist_mlp, transformer_tiny
+from .models.common import param_count
+
+MODELS = {
+    "deepfm": deepfm,
+    "mnist_mlp": mnist_mlp,
+    "transformer_tiny": transformer_tiny,
+}
+
+# Entry points lowered for every model, with their example signatures.
+ARTIFACTS = ("train_step", "grad_step", "apply_update", "predict")
+
+
+def _param_specs(mod):
+    params = mod.init_params()
+    return [jax.ShapeDtypeStruct(params[n].shape, jnp.float32)
+            for n in mod.PARAM_ORDER], params
+
+
+def _spec_meta(name, spec):
+    return {"name": name, "shape": list(spec.shape), "dtype": spec.dtype.name}
+
+
+def _artifact_signature(mod, artifact, pspecs):
+    """Example args + input metadata for one entry point."""
+    batch = mod.example_batch()
+    names = list(batch.keys())           # e.g. [ids, vals, labels, lr]
+    data_specs = [batch[n] for n in names]
+    pmeta = [_spec_meta(n, s) for n, s in zip(mod.PARAM_ORDER, pspecs)]
+    if artifact == "train_step":
+        args = pspecs + data_specs
+        meta = pmeta + [_spec_meta(n, s) for n, s in zip(names, data_specs)]
+    elif artifact == "grad_step":
+        args = pspecs + data_specs[:-1]  # no lr
+        meta = pmeta + [_spec_meta(n, s)
+                        for n, s in zip(names[:-1], data_specs[:-1])]
+    elif artifact == "apply_update":
+        lr = data_specs[-1]
+        args = pspecs + pspecs + [lr]
+        meta = (pmeta
+                + [_spec_meta("g_" + n, s)
+                   for n, s in zip(mod.PARAM_ORDER, pspecs)]
+                + [_spec_meta("lr", lr)])
+    elif artifact == "predict":
+        # inputs only (no labels/targets, no lr)
+        n_in = len(names) - 2
+        args = pspecs + data_specs[:n_in]
+        meta = pmeta + [_spec_meta(n, s)
+                        for n, s in zip(names[:n_in], data_specs[:n_in])]
+    else:
+        raise ValueError(artifact)
+    return args, meta
+
+
+def _output_meta(mod, artifact):
+    n = len(mod.PARAM_ORDER)
+    if artifact == "train_step":
+        return [{"name": p} for p in mod.PARAM_ORDER] + [{"name": "loss"}]
+    if artifact == "grad_step":
+        return [{"name": "g_" + p} for p in mod.PARAM_ORDER] + [
+            {"name": "loss"}]
+    if artifact == "apply_update":
+        return [{"name": p} for p in mod.PARAM_ORDER]
+    if artifact == "predict":
+        return [{"name": "out"}]
+    raise ValueError(artifact)
+
+
+def compile_model(name, mod, outdir):
+    pspecs, params = _param_specs(mod)
+    entry = {
+        "param_order": list(mod.PARAM_ORDER),
+        "param_shapes": {n: list(params[n].shape) for n in mod.PARAM_ORDER},
+        "param_count": param_count(params),
+        "params_file": f"{name}.params",
+        "batch_inputs": list(mod.example_batch().keys()),
+        "artifacts": {},
+    }
+    # Dump initial parameters (flat f32, PARAM_ORDER concatenation).
+    with open(os.path.join(outdir, f"{name}.params"), "wb") as f:
+        for pname in mod.PARAM_ORDER:
+            f.write(np.ascontiguousarray(
+                params[pname], dtype="<f4").tobytes())
+
+    for artifact in ARTIFACTS:
+        fn = getattr(mod, artifact)
+        args, in_meta = _artifact_signature(mod, artifact, pspecs)
+        text = to_hlo_text(fn, *args)
+        fname = f"{name}_{artifact}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(text)
+        entry["artifacts"][artifact] = {
+            "file": fname,
+            "inputs": in_meta,
+            "outputs": _output_meta(mod, artifact),
+        }
+        print(f"  {fname}: {len(text)} chars, {len(in_meta)} inputs")
+    return entry
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory for artifacts")
+    ap.add_argument("--models", default=",".join(MODELS),
+                    help="comma-separated subset of models to compile")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    # Merge into an existing manifest so `--models <subset>` recompiles
+    # incrementally instead of clobbering the other entries.
+    manifest = {"format": 1, "models": {}}
+    manifest_path = os.path.join(args.out, "manifest.json")
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            try:
+                manifest = json.load(f)
+            except json.JSONDecodeError:
+                pass
+    for name in args.models.split(","):
+        print(f"compiling {name} ...")
+        manifest["models"][name] = compile_model(name, MODELS[name], args.out)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""HLO-text lowering helper.
+
+HLO *text* (not serialized HloModuleProto) is the Python->Rust interchange
+format: jax >= 0.5 emits protos with 64-bit instruction ids which the xla
+crate's XLA (xla_extension 0.5.1) rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids, so text round-trips cleanly.  Lower with
+``return_tuple=True`` and unwrap with ``Literal::to_tuple*`` on the Rust
+side.
+"""
+
+import jax
+from jax._src.lib import xla_client as xc
+
+
+def to_hlo_text(fn, *example_args) -> str:
+    """Lower ``jax.jit(fn)`` at the example shapes to XLA HLO text."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()

@@ -1,0 +1,6 @@
+"""L1 Pallas kernels (build-time only) + pure-jnp oracles."""
+from .fm_interaction import fm_interaction
+from .dense import dense
+from . import ref
+
+__all__ = ["fm_interaction", "dense", "ref"]

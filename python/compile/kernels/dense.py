@@ -1,0 +1,81 @@
+"""Blocked dense (matmul + bias + activation) Pallas kernel.
+
+Used for the DeepFM deep tower and the MNIST MLP layers.  The grid tiles
+the output matrix in (block_m, block_n) panels; the contraction dimension is
+kept whole inside a tile (layer widths here are <= 1024, so an in_dim x
+block_n panel of f32 weights is well under a VMEM budget).  Tile sizes
+default to MXU-friendly multiples of 128 — see DESIGN.md
+§Hardware-Adaptation for the GPU->TPU mapping rationale.
+
+Like ``fm_interaction``, the forward is Pallas and the backward is the
+analytic jnp gradient via ``jax.custom_vjp`` so train steps lower into a
+single HLO module.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 128
+
+
+def _dense_relu_kernel(x_ref, w_ref, b_ref, o_ref):
+    y = jnp.dot(x_ref[...], w_ref[...]) + b_ref[...][None, :]
+    o_ref[...] = jnp.maximum(y, 0.0)
+
+
+def _dense_none_kernel(x_ref, w_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...]) + b_ref[...][None, :]
+
+
+def _dense_pallas(x, w, b, activation, block_m, block_n):
+    m, kdim = x.shape
+    _, n = w.shape
+    pm = (-m) % block_m
+    pn = (-n) % block_n
+    xp = jnp.pad(x, ((0, pm), (0, 0))) if pm else x
+    wp = jnp.pad(w, ((0, 0), (0, pn))) if pn else w
+    bp = jnp.pad(b, (0, pn)) if pn else b
+    mm, nn = m + pm, n + pn
+    kernel = _dense_relu_kernel if activation == "relu" else _dense_none_kernel
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((mm, nn), x.dtype),
+        grid=(mm // block_m, nn // block_n),
+        in_specs=[
+            pl.BlockSpec((block_m, kdim), lambda i, j: (i, 0)),
+            pl.BlockSpec((kdim, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def dense(x, w, b, activation="relu",
+          block_m=DEFAULT_BLOCK_M, block_n=DEFAULT_BLOCK_N):
+    """Dense layer f32[M,K] @ f32[K,N] + f32[N], Pallas forward."""
+    return _dense_pallas(x, w, b, activation, block_m, block_n)
+
+
+def _dense_fwd(x, w, b, activation, block_m, block_n):
+    y = _dense_pallas(x, w, b, activation, block_m, block_n)
+    return y, (x, w, y)
+
+
+def _dense_bwd(activation, block_m, block_n, res, g):
+    x, w, y = res
+    if activation == "relu":
+        g = g * (y > 0).astype(g.dtype)
+    dx = jnp.dot(g, w.T)
+    dw = jnp.dot(x.T, g)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)

@@ -1,0 +1,68 @@
+"""Pallas kernel for the Factorization-Machine second-order interaction.
+
+This is the compute hot-spot of DeepFM (the paper's Listing-3 headline
+workload).  The kernel is tiled over the batch dimension with a BlockSpec so
+each block's working set (block_b * fields * k floats) stays far below a
+TPU-core VMEM budget (~16 MiB); on the CPU PJRT plugin it runs through
+``interpret=True`` (real-TPU lowering would emit a Mosaic custom-call that
+the CPU client cannot execute — see DESIGN.md §Hardware-Adaptation).
+
+The kernel is wrapped in ``jax.custom_vjp`` so the DeepFM training step can
+differentiate through it: the forward pass is the Pallas kernel, the
+backward pass is the analytic gradient (d/dv_f = s - v_f per latent dim),
+expressed in jnp and fused by XLA into the same HLO module.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 128
+
+
+def _fm_kernel(v_ref, o_ref):
+    """One batch tile: o[b] = 0.5 * sum_k((sum_f v)^2 - sum_f v^2)."""
+    v = v_ref[...]                      # [bb, F, K]
+    s = jnp.sum(v, axis=1)              # [bb, K]
+    q = jnp.sum(v * v, axis=1)          # [bb, K]
+    o_ref[...] = 0.5 * jnp.sum(s * s - q, axis=-1)
+
+
+def _fm_pallas(v, block_b):
+    b, f, k = v.shape
+    # Pad the batch up to a block multiple so the grid tiles exactly; the
+    # pad rows are zeros and are sliced off below.
+    pb = (-b) % block_b
+    if pb:
+        v = jnp.pad(v, ((0, pb), (0, 0), (0, 0)))
+    grid = (v.shape[0] // block_b,)
+    out = pl.pallas_call(
+        _fm_kernel,
+        out_shape=jax.ShapeDtypeStruct((v.shape[0],), v.dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_b, f, k), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        interpret=True,
+    )(v)
+    return out[:b]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def fm_interaction(v, block_b=DEFAULT_BLOCK_B):
+    """FM second-order term, f32[B,F,K] -> f32[B] (Pallas forward)."""
+    return _fm_pallas(v, block_b)
+
+
+def _fm_fwd(v, block_b):
+    return _fm_pallas(v, block_b), v
+
+
+def _fm_bwd(block_b, v, g):
+    # d out / d v[b,f,k] = sum_f' v[b,f',k] - v[b,f,k]
+    s = jnp.sum(v, axis=1, keepdims=True)     # [B,1,K]
+    return (g[:, None, None] * (s - v),)
+
+
+fm_interaction.defvjp(_fm_fwd, _fm_bwd)

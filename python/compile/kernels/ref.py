@@ -1,0 +1,41 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every Pallas kernel in this package
+must match its oracle under `numpy.testing.assert_allclose` across the
+shape/dtype sweeps in ``python/tests/test_kernels.py``.
+"""
+
+import jax.numpy as jnp
+
+
+def fm_interaction_ref(v):
+    """Factorization-Machine second-order interaction term.
+
+    Args:
+      v: f32[batch, fields, k] — per-field embedding vectors (already scaled
+         by the feature values).
+
+    Returns:
+      f32[batch] — 0.5 * sum_k ((sum_f v_fk)^2 - sum_f v_fk^2), i.e. the
+      sum over all unordered field pairs of <v_i, v_j>.
+    """
+    s = jnp.sum(v, axis=1)            # [B, K]
+    q = jnp.sum(v * v, axis=1)        # [B, K]
+    return 0.5 * jnp.sum(s * s - q, axis=-1)
+
+
+def dense_ref(x, w, b, activation="relu"):
+    """Dense layer oracle: x @ w + b with optional activation.
+
+    Args:
+      x: f32[batch, in_dim]
+      w: f32[in_dim, out_dim]
+      b: f32[out_dim]
+      activation: "relu" | "none"
+    """
+    y = jnp.dot(x, w) + b[None, :]
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return y

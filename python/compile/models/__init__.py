@@ -1,0 +1,2 @@
+"""L2 JAX models (build-time only)."""
+from . import deepfm, mnist_mlp, transformer_tiny  # noqa: F401

@@ -1,0 +1,54 @@
+"""Shared building blocks for the L2 JAX models.
+
+Every model in this package exposes the same AOT surface so the Rust
+runtime can treat them uniformly:
+
+- ``PARAM_ORDER``: ordered parameter names (the flat calling convention).
+- ``init_params(seed) -> dict[name, np.ndarray]``
+- ``train_step(*params, *batch, lr) -> (*new_params, loss)``
+- ``grad_step(*params, *batch) -> (*grads, loss)``  (for data-parallel
+  workers: Rust all-reduces the gradients and calls ``apply_update``)
+- ``apply_update(*params, *grads, lr) -> (*new_params,)``
+- ``predict(*params, *inputs) -> outputs``
+
+All artifacts are lowered with static example shapes by ``compile/aot.py``.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def sigmoid_bce_with_logits(logits, labels):
+    """Numerically stable binary cross-entropy over logits, mean-reduced."""
+    # max(x,0) - x*y + log(1 + exp(-|x|))
+    zeros = jnp.zeros_like(logits)
+    loss = jnp.maximum(logits, zeros) - logits * labels + jnp.log1p(
+        jnp.exp(-jnp.abs(logits)))
+    return jnp.mean(loss)
+
+
+def softmax_cross_entropy(logits, labels):
+    """Mean softmax cross-entropy; labels are int class ids.
+
+    logits: f32[..., C], labels: i32[...].
+    """
+    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+    logz = jnp.log(jnp.sum(jnp.exp(logits), axis=-1))
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - ll)
+
+
+def sgd(params, grads, lr):
+    """Plain SGD update over a tuple of arrays."""
+    return tuple(p - lr * g for p, g in zip(params, grads))
+
+
+def glorot(rng, shape):
+    fan_in = shape[0] if len(shape) > 1 else shape[0]
+    fan_out = shape[-1]
+    limit = np.sqrt(6.0 / (fan_in + fan_out))
+    return rng.uniform(-limit, limit, size=shape).astype(np.float32)
+
+
+def param_count(params):
+    return int(sum(np.prod(p.shape) for p in params.values()))

@@ -1,0 +1,108 @@
+"""DeepFM (Guo et al., IJCAI'17) — the paper's Listing-3 headline workload.
+
+CTR prediction over hashed sparse features:
+
+    logit = b0 + <linear term> + <FM 2nd-order term> + <deep tower>
+
+The FM second-order term is the Pallas ``fm_interaction`` kernel; the deep
+tower layers are the Pallas ``dense`` kernel.  Input convention follows the
+Criteo setup the Submarine SDK's DeepFM targets: ``F`` feature fields, each
+hashed into a shared vocabulary of size ``V``; a batch is ``(ids i32[B,F],
+vals f32[B,F], labels f32[B])``.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..kernels import dense, fm_interaction
+from .common import glorot, sgd, sigmoid_bce_with_logits
+
+# Static AOT configuration (mirrors deepfm.json in the Submarine SDK docs).
+BATCH = 256
+FIELDS = 39
+# Hashed-vocabulary size.  5k (not Criteo's millions) so plain-SGD sparse
+# updates revisit each id often enough to converge in a few hundred demo
+# steps — the platform behaviour under test, not CTR SOTA.
+VOCAB = 5_000
+EMB_DIM = 8
+HIDDEN = (200, 200)
+
+PARAM_ORDER = ("emb", "lin", "b0", "w1", "b1", "w2", "b2", "w3", "b3")
+
+
+def init_params(seed=0):
+    rng = np.random.default_rng(seed)
+    d_in = FIELDS * EMB_DIM
+    return {
+        "emb": (rng.normal(size=(VOCAB, EMB_DIM)) * 0.01).astype(np.float32),
+        "lin": np.zeros((VOCAB,), np.float32),
+        "b0": np.zeros((1,), np.float32),
+        "w1": glorot(rng, (d_in, HIDDEN[0])),
+        "b1": np.zeros((HIDDEN[0],), np.float32),
+        "w2": glorot(rng, (HIDDEN[0], HIDDEN[1])),
+        "b2": np.zeros((HIDDEN[1],), np.float32),
+        "w3": glorot(rng, (HIDDEN[1], 1)),
+        "b3": np.zeros((1,), np.float32),
+    }
+
+
+def forward(params, ids, vals):
+    """logits f32[B] from (ids i32[B,F], vals f32[B,F])."""
+    emb, lin, b0, w1, b1, w2, b2, w3, b3 = params
+    v = emb[ids] * vals[..., None]            # [B, F, K]
+    linear = jnp.sum(lin[ids] * vals, axis=1)  # [B]
+    fm = fm_interaction(v)                     # [B] — Pallas kernel
+    h = v.reshape(v.shape[0], -1)              # [B, F*K]
+    h = dense(h, w1, b1, "relu")               # Pallas kernel
+    h = dense(h, w2, b2, "relu")
+    deep = dense(h, w3, b3, "none")[:, 0]      # [B]
+    return b0[0] + linear + fm + deep
+
+
+def loss_fn(params, ids, vals, labels):
+    return sigmoid_bce_with_logits(forward(params, ids, vals), labels)
+
+
+def _split(args):
+    n = len(PARAM_ORDER)
+    return tuple(args[:n]), args[n:]
+
+
+def train_step(*args):
+    """(*params, ids, vals, labels, lr) -> (*new_params, loss)."""
+    params, rest = _split(args)
+    ids, vals, labels, lr = rest
+    loss, grads = jax.value_and_grad(loss_fn)(params, ids, vals, labels)
+    return sgd(params, grads, lr) + (loss,)
+
+
+def grad_step(*args):
+    """(*params, ids, vals, labels) -> (*grads, loss)."""
+    params, rest = _split(args)
+    ids, vals, labels = rest
+    loss, grads = jax.value_and_grad(loss_fn)(params, ids, vals, labels)
+    return tuple(grads) + (loss,)
+
+
+def apply_update(*args):
+    """(*params, *grads, lr) -> (*new_params,)."""
+    n = len(PARAM_ORDER)
+    params, grads, lr = args[:n], args[n:2 * n], args[2 * n]
+    return sgd(params, grads, lr)
+
+
+def predict(*args):
+    """(*params, ids, vals) -> probabilities f32[B]."""
+    params, rest = _split(args)
+    ids, vals = rest
+    return (jax.nn.sigmoid(forward(params, ids, vals)),)
+
+
+def example_batch():
+    return {
+        "ids": jax.ShapeDtypeStruct((BATCH, FIELDS), jnp.int32),
+        "vals": jax.ShapeDtypeStruct((BATCH, FIELDS), jnp.float32),
+        "labels": jax.ShapeDtypeStruct((BATCH,), jnp.float32),
+        "lr": jax.ShapeDtypeStruct((), jnp.float32),
+    }

@@ -1,0 +1,85 @@
+"""MNIST MLP — the workload of the paper's Listings 1/2/4 (``mnist.py``).
+
+A 784-256-128-10 classifier trained with softmax cross-entropy.  Dense
+layers are the Pallas ``dense`` kernel.  This is the model the distributed
+(TonY-like) driver trains for the Ke.com speedup experiment (E3): the
+``grad_step`` artifact runs on each simulated worker over its data shard,
+Rust all-reduces the gradients, and ``apply_update`` applies SGD.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..kernels import dense
+from .common import glorot, sgd, softmax_cross_entropy
+
+BATCH = 128
+IN_DIM = 784
+HIDDEN = (256, 128)
+CLASSES = 10
+
+PARAM_ORDER = ("w1", "b1", "w2", "b2", "w3", "b3")
+
+
+def init_params(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w1": glorot(rng, (IN_DIM, HIDDEN[0])),
+        "b1": np.zeros((HIDDEN[0],), np.float32),
+        "w2": glorot(rng, (HIDDEN[0], HIDDEN[1])),
+        "b2": np.zeros((HIDDEN[1],), np.float32),
+        "w3": glorot(rng, (HIDDEN[1], CLASSES)),
+        "b3": np.zeros((CLASSES,), np.float32),
+    }
+
+
+def forward(params, x):
+    w1, b1, w2, b2, w3, b3 = params
+    h = dense(x, w1, b1, "relu")
+    h = dense(h, w2, b2, "relu")
+    return dense(h, w3, b3, "none")
+
+
+def loss_fn(params, x, y):
+    return softmax_cross_entropy(forward(params, x), y)
+
+
+def _split(args):
+    n = len(PARAM_ORDER)
+    return tuple(args[:n]), args[n:]
+
+
+def train_step(*args):
+    """(*params, x, y, lr) -> (*new_params, loss)."""
+    params, (x, y, lr) = _split(args)
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+    return sgd(params, grads, lr) + (loss,)
+
+
+def grad_step(*args):
+    """(*params, x, y) -> (*grads, loss)."""
+    params, (x, y) = _split(args)
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+    return tuple(grads) + (loss,)
+
+
+def apply_update(*args):
+    """(*params, *grads, lr) -> (*new_params,)."""
+    n = len(PARAM_ORDER)
+    params, grads, lr = args[:n], args[n:2 * n], args[2 * n]
+    return sgd(params, grads, lr)
+
+
+def predict(*args):
+    """(*params, x) -> logits f32[B, 10]."""
+    params, (x,) = _split(args)
+    return (forward(params, x),)
+
+
+def example_batch():
+    return {
+        "x": jax.ShapeDtypeStruct((BATCH, IN_DIM), jnp.float32),
+        "y": jax.ShapeDtypeStruct((BATCH,), jnp.int32),
+        "lr": jax.ShapeDtypeStruct((), jnp.float32),
+    }

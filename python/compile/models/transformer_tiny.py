@@ -1,0 +1,132 @@
+"""Tiny transformer encoder — the BERT-Large proxy for the LinkedIn use
+case (paper §6.2: 24-layer, 300M+ parameter BERT on a 50-node cluster).
+
+One CPU core cannot train BERT-Large; per DESIGN.md §Substitutions this
+module keeps the *structure* (token embedding, multi-head self-attention,
+GELU FFN, layernorm, tied LM head) at a tiny scale, and the LinkedIn bench
+scales measured step times with an analytic FLOP model to the paper's
+cluster.  FFN layers use the Pallas ``dense`` kernel.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..kernels import dense
+from .common import glorot, sgd, softmax_cross_entropy
+
+BATCH = 8
+SEQ = 32
+VOCAB = 1_000
+D_MODEL = 64
+N_HEADS = 4
+N_LAYERS = 2
+D_FF = 256
+
+# Parameter layout: embedding + positional, then per layer
+# (wq, wk, wv, wo, ln1_g, ln1_b, wff1, bff1, wff2, bff2, ln2_g, ln2_b).
+_LAYER_PARAMS = ("wq", "wk", "wv", "wo", "ln1_g", "ln1_b",
+                 "wff1", "bff1", "wff2", "bff2", "ln2_g", "ln2_b")
+PARAM_ORDER = ("emb", "pos") + tuple(
+    f"l{i}_{p}" for i in range(N_LAYERS) for p in _LAYER_PARAMS)
+
+
+def init_params(seed=0):
+    rng = np.random.default_rng(seed)
+    params = {
+        "emb": (rng.normal(size=(VOCAB, D_MODEL)) * 0.02).astype(np.float32),
+        "pos": (rng.normal(size=(SEQ, D_MODEL)) * 0.02).astype(np.float32),
+    }
+    for i in range(N_LAYERS):
+        params[f"l{i}_wq"] = glorot(rng, (D_MODEL, D_MODEL))
+        params[f"l{i}_wk"] = glorot(rng, (D_MODEL, D_MODEL))
+        params[f"l{i}_wv"] = glorot(rng, (D_MODEL, D_MODEL))
+        params[f"l{i}_wo"] = glorot(rng, (D_MODEL, D_MODEL))
+        params[f"l{i}_ln1_g"] = np.ones((D_MODEL,), np.float32)
+        params[f"l{i}_ln1_b"] = np.zeros((D_MODEL,), np.float32)
+        params[f"l{i}_wff1"] = glorot(rng, (D_MODEL, D_FF))
+        params[f"l{i}_bff1"] = np.zeros((D_FF,), np.float32)
+        params[f"l{i}_wff2"] = glorot(rng, (D_FF, D_MODEL))
+        params[f"l{i}_bff2"] = np.zeros((D_MODEL,), np.float32)
+        params[f"l{i}_ln2_g"] = np.ones((D_MODEL,), np.float32)
+        params[f"l{i}_ln2_b"] = np.zeros((D_MODEL,), np.float32)
+    return params
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _attention(x, wq, wk, wv, wo):
+    b, s, d = x.shape
+    hd = d // N_HEADS
+    q = (x @ wq).reshape(b, s, N_HEADS, hd).transpose(0, 2, 1, 3)
+    k = (x @ wk).reshape(b, s, N_HEADS, hd).transpose(0, 2, 1, 3)
+    v = (x @ wv).reshape(b, s, N_HEADS, hd).transpose(0, 2, 1, 3)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(hd)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return out @ wo
+
+
+def forward(params, ids):
+    p = dict(zip(PARAM_ORDER, params))
+    b, s = ids.shape
+    x = p["emb"][ids] + p["pos"][None, :s]
+    for i in range(N_LAYERS):
+        h = _layernorm(x, p[f"l{i}_ln1_g"], p[f"l{i}_ln1_b"])
+        x = x + _attention(h, p[f"l{i}_wq"], p[f"l{i}_wk"],
+                           p[f"l{i}_wv"], p[f"l{i}_wo"])
+        h = _layernorm(x, p[f"l{i}_ln2_g"], p[f"l{i}_ln2_b"])
+        h2 = h.reshape(b * s, D_MODEL)
+        h2 = dense(h2, p[f"l{i}_wff1"], p[f"l{i}_bff1"], "relu")  # Pallas
+        h2 = dense(h2, p[f"l{i}_wff2"], p[f"l{i}_bff2"], "none")  # Pallas
+        x = x + h2.reshape(b, s, D_MODEL)
+    return x @ p["emb"].T  # tied LM head: logits f32[B,S,V]
+
+
+def loss_fn(params, ids, targets):
+    return softmax_cross_entropy(forward(params, ids), targets)
+
+
+def _split(args):
+    n = len(PARAM_ORDER)
+    return tuple(args[:n]), args[n:]
+
+
+def train_step(*args):
+    """(*params, ids, targets, lr) -> (*new_params, loss)."""
+    params, (ids, targets, lr) = _split(args)
+    loss, grads = jax.value_and_grad(loss_fn)(params, ids, targets)
+    return sgd(params, grads, lr) + (loss,)
+
+
+def grad_step(*args):
+    """(*params, ids, targets) -> (*grads, loss)."""
+    params, (ids, targets) = _split(args)
+    loss, grads = jax.value_and_grad(loss_fn)(params, ids, targets)
+    return tuple(grads) + (loss,)
+
+
+def apply_update(*args):
+    """(*params, *grads, lr) -> (*new_params,)."""
+    n = len(PARAM_ORDER)
+    params, grads, lr = args[:n], args[n:2 * n], args[2 * n]
+    return sgd(params, grads, lr)
+
+
+def predict(*args):
+    """(*params, ids) -> logits f32[B,S,V]."""
+    params, (ids,) = _split(args)
+    return (forward(params, ids),)
+
+
+def example_batch():
+    return {
+        "ids": jax.ShapeDtypeStruct((BATCH, SEQ), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((BATCH, SEQ), jnp.int32),
+        "lr": jax.ShapeDtypeStruct((), jnp.float32),
+    }

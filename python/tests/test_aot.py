@@ -1,0 +1,81 @@
+"""AOT pipeline checks: artifacts exist, manifest is self-consistent, and
+the params dump round-trips against ``init_params``."""
+
+import json
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from compile.aot import ARTIFACTS, MODELS
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+
+
+def _manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_covers_all_models_and_artifacts():
+    man = _manifest()
+    assert set(man["models"]) == set(MODELS)
+    for name, entry in man["models"].items():
+        assert set(entry["artifacts"]) == set(ARTIFACTS)
+        for art in entry["artifacts"].values():
+            assert os.path.exists(os.path.join(ART, art["file"]))
+
+
+def test_hlo_files_are_text_modules():
+    man = _manifest()
+    for entry in man["models"].values():
+        for art in entry["artifacts"].values():
+            with open(os.path.join(ART, art["file"])) as f:
+                head = f.read(200)
+            assert "HloModule" in head, art["file"]
+
+
+def test_params_files_match_shapes_and_values():
+    man = _manifest()
+    for name, entry in man["models"].items():
+        expect = MODELS[name].init_params()
+        path = os.path.join(ART, entry["params_file"])
+        raw = np.fromfile(path, dtype="<f4")
+        total = sum(int(np.prod(entry["param_shapes"][p]))
+                    for p in entry["param_order"])
+        assert raw.size == total
+        off = 0
+        for p in entry["param_order"]:
+            shape = entry["param_shapes"][p]
+            n = int(np.prod(shape))
+            got = raw[off:off + n].reshape(shape)
+            np.testing.assert_allclose(got, expect[p], rtol=1e-6)
+            off += n
+
+
+def test_manifest_input_shapes_match_models():
+    man = _manifest()
+    for name, entry in man["models"].items():
+        mod = MODELS[name]
+        ts = entry["artifacts"]["train_step"]["inputs"]
+        # first inputs are params in PARAM_ORDER
+        for meta, pname in zip(ts, entry["param_order"]):
+            assert meta["name"] == pname
+            assert meta["shape"] == entry["param_shapes"][pname]
+        # remaining are the batch inputs
+        batch = mod.example_batch()
+        tail = ts[len(entry["param_order"]):]
+        assert [m["name"] for m in tail] == list(batch.keys())
+
+
+def test_train_step_outputs_are_params_plus_loss():
+    man = _manifest()
+    for entry in man["models"].values():
+        outs = entry["artifacts"]["train_step"]["outputs"]
+        assert [o["name"] for o in outs] == entry["param_order"] + ["loss"]

@@ -1,0 +1,140 @@
+"""Kernel-vs-oracle correctness: the CORE signal for the L1 layer.
+
+Hypothesis sweeps shapes (including non-divisible-by-block sizes, which
+exercise the pad/slice path) and values; every case must match the
+pure-jnp oracle to float32 tolerance, for both forward and gradients.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dense, fm_interaction, ref
+
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+def _arr(rng, shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------- fm kernel
+
+@settings(max_examples=30, deadline=None)
+@given(
+    b=st.integers(1, 300),
+    f=st.integers(1, 48),
+    k=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fm_matches_ref(b, f, k, seed):
+    rng = np.random.default_rng(seed)
+    v = _arr(rng, (b, f, k))
+    np.testing.assert_allclose(
+        fm_interaction(v), ref.fm_interaction_ref(v), **TOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 64), f=st.integers(2, 16), k=st.integers(1, 8),
+       seed=st.integers(0, 2**31 - 1))
+def test_fm_grad_matches_ref(b, f, k, seed):
+    rng = np.random.default_rng(seed)
+    v = _arr(rng, (b, f, k))
+    g1 = jax.grad(lambda v: jnp.sum(fm_interaction(v) ** 2))(v)
+    g2 = jax.grad(lambda v: jnp.sum(ref.fm_interaction_ref(v) ** 2))(v)
+    np.testing.assert_allclose(g1, g2, **TOL)
+
+
+@pytest.mark.parametrize("block_b", [1, 8, 128, 256])
+def test_fm_block_size_invariance(block_b):
+    rng = np.random.default_rng(0)
+    v = _arr(rng, (100, 13, 8))
+    np.testing.assert_allclose(
+        fm_interaction(v, block_b), ref.fm_interaction_ref(v), **TOL)
+
+
+def test_fm_zero_input():
+    v = jnp.zeros((5, 4, 3), jnp.float32)
+    np.testing.assert_allclose(fm_interaction(v), np.zeros(5), **TOL)
+
+
+def test_fm_single_field_is_zero():
+    # One field has no pairwise interactions.
+    rng = np.random.default_rng(1)
+    v = _arr(rng, (17, 1, 8))
+    np.testing.assert_allclose(fm_interaction(v), np.zeros(17), **TOL)
+
+
+def test_fm_two_fields_is_dot_product():
+    rng = np.random.default_rng(2)
+    v = _arr(rng, (9, 2, 6))
+    expect = np.sum(np.asarray(v[:, 0]) * np.asarray(v[:, 1]), axis=-1)
+    np.testing.assert_allclose(fm_interaction(v), expect, **TOL)
+
+
+# ------------------------------------------------------------- dense kernel
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.integers(1, 300),
+    k=st.integers(1, 96),
+    n=st.integers(1, 200),
+    act=st.sampled_from(["relu", "none"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_matches_ref(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _arr(rng, (m, k)), _arr(rng, (k, n)), _arr(rng, (n,))
+    np.testing.assert_allclose(
+        dense(x, w, b, act), ref.dense_ref(x, w, b, act), **TOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 64), k=st.integers(1, 32), n=st.integers(1, 48),
+       seed=st.integers(0, 2**31 - 1))
+def test_dense_grads_match_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _arr(rng, (m, k)), _arr(rng, (k, n)), _arr(rng, (n,))
+
+    def f_ker(x, w, b):
+        return jnp.sum(dense(x, w, b, "relu") ** 2)
+
+    def f_ref(x, w, b):
+        return jnp.sum(ref.dense_ref(x, w, b, "relu") ** 2)
+
+    g1 = jax.grad(f_ker, argnums=(0, 1, 2))(x, w, b)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, e in zip(g1, g2):
+        np.testing.assert_allclose(a, e, **TOL)
+
+
+@pytest.mark.parametrize("bm,bn", [(1, 1), (8, 16), (128, 128), (256, 64)])
+def test_dense_block_size_invariance(bm, bn):
+    rng = np.random.default_rng(3)
+    x, w, b = _arr(rng, (90, 33)), _arr(rng, (33, 70)), _arr(rng, (70,))
+    np.testing.assert_allclose(
+        dense(x, w, b, "relu", bm, bn), ref.dense_ref(x, w, b), **TOL)
+
+
+def test_dense_identity():
+    eye = jnp.eye(16, dtype=jnp.float32)
+    b = jnp.zeros((16,), jnp.float32)
+    rng = np.random.default_rng(4)
+    x = _arr(rng, (5, 16))
+    np.testing.assert_allclose(dense(x, eye, b, "none"), x, **TOL)
+
+
+def test_dense_relu_clamps():
+    x = jnp.asarray([[-1.0, 2.0]], jnp.float32)
+    w = jnp.eye(2, dtype=jnp.float32)
+    b = jnp.zeros((2,), jnp.float32)
+    np.testing.assert_allclose(
+        dense(x, w, b, "relu"), [[0.0, 2.0]], **TOL)
+
+
+def test_dense_rejects_bad_activation():
+    with pytest.raises(ValueError):
+        ref.dense_ref(jnp.zeros((1, 1)), jnp.zeros((1, 1)),
+                      jnp.zeros((1,)), "tanh")

@@ -1,0 +1,60 @@
+//! E1 — paper Table 1: feature comparison across platforms.
+//!
+//! Submarine-RS's column is generated from the capability registry wired
+//! to this codebase; the other columns come from the paper's data.
+//! Differences from the paper's own Submarine column are printed
+//! explicitly (they are the §4 in-progress features this reproduction
+//! implements).
+//!
+//! Run: `cargo bench --bench feature_matrix`
+
+use submarine::platform::features::{FeatureMatrix, FEATURES, PLATFORMS};
+use submarine::util::bench::Table;
+
+fn main() {
+    println!("E1: feature matrix (paper Table 1)");
+    let mut header: Vec<&str> = vec!["Feature"];
+    header.extend(PLATFORMS.iter());
+    header.push("Submarine-RS");
+    let mut t = Table::new(
+        "Table 1 — comparisons among Submarine and other platforms \
+         (v existing, 0 in-progress, Δ future)",
+        &header,
+    );
+    let rs = FeatureMatrix::submarine_rs();
+    for (i, feature) in FEATURES.iter().enumerate() {
+        let mut row = vec![feature.to_string()];
+        for p in PLATFORMS {
+            row.push(
+                FeatureMatrix::platform_column(p)[i].symbol().to_string(),
+            );
+        }
+        row.push(rs[i].1.symbol().to_string());
+        t.row(&row);
+    }
+    t.print();
+
+    // explicit diff vs the paper's Submarine column
+    let paper = FeatureMatrix::submarine_paper();
+    let mut diffs = Vec::new();
+    for ((name, p), (_, r)) in paper.iter().zip(&rs) {
+        if p != r {
+            diffs.push(format!(
+                "  {name}: paper '{}' -> here '{}'",
+                p.symbol(),
+                r.symbol()
+            ));
+        }
+    }
+    if diffs.is_empty() {
+        println!("Submarine-RS column matches the paper exactly.");
+    } else {
+        println!(
+            "deltas vs the paper's Submarine column (the §4 in-progress \
+             features are implemented here):"
+        );
+        for d in diffs {
+            println!("{d}");
+        }
+    }
+}

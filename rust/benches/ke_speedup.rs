@@ -1,0 +1,111 @@
+//! E3 — paper §6.1 (Ke.com): "The performances of these speech
+//! recognition workloads running on two nodes can achieve 1.8 times
+//! faster than running on a single node" on a 30+-node cluster with 2
+//! GPUs per node.
+//!
+//! Regenerates the speedup curve with the TonY-like driver: real PJRT
+//! grad-steps per worker (MNIST MLP stands in for the speech model —
+//! DESIGN.md §Substitutions), rust-side all-reduce, ring network model.
+//! The headline row is `workers=2`; the paper's 1.8x falls out of the
+//! comm/compute ratio at 10 GbE.
+//!
+//! Run: `cargo bench --bench ke_speedup`
+
+use submarine::orchestrator::tony::{self, NetworkModel, TonyConfig};
+use submarine::runtime::Engine;
+use submarine::util::bench::Table;
+
+fn main() {
+    println!("E3: distributed training speedup (paper §6.1, Ke.com)");
+    let engine = match Engine::open_default() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("cannot open artifacts ({e}); run `make artifacts`");
+            std::process::exit(1);
+        }
+    };
+
+    let mut t = Table::new(
+        "data-parallel speedup, MNIST MLP (Ke.com stand-in), 10 GbE model",
+        &["nodes", "compute/step", "comm/step", "sim step/step",
+          "samples/s", "speedup", "paper"],
+    );
+    let mut base = None;
+    for workers in [1usize, 2, 4, 8] {
+        let cfg = TonyConfig {
+            model: "mnist_mlp".into(),
+            workers,
+            steps: 40,
+            lr: 0.1,
+            seed: 7,
+            ..Default::default()
+        };
+        let (_p, rep) = tony::run(&engine, &cfg).expect("run");
+        let speedup = match base {
+            None => {
+                base = Some(rep.samples_per_s);
+                1.0
+            }
+            Some(b) => rep.samples_per_s / b,
+        };
+        t.row(&[
+            workers.to_string(),
+            format!("{:.2}ms", rep.compute_per_step_s * 1e3),
+            format!("{:.2}ms", rep.comm_per_step_s * 1e3),
+            format!("{:.2}ms", rep.sim_step_s * 1e3),
+            format!("{:.0}", rep.samples_per_s),
+            format!("{speedup:.2}x"),
+            if workers == 2 { "1.8x".into() } else { "-".to_string() },
+        ]);
+    }
+    t.print();
+
+    // ---- bandwidth sensitivity: where the 1.8x comes from.
+    // Measure compute ONCE (it does not depend on the network), then
+    // recompose the step-time model per bandwidth — keeps the sweep
+    // monotonic instead of re-sampling noisy wall-clock per row.
+    let cfg1 = TonyConfig {
+        model: "mnist_mlp".into(),
+        workers: 1,
+        steps: 40,
+        lr: 0.1,
+        seed: 7,
+        ..Default::default()
+    };
+    let cfg2 = TonyConfig {
+        workers: 2,
+        ..cfg1.clone()
+    };
+    let (_p, r1) = tony::run(&engine, &cfg1).expect("run1");
+    let (_p, r2) = tony::run(&engine, &cfg2).expect("run2");
+    let compute1 = r1.sim_step_s - r1.comm_per_step_s;
+    let compute2 = r2.sim_step_s - r2.comm_per_step_s;
+    let mut t = Table::new(
+        "2-node speedup vs interconnect bandwidth (analytic recomposition)",
+        &["bandwidth", "comm/step", "2-node speedup"],
+    );
+    for (label, gbps) in
+        [("1 GbE", 1.0), ("10 GbE", 10.0), ("25 GbE", 25.0),
+         ("100 GbE", 100.0)]
+    {
+        let net = NetworkModel {
+            bandwidth_bps: gbps * 1e9 / 8.0,
+            latency_s: 150e-6,
+        };
+        let comm = net.allreduce_secs(2, r2.grad_bytes);
+        let sps1 = r1.batch_per_worker as f64 / compute1;
+        let sps2 =
+            (2 * r2.batch_per_worker) as f64 / (compute2 + comm);
+        t.row(&[
+            label.into(),
+            format!("{:.2}ms", comm * 1e3),
+            format!("{:.2}x", sps2 / sps1),
+        ]);
+    }
+    t.print();
+    println!(
+        "shape check: 2-node speedup approaches 2x as bandwidth grows and \
+         degrades toward 1x on slow links — the Ke.com 1.8x sits on this \
+         curve."
+    );
+}

@@ -1,0 +1,121 @@
+//! E8 — paper Listing 3 workload hot path: the AOT-compiled DeepFM
+//! (Pallas FM-interaction + blocked-dense kernels inside the JAX
+//! train-step) executed from Rust over PJRT.
+//!
+//! Reports per-artifact latency/throughput for all three models plus
+//! compile-time amortization (executable cache). Real-TPU kernel
+//! efficiency is estimated structurally in DESIGN.md §Hardware-Adaptation
+//! — interpret-mode CPU timings are NOT a TPU proxy; this bench tracks
+//! the end-to-end runtime path the L3 coordinator actually pays for.
+//!
+//! Run: `cargo bench --bench kernel_runtime`
+
+use submarine::data;
+use submarine::orchestrator::tony::{self, TonyConfig};
+use submarine::runtime::engine;
+use submarine::runtime::Engine;
+use submarine::util::bench::{bench, fmt_secs, Table};
+use submarine::util::clock::Stopwatch;
+
+fn main() {
+    println!("E8: AOT runtime hot path (paper Listing 3)");
+    let eng = match Engine::open_default() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("cannot open artifacts ({e}); run `make artifacts`");
+            std::process::exit(1);
+        }
+    };
+    println!("PJRT platform: {}", eng.platform());
+
+    // ---- compile cost (paid once per artifact, cached after)
+    let mut t = Table::new(
+        "artifact compile time (one-off, cached)",
+        &["model/artifact", "compile"],
+    );
+    for (m, a) in [
+        ("deepfm", "train_step"),
+        ("deepfm", "predict"),
+        ("mnist_mlp", "train_step"),
+        ("transformer_tiny", "train_step"),
+    ] {
+        let sw = Stopwatch::start();
+        eng.executable(m, a).expect("compile");
+        t.row(&[format!("{m}/{a}"), fmt_secs(sw.elapsed_secs())]);
+    }
+    t.print();
+
+    // ---- steady-state execution
+    let mut t = Table::new(
+        "steady-state execution (full train_step incl. SGD update)",
+        &["model", "batch", "params", "p50/step", "p95/step",
+          "samples/s"],
+    );
+    for model in ["deepfm", "mnist_mlp", "transformer_tiny"] {
+        let entry = eng.manifest.model(model).unwrap().clone();
+        let exe = eng.executable(model, "train_step").unwrap();
+        let params = eng.manifest.load_params(model).unwrap();
+        let shapes: Vec<Vec<usize>> = entry
+            .param_order
+            .iter()
+            .map(|p| entry.param_shapes[p].clone())
+            .collect();
+        let metas = entry.batch_meta("train_step").unwrap().to_vec();
+        let batch_size = metas[0].shape[0];
+        let mut gen = data::for_model(model, 1).unwrap();
+        let host_batch = gen.next_batch();
+        // pre-build the literals once; re-use across iterations
+        let mut inputs = Vec::new();
+        for (v, s) in params.iter().zip(&shapes) {
+            inputs.push(engine::literal_f32(v, s).unwrap());
+        }
+        for (tensor, meta) in host_batch.iter().zip(&metas) {
+            inputs.push(tensor.to_literal(meta).unwrap());
+        }
+        inputs.push(engine::literal_f32(&[0.05], &[]).unwrap());
+        let stats = bench(20, 1.0, || {
+            let out = eng.run(&exe, &inputs).unwrap();
+            std::hint::black_box(out);
+        });
+        t.row(&[
+            model.into(),
+            batch_size.to_string(),
+            entry.param_count.to_string(),
+            fmt_secs(stats.p50),
+            fmt_secs(stats.p95),
+            format!("{:.0}", stats.throughput(batch_size as f64)),
+        ]);
+    }
+    t.print();
+
+    // ---- end-to-end training throughput incl. host-side data gen +
+    // literal churn (what the coordinator pays per step)
+    let mut t = Table::new(
+        "end-to-end driver throughput (grad + allreduce + apply)",
+        &["model", "steps/s", "samples/s", "loss first->last"],
+    );
+    for model in ["deepfm", "mnist_mlp"] {
+        let cfg = TonyConfig {
+            model: model.into(),
+            workers: 1,
+            steps: 25,
+            lr: 0.05,
+            seed: 3,
+            ..Default::default()
+        };
+        let sw = Stopwatch::start();
+        let (_p, rep) = tony::run(&eng, &cfg).unwrap();
+        let wall = sw.elapsed_secs();
+        t.row(&[
+            model.into(),
+            format!("{:.1}", 25.0 / wall),
+            format!("{:.0}", 25.0 * rep.batch_per_worker as f64 / wall),
+            format!(
+                "{:.4} -> {:.4}",
+                rep.losses[0],
+                rep.losses.last().unwrap()
+            ),
+        ]);
+    }
+    t.print();
+}

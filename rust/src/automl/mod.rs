@@ -1,0 +1,226 @@
+//! AutoML: hyperparameter search over predefined templates (paper §4.1 —
+//! the in-progress feature, implemented).
+//!
+//! Two search strategies over a template's parameter space:
+//! - [`random_search`]: N trials sampled from the declared ranges.
+//! - [`successive_halving`]: the standard multi-fidelity racing scheme —
+//!   start many cheap trials, keep the best half at each rung with a
+//!   growing budget.
+//!
+//! Both treat the trial as a black box `params -> score` so they can
+//! drive real training (examples) or a surrogate (tests/benches).
+
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+
+/// Search space for one parameter.
+#[derive(Debug, Clone)]
+pub enum ParamSpace {
+    /// Log-uniform over `[lo, hi]` (learning rates etc.).
+    LogUniform { lo: f64, hi: f64 },
+    /// Uniform over `[lo, hi]`.
+    Uniform { lo: f64, hi: f64 },
+    /// One of the given choices.
+    Choice(Vec<String>),
+}
+
+impl ParamSpace {
+    fn sample(&self, rng: &mut Rng) -> String {
+        match self {
+            ParamSpace::LogUniform { lo, hi } => {
+                let v = (lo.ln() + rng.f64() * (hi.ln() - lo.ln())).exp();
+                format!("{v:.6}")
+            }
+            ParamSpace::Uniform { lo, hi } => {
+                format!("{:.6}", lo + rng.f64() * (hi - lo))
+            }
+            ParamSpace::Choice(cs) => rng.choose(cs).clone(),
+        }
+    }
+}
+
+/// One completed trial.
+#[derive(Debug, Clone)]
+pub struct Trial {
+    pub params: BTreeMap<String, String>,
+    pub score: f64,
+    /// Budget (e.g. training steps) the trial ran with.
+    pub budget: u32,
+}
+
+/// Result of a search.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    pub best: Trial,
+    pub trials: Vec<Trial>,
+    pub total_budget: u64,
+}
+
+/// Random search: `n` trials at full `budget`. Maximizes `eval`.
+pub fn random_search(
+    space: &BTreeMap<String, ParamSpace>,
+    n: usize,
+    budget: u32,
+    seed: u64,
+    mut eval: impl FnMut(&BTreeMap<String, String>, u32) -> f64,
+) -> SearchResult {
+    let mut rng = Rng::new(seed);
+    let mut trials = Vec::with_capacity(n);
+    for _ in 0..n {
+        let params: BTreeMap<String, String> = space
+            .iter()
+            .map(|(k, s)| (k.clone(), s.sample(&mut rng)))
+            .collect();
+        let score = eval(&params, budget);
+        trials.push(Trial {
+            params,
+            score,
+            budget,
+        });
+    }
+    finish(trials, n as u64 * budget as u64)
+}
+
+/// Successive halving: start `n` configs at `min_budget`, keep the best
+/// half each rung, double the budget, until one survives or the budget
+/// reaches `max_budget`. Maximizes `eval`.
+pub fn successive_halving(
+    space: &BTreeMap<String, ParamSpace>,
+    n: usize,
+    min_budget: u32,
+    max_budget: u32,
+    seed: u64,
+    mut eval: impl FnMut(&BTreeMap<String, String>, u32) -> f64,
+) -> SearchResult {
+    let mut rng = Rng::new(seed);
+    let mut alive: Vec<BTreeMap<String, String>> = (0..n.max(1))
+        .map(|_| {
+            space
+                .iter()
+                .map(|(k, s)| (k.clone(), s.sample(&mut rng)))
+                .collect()
+        })
+        .collect();
+    let mut budget = min_budget.max(1);
+    let mut all = Vec::new();
+    let mut total = 0u64;
+    loop {
+        let mut scored: Vec<Trial> = alive
+            .iter()
+            .map(|p| {
+                total += budget as u64;
+                Trial {
+                    params: p.clone(),
+                    score: eval(p, budget),
+                    budget,
+                }
+            })
+            .collect();
+        scored.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+        all.extend(scored.iter().cloned());
+        if scored.len() == 1 || budget >= max_budget {
+            return finish(all, total);
+        }
+        let keep = (scored.len() + 1) / 2;
+        alive = scored
+            .into_iter()
+            .take(keep)
+            .map(|t| t.params)
+            .collect();
+        budget = (budget * 2).min(max_budget);
+    }
+}
+
+fn finish(trials: Vec<Trial>, total_budget: u64) -> SearchResult {
+    let best = trials
+        .iter()
+        .max_by(|a, b| {
+            (a.score, a.budget)
+                .partial_cmp(&(b.score, b.budget))
+                .unwrap()
+        })
+        .cloned()
+        .expect("at least one trial");
+    SearchResult {
+        best,
+        trials,
+        total_budget,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn space() -> BTreeMap<String, ParamSpace> {
+        let mut s = BTreeMap::new();
+        s.insert(
+            "learning_rate".to_string(),
+            ParamSpace::LogUniform {
+                lo: 1e-4,
+                hi: 1.0,
+            },
+        );
+        s.insert(
+            "batch_size".to_string(),
+            ParamSpace::Choice(vec![
+                "64".into(),
+                "128".into(),
+                "256".into(),
+            ]),
+        );
+        s
+    }
+
+    /// Surrogate objective: peak at lr=0.05, more budget -> less noise.
+    fn surrogate(p: &BTreeMap<String, String>, budget: u32) -> f64 {
+        let lr: f64 = p["learning_rate"].parse().unwrap();
+        let noise = 1.0 / (budget as f64).sqrt();
+        let quality = -((lr.ln() - (0.05f64).ln()).powi(2));
+        quality - noise * 0.1
+    }
+
+    #[test]
+    fn random_search_finds_good_region() {
+        let r = random_search(&space(), 40, 10, 7, surrogate);
+        assert_eq!(r.trials.len(), 40);
+        let lr: f64 = r.best.params["learning_rate"].parse().unwrap();
+        assert!(lr > 0.003 && lr < 0.8, "lr={lr}");
+        assert_eq!(r.total_budget, 400);
+    }
+
+    #[test]
+    fn halving_spends_less_than_full_random() {
+        let r = successive_halving(&space(), 16, 5, 40, 7, surrogate);
+        // full random at max budget would be 16*40=640
+        assert!(r.total_budget < 640, "{}", r.total_budget);
+        // survivor ran at (close to) max budget
+        assert!(r.best.budget >= 20);
+    }
+
+    #[test]
+    fn halving_prefers_better_configs() {
+        let r = successive_halving(&space(), 32, 4, 64, 3, surrogate);
+        let best_lr: f64 =
+            r.best.params["learning_rate"].parse().unwrap();
+        // all surviving scores must dominate first-rung median
+        assert!(best_lr > 1e-3 && best_lr < 1.0);
+        assert!(r.best.score >= r.trials[0].score - 1e-9);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = random_search(&space(), 5, 1, 11, surrogate);
+        let b = random_search(&space(), 5, 1, 11, surrogate);
+        assert_eq!(a.best.params, b.best.params);
+    }
+
+    #[test]
+    fn choice_sampling_respects_options() {
+        let r = random_search(&space(), 20, 1, 1, surrogate);
+        for t in &r.trials {
+            assert!(["64", "128", "256"]
+                .contains(&t.params["batch_size"].as_str()));
+        }
+    }
+}

@@ -1,0 +1,400 @@
+//! Command-line interface (paper §3.1.1, Listing 1).
+//!
+//! ```text
+//! submarine server   [--port 8080] [--artifacts DIR] [--token T]
+//! submarine job run  --name mnist --framework TensorFlow \
+//!                    --num_workers 4 \
+//!                    --worker_resources memory=4G,gpu=4,vcores=4 \
+//!                    --num_ps 1 --ps_resources memory=2G,vcores=2 \
+//!                    --worker_launch_cmd "python mnist.py" \
+//!                    [--model mnist_mlp --steps 100 --lr 0.05] \
+//!                    [--server 127.0.0.1:8080]
+//! submarine experiment list|get <id>|kill <id> [--server ...]
+//! submarine template submit <name> -P key=value ... [--server ...]
+//! ```
+
+use crate::cluster::Resources;
+use crate::experiment::spec::{
+    EnvironmentRef, ExperimentMeta, ExperimentSpec, TaskSpec, WorkloadSpec,
+};
+use crate::sdk::ExperimentClient;
+use std::collections::BTreeMap;
+
+/// Parsed flag map: `--key value` plus positionals.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    /// Repeated `-P key=value` template parameters.
+    pub params: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> crate::Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "-P" {
+                let kv = argv.get(i + 1).ok_or_else(|| {
+                    bad("-P requires key=value")
+                })?;
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| bad("-P requires key=value"))?;
+                out.params.insert(k.to_string(), v.to_string());
+                i += 2;
+            } else if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                    i += 1;
+                } else if matches!(name, "insecure" | "verbose") {
+                    out.flags.insert(name.to_string(), "true".into());
+                    i += 1;
+                } else {
+                    let v = argv.get(i + 1).ok_or_else(|| {
+                        bad(&format!("--{name} requires a value"))
+                    })?;
+                    out.flags.insert(name.to_string(), v.clone());
+                    i += 2;
+                }
+            } else {
+                out.positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn server(&self) -> (String, u16) {
+        let addr = self.flag("server").unwrap_or("127.0.0.1:8080");
+        match addr.rsplit_once(':') {
+            Some((h, p)) => {
+                (h.to_string(), p.parse().unwrap_or(8080))
+            }
+            None => (addr.to_string(), 8080),
+        }
+    }
+}
+
+fn bad(msg: &str) -> crate::SubmarineError {
+    crate::SubmarineError::InvalidSpec(msg.to_string())
+}
+
+/// Build an [`ExperimentSpec`] from Listing-1 style `job run` flags.
+pub fn spec_from_job_flags(args: &Args) -> crate::Result<ExperimentSpec> {
+    let name = args
+        .flag("name")
+        .ok_or_else(|| bad("--name is required"))?
+        .to_string();
+    let mut tasks = Vec::new();
+    let num_ps: u32 = args
+        .flag("num_ps")
+        .map(|v| v.parse().map_err(|_| bad("bad --num_ps")))
+        .transpose()?
+        .unwrap_or(0);
+    if num_ps > 0 {
+        tasks.push((
+            "Ps".to_string(),
+            TaskSpec {
+                replicas: num_ps,
+                resources: Resources::parse(
+                    args.flag("ps_resources").unwrap_or("cpu=1,memory=1G"),
+                )?,
+            },
+        ));
+    }
+    let num_workers: u32 = args
+        .flag("num_workers")
+        .map(|v| v.parse().map_err(|_| bad("bad --num_workers")))
+        .transpose()?
+        .unwrap_or(1);
+    tasks.push((
+        "Worker".to_string(),
+        TaskSpec {
+            replicas: num_workers.max(1),
+            resources: Resources::parse(
+                args.flag("worker_resources")
+                    .unwrap_or("cpu=1,memory=1G"),
+            )?,
+        },
+    ));
+    let workload = args.flag("model").map(|m| WorkloadSpec {
+        model: m.to_string(),
+        steps: args
+            .flag("steps")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(100),
+        lr: args
+            .flag("lr")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0.05),
+        seed: args
+            .flag("seed")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(42),
+    });
+    Ok(ExperimentSpec {
+        meta: ExperimentMeta {
+            name,
+            namespace: args
+                .flag("namespace")
+                .unwrap_or("default")
+                .to_string(),
+            framework: args
+                .flag("framework")
+                .unwrap_or("TensorFlow")
+                .to_string(),
+            cmd: args
+                .flag("worker_launch_cmd")
+                .unwrap_or("")
+                .to_string(),
+        },
+        environment: EnvironmentRef {
+            image: args.flag("image").unwrap_or("").to_string(),
+            name: None,
+        },
+        tasks,
+        queue: args.flag("queue").unwrap_or("root").to_string(),
+        workload,
+    })
+}
+
+/// Entry point used by `main.rs`. Returns the process exit code.
+pub fn run(argv: &[String]) -> i32 {
+    match dispatch(argv) {
+        Ok(msg) => {
+            if !msg.is_empty() {
+                println!("{msg}");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    }
+}
+
+fn dispatch(argv: &[String]) -> crate::Result<String> {
+    let cmd = argv.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "help" | "--help" | "-h" => Ok(usage()),
+        "version" => Ok(format!("submarine {}", crate::version())),
+        "server" => {
+            let args = Args::parse(&argv[1..])?;
+            serve(&args)
+        }
+        "job" if argv.get(1).map(String::as_str) == Some("run") => {
+            let args = Args::parse(&argv[2..])?;
+            let spec = spec_from_job_flags(&args)?;
+            let (host, port) = args.server();
+            let client = ExperimentClient::new(&host, port);
+            let id = client.create_experiment(&spec)?;
+            Ok(format!("submitted {id}"))
+        }
+        "experiment" => {
+            let sub = argv.get(1).map(String::as_str).unwrap_or("list");
+            let args = Args::parse(&argv[2..])?;
+            let (host, port) = args.server();
+            let client = ExperimentClient::new(&host, port);
+            match sub {
+                "list" => {
+                    let mut out = String::new();
+                    for (id, st) in client.list_experiments()? {
+                        out.push_str(&format!("{id}\t{st}\n"));
+                    }
+                    Ok(out)
+                }
+                "get" => {
+                    let id = args
+                        .positional
+                        .first()
+                        .ok_or_else(|| bad("experiment get <id>"))?;
+                    let st = client.status(id)?;
+                    Ok(format!("{id}\t{}", st.as_str()))
+                }
+                "kill" => {
+                    let id = args
+                        .positional
+                        .first()
+                        .ok_or_else(|| bad("experiment kill <id>"))?;
+                    client.kill(id)?;
+                    Ok(format!("killed {id}"))
+                }
+                other => Err(bad(&format!(
+                    "unknown experiment subcommand {other:?}"
+                ))),
+            }
+        }
+        "template" => {
+            let sub = argv.get(1).map(String::as_str).unwrap_or("");
+            let args = Args::parse(&argv[2..])?;
+            let (host, port) = args.server();
+            let client = ExperimentClient::new(&host, port);
+            match sub {
+                "submit" => {
+                    let name = args
+                        .positional
+                        .first()
+                        .ok_or_else(|| bad("template submit <name>"))?;
+                    let id =
+                        client.submit_template(name, &args.params)?;
+                    Ok(format!("submitted {id}"))
+                }
+                other => Err(bad(&format!(
+                    "unknown template subcommand {other:?}"
+                ))),
+            }
+        }
+        other => Err(bad(&format!(
+            "unknown command {other:?}; try `submarine help`"
+        ))),
+    }
+}
+
+/// `submarine server`: full stack with the local (PJRT) submitter.
+fn serve(args: &Args) -> crate::Result<String> {
+    use crate::httpd::server::{Server, Services};
+    use crate::orchestrator::local::LocalSubmitter;
+    use crate::storage::{MetaStore, MetricStore};
+    use std::sync::Arc;
+
+    let port: u16 = args
+        .flag("port")
+        .and_then(|p| p.parse().ok())
+        .unwrap_or(8080);
+    let artifacts = args.flag("artifacts").unwrap_or("artifacts");
+    let store = match args.flag("db") {
+        Some(path) => {
+            Arc::new(MetaStore::open(std::path::Path::new(path))?)
+        }
+        None => Arc::new(MetaStore::in_memory()),
+    };
+    let monitor =
+        Arc::new(crate::experiment::monitor::ExperimentMonitor::new());
+    let metrics = Arc::new(MetricStore::new());
+    let submitter = Arc::new(LocalSubmitter::new(
+        Arc::clone(&monitor),
+        Arc::clone(&metrics),
+        std::path::Path::new(artifacts),
+    ));
+    let services = Arc::new(Services::with_parts(
+        store, monitor, metrics, submitter,
+    ));
+    // built-in template, as the community templates of §3.2.3
+    let _ = services
+        .templates
+        .register(&crate::template::tf_mnist_template());
+    let server =
+        Arc::new(Server::bind(services, port, args.flag("token"))?);
+    println!("submarine server on 127.0.0.1:{}", server.port());
+    server.serve()?;
+    Ok(String::new())
+}
+
+fn usage() -> String {
+    "usage: submarine <command>\n\
+     commands:\n\
+       server      [--port 8080] [--db wal.jsonl] [--artifacts DIR] [--token T]\n\
+       job run     --name N [--framework F] [--num_workers K] [--num_ps K]\n\
+                   [--worker_resources R] [--ps_resources R]\n\
+                   [--worker_launch_cmd C] [--model M --steps S --lr LR]\n\
+                   [--server host:port]\n\
+       experiment  list | get <id> | kill <id>   [--server host:port]\n\
+       template    submit <name> -P key=value... [--server host:port]\n\
+       version"
+        .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_listing1_flags() {
+        // the paper's Listing 1 command, translated
+        let args = Args::parse(&argv(&[
+            "--name", "mnist",
+            "--framework", "TensorFlow",
+            "--num_workers", "4",
+            "--worker_resources", "memory=4G,gpu=4,vcores=4",
+            "--num_ps", "1",
+            "--ps_resources", "memory=2G,vcores=2",
+            "--worker_launch_cmd", "python mnist.py",
+            "--insecure",
+        ]))
+        .unwrap();
+        let spec = spec_from_job_flags(&args).unwrap();
+        assert_eq!(spec.meta.name, "mnist");
+        assert_eq!(spec.total_containers(), 5);
+        let (ps_name, ps) = &spec.tasks[0];
+        assert_eq!(ps_name, "Ps");
+        assert_eq!(ps.resources.memory_mb, 2048);
+        let (_, w) = &spec.tasks[1];
+        assert_eq!(w.resources.gpus, 4);
+        assert_eq!(spec.meta.cmd, "python mnist.py");
+    }
+
+    #[test]
+    fn equals_form_and_params() {
+        let args = Args::parse(&argv(&[
+            "--name=x",
+            "-P", "learning_rate=0.01",
+            "-P", "batch_size=64",
+            "pos1",
+        ]))
+        .unwrap();
+        assert_eq!(args.flag("name"), Some("x"));
+        assert_eq!(args.params["learning_rate"], "0.01");
+        assert_eq!(args.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&argv(&["--name"])).is_err());
+        assert!(Args::parse(&argv(&["-P", "noequals"])).is_err());
+    }
+
+    #[test]
+    fn job_flags_require_name() {
+        let args = Args::parse(&argv(&["--num_workers", "2"])).unwrap();
+        assert!(spec_from_job_flags(&args).is_err());
+    }
+
+    #[test]
+    fn server_address_parsing() {
+        let args =
+            Args::parse(&argv(&["--server", "10.0.0.5:9000"])).unwrap();
+        assert_eq!(args.server(), ("10.0.0.5".to_string(), 9000));
+        let args = Args::parse(&argv(&[])).unwrap();
+        assert_eq!(args.server().1, 8080);
+    }
+
+    #[test]
+    fn workload_flags_flow_through() {
+        let args = Args::parse(&argv(&[
+            "--name", "ctr", "--model", "deepfm", "--steps", "250",
+            "--lr", "0.02",
+        ]))
+        .unwrap();
+        let spec = spec_from_job_flags(&args).unwrap();
+        let w = spec.workload.unwrap();
+        assert_eq!(w.model, "deepfm");
+        assert_eq!(w.steps, 250);
+    }
+
+    #[test]
+    fn unknown_command_fails() {
+        assert_eq!(run(&argv(&["frobnicate"])), 2);
+        assert_eq!(run(&argv(&["version"])), 0);
+    }
+}

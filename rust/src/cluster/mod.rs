@@ -1,0 +1,12 @@
+//! Simulated cluster substrate (DESIGN.md S6): the paper's experiments run
+//! on Kubernetes/YARN GPU clusters; this module provides the equivalent
+//! discrete-event substrate the schedulers and the distributed-training
+//! driver operate on (see DESIGN.md §Substitutions).
+
+pub mod node;
+pub mod resources;
+pub mod sim;
+
+pub use node::{GpuSlot, Node};
+pub use resources::Resources;
+pub use sim::{ClusterSim, Container, ContainerState};

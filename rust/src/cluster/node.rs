@@ -1,0 +1,215 @@
+//! Cluster nodes with fine-grained resource accounting and an explicit GPU
+//! interconnect topology (paper §5.1.3: locality-aware GPU scheduling).
+
+use super::resources::Resources;
+use std::collections::BTreeMap;
+
+/// Link classes in the GPU distance model, cheapest first. Mirrors the
+/// hierarchy in Jeon et al. (ATC'19) that the paper cites: GPUs on the
+/// same PCIe switch/NVLink island sync fastest, then cross-socket, then
+/// cross-node over the network.
+pub const DIST_SAME_SOCKET: u32 = 1;
+pub const DIST_CROSS_SOCKET: u32 = 2;
+pub const DIST_CROSS_NODE: u32 = 6;
+
+/// One GPU slot on a node.
+#[derive(Debug, Clone)]
+pub struct GpuSlot {
+    /// NUMA socket / PCIe root this GPU hangs off.
+    pub socket: u32,
+    /// Experiment-container currently bound, if any.
+    pub bound_to: Option<String>,
+}
+
+/// A simulated machine.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: String,
+    pub capacity: Resources,
+    pub allocated: Resources,
+    pub gpus: Vec<GpuSlot>,
+    /// container id -> resources held (for release bookkeeping).
+    holds: BTreeMap<String, (Resources, Vec<usize>)>,
+}
+
+impl Node {
+    /// A node with `gpus` GPUs spread evenly over `sockets` sockets.
+    pub fn new(id: &str, capacity: Resources, sockets: u32) -> Node {
+        let sockets = sockets.max(1);
+        let gpus = (0..capacity.gpus)
+            .map(|i| GpuSlot {
+                socket: i % sockets,
+                bound_to: None,
+            })
+            .collect();
+        Node {
+            id: id.to_string(),
+            capacity,
+            allocated: Resources::ZERO,
+            gpus,
+            holds: BTreeMap::new(),
+        }
+    }
+
+    pub fn available(&self) -> Resources {
+        self.capacity
+            .checked_sub(&self.allocated)
+            .unwrap_or(Resources::ZERO)
+    }
+
+    pub fn free_gpu_indices(&self) -> Vec<usize> {
+        self.gpus
+            .iter()
+            .enumerate()
+            .filter(|(_, g)| g.bound_to.is_none())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Allocate `req` for `container`, binding the specific GPU indices in
+    /// `gpu_ids` (must be free and of length `req.gpus`).
+    pub fn allocate(
+        &mut self,
+        container: &str,
+        req: Resources,
+        gpu_ids: &[usize],
+    ) -> crate::Result<()> {
+        if !self.available().fits(&req) {
+            return Err(crate::SubmarineError::ResourcesUnavailable(format!(
+                "node {} cannot fit {req}",
+                self.id
+            )));
+        }
+        if gpu_ids.len() != req.gpus as usize {
+            return Err(crate::SubmarineError::InvalidSpec(format!(
+                "gpu binding arity {} != requested {}",
+                gpu_ids.len(),
+                req.gpus
+            )));
+        }
+        for &g in gpu_ids {
+            if self.gpus.get(g).map_or(true, |s| s.bound_to.is_some()) {
+                return Err(crate::SubmarineError::ResourcesUnavailable(
+                    format!("gpu {g} on node {} is busy", self.id),
+                ));
+            }
+        }
+        if self.holds.contains_key(container) {
+            return Err(crate::SubmarineError::AlreadyExists(format!(
+                "container {container} already on node {}",
+                self.id
+            )));
+        }
+        for &g in gpu_ids {
+            self.gpus[g].bound_to = Some(container.to_string());
+        }
+        self.allocated = self.allocated.add(&req);
+        self.holds
+            .insert(container.to_string(), (req, gpu_ids.to_vec()));
+        Ok(())
+    }
+
+    /// Release everything held by `container`.
+    pub fn release(&mut self, container: &str) -> crate::Result<Resources> {
+        let (res, gpu_ids) = self.holds.remove(container).ok_or_else(|| {
+            crate::SubmarineError::NotFound(format!(
+                "container {container} on node {}",
+                self.id
+            ))
+        })?;
+        for g in gpu_ids {
+            self.gpus[g].bound_to = None;
+        }
+        self.allocated = self
+            .allocated
+            .checked_sub(&res)
+            .expect("allocation bookkeeping corrupt");
+        Ok(res)
+    }
+
+    pub fn containers(&self) -> impl Iterator<Item = &str> {
+        self.holds.keys().map(|s| s.as_str())
+    }
+
+    /// Pairwise sync distance between two GPUs *on this node*.
+    pub fn gpu_distance(&self, a: usize, b: usize) -> u32 {
+        if a == b {
+            0
+        } else if self.gpus[a].socket == self.gpus[b].socket {
+            DIST_SAME_SOCKET
+        } else {
+            DIST_CROSS_SOCKET
+        }
+    }
+
+    /// Max pairwise distance of a GPU set on this node (gang sync cost).
+    pub fn gang_distance(&self, gpu_ids: &[usize]) -> u32 {
+        let mut d = 0;
+        for (i, &a) in gpu_ids.iter().enumerate() {
+            for &b in &gpu_ids[i + 1..] {
+                d = d.max(self.gpu_distance(a, b));
+            }
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn node4() -> Node {
+        // 4 GPUs over 2 sockets: 0,2 on socket 0; 1,3 on socket 1.
+        Node::new("n1", Resources::new(16, 65536, 4), 2)
+    }
+
+    #[test]
+    fn allocate_then_release_restores_capacity() {
+        let mut n = node4();
+        let req = Resources::new(4, 8192, 2);
+        n.allocate("c1", req, &[0, 2]).unwrap();
+        assert_eq!(n.available(), Resources::new(12, 57344, 2));
+        assert_eq!(n.free_gpu_indices(), vec![1, 3]);
+        n.release("c1").unwrap();
+        assert_eq!(n.available(), n.capacity);
+        assert_eq!(n.free_gpu_indices().len(), 4);
+    }
+
+    #[test]
+    fn rejects_oversubscription() {
+        let mut n = node4();
+        assert!(n
+            .allocate("c1", Resources::new(32, 0, 0), &[])
+            .is_err());
+    }
+
+    #[test]
+    fn rejects_double_gpu_bind() {
+        let mut n = node4();
+        n.allocate("c1", Resources::new(1, 1024, 1), &[0]).unwrap();
+        let e = n.allocate("c2", Resources::new(1, 1024, 1), &[0]);
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn rejects_gpu_arity_mismatch() {
+        let mut n = node4();
+        assert!(n.allocate("c1", Resources::new(1, 1, 2), &[0]).is_err());
+    }
+
+    #[test]
+    fn release_unknown_container_errors() {
+        let mut n = node4();
+        assert!(n.release("ghost").is_err());
+    }
+
+    #[test]
+    fn distances_follow_topology() {
+        let n = node4();
+        assert_eq!(n.gpu_distance(0, 0), 0);
+        assert_eq!(n.gpu_distance(0, 2), DIST_SAME_SOCKET);
+        assert_eq!(n.gpu_distance(0, 1), DIST_CROSS_SOCKET);
+        assert_eq!(n.gang_distance(&[0, 2]), DIST_SAME_SOCKET);
+        assert_eq!(n.gang_distance(&[0, 1, 2]), DIST_CROSS_SOCKET);
+    }
+}

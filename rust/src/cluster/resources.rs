@@ -1,0 +1,227 @@
+//! Multi-dimensional resource vectors (paper §5.1.3: YARN's fine-grained
+//! scheduling over memory, CPU, GPU and FPGA).
+//!
+//! All arithmetic is saturating/checked so scheduler invariants ("never
+//! allocate more than capacity") are enforceable by construction.
+
+use std::fmt;
+
+/// A resource request or capacity: vcores, memory, GPUs, FPGAs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default, Hash)]
+pub struct Resources {
+    pub vcores: u32,
+    pub memory_mb: u64,
+    pub gpus: u32,
+    pub fpgas: u32,
+}
+
+impl Resources {
+    pub const ZERO: Resources = Resources {
+        vcores: 0,
+        memory_mb: 0,
+        gpus: 0,
+        fpgas: 0,
+    };
+
+    pub fn new(vcores: u32, memory_mb: u64, gpus: u32) -> Resources {
+        Resources {
+            vcores,
+            memory_mb,
+            gpus,
+            fpgas: 0,
+        }
+    }
+
+    /// Parse Submarine's CLI/SDK syntax: `"memory=4G,gpu=4,vcores=4"` or
+    /// `"cpu=4,gpu=4,memory=4G"` (both appear in the paper's listings).
+    pub fn parse(spec: &str) -> crate::Result<Resources> {
+        let mut r = Resources::ZERO;
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, value) = part.split_once('=').ok_or_else(|| {
+                crate::SubmarineError::InvalidSpec(format!(
+                    "resource token {part:?} is not key=value"
+                ))
+            })?;
+            let (key, value) = (key.trim(), value.trim());
+            match key {
+                "vcores" | "cpu" => {
+                    r.vcores = value.parse().map_err(|_| bad(part))?
+                }
+                "memory" | "mem" => r.memory_mb = parse_memory(value)?,
+                "gpu" | "gpus" => {
+                    r.gpus = value.parse().map_err(|_| bad(part))?
+                }
+                "fpga" | "fpgas" => {
+                    r.fpgas = value.parse().map_err(|_| bad(part))?
+                }
+                _ => {
+                    return Err(crate::SubmarineError::InvalidSpec(format!(
+                        "unknown resource {key:?}"
+                    )))
+                }
+            }
+        }
+        Ok(r)
+    }
+
+    /// True if every dimension of `req` fits into `self`.
+    pub fn fits(&self, req: &Resources) -> bool {
+        self.vcores >= req.vcores
+            && self.memory_mb >= req.memory_mb
+            && self.gpus >= req.gpus
+            && self.fpgas >= req.fpgas
+    }
+
+    /// Checked subtraction; `None` if any dimension would go negative.
+    pub fn checked_sub(&self, rhs: &Resources) -> Option<Resources> {
+        Some(Resources {
+            vcores: self.vcores.checked_sub(rhs.vcores)?,
+            memory_mb: self.memory_mb.checked_sub(rhs.memory_mb)?,
+            gpus: self.gpus.checked_sub(rhs.gpus)?,
+            fpgas: self.fpgas.checked_sub(rhs.fpgas)?,
+        })
+    }
+
+    pub fn add(&self, rhs: &Resources) -> Resources {
+        Resources {
+            vcores: self.vcores + rhs.vcores,
+            memory_mb: self.memory_mb + rhs.memory_mb,
+            gpus: self.gpus + rhs.gpus,
+            fpgas: self.fpgas + rhs.fpgas,
+        }
+    }
+
+    pub fn scale(&self, n: u32) -> Resources {
+        Resources {
+            vcores: self.vcores * n,
+            memory_mb: self.memory_mb * n as u64,
+            gpus: self.gpus * n,
+            fpgas: self.fpgas * n,
+        }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        *self == Resources::ZERO
+    }
+
+    /// Dominant-share fraction of `self` within `capacity` (DRF-style).
+    pub fn dominant_share(&self, capacity: &Resources) -> f64 {
+        let mut share = 0f64;
+        if capacity.vcores > 0 {
+            share = share.max(self.vcores as f64 / capacity.vcores as f64);
+        }
+        if capacity.memory_mb > 0 {
+            share =
+                share.max(self.memory_mb as f64 / capacity.memory_mb as f64);
+        }
+        if capacity.gpus > 0 {
+            share = share.max(self.gpus as f64 / capacity.gpus as f64);
+        }
+        if capacity.fpgas > 0 {
+            share = share.max(self.fpgas as f64 / capacity.fpgas as f64);
+        }
+        share
+    }
+}
+
+fn bad(tok: &str) -> crate::SubmarineError {
+    crate::SubmarineError::InvalidSpec(format!("bad resource token {tok:?}"))
+}
+
+fn parse_memory(v: &str) -> crate::Result<u64> {
+    let lower = v.to_ascii_lowercase();
+    let (num, mult) = if let Some(n) = lower.strip_suffix("g") {
+        (n, 1024)
+    } else if let Some(n) = lower.strip_suffix("gb") {
+        (n, 1024)
+    } else if let Some(n) = lower.strip_suffix("m") {
+        (n, 1)
+    } else if let Some(n) = lower.strip_suffix("mb") {
+        (n, 1)
+    } else {
+        (lower.as_str(), 1)
+    };
+    num.trim()
+        .parse::<u64>()
+        .map(|n| n * mult)
+        .map_err(|_| bad(v))
+}
+
+impl fmt::Display for Resources {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "cpu={},memory={}M,gpu={}",
+            self.vcores, self.memory_mb, self.gpus
+        )?;
+        if self.fpgas > 0 {
+            write!(f, ",fpga={}", self.fpgas)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_listing1_syntax() {
+        // paper Listing 1: --worker_resources memory=4G,gpu=4,vcores=4
+        let r = Resources::parse("memory=4G,gpu=4,vcores=4").unwrap();
+        assert_eq!(r.memory_mb, 4096);
+        assert_eq!(r.gpus, 4);
+        assert_eq!(r.vcores, 4);
+    }
+
+    #[test]
+    fn parses_listing2_syntax() {
+        // paper Listing 2: resources='cpu=4,gpu=4,memory=4G'
+        let r = Resources::parse("cpu=4,gpu=4,memory=4G").unwrap();
+        assert_eq!(r.vcores, 4);
+        let r2 = Resources::parse("cpu=2, memory=2G").unwrap();
+        assert_eq!(r2.memory_mb, 2048);
+        assert_eq!(r2.gpus, 0);
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(Resources::parse("cpu").is_err());
+        assert!(Resources::parse("cpu=abc").is_err());
+        assert!(Resources::parse("quantum=1").is_err());
+    }
+
+    #[test]
+    fn fits_and_sub() {
+        let cap = Resources::new(8, 16384, 4);
+        let req = Resources::new(4, 4096, 2);
+        assert!(cap.fits(&req));
+        let rem = cap.checked_sub(&req).unwrap();
+        assert_eq!(rem, Resources::new(4, 12288, 2));
+        assert!(rem.checked_sub(&Resources::new(0, 0, 3)).is_none());
+    }
+
+    #[test]
+    fn scale_multiplies_all_dims() {
+        let r = Resources::new(2, 1024, 1).scale(3);
+        assert_eq!(r, Resources::new(6, 3072, 3));
+    }
+
+    #[test]
+    fn dominant_share_picks_max() {
+        let cap = Resources::new(10, 1000, 10);
+        let r = Resources::new(1, 500, 2);
+        assert!((r.dominant_share(&cap) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn display_roundtrips_via_parse() {
+        let r = Resources::new(4, 4096, 2);
+        let r2 = Resources::parse(&r.to_string()).unwrap();
+        assert_eq!(r, r2);
+    }
+}

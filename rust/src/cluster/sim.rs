@@ -1,0 +1,310 @@
+//! Discrete-event cluster simulator (DESIGN.md S6).
+//!
+//! Holds the node set, running containers and a time-ordered event queue.
+//! Schedulers (`crate::scheduler`) decide *where* containers go; the sim
+//! owns *when* things happen: container start latency, completion, and the
+//! utilization/metric accounting the paper's §5/§6 experiments report.
+
+use super::node::Node;
+use super::resources::Resources;
+use crate::util::clock::SimTime;
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap};
+
+/// Lifecycle state of a simulated container.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ContainerState {
+    Requested,
+    Running,
+    Finished,
+    Failed,
+}
+
+/// A container placed on a node.
+#[derive(Debug, Clone)]
+pub struct Container {
+    pub id: String,
+    pub experiment: String,
+    pub node: String,
+    pub resources: Resources,
+    pub gpu_ids: Vec<usize>,
+    pub state: ContainerState,
+    pub started: SimTime,
+    pub finishes: SimTime,
+}
+
+/// The simulated cluster.
+pub struct ClusterSim {
+    pub nodes: Vec<Node>,
+    node_index: BTreeMap<String, usize>,
+    containers: BTreeMap<String, Container>,
+    events: BinaryHeap<Reverse<(SimTime, u64, EventBox)>>,
+    seq: u64,
+    now: SimTime,
+    /// Integrated GPU busy time (gpu-microseconds), for utilization.
+    gpu_busy_us: u128,
+    last_account: SimTime,
+}
+
+// BinaryHeap needs Ord; wrap the enum with a comparable shell.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+struct EventBox(String);
+
+impl ClusterSim {
+    /// Homogeneous cluster: `n` nodes of `capacity` with `sockets` NUMA
+    /// domains each (paper §6: Ke.com 30 nodes x 2 GPUs, LinkedIn 50
+    /// nodes x 5 GPUs).
+    pub fn homogeneous(n: usize, capacity: Resources, sockets: u32) -> Self {
+        let nodes: Vec<Node> = (0..n)
+            .map(|i| Node::new(&format!("node-{i:03}"), capacity, sockets))
+            .collect();
+        Self::from_nodes(nodes)
+    }
+
+    pub fn from_nodes(nodes: Vec<Node>) -> Self {
+        let node_index = nodes
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.id.clone(), i))
+            .collect();
+        ClusterSim {
+            nodes,
+            node_index,
+            containers: BTreeMap::new(),
+            events: BinaryHeap::new(),
+            seq: 0,
+            now: SimTime::ZERO,
+            gpu_busy_us: 0,
+            last_account: SimTime::ZERO,
+        }
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    pub fn node(&self, id: &str) -> Option<&Node> {
+        self.node_index.get(id).map(|&i| &self.nodes[i])
+    }
+
+    pub fn node_mut(&mut self, id: &str) -> Option<&mut Node> {
+        let i = *self.node_index.get(id)?;
+        Some(&mut self.nodes[i])
+    }
+
+    pub fn container(&self, id: &str) -> Option<&Container> {
+        self.containers.get(id)
+    }
+
+    pub fn running_containers(&self) -> usize {
+        self.containers
+            .values()
+            .filter(|c| c.state == ContainerState::Running)
+            .count()
+    }
+
+    pub fn total_capacity(&self) -> Resources {
+        self.nodes
+            .iter()
+            .fold(Resources::ZERO, |acc, n| acc.add(&n.capacity))
+    }
+
+    pub fn total_allocated(&self) -> Resources {
+        self.nodes
+            .iter()
+            .fold(Resources::ZERO, |acc, n| acc.add(&n.allocated))
+    }
+
+    /// Launch a container on `node` for `duration` simulated time.
+    /// The caller (scheduler) has already picked node + GPU ids.
+    pub fn launch(
+        &mut self,
+        id: &str,
+        experiment: &str,
+        node: &str,
+        resources: Resources,
+        gpu_ids: &[usize],
+        duration: SimTime,
+    ) -> crate::Result<()> {
+        self.accrue_gpu_time();
+        let n = self.node_mut(node).ok_or_else(|| {
+            crate::SubmarineError::NotFound(format!("node {node}"))
+        })?;
+        n.allocate(id, resources, gpu_ids)?;
+        let finishes = self.now + duration;
+        self.containers.insert(
+            id.to_string(),
+            Container {
+                id: id.to_string(),
+                experiment: experiment.to_string(),
+                node: node.to_string(),
+                resources,
+                gpu_ids: gpu_ids.to_vec(),
+                state: ContainerState::Running,
+                started: self.now,
+                finishes,
+            },
+        );
+        self.seq += 1;
+        self.events
+            .push(Reverse((finishes, self.seq, EventBox(id.to_string()))));
+        Ok(())
+    }
+
+    /// Advance simulated time to `t`, completing containers on the way.
+    /// Returns ids of containers that finished.
+    pub fn advance_to(&mut self, t: SimTime) -> Vec<String> {
+        let mut done = Vec::new();
+        while let Some(Reverse((when, _, _))) = self.events.peek() {
+            if *when > t {
+                break;
+            }
+            let Reverse((when, _, EventBox(cid))) =
+                self.events.pop().unwrap();
+            self.accrue_until(when);
+            if let Some(c) = self.containers.get_mut(&cid) {
+                if c.state == ContainerState::Running {
+                    c.state = ContainerState::Finished;
+                    let node = c.node.clone();
+                    self.node_mut(&node)
+                        .expect("node vanished")
+                        .release(&cid)
+                        .expect("release bookkeeping");
+                    done.push(cid);
+                }
+            }
+        }
+        self.accrue_until(t);
+        done
+    }
+
+    /// Next event time, if any (for event-driven loops).
+    pub fn next_event(&self) -> Option<SimTime> {
+        self.events.peek().map(|Reverse((t, _, _))| *t)
+    }
+
+    /// Kill a running container (failure injection).
+    pub fn fail(&mut self, id: &str) -> crate::Result<()> {
+        self.accrue_gpu_time();
+        let c = self.containers.get_mut(id).ok_or_else(|| {
+            crate::SubmarineError::NotFound(format!("container {id}"))
+        })?;
+        if c.state != ContainerState::Running {
+            return Err(crate::SubmarineError::InvalidSpec(format!(
+                "container {id} is not running"
+            )));
+        }
+        c.state = ContainerState::Failed;
+        let node = c.node.clone();
+        self.node_mut(&node).unwrap().release(id)?;
+        Ok(())
+    }
+
+    fn accrue_gpu_time(&mut self) {
+        self.accrue_until(self.now);
+    }
+
+    fn accrue_until(&mut self, t: SimTime) {
+        if t.0 > self.last_account.0 {
+            let dt = (t.0 - self.last_account.0) as u128;
+            let busy: u128 = self
+                .nodes
+                .iter()
+                .map(|n| n.allocated.gpus as u128)
+                .sum();
+            self.gpu_busy_us += busy * dt;
+            self.last_account = t;
+        }
+        if t.0 > self.now.0 {
+            self.now = t;
+        }
+    }
+
+    /// Time-averaged GPU utilization in `[0,1]` since simulation start.
+    pub fn gpu_utilization(&self) -> f64 {
+        let total_gpus: u128 = self
+            .nodes
+            .iter()
+            .map(|n| n.capacity.gpus as u128)
+            .sum();
+        if total_gpus == 0 || self.now.0 == 0 {
+            return 0.0;
+        }
+        self.gpu_busy_us as f64 / (total_gpus as f64 * self.now.0 as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim() -> ClusterSim {
+        ClusterSim::homogeneous(2, Resources::new(8, 16384, 2), 1)
+    }
+
+    #[test]
+    fn launch_and_complete() {
+        let mut s = sim();
+        s.launch(
+            "c1",
+            "exp1",
+            "node-000",
+            Resources::new(2, 1024, 1),
+            &[0],
+            SimTime::from_millis(100),
+        )
+        .unwrap();
+        assert_eq!(s.running_containers(), 1);
+        let done = s.advance_to(SimTime::from_millis(50));
+        assert!(done.is_empty());
+        let done = s.advance_to(SimTime::from_millis(150));
+        assert_eq!(done, vec!["c1".to_string()]);
+        assert_eq!(s.running_containers(), 0);
+        assert_eq!(
+            s.node("node-000").unwrap().available(),
+            Resources::new(8, 16384, 2)
+        );
+    }
+
+    #[test]
+    fn completion_order_respects_time() {
+        let mut s = sim();
+        s.launch("a", "e", "node-000", Resources::new(1, 1, 0), &[],
+                 SimTime::from_millis(30)).unwrap();
+        s.launch("b", "e", "node-001", Resources::new(1, 1, 0), &[],
+                 SimTime::from_millis(10)).unwrap();
+        let done = s.advance_to(SimTime::from_millis(100));
+        assert_eq!(done, vec!["b".to_string(), "a".to_string()]);
+    }
+
+    #[test]
+    fn fail_releases_resources() {
+        let mut s = sim();
+        s.launch("c1", "e", "node-000", Resources::new(4, 4096, 2),
+                 &[0, 1], SimTime::from_millis(1000)).unwrap();
+        s.fail("c1").unwrap();
+        assert_eq!(s.running_containers(), 0);
+        assert_eq!(s.node("node-000").unwrap().free_gpu_indices().len(), 2);
+        // completing the stale event later must be a no-op
+        let done = s.advance_to(SimTime::from_millis(2000));
+        assert!(done.is_empty());
+    }
+
+    #[test]
+    fn gpu_utilization_integrates() {
+        let mut s = sim(); // 4 GPUs total
+        s.launch("c1", "e", "node-000", Resources::new(1, 1, 2), &[0, 1],
+                 SimTime::from_millis(100)).unwrap();
+        s.advance_to(SimTime::from_millis(200));
+        // 2 GPUs busy for half of the 200ms window = 25%
+        assert!((s.gpu_utilization() - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn launch_on_unknown_node_errors() {
+        let mut s = sim();
+        assert!(s
+            .launch("c", "e", "nope", Resources::ZERO, &[], SimTime::ZERO)
+            .is_err());
+    }
+}

@@ -1,0 +1,136 @@
+//! Synthetic MNIST-like classification data (the `mnist.py` workload of
+//! paper Listings 1/2/4).
+//!
+//! Each class has a fixed random prototype image; samples are prototype +
+//! Gaussian noise. Linearly separable enough for the MLP to converge in a
+//! few hundred steps, matching the paper's demo workload scale.
+
+use super::BatchGen;
+use crate::runtime::engine::HostTensor;
+use crate::util::rng::Rng;
+
+/// Must match `python/compile/models/mnist_mlp.py`.
+pub const BATCH: usize = 128;
+pub const IN_DIM: usize = 784;
+pub const CLASSES: usize = 10;
+const NOISE: f32 = 0.35;
+
+pub struct MnistGen {
+    rng: Rng,
+    prototypes: Vec<f32>, // [CLASSES * IN_DIM]
+}
+
+impl MnistGen {
+    pub fn new(seed: u64) -> MnistGen {
+        // Fixed prototypes (shared across workers); seed drives sampling.
+        let mut proto_rng = Rng::new(0x00D1_6175);
+        let prototypes = (0..CLASSES * IN_DIM)
+            .map(|_| if proto_rng.chance(0.18) { 1.0 } else { 0.0 })
+            .collect();
+        MnistGen {
+            rng: Rng::new(seed ^ 0x9A9A_0101),
+            prototypes,
+        }
+    }
+
+    /// (x [B*784], y [B])
+    pub fn batch(&mut self) -> (Vec<f32>, Vec<i32>) {
+        let mut x = Vec::with_capacity(BATCH * IN_DIM);
+        let mut y = Vec::with_capacity(BATCH);
+        for _ in 0..BATCH {
+            let c = self.rng.index(CLASSES);
+            y.push(c as i32);
+            let base = c * IN_DIM;
+            for d in 0..IN_DIM {
+                let noise = self.rng.normal() as f32 * NOISE;
+                x.push((self.prototypes[base + d] + noise).clamp(-1.0, 2.0));
+            }
+        }
+        (x, y)
+    }
+}
+
+impl BatchGen for MnistGen {
+    fn next_batch(&mut self) -> Vec<HostTensor> {
+        let (x, y) = self.batch();
+        vec![HostTensor::F32(x), HostTensor::I32(y)]
+    }
+    fn next_inputs(&mut self) -> Vec<HostTensor> {
+        let mut b = self.next_batch();
+        b.truncate(1);
+        b
+    }
+}
+
+/// Top-1 accuracy given flat logits `[B*CLASSES]`.
+pub fn accuracy(logits: &[f32], labels: &[i32]) -> f64 {
+    let b = labels.len();
+    let mut hits = 0usize;
+    for i in 0..b {
+        let row = &logits[i * CLASSES..(i + 1) * CLASSES];
+        let argmax = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(j, _)| j)
+            .unwrap();
+        if argmax == labels[i] as usize {
+            hits += 1;
+        }
+    }
+    hits as f64 / b as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_label_range() {
+        let mut g = MnistGen::new(1);
+        let (x, y) = g.batch();
+        assert_eq!(x.len(), BATCH * IN_DIM);
+        assert_eq!(y.len(), BATCH);
+        assert!(y.iter().all(|&c| (0..CLASSES as i32).contains(&c)));
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // Nearest-prototype classification on clean generator output must
+        // beat chance by a wide margin.
+        let mut g = MnistGen::new(2);
+        let (x, y) = g.batch();
+        let mut hits = 0;
+        for i in 0..BATCH {
+            let xi = &x[i * IN_DIM..(i + 1) * IN_DIM];
+            let mut best = (f32::MAX, 0usize);
+            for c in 0..CLASSES {
+                let p = &g.prototypes[c * IN_DIM..(c + 1) * IN_DIM];
+                let d: f32 = xi
+                    .iter()
+                    .zip(p)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                if d < best.0 {
+                    best = (d, c);
+                }
+            }
+            if best.1 == y[i] as usize {
+                hits += 1;
+            }
+        }
+        assert!(hits as f64 / BATCH as f64 > 0.9, "hits={hits}");
+    }
+
+    #[test]
+    fn accuracy_helper() {
+        // logits favoring class == index order
+        let logits = vec![
+            1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, // -> 0
+            0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, // -> 1
+        ];
+        assert_eq!(accuracy(&logits, &[0, 1]), 1.0);
+        assert_eq!(accuracy(&logits, &[1, 0]), 0.0);
+    }
+}

@@ -1,0 +1,106 @@
+//! Synthetic token sequences for the BERT-proxy workload (paper §6.2).
+//!
+//! Task: next-token prediction over a planted first-order Markov chain
+//! (each token strongly prefers one successor), so the tiny transformer
+//! has real structure to learn.
+
+use super::BatchGen;
+use crate::runtime::engine::HostTensor;
+use crate::util::rng::Rng;
+
+/// Must match `python/compile/models/transformer_tiny.py`.
+pub const BATCH: usize = 8;
+pub const SEQ: usize = 32;
+pub const VOCAB: usize = 1_000;
+/// Probability of following the planted successor chain.
+const CHAIN_P: f64 = 0.85;
+
+pub struct TokenGen {
+    rng: Rng,
+    successor: Vec<i32>, // planted successor per token
+}
+
+impl TokenGen {
+    pub fn new(seed: u64) -> TokenGen {
+        let mut chain_rng = Rng::new(0x70AD_70AD);
+        let successor = (0..VOCAB)
+            .map(|_| chain_rng.index(VOCAB) as i32)
+            .collect();
+        TokenGen {
+            rng: Rng::new(seed ^ 0x5E5E_2323),
+            successor,
+        }
+    }
+
+    /// (ids [B*S], targets [B*S]) where targets[t] = ids[t+1].
+    pub fn batch(&mut self) -> (Vec<i32>, Vec<i32>) {
+        let mut ids = Vec::with_capacity(BATCH * SEQ);
+        let mut targets = Vec::with_capacity(BATCH * SEQ);
+        for _ in 0..BATCH {
+            let mut tok = self.rng.index(VOCAB) as i32;
+            let mut seq = Vec::with_capacity(SEQ + 1);
+            for _ in 0..=SEQ {
+                seq.push(tok);
+                tok = if self.rng.chance(CHAIN_P) {
+                    self.successor[tok as usize]
+                } else {
+                    self.rng.index(VOCAB) as i32
+                };
+            }
+            ids.extend_from_slice(&seq[..SEQ]);
+            targets.extend_from_slice(&seq[1..=SEQ]);
+        }
+        (ids, targets)
+    }
+}
+
+impl BatchGen for TokenGen {
+    fn next_batch(&mut self) -> Vec<HostTensor> {
+        let (ids, targets) = self.batch();
+        vec![HostTensor::I32(ids), HostTensor::I32(targets)]
+    }
+    fn next_inputs(&mut self) -> Vec<HostTensor> {
+        let mut b = self.next_batch();
+        b.truncate(1);
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_ranges() {
+        let mut g = TokenGen::new(1);
+        let (ids, targets) = g.batch();
+        assert_eq!(ids.len(), BATCH * SEQ);
+        assert_eq!(targets.len(), BATCH * SEQ);
+        assert!(ids.iter().all(|&t| (0..VOCAB as i32).contains(&t)));
+    }
+
+    #[test]
+    fn targets_shift_ids() {
+        let mut g = TokenGen::new(2);
+        let (ids, targets) = g.batch();
+        // within each row, targets[t] == ids[t+1]
+        for b in 0..BATCH {
+            for t in 0..SEQ - 1 {
+                assert_eq!(targets[b * SEQ + t], ids[b * SEQ + t + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn chain_structure_present() {
+        let mut g = TokenGen::new(3);
+        let (ids, targets) = g.batch();
+        let follows: usize = ids
+            .iter()
+            .zip(&targets)
+            .filter(|(&i, &t)| g.successor[i as usize] == t)
+            .count();
+        let frac = follows as f64 / ids.len() as f64;
+        assert!(frac > 0.7, "chain fraction {frac}");
+    }
+}

@@ -1,0 +1,201 @@
+//! Submarine Environment Service (paper §3.2.1).
+//!
+//! "An environment consists of base libraries such as operating systems,
+//! CUDA and GPU drivers, and library dependencies such as Python and
+//! TensorFlow... we select Conda as our dependency management system."
+//!
+//! This module provides the named-environment registry plus a real
+//! conda-style **version-constraint resolver** over a synthetic package
+//! index (DESIGN.md §Substitutions: container internals are out of scope;
+//! the service semantics — reproducible, shareable dependency sets — are
+//! in scope and tested).
+
+pub mod resolver;
+
+pub use resolver::{DependencySolver, PackageIndex, Version};
+
+use crate::storage::MetaStore;
+use crate::util::json::Json;
+use std::sync::Arc;
+
+const NS: &str = "environment";
+
+/// A named environment (image + conda-style dependency specs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Environment {
+    pub name: String,
+    pub image: String,
+    /// Constraint strings, e.g. `"tensorflow>=2.4"`, `"python=3.8"`.
+    pub dependencies: Vec<String>,
+}
+
+impl Environment {
+    pub fn from_json(j: &Json) -> crate::Result<Environment> {
+        Ok(Environment {
+            name: j
+                .str_field("name")
+                .ok_or_else(|| {
+                    crate::SubmarineError::InvalidSpec(
+                        "environment name required".into(),
+                    )
+                })?
+                .to_string(),
+            image: j.str_field("image").unwrap_or("").to_string(),
+            dependencies: j
+                .get("dependencies")
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|v| v.as_str().map(str::to_string))
+                        .collect()
+                })
+                .unwrap_or_default(),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("name", Json::Str(self.name.clone()))
+            .set("image", Json::Str(self.image.clone()))
+            .set(
+                "dependencies",
+                Json::Arr(
+                    self.dependencies
+                        .iter()
+                        .map(|d| Json::Str(d.clone()))
+                        .collect(),
+                ),
+            )
+    }
+}
+
+/// Environment manager: named, reusable, conflict-checked environments.
+pub struct EnvironmentManager {
+    store: Arc<MetaStore>,
+    index: PackageIndex,
+}
+
+impl EnvironmentManager {
+    pub fn new(store: Arc<MetaStore>) -> EnvironmentManager {
+        EnvironmentManager {
+            store,
+            index: PackageIndex::builtin(),
+        }
+    }
+
+    /// Register after *resolving* the dependency set — an environment
+    /// whose constraints are unsatisfiable is rejected up front, which is
+    /// what makes experiments reproducible later.
+    pub fn register(&self, env: &Environment) -> crate::Result<()> {
+        if self.store.get(NS, &env.name).is_some() {
+            return Err(crate::SubmarineError::AlreadyExists(format!(
+                "environment {}",
+                env.name
+            )));
+        }
+        let solver = DependencySolver::new(&self.index);
+        let resolved = solver.resolve(&env.dependencies)?;
+        let mut doc = env.to_json();
+        let lock: Vec<Json> = resolved
+            .iter()
+            .map(|(p, v)| Json::Str(format!("{p}={v}")))
+            .collect();
+        doc = doc.set("lock", Json::Arr(lock));
+        self.store.put(NS, &env.name, doc)
+    }
+
+    pub fn get(&self, name: &str) -> crate::Result<Environment> {
+        let j = self.store.get(NS, name).ok_or_else(|| {
+            crate::SubmarineError::NotFound(format!("environment {name}"))
+        })?;
+        Environment::from_json(&j)
+    }
+
+    /// The resolved `pkg=version` lock list stored at registration.
+    pub fn lock_of(&self, name: &str) -> crate::Result<Vec<String>> {
+        let j = self.store.get(NS, name).ok_or_else(|| {
+            crate::SubmarineError::NotFound(format!("environment {name}"))
+        })?;
+        Ok(j.get("lock")
+            .and_then(Json::as_arr)
+            .map(|a| {
+                a.iter()
+                    .filter_map(|v| v.as_str().map(str::to_string))
+                    .collect()
+            })
+            .unwrap_or_default())
+    }
+
+    pub fn list(&self) -> Vec<String> {
+        self.store.list(NS).into_iter().map(|(k, _)| k).collect()
+    }
+
+    pub fn delete(&self, name: &str) -> crate::Result<()> {
+        if !self.store.delete(NS, name)? {
+            return Err(crate::SubmarineError::NotFound(format!(
+                "environment {name}"
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr() -> EnvironmentManager {
+        EnvironmentManager::new(Arc::new(MetaStore::in_memory()))
+    }
+
+    fn env(deps: &[&str]) -> Environment {
+        Environment {
+            name: "tf-env".into(),
+            image: "submarine:tf-mnist".into(),
+            dependencies: deps.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    #[test]
+    fn register_resolves_and_locks() {
+        let m = mgr();
+        m.register(&env(&["tensorflow>=2.0", "python>=3.6"])).unwrap();
+        let lock = m.lock_of("tf-env").unwrap();
+        assert!(lock.iter().any(|l| l.starts_with("tensorflow=")));
+        assert!(lock.iter().any(|l| l.starts_with("python=")));
+        // transitive dep of tensorflow
+        assert!(lock.iter().any(|l| l.starts_with("numpy=")));
+    }
+
+    #[test]
+    fn unsatisfiable_env_rejected() {
+        let m = mgr();
+        let e = env(&["tensorflow>=99.0"]);
+        assert!(m.register(&e).is_err());
+        assert!(m.get("tf-env").is_err()); // nothing persisted
+    }
+
+    #[test]
+    fn duplicate_name_rejected() {
+        let m = mgr();
+        m.register(&env(&[])).unwrap();
+        assert!(m.register(&env(&[])).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let e = env(&["pytorch=1.8"]);
+        let e2 = Environment::from_json(&e.to_json()).unwrap();
+        assert_eq!(e, e2);
+    }
+
+    #[test]
+    fn delete_and_list() {
+        let m = mgr();
+        m.register(&env(&[])).unwrap();
+        assert_eq!(m.list(), vec!["tf-env"]);
+        m.delete("tf-env").unwrap();
+        assert!(m.list().is_empty());
+        assert!(m.delete("tf-env").is_err());
+    }
+}

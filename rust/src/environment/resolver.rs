@@ -1,0 +1,316 @@
+//! Conda-style dependency resolver: semantic versions, range constraints
+//! (`=`, `>=`, `<=`, `>`, `<`, `!=`, comma-conjunctions), transitive
+//! dependencies, and backtracking search preferring newest versions —
+//! the mechanism behind the Environment Service's reproducible installs.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A dotted version, compared numerically component-wise.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Version(pub u32, pub u32, pub u32);
+
+impl Version {
+    pub fn parse(s: &str) -> Option<Version> {
+        let mut it = s.trim().split('.');
+        let a = it.next()?.parse().ok()?;
+        let b = it.next().unwrap_or("0").parse().ok()?;
+        let c = it.next().unwrap_or("0").parse().ok()?;
+        if it.next().is_some() {
+            return None;
+        }
+        Some(Version(a, b, c))
+    }
+}
+
+impl fmt::Display for Version {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}.{}.{}", self.0, self.1, self.2)
+    }
+}
+
+/// One comparison atom.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Op {
+    Eq,
+    Ne,
+    Ge,
+    Le,
+    Gt,
+    Lt,
+}
+
+/// A constraint on one package: conjunction of atoms.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Constraint {
+    pub package: String,
+    atoms: Vec<(Op, Version)>,
+}
+
+impl Constraint {
+    /// Parse `"tensorflow>=2.4,<3"` or `"python=3.8"` or just `"numpy"`.
+    pub fn parse(s: &str) -> crate::Result<Constraint> {
+        let s = s.trim();
+        let split_at = s
+            .find(|c: char| "=<>!".contains(c))
+            .unwrap_or(s.len());
+        let package = s[..split_at].trim().to_string();
+        if package.is_empty() {
+            return Err(bad(&format!("empty package in {s:?}")));
+        }
+        if !package
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
+        {
+            return Err(bad(&format!("bad package name {package:?}")));
+        }
+        let mut atoms = Vec::new();
+        if split_at < s.len() {
+            for tok in s[split_at..].split(',') {
+                let tok = tok.trim();
+                let (op, rest) = if let Some(r) = tok.strip_prefix(">=") {
+                    (Op::Ge, r)
+                } else if let Some(r) = tok.strip_prefix("<=") {
+                    (Op::Le, r)
+                } else if let Some(r) = tok.strip_prefix("!=") {
+                    (Op::Ne, r)
+                } else if let Some(r) = tok.strip_prefix("==") {
+                    (Op::Eq, r)
+                } else if let Some(r) = tok.strip_prefix('>') {
+                    (Op::Gt, r)
+                } else if let Some(r) = tok.strip_prefix('<') {
+                    (Op::Lt, r)
+                } else if let Some(r) = tok.strip_prefix('=') {
+                    (Op::Eq, r)
+                } else {
+                    return Err(bad(&format!("bad constraint {tok:?}")));
+                };
+                let v = Version::parse(rest)
+                    .ok_or_else(|| bad(&format!("bad version {rest:?}")))?;
+                atoms.push((op, v));
+            }
+        }
+        Ok(Constraint { package, atoms })
+    }
+
+    pub fn admits(&self, v: Version) -> bool {
+        self.atoms.iter().all(|(op, bound)| match op {
+            Op::Eq => v == *bound,
+            Op::Ne => v != *bound,
+            Op::Ge => v >= *bound,
+            Op::Le => v <= *bound,
+            Op::Gt => v > *bound,
+            Op::Lt => v < *bound,
+        })
+    }
+}
+
+fn bad(msg: &str) -> crate::SubmarineError {
+    crate::SubmarineError::InvalidSpec(msg.to_string())
+}
+
+/// Available versions + per-version dependencies for each package.
+#[derive(Debug, Default)]
+pub struct PackageIndex {
+    /// package -> version -> dependency constraint strings
+    packages: BTreeMap<String, BTreeMap<Version, Vec<String>>>,
+}
+
+impl PackageIndex {
+    pub fn new() -> PackageIndex {
+        PackageIndex::default()
+    }
+
+    pub fn add(&mut self, pkg: &str, version: &str, deps: &[&str]) {
+        self.packages
+            .entry(pkg.to_string())
+            .or_default()
+            .insert(
+                Version::parse(version).expect("index version"),
+                deps.iter().map(|s| s.to_string()).collect(),
+            );
+    }
+
+    pub fn versions(&self, pkg: &str) -> Vec<Version> {
+        self.packages
+            .get(pkg)
+            .map(|m| m.keys().copied().collect())
+            .unwrap_or_default()
+    }
+
+    pub fn deps(&self, pkg: &str, v: Version) -> &[String] {
+        static EMPTY: Vec<String> = Vec::new();
+        self.packages
+            .get(pkg)
+            .and_then(|m| m.get(&v))
+            .unwrap_or(&EMPTY)
+    }
+
+    /// A small synthetic index mirroring the stacks the paper names
+    /// (TensorFlow / PyTorch / MXNet on Python, §5.3).
+    pub fn builtin() -> PackageIndex {
+        let mut idx = PackageIndex::new();
+        for v in ["3.6.0", "3.7.0", "3.8.0", "3.9.0"] {
+            idx.add("python", v, &[]);
+        }
+        for v in ["1.16.0", "1.19.0", "1.21.0"] {
+            idx.add("numpy", v, &["python>=3.6"]);
+        }
+        idx.add("tensorflow", "1.15.0",
+                &["python>=3.6,<3.8", "numpy>=1.16,<1.19"]);
+        idx.add("tensorflow", "2.4.0",
+                &["python>=3.6", "numpy>=1.19"]);
+        idx.add("tensorflow", "2.6.0",
+                &["python>=3.7", "numpy>=1.19"]);
+        idx.add("pytorch", "1.8.0", &["python>=3.6", "numpy>=1.16"]);
+        idx.add("pytorch", "1.10.0", &["python>=3.7", "numpy>=1.19"]);
+        idx.add("mxnet", "1.8.0", &["python>=3.6", "numpy>=1.16,<1.21"]);
+        idx.add("scipy", "1.5.0", &["numpy>=1.16"]);
+        idx
+    }
+}
+
+/// Backtracking resolver preferring newest versions.
+pub struct DependencySolver<'a> {
+    index: &'a PackageIndex,
+}
+
+impl<'a> DependencySolver<'a> {
+    pub fn new(index: &'a PackageIndex) -> DependencySolver<'a> {
+        DependencySolver { index }
+    }
+
+    /// Resolve constraint strings to a consistent `package -> version`
+    /// assignment covering transitive dependencies.
+    pub fn resolve(
+        &self,
+        specs: &[String],
+    ) -> crate::Result<BTreeMap<String, Version>> {
+        let goals: Vec<Constraint> = specs
+            .iter()
+            .map(|s| Constraint::parse(s))
+            .collect::<crate::Result<_>>()?;
+        let mut chosen = BTreeMap::new();
+        if self.solve(&goals, &mut chosen) {
+            Ok(chosen)
+        } else {
+            Err(crate::SubmarineError::InvalidSpec(format!(
+                "unsatisfiable dependency set: {specs:?}"
+            )))
+        }
+    }
+
+    fn solve(
+        &self,
+        goals: &[Constraint],
+        chosen: &mut BTreeMap<String, Version>,
+    ) -> bool {
+        // Find the first unsatisfied goal.
+        let Some(goal) = goals.iter().find(|g| {
+            match chosen.get(&g.package) {
+                Some(v) => !g.admits(*v), // conflict -> dead end below
+                None => true,
+            }
+        }) else {
+            return true; // all satisfied
+        };
+        if let Some(v) = chosen.get(&goal.package) {
+            // Already pinned to an incompatible version: dead end.
+            return !goal.admits(*v) && false;
+        }
+        // Try candidate versions newest-first.
+        let mut versions = self.index.versions(&goal.package);
+        versions.reverse();
+        for v in versions {
+            if !goal.admits(v) {
+                continue;
+            }
+            // Other goals on the same package must also admit it.
+            if !goals
+                .iter()
+                .filter(|g| g.package == goal.package)
+                .all(|g| g.admits(v))
+            {
+                continue;
+            }
+            chosen.insert(goal.package.clone(), v);
+            let mut expanded: Vec<Constraint> = goals.to_vec();
+            let mut ok = true;
+            for d in self.index.deps(&goal.package, v) {
+                match Constraint::parse(d) {
+                    Ok(c) => expanded.push(c),
+                    Err(_) => {
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            if ok && self.solve(&expanded, chosen) {
+                return true;
+            }
+            chosen.remove(&goal.package);
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resolve(specs: &[&str]) -> crate::Result<BTreeMap<String, Version>> {
+        let idx = PackageIndex::builtin();
+        DependencySolver::new(&idx)
+            .resolve(&specs.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn version_ordering() {
+        assert!(Version::parse("2.4").unwrap() < Version(2, 6, 0));
+        assert!(Version::parse("1.15.0").unwrap() < Version(2, 0, 0));
+        assert!(Version::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn constraint_parsing_and_admission() {
+        let c = Constraint::parse("tensorflow>=2.4,<3").unwrap();
+        assert!(c.admits(Version(2, 6, 0)));
+        assert!(!c.admits(Version(3, 0, 0)));
+        assert!(!c.admits(Version(1, 15, 0)));
+        assert!(Constraint::parse(">=1.0").is_err());
+        assert!(Constraint::parse("pkg~1.0").is_err());
+    }
+
+    #[test]
+    fn resolves_transitively_newest_first() {
+        let r = resolve(&["tensorflow>=2.0"]).unwrap();
+        assert_eq!(r["tensorflow"], Version(2, 6, 0));
+        assert!(r.contains_key("numpy"));
+        assert!(r.contains_key("python"));
+        assert!(r["numpy"] >= Version(1, 19, 0));
+    }
+
+    #[test]
+    fn backtracks_on_conflicts() {
+        // tf 1.15 needs python<3.8 and numpy<1.19; mxnet needs
+        // numpy<1.21 -> consistent assignment exists and is found.
+        let r = resolve(&["tensorflow<2", "mxnet>=1.8"]).unwrap();
+        assert_eq!(r["tensorflow"], Version(1, 15, 0));
+        assert!(r["python"] < Version(3, 8, 0));
+        assert!(r["numpy"] < Version(1, 19, 0));
+    }
+
+    #[test]
+    fn detects_unsatisfiable() {
+        assert!(resolve(&["tensorflow>=99"]).is_err());
+        // direct contradiction across user constraints
+        assert!(resolve(&["python>=3.9", "tensorflow<2"]).is_err());
+    }
+
+    #[test]
+    fn bare_package_name_allowed() {
+        let r = resolve(&["scipy"]).unwrap();
+        assert!(r.contains_key("scipy"));
+        assert!(r.contains_key("numpy"));
+    }
+}

@@ -1,0 +1,69 @@
+//! Unified error type for the Submarine-RS platform.
+
+/// Platform-level errors surfaced through the REST API and CLI.
+#[derive(Debug, thiserror::Error)]
+pub enum SubmarineError {
+    #[error("not found: {0}")]
+    NotFound(String),
+    #[error("already exists: {0}")]
+    AlreadyExists(String),
+    #[error("invalid spec: {0}")]
+    InvalidSpec(String),
+    #[error("resources unavailable: {0}")]
+    ResourcesUnavailable(String),
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    #[error("storage error: {0}")]
+    Storage(String),
+    #[error("json error: {0}")]
+    Json(#[from] crate::util::json::JsonError),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for SubmarineError {
+    fn from(e: xla::Error) -> Self {
+        SubmarineError::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, SubmarineError>;
+
+impl SubmarineError {
+    /// HTTP status code this error maps to on the REST surface.
+    pub fn http_status(&self) -> u16 {
+        match self {
+            SubmarineError::NotFound(_) => 404,
+            SubmarineError::AlreadyExists(_) => 409,
+            SubmarineError::InvalidSpec(_) | SubmarineError::Json(_) => 400,
+            SubmarineError::ResourcesUnavailable(_) => 503,
+            _ => 500,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn status_mapping() {
+        assert_eq!(SubmarineError::NotFound("x".into()).http_status(), 404);
+        assert_eq!(
+            SubmarineError::InvalidSpec("x".into()).http_status(),
+            400
+        );
+        assert_eq!(
+            SubmarineError::Runtime("x".into()).http_status(),
+            500
+        );
+    }
+
+    #[test]
+    fn display_includes_cause() {
+        let e = SubmarineError::NotFound("experiment-1".into());
+        assert_eq!(e.to_string(), "not found: experiment-1");
+    }
+}

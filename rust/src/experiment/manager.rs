@@ -1,0 +1,203 @@
+//! Experiment manager (paper Fig. 4): accepts experiment requests,
+//! persists metadata in the [`MetaStore`] ("so that experiments become
+//! easy to compare and reproducible"), and forwards to the configured
+//! submitter.
+
+use super::monitor::ExperimentMonitor;
+use super::spec::{ExperimentSpec, ExperimentStatus};
+use crate::orchestrator::Submitter;
+use crate::storage::MetaStore;
+use crate::util::json::Json;
+use std::sync::Arc;
+
+const NS: &str = "experiment";
+
+/// The control-plane entry point for experiments.
+pub struct ExperimentManager {
+    store: Arc<MetaStore>,
+    monitor: Arc<ExperimentMonitor>,
+    submitter: Arc<dyn Submitter>,
+}
+
+impl ExperimentManager {
+    pub fn new(
+        store: Arc<MetaStore>,
+        monitor: Arc<ExperimentMonitor>,
+        submitter: Arc<dyn Submitter>,
+    ) -> ExperimentManager {
+        ExperimentManager {
+            store,
+            monitor,
+            submitter,
+        }
+    }
+
+    pub fn monitor(&self) -> &Arc<ExperimentMonitor> {
+        &self.monitor
+    }
+
+    /// Accept + persist + submit. Returns the experiment id.
+    pub fn submit(&self, spec: &ExperimentSpec) -> crate::Result<String> {
+        let id = crate::util::id::next("experiment");
+        let doc = Json::obj()
+            .set("id", Json::Str(id.clone()))
+            .set("spec", spec.to_json())
+            .set(
+                "submitter",
+                Json::Str(self.submitter.name().to_string()),
+            )
+            .set(
+                "accepted_at",
+                Json::Num(crate::util::clock::unix_millis() as f64),
+            );
+        self.store.put(NS, &id, doc)?;
+        self.monitor.watch(&id, spec.total_containers());
+        self.submitter.submit(&id, spec)?;
+        crate::info!("experiment-manager", "accepted {id} ({})",
+                     spec.meta.name);
+        Ok(id)
+    }
+
+    pub fn get(&self, id: &str) -> crate::Result<Json> {
+        let mut doc = self.store.get(NS, id).ok_or_else(|| {
+            crate::SubmarineError::NotFound(format!("experiment {id}"))
+        })?;
+        doc = doc.set(
+            "status",
+            Json::Str(self.status(id).as_str().to_string()),
+        );
+        Ok(doc)
+    }
+
+    pub fn spec_of(&self, id: &str) -> crate::Result<ExperimentSpec> {
+        let doc = self.store.get(NS, id).ok_or_else(|| {
+            crate::SubmarineError::NotFound(format!("experiment {id}"))
+        })?;
+        ExperimentSpec::from_json(doc.get("spec").ok_or_else(|| {
+            crate::SubmarineError::Storage("experiment doc missing spec"
+                .into())
+        })?)
+    }
+
+    pub fn status(&self, id: &str) -> ExperimentStatus {
+        self.monitor.status(id)
+    }
+
+    pub fn list(&self) -> Vec<(String, ExperimentStatus)> {
+        self.store
+            .list(NS)
+            .into_iter()
+            .map(|(id, _)| {
+                let st = self.monitor.status(&id);
+                (id, st)
+            })
+            .collect()
+    }
+
+    pub fn kill(&self, id: &str) -> crate::Result<()> {
+        if self.store.get(NS, id).is_none() {
+            return Err(crate::SubmarineError::NotFound(format!(
+                "experiment {id}"
+            )));
+        }
+        self.submitter.kill(id)?;
+        // Submitters stop the containers; the terminal state is the
+        // manager's responsibility (idempotent if the submitter already
+        // reported it).
+        self.monitor
+            .record(id, super::monitor::Event::Killed);
+        Ok(())
+    }
+
+    /// Delete a *terminal* experiment's metadata.
+    pub fn delete(&self, id: &str) -> crate::Result<()> {
+        let st = self.monitor.status(id);
+        if !st.is_terminal() && self.store.get(NS, id).is_some() {
+            return Err(crate::SubmarineError::InvalidSpec(format!(
+                "experiment {id} is {}; kill it first",
+                st.as_str()
+            )));
+        }
+        if !self.store.delete(NS, id)? {
+            return Err(crate::SubmarineError::NotFound(format!(
+                "experiment {id}"
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiment::monitor::Event;
+
+    /// No-op submitter for manager unit tests.
+    struct NullSubmitter;
+    impl Submitter for NullSubmitter {
+        fn name(&self) -> &'static str {
+            "null"
+        }
+        fn submit(&self, _id: &str, _spec: &ExperimentSpec)
+            -> crate::Result<()>
+        {
+            Ok(())
+        }
+        fn kill(&self, _id: &str) -> crate::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn manager() -> ExperimentManager {
+        ExperimentManager::new(
+            Arc::new(MetaStore::in_memory()),
+            Arc::new(ExperimentMonitor::new()),
+            Arc::new(NullSubmitter),
+        )
+    }
+
+    fn spec() -> ExperimentSpec {
+        ExperimentSpec::parse(
+            r#"{"meta":{"name":"mnist"},
+                "spec":{"Worker":{"replicas":2,"resources":"cpu=1"}}}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn submit_persists_and_lists() {
+        let m = manager();
+        let id = m.submit(&spec()).unwrap();
+        let doc = m.get(&id).unwrap();
+        assert_eq!(doc.str_field("status"), Some("Accepted"));
+        assert_eq!(
+            doc.at(&["spec", "meta", "name"]).unwrap().as_str(),
+            Some("mnist")
+        );
+        assert_eq!(m.list().len(), 1);
+        let round = m.spec_of(&id).unwrap();
+        assert_eq!(round.meta.name, "mnist");
+    }
+
+    #[test]
+    fn delete_requires_terminal_state() {
+        let m = manager();
+        let id = m.submit(&spec()).unwrap();
+        m.monitor().record(
+            &id,
+            Event::ContainerStarted { container: "c".into() },
+        );
+        assert!(m.delete(&id).is_err()); // Running
+        m.monitor().record(&id, Event::Killed);
+        m.delete(&id).unwrap();
+        assert!(m.get(&id).is_err());
+    }
+
+    #[test]
+    fn unknown_ids_error() {
+        let m = manager();
+        assert!(m.get("nope").is_err());
+        assert!(m.kill("nope").is_err());
+        assert!(m.delete("nope").is_err());
+    }
+}

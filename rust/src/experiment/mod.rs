@@ -1,0 +1,10 @@
+//! Submarine Experiment Service (paper §3.2.2, Figs. 3–4): spec types,
+//! the experiment manager, and the experiment monitor.
+
+pub mod manager;
+pub mod monitor;
+pub mod spec;
+
+pub use manager::ExperimentManager;
+pub use monitor::{Event, ExperimentMonitor};
+pub use spec::{ExperimentSpec, ExperimentStatus};

@@ -1,0 +1,191 @@
+//! Experiment monitor (paper Fig. 4): "tracks the status of experiments
+//! and records important events and sends them to the experiment manager.
+//! This information plays a key role to predict the success or failure of
+//! the in-progress experiment."
+
+use super::spec::ExperimentStatus;
+use crate::util::clock::unix_millis;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Events emitted by submitters/runtimes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    Accepted,
+    ContainerStarted { container: String },
+    ContainerFinished { container: String },
+    ContainerFailed { container: String, reason: String },
+    MetricLogged { metric: String, step: u64, value: f64 },
+    Killed,
+}
+
+/// A recorded event with timestamp.
+#[derive(Debug, Clone)]
+pub struct Recorded {
+    pub at_millis: u64,
+    pub event: Event,
+}
+
+#[derive(Default)]
+struct ExpState {
+    events: Vec<Recorded>,
+    containers_expected: u32,
+    containers_started: u32,
+    containers_finished: u32,
+    containers_failed: u32,
+    killed: bool,
+}
+
+/// Tracks per-experiment container progress and derives status.
+#[derive(Default)]
+pub struct ExperimentMonitor {
+    state: Mutex<BTreeMap<String, ExpState>>,
+}
+
+impl ExperimentMonitor {
+    pub fn new() -> ExperimentMonitor {
+        ExperimentMonitor::default()
+    }
+
+    /// Register a new experiment expecting `containers` containers.
+    pub fn watch(&self, id: &str, containers: u32) {
+        let mut g = self.state.lock().unwrap();
+        let st = g.entry(id.to_string()).or_default();
+        st.containers_expected = containers;
+        st.events.push(Recorded {
+            at_millis: unix_millis(),
+            event: Event::Accepted,
+        });
+    }
+
+    /// Record an event for `id`.
+    pub fn record(&self, id: &str, event: Event) {
+        let mut g = self.state.lock().unwrap();
+        let st = g.entry(id.to_string()).or_default();
+        match &event {
+            Event::ContainerStarted { .. } => st.containers_started += 1,
+            Event::ContainerFinished { .. } => st.containers_finished += 1,
+            Event::ContainerFailed { .. } => st.containers_failed += 1,
+            Event::Killed => st.killed = true,
+            _ => {}
+        }
+        st.events.push(Recorded {
+            at_millis: unix_millis(),
+            event,
+        });
+    }
+
+    /// Derived status per Fig. 4's lifecycle.
+    pub fn status(&self, id: &str) -> ExperimentStatus {
+        let g = self.state.lock().unwrap();
+        match g.get(id) {
+            None => ExperimentStatus::Accepted,
+            Some(st) => {
+                if st.killed {
+                    ExperimentStatus::Killed
+                } else if st.containers_failed > 0 {
+                    ExperimentStatus::Failed
+                } else if st.containers_expected > 0
+                    && st.containers_finished >= st.containers_expected
+                {
+                    ExperimentStatus::Succeeded
+                } else if st.containers_started > 0 {
+                    ExperimentStatus::Running
+                } else {
+                    ExperimentStatus::Accepted
+                }
+            }
+        }
+    }
+
+    /// Success-likelihood prediction for an in-progress experiment (the
+    /// paper's monitor "predict[s] the success or failure"): fraction of
+    /// containers finished cleanly, penalized by failures.
+    pub fn success_estimate(&self, id: &str) -> f64 {
+        let g = self.state.lock().unwrap();
+        match g.get(id) {
+            None => 0.5,
+            Some(st) => {
+                if st.killed || st.containers_failed > 0 {
+                    0.0
+                } else if st.containers_expected == 0 {
+                    0.5
+                } else {
+                    let done = st.containers_finished as f64
+                        / st.containers_expected as f64;
+                    0.5 + 0.5 * done
+                }
+            }
+        }
+    }
+
+    pub fn events(&self, id: &str) -> Vec<Recorded> {
+        self.state
+            .lock()
+            .unwrap()
+            .get(id)
+            .map(|st| st.events.clone())
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_accepted_running_succeeded() {
+        let m = ExperimentMonitor::new();
+        m.watch("e", 2);
+        assert_eq!(m.status("e"), ExperimentStatus::Accepted);
+        m.record("e", Event::ContainerStarted { container: "c0".into() });
+        m.record("e", Event::ContainerStarted { container: "c1".into() });
+        assert_eq!(m.status("e"), ExperimentStatus::Running);
+        m.record("e", Event::ContainerFinished { container: "c0".into() });
+        assert_eq!(m.status("e"), ExperimentStatus::Running);
+        m.record("e", Event::ContainerFinished { container: "c1".into() });
+        assert_eq!(m.status("e"), ExperimentStatus::Succeeded);
+    }
+
+    #[test]
+    fn failure_dominates() {
+        let m = ExperimentMonitor::new();
+        m.watch("e", 2);
+        m.record("e", Event::ContainerStarted { container: "c0".into() });
+        m.record(
+            "e",
+            Event::ContainerFailed {
+                container: "c0".into(),
+                reason: "OOM".into(),
+            },
+        );
+        assert_eq!(m.status("e"), ExperimentStatus::Failed);
+        assert_eq!(m.success_estimate("e"), 0.0);
+    }
+
+    #[test]
+    fn kill_is_terminal() {
+        let m = ExperimentMonitor::new();
+        m.watch("e", 1);
+        m.record("e", Event::Killed);
+        assert_eq!(m.status("e"), ExperimentStatus::Killed);
+    }
+
+    #[test]
+    fn success_estimate_grows_with_progress() {
+        let m = ExperimentMonitor::new();
+        m.watch("e", 4);
+        let base = m.success_estimate("e");
+        m.record("e", Event::ContainerStarted { container: "c".into() });
+        m.record("e", Event::ContainerFinished { container: "c".into() });
+        assert!(m.success_estimate("e") > base);
+    }
+
+    #[test]
+    fn unknown_experiment_defaults() {
+        let m = ExperimentMonitor::new();
+        assert_eq!(m.status("ghost"), ExperimentStatus::Accepted);
+        assert_eq!(m.success_estimate("ghost"), 0.5);
+        assert!(m.events("ghost").is_empty());
+    }
+}

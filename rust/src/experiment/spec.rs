@@ -1,0 +1,379 @@
+//! Experiment specification types (paper §3.2.2, Fig. 3; JSON format of
+//! Listings 2 and 4).
+//!
+//! An experiment = meta (name/framework/cmd) + environment + a map of task
+//! groups (`Ps`, `Worker`, ...) with replicas and resources, plus the
+//! optional scheduling fields Submarine-RS adds (queue, workload binding
+//! for the local PJRT runtime).
+
+use crate::cluster::Resources;
+use crate::util::json::Json;
+
+/// Experiment metadata (Listing 2 `ExperimentMeta`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentMeta {
+    pub name: String,
+    pub namespace: String,
+    pub framework: String,
+    pub cmd: String,
+}
+
+/// One task group (Listing 2 `ExperimentTaskSpec`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskSpec {
+    pub replicas: u32,
+    pub resources: Resources,
+}
+
+/// Environment reference (Listing 2 `EnvironmentSpec`).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct EnvironmentRef {
+    pub image: String,
+    /// Optional named environment in the Environment Service.
+    pub name: Option<String>,
+}
+
+/// Binding to a real AOT-compiled workload for the local runtime
+/// (Submarine proper launches user code; Submarine-RS launches the AOT
+/// models from `artifacts/` — see DESIGN.md §Substitutions).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadSpec {
+    /// Model name in `artifacts/manifest.json` (e.g. `"deepfm"`).
+    pub model: String,
+    pub steps: u32,
+    pub lr: f32,
+    pub seed: u64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec {
+            model: "mnist_mlp".into(),
+            steps: 100,
+            lr: 0.05,
+            seed: 42,
+        }
+    }
+}
+
+/// Full experiment spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentSpec {
+    pub meta: ExperimentMeta,
+    pub environment: EnvironmentRef,
+    /// Task-group name -> spec (`Ps`, `Worker`, ...).
+    pub tasks: Vec<(String, TaskSpec)>,
+    /// Scheduler queue (defaults to `root`).
+    pub queue: String,
+    /// Optional real workload to run via the PJRT runtime.
+    pub workload: Option<WorkloadSpec>,
+}
+
+impl ExperimentSpec {
+    /// Parse the Listing-2/4 JSON shape.
+    pub fn from_json(j: &Json) -> crate::Result<ExperimentSpec> {
+        let meta = j.get("meta").ok_or_else(|| bad("missing meta"))?;
+        let name = meta
+            .str_field("name")
+            .ok_or_else(|| bad("meta.name required"))?
+            .to_string();
+        if name.is_empty() {
+            return Err(bad("meta.name must be non-empty"));
+        }
+        let spec = ExperimentSpec {
+            meta: ExperimentMeta {
+                name,
+                namespace: meta
+                    .str_field("namespace")
+                    .unwrap_or("default")
+                    .to_string(),
+                framework: meta
+                    .str_field("framework")
+                    .unwrap_or("TensorFlow")
+                    .to_string(),
+                cmd: meta.str_field("cmd").unwrap_or("").to_string(),
+            },
+            environment: EnvironmentRef {
+                image: j
+                    .at(&["environment", "image"])
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+                name: j
+                    .at(&["environment", "name"])
+                    .and_then(Json::as_str)
+                    .map(str::to_string),
+            },
+            tasks: {
+                let mut tasks = Vec::new();
+                if let Some(Json::Obj(groups)) = j.get("spec") {
+                    for (gname, g) in groups {
+                        let replicas = g
+                            .num_field("replicas")
+                            .ok_or_else(|| bad("task replicas required"))?
+                            as u32;
+                        if replicas == 0 {
+                            return Err(bad("task replicas must be >= 1"));
+                        }
+                        let res = g
+                            .str_field("resources")
+                            .ok_or_else(|| bad("task resources required"))?;
+                        tasks.push((
+                            gname.clone(),
+                            TaskSpec {
+                                replicas,
+                                resources: Resources::parse(res)?,
+                            },
+                        ));
+                    }
+                }
+                if tasks.is_empty() {
+                    return Err(bad("spec must define at least one task"));
+                }
+                tasks
+            },
+            queue: j
+                .str_field("queue")
+                .unwrap_or("root")
+                .to_string(),
+            workload: j.get("workload").map(|w| WorkloadSpec {
+                model: w
+                    .str_field("model")
+                    .unwrap_or("mnist_mlp")
+                    .to_string(),
+                steps: num_or_str(w, "steps").unwrap_or(100.0) as u32,
+                lr: num_or_str(w, "lr").unwrap_or(0.05) as f32,
+                seed: num_or_str(w, "seed").unwrap_or(42.0) as u64,
+            }),
+        };
+        Ok(spec)
+    }
+
+    pub fn parse(text: &str) -> crate::Result<ExperimentSpec> {
+        Self::from_json(&Json::parse(text)?)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut groups = Json::obj();
+        for (name, t) in &self.tasks {
+            groups = groups.set(
+                name,
+                Json::obj()
+                    .set("replicas", Json::Num(t.replicas as f64))
+                    .set(
+                        "resources",
+                        Json::Str(t.resources.to_string()),
+                    ),
+            );
+        }
+        let mut j = Json::obj()
+            .set(
+                "meta",
+                Json::obj()
+                    .set("name", Json::Str(self.meta.name.clone()))
+                    .set(
+                        "namespace",
+                        Json::Str(self.meta.namespace.clone()),
+                    )
+                    .set(
+                        "framework",
+                        Json::Str(self.meta.framework.clone()),
+                    )
+                    .set("cmd", Json::Str(self.meta.cmd.clone())),
+            )
+            .set(
+                "environment",
+                Json::obj()
+                    .set("image", Json::Str(self.environment.image.clone())),
+            )
+            .set("spec", groups)
+            .set("queue", Json::Str(self.queue.clone()));
+        if let Some(w) = &self.workload {
+            j = j.set(
+                "workload",
+                Json::obj()
+                    .set("model", Json::Str(w.model.clone()))
+                    .set("steps", Json::Num(w.steps as f64))
+                    .set("lr", Json::Num(w.lr as f64))
+                    .set("seed", Json::Num(w.seed as f64)),
+            );
+        }
+        j
+    }
+
+    /// Convert to a scheduler job request.
+    pub fn to_job(
+        &self,
+        id: &str,
+        duration: crate::util::clock::SimTime,
+    ) -> crate::scheduler::JobRequest {
+        crate::scheduler::JobRequest {
+            id: id.to_string(),
+            queue: self.queue.clone(),
+            gang: true,
+            tasks: self
+                .tasks
+                .iter()
+                .map(|(name, t)| crate::scheduler::TaskGroup {
+                    name: name.clone(),
+                    replicas: t.replicas,
+                    resources: t.resources,
+                    duration,
+                })
+                .collect(),
+        }
+    }
+
+    pub fn total_containers(&self) -> u32 {
+        self.tasks.iter().map(|(_, t)| t.replicas).sum()
+    }
+}
+
+fn bad(msg: &str) -> crate::SubmarineError {
+    crate::SubmarineError::InvalidSpec(msg.to_string())
+}
+
+/// Numeric field that may arrive as a JSON number *or* a numeric string
+/// (template `{{param}}` substitutions always produce strings).
+fn num_or_str(j: &Json, key: &str) -> Option<f64> {
+    match j.get(key)? {
+        Json::Num(n) => Some(*n),
+        Json::Str(s) => s.trim().parse().ok(),
+        _ => None,
+    }
+}
+
+/// Experiment lifecycle status (Fig. 4 monitor states).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExperimentStatus {
+    Accepted,
+    Running,
+    Succeeded,
+    Failed,
+    Killed,
+}
+
+impl ExperimentStatus {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ExperimentStatus::Accepted => "Accepted",
+            ExperimentStatus::Running => "Running",
+            ExperimentStatus::Succeeded => "Succeeded",
+            ExperimentStatus::Failed => "Failed",
+            ExperimentStatus::Killed => "Killed",
+        }
+    }
+    pub fn parse(s: &str) -> Option<ExperimentStatus> {
+        Some(match s {
+            "Accepted" => ExperimentStatus::Accepted,
+            "Running" => ExperimentStatus::Running,
+            "Succeeded" => ExperimentStatus::Succeeded,
+            "Failed" => ExperimentStatus::Failed,
+            "Killed" => ExperimentStatus::Killed,
+            _ => return None,
+        })
+    }
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            ExperimentStatus::Succeeded
+                | ExperimentStatus::Failed
+                | ExperimentStatus::Killed
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's Listing-2 experiment, as JSON.
+    pub(crate) const LISTING2: &str = r#"{
+      "meta": {"name": "mnist", "namespace": "default",
+               "framework": "TensorFlow", "cmd": "python mnist.py"},
+      "environment": {"image": "submarine:tf-mnist"},
+      "spec": {
+        "Ps":     {"replicas": 1, "resources": "cpu=2,memory=2G"},
+        "Worker": {"replicas": 4, "resources": "cpu=4,gpu=4,memory=4G"}
+      }
+    }"#;
+
+    #[test]
+    fn parses_listing2() {
+        let s = ExperimentSpec::parse(LISTING2).unwrap();
+        assert_eq!(s.meta.name, "mnist");
+        assert_eq!(s.meta.framework, "TensorFlow");
+        assert_eq!(s.tasks.len(), 2);
+        let (name, ps) = &s.tasks[0];
+        assert_eq!(name, "Ps");
+        assert_eq!(ps.replicas, 1);
+        assert_eq!(ps.resources.memory_mb, 2048);
+        assert_eq!(s.total_containers(), 5);
+        assert_eq!(s.queue, "root");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = ExperimentSpec::parse(LISTING2).unwrap();
+        let j = s.to_json().dump();
+        let s2 = ExperimentSpec::parse(&j).unwrap();
+        assert_eq!(s, s2);
+    }
+
+    #[test]
+    fn workload_binding_parses() {
+        let text = r#"{
+          "meta": {"name": "ctr"},
+          "spec": {"Worker": {"replicas": 1, "resources": "cpu=1"}},
+          "workload": {"model": "deepfm", "steps": 300, "lr": 0.02}
+        }"#;
+        let s = ExperimentSpec::parse(text).unwrap();
+        let w = s.workload.unwrap();
+        assert_eq!(w.model, "deepfm");
+        assert_eq!(w.steps, 300);
+        assert!((w.lr - 0.02).abs() < 1e-6);
+        assert_eq!(w.seed, 42); // default
+    }
+
+    #[test]
+    fn rejects_invalid_specs() {
+        assert!(ExperimentSpec::parse("{}").is_err());
+        assert!(ExperimentSpec::parse(
+            r#"{"meta":{"name":""},"spec":{"W":{"replicas":1,"resources":"cpu=1"}}}"#
+        )
+        .is_err());
+        assert!(ExperimentSpec::parse(
+            r#"{"meta":{"name":"x"},"spec":{}}"#
+        )
+        .is_err());
+        assert!(ExperimentSpec::parse(
+            r#"{"meta":{"name":"x"},"spec":{"W":{"replicas":0,"resources":"cpu=1"}}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn to_job_preserves_structure() {
+        let s = ExperimentSpec::parse(LISTING2).unwrap();
+        let job =
+            s.to_job("exp-1", crate::util::clock::SimTime::from_millis(10));
+        assert_eq!(job.total_containers(), 5);
+        assert!(job.gang);
+        assert_eq!(job.tasks[1].resources.gpus, 4);
+    }
+
+    #[test]
+    fn status_roundtrip_and_terminality() {
+        for s in [
+            ExperimentStatus::Accepted,
+            ExperimentStatus::Running,
+            ExperimentStatus::Succeeded,
+            ExperimentStatus::Failed,
+            ExperimentStatus::Killed,
+        ] {
+            assert_eq!(ExperimentStatus::parse(s.as_str()), Some(s));
+        }
+        assert!(!ExperimentStatus::Running.is_terminal());
+        assert!(ExperimentStatus::Failed.is_terminal());
+    }
+}

@@ -1,0 +1,248 @@
+//! HTTP/1.1 request parsing and response serialization (std-only).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+
+/// A parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    /// Path without query string.
+    pub path: String,
+    pub query: BTreeMap<String, String>,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Parse one request from a stream.
+    pub fn read_from<R: Read>(stream: R) -> crate::Result<Request> {
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let mut parts = line.trim_end().split(' ');
+        let method = parts
+            .next()
+            .filter(|m| !m.is_empty())
+            .ok_or_else(|| bad("missing method"))?
+            .to_string();
+        let target = parts.next().ok_or_else(|| bad("missing path"))?;
+        let version = parts.next().unwrap_or("");
+        if !version.starts_with("HTTP/1.") {
+            return Err(bad("unsupported HTTP version"));
+        }
+        let (path, query) = match target.split_once('?') {
+            Some((p, q)) => (p.to_string(), parse_query(q)),
+            None => (target.to_string(), BTreeMap::new()),
+        };
+        let mut headers = BTreeMap::new();
+        loop {
+            let mut h = String::new();
+            reader.read_line(&mut h)?;
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.split_once(':') {
+                headers.insert(
+                    k.trim().to_ascii_lowercase(),
+                    v.trim().to_string(),
+                );
+            }
+        }
+        let len: usize = headers
+            .get("content-length")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0);
+        if len > 64 * 1024 * 1024 {
+            return Err(bad("body too large"));
+        }
+        let mut body = vec![0u8; len];
+        if len > 0 {
+            reader.read_exact(&mut body)?;
+        }
+        Ok(Request {
+            method,
+            path,
+            query,
+            headers,
+            body,
+        })
+    }
+
+    pub fn json(&self) -> crate::Result<Json> {
+        let text = std::str::from_utf8(&self.body)
+            .map_err(|_| bad("body is not utf-8"))?;
+        Ok(Json::parse(text)?)
+    }
+
+    pub fn bearer_token(&self) -> Option<&str> {
+        self.headers
+            .get("authorization")?
+            .strip_prefix("Bearer ")
+    }
+}
+
+fn parse_query(q: &str) -> BTreeMap<String, String> {
+    q.split('&')
+        .filter_map(|kv| {
+            let (k, v) = kv.split_once('=')?;
+            Some((url_decode(k), url_decode(v)))
+        })
+        .collect()
+}
+
+fn url_decode(s: &str) -> String {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'%' if i + 2 < bytes.len() + 1 && i + 2 < bytes.len() => {
+                let hex = std::str::from_utf8(&bytes[i + 1..i + 3]).ok();
+                match hex.and_then(|h| u8::from_str_radix(h, 16).ok()) {
+                    Some(b) => {
+                        out.push(b);
+                        i += 3;
+                    }
+                    None => {
+                        out.push(b'%');
+                        i += 1;
+                    }
+                }
+            }
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+fn bad(msg: &str) -> crate::SubmarineError {
+    crate::SubmarineError::InvalidSpec(format!("http: {msg}"))
+}
+
+/// An HTTP response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: Json) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: body.dump().into_bytes(),
+        }
+    }
+
+    pub fn ok(body: Json) -> Response {
+        Self::json(200, body)
+    }
+
+    /// Submarine-style envelope: `{"status":"OK","result":...}`.
+    pub fn ok_result(result: Json) -> Response {
+        Self::json(
+            200,
+            Json::obj()
+                .set("status", Json::Str("OK".into()))
+                .set("result", result),
+        )
+    }
+
+    pub fn error(status: u16, msg: &str) -> Response {
+        Self::json(
+            status,
+            Json::obj()
+                .set("status", Json::Str("ERROR".into()))
+                .set("message", Json::Str(msg.to_string())),
+        )
+    }
+
+    pub fn from_err(e: &crate::SubmarineError) -> Response {
+        Self::error(e.http_status(), &e.to_string())
+    }
+
+    pub fn write_to<W: Write>(&self, mut w: W) -> std::io::Result<()> {
+        let reason = match self.status {
+            200 => "OK",
+            400 => "Bad Request",
+            401 => "Unauthorized",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            409 => "Conflict",
+            503 => "Service Unavailable",
+            _ => "Internal Server Error",
+        };
+        write!(
+            w,
+            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+            self.status,
+            reason,
+            self.content_type,
+            self.body.len()
+        )?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_get_with_query() {
+        let raw = b"GET /api/v1/experiment?limit=5&name=m+x HTTP/1.1\r\nHost: x\r\n\r\n";
+        let r = Request::read_from(&raw[..]).unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/api/v1/experiment");
+        assert_eq!(r.query["limit"], "5");
+        assert_eq!(r.query["name"], "m x");
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let body = r#"{"a":1}"#;
+        let raw = format!(
+            "POST /x HTTP/1.1\r\ncontent-length: {}\r\nAuthorization: Bearer tok123\r\n\r\n{}",
+            body.len(),
+            body
+        );
+        let r = Request::read_from(raw.as_bytes()).unwrap();
+        assert_eq!(r.json().unwrap().num_field("a"), Some(1.0));
+        assert_eq!(r.bearer_token(), Some("tok123"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Request::read_from(&b""[..]).is_err());
+        assert!(Request::read_from(&b"GET /x SPDY/9\r\n\r\n"[..]).is_err());
+    }
+
+    #[test]
+    fn response_serializes() {
+        let r = Response::ok_result(Json::Str("hi".into()));
+        let mut buf = Vec::new();
+        r.write_to(&mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains(r#""status":"OK""#));
+    }
+
+    #[test]
+    fn url_decoding() {
+        assert_eq!(url_decode("a%20b%2Fc"), "a b/c");
+        assert_eq!(url_decode("100%"), "100%"); // tolerate bad escapes
+    }
+}

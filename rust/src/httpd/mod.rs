@@ -1,0 +1,18 @@
+//! REST API service (paper §3.1: "these user interfaces manipulate each
+//! component in the model lifecycle via REST API exposed by Submarine
+//! server. The REST API service handles HTTP requests and is responsible
+//! for authentication.")
+//!
+//! A std-only HTTP/1.1 server (the offline registry lacks hyper/tokio):
+//! thread-pooled accept loop, request parser, router, bearer-token auth,
+//! JSON responses.  Routes mirror Apache Submarine's v1 API
+//! (`/api/v1/experiment`, `/api/v1/template`, `/api/v1/environment`,
+//! `/api/v1/model`, ...).
+
+pub mod http;
+pub mod router;
+pub mod server;
+
+pub use http::{Request, Response};
+pub use router::Router;
+pub use server::Server;

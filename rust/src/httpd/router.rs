@@ -1,0 +1,187 @@
+//! Method + path-pattern router with `:param` captures.
+
+use super::http::{Request, Response};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+type Handler = dyn Fn(&Request, &BTreeMap<String, String>) -> Response
+    + Send
+    + Sync;
+
+struct Route {
+    method: String,
+    segments: Vec<Seg>,
+    handler: Arc<Handler>,
+}
+
+enum Seg {
+    Lit(String),
+    Param(String),
+}
+
+/// Routes requests to handlers; supports `/api/v1/experiment/:id` style
+/// patterns.
+#[derive(Default)]
+pub struct Router {
+    routes: Vec<Route>,
+    /// Optional bearer token required on every request (§3.1 auth).
+    pub auth_token: Option<String>,
+}
+
+impl Router {
+    pub fn new() -> Router {
+        Router::default()
+    }
+
+    pub fn with_auth(mut self, token: &str) -> Router {
+        self.auth_token = Some(token.to_string());
+        self
+    }
+
+    pub fn add<F>(&mut self, method: &str, pattern: &str, handler: F)
+    where
+        F: Fn(&Request, &BTreeMap<String, String>) -> Response
+            + Send
+            + Sync
+            + 'static,
+    {
+        let segments = pattern
+            .trim_matches('/')
+            .split('/')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                if let Some(p) = s.strip_prefix(':') {
+                    Seg::Param(p.to_string())
+                } else {
+                    Seg::Lit(s.to_string())
+                }
+            })
+            .collect();
+        self.routes.push(Route {
+            method: method.to_uppercase(),
+            segments,
+            handler: Arc::new(handler),
+        });
+    }
+
+    pub fn dispatch(&self, req: &Request) -> Response {
+        if let Some(expect) = &self.auth_token {
+            if req.bearer_token() != Some(expect.as_str()) {
+                return Response::error(401, "missing or bad token");
+            }
+        }
+        let parts: Vec<&str> = req
+            .path
+            .trim_matches('/')
+            .split('/')
+            .filter(|s| !s.is_empty())
+            .collect();
+        let mut saw_path = false;
+        for route in &self.routes {
+            if route.segments.len() != parts.len() {
+                continue;
+            }
+            let mut params = BTreeMap::new();
+            let matches =
+                route.segments.iter().zip(&parts).all(|(seg, part)| {
+                    match seg {
+                        Seg::Lit(l) => l == part,
+                        Seg::Param(name) => {
+                            params.insert(
+                                name.clone(),
+                                part.to_string(),
+                            );
+                            true
+                        }
+                    }
+                });
+            if !matches {
+                continue;
+            }
+            saw_path = true;
+            if route.method == req.method {
+                return (route.handler)(req, &params);
+            }
+        }
+        if saw_path {
+            Response::error(405, "method not allowed")
+        } else {
+            Response::error(404, &format!("no route for {}", req.path))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn req(method: &str, path: &str) -> Request {
+        Request {
+            method: method.into(),
+            path: path.into(),
+            query: BTreeMap::new(),
+            headers: BTreeMap::new(),
+            body: Vec::new(),
+        }
+    }
+
+    fn router() -> Router {
+        let mut r = Router::new();
+        r.add("GET", "/api/v1/experiment", |_, _| {
+            Response::ok(Json::Str("list".into()))
+        });
+        r.add("GET", "/api/v1/experiment/:id", |_, p| {
+            Response::ok(Json::Str(format!("get {}", p["id"])))
+        });
+        r.add("POST", "/api/v1/experiment", |_, _| {
+            Response::ok(Json::Str("created".into()))
+        });
+        r
+    }
+
+    #[test]
+    fn literal_and_param_routes() {
+        let r = router();
+        assert_eq!(
+            r.dispatch(&req("GET", "/api/v1/experiment")).body,
+            Json::Str("list".into()).dump().into_bytes()
+        );
+        let resp = r.dispatch(&req("GET", "/api/v1/experiment/e-42"));
+        assert!(String::from_utf8(resp.body).unwrap().contains("get e-42"));
+    }
+
+    #[test]
+    fn not_found_and_method_not_allowed() {
+        let r = router();
+        assert_eq!(r.dispatch(&req("GET", "/nope")).status, 404);
+        assert_eq!(
+            r.dispatch(&req("DELETE", "/api/v1/experiment")).status,
+            405
+        );
+    }
+
+    #[test]
+    fn auth_enforced_when_configured() {
+        let r = router().with_auth("secret");
+        assert_eq!(
+            r.dispatch(&req("GET", "/api/v1/experiment")).status,
+            401
+        );
+        let mut authed = req("GET", "/api/v1/experiment");
+        authed.headers.insert(
+            "authorization".into(),
+            "Bearer secret".into(),
+        );
+        assert_eq!(r.dispatch(&authed).status, 200);
+    }
+
+    #[test]
+    fn trailing_slash_tolerated() {
+        let r = router();
+        assert_eq!(
+            r.dispatch(&req("GET", "/api/v1/experiment/")).status,
+            200
+        );
+    }
+}

@@ -1,0 +1,569 @@
+//! The Submarine server (paper Fig. 1 control plane): wires every core
+//! service behind the REST API and runs the accept loop on a thread pool.
+
+use super::http::{Request, Response};
+use super::router::Router;
+use crate::environment::{Environment, EnvironmentManager};
+use crate::experiment::manager::ExperimentManager;
+use crate::experiment::monitor::ExperimentMonitor;
+use crate::experiment::spec::ExperimentSpec;
+use crate::model::ModelRegistry;
+use crate::orchestrator::Submitter;
+use crate::storage::{MetaStore, MetricStore};
+use crate::template::{Template, TemplateManager};
+use crate::util::json::Json;
+use crate::util::threadpool::ThreadPool;
+use std::collections::BTreeMap;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// All core services (paper §3.2: "Submarine server consists of several
+/// core services"). Examples/tests may use this directly without HTTP.
+pub struct Services {
+    pub store: Arc<MetaStore>,
+    pub monitor: Arc<ExperimentMonitor>,
+    pub metrics: Arc<MetricStore>,
+    pub experiments: Arc<ExperimentManager>,
+    pub templates: Arc<TemplateManager>,
+    pub environments: Arc<EnvironmentManager>,
+    pub models: Arc<ModelRegistry>,
+}
+
+impl Services {
+    /// Assemble the full service stack around a submitter.
+    pub fn new(
+        store: Arc<MetaStore>,
+        submitter: Arc<dyn Submitter>,
+    ) -> Services {
+        let monitor = Arc::new(ExperimentMonitor::new());
+        let metrics = Arc::new(MetricStore::new());
+        Self::with_parts(store, monitor, metrics, submitter)
+    }
+
+    pub fn with_parts(
+        store: Arc<MetaStore>,
+        monitor: Arc<ExperimentMonitor>,
+        metrics: Arc<MetricStore>,
+        submitter: Arc<dyn Submitter>,
+    ) -> Services {
+        let experiments = Arc::new(ExperimentManager::new(
+            Arc::clone(&store),
+            Arc::clone(&monitor),
+            submitter,
+        ));
+        Services {
+            templates: Arc::new(TemplateManager::new(Arc::clone(&store))),
+            environments: Arc::new(EnvironmentManager::new(Arc::clone(
+                &store,
+            ))),
+            models: Arc::new(ModelRegistry::new(Arc::clone(&store))),
+            experiments,
+            monitor,
+            metrics,
+            store,
+        }
+    }
+}
+
+/// The HTTP server.
+pub struct Server {
+    router: Arc<Router>,
+    listener: TcpListener,
+    pool: ThreadPool,
+    stop: Arc<AtomicBool>,
+    local_addr: std::net::SocketAddr,
+}
+
+impl Server {
+    /// Bind on `127.0.0.1:port` (0 = ephemeral) with routes over
+    /// `services`.
+    pub fn bind(
+        services: Arc<Services>,
+        port: u16,
+        auth_token: Option<&str>,
+    ) -> crate::Result<Server> {
+        let mut router = build_router(services);
+        if let Some(t) = auth_token {
+            router = router.with_auth(t);
+        }
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let local_addr = listener.local_addr()?;
+        Ok(Server {
+            router: Arc::new(router),
+            listener,
+            pool: ThreadPool::new(8),
+            stop: Arc::new(AtomicBool::new(false)),
+            local_addr,
+        })
+    }
+
+    pub fn port(&self) -> u16 {
+        self.local_addr.port()
+    }
+
+    /// Handle for stopping the accept loop from another thread.
+    pub fn stopper(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+
+    /// Run the accept loop until stopped (blocking).
+    pub fn serve(&self) -> crate::Result<()> {
+        crate::info!("httpd", "listening on {}", self.local_addr);
+        self.listener.set_nonblocking(false)?;
+        for conn in self.listener.incoming() {
+            if self.stop.load(Ordering::Relaxed) {
+                break;
+            }
+            match conn {
+                Ok(stream) => {
+                    let router = Arc::clone(&self.router);
+                    self.pool.execute(move || handle(&router, stream));
+                }
+                Err(e) => {
+                    crate::warnlog!("httpd", "accept error: {e}");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Serve on a background thread; returns a join handle. Stop by
+    /// setting `stopper()` and making one dummy connection.
+    pub fn serve_background(self: Arc<Self>) -> std::thread::JoinHandle<()> {
+        std::thread::Builder::new()
+            .name("submarine-httpd".into())
+            .spawn(move || {
+                let _ = self.serve();
+            })
+            .expect("spawn httpd thread")
+    }
+}
+
+fn handle(router: &Router, stream: TcpStream) {
+    let peer = stream.peer_addr().ok();
+    let _ = stream.set_read_timeout(Some(std::time::Duration::from_secs(10)));
+    let response = match Request::read_from(&stream) {
+        Ok(req) => {
+            let resp = router.dispatch(&req);
+            crate::debuglog!(
+                "httpd",
+                "{} {} -> {} ({:?})",
+                req.method,
+                req.path,
+                resp.status,
+                peer
+            );
+            resp
+        }
+        Err(e) => Response::error(400, &e.to_string()),
+    };
+    let _ = response.write_to(&stream);
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+}
+
+/// Build the v1 REST routes (mirrors Apache Submarine's API surface).
+pub fn build_router(s: Arc<Services>) -> Router {
+    let mut r = Router::new();
+
+    // ---- health / version
+    r.add("GET", "/api/v1/cluster", |_, _| {
+        Response::ok_result(
+            Json::obj()
+                .set("version", Json::Str(crate::version().into()))
+                .set("status", Json::Str("RUNNING".into())),
+        )
+    });
+
+    // ---- experiments
+    {
+        let s = Arc::clone(&s);
+        r.add("POST", "/api/v1/experiment", move |req, _| {
+            match req
+                .json()
+                .and_then(|j| ExperimentSpec::from_json(&j))
+                .and_then(|spec| s.experiments.submit(&spec))
+            {
+                Ok(id) => Response::ok_result(
+                    Json::obj().set("experimentId", Json::Str(id)),
+                ),
+                Err(e) => Response::from_err(&e),
+            }
+        });
+    }
+    {
+        let s = Arc::clone(&s);
+        r.add("GET", "/api/v1/experiment", move |_, _| {
+            let list: Vec<Json> = s
+                .experiments
+                .list()
+                .into_iter()
+                .map(|(id, st)| {
+                    Json::obj()
+                        .set("experimentId", Json::Str(id))
+                        .set("status", Json::Str(st.as_str().into()))
+                })
+                .collect();
+            Response::ok_result(Json::Arr(list))
+        });
+    }
+    {
+        let s = Arc::clone(&s);
+        r.add("GET", "/api/v1/experiment/:id", move |_, p| {
+            match s.experiments.get(&p["id"]) {
+                Ok(doc) => Response::ok_result(doc),
+                Err(e) => Response::from_err(&e),
+            }
+        });
+    }
+    {
+        let s = Arc::clone(&s);
+        r.add("DELETE", "/api/v1/experiment/:id", move |_, p| {
+            match s
+                .experiments
+                .kill(&p["id"])
+                .and_then(|_| s.experiments.delete(&p["id"]))
+            {
+                Ok(()) => Response::ok_result(Json::Bool(true)),
+                Err(e) => Response::from_err(&e),
+            }
+        });
+    }
+    {
+        let s = Arc::clone(&s);
+        r.add("POST", "/api/v1/experiment/:id/kill", move |_, p| {
+            match s.experiments.kill(&p["id"]) {
+                Ok(()) => Response::ok_result(Json::Bool(true)),
+                Err(e) => Response::from_err(&e),
+            }
+        });
+    }
+    {
+        let s = Arc::clone(&s);
+        r.add("GET", "/api/v1/experiment/:id/metrics", move |req, p| {
+            let metric = req
+                .query
+                .get("metric")
+                .cloned()
+                .unwrap_or_else(|| "loss".to_string());
+            let series = s.metrics.series(&p["id"], &metric);
+            let points: Vec<Json> = series
+                .iter()
+                .map(|pt| {
+                    Json::obj()
+                        .set("step", Json::Num(pt.step as f64))
+                        .set("value", Json::Num(pt.value))
+                })
+                .collect();
+            Response::ok_result(Json::Arr(points))
+        });
+    }
+
+    // ---- templates (paper §3.2.3)
+    {
+        let s = Arc::clone(&s);
+        r.add("POST", "/api/v1/template", move |req, _| {
+            match req
+                .json()
+                .and_then(|j| Template::from_json(&j))
+                .and_then(|t| s.templates.register(&t))
+            {
+                Ok(()) => Response::ok_result(Json::Bool(true)),
+                Err(e) => Response::from_err(&e),
+            }
+        });
+    }
+    {
+        let s = Arc::clone(&s);
+        r.add("GET", "/api/v1/template", move |_, _| {
+            Response::ok_result(Json::Arr(
+                s.templates
+                    .list()
+                    .into_iter()
+                    .map(Json::Str)
+                    .collect(),
+            ))
+        });
+    }
+    {
+        let s = Arc::clone(&s);
+        r.add("GET", "/api/v1/template/:name", move |_, p| {
+            match s.templates.get(&p["name"]) {
+                Ok(t) => Response::ok_result(t.to_json()),
+                Err(e) => Response::from_err(&e),
+            }
+        });
+    }
+    {
+        // "users can run experiments without writing one line of code":
+        // POST { "params": {name: value} } -> submitted experiment.
+        let s = Arc::clone(&s);
+        r.add("POST", "/api/v1/template/:name/submit", move |req, p| {
+            let values: BTreeMap<String, String> = match req.json() {
+                Ok(j) => j
+                    .get("params")
+                    .and_then(Json::as_obj)
+                    .map(|o| {
+                        o.iter()
+                            .map(|(k, v)| {
+                                (
+                                    k.clone(),
+                                    match v {
+                                        Json::Str(s) => s.clone(),
+                                        other => other.dump(),
+                                    },
+                                )
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default(),
+                Err(e) => return Response::from_err(&e),
+            };
+            match s
+                .templates
+                .instantiate(&p["name"], &values)
+                .and_then(|spec| s.experiments.submit(&spec))
+            {
+                Ok(id) => Response::ok_result(
+                    Json::obj().set("experimentId", Json::Str(id)),
+                ),
+                Err(e) => Response::from_err(&e),
+            }
+        });
+    }
+
+    // ---- environments (paper §3.2.1)
+    {
+        let s = Arc::clone(&s);
+        r.add("POST", "/api/v1/environment", move |req, _| {
+            match req
+                .json()
+                .and_then(|j| Environment::from_json(&j))
+                .and_then(|e| s.environments.register(&e))
+            {
+                Ok(()) => Response::ok_result(Json::Bool(true)),
+                Err(e) => Response::from_err(&e),
+            }
+        });
+    }
+    {
+        let s = Arc::clone(&s);
+        r.add("GET", "/api/v1/environment", move |_, _| {
+            Response::ok_result(Json::Arr(
+                s.environments
+                    .list()
+                    .into_iter()
+                    .map(Json::Str)
+                    .collect(),
+            ))
+        });
+    }
+    {
+        let s = Arc::clone(&s);
+        r.add("GET", "/api/v1/environment/:name", move |_, p| {
+            match s.environments.get(&p["name"]) {
+                Ok(env) => {
+                    let lock = s
+                        .environments
+                        .lock_of(&p["name"])
+                        .unwrap_or_default();
+                    Response::ok_result(env.to_json().set(
+                        "lock",
+                        Json::Arr(
+                            lock.into_iter().map(Json::Str).collect(),
+                        ),
+                    ))
+                }
+                Err(e) => Response::from_err(&e),
+            }
+        });
+    }
+
+    // ---- models (paper §4.2)
+    {
+        let s = Arc::clone(&s);
+        r.add("GET", "/api/v1/model/:name", move |_, p| {
+            let versions = s.models.versions(&p["name"]);
+            if versions.is_empty() {
+                return Response::error(
+                    404,
+                    &format!("model {} not found", p["name"]),
+                );
+            }
+            Response::ok_result(Json::Arr(
+                versions
+                    .iter()
+                    .map(|m| {
+                        Json::obj()
+                            .set(
+                                "version",
+                                Json::Num(m.version as f64),
+                            )
+                            .set(
+                                "stage",
+                                Json::Str(m.stage.as_str().into()),
+                            )
+                            .set(
+                                "experimentId",
+                                Json::Str(m.experiment_id.clone()),
+                            )
+                    })
+                    .collect(),
+            ))
+        });
+    }
+
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct NullSubmitter;
+    impl Submitter for NullSubmitter {
+        fn name(&self) -> &'static str {
+            "null"
+        }
+        fn submit(&self, _: &str, _: &ExperimentSpec) -> crate::Result<()> {
+            Ok(())
+        }
+        fn kill(&self, _: &str) -> crate::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn services() -> Arc<Services> {
+        Arc::new(Services::new(
+            Arc::new(MetaStore::in_memory()),
+            Arc::new(NullSubmitter),
+        ))
+    }
+
+    fn dispatch(
+        router: &Router,
+        method: &str,
+        path: &str,
+        body: &str,
+    ) -> (u16, Json) {
+        let req = Request {
+            method: method.into(),
+            path: path.into(),
+            query: BTreeMap::new(),
+            headers: BTreeMap::new(),
+            body: body.as_bytes().to_vec(),
+        };
+        let resp = router.dispatch(&req);
+        let j = Json::parse(
+            std::str::from_utf8(&resp.body).unwrap_or("null"),
+        )
+        .unwrap_or(Json::Null);
+        (resp.status, j)
+    }
+
+    const SPEC: &str = r#"{"meta":{"name":"mnist"},
+        "spec":{"Worker":{"replicas":1,"resources":"cpu=1"}}}"#;
+
+    #[test]
+    fn experiment_crud_over_router() {
+        let r = build_router(services());
+        let (st, j) = dispatch(&r, "POST", "/api/v1/experiment", SPEC);
+        assert_eq!(st, 200);
+        let id = j
+            .at(&["result", "experimentId"])
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .to_string();
+        let (st, j) =
+            dispatch(&r, "GET", &format!("/api/v1/experiment/{id}"), "");
+        assert_eq!(st, 200);
+        assert_eq!(
+            j.at(&["result", "status"]).unwrap().as_str(),
+            Some("Accepted")
+        );
+        let (st, _) = dispatch(&r, "GET", "/api/v1/experiment", "");
+        assert_eq!(st, 200);
+        let (st, _) = dispatch(
+            &r,
+            "POST",
+            &format!("/api/v1/experiment/{id}/kill"),
+            "",
+        );
+        assert_eq!(st, 200);
+        let (st, j) = dispatch(
+            &r,
+            "DELETE",
+            &format!("/api/v1/experiment/{id}"),
+            "",
+        );
+        assert_eq!(st, 200, "{j:?}");
+    }
+
+    #[test]
+    fn bad_spec_is_400() {
+        let r = build_router(services());
+        let (st, _) = dispatch(&r, "POST", "/api/v1/experiment", "{}");
+        assert_eq!(st, 400);
+        let (st, _) =
+            dispatch(&r, "POST", "/api/v1/experiment", "not json");
+        assert_eq!(st, 400);
+    }
+
+    #[test]
+    fn template_register_and_submit() {
+        let r = build_router(services());
+        let tpl = crate::template::tf_mnist_template().to_json().dump();
+        let (st, _) = dispatch(&r, "POST", "/api/v1/template", &tpl);
+        assert_eq!(st, 200);
+        let (st, j) = dispatch(
+            &r,
+            "POST",
+            "/api/v1/template/tf-mnist-template/submit",
+            r#"{"params":{"learning_rate":"0.01","batch_size":"64"}}"#,
+        );
+        assert_eq!(st, 200, "{j:?}");
+        assert!(j.at(&["result", "experimentId"]).is_some());
+    }
+
+    #[test]
+    fn environment_register_and_lock() {
+        let r = build_router(services());
+        let (st, _) = dispatch(
+            &r,
+            "POST",
+            "/api/v1/environment",
+            r#"{"name":"tf","image":"submarine:tf",
+                "dependencies":["tensorflow>=2.0"]}"#,
+        );
+        assert_eq!(st, 200);
+        let (st, j) =
+            dispatch(&r, "GET", "/api/v1/environment/tf", "");
+        assert_eq!(st, 200);
+        let lock = j.at(&["result", "lock"]).unwrap().as_arr().unwrap();
+        assert!(!lock.is_empty());
+    }
+
+    #[test]
+    fn end_to_end_over_tcp() {
+        let srv =
+            Arc::new(Server::bind(services(), 0, None).unwrap());
+        let port = srv.port();
+        let stop = srv.stopper();
+        let handle = Arc::clone(&srv).serve_background();
+        // real HTTP round trip
+        let mut stream =
+            TcpStream::connect(("127.0.0.1", port)).unwrap();
+        use std::io::{Read, Write};
+        write!(stream, "GET /api/v1/cluster HTTP/1.1\r\nhost: x\r\n\r\n")
+            .unwrap();
+        let mut buf = String::new();
+        stream.read_to_string(&mut buf).unwrap();
+        assert!(buf.contains("200 OK"), "{buf}");
+        assert!(buf.contains("RUNNING"));
+        // shutdown
+        stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(("127.0.0.1", port));
+        handle.join().unwrap();
+    }
+}

@@ -1,0 +1,49 @@
+//! # Submarine-RS
+//!
+//! A unified machine-learning platform — a Rust + JAX + Pallas
+//! reproduction of *"Apache Submarine: A Unified Machine Learning Platform
+//! Made Simple"* (Chen et al., 2021).
+//!
+//! Architecture (paper Fig. 1, realized as three layers):
+//!
+//! - **L3 (this crate)**: the Submarine server — REST API ([`httpd`]),
+//!   experiment manager/submitter/monitor ([`experiment`],
+//!   [`orchestrator`]), predefined templates ([`template`]), environments
+//!   ([`environment`]), model registry ([`model`]), metadata store
+//!   ([`storage`]), and the cluster-simulator substrate ([`cluster`],
+//!   [`scheduler`]) with YARN-like and Kubernetes-like orchestrators.
+//! - **L2**: JAX models (DeepFM, MNIST MLP, tiny transformer) AOT-lowered
+//!   to HLO text at build time (`python/compile/`).
+//! - **L1**: Pallas kernels (FM interaction, blocked dense) inside those
+//!   models (`python/compile/kernels/`).
+//!
+//! The [`runtime`] module loads the AOT artifacts via the PJRT C API and
+//! executes them on the request path with no Python anywhere.
+
+pub mod error;
+pub mod util;
+
+pub mod cluster;
+pub mod scheduler;
+pub mod storage;
+
+pub mod automl;
+pub mod data;
+pub mod environment;
+pub mod experiment;
+pub mod model;
+pub mod orchestrator;
+pub mod platform;
+pub mod runtime;
+pub mod template;
+
+pub mod cli;
+pub mod httpd;
+pub mod sdk;
+
+pub use error::{Result, SubmarineError};
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

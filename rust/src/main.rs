@@ -1,0 +1,9 @@
+//! `submarine` binary — the leader entrypoint (paper Fig. 1).
+//!
+//! Run `submarine help` for usage; `submarine server` starts the full
+//! platform (REST API + local PJRT runtime).
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(submarine::cli::run(&argv));
+}

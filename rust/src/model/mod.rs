@@ -1,0 +1,381 @@
+//! Model manager (paper §4.2 — the in-progress feature, implemented).
+//!
+//! "Models will be versioned to provide reproducibility. Moreover, data
+//! scientists can reuse models registered in the model manager": a
+//! versioned registry with artifact storage, metric annotations,
+//! experiment lineage, and MLflow-style stage transitions
+//! (None → Staging → Production → Archived).
+
+use crate::storage::MetaStore;
+use crate::util::json::Json;
+use std::sync::Arc;
+
+const NS: &str = "model";
+
+/// Deployment stage of a model version.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    None,
+    Staging,
+    Production,
+    Archived,
+}
+
+impl Stage {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Stage::None => "None",
+            Stage::Staging => "Staging",
+            Stage::Production => "Production",
+            Stage::Archived => "Archived",
+        }
+    }
+    pub fn parse(s: &str) -> Option<Stage> {
+        Some(match s {
+            "None" => Stage::None,
+            "Staging" => Stage::Staging,
+            "Production" => Stage::Production,
+            "Archived" => Stage::Archived,
+            _ => return None,
+        })
+    }
+    /// Legal transitions: anything can archive; None->Staging->Production.
+    pub fn can_transition(self, to: Stage) -> bool {
+        matches!(
+            (self, to),
+            (Stage::None, Stage::Staging)
+                | (Stage::Staging, Stage::Production)
+                | (Stage::Staging, Stage::None)
+                | (Stage::Production, Stage::Archived)
+                | (Stage::None, Stage::Archived)
+                | (Stage::Staging, Stage::Archived)
+        )
+    }
+}
+
+/// A registered model version.
+#[derive(Debug, Clone)]
+pub struct ModelVersion {
+    pub name: String,
+    pub version: u32,
+    pub experiment_id: String,
+    /// Flat f32 parameter blob (the trained weights).
+    pub params_blob_key: String,
+    pub metrics: Vec<(String, f64)>,
+    pub stage: Stage,
+}
+
+/// Versioned model registry over the metadata store.
+pub struct ModelRegistry {
+    store: Arc<MetaStore>,
+}
+
+impl ModelRegistry {
+    pub fn new(store: Arc<MetaStore>) -> ModelRegistry {
+        ModelRegistry { store }
+    }
+
+    fn key(name: &str, version: u32) -> String {
+        format!("{name}@{version:06}")
+    }
+
+    /// Register the next version of `name`; stores the parameter blob in
+    /// a sibling namespace and returns the new version number.
+    pub fn register(
+        &self,
+        name: &str,
+        experiment_id: &str,
+        params: &[Vec<f32>],
+        metrics: &[(String, f64)],
+    ) -> crate::Result<u32> {
+        let version = self.latest_version(name).map_or(1, |v| v + 1);
+        let blob_key = format!("{name}@{version:06}/params");
+        // Store the blob as base-16 chunks inside the KV store (keeps the
+        // whole registry in one WAL); sizes here are small (<10 MB).
+        let total: usize = params.iter().map(|p| p.len()).sum();
+        let mut blob = String::with_capacity(total * 8);
+        for p in params {
+            for v in p {
+                blob.push_str(&format!("{:08x}", v.to_bits()));
+            }
+        }
+        let shapes: Vec<Json> = params
+            .iter()
+            .map(|p| Json::Num(p.len() as f64))
+            .collect();
+        self.store.put(
+            "model-blob",
+            &blob_key,
+            Json::obj()
+                .set("hex", Json::Str(blob))
+                .set("lens", Json::Arr(shapes)),
+        )?;
+        let doc = Json::obj()
+            .set("name", Json::Str(name.to_string()))
+            .set("version", Json::Num(version as f64))
+            .set("experiment_id", Json::Str(experiment_id.to_string()))
+            .set("params_blob_key", Json::Str(blob_key.clone()))
+            .set(
+                "metrics",
+                Json::Obj(
+                    metrics
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                        .collect(),
+                ),
+            )
+            .set("stage", Json::Str(Stage::None.as_str().into()))
+            .set(
+                "registered_at",
+                Json::Num(crate::util::clock::unix_millis() as f64),
+            );
+        self.store.put(NS, &Self::key(name, version), doc)?;
+        Ok(version)
+    }
+
+    pub fn latest_version(&self, name: &str) -> Option<u32> {
+        self.store
+            .list(NS)
+            .into_iter()
+            .filter(|(k, _)| k.starts_with(&format!("{name}@")))
+            .filter_map(|(_, d)| d.num_field("version").map(|v| v as u32))
+            .max()
+    }
+
+    pub fn get(&self, name: &str, version: u32)
+        -> crate::Result<ModelVersion>
+    {
+        let doc = self
+            .store
+            .get(NS, &Self::key(name, version))
+            .ok_or_else(|| {
+                crate::SubmarineError::NotFound(format!(
+                    "model {name} v{version}"
+                ))
+            })?;
+        Ok(ModelVersion {
+            name: name.to_string(),
+            version,
+            experiment_id: doc
+                .str_field("experiment_id")
+                .unwrap_or("")
+                .to_string(),
+            params_blob_key: doc
+                .str_field("params_blob_key")
+                .unwrap_or("")
+                .to_string(),
+            metrics: doc
+                .get("metrics")
+                .and_then(Json::as_obj)
+                .map(|o| {
+                    o.iter()
+                        .filter_map(|(k, v)| {
+                            v.as_f64().map(|f| (k.clone(), f))
+                        })
+                        .collect()
+                })
+                .unwrap_or_default(),
+            stage: doc
+                .str_field("stage")
+                .and_then(Stage::parse)
+                .unwrap_or(Stage::None),
+        })
+    }
+
+    /// Load a version's parameter tensors back.
+    pub fn load_params(
+        &self,
+        name: &str,
+        version: u32,
+    ) -> crate::Result<Vec<Vec<f32>>> {
+        let mv = self.get(name, version)?;
+        let doc = self
+            .store
+            .get("model-blob", &mv.params_blob_key)
+            .ok_or_else(|| {
+                crate::SubmarineError::Storage(format!(
+                    "missing blob {}",
+                    mv.params_blob_key
+                ))
+            })?;
+        let hex = doc.str_field("hex").unwrap_or("");
+        let lens: Vec<usize> = doc
+            .get("lens")
+            .and_then(Json::as_arr)
+            .map(|a| {
+                a.iter()
+                    .filter_map(|v| v.as_u64().map(|x| x as usize))
+                    .collect()
+            })
+            .unwrap_or_default();
+        let mut floats = Vec::with_capacity(hex.len() / 8);
+        let bytes = hex.as_bytes();
+        for c in bytes.chunks_exact(8) {
+            let s = std::str::from_utf8(c).map_err(|_| {
+                crate::SubmarineError::Storage("bad blob".into())
+            })?;
+            let bits = u32::from_str_radix(s, 16).map_err(|_| {
+                crate::SubmarineError::Storage("bad blob hex".into())
+            })?;
+            floats.push(f32::from_bits(bits));
+        }
+        let mut out = Vec::with_capacity(lens.len());
+        let mut off = 0;
+        for n in lens {
+            out.push(floats[off..off + n].to_vec());
+            off += n;
+        }
+        Ok(out)
+    }
+
+    /// Move a version between stages (checked transition).
+    pub fn transition(
+        &self,
+        name: &str,
+        version: u32,
+        to: Stage,
+    ) -> crate::Result<()> {
+        let key = Self::key(name, version);
+        let doc = self.store.get(NS, &key).ok_or_else(|| {
+            crate::SubmarineError::NotFound(format!(
+                "model {name} v{version}"
+            ))
+        })?;
+        let from = doc
+            .str_field("stage")
+            .and_then(Stage::parse)
+            .unwrap_or(Stage::None);
+        if !from.can_transition(to) {
+            return Err(crate::SubmarineError::InvalidSpec(format!(
+                "illegal stage transition {} -> {}",
+                from.as_str(),
+                to.as_str()
+            )));
+        }
+        // Only one Production version per model: demote the current one.
+        if to == Stage::Production {
+            for (k, d) in self.store.list(NS) {
+                if k.starts_with(&format!("{name}@"))
+                    && d.str_field("stage") == Some("Production")
+                {
+                    self.store.put(
+                        NS,
+                        &k,
+                        d.set(
+                            "stage",
+                            Json::Str(Stage::Archived.as_str().into()),
+                        ),
+                    )?;
+                }
+            }
+        }
+        self.store.put(
+            NS,
+            &key,
+            doc.set("stage", Json::Str(to.as_str().into())),
+        )
+    }
+
+    /// All versions of `name`, ascending.
+    pub fn versions(&self, name: &str) -> Vec<ModelVersion> {
+        let mut out: Vec<ModelVersion> = self
+            .store
+            .list(NS)
+            .into_iter()
+            .filter(|(k, _)| k.starts_with(&format!("{name}@")))
+            .filter_map(|(_, d)| {
+                let v = d.num_field("version")? as u32;
+                self.get(name, v).ok()
+            })
+            .collect();
+        out.sort_by_key(|m| m.version);
+        out
+    }
+
+    pub fn production_version(&self, name: &str) -> Option<ModelVersion> {
+        self.versions(name)
+            .into_iter()
+            .find(|m| m.stage == Stage::Production)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg() -> ModelRegistry {
+        ModelRegistry::new(Arc::new(MetaStore::in_memory()))
+    }
+
+    fn params() -> Vec<Vec<f32>> {
+        vec![vec![1.0, -2.5, 3.25], vec![0.0, f32::MIN_POSITIVE]]
+    }
+
+    #[test]
+    fn register_assigns_incrementing_versions() {
+        let r = reg();
+        let v1 = r.register("ctr", "exp-1", &params(), &[]).unwrap();
+        let v2 = r.register("ctr", "exp-2", &params(), &[]).unwrap();
+        assert_eq!((v1, v2), (1, 2));
+        assert_eq!(r.latest_version("ctr"), Some(2));
+        assert_eq!(r.versions("ctr").len(), 2);
+    }
+
+    #[test]
+    fn params_roundtrip_bit_exact() {
+        let r = reg();
+        let p = params();
+        let v = r.register("m", "e", &p, &[]).unwrap();
+        let loaded = r.load_params("m", v).unwrap();
+        assert_eq!(loaded, p);
+    }
+
+    #[test]
+    fn metrics_and_lineage_stored() {
+        let r = reg();
+        let v = r
+            .register("m", "exp-42", &params(),
+                      &[("auc".into(), 0.71)])
+            .unwrap();
+        let mv = r.get("m", v).unwrap();
+        assert_eq!(mv.experiment_id, "exp-42");
+        assert_eq!(mv.metrics, vec![("auc".to_string(), 0.71)]);
+    }
+
+    #[test]
+    fn stage_transitions_enforced() {
+        let r = reg();
+        let v = r.register("m", "e", &params(), &[]).unwrap();
+        // None -> Production is illegal
+        assert!(r.transition("m", v, Stage::Production).is_err());
+        r.transition("m", v, Stage::Staging).unwrap();
+        r.transition("m", v, Stage::Production).unwrap();
+        assert_eq!(r.get("m", v).unwrap().stage, Stage::Production);
+    }
+
+    #[test]
+    fn single_production_version() {
+        let r = reg();
+        let v1 = r.register("m", "e", &params(), &[]).unwrap();
+        let v2 = r.register("m", "e", &params(), &[]).unwrap();
+        for v in [v1, v2] {
+            r.transition("m", v, Stage::Staging).unwrap();
+        }
+        r.transition("m", v1, Stage::Production).unwrap();
+        r.transition("m", v2, Stage::Production).unwrap();
+        assert_eq!(r.get("m", v1).unwrap().stage, Stage::Archived);
+        assert_eq!(
+            r.production_version("m").unwrap().version,
+            v2
+        );
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let r = reg();
+        assert!(r.get("ghost", 1).is_err());
+        assert!(r.load_params("ghost", 1).is_err());
+        assert!(r.transition("ghost", 1, Stage::Staging).is_err());
+        assert_eq!(r.latest_version("ghost"), None);
+    }
+}

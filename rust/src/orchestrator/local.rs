@@ -1,0 +1,183 @@
+//! Local submitter: runs the experiment's bound workload *for real* on
+//! the PJRT runtime (paper Fig. 4: "experiments can be launched in YARN
+//! cluster, Kubernetes cluster or locally").
+//!
+//! Because the `xla` wrappers are not `Send`, each submitted experiment
+//! runs on a dedicated OS thread that owns its own [`Engine`].  Metrics
+//! stream into the shared [`MetricStore`]; lifecycle events flow into the
+//! [`ExperimentMonitor`].
+
+use super::tony::{self, TonyConfig};
+use super::Submitter;
+use crate::experiment::monitor::{Event, ExperimentMonitor};
+use crate::experiment::spec::ExperimentSpec;
+use crate::runtime::Engine;
+use crate::storage::MetricStore;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+pub struct LocalSubmitter {
+    monitor: Arc<ExperimentMonitor>,
+    metrics: Arc<MetricStore>,
+    artifacts_dir: std::path::PathBuf,
+    kill_flags: Mutex<BTreeMap<String, Arc<AtomicBool>>>,
+    threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl LocalSubmitter {
+    pub fn new(
+        monitor: Arc<ExperimentMonitor>,
+        metrics: Arc<MetricStore>,
+        artifacts_dir: &std::path::Path,
+    ) -> LocalSubmitter {
+        LocalSubmitter {
+            monitor,
+            metrics,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            kill_flags: Mutex::new(BTreeMap::new()),
+            threads: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Block until every submitted experiment thread has finished
+    /// (examples call this before reading final metrics).
+    pub fn join_all(&self) {
+        let mut g = self.threads.lock().unwrap();
+        for t in g.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Submitter for LocalSubmitter {
+    fn name(&self) -> &'static str {
+        "local"
+    }
+
+    fn submit(&self, id: &str, spec: &ExperimentSpec) -> crate::Result<()> {
+        let workload = spec.workload.clone().unwrap_or_default();
+        let workers: usize = spec
+            .tasks
+            .iter()
+            .filter(|(name, _)| name.to_lowercase().contains("worker"))
+            .map(|(_, t)| t.replicas as usize)
+            .sum::<usize>()
+            .max(1);
+        let kill = Arc::new(AtomicBool::new(false));
+        self.kill_flags
+            .lock()
+            .unwrap()
+            .insert(id.to_string(), Arc::clone(&kill));
+
+        let monitor = Arc::clone(&self.monitor);
+        let metrics = Arc::clone(&self.metrics);
+        let artifacts = self.artifacts_dir.clone();
+        let id = id.to_string();
+        let total = spec.total_containers();
+        let handle = std::thread::Builder::new()
+            .name(format!("local-{id}"))
+            .spawn(move || {
+                // Containers "start" when the runtime begins.
+                for c in 0..total {
+                    monitor.record(
+                        &id,
+                        Event::ContainerStarted {
+                            container: format!("{id}-task-{c}"),
+                        },
+                    );
+                }
+                let run = || -> crate::Result<()> {
+                    let manifest =
+                        crate::runtime::Manifest::load(&artifacts)?;
+                    let engine = Engine::new(manifest)?;
+                    let cfg = TonyConfig {
+                        model: workload.model.clone(),
+                        workers,
+                        steps: workload.steps,
+                        lr: workload.lr,
+                        seed: workload.seed,
+                        ..Default::default()
+                    };
+                    // Run in chunks so kills take effect mid-training.
+                    let chunk = 10u32;
+                    let mut done = 0u32;
+                    let mut step_base = 0u64;
+                    let mut cfg_chunk = cfg.clone();
+                    // carry params across chunks via a local override of
+                    // the manifest initial params
+                    let mut params: Option<Vec<Vec<f32>>> = None;
+                    while done < cfg.steps {
+                        if kill.load(Ordering::Relaxed) {
+                            return Ok(());
+                        }
+                        cfg_chunk.steps = chunk.min(cfg.steps - done);
+                        cfg_chunk.seed =
+                            cfg.seed.wrapping_add(done as u64);
+                        let (p, rep) = match params.take() {
+                            None => tony::run(&engine, &cfg_chunk)?,
+                            Some(p) => tony::run_from(
+                                &engine, &cfg_chunk, p,
+                            )?,
+                        };
+                        for (i, l) in rep.losses.iter().enumerate() {
+                            metrics.log(
+                                &id,
+                                "loss",
+                                step_base + i as u64,
+                                *l as f64,
+                            );
+                        }
+                        metrics.log(
+                            &id,
+                            "samples_per_s",
+                            step_base + rep.losses.len() as u64,
+                            rep.samples_per_s,
+                        );
+                        step_base += rep.losses.len() as u64;
+                        done += cfg_chunk.steps;
+                        params = Some(p);
+                    }
+                    Ok(())
+                };
+                match run() {
+                    Ok(()) => {
+                        if kill.load(Ordering::Relaxed) {
+                            // monitor already has Killed from kill()
+                        } else {
+                            for c in 0..total {
+                                monitor.record(
+                                    &id,
+                                    Event::ContainerFinished {
+                                        container: format!(
+                                            "{id}-task-{c}"
+                                        ),
+                                    },
+                                );
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        monitor.record(
+                            &id,
+                            Event::ContainerFailed {
+                                container: format!("{id}-task-0"),
+                                reason: e.to_string(),
+                            },
+                        );
+                    }
+                }
+            })
+            .map_err(|e| crate::SubmarineError::Runtime(e.to_string()))?;
+        self.threads.lock().unwrap().push(handle);
+        Ok(())
+    }
+
+    fn kill(&self, id: &str) -> crate::Result<()> {
+        if let Some(flag) = self.kill_flags.lock().unwrap().get(id) {
+            flag.store(true, Ordering::Relaxed);
+        }
+        self.monitor.record(id, Event::Killed);
+        Ok(())
+    }
+}

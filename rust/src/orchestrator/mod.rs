@@ -1,0 +1,30 @@
+//! Experiment submitters (paper Fig. 4): "Submarine provides two types of
+//! submitters, YARN submitter and Kubernetes submitter ... To ensure
+//! extensibility, Submarine provides a submitter abstraction, and thus
+//! users can implement tailor-made submitters."
+//!
+//! - [`sim_submitter::SimSubmitter`] binds a scheduler model
+//!   (YARN-capacity or K8s-default) to the discrete-event cluster — used
+//!   for the scheduling experiments (E2, E4–E6).
+//! - [`local::LocalSubmitter`] runs the experiment's bound workload for
+//!   real through the PJRT runtime (quickstart, E8/E9).
+//! - [`tony`] is the TonY-like distributed runner (paper §3.2.2/§6.1):
+//!   worker grad steps, rust-side all-reduce, network model (E3).
+
+pub mod local;
+pub mod sim_submitter;
+pub mod tony;
+
+use crate::experiment::spec::ExperimentSpec;
+
+/// The submitter abstraction of Fig. 4.
+pub trait Submitter: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Launch the experiment. Implementations emit events to the monitor
+    /// they were constructed with.
+    fn submit(&self, id: &str, spec: &ExperimentSpec) -> crate::Result<()>;
+
+    /// Best-effort kill.
+    fn kill(&self, id: &str) -> crate::Result<()>;
+}

@@ -1,0 +1,243 @@
+//! Submitter bound to a simulated orchestrator (YARN-like or K8s-like).
+//!
+//! This is the YARN/Kubernetes submitter of paper Fig. 4 against the
+//! DESIGN.md §Substitutions cluster substrate: experiments become gang
+//! jobs on the discrete-event cluster; container lifecycle events flow
+//! back into the [`ExperimentMonitor`].
+
+use super::Submitter;
+use crate::cluster::ClusterSim;
+use crate::experiment::monitor::{Event, ExperimentMonitor};
+use crate::experiment::spec::ExperimentSpec;
+use crate::scheduler::{JobRequest, Scheduler};
+use crate::util::clock::SimTime;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+struct Inner {
+    scheduler: Box<dyn Scheduler + Send>,
+    sim: ClusterSim,
+    /// job id -> (request, containers placed, containers finished)
+    jobs: BTreeMap<String, (JobRequest, u32, u32)>,
+    /// container id -> job id
+    container_job: BTreeMap<String, String>,
+}
+
+/// Submitter over a scheduler + cluster sim pair.
+pub struct SimSubmitter {
+    inner: Arc<Mutex<Inner>>,
+    monitor: Arc<ExperimentMonitor>,
+    /// Simulated duration charged per experiment container.
+    pub container_duration: SimTime,
+    kind: &'static str,
+}
+
+impl SimSubmitter {
+    pub fn new(
+        scheduler: Box<dyn Scheduler + Send>,
+        sim: ClusterSim,
+        monitor: Arc<ExperimentMonitor>,
+    ) -> SimSubmitter {
+        let kind = scheduler.name();
+        SimSubmitter {
+            inner: Arc::new(Mutex::new(Inner {
+                scheduler,
+                sim,
+                jobs: BTreeMap::new(),
+                container_job: BTreeMap::new(),
+            })),
+            monitor,
+            container_duration: SimTime::from_secs_f64(60.0),
+            kind,
+        }
+    }
+
+    pub fn with_container_duration(mut self, d: SimTime) -> Self {
+        self.container_duration = d;
+        self
+    }
+
+    /// Submit with an explicit per-experiment container duration
+    /// (arrival-trace replays give every experiment its own runtime).
+    pub fn submit_with_duration(
+        &self,
+        id: &str,
+        spec: &ExperimentSpec,
+        duration: SimTime,
+    ) -> crate::Result<()> {
+        let job = spec.to_job(id, duration);
+        let mut g = self.inner.lock().unwrap();
+        g.jobs.insert(id.to_string(), (job.clone(), 0, 0));
+        g.scheduler.submit(job);
+        Ok(())
+    }
+
+    /// Drive scheduling + simulated time forward by `dt`; emits monitor
+    /// events for containers that start/finish. Returns (#placed, #done).
+    pub fn pump(&self, dt: SimTime) -> (usize, usize) {
+        let mut g = self.inner.lock().unwrap();
+        let g = &mut *g; // split borrows across the struct's fields
+        let placed = g.scheduler.schedule(&mut g.sim);
+        for p in &placed {
+            g.container_job
+                .insert(p.container.clone(), p.job.clone());
+            if let Some(e) = g.jobs.get_mut(&p.job) {
+                e.1 += 1;
+            }
+            self.monitor.record(
+                &p.job,
+                Event::ContainerStarted {
+                    container: p.container.clone(),
+                },
+            );
+        }
+        let target = g.sim.now() + dt;
+        let done = g.sim.advance_to(target);
+        for cid in &done {
+            if let Some(job) = g.container_job.get(cid).cloned() {
+                self.monitor.record(
+                    &job,
+                    Event::ContainerFinished {
+                        container: cid.clone(),
+                    },
+                );
+                if let Some(e) = g.jobs.get_mut(&job) {
+                    e.2 += 1;
+                    if e.2 >= e.0.total_containers() {
+                        // release queue share etc.
+                        let req = e.0.clone();
+                        g.scheduler.job_finished(&req);
+                    }
+                }
+            }
+        }
+        (placed.len(), done.len())
+    }
+
+    /// Pump until all submitted jobs have completed (or `max` sim time
+    /// passes). Returns total simulated time consumed.
+    pub fn drain(&self, step: SimTime, max: SimTime) -> SimTime {
+        let start = self.now();
+        loop {
+            self.pump(step);
+            let g = self.inner.lock().unwrap();
+            let all_done = g
+                .jobs
+                .values()
+                .all(|(req, _, fin)| *fin >= req.total_containers());
+            let elapsed = g.sim.now().saturating_sub(start);
+            if all_done || elapsed.0 >= max.0 {
+                return elapsed;
+            }
+        }
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.inner.lock().unwrap().sim.now()
+    }
+
+    pub fn gpu_utilization(&self) -> f64 {
+        self.inner.lock().unwrap().sim.gpu_utilization()
+    }
+
+    pub fn scheduler_busy_until(&self) -> SimTime {
+        self.inner.lock().unwrap().scheduler.busy_until()
+    }
+
+    pub fn pending_jobs(&self) -> usize {
+        self.inner.lock().unwrap().scheduler.pending_jobs()
+    }
+}
+
+impl Submitter for SimSubmitter {
+    fn name(&self) -> &'static str {
+        self.kind
+    }
+
+    fn submit(&self, id: &str, spec: &ExperimentSpec) -> crate::Result<()> {
+        self.submit_with_duration(id, spec, self.container_duration)
+    }
+
+    fn kill(&self, id: &str) -> crate::Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        let running: Vec<String> = g
+            .container_job
+            .iter()
+            .filter(|(_, j)| j.as_str() == id)
+            .map(|(c, _)| c.clone())
+            .collect();
+        for c in running {
+            let _ = g.sim.fail(&c); // already-finished containers are fine
+        }
+        self.monitor.record(id, Event::Killed);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Resources;
+    use crate::experiment::spec::ExperimentStatus;
+    use crate::scheduler::queue::QueueTree;
+    use crate::scheduler::yarn::YarnScheduler;
+
+    fn listing2_spec() -> ExperimentSpec {
+        ExperimentSpec::parse(
+            r#"{
+          "meta": {"name": "mnist", "framework": "TensorFlow"},
+          "spec": {
+            "Ps":     {"replicas": 1, "resources": "cpu=2,memory=2G"},
+            "Worker": {"replicas": 4, "resources": "cpu=4,gpu=1,memory=4G"}
+          }
+        }"#,
+        )
+        .unwrap()
+    }
+
+    fn submitter() -> SimSubmitter {
+        let sim =
+            ClusterSim::homogeneous(4, Resources::new(16, 65536, 2), 1);
+        let sched = YarnScheduler::new(QueueTree::flat());
+        SimSubmitter::new(
+            Box::new(sched),
+            sim,
+            Arc::new(ExperimentMonitor::new()),
+        )
+        .with_container_duration(SimTime::from_millis(100))
+    }
+
+    #[test]
+    fn experiment_runs_to_completion() {
+        let s = submitter();
+        let spec = listing2_spec();
+        s.monitor.watch("exp-1", spec.total_containers());
+        s.submit("exp-1", &spec).unwrap();
+        assert_eq!(s.monitor.status("exp-1"), ExperimentStatus::Accepted);
+        s.pump(SimTime::from_millis(10));
+        assert_eq!(s.monitor.status("exp-1"), ExperimentStatus::Running);
+        s.drain(SimTime::from_millis(50), SimTime::from_secs_f64(10.0));
+        assert_eq!(s.monitor.status("exp-1"), ExperimentStatus::Succeeded);
+    }
+
+    #[test]
+    fn kill_fails_running_containers() {
+        let s = submitter();
+        let spec = listing2_spec();
+        s.monitor.watch("exp-1", spec.total_containers());
+        s.submit("exp-1", &spec).unwrap();
+        s.pump(SimTime::from_millis(10));
+        s.kill("exp-1").unwrap();
+        assert_eq!(s.monitor.status("exp-1"), ExperimentStatus::Killed);
+    }
+
+    #[test]
+    fn utilization_accrues_during_run() {
+        let s = submitter();
+        let spec = listing2_spec();
+        s.monitor.watch("e", spec.total_containers());
+        s.submit("e", &spec).unwrap();
+        s.drain(SimTime::from_millis(20), SimTime::from_secs_f64(10.0));
+        assert!(s.gpu_utilization() > 0.0);
+    }
+}

@@ -1,0 +1,201 @@
+//! Feature matrix (paper Table 1 + Table 2 notations).
+
+/// Table 2's notations: `v` existing, `0` in-progress, `Δ` future.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FeatureStatus {
+    Yes,
+    InProgress,
+    Future,
+    No,
+}
+
+impl FeatureStatus {
+    pub fn symbol(&self) -> &'static str {
+        match self {
+            FeatureStatus::Yes => "v",
+            FeatureStatus::InProgress => "0",
+            FeatureStatus::Future => "Δ",
+            FeatureStatus::No => "",
+        }
+    }
+}
+
+/// The 15 rows of Table 1.
+pub const FEATURES: [&str; 15] = [
+    "Open source",
+    "Kubernetes",
+    "YARN",
+    "Multi ML frameworks",
+    "Feature store",
+    "User-defined prototyping environment",
+    "Distributed training",
+    "High-level training SDK",
+    "Automatic hyperparameter tuning",
+    "Experiment tracking",
+    "Pipeline",
+    "Built-in pipeline component",
+    "Model management",
+    "Model serving",
+    "End-to-end platform",
+];
+
+/// The 7 comparison platforms of Table 1 (Table 2 abbreviations).
+pub const PLATFORMS: [&str; 7] =
+    ["TFX", "KF", "DT", "MF", "MLF", "NNI", "AML"];
+
+/// The full feature matrix.
+pub struct FeatureMatrix;
+
+impl FeatureMatrix {
+    /// Submarine-RS's own column, *derived from what this repo builds*.
+    /// Differences from the paper's Submarine column are intentional
+    /// upgrades: the paper marks hyperparameter tuning and model
+    /// management as in-progress (`0`); this reproduction implements both
+    /// ([`crate::automl`], [`crate::model`]).
+    pub fn submarine_rs() -> Vec<(&'static str, FeatureStatus)> {
+        use FeatureStatus::*;
+        vec![
+            ("Open source", Yes),
+            ("Kubernetes", Yes),      // scheduler::k8s
+            ("YARN", Yes),            // scheduler::yarn
+            ("Multi ML frameworks", Yes), // framework-tagged specs
+            ("Feature store", Future),
+            ("User-defined prototyping environment", Yes), // environment
+            ("Distributed training", Yes), // orchestrator::tony
+            ("High-level training SDK", Yes), // sdk
+            ("Automatic hyperparameter tuning", Yes), // automl (paper: 0)
+            ("Experiment tracking", Yes), // storage::metrics + manager
+            ("Pipeline", Future),
+            ("Built-in pipeline component", Future),
+            ("Model management", Yes), // model registry (paper: 0)
+            ("Model serving", Future),
+            ("End-to-end platform", Future),
+        ]
+    }
+
+    /// The paper's Submarine column, verbatim (for the bench to diff
+    /// against [`Self::submarine_rs`]).
+    pub fn submarine_paper() -> Vec<(&'static str, FeatureStatus)> {
+        use FeatureStatus::*;
+        vec![
+            ("Open source", Yes),
+            ("Kubernetes", Yes),
+            ("YARN", Yes),
+            ("Multi ML frameworks", Yes),
+            ("Feature store", Future),
+            ("User-defined prototyping environment", Yes),
+            ("Distributed training", Yes),
+            ("High-level training SDK", Yes),
+            ("Automatic hyperparameter tuning", InProgress),
+            ("Experiment tracking", Yes),
+            ("Pipeline", Future),
+            ("Built-in pipeline component", Future),
+            ("Model management", InProgress),
+            ("Model serving", Future),
+            ("End-to-end platform", Future),
+        ]
+    }
+
+    /// Other platforms' columns, from the paper's Table 1.
+    pub fn platform_column(p: &str) -> Vec<FeatureStatus> {
+        use FeatureStatus::{No as N, Yes as Y};
+        match p {
+            //          OS K8s YRN MLf FS  UPE DT  SDK HPT ET  PL  BPC MM  MS  E2E
+            "TFX" => vec![Y, Y, N, N, N, N, Y, N, Y, Y, Y, Y, N, N, N],
+            "KF" => vec![Y, Y, N, Y, Y, Y, Y, N, Y, Y, Y, N, N, Y, Y],
+            "DT" => vec![Y, Y, N, Y, N, Y, Y, N, Y, Y, N, N, N, N, N],
+            "MF" => vec![Y, N, N, Y, N, N, Y, N, N, Y, Y, N, N, N, N],
+            "MLF" => vec![Y, Y, N, Y, N, N, N, N, N, Y, N, N, Y, Y, N],
+            "NNI" => vec![Y, Y, N, Y, N, N, Y, N, Y, Y, N, N, N, N, N],
+            "AML" => vec![Y, N, Y, Y, N, N, Y, Y, Y, Y, N, N, N, Y, N],
+            _ => vec![N; 15],
+        }
+    }
+
+    /// Features where this repo has living code (used in tests to keep
+    /// the generated column honest).
+    pub fn implemented_features() -> Vec<&'static str> {
+        vec![
+            "Kubernetes",
+            "YARN",
+            "Distributed training",
+            "High-level training SDK",
+            "Automatic hyperparameter tuning",
+            "Experiment tracking",
+            "Model management",
+            "User-defined prototyping environment",
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_is_complete() {
+        assert_eq!(FeatureMatrix::submarine_rs().len(), FEATURES.len());
+        assert_eq!(FeatureMatrix::submarine_paper().len(), FEATURES.len());
+        for p in PLATFORMS {
+            assert_eq!(
+                FeatureMatrix::platform_column(p).len(),
+                FEATURES.len(),
+                "{p}"
+            );
+        }
+    }
+
+    #[test]
+    fn rows_match_feature_names() {
+        for (i, (name, _)) in
+            FeatureMatrix::submarine_rs().iter().enumerate()
+        {
+            assert_eq!(*name, FEATURES[i]);
+        }
+    }
+
+    #[test]
+    fn rs_column_upgrades_paper_in_progress_items() {
+        let paper = FeatureMatrix::submarine_paper();
+        let rs = FeatureMatrix::submarine_rs();
+        for ((name, p), (_, r)) in paper.iter().zip(&rs) {
+            match p {
+                FeatureStatus::InProgress => assert_eq!(
+                    *r,
+                    FeatureStatus::Yes,
+                    "{name} should be implemented here"
+                ),
+                FeatureStatus::Yes => {
+                    assert_eq!(*r, FeatureStatus::Yes, "{name} regressed")
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn implemented_features_marked_yes() {
+        let rs = FeatureMatrix::submarine_rs();
+        for f in FeatureMatrix::implemented_features() {
+            let (_, st) =
+                rs.iter().find(|(n, _)| *n == f).expect("known row");
+            assert_eq!(*st, FeatureStatus::Yes, "{f}");
+        }
+    }
+
+    #[test]
+    fn yarn_row_is_submarines_differentiator() {
+        // Paper §5.1: only AML and Submarine support YARN.
+        let yarn_idx =
+            FEATURES.iter().position(|f| *f == "YARN").unwrap();
+        let supporters: Vec<&str> = PLATFORMS
+            .iter()
+            .filter(|p| {
+                FeatureMatrix::platform_column(p)[yarn_idx]
+                    == FeatureStatus::Yes
+            })
+            .copied()
+            .collect();
+        assert_eq!(supporters, vec!["AML"]);
+    }
+}

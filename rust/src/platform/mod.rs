@@ -1,0 +1,10 @@
+//! Platform-level capability registry (paper Table 1).
+//!
+//! Submarine's column in Table 1 is *generated* from this registry, which
+//! is wired to the modules that actually implement each feature — so the
+//! feature-matrix bench (E1) reports what the codebase really provides,
+//! not a hand-copied table.
+
+pub mod features;
+
+pub use features::{FeatureMatrix, FeatureStatus};

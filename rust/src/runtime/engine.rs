@@ -1,0 +1,239 @@
+//! PJRT execution engine: loads AOT HLO-text artifacts, compiles them on
+//! the CPU PJRT client, caches executables, and runs them with `Literal`
+//! inputs.  This is the only place the Rust side touches XLA; everything
+//! above it (trainer, TonY driver, serving) works with plain `Vec<f32>`.
+//!
+//! NOTE: the `xla` crate's wrappers are raw-pointer handles without
+//! `Send`/`Sync`, so an [`Engine`] must stay on one thread.  Submarine-RS
+//! drives distributed-training *simulation* by running worker steps
+//! sequentially on one engine and modeling parallel wall-clock in the
+//! cluster sim (DESIGN.md §Substitutions).
+
+use super::manifest::{Manifest, TensorMeta};
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+/// A compiled entry point.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Number of leaves the output tuple decomposes into.
+    pub n_outputs: usize,
+}
+
+/// PJRT client + executable cache over the artifact manifest.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<BTreeMap<String, Rc<Executable>>>,
+}
+
+impl Engine {
+    /// CPU engine over the given artifacts directory.
+    pub fn new(manifest: Manifest) -> crate::Result<Engine> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RefCell::new(BTreeMap::new()),
+        })
+    }
+
+    /// Engine over the default `artifacts/` directory.
+    pub fn open_default() -> crate::Result<Engine> {
+        Engine::new(Manifest::load_default()?)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) `model/artifact`.
+    pub fn executable(
+        &self,
+        model: &str,
+        artifact: &str,
+    ) -> crate::Result<Rc<Executable>> {
+        let key = format!("{model}/{artifact}");
+        if let Some(e) = self.cache.borrow().get(&key) {
+            return Ok(Rc::clone(e));
+        }
+        let path = self.manifest.artifact_path(model, artifact)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| {
+                crate::SubmarineError::Storage("non-utf8 path".into())
+            })?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let n_outputs = self
+            .manifest
+            .model(model)?
+            .artifacts
+            .get(artifact)
+            .map(|a| a.output_names.len())
+            .unwrap_or(1);
+        let e = Rc::new(Executable { exe, n_outputs });
+        self.cache.borrow_mut().insert(key, Rc::clone(&e));
+        Ok(e)
+    }
+
+    /// Execute with literal inputs; returns the decomposed output tuple.
+    pub fn run(
+        &self,
+        exe: &Executable,
+        inputs: &[xla::Literal],
+    ) -> crate::Result<Vec<xla::Literal>> {
+        let result = exe.exe.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple root.
+        let parts = lit.to_tuple()?;
+        Ok(parts)
+    }
+
+    /// Like [`Self::run`] but over borrowed literals — the hot-path form
+    /// (no input copies; see EXPERIMENTS.md §Perf L3-1).
+    pub fn run_ref(
+        &self,
+        exe: &Executable,
+        inputs: &[&xla::Literal],
+    ) -> crate::Result<Vec<xla::Literal>> {
+        let result = exe.exe.execute::<&xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        Ok(parts)
+    }
+
+    /// Number of artifacts compiled so far (cache introspection).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+/// Build an f32 literal of the given shape.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> crate::Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    let n: usize = shape.iter().product::<usize>().max(1);
+    if data.len() != n {
+        return Err(crate::SubmarineError::InvalidSpec(format!(
+            "literal data len {} != shape {:?}",
+            data.len(),
+            shape
+        )));
+    }
+    if shape.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> crate::Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    let n: usize = shape.iter().product::<usize>().max(1);
+    if data.len() != n {
+        return Err(crate::SubmarineError::InvalidSpec(format!(
+            "literal data len {} != shape {:?}",
+            data.len(),
+            shape
+        )));
+    }
+    if shape.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Read an f32 literal back to a host vector.
+pub fn to_f32_vec(lit: &xla::Literal) -> crate::Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Read a scalar f32 (e.g. the loss output).
+pub fn to_f32_scalar(lit: &xla::Literal) -> crate::Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+/// A host-side batch: named tensors matching a manifest signature.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn to_literal(&self, meta: &TensorMeta) -> crate::Result<xla::Literal> {
+        match self {
+            HostTensor::F32(v) => literal_f32(v, &meta.shape),
+            HostTensor::I32(v) => literal_i32(v, &meta.shape),
+        }
+    }
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+        }
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<Engine> {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return None;
+        }
+        Some(Engine::new(Manifest::load(&dir).unwrap()).unwrap())
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(to_f32_vec(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(literal_f32(&[1.0], &[2]).is_err());
+    }
+
+    #[test]
+    fn scalar_literal() {
+        let l = literal_f32(&[0.05], &[]).unwrap();
+        assert!((to_f32_scalar(&l).unwrap() - 0.05).abs() < 1e-7);
+    }
+
+    #[test]
+    fn compiles_and_caches_mnist_train_step() {
+        let Some(e) = engine() else { return };
+        let _ = e.executable("mnist_mlp", "train_step").unwrap();
+        assert_eq!(e.compiled_count(), 1);
+        let _ = e.executable("mnist_mlp", "train_step").unwrap();
+        assert_eq!(e.compiled_count(), 1); // cached
+    }
+
+    #[test]
+    fn executes_mnist_predict() {
+        let Some(e) = engine() else { return };
+        let m = e.manifest.model("mnist_mlp").unwrap().clone();
+        let params = e.manifest.load_params("mnist_mlp").unwrap();
+        let exe = e.executable("mnist_mlp", "predict").unwrap();
+        let mut inputs = Vec::new();
+        for (name, vals) in m.param_order.iter().zip(&params) {
+            inputs.push(
+                literal_f32(vals, &m.param_shapes[name]).unwrap(),
+            );
+        }
+        // batch input x: zeros [128, 784]
+        inputs.push(literal_f32(&vec![0.0; 128 * 784], &[128, 784])
+            .unwrap());
+        let out = e.run(&exe, &inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        let logits = to_f32_vec(&out[0]).unwrap();
+        assert_eq!(logits.len(), 128 * 10);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+}

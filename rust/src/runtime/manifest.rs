@@ -1,0 +1,317 @@
+//! Loader for `artifacts/manifest.json` — the contract between the
+//! build-time Python AOT compiler (`python/compile/aot.py`) and the Rust
+//! runtime.  The manifest describes, per model: parameter order/shapes,
+//! the initial-parameter dump, and each HLO entry point's input/output
+//! signature.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Tensor metadata for one artifact input.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorMeta {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One AOT entry point (train_step / grad_step / apply_update / predict).
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub file: String,
+    pub inputs: Vec<TensorMeta>,
+    pub output_names: Vec<String>,
+}
+
+/// One model in the manifest.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub param_order: Vec<String>,
+    pub param_shapes: BTreeMap<String, Vec<usize>>,
+    pub param_count: u64,
+    pub params_file: String,
+    pub batch_inputs: Vec<String>,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+}
+
+impl ModelEntry {
+    /// Shape of parameter `name`.
+    pub fn param_shape(&self, name: &str) -> Option<&[usize]> {
+        self.param_shapes.get(name).map(|v| v.as_slice())
+    }
+
+    /// Metadata of an artifact's batch inputs (inputs after the params).
+    pub fn batch_meta(&self, artifact: &str) -> Option<&[TensorMeta]> {
+        let a = self.artifacts.get(artifact)?;
+        Some(&a.inputs[self.param_order.len().min(a.inputs.len())..])
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> crate::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| {
+                crate::SubmarineError::Storage(format!(
+                    "cannot read manifest in {dir:?}: {e}; \
+                     run `make artifacts` first"
+                ))
+            })?;
+        let j = Json::parse(&text)?;
+        let mut models = BTreeMap::new();
+        let mobj = j.get("models").and_then(Json::as_obj).ok_or_else(|| {
+            crate::SubmarineError::Storage("manifest missing models".into())
+        })?;
+        for (name, m) in mobj {
+            models.insert(name.clone(), parse_model(name, m)?);
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            models,
+        })
+    }
+
+    /// Load from the repo-default `artifacts/` directory (honors the
+    /// `SUBMARINE_ARTIFACTS` env override).
+    pub fn load_default() -> crate::Result<Manifest> {
+        let dir = std::env::var("SUBMARINE_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".to_string());
+        Self::load(Path::new(&dir))
+    }
+
+    pub fn model(&self, name: &str) -> crate::Result<&ModelEntry> {
+        self.models.get(name).ok_or_else(|| {
+            crate::SubmarineError::NotFound(format!("model {name}"))
+        })
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn artifact_path(&self, model: &str, artifact: &str)
+        -> crate::Result<PathBuf>
+    {
+        let m = self.model(model)?;
+        let a = m.artifacts.get(artifact).ok_or_else(|| {
+            crate::SubmarineError::NotFound(format!(
+                "artifact {model}/{artifact}"
+            ))
+        })?;
+        Ok(self.dir.join(&a.file))
+    }
+
+    /// Read the initial-parameter dump for `model` as one tensor per
+    /// parameter (f32, PARAM_ORDER order).
+    pub fn load_params(&self, model: &str) -> crate::Result<Vec<Vec<f32>>> {
+        let m = self.model(model)?;
+        let raw = std::fs::read(self.dir.join(&m.params_file))?;
+        if raw.len() % 4 != 0 {
+            return Err(crate::SubmarineError::Storage(format!(
+                "params file for {model} not f32-aligned"
+            )));
+        }
+        let floats: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        let mut out = Vec::with_capacity(m.param_order.len());
+        let mut off = 0usize;
+        for p in &m.param_order {
+            let n: usize =
+                m.param_shapes[p].iter().product::<usize>().max(1);
+            if off + n > floats.len() {
+                return Err(crate::SubmarineError::Storage(format!(
+                    "params file for {model} truncated at {p}"
+                )));
+            }
+            out.push(floats[off..off + n].to_vec());
+            off += n;
+        }
+        if off != floats.len() {
+            return Err(crate::SubmarineError::Storage(format!(
+                "params file for {model} has {} trailing floats",
+                floats.len() - off
+            )));
+        }
+        Ok(out)
+    }
+}
+
+fn parse_model(name: &str, m: &Json) -> crate::Result<ModelEntry> {
+    let err = |msg: &str| {
+        crate::SubmarineError::Storage(format!("manifest {name}: {msg}"))
+    };
+    let param_order: Vec<String> = m
+        .get("param_order")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| err("param_order"))?
+        .iter()
+        .filter_map(|v| v.as_str().map(str::to_string))
+        .collect();
+    let mut param_shapes = BTreeMap::new();
+    for (k, v) in m
+        .get("param_shapes")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| err("param_shapes"))?
+    {
+        let dims: Vec<usize> = v
+            .as_arr()
+            .ok_or_else(|| err("shape"))?
+            .iter()
+            .filter_map(|d| d.as_u64().map(|x| x as usize))
+            .collect();
+        param_shapes.insert(k.clone(), dims);
+    }
+    let mut artifacts = BTreeMap::new();
+    for (aname, a) in m
+        .get("artifacts")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| err("artifacts"))?
+    {
+        let inputs = a
+            .get("inputs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| err("inputs"))?
+            .iter()
+            .map(|i| TensorMeta {
+                name: i.str_field("name").unwrap_or("").to_string(),
+                shape: i
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .map(|dims| {
+                        dims.iter()
+                            .filter_map(|d| {
+                                d.as_u64().map(|x| x as usize)
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default(),
+                dtype: i
+                    .str_field("dtype")
+                    .unwrap_or("float32")
+                    .to_string(),
+            })
+            .collect();
+        let output_names = a
+            .get("outputs")
+            .and_then(Json::as_arr)
+            .map(|outs| {
+                outs.iter()
+                    .filter_map(|o| {
+                        o.str_field("name").map(str::to_string)
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        artifacts.insert(
+            aname.clone(),
+            ArtifactEntry {
+                file: a.str_field("file").unwrap_or("").to_string(),
+                inputs,
+                output_names,
+            },
+        );
+    }
+    Ok(ModelEntry {
+        name: name.to_string(),
+        param_order,
+        param_shapes,
+        param_count: m.num_field("param_count").unwrap_or(0.0) as u64,
+        params_file: m
+            .str_field("params_file")
+            .unwrap_or("")
+            .to_string(),
+        batch_inputs: m
+            .get("batch_inputs")
+            .and_then(Json::as_arr)
+            .map(|b| {
+                b.iter()
+                    .filter_map(|v| v.as_str().map(str::to_string))
+                    .collect()
+            })
+            .unwrap_or_default(),
+        artifacts,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        for name in ["deepfm", "mnist_mlp", "transformer_tiny"] {
+            let entry = m.model(name).unwrap();
+            assert!(!entry.param_order.is_empty());
+            assert!(entry.param_count > 0);
+            for art in ["train_step", "grad_step", "apply_update",
+                        "predict"] {
+                assert!(
+                    m.artifact_path(name, art).unwrap().exists(),
+                    "{name}/{art}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn params_match_declared_count() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let entry = m.model("mnist_mlp").unwrap();
+        let params = m.load_params("mnist_mlp").unwrap();
+        let total: usize = params.iter().map(|p| p.len()).sum();
+        assert_eq!(total as u64, entry.param_count);
+        assert_eq!(params.len(), entry.param_order.len());
+    }
+
+    #[test]
+    fn batch_meta_excludes_params() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let entry = m.model("mnist_mlp").unwrap();
+        let batch = entry.batch_meta("train_step").unwrap();
+        let names: Vec<_> =
+            batch.iter().map(|t| t.name.as_str()).collect();
+        assert_eq!(names, ["x", "y", "lr"]);
+    }
+
+    #[test]
+    fn unknown_model_and_artifact_error() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert!(m.model("nope").is_err());
+        assert!(m.artifact_path("deepfm", "nope").is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime (DESIGN.md S16): loads the AOT HLO-text artifacts built by
+//! `python/compile/aot.py` and executes them on the request path with no
+//! Python anywhere.  See `/opt/xla-example/load_hlo` for the interchange
+//! rationale (HLO text, not serialized protos).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, Executable, HostTensor};
+pub use manifest::{Manifest, ModelEntry, TensorMeta};

@@ -1,0 +1,253 @@
+//! Hierarchical queues (paper §5.1.5): a capacity tree in the style of the
+//! YARN CapacityScheduler.  Each queue owns a fraction of its parent's
+//! capacity and may burst to `max_capacity`; leaves hold FIFO job queues.
+//! The scheduler picks the most under-served leaf first, which is what
+//! yields the multi-tenant utilization the paper claims over flat FIFO.
+
+use crate::cluster::Resources;
+use std::collections::BTreeMap;
+
+/// A node in the queue tree.
+#[derive(Debug)]
+pub struct Queue {
+    pub name: String,
+    /// Guaranteed fraction of the *cluster* (computed from the tree).
+    pub capacity: f64,
+    /// Burst ceiling as a fraction of the cluster.
+    pub max_capacity: f64,
+    /// Dominant-share of resources currently used by this queue's jobs.
+    pub used_share: f64,
+    children: Vec<String>,
+    parent: Option<String>,
+}
+
+/// The queue hierarchy.
+#[derive(Debug)]
+pub struct QueueTree {
+    queues: BTreeMap<String, Queue>,
+}
+
+impl QueueTree {
+    /// Just `root` with 100% capacity.
+    pub fn flat() -> QueueTree {
+        let mut queues = BTreeMap::new();
+        queues.insert(
+            "root".to_string(),
+            Queue {
+                name: "root".to_string(),
+                capacity: 1.0,
+                max_capacity: 1.0,
+                used_share: 0.0,
+                children: Vec::new(),
+                parent: None,
+            },
+        );
+        QueueTree { queues }
+    }
+
+    /// Add `child` under `parent` with `capacity` (fraction of the
+    /// parent's capacity) and `max_capacity` (fraction of the cluster).
+    pub fn add(
+        &mut self,
+        parent: &str,
+        child: &str,
+        capacity: f64,
+        max_capacity: f64,
+    ) -> crate::Result<()> {
+        let full = format!("{parent}.{child}");
+        if self.queues.contains_key(&full) {
+            return Err(crate::SubmarineError::AlreadyExists(full));
+        }
+        let parent_cap = {
+            let p = self.queues.get_mut(parent).ok_or_else(|| {
+                crate::SubmarineError::NotFound(format!("queue {parent}"))
+            })?;
+            p.children.push(full.clone());
+            p.capacity
+        };
+        self.queues.insert(
+            full.clone(),
+            Queue {
+                name: full,
+                capacity: parent_cap * capacity,
+                max_capacity,
+                used_share: 0.0,
+                children: Vec::new(),
+                parent: Some(parent.to_string()),
+            },
+        );
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Queue> {
+        self.queues.get(name)
+    }
+
+    pub fn is_leaf(&self, name: &str) -> bool {
+        self.queues
+            .get(name)
+            .map(|q| q.children.is_empty())
+            .unwrap_or(false)
+    }
+
+    /// Leaf that `job_queue` resolves to; unknown queues fall back to the
+    /// first leaf under root (YARN's default-queue behavior).
+    pub fn resolve(&self, job_queue: &str) -> String {
+        if self.is_leaf(job_queue) {
+            return job_queue.to_string();
+        }
+        // first leaf in the tree (BTreeMap order is deterministic)
+        self.queues
+            .iter()
+            .find(|(_, q)| q.children.is_empty())
+            .map(|(n, _)| n.clone())
+            .unwrap_or_else(|| "root".to_string())
+    }
+
+    /// Record `delta` dominant-share usage on `leaf` and its ancestors.
+    pub fn charge(&mut self, leaf: &str, delta: f64) {
+        let mut cur = Some(leaf.to_string());
+        while let Some(name) = cur {
+            if let Some(q) = self.queues.get_mut(&name) {
+                q.used_share = (q.used_share + delta).max(0.0);
+                cur = q.parent.clone();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Can `leaf` absorb `delta` more share without exceeding its burst
+    /// ceiling (and every ancestor its own)?
+    pub fn within_limits(&self, leaf: &str, delta: f64) -> bool {
+        let mut cur = Some(leaf.to_string());
+        while let Some(name) = cur {
+            match self.queues.get(&name) {
+                Some(q) => {
+                    if q.used_share + delta > q.max_capacity + 1e-9 {
+                        return false;
+                    }
+                    cur = q.parent.clone();
+                }
+                None => break,
+            }
+        }
+        true
+    }
+
+    /// Leaves ordered most-under-served first: sort key is
+    /// `used_share / capacity` (the CapacityScheduler's relative usage).
+    pub fn leaves_by_need(&self) -> Vec<String> {
+        let mut leaves: Vec<(&String, f64)> = self
+            .queues
+            .iter()
+            .filter(|(_, q)| q.children.is_empty())
+            .map(|(n, q)| (n, q.used_share / q.capacity.max(1e-9)))
+            .collect();
+        leaves.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        leaves.into_iter().map(|(n, _)| n.clone()).collect()
+    }
+
+    /// Jain's fairness index over leaf relative usages (1.0 = perfectly
+    /// fair). Used by the hierarchy-queue bench (E6).
+    pub fn jain_fairness(&self) -> f64 {
+        let xs: Vec<f64> = self
+            .queues
+            .values()
+            .filter(|q| q.children.is_empty())
+            .map(|q| q.used_share / q.capacity.max(1e-9))
+            .collect();
+        if xs.is_empty() {
+            return 1.0;
+        }
+        let sum: f64 = xs.iter().sum();
+        let sq: f64 = xs.iter().map(|x| x * x).sum();
+        if sq == 0.0 {
+            return 1.0;
+        }
+        sum * sum / (xs.len() as f64 * sq)
+    }
+
+    /// Share of the cluster's dominant resource that `res` represents.
+    pub fn share_of(res: &Resources, cluster: &Resources) -> f64 {
+        res.dominant_share(cluster)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tree() -> QueueTree {
+        let mut t = QueueTree::flat();
+        t.add("root", "prod", 0.6, 0.8).unwrap();
+        t.add("root", "dev", 0.4, 0.5).unwrap();
+        t.add("root.prod", "ads", 0.5, 0.6).unwrap();
+        t.add("root.prod", "search", 0.5, 0.6).unwrap();
+        t
+    }
+
+    #[test]
+    fn capacities_multiply_down_tree() {
+        let t = tree();
+        assert!((t.get("root.prod").unwrap().capacity - 0.6).abs() < 1e-9);
+        assert!(
+            (t.get("root.prod.ads").unwrap().capacity - 0.3).abs() < 1e-9
+        );
+    }
+
+    #[test]
+    fn duplicate_queue_rejected() {
+        let mut t = tree();
+        assert!(t.add("root", "prod", 0.1, 0.1).is_err());
+        assert!(t.add("root.nope", "x", 0.1, 0.1).is_err());
+    }
+
+    #[test]
+    fn charge_propagates_to_ancestors() {
+        let mut t = tree();
+        t.charge("root.prod.ads", 0.2);
+        assert!((t.get("root.prod.ads").unwrap().used_share - 0.2).abs()
+            < 1e-9);
+        assert!((t.get("root.prod").unwrap().used_share - 0.2).abs()
+            < 1e-9);
+        assert!((t.get("root").unwrap().used_share - 0.2).abs() < 1e-9);
+        t.charge("root.prod.ads", -0.2);
+        assert!(t.get("root").unwrap().used_share.abs() < 1e-9);
+    }
+
+    #[test]
+    fn limits_respect_ancestor_ceilings() {
+        let mut t = tree();
+        assert!(t.within_limits("root.prod.ads", 0.5)); // under 0.6 ceiling
+        t.charge("root.prod.search", 0.6);
+        // ads alone ok (0.3 < 0.6) but root.prod would hit 0.9 > 0.8
+        assert!(!t.within_limits("root.prod.ads", 0.3));
+    }
+
+    #[test]
+    fn under_served_leaf_first() {
+        let mut t = tree();
+        t.charge("root.prod.ads", 0.29); // ads at ~97% of its 0.3
+        let order = t.leaves_by_need();
+        assert_ne!(order[0], "root.prod.ads");
+        assert!(order.contains(&"root.dev".to_string()));
+    }
+
+    #[test]
+    fn resolve_falls_back_to_first_leaf() {
+        let t = tree();
+        assert_eq!(t.resolve("root.prod.ads"), "root.prod.ads");
+        let fallback = t.resolve("nonexistent");
+        assert!(t.is_leaf(&fallback));
+    }
+
+    #[test]
+    fn jain_index_bounds() {
+        let mut t = tree();
+        assert!((t.jain_fairness() - 1.0).abs() < 1e-9);
+        t.charge("root.dev", 0.4);
+        let j = t.jain_fairness();
+        assert!(j > 0.0 && j < 1.0, "j={j}");
+    }
+}

@@ -1,0 +1,395 @@
+//! YARN-like capacity scheduler (paper §5.1).
+//!
+//! Models what makes YARN fast and GPU-friendly per the paper:
+//!
+//! - **Heartbeat-batched allocation** (§5.1.4): the RM only persists
+//!   application-level metadata, so per-container decisions are
+//!   sub-millisecond; many containers are placed per scheduling pass.
+//! - **Hierarchical queues** (§5.1.5): most-under-served leaf first,
+//!   bounded by per-queue burst ceilings.
+//! - **Gang scheduling + GPU topology awareness** (§5.1.3): distributed
+//!   training jobs are placed all-or-nothing, each container's GPUs packed
+//!   on one socket when possible.
+
+use super::queue::QueueTree;
+use super::{pick_gpus, JobRequest, Placement, Scheduler};
+use crate::cluster::ClusterSim;
+use crate::util::clock::SimTime;
+use std::collections::VecDeque;
+
+/// Cost model (virtual time per scheduling action).
+#[derive(Debug, Clone)]
+pub struct YarnCosts {
+    /// Per-container placement decision (RM allocate path).
+    pub per_container: SimTime,
+    /// Fixed cost of one scheduling pass (heartbeat processing).
+    pub per_pass: SimTime,
+}
+
+impl Default for YarnCosts {
+    fn default() -> Self {
+        // ~0.8 ms/container -> ~1250 containers/s, matching the paper's
+        // ">1000 containers per second" (§5.1.4).
+        YarnCosts {
+            per_container: SimTime::from_micros(800),
+            per_pass: SimTime::from_micros(200),
+        }
+    }
+}
+
+pub struct YarnScheduler {
+    pub queues: QueueTree,
+    pending: VecDeque<JobRequest>,
+    costs: YarnCosts,
+    busy_until: SimTime,
+    /// GPU-topology-aware placement (§5.1.3); disable for ablation (E5).
+    pub topology_aware: bool,
+    placed_counter: u64,
+    /// Cluster capacity seen on the last scheduling pass (for releasing
+    /// queue shares on job completion).
+    last_cluster_cap: crate::cluster::Resources,
+}
+
+impl YarnScheduler {
+    pub fn new(queues: QueueTree) -> YarnScheduler {
+        YarnScheduler {
+            queues,
+            pending: VecDeque::new(),
+            costs: YarnCosts::default(),
+            busy_until: SimTime::ZERO,
+            topology_aware: true,
+            placed_counter: 0,
+            last_cluster_cap: crate::cluster::Resources::ZERO,
+        }
+    }
+
+    pub fn with_costs(mut self, costs: YarnCosts) -> Self {
+        self.costs = costs;
+        self
+    }
+
+    pub fn with_topology_aware(mut self, on: bool) -> Self {
+        self.topology_aware = on;
+        self
+    }
+
+    /// Try to place every container of `job` (gang: all-or-nothing).
+    /// Returns placements or None if the job cannot fully fit now.
+    fn try_place_job(
+        &mut self,
+        job: &JobRequest,
+        sim: &mut ClusterSim,
+    ) -> Option<Vec<Placement>> {
+        let leaf = self.queues.resolve(&job.queue);
+        let cluster_cap = sim.total_capacity();
+        let delta =
+            QueueTree::share_of(&job.total_resources(), &cluster_cap);
+        if !self.queues.within_limits(&leaf, delta) {
+            return None;
+        }
+
+        // Plan by allocating directly on the live node state, rolling
+        // back on failure.  (PERF, EXPERIMENTS.md §Perf L3-3: the
+        // previous implementation cloned every node per job, which
+        // dominated the allocate path on large clusters.)
+        let mut plan: Vec<(usize, Placement)> = Vec::new();
+        let mut failed = false;
+        'plan: for task in &job.tasks {
+            for r in 0..task.replicas {
+                let cid = format!(
+                    "{}-{}-{}-{}",
+                    job.id, task.name, r, self.placed_counter
+                );
+                self.placed_counter += 1;
+                // Choose the feasible node with the best (distance,
+                // least-fragmentation) score.
+                let mut best: Option<(u32, u32, usize, Vec<usize>)> = None;
+                for (ni, node) in sim.nodes.iter().enumerate() {
+                    if !node.available().fits(&task.resources) {
+                        continue;
+                    }
+                    if let Some(gpus) = pick_gpus(
+                        node,
+                        task.resources.gpus,
+                        self.topology_aware,
+                    ) {
+                        let dist = node.gang_distance(&gpus);
+                        let frag = node.free_gpu_indices().len() as u32
+                            - gpus.len() as u32;
+                        let cand = (dist, frag, ni, gpus);
+                        let better = match &best {
+                            None => true,
+                            Some(b) => (cand.0, cand.1) < (b.0, b.1),
+                        };
+                        if better {
+                            best = Some(cand);
+                        }
+                    }
+                }
+                let Some((_, _, ni, gpus)) = best else {
+                    failed = true;
+                    break 'plan;
+                };
+                if sim.nodes[ni]
+                    .allocate(&cid, task.resources, &gpus)
+                    .is_err()
+                {
+                    failed = true;
+                    break 'plan;
+                }
+                self.busy_until += self.costs.per_container;
+                plan.push((
+                    ni,
+                    Placement {
+                        container: cid,
+                        job: job.id.clone(),
+                        task: task.name.clone(),
+                        node: sim.nodes[ni].id.clone(),
+                        gpu_ids: gpus,
+                        resources: task.resources,
+                        decided_at: self.busy_until,
+                    },
+                ));
+            }
+        }
+        if failed {
+            // gang all-or-nothing: roll back the partial plan
+            for (ni, p) in plan {
+                sim.nodes[ni]
+                    .release(&p.container)
+                    .expect("rollback release");
+            }
+            return None;
+        }
+
+        // Commit: hand the reservations to the simulator proper.
+        let mut out = Vec::with_capacity(plan.len());
+        for (ni, p) in plan {
+            sim.nodes[ni]
+                .release(&p.container)
+                .expect("commit re-stage");
+            let duration = job
+                .tasks
+                .iter()
+                .find(|t| t.name == p.task)
+                .map(|t| t.duration)
+                .unwrap_or(SimTime::from_millis(1));
+            sim.launch(
+                &p.container,
+                &p.job,
+                &p.node,
+                p.resources,
+                &p.gpu_ids,
+                duration,
+            )
+            .expect("plan validated against live state");
+            out.push(p);
+        }
+        self.queues.charge(&leaf, delta);
+        Some(out)
+    }
+}
+
+impl Scheduler for YarnScheduler {
+    fn name(&self) -> &'static str {
+        "yarn-capacity"
+    }
+
+    fn submit(&mut self, job: JobRequest) {
+        self.pending.push_back(job);
+    }
+
+    fn schedule(&mut self, sim: &mut ClusterSim) -> Vec<Placement> {
+        self.last_cluster_cap = sim.total_capacity();
+        self.busy_until += self.costs.per_pass;
+        let mut placed = Vec::new();
+        // Keep sweeping queues until a full pass makes no progress
+        // (capacity scheduler's allocate loop).
+        loop {
+            let mut progress = false;
+            'queues: for leaf in self.queues.leaves_by_need() {
+                // Walk this leaf's FIFO, skipping jobs that cannot be
+                // placed right now so a blocked head-of-line job does not
+                // starve smaller ones behind it.
+                let idxs: Vec<usize> = self
+                    .pending
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, j)| self.queues.resolve(&j.queue) == leaf)
+                    .map(|(i, _)| i)
+                    .collect();
+                for idx in idxs {
+                    let job = self.pending[idx].clone();
+                    if let Some(mut ps) = self.try_place_job(&job, sim) {
+                        placed.append(&mut ps);
+                        self.pending.remove(idx);
+                        progress = true;
+                        break 'queues; // re-rank queues after each job
+                    }
+                }
+            }
+            if !progress {
+                break;
+            }
+        }
+        placed
+    }
+
+    fn pending_jobs(&self) -> usize {
+        self.pending.len()
+    }
+
+    fn busy_until(&self) -> SimTime {
+        self.busy_until
+    }
+
+    fn job_finished(&mut self, job: &JobRequest) {
+        if self.last_cluster_cap.is_zero() {
+            return;
+        }
+        let cap = self.last_cluster_cap;
+        release_job_share(self, job, &cap);
+    }
+}
+
+/// Release the queue share held by a finished job (the experiment monitor
+/// calls this when all containers of a job complete).
+pub fn release_job_share(
+    sched: &mut YarnScheduler,
+    job: &JobRequest,
+    cluster_cap: &crate::cluster::Resources,
+) {
+    let leaf = sched.queues.resolve(&job.queue);
+    let delta = QueueTree::share_of(&job.total_resources(), cluster_cap);
+    sched.queues.charge(&leaf, -delta);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Resources;
+    use crate::scheduler::TaskGroup;
+
+    fn small_job(id: &str, gpus: u32, replicas: u32) -> JobRequest {
+        JobRequest {
+            id: id.into(),
+            queue: "root".into(),
+            gang: true,
+            tasks: vec![TaskGroup {
+                name: "worker".into(),
+                replicas,
+                resources: Resources::new(2, 2048, gpus),
+                duration: SimTime::from_millis(100),
+            }],
+        }
+    }
+
+    fn sim4() -> ClusterSim {
+        ClusterSim::homogeneous(4, Resources::new(16, 65536, 4), 2)
+    }
+
+    #[test]
+    fn places_simple_job() {
+        let mut sim = sim4();
+        let mut s = YarnScheduler::new(QueueTree::flat());
+        s.submit(small_job("j1", 1, 4));
+        let placed = s.schedule(&mut sim);
+        assert_eq!(placed.len(), 4);
+        assert_eq!(s.pending_jobs(), 0);
+        assert_eq!(sim.running_containers(), 4);
+    }
+
+    #[test]
+    fn gang_is_all_or_nothing() {
+        let mut sim = ClusterSim::homogeneous(
+            1,
+            Resources::new(16, 65536, 2),
+            1,
+        );
+        let mut s = YarnScheduler::new(QueueTree::flat());
+        // needs 4 GPUs total, cluster has 2 -> nothing placed
+        s.submit(small_job("big", 2, 2));
+        let placed = s.schedule(&mut sim);
+        assert!(placed.is_empty());
+        assert_eq!(s.pending_jobs(), 1);
+        assert_eq!(sim.running_containers(), 0);
+        assert_eq!(sim.total_allocated(), Resources::ZERO);
+    }
+
+    #[test]
+    fn head_of_line_job_does_not_block_smaller() {
+        let mut sim = ClusterSim::homogeneous(
+            1,
+            Resources::new(16, 65536, 2),
+            1,
+        );
+        let mut s = YarnScheduler::new(QueueTree::flat());
+        s.submit(small_job("big", 2, 2)); // cannot fit
+        s.submit(small_job("small", 1, 1)); // fits
+        let placed = s.schedule(&mut sim);
+        assert_eq!(placed.len(), 1);
+        assert_eq!(placed[0].job, "small");
+        assert_eq!(s.pending_jobs(), 1);
+    }
+
+    #[test]
+    fn decision_cost_accumulates() {
+        let mut sim = sim4();
+        let mut s = YarnScheduler::new(QueueTree::flat());
+        s.submit(small_job("j", 0, 10));
+        let placed = s.schedule(&mut sim);
+        assert_eq!(placed.len(), 10);
+        // 10 containers * 0.8ms + pass overhead
+        assert!(s.busy_until() >= SimTime::from_micros(8200));
+        assert!(placed.windows(2).all(|w| {
+            w[0].decided_at <= w[1].decided_at
+        }));
+    }
+
+    #[test]
+    fn topology_aware_placement_minimizes_distance() {
+        let mut sim = sim4();
+        let mut s = YarnScheduler::new(QueueTree::flat());
+        s.submit(small_job("j", 2, 1));
+        let placed = s.schedule(&mut sim);
+        let p = &placed[0];
+        let node = sim.node(&p.node).unwrap();
+        assert_eq!(node.gang_distance(&p.gpu_ids), 1); // same socket
+    }
+
+    #[test]
+    fn queue_ceiling_defers_job() {
+        let mut sim = sim4(); // 16 GPUs total
+        let mut queues = QueueTree::flat();
+        queues.add("root", "tiny", 1.0, 0.10).unwrap(); // 10% ceiling
+        let mut s = YarnScheduler::new(queues);
+        let mut job = small_job("j", 4, 1); // 4/16 GPUs = 25% share
+        job.queue = "root.tiny".into();
+        s.submit(job);
+        let placed = s.schedule(&mut sim);
+        assert!(placed.is_empty());
+        assert_eq!(s.pending_jobs(), 1);
+    }
+
+    #[test]
+    fn share_released_allows_next_job() {
+        let mut sim = sim4();
+        let mut queues = QueueTree::flat();
+        queues.add("root", "q", 1.0, 0.30).unwrap();
+        let mut s = YarnScheduler::new(queues);
+        let mut j1 = small_job("j1", 4, 1);
+        j1.queue = "root.q".into();
+        let mut j2 = small_job("j2", 4, 1);
+        j2.queue = "root.q".into();
+        s.submit(j1.clone());
+        s.submit(j2);
+        // j1 takes 25%; j2 would hit 50% > 30% ceiling
+        assert_eq!(s.schedule(&mut sim).len(), 1);
+        assert_eq!(s.pending_jobs(), 1);
+        let cap = sim.total_capacity();
+        sim.advance_to(SimTime::from_millis(200)); // j1 finishes
+        release_job_share(&mut s, &j1, &cap);
+        assert_eq!(s.schedule(&mut sim).len(), 1);
+        assert_eq!(s.pending_jobs(), 0);
+    }
+}

@@ -1,0 +1,220 @@
+//! HTTP client for the Submarine REST API (std-only, HTTP/1.1 with
+//! `connection: close` — matching the server).
+
+use crate::experiment::spec::{ExperimentSpec, ExperimentStatus};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+/// Client bound to one server address.
+pub struct ExperimentClient {
+    host: String,
+    port: u16,
+    token: Option<String>,
+}
+
+impl ExperimentClient {
+    pub fn new(host: &str, port: u16) -> ExperimentClient {
+        ExperimentClient {
+            host: host.to_string(),
+            port,
+            token: None,
+        }
+    }
+
+    pub fn with_token(mut self, token: &str) -> ExperimentClient {
+        self.token = Some(token.to_string());
+        self
+    }
+
+    /// Raw request; returns (status, parsed body).
+    pub fn request(
+        &self,
+        method: &str,
+        path: &str,
+        body: Option<&Json>,
+    ) -> crate::Result<(u16, Json)> {
+        let mut stream =
+            TcpStream::connect((self.host.as_str(), self.port))?;
+        let payload = body.map(|j| j.dump()).unwrap_or_default();
+        let mut req = format!(
+            "{method} {path} HTTP/1.1\r\nhost: {}\r\ncontent-length: {}\r\n",
+            self.host,
+            payload.len()
+        );
+        if let Some(t) = &self.token {
+            req.push_str(&format!("authorization: Bearer {t}\r\n"));
+        }
+        req.push_str("content-type: application/json\r\n\r\n");
+        req.push_str(&payload);
+        stream.write_all(req.as_bytes())?;
+        let mut raw = String::new();
+        stream.read_to_string(&mut raw)?;
+        let status: u16 = raw
+            .split(' ')
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| {
+                crate::SubmarineError::Runtime("bad http response".into())
+            })?;
+        let body_text = raw
+            .split_once("\r\n\r\n")
+            .map(|(_, b)| b)
+            .unwrap_or("");
+        let j = if body_text.trim().is_empty() {
+            Json::Null
+        } else {
+            Json::parse(body_text.trim())?
+        };
+        Ok((status, j))
+    }
+
+    fn expect_ok(&self, r: (u16, Json)) -> crate::Result<Json> {
+        let (status, j) = r;
+        if status == 200 {
+            Ok(j.get("result").cloned().unwrap_or(j))
+        } else {
+            Err(crate::SubmarineError::Runtime(format!(
+                "server returned {status}: {}",
+                j.str_field("message").unwrap_or("?")
+            )))
+        }
+    }
+
+    /// Submit an experiment; returns its id (Listing 2's
+    /// `ExperimentClient().create_experiment`).
+    pub fn create_experiment(
+        &self,
+        spec: &ExperimentSpec,
+    ) -> crate::Result<String> {
+        let r = self.request(
+            "POST",
+            "/api/v1/experiment",
+            Some(&spec.to_json()),
+        )?;
+        let res = self.expect_ok(r)?;
+        res.str_field("experimentId")
+            .map(str::to_string)
+            .ok_or_else(|| {
+                crate::SubmarineError::Runtime("missing experimentId".into())
+            })
+    }
+
+    pub fn status(&self, id: &str) -> crate::Result<ExperimentStatus> {
+        let r = self.request(
+            "GET",
+            &format!("/api/v1/experiment/{id}"),
+            None,
+        )?;
+        let res = self.expect_ok(r)?;
+        res.str_field("status")
+            .and_then(ExperimentStatus::parse)
+            .ok_or_else(|| {
+                crate::SubmarineError::Runtime("missing status".into())
+            })
+    }
+
+    /// Poll until terminal status or timeout.
+    pub fn wait(
+        &self,
+        id: &str,
+        timeout: std::time::Duration,
+    ) -> crate::Result<ExperimentStatus> {
+        let start = std::time::Instant::now();
+        loop {
+            let st = self.status(id)?;
+            if st.is_terminal() {
+                return Ok(st);
+            }
+            if start.elapsed() > timeout {
+                return Ok(st);
+            }
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        }
+    }
+
+    pub fn kill(&self, id: &str) -> crate::Result<()> {
+        let r = self.request(
+            "POST",
+            &format!("/api/v1/experiment/{id}/kill"),
+            None,
+        )?;
+        self.expect_ok(r).map(|_| ())
+    }
+
+    pub fn list_experiments(&self) -> crate::Result<Vec<(String, String)>> {
+        let r = self.request("GET", "/api/v1/experiment", None)?;
+        let res = self.expect_ok(r)?;
+        Ok(res
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|e| {
+                Some((
+                    e.str_field("experimentId")?.to_string(),
+                    e.str_field("status")?.to_string(),
+                ))
+            })
+            .collect())
+    }
+
+    /// Fetch a metric series (step, value pairs).
+    pub fn metrics(
+        &self,
+        id: &str,
+        metric: &str,
+    ) -> crate::Result<Vec<(u64, f64)>> {
+        let r = self.request(
+            "GET",
+            &format!("/api/v1/experiment/{id}/metrics?metric={metric}"),
+            None,
+        )?;
+        let res = self.expect_ok(r)?;
+        Ok(res
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|p| {
+                Some((
+                    p.num_field("step")? as u64,
+                    p.num_field("value")?,
+                ))
+            })
+            .collect())
+    }
+
+    /// Register a predefined template.
+    pub fn register_template(
+        &self,
+        template: &crate::template::Template,
+    ) -> crate::Result<()> {
+        let r = self.request(
+            "POST",
+            "/api/v1/template",
+            Some(&template.to_json()),
+        )?;
+        self.expect_ok(r).map(|_| ())
+    }
+
+    /// Zero-code experiment: instantiate a registered template with
+    /// parameter values (paper §3.2.3).
+    pub fn submit_template(
+        &self,
+        name: &str,
+        params: &BTreeMap<String, String>,
+    ) -> crate::Result<String> {
+        let body = Json::obj().set("params", Json::from_map(params));
+        let r = self.request(
+            "POST",
+            &format!("/api/v1/template/{name}/submit"),
+            Some(&body),
+        )?;
+        let res = self.expect_ok(r)?;
+        res.str_field("experimentId")
+            .map(str::to_string)
+            .ok_or_else(|| {
+                crate::SubmarineError::Runtime("missing experimentId".into())
+            })
+    }
+}

@@ -1,0 +1,20 @@
+//! Client SDK (paper §3.1.2): the Rust equivalent of the Submarine Python
+//! SDK, in two levels:
+//!
+//! - [`ExperimentClient`]: Listing-2 style — build an [`ExperimentSpec`],
+//!   submit it over the REST API, poll status, fetch metrics.
+//! - [`DeepFm`] / [`highlevel`]: Listing-3 style — "users can build a
+//!   DeepFM model in just four lines":
+//!
+//! ```ignore
+//! let mut model = DeepFm::new(r#"{"steps":100,"lr":0.05}"#)?;
+//! model.train()?;
+//! let auc = model.evaluate()?;
+//! println!("Model AUC : {auc}");
+//! ```
+
+pub mod client;
+pub mod highlevel;
+
+pub use client::ExperimentClient;
+pub use highlevel::DeepFm;

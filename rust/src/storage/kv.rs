@@ -1,0 +1,230 @@
+//! Embedded metadata store: in-memory maps + append-only JSON-lines WAL.
+//!
+//! Write path: mutate memory, append one WAL record
+//! (`{"op":"put","ns":..,"key":..,"doc":..}`); recovery replays the log.
+//! This deliberately mirrors what Submarine gets from MySQL at the
+//! fidelity the paper's experiments need (durable experiment metadata,
+//! comparability across runs) without an external service.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::{BufRead, Write};
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+struct Inner {
+    data: BTreeMap<String, BTreeMap<String, Json>>,
+    wal: Option<std::fs::File>,
+}
+
+/// Thread-safe namespaced document store.
+pub struct MetaStore {
+    inner: Mutex<Inner>,
+    path: Option<PathBuf>,
+}
+
+impl MetaStore {
+    /// Volatile store (tests, benches).
+    pub fn in_memory() -> MetaStore {
+        MetaStore {
+            inner: Mutex::new(Inner {
+                data: BTreeMap::new(),
+                wal: None,
+            }),
+            path: None,
+        }
+    }
+
+    /// Durable store backed by a WAL file; replays existing log.
+    pub fn open(path: &std::path::Path) -> crate::Result<MetaStore> {
+        let mut data: BTreeMap<String, BTreeMap<String, Json>> =
+            BTreeMap::new();
+        if path.exists() {
+            let f = std::fs::File::open(path)?;
+            for line in std::io::BufReader::new(f).lines() {
+                let line = line?;
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let rec = Json::parse(&line).map_err(|e| {
+                    crate::SubmarineError::Storage(format!(
+                        "corrupt WAL line: {e}"
+                    ))
+                })?;
+                let ns = rec.str_field("ns").unwrap_or_default().to_string();
+                let key =
+                    rec.str_field("key").unwrap_or_default().to_string();
+                match rec.str_field("op") {
+                    Some("put") => {
+                        let doc =
+                            rec.get("doc").cloned().unwrap_or(Json::Null);
+                        data.entry(ns).or_default().insert(key, doc);
+                    }
+                    Some("del") => {
+                        data.entry(ns).or_default().remove(&key);
+                    }
+                    other => {
+                        return Err(crate::SubmarineError::Storage(
+                            format!("unknown WAL op {other:?}"),
+                        ))
+                    }
+                }
+            }
+        }
+        let wal = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)?;
+        Ok(MetaStore {
+            inner: Mutex::new(Inner {
+                data,
+                wal: Some(wal),
+            }),
+            path: Some(path.to_path_buf()),
+        })
+    }
+
+    pub fn path(&self) -> Option<&std::path::Path> {
+        self.path.as_deref()
+    }
+
+    pub fn put(&self, ns: &str, key: &str, doc: Json) -> crate::Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(w) = g.wal.as_mut() {
+            let rec = Json::obj()
+                .set("op", Json::Str("put".into()))
+                .set("ns", Json::Str(ns.into()))
+                .set("key", Json::Str(key.into()))
+                .set("doc", doc.clone());
+            writeln!(w, "{}", rec.dump())?;
+        }
+        g.data
+            .entry(ns.to_string())
+            .or_default()
+            .insert(key.to_string(), doc);
+        Ok(())
+    }
+
+    pub fn get(&self, ns: &str, key: &str) -> Option<Json> {
+        self.inner
+            .lock()
+            .unwrap()
+            .data
+            .get(ns)
+            .and_then(|m| m.get(key))
+            .cloned()
+    }
+
+    pub fn delete(&self, ns: &str, key: &str) -> crate::Result<bool> {
+        let mut g = self.inner.lock().unwrap();
+        let existed = g
+            .data
+            .get_mut(ns)
+            .map(|m| m.remove(key).is_some())
+            .unwrap_or(false);
+        if existed {
+            if let Some(w) = g.wal.as_mut() {
+                let rec = Json::obj()
+                    .set("op", Json::Str("del".into()))
+                    .set("ns", Json::Str(ns.into()))
+                    .set("key", Json::Str(key.into()));
+                writeln!(w, "{}", rec.dump())?;
+            }
+        }
+        Ok(existed)
+    }
+
+    /// All `(key, doc)` pairs in a namespace, key-ordered.
+    pub fn list(&self, ns: &str) -> Vec<(String, Json)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .data
+            .get(ns)
+            .map(|m| {
+                m.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+            })
+            .unwrap_or_default()
+    }
+
+    pub fn count(&self, ns: &str) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .data
+            .get(ns)
+            .map(|m| m.len())
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_delete_roundtrip() {
+        let s = MetaStore::in_memory();
+        s.put("exp", "e1", Json::parse(r#"{"name":"mnist"}"#).unwrap())
+            .unwrap();
+        assert_eq!(
+            s.get("exp", "e1").unwrap().str_field("name"),
+            Some("mnist")
+        );
+        assert!(s.delete("exp", "e1").unwrap());
+        assert!(!s.delete("exp", "e1").unwrap());
+        assert!(s.get("exp", "e1").is_none());
+    }
+
+    #[test]
+    fn namespaces_are_isolated() {
+        let s = MetaStore::in_memory();
+        s.put("a", "k", Json::Num(1.0)).unwrap();
+        s.put("b", "k", Json::Num(2.0)).unwrap();
+        assert_eq!(s.get("a", "k"), Some(Json::Num(1.0)));
+        assert_eq!(s.get("b", "k"), Some(Json::Num(2.0)));
+        assert_eq!(s.count("a"), 1);
+    }
+
+    #[test]
+    fn list_is_key_ordered() {
+        let s = MetaStore::in_memory();
+        for k in ["c", "a", "b"] {
+            s.put("ns", k, Json::Null).unwrap();
+        }
+        let keys: Vec<_> =
+            s.list("ns").into_iter().map(|(k, _)| k).collect();
+        assert_eq!(keys, ["a", "b", "c"]);
+    }
+
+    #[test]
+    fn wal_replay_restores_state() {
+        let dir = std::env::temp_dir()
+            .join(format!("submarine-kv-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("wal-replay.jsonl");
+        let _ = std::fs::remove_file(&path);
+        {
+            let s = MetaStore::open(&path).unwrap();
+            s.put("exp", "e1", Json::Num(1.0)).unwrap();
+            s.put("exp", "e2", Json::Num(2.0)).unwrap();
+            s.put("exp", "e1", Json::Num(3.0)).unwrap(); // overwrite
+            s.delete("exp", "e2").unwrap();
+        }
+        let s = MetaStore::open(&path).unwrap();
+        assert_eq!(s.get("exp", "e1"), Some(Json::Num(3.0)));
+        assert!(s.get("exp", "e2").is_none());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_wal_is_an_error() {
+        let dir = std::env::temp_dir()
+            .join(format!("submarine-kv-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("wal-corrupt.jsonl");
+        std::fs::write(&path, "not json\n").unwrap();
+        assert!(MetaStore::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,164 @@
+//! Metric time-series store (paper §3.2.2 Output: "logs and metrics are
+//! used to troubleshoot bugs and evaluate the quality of models", with
+//! "metric visualization ... in Submarine Workbench").
+//!
+//! Series are keyed by `(experiment, metric)`. The workbench UI is out of
+//! scope for a headless reproduction; [`MetricStore::sparkline`] renders
+//! the same at-a-glance curve in the terminal and CSV export feeds the
+//! benches' figures.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// One logged observation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MetricPoint {
+    pub step: u64,
+    pub value: f64,
+}
+
+/// Thread-safe metric sink.
+#[derive(Default)]
+pub struct MetricStore {
+    series: Mutex<BTreeMap<(String, String), Vec<MetricPoint>>>,
+}
+
+impl MetricStore {
+    pub fn new() -> MetricStore {
+        MetricStore::default()
+    }
+
+    pub fn log(&self, experiment: &str, metric: &str, step: u64, value: f64) {
+        self.series
+            .lock()
+            .unwrap()
+            .entry((experiment.to_string(), metric.to_string()))
+            .or_default()
+            .push(MetricPoint { step, value });
+    }
+
+    pub fn series(&self, experiment: &str, metric: &str) -> Vec<MetricPoint> {
+        self.series
+            .lock()
+            .unwrap()
+            .get(&(experiment.to_string(), metric.to_string()))
+            .cloned()
+            .unwrap_or_default()
+    }
+
+    pub fn metrics_of(&self, experiment: &str) -> Vec<String> {
+        self.series
+            .lock()
+            .unwrap()
+            .keys()
+            .filter(|(e, _)| e == experiment)
+            .map(|(_, m)| m.clone())
+            .collect()
+    }
+
+    pub fn last(&self, experiment: &str, metric: &str) -> Option<MetricPoint> {
+        self.series(experiment, metric).last().copied()
+    }
+
+    /// min/mean/max summary.
+    pub fn summary(
+        &self,
+        experiment: &str,
+        metric: &str,
+    ) -> Option<(f64, f64, f64)> {
+        let s = self.series(experiment, metric);
+        if s.is_empty() {
+            return None;
+        }
+        let (mut lo, mut hi, mut sum) = (f64::MAX, f64::MIN, 0.0);
+        for p in &s {
+            lo = lo.min(p.value);
+            hi = hi.max(p.value);
+            sum += p.value;
+        }
+        Some((lo, sum / s.len() as f64, hi))
+    }
+
+    /// Terminal sparkline of the series (workbench §3.1.3 stand-in).
+    pub fn sparkline(&self, experiment: &str, metric: &str, width: usize)
+        -> String
+    {
+        const BARS: [char; 8] =
+            ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let s = self.series(experiment, metric);
+        if s.is_empty() {
+            return String::new();
+        }
+        let width = width.max(1).min(s.len());
+        // Downsample by bucketing.
+        let bucket = (s.len() as f64 / width as f64).ceil() as usize;
+        let vals: Vec<f64> = s
+            .chunks(bucket)
+            .map(|c| c.iter().map(|p| p.value).sum::<f64>() / c.len() as f64)
+            .collect();
+        let lo = vals.iter().cloned().fold(f64::MAX, f64::min);
+        let hi = vals.iter().cloned().fold(f64::MIN, f64::max);
+        let span = (hi - lo).max(1e-12);
+        vals.iter()
+            .map(|v| BARS[(((v - lo) / span) * 7.0).round() as usize])
+            .collect()
+    }
+
+    /// CSV export (`step,value` rows) for the bench harness figures.
+    pub fn to_csv(&self, experiment: &str, metric: &str) -> String {
+        let mut out = String::from("step,value\n");
+        for p in self.series(experiment, metric) {
+            out.push_str(&format!("{},{}\n", p.step, p.value));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_and_read_back() {
+        let m = MetricStore::new();
+        m.log("e1", "loss", 0, 1.0);
+        m.log("e1", "loss", 1, 0.5);
+        m.log("e1", "auc", 1, 0.7);
+        assert_eq!(m.series("e1", "loss").len(), 2);
+        assert_eq!(m.last("e1", "loss").unwrap().value, 0.5);
+        assert_eq!(m.metrics_of("e1"), vec!["auc", "loss"]);
+    }
+
+    #[test]
+    fn summary_stats() {
+        let m = MetricStore::new();
+        for (i, v) in [2.0, 4.0, 6.0].iter().enumerate() {
+            m.log("e", "x", i as u64, *v);
+        }
+        let (lo, mean, hi) = m.summary("e", "x").unwrap();
+        assert_eq!((lo, mean, hi), (2.0, 4.0, 6.0));
+        assert!(m.summary("e", "nope").is_none());
+    }
+
+    #[test]
+    fn sparkline_shape() {
+        let m = MetricStore::new();
+        for i in 0..100 {
+            m.log("e", "loss", i, 1.0 / (1.0 + i as f64));
+        }
+        let sl = m.sparkline("e", "loss", 10);
+        assert_eq!(sl.chars().count(), 10);
+        // decreasing curve: first bucket highest bar, last lowest
+        let first = sl.chars().next().unwrap();
+        let last = sl.chars().last().unwrap();
+        assert_eq!(first, '█');
+        assert_eq!(last, '▁');
+    }
+
+    #[test]
+    fn csv_export() {
+        let m = MetricStore::new();
+        m.log("e", "loss", 5, 0.25);
+        assert_eq!(m.to_csv("e", "loss"), "step,value\n5,0.25\n");
+    }
+}

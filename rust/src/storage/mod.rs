@@ -1,0 +1,14 @@
+//! Metadata and metric persistence (DESIGN.md S5).
+//!
+//! Paper §3.2.2: "the experiment manager ... persists the experiment
+//! metadata in a database so that experiments become easy to compare and
+//! reproducible."  [`MetaStore`] is that database: a namespaced KV store
+//! over [`crate::util::json::Json`] documents with an append-only WAL so
+//! state survives restarts.  [`MetricStore`] holds time-series metrics
+//! (loss curves etc.) and renders the workbench-style summaries.
+
+pub mod kv;
+pub mod metrics;
+
+pub use kv::MetaStore;
+pub use metrics::{MetricPoint, MetricStore};

@@ -1,0 +1,358 @@
+//! Predefined Template Service (paper §3.2.3, Fig. 5, Listing 4).
+//!
+//! Templates are experiment specs with `{{param}}` placeholders plus a
+//! parameter list (name, default, required).  Clients register templates;
+//! citizen data scientists instantiate them by supplying only parameter
+//! values — "users can run experiments without writing one line of code."
+
+use crate::experiment::spec::ExperimentSpec;
+use crate::storage::MetaStore;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+const NS: &str = "template";
+
+/// One declared template parameter (Listing 4 `parameters` entries).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TemplateParam {
+    pub name: String,
+    pub default: Option<String>,
+    pub required: bool,
+}
+
+/// A parsed predefined template.
+#[derive(Debug, Clone)]
+pub struct Template {
+    pub name: String,
+    pub author: String,
+    pub description: String,
+    pub parameters: Vec<TemplateParam>,
+    /// The experimentSpec subtree, with `{{placeholders}}` intact.
+    pub experiment_spec: Json,
+}
+
+impl Template {
+    /// Parse the Listing-4 JSON shape.
+    pub fn parse(text: &str) -> crate::Result<Template> {
+        let j = Json::parse(text)?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Template> {
+        let name = j
+            .str_field("name")
+            .ok_or_else(|| bad("template name required"))?
+            .to_string();
+        let mut parameters = Vec::new();
+        if let Some(arr) = j.get("parameters").and_then(Json::as_arr) {
+            for p in arr {
+                let pname = p
+                    .str_field("name")
+                    .ok_or_else(|| bad("parameter name required"))?;
+                let default = p.get("value").map(|v| match v {
+                    Json::Str(s) => s.clone(),
+                    other => other.dump(),
+                });
+                parameters.push(TemplateParam {
+                    name: pname.to_string(),
+                    default,
+                    required: p
+                        .get("required")
+                        .and_then(Json::as_bool)
+                        .unwrap_or(false),
+                });
+            }
+        }
+        let experiment_spec = j
+            .get("experimentSpec")
+            .cloned()
+            .ok_or_else(|| bad("experimentSpec required"))?;
+        Ok(Template {
+            name,
+            author: j.str_field("author").unwrap_or("").to_string(),
+            description: j
+                .str_field("description")
+                .unwrap_or("")
+                .to_string(),
+            parameters,
+            experiment_spec,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let params: Vec<Json> = self
+            .parameters
+            .iter()
+            .map(|p| {
+                let mut o = Json::obj()
+                    .set("name", Json::Str(p.name.clone()))
+                    .set("required", Json::Bool(p.required));
+                if let Some(d) = &p.default {
+                    o = o.set("value", Json::Str(d.clone()));
+                }
+                o
+            })
+            .collect();
+        Json::obj()
+            .set("name", Json::Str(self.name.clone()))
+            .set("author", Json::Str(self.author.clone()))
+            .set("description", Json::Str(self.description.clone()))
+            .set("parameters", Json::Arr(params))
+            .set("experimentSpec", self.experiment_spec.clone())
+    }
+
+    /// Substitute `{{param}}` placeholders and parse the result into an
+    /// [`ExperimentSpec`].  Unknown-parameter and missing-required errors
+    /// are reported up front.
+    pub fn instantiate(
+        &self,
+        values: &BTreeMap<String, String>,
+    ) -> crate::Result<ExperimentSpec> {
+        // validate inputs
+        for k in values.keys() {
+            if !self.parameters.iter().any(|p| &p.name == k) {
+                return Err(bad(&format!(
+                    "unknown template parameter {k:?}"
+                )));
+            }
+        }
+        let mut resolved: BTreeMap<String, String> = BTreeMap::new();
+        for p in &self.parameters {
+            match values.get(&p.name).or(p.default.as_ref()) {
+                Some(v) => {
+                    resolved.insert(p.name.clone(), v.clone());
+                }
+                None if p.required => {
+                    return Err(bad(&format!(
+                        "missing required parameter {:?}",
+                        p.name
+                    )))
+                }
+                None => {}
+            }
+        }
+        let substituted = substitute(&self.experiment_spec, &resolved)?;
+        ExperimentSpec::from_json(&substituted)
+    }
+}
+
+/// Recursively replace `{{name}}` inside every string value.
+fn substitute(
+    j: &Json,
+    values: &BTreeMap<String, String>,
+) -> crate::Result<Json> {
+    Ok(match j {
+        Json::Str(s) => Json::Str(substitute_str(s, values)?),
+        Json::Arr(a) => Json::Arr(
+            a.iter()
+                .map(|v| substitute(v, values))
+                .collect::<crate::Result<_>>()?,
+        ),
+        Json::Obj(o) => Json::Obj(
+            o.iter()
+                .map(|(k, v)| Ok((k.clone(), substitute(v, values)?)))
+                .collect::<crate::Result<_>>()?,
+        ),
+        other => other.clone(),
+    })
+}
+
+fn substitute_str(
+    s: &str,
+    values: &BTreeMap<String, String>,
+) -> crate::Result<String> {
+    let mut out = String::with_capacity(s.len());
+    let mut rest = s;
+    while let Some(start) = rest.find("{{") {
+        out.push_str(&rest[..start]);
+        let after = &rest[start + 2..];
+        let end = after.find("}}").ok_or_else(|| {
+            bad(&format!("unclosed placeholder in {s:?}"))
+        })?;
+        let key = after[..end].trim();
+        let val = values.get(key).ok_or_else(|| {
+            bad(&format!("no value for placeholder {key:?}"))
+        })?;
+        out.push_str(val);
+        rest = &after[end + 2..];
+    }
+    out.push_str(rest);
+    Ok(out)
+}
+
+fn bad(msg: &str) -> crate::SubmarineError {
+    crate::SubmarineError::InvalidSpec(msg.to_string())
+}
+
+/// The template manager of Fig. 5: registration + lookup over the
+/// metadata store.
+pub struct TemplateManager {
+    store: Arc<MetaStore>,
+}
+
+impl TemplateManager {
+    pub fn new(store: Arc<MetaStore>) -> TemplateManager {
+        TemplateManager { store }
+    }
+
+    pub fn register(&self, template: &Template) -> crate::Result<()> {
+        if self.store.get(NS, &template.name).is_some() {
+            return Err(crate::SubmarineError::AlreadyExists(format!(
+                "template {}",
+                template.name
+            )));
+        }
+        self.store.put(NS, &template.name, template.to_json())
+    }
+
+    pub fn get(&self, name: &str) -> crate::Result<Template> {
+        let j = self.store.get(NS, name).ok_or_else(|| {
+            crate::SubmarineError::NotFound(format!("template {name}"))
+        })?;
+        Template::from_json(&j)
+    }
+
+    pub fn list(&self) -> Vec<String> {
+        self.store.list(NS).into_iter().map(|(k, _)| k).collect()
+    }
+
+    pub fn delete(&self, name: &str) -> crate::Result<()> {
+        if !self.store.delete(NS, name)? {
+            return Err(crate::SubmarineError::NotFound(format!(
+                "template {name}"
+            )));
+        }
+        Ok(())
+    }
+
+    /// One-call UX for citizen data scientists: look up + instantiate.
+    pub fn instantiate(
+        &self,
+        name: &str,
+        values: &BTreeMap<String, String>,
+    ) -> crate::Result<ExperimentSpec> {
+        self.get(name)?.instantiate(values)
+    }
+}
+
+/// The paper's Listing-4 template, usable as a built-in.
+pub fn tf_mnist_template() -> Template {
+    Template::parse(
+        r#"{
+  "name": "tf-mnist-template",
+  "author": "Submarine",
+  "description": "A template for tf-mnist",
+  "parameters": [
+    {"name": "learning_rate", "value": "0.001", "required": true},
+    {"name": "batch_size", "value": "256", "required": true}
+  ],
+  "experimentSpec": {
+    "meta": {
+      "cmd": "python mnist.py --log_dir=/train/log --learning_rate={{learning_rate}} --batch_size={{batch_size}}",
+      "name": "tf-mnist",
+      "framework": "TensorFlow",
+      "namespace": "default"
+    },
+    "spec": {
+      "Ps":     {"replicas": 1, "resources": "cpu=2,memory=2G"},
+      "Worker": {"replicas": 4, "resources": "cpu=4,gpu=1,memory=4G"}
+    },
+    "environment": {"image": "submarine:tf-mnist"},
+    "workload": {"model": "mnist_mlp", "steps": 100,
+                 "lr": "{{learning_rate}}"}
+  }
+}"#,
+    )
+    .expect("built-in template must parse")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vals(pairs: &[(&str, &str)]) -> BTreeMap<String, String> {
+        pairs
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect()
+    }
+
+    #[test]
+    fn listing4_parses_and_instantiates() {
+        let t = tf_mnist_template();
+        assert_eq!(t.name, "tf-mnist-template");
+        assert_eq!(t.parameters.len(), 2);
+        let spec = t
+            .instantiate(&vals(&[
+                ("learning_rate", "0.01"),
+                ("batch_size", "128"),
+            ]))
+            .unwrap();
+        assert!(spec.meta.cmd.contains("--learning_rate=0.01"));
+        assert!(spec.meta.cmd.contains("--batch_size=128"));
+        assert_eq!(spec.total_containers(), 5);
+        // workload lr flows through the placeholder too
+        assert!((spec.workload.unwrap().lr - 0.01).abs() < 1e-6);
+    }
+
+    #[test]
+    fn defaults_fill_missing_values() {
+        let t = tf_mnist_template();
+        let spec = t.instantiate(&BTreeMap::new()).unwrap();
+        assert!(spec.meta.cmd.contains("--learning_rate=0.001"));
+    }
+
+    #[test]
+    fn unknown_parameter_rejected() {
+        let t = tf_mnist_template();
+        let err = t.instantiate(&vals(&[("nope", "1")]));
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn missing_required_without_default_rejected() {
+        let t = Template::parse(
+            r#"{"name":"t","parameters":[{"name":"x","required":true}],
+                "experimentSpec":{"meta":{"name":"n-{{x}}"},
+                "spec":{"W":{"replicas":1,"resources":"cpu=1"}}}}"#,
+        )
+        .unwrap();
+        assert!(t.instantiate(&BTreeMap::new()).is_err());
+        assert!(t.instantiate(&vals(&[("x", "1")])).is_ok());
+    }
+
+    #[test]
+    fn unclosed_placeholder_errors() {
+        let t = Template::parse(
+            r#"{"name":"t","parameters":[{"name":"x","value":"1"}],
+                "experimentSpec":{"meta":{"name":"n-{{x"},
+                "spec":{"W":{"replicas":1,"resources":"cpu=1"}}}}"#,
+        )
+        .unwrap();
+        assert!(t.instantiate(&vals(&[("x", "1")])).is_err());
+    }
+
+    #[test]
+    fn manager_register_get_list_delete() {
+        let m = TemplateManager::new(Arc::new(MetaStore::in_memory()));
+        m.register(&tf_mnist_template()).unwrap();
+        assert!(m.register(&tf_mnist_template()).is_err()); // dup
+        assert_eq!(m.list(), vec!["tf-mnist-template"]);
+        let spec = m
+            .instantiate("tf-mnist-template", &BTreeMap::new())
+            .unwrap();
+        assert_eq!(spec.meta.name, "tf-mnist");
+        m.delete("tf-mnist-template").unwrap();
+        assert!(m.get("tf-mnist-template").is_err());
+    }
+
+    #[test]
+    fn instantiation_is_idempotent() {
+        let t = tf_mnist_template();
+        let v = vals(&[("learning_rate", "0.5"), ("batch_size", "64")]);
+        let a = t.instantiate(&v).unwrap();
+        let b = t.instantiate(&v).unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,183 @@
+//! Bench harness (DESIGN.md S4): criterion-style warmup + timed iterations
+//! with mean/p50/p95 reporting, plus an aligned table printer used by every
+//! `rust/benches/*.rs` target to regenerate the paper's tables and claims.
+//! (The offline registry lacks `criterion`; methodology is the same.)
+
+use crate::util::clock::Stopwatch;
+
+/// Timing statistics over n iterations (seconds).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    fn from_samples(mut samples: Vec<f64>) -> Stats {
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let pct = |p: f64| samples[((n as f64 * p) as usize).min(n - 1)];
+        Stats {
+            iters: n,
+            mean,
+            p50: pct(0.50),
+            p95: pct(0.95),
+            min: samples[0],
+            max: samples[n - 1],
+        }
+    }
+
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean
+    }
+}
+
+/// Time `f` with warmup. `min_iters`/`min_secs` bound total effort.
+pub fn bench(min_iters: usize, min_secs: f64, mut f: impl FnMut()) -> Stats {
+    // Warmup: a few runs to populate caches / JIT the PJRT executable.
+    for _ in 0..2.min(min_iters) {
+        f();
+    }
+    let mut samples = Vec::with_capacity(min_iters);
+    let total = Stopwatch::start();
+    loop {
+        let sw = Stopwatch::start();
+        f();
+        samples.push(sw.elapsed_secs());
+        if samples.len() >= min_iters && total.elapsed_secs() >= min_secs {
+            break;
+        }
+        if total.elapsed_secs() > min_secs * 20.0 + 30.0 {
+            break; // hard cap for very slow subjects
+        }
+    }
+    Stats::from_samples(samples)
+}
+
+/// Human duration formatting.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+/// Aligned ASCII table printer for bench reports.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = width[i]));
+            }
+            s
+        };
+        let sep = {
+            let mut s = String::from("|");
+            for w in &width {
+                s.push_str(&format!("{}|", "-".repeat(w + 2)));
+            }
+            s
+        };
+        let mut out = format!("\n== {} ==\n", self.title);
+        out.push_str(&line(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_stats() {
+        let s = bench(5, 0.0, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.iters >= 5);
+        assert!(s.min <= s.p50 && s.p50 <= s.max);
+        assert!(s.mean > 0.0);
+    }
+
+    #[test]
+    fn throughput_inverts_mean() {
+        let s = Stats {
+            iters: 1,
+            mean: 0.5,
+            p50: 0.5,
+            p95: 0.5,
+            min: 0.5,
+            max: 0.5,
+        };
+        assert!((s.throughput(100.0) - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["longer-name".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("== demo =="));
+        assert!(r.contains("longer-name"));
+        // all data lines same width
+        let lines: Vec<_> =
+            r.lines().filter(|l| l.starts_with('|')).collect();
+        assert!(lines.windows(2).all(|w| w[0].len() == w[1].len()));
+    }
+
+    #[test]
+    fn fmt_secs_scales() {
+        assert_eq!(fmt_secs(2.0), "2.00s");
+        assert_eq!(fmt_secs(0.002), "2.00ms");
+        assert_eq!(fmt_secs(2e-6), "2.0us");
+    }
+}

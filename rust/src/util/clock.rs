@@ -1,0 +1,137 @@
+//! Time sources: a virtual clock for the discrete-event cluster simulator
+//! and a monotonic wall clock for real measurements (DESIGN.md S2).
+//!
+//! Simulated components never read the wall clock; they take a
+//! [`SimClock`] so experiments are deterministic and can run thousands of
+//! simulated seconds in milliseconds of real time.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Virtual time in microseconds since simulation start.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+
+    pub fn from_micros(us: u64) -> SimTime {
+        SimTime(us)
+    }
+    pub fn from_millis(ms: u64) -> SimTime {
+        SimTime(ms * 1_000)
+    }
+    pub fn from_secs_f64(s: f64) -> SimTime {
+        SimTime((s * 1e6).round().max(0.0) as u64)
+    }
+    pub fn as_micros(self) -> u64 {
+        self.0
+    }
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+    pub fn saturating_sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(rhs.0))
+    }
+}
+
+impl std::ops::Add for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0 + rhs.0)
+    }
+}
+
+impl std::ops::AddAssign for SimTime {
+    fn add_assign(&mut self, rhs: SimTime) {
+        self.0 += rhs.0;
+    }
+}
+
+/// Shared, thread-safe virtual clock advanced by the event loop.
+#[derive(Debug, Clone, Default)]
+pub struct SimClock {
+    now_us: Arc<AtomicU64>,
+}
+
+impl SimClock {
+    pub fn new() -> SimClock {
+        SimClock::default()
+    }
+    pub fn now(&self) -> SimTime {
+        SimTime(self.now_us.load(Ordering::Acquire))
+    }
+    /// Advance to `t` (monotonic: earlier times are ignored).
+    pub fn advance_to(&self, t: SimTime) {
+        self.now_us.fetch_max(t.0, Ordering::AcqRel);
+    }
+    pub fn advance_by(&self, d: SimTime) -> SimTime {
+        SimTime(self.now_us.fetch_add(d.0, Ordering::AcqRel) + d.0)
+    }
+}
+
+/// Monotonic wall-clock stopwatch for real measurements.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch {
+            start: Instant::now(),
+        }
+    }
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+    pub fn elapsed_micros(&self) -> u64 {
+        self.start.elapsed().as_micros() as u64
+    }
+}
+
+/// Milliseconds since the unix epoch (for persisted metadata timestamps).
+pub fn unix_millis() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simtime_conversions() {
+        assert_eq!(SimTime::from_millis(3).as_micros(), 3_000);
+        assert!((SimTime::from_secs_f64(1.5).as_secs_f64() - 1.5).abs()
+            < 1e-9);
+    }
+
+    #[test]
+    fn clock_is_monotonic() {
+        let c = SimClock::new();
+        c.advance_to(SimTime(100));
+        c.advance_to(SimTime(50)); // ignored
+        assert_eq!(c.now(), SimTime(100));
+        c.advance_by(SimTime(10));
+        assert_eq!(c.now(), SimTime(110));
+    }
+
+    #[test]
+    fn clock_clones_share_state() {
+        let c = SimClock::new();
+        let c2 = c.clone();
+        c.advance_to(SimTime(42));
+        assert_eq!(c2.now(), SimTime(42));
+    }
+
+    #[test]
+    fn stopwatch_advances() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(sw.elapsed_secs() > 0.0);
+    }
+}

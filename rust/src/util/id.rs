@@ -1,0 +1,41 @@
+//! Unique-id generation for experiments, containers, models, etc.
+//! Format mirrors Submarine's: `experiment-<epoch-millis>-<seq>`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static SEQ: AtomicU64 = AtomicU64::new(1);
+
+/// Next id with the given prefix, unique within this process.
+pub fn next(prefix: &str) -> String {
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    format!(
+        "{prefix}-{}-{seq:04}",
+        crate::util::clock::unix_millis()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn ids_are_unique_and_prefixed() {
+        let a = super::next("experiment");
+        let b = super::next("experiment");
+        assert_ne!(a, b);
+        assert!(a.starts_with("experiment-"));
+    }
+
+    #[test]
+    fn ids_unique_across_threads() {
+        let handles: Vec<_> = (0..8)
+            .map(|_| std::thread::spawn(|| {
+                (0..100).map(|_| super::next("t")).collect::<Vec<_>>()
+            }))
+            .collect();
+        let mut all: Vec<String> =
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        let n = all.len();
+        all.sort();
+        all.dedup();
+        assert_eq!(all.len(), n);
+    }
+}

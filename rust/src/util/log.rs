@@ -1,0 +1,146 @@
+//! Leveled logger (DESIGN.md S2). The offline registry lacks `env_logger`,
+//! so this is a small self-contained implementation: level filtering via
+//! `SUBMARINE_LOG` (error|warn|info|debug|trace), timestamps, and a
+//! capture mode used by tests to assert on emitted events.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+    fn from_env() -> Level {
+        match std::env::var("SUBMARINE_LOG").as_deref() {
+            Ok("error") => Level::Error,
+            Ok("warn") => Level::Warn,
+            Ok("debug") => Level::Debug,
+            Ok("trace") => Level::Trace,
+            _ => Level::Info,
+        }
+    }
+}
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+static CAPTURE: Mutex<Option<Vec<String>>> = Mutex::new(None);
+
+fn max_level() -> Level {
+    let raw = MAX_LEVEL.load(Ordering::Relaxed);
+    if raw == u8::MAX {
+        let lvl = Level::from_env();
+        MAX_LEVEL.store(lvl as u8, Ordering::Relaxed);
+        lvl
+    } else {
+        match raw {
+            0 => Level::Error,
+            1 => Level::Warn,
+            2 => Level::Info,
+            3 => Level::Debug,
+            _ => Level::Trace,
+        }
+    }
+}
+
+/// Override the level programmatically (tests, CLI `--verbose`).
+pub fn set_level(level: Level) {
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Begin capturing log lines instead of printing (tests).
+pub fn capture_start() {
+    *CAPTURE.lock().unwrap() = Some(Vec::new());
+}
+
+/// Stop capturing and return the captured lines.
+pub fn capture_take() -> Vec<String> {
+    CAPTURE.lock().unwrap().take().unwrap_or_default()
+}
+
+pub fn log(level: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if level > max_level() {
+        return;
+    }
+    let line = format!(
+        "[{:>10.3}s {} {}] {}",
+        crate::util::clock::unix_millis() as f64 / 1000.0 % 100_000.0,
+        level.name(),
+        target,
+        msg
+    );
+    let mut cap = CAPTURE.lock().unwrap();
+    if let Some(buf) = cap.as_mut() {
+        buf.push(line);
+    } else {
+        eprintln!("{line}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Info, $target,
+                               format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warnlog {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn, $target,
+                               format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! errorlog {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Error, $target,
+                               format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debuglog {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Debug, $target,
+                               format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capture_and_level_filtering() {
+        set_level(Level::Info);
+        capture_start();
+        log(Level::Info, "test", format_args!("hello {}", 1));
+        log(Level::Debug, "test", format_args!("hidden"));
+        let lines = capture_take();
+        assert_eq!(lines.len(), 1);
+        assert!(lines[0].contains("hello 1"));
+        assert!(lines[0].contains("INFO"));
+    }
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Trace);
+        assert_eq!(Level::Warn.name(), "WARN");
+    }
+}

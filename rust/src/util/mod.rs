@@ -1,0 +1,15 @@
+//! Infrastructure substrates: JSON, RNG, clocks, logging, thread pool,
+//! property-testing and bench harnesses (DESIGN.md S1–S4).
+//!
+//! These exist because the offline crate registry for this build only
+//! carries `xla`/`anyhow`/`thiserror`; everything else Submarine-RS needs
+//! is implemented here, std-only.
+
+pub mod bench;
+pub mod clock;
+pub mod id;
+pub mod json;
+pub mod log;
+pub mod prop;
+pub mod rng;
+pub mod threadpool;

@@ -1,0 +1,181 @@
+//! Property-testing mini-framework (DESIGN.md S3).
+//!
+//! The offline registry lacks `proptest`, so this module provides the same
+//! methodology in ~150 lines: seeded generative cases with input shrinking
+//! on failure.  Used by the scheduler/coordinator invariant tests
+//! (`rust/tests/prop_*.rs`): no oversubscription, gang all-or-nothing,
+//! queue capacity bounds, JSON round-trip, template idempotence.
+//!
+//! ```ignore
+//! check(100, |g| {
+//!     let xs = g.vec(0..50, |g| g.u64(0, 1000));
+//!     let mut sorted = xs.clone();
+//!     sorted.sort();
+//!     prop_assert!(sorted.len() == xs.len(), "lost elements");
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Failure raised by a property; carries a human-readable cause.
+#[derive(Debug, Clone)]
+pub struct PropFail(pub String);
+
+pub type PropResult = Result<(), PropFail>;
+
+/// Assert inside a property.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::util::prop::PropFail(format!($($arg)*)));
+        }
+    };
+}
+
+/// Assert equality inside a property.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err($crate::util::prop::PropFail(format!(
+                "{:?} != {:?}", a, b
+            )));
+        }
+    }};
+}
+
+/// Generator handed to each property case: a seeded RNG plus a trace of
+/// sizes so failing cases can be re-run smaller (shrinking).
+pub struct Gen {
+    rng: Rng,
+    /// Multiplier in (0, 1] applied to collection sizes while shrinking.
+    scale: f64,
+}
+
+impl Gen {
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.range(lo, hi.max(lo + 1))
+    }
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64(lo as u64, hi as u64) as usize
+    }
+    pub fn f64(&mut self) -> f64 {
+        self.rng.f64()
+    }
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        self.rng.choose(items)
+    }
+    pub fn string(&mut self, max_len: usize) -> String {
+        let len = self.usize(0, max_len + 1);
+        (0..len)
+            .map(|_| {
+                let c = self.u64(32, 127) as u8 as char;
+                if c == '"' || c == '\\' {
+                    'x'
+                } else {
+                    c
+                }
+            })
+            .collect()
+    }
+    /// A vector whose length is scaled down during shrinking.
+    pub fn vec<T>(
+        &mut self,
+        len_range: std::ops::Range<usize>,
+        mut item: impl FnMut(&mut Gen) -> T,
+    ) -> Vec<T> {
+        let hi = ((len_range.end as f64) * self.scale).ceil() as usize;
+        let hi = hi.max(len_range.start + 1);
+        let len = self.usize(len_range.start, hi);
+        (0..len).map(|_| item(self)).collect()
+    }
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of `prop`. On failure, retry the failing seed
+/// with progressively smaller collection scales to report a smaller
+/// counterexample, then panic with the seed and cause.
+pub fn check(cases: u64, prop: impl Fn(&mut Gen) -> PropResult) {
+    check_seeded(0xC0FFEE, cases, prop)
+}
+
+/// Like [`check`] with an explicit base seed (reproduce failures).
+pub fn check_seeded(
+    base_seed: u64,
+    cases: u64,
+    prop: impl Fn(&mut Gen) -> PropResult,
+) {
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case.wrapping_mul(0x9E3779B9));
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            scale: 1.0,
+        };
+        if let Err(first) = prop(&mut g) {
+            // Shrink: re-run the same seed with smaller collections and
+            // report the smallest still-failing configuration.
+            let mut best = (1.0f64, first);
+            for &scale in &[0.5, 0.25, 0.1, 0.05] {
+                let mut g = Gen {
+                    rng: Rng::new(seed),
+                    scale,
+                };
+                if let Err(f) = prop(&mut g) {
+                    best = (scale, f);
+                }
+            }
+            panic!(
+                "property failed (seed={seed:#x}, case={case}, \
+                 shrink_scale={}): {}",
+                best.0, best.1 .0
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(50, |g| {
+            let a = g.u64(0, 100);
+            let b = g.u64(0, 100);
+            prop_assert!(a + b >= a, "overflow?");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(50, |g| {
+            let v = g.vec(0..20, |g| g.u64(0, 10));
+            prop_assert!(v.len() < 5, "vector too long: {}", v.len());
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn generators_respect_ranges() {
+        check(100, |g| {
+            let x = g.usize(3, 9);
+            prop_assert!((3..9).contains(&x), "x={x}");
+            let s = g.string(16);
+            prop_assert!(s.len() <= 16, "len={}", s.len());
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,150 @@
+//! Fixed-size thread pool (DESIGN.md S2). Offline registry lacks `tokio` /
+//! `rayon`, so the HTTP server and the distributed-training driver share
+//! this std-only pool: bounded task queue, graceful shutdown on drop, and
+//! a `scope`-style join helper for fork/join workloads.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Task),
+    Shutdown,
+}
+
+/// A fixed-size worker pool.
+pub struct ThreadPool {
+    tx: mpsc::Sender<Msg>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize) -> ThreadPool {
+        let size = size.max(1);
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("submarine-pool-{i}"))
+                    .spawn(move || loop {
+                        let msg = { rx.lock().unwrap().recv() };
+                        match msg {
+                            Ok(Msg::Run(task)) => task(),
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { tx, workers, size }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a task; never blocks.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .send(Msg::Run(Box::new(f)))
+            .expect("pool has shut down");
+    }
+
+    /// Run `jobs` to completion on the pool and collect results in order.
+    pub fn map<T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let n = jobs.len();
+        let results: Arc<(Mutex<Vec<Option<T>>>, Condvar)> = Arc::new((
+            Mutex::new((0..n).map(|_| None).collect()),
+            Condvar::new(),
+        ));
+        for (i, job) in jobs.into_iter().enumerate() {
+            let results = Arc::clone(&results);
+            self.execute(move || {
+                let out = job();
+                let (lock, cv) = &*results;
+                lock.lock().unwrap()[i] = Some(out);
+                cv.notify_all();
+            });
+        }
+        let (lock, cv) = &*results;
+        let mut guard = lock.lock().unwrap();
+        while guard.iter().any(|r| r.is_none()) {
+            guard = cv.wait(guard).unwrap();
+        }
+        guard.iter_mut().map(|r| r.take().unwrap()).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_tasks() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let done = Arc::new((Mutex::new(0usize), Condvar::new()));
+        for _ in 0..100 {
+            let counter = Arc::clone(&counter);
+            let done = Arc::clone(&done);
+            pool.execute(move || {
+                counter.fetch_add(1, Ordering::SeqCst);
+                let (lock, cv) = &*done;
+                *lock.lock().unwrap() += 1;
+                cv.notify_all();
+            });
+        }
+        let (lock, cv) = &*done;
+        let mut g = lock.lock().unwrap();
+        while *g < 100 {
+            g = cv.wait(g).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let jobs: Vec<_> = (0..20)
+            .map(|i| move || i * i)
+            .collect();
+        let out = pool.map(jobs);
+        assert_eq!(out, (0..20).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| std::thread::sleep(
+            std::time::Duration::from_millis(5)));
+        drop(pool); // must not hang or panic
+    }
+
+    #[test]
+    fn zero_size_clamped_to_one() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.size(), 1);
+        assert_eq!(pool.map(vec![|| 42]), vec![42]);
+    }
+}

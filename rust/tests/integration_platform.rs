@@ -1,0 +1,260 @@
+//! Integration tests over the full service stack: REST server on a real
+//! TCP port, SDK client, local PJRT runtime, template/environment/model
+//! services — the paper's Fig. 1 composed end to end.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use submarine::experiment::monitor::ExperimentMonitor;
+use submarine::experiment::spec::{ExperimentSpec, ExperimentStatus};
+use submarine::httpd::server::{Server, Services};
+use submarine::orchestrator::local::LocalSubmitter;
+use submarine::orchestrator::sim_submitter::SimSubmitter;
+use submarine::orchestrator::Submitter;
+use submarine::sdk::ExperimentClient;
+use submarine::storage::{MetaStore, MetricStore};
+use submarine::util::clock::SimTime;
+
+fn artifacts() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts().join("manifest.json").exists()
+}
+
+/// Full local-runtime stack behind a TCP server.
+fn local_stack() -> (Arc<Services>, Arc<LocalSubmitter>) {
+    let store = Arc::new(MetaStore::in_memory());
+    let monitor = Arc::new(ExperimentMonitor::new());
+    let metrics = Arc::new(MetricStore::new());
+    let submitter = Arc::new(LocalSubmitter::new(
+        Arc::clone(&monitor),
+        Arc::clone(&metrics),
+        &artifacts(),
+    ));
+    let services = Arc::new(Services::with_parts(
+        store,
+        monitor,
+        metrics,
+        Arc::clone(&submitter) as Arc<dyn Submitter>,
+    ));
+    (services, submitter)
+}
+
+#[test]
+fn rest_roundtrip_trains_real_model() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let (services, submitter) = local_stack();
+    let server = Arc::new(Server::bind(services, 0, None).unwrap());
+    let port = server.port();
+    let stop = server.stopper();
+    let handle = Arc::clone(&server).serve_background();
+
+    let client = ExperimentClient::new("127.0.0.1", port);
+    let spec = ExperimentSpec::parse(
+        r#"{
+          "meta": {"name": "it-mnist"},
+          "spec": {"Worker": {"replicas": 1, "resources": "cpu=1"}},
+          "workload": {"model": "mnist_mlp", "steps": 20, "lr": 0.1}
+        }"#,
+    )
+    .unwrap();
+    let id = client.create_experiment(&spec).unwrap();
+    let st = client
+        .wait(&id, std::time::Duration::from_secs(600))
+        .unwrap();
+    assert_eq!(st, ExperimentStatus::Succeeded);
+
+    let curve = client.metrics(&id, "loss").unwrap();
+    assert_eq!(curve.len(), 20);
+    assert!(curve.last().unwrap().1 < curve[0].1, "loss must drop");
+
+    submitter.join_all();
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let _ = std::net::TcpStream::connect(("127.0.0.1", port));
+    handle.join().unwrap();
+}
+
+#[test]
+fn zero_code_template_flow_over_rest() {
+    if !have_artifacts() {
+        return;
+    }
+    let (services, submitter) = local_stack();
+    let server = Arc::new(Server::bind(services, 0, None).unwrap());
+    let port = server.port();
+    let stop = server.stopper();
+    let handle = Arc::clone(&server).serve_background();
+
+    let client = ExperimentClient::new("127.0.0.1", port);
+    client
+        .register_template(&submarine::template::tf_mnist_template())
+        .unwrap();
+    let mut params = BTreeMap::new();
+    params.insert("learning_rate".into(), "0.1".into());
+    params.insert("batch_size".into(), "128".into());
+    let id = client
+        .submit_template("tf-mnist-template", &params)
+        .unwrap();
+    let st = client
+        .wait(&id, std::time::Duration::from_secs(600))
+        .unwrap();
+    assert_eq!(st, ExperimentStatus::Succeeded);
+
+    submitter.join_all();
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let _ = std::net::TcpStream::connect(("127.0.0.1", port));
+    handle.join().unwrap();
+}
+
+#[test]
+fn kill_interrupts_local_training() {
+    if !have_artifacts() {
+        return;
+    }
+    let (services, submitter) = local_stack();
+    let spec = ExperimentSpec::parse(
+        r#"{
+          "meta": {"name": "long"},
+          "spec": {"Worker": {"replicas": 1, "resources": "cpu=1"}},
+          "workload": {"model": "deepfm", "steps": 100000, "lr": 0.1}
+        }"#,
+    )
+    .unwrap();
+    let id = services.experiments.submit(&spec).unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    services.experiments.kill(&id).unwrap();
+    submitter.join_all(); // must terminate promptly (kill-checked chunks)
+    assert_eq!(
+        services.experiments.status(&id),
+        ExperimentStatus::Killed
+    );
+}
+
+#[test]
+fn sim_submitter_stack_runs_linkedin_shape() {
+    // Fig. 4 with the YARN submitter against the cluster sim (no PJRT
+    // needed): 20 gang experiments on a 10-node cluster.
+    let store = Arc::new(MetaStore::in_memory());
+    let monitor = Arc::new(ExperimentMonitor::new());
+    let metrics = Arc::new(MetricStore::new());
+    let sim = submarine::cluster::ClusterSim::homogeneous(
+        10,
+        submarine::cluster::Resources::new(32, 131_072, 4),
+        2,
+    );
+    let submitter = Arc::new(
+        SimSubmitter::new(
+            Box::new(submarine::scheduler::yarn::YarnScheduler::new(
+                submarine::scheduler::queue::QueueTree::flat(),
+            )),
+            sim,
+            Arc::clone(&monitor),
+        )
+        .with_container_duration(SimTime::from_millis(500)),
+    );
+    let services = Arc::new(Services::with_parts(
+        store,
+        monitor,
+        metrics,
+        Arc::clone(&submitter) as Arc<dyn Submitter>,
+    ));
+    let spec = ExperimentSpec::parse(
+        r#"{
+          "meta": {"name": "bert"},
+          "spec": {
+            "Ps":     {"replicas": 1, "resources": "cpu=2,memory=2G"},
+            "Worker": {"replicas": 4, "resources": "cpu=4,gpu=1,memory=4G"}
+          }
+        }"#,
+    )
+    .unwrap();
+    let ids: Vec<String> = (0..20)
+        .map(|_| services.experiments.submit(&spec).unwrap())
+        .collect();
+    submitter.drain(
+        SimTime::from_millis(100),
+        SimTime::from_secs_f64(600.0),
+    );
+    for id in &ids {
+        assert_eq!(
+            services.experiments.status(id),
+            ExperimentStatus::Succeeded,
+            "{id}"
+        );
+    }
+    assert!(submitter.gpu_utilization() > 0.1);
+}
+
+#[test]
+fn auth_token_guards_the_api() {
+    let (services, _submitter) = local_stack();
+    let server =
+        Arc::new(Server::bind(services, 0, Some("sekrit")).unwrap());
+    let port = server.port();
+    let stop = server.stopper();
+    let handle = Arc::clone(&server).serve_background();
+
+    let anon = ExperimentClient::new("127.0.0.1", port);
+    assert!(anon.list_experiments().is_err());
+    let authed =
+        ExperimentClient::new("127.0.0.1", port).with_token("sekrit");
+    assert!(authed.list_experiments().is_ok());
+
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let _ = std::net::TcpStream::connect(("127.0.0.1", port));
+    handle.join().unwrap();
+}
+
+#[test]
+fn experiment_metadata_survives_restart() {
+    // WAL-backed store: metadata written by one stack instance is
+    // visible after "restart" (a new Services over the same WAL).
+    let dir = std::env::temp_dir()
+        .join(format!("submarine-it-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let wal = dir.join("meta.jsonl");
+    let _ = std::fs::remove_file(&wal);
+
+    struct NullSubmitter;
+    impl Submitter for NullSubmitter {
+        fn name(&self) -> &'static str {
+            "null"
+        }
+        fn submit(&self, _: &str, _: &ExperimentSpec)
+            -> submarine::Result<()>
+        {
+            Ok(())
+        }
+        fn kill(&self, _: &str) -> submarine::Result<()> {
+            Ok(())
+        }
+    }
+
+    let id = {
+        let services = Arc::new(Services::new(
+            Arc::new(MetaStore::open(&wal).unwrap()),
+            Arc::new(NullSubmitter),
+        ));
+        let spec = ExperimentSpec::parse(
+            r#"{"meta":{"name":"durable"},
+                "spec":{"W":{"replicas":1,"resources":"cpu=1"}}}"#,
+        )
+        .unwrap();
+        services.experiments.submit(&spec).unwrap()
+    };
+    // restart
+    let services = Arc::new(Services::new(
+        Arc::new(MetaStore::open(&wal).unwrap()),
+        Arc::new(NullSubmitter),
+    ));
+    let doc = services.experiments.get(&id).unwrap();
+    assert_eq!(
+        doc.at(&["spec", "meta", "name"]).unwrap().as_str(),
+        Some("durable")
+    );
+    std::fs::remove_file(&wal).ok();
+}

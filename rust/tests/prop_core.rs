@@ -1,0 +1,267 @@
+//! Property tests over the platform's serialization and service
+//! substrates: JSON round-trips, template substitution, resource algebra,
+//! metadata-store semantics, model-registry blobs.
+
+use std::collections::BTreeMap;
+use submarine::cluster::Resources;
+use submarine::model::ModelRegistry;
+use submarine::storage::MetaStore;
+use submarine::util::json::Json;
+use submarine::util::prop::{check, Gen, PropResult};
+use submarine::{prop_assert, prop_assert_eq};
+
+fn gen_json(g: &mut Gen, depth: usize) -> Json {
+    if depth == 0 {
+        return match g.usize(0, 4) {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => Json::Num((g.u64(0, 1_000_000) as f64) / 8.0),
+            _ => Json::Str(g.string(24)),
+        };
+    }
+    match g.usize(0, 6) {
+        0 => Json::Null,
+        1 => Json::Bool(g.bool()),
+        2 => Json::Num(g.u64(0, 1_000_000) as f64),
+        3 => Json::Str(g.string(24)),
+        4 => Json::Arr(g.vec(0..5, |g| gen_json(g, depth - 1))),
+        _ => {
+            let n = g.usize(0, 5);
+            let mut fields = Vec::new();
+            for i in 0..n {
+                fields.push((
+                    format!("k{i}_{}", g.string(6)),
+                    gen_json(g, depth - 1),
+                ));
+            }
+            Json::Obj(fields)
+        }
+    }
+}
+
+#[test]
+fn json_dump_parse_roundtrip() {
+    check(300, |g| {
+        let j = gen_json(g, 3);
+        let parsed = Json::parse(&j.dump()).map_err(|e| {
+            submarine::util::prop::PropFail(format!("{e} on {}", j.dump()))
+        })?;
+        prop_assert_eq!(parsed, j);
+        // pretty form parses back to the same value too
+        let pretty = Json::parse(&j.pretty()).map_err(|e| {
+            submarine::util::prop::PropFail(e.to_string())
+        })?;
+        prop_assert_eq!(pretty, j);
+        Ok(())
+    });
+}
+
+#[test]
+fn resource_algebra_invariants() {
+    check(300, |g| {
+        let a = Resources::new(
+            g.usize(0, 128) as u32,
+            g.usize(0, 1 << 20) as u64,
+            g.usize(0, 16) as u32,
+        );
+        let b = Resources::new(
+            g.usize(0, 128) as u32,
+            g.usize(0, 1 << 20) as u64,
+            g.usize(0, 16) as u32,
+        );
+        // add then sub restores
+        let sum = a.add(&b);
+        prop_assert_eq!(sum.checked_sub(&b), Some(a));
+        // fits is consistent with checked_sub
+        prop_assert_eq!(sum.fits(&a), sum.checked_sub(&a).is_some());
+        // display round-trips through parse
+        let rt = Resources::parse(&a.to_string()).map_err(|e| {
+            submarine::util::prop::PropFail(e.to_string())
+        })?;
+        prop_assert_eq!(rt, a);
+        // dominant share within [0,1] for sub-capacity requests
+        if !sum.is_zero() {
+            let ds = a.dominant_share(&sum);
+            prop_assert!((0.0..=1.0).contains(&ds), "ds={ds}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn template_substitution_is_total_and_idempotent() {
+    check(150, |g| {
+        let n_params = g.usize(1, 5);
+        let params: Vec<(String, String)> = (0..n_params)
+            .map(|i| {
+                (format!("p{i}"), format!("v{}", g.u64(0, 1000)))
+            })
+            .collect();
+        // build a template whose cmd references every param
+        let mut cmd = String::from("run");
+        for (k, _) in &params {
+            cmd.push_str(&format!(" --{k}={{{{{k}}}}}"));
+        }
+        let param_json: Vec<Json> = params
+            .iter()
+            .map(|(k, _)| {
+                Json::obj()
+                    .set("name", Json::Str(k.clone()))
+                    .set("required", Json::Bool(true))
+            })
+            .collect();
+        let tpl_json = Json::obj()
+            .set("name", Json::Str("t".into()))
+            .set("parameters", Json::Arr(param_json))
+            .set(
+                "experimentSpec",
+                Json::obj()
+                    .set(
+                        "meta",
+                        Json::obj()
+                            .set("name", Json::Str("exp".into()))
+                            .set("cmd", Json::Str(cmd)),
+                    )
+                    .set(
+                        "spec",
+                        Json::obj().set(
+                            "Worker",
+                            Json::obj()
+                                .set("replicas", Json::Num(1.0))
+                                .set(
+                                    "resources",
+                                    Json::Str("cpu=1".into()),
+                                ),
+                        ),
+                    ),
+            );
+        let tpl = submarine::template::Template::from_json(&tpl_json)
+            .map_err(|e| {
+                submarine::util::prop::PropFail(e.to_string())
+            })?;
+        let values: BTreeMap<String, String> =
+            params.iter().cloned().collect();
+        let spec = tpl.instantiate(&values).map_err(|e| {
+            submarine::util::prop::PropFail(e.to_string())
+        })?;
+        // total: no placeholder survives
+        prop_assert!(
+            !spec.meta.cmd.contains("{{"),
+            "unsubstituted: {}",
+            spec.meta.cmd
+        );
+        // every value appears
+        for (_, v) in &params {
+            prop_assert!(spec.meta.cmd.contains(v), "missing {v}");
+        }
+        // idempotent
+        let again = tpl.instantiate(&values).map_err(|e| {
+            submarine::util::prop::PropFail(e.to_string())
+        })?;
+        prop_assert_eq!(spec, again);
+        Ok(())
+    });
+}
+
+#[test]
+fn metastore_behaves_like_a_map() {
+    check(100, |g| {
+        let store = MetaStore::in_memory();
+        let mut model: BTreeMap<String, Json> = BTreeMap::new();
+        for _ in 0..g.usize(1, 40) {
+            let key = format!("k{}", g.usize(0, 10));
+            if g.chance(0.3) {
+                store.delete("ns", &key).map_err(|e| {
+                    submarine::util::prop::PropFail(e.to_string())
+                })?;
+                model.remove(&key);
+            } else {
+                let doc = gen_json(g, 2);
+                store.put("ns", &key, doc.clone()).map_err(|e| {
+                    submarine::util::prop::PropFail(e.to_string())
+                })?;
+                model.insert(key, doc);
+            }
+        }
+        prop_assert_eq!(store.count("ns"), model.len());
+        for (k, v) in &model {
+            let got = store.get("ns", k);
+            prop_assert_eq!(got.as_ref(), Some(v));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn model_registry_blobs_roundtrip() {
+    check(60, |g| {
+        let reg = ModelRegistry::new(std::sync::Arc::new(
+            MetaStore::in_memory(),
+        ));
+        let params: Vec<Vec<f32>> = g.vec(1..4, |g| {
+            g.vec(1..64, |g| {
+                // exercise odd float values, incl. negatives/zeros
+                (g.u64(0, 1 << 20) as f32 - 500_000.0) / 1024.0
+            })
+        });
+        let v = reg
+            .register("m", "exp", &params, &[])
+            .map_err(|e| {
+                submarine::util::prop::PropFail(e.to_string())
+            })?;
+        let loaded = reg.load_params("m", v).map_err(|e| {
+            submarine::util::prop::PropFail(e.to_string())
+        })?;
+        prop_assert_eq!(loaded, params);
+        Ok(())
+    });
+}
+
+#[test]
+fn dependency_resolution_is_sound() {
+    use submarine::environment::resolver::{
+        Constraint, DependencySolver, PackageIndex,
+    };
+    check(80, |g| {
+        let idx = PackageIndex::builtin();
+        let pool = ["python", "numpy", "tensorflow", "pytorch", "mxnet",
+                    "scipy"];
+        let specs: Vec<String> = g.vec(1..4, |g| {
+            let pkg = *g.choose(&pool);
+            match g.usize(0, 3) {
+                0 => pkg.to_string(),
+                1 => format!("{pkg}>=1.0"),
+                _ => format!("{pkg}<99"),
+            }
+        });
+        let solver = DependencySolver::new(&idx);
+        if let Ok(assignment) = solver.resolve(&specs) {
+            // soundness: every user constraint admits its assignment
+            for s in &specs {
+                let c = Constraint::parse(s).unwrap();
+                let v = assignment.get(&c.package).ok_or_else(|| {
+                    submarine::util::prop::PropFail(format!(
+                        "{} unassigned",
+                        c.package
+                    ))
+                })?;
+                prop_assert!(c.admits(*v), "{s} violated by {v}");
+            }
+            // transitive deps present and admitted
+            for (pkg, v) in &assignment {
+                for d in idx.deps(pkg, *v) {
+                    let c = Constraint::parse(d).unwrap();
+                    let dv =
+                        assignment.get(&c.package).ok_or_else(|| {
+                            submarine::util::prop::PropFail(format!(
+                                "dep {} of {pkg} unassigned",
+                                c.package
+                            ))
+                        })?;
+                    prop_assert!(c.admits(*dv), "{pkg}: {d} violated");
+                }
+            }
+        }
+        Ok(())
+    });
+}

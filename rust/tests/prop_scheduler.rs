@@ -1,0 +1,234 @@
+//! Property tests over scheduler/cluster invariants (DESIGN.md S3).
+//!
+//! Random job mixes against random cluster shapes; invariants:
+//!  - no node is ever oversubscribed in any resource dimension
+//!  - no GPU is double-bound
+//!  - gang jobs are placed all-or-nothing (YARN)
+//!  - queue burst ceilings are never exceeded (YARN)
+//!  - placements stamp monotonically non-decreasing decision times
+//!  - releasing everything restores full capacity
+
+use submarine::cluster::{ClusterSim, Resources};
+use submarine::scheduler::k8s::K8sScheduler;
+use submarine::scheduler::queue::QueueTree;
+use submarine::scheduler::yarn::YarnScheduler;
+use submarine::scheduler::{JobRequest, Scheduler, TaskGroup};
+use submarine::util::clock::SimTime;
+use submarine::util::prop::{check, Gen, PropResult};
+use submarine::{prop_assert, prop_assert_eq};
+
+fn gen_cluster(g: &mut Gen) -> ClusterSim {
+    let nodes = g.usize(1, 8);
+    let gpus = g.usize(0, 9) as u32;
+    let sockets = g.usize(1, 3) as u32;
+    ClusterSim::homogeneous(
+        nodes,
+        Resources::new(
+            g.usize(4, 64) as u32,
+            g.usize(4096, 262_144) as u64,
+            gpus,
+        ),
+        sockets,
+    )
+}
+
+fn gen_jobs(g: &mut Gen, max_gpu: u32) -> Vec<JobRequest> {
+    let jobs = g.vec(1..20, |g| {
+        let tasks = g.vec(1..4, |g| TaskGroup {
+            name: format!("t{}", g.usize(0, 1000)),
+            replicas: g.usize(1, 5) as u32,
+            resources: Resources::new(
+                g.usize(1, 8) as u32,
+                g.usize(128, 8192) as u64,
+                g.usize(0, (max_gpu + 1) as usize) as u32,
+            ),
+            duration: SimTime::from_millis(g.u64(1, 500)),
+        });
+        (g.bool(), tasks)
+    });
+    jobs.into_iter()
+        .enumerate()
+        .map(|(i, (gang, tasks))| JobRequest {
+            id: format!("job-{i}"),
+            queue: "root".into(),
+            gang,
+            tasks,
+        })
+        .collect()
+}
+
+fn no_oversubscription(sim: &ClusterSim) -> PropResult {
+    for node in &sim.nodes {
+        prop_assert!(
+            node.capacity.fits(&node.allocated),
+            "node {} oversubscribed: cap={} alloc={}",
+            node.id,
+            node.capacity,
+            node.allocated
+        );
+        // GPU bindings consistent with the resource ledger
+        let bound = node
+            .gpus
+            .iter()
+            .filter(|s| s.bound_to.is_some())
+            .count() as u32;
+        prop_assert_eq!(bound, node.allocated.gpus);
+    }
+    Ok(())
+}
+
+#[test]
+fn yarn_never_oversubscribes_and_gangs_are_atomic() {
+    check(60, |g| {
+        let mut sim = gen_cluster(g);
+        let max_gpu = sim.nodes[0].capacity.gpus;
+        let mut sched = YarnScheduler::new(QueueTree::flat());
+        let jobs = gen_jobs(g, max_gpu);
+        let totals: std::collections::BTreeMap<String, u32> = jobs
+            .iter()
+            .map(|j| (j.id.clone(), j.total_containers()))
+            .collect();
+        for j in jobs {
+            sched.submit(j);
+        }
+        let mut placed_per_job: std::collections::BTreeMap<String, u32> =
+            Default::default();
+        let mut last = SimTime::ZERO;
+        for _round in 0..10 {
+            let ps = sched.schedule(&mut sim);
+            for p in &ps {
+                *placed_per_job.entry(p.job.clone()).or_default() += 1;
+                prop_assert!(
+                    p.decided_at >= last,
+                    "decision time went backwards"
+                );
+                last = p.decided_at;
+            }
+            no_oversubscription(&sim)?;
+            // gang atomicity: every job is fully placed or not at all
+            for (job, placed) in &placed_per_job {
+                prop_assert_eq!(*placed, totals[job]);
+            }
+            if let Some(t) = sim.next_event() {
+                sim.advance_to(t);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn k8s_never_oversubscribes() {
+    check(60, |g| {
+        let mut sim = gen_cluster(g);
+        let max_gpu = sim.nodes[0].capacity.gpus;
+        let mut sched = K8sScheduler::new();
+        for j in gen_jobs(g, max_gpu) {
+            sched.submit(j);
+        }
+        for _ in 0..10 {
+            sched.schedule(&mut sim);
+            no_oversubscription(&sim)?;
+            if let Some(t) = sim.next_event() {
+                sim.advance_to(t);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn completion_restores_full_capacity() {
+    check(40, |g| {
+        let mut sim = gen_cluster(g);
+        let max_gpu = sim.nodes[0].capacity.gpus;
+        let mut sched: Box<dyn Scheduler> = if g.bool() {
+            Box::new(YarnScheduler::new(QueueTree::flat()))
+        } else {
+            Box::new(K8sScheduler::new())
+        };
+        for j in gen_jobs(g, max_gpu) {
+            sched.submit(j);
+        }
+        for _ in 0..50 {
+            sched.schedule(&mut sim);
+            match sim.next_event() {
+                Some(t) => {
+                    sim.advance_to(t);
+                }
+                None => break,
+            }
+        }
+        // drain whatever is still running
+        while let Some(t) = sim.next_event() {
+            sim.advance_to(t);
+        }
+        prop_assert_eq!(sim.total_allocated(), Resources::ZERO);
+        for node in &sim.nodes {
+            prop_assert_eq!(
+                node.free_gpu_indices().len(),
+                node.capacity.gpus as usize
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn queue_ceilings_never_exceeded() {
+    check(40, |g| {
+        let mut queues = QueueTree::flat();
+        let ceiling = 0.2 + g.f64() * 0.5;
+        queues.add("root", "capped", 1.0, ceiling).unwrap();
+        let mut sched = YarnScheduler::new(queues);
+        let mut sim = ClusterSim::homogeneous(
+            4,
+            Resources::new(32, 65_536, 8),
+            2,
+        );
+        let mut jobs = gen_jobs(g, 4);
+        for j in &mut jobs {
+            j.queue = "root.capped".into();
+        }
+        for j in jobs {
+            sched.submit(j);
+        }
+        sched.schedule(&mut sim);
+        let q = sched.queues.get("root.capped").unwrap();
+        prop_assert!(
+            q.used_share <= q.max_capacity + 1e-6,
+            "queue share {} exceeds ceiling {}",
+            q.used_share,
+            q.max_capacity
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn failure_injection_releases_resources() {
+    check(30, |g| {
+        let mut sim = gen_cluster(g);
+        let max_gpu = sim.nodes[0].capacity.gpus;
+        let mut sched = YarnScheduler::new(QueueTree::flat());
+        for j in gen_jobs(g, max_gpu) {
+            sched.submit(j);
+        }
+        let ps = sched.schedule(&mut sim);
+        // kill a random subset of running containers
+        for p in &ps {
+            if g.chance(0.5) {
+                sim.fail(&p.container).map_err(|e| {
+                    submarine::util::prop::PropFail(e.to_string())
+                })?;
+            }
+        }
+        no_oversubscription(&sim)?;
+        // completing the rest must still work
+        while let Some(t) = sim.next_event() {
+            sim.advance_to(t);
+        }
+        prop_assert_eq!(sim.total_allocated(), Resources::ZERO);
+        Ok(())
+    });
+}
