@@ -49,7 +49,9 @@ fn main() -> anyhow::Result<()> {
     println!("server on 127.0.0.1:{port}");
 
     // ---- client side (pure REST from here on) -------------------------
-    let client = ExperimentClient::new("127.0.0.1", port);
+    // v2 surface: typed envelope + one pooled keep-alive connection for
+    // every request below
+    let client = ExperimentClient::v2("127.0.0.1", port);
 
     // register the community template over REST, then submit with only
     // parameter values — the §3.2.3 zero-code path
@@ -109,6 +111,12 @@ fn main() -> anyhow::Result<()> {
     {
         println!("throughput: {sps:.0} samples/s");
     }
+
+    // paged + filtered listing over the v2 API
+    let (done, total) =
+        client.list_experiments_paged(Some(10), 0, Some("Succeeded"))?;
+    println!("succeeded experiments: {}/{total}", done.len());
+    assert_eq!(done.len(), 2);
 
     // register the trained model (§4.2) — lineage back to the experiment
     let v = services.models.register(

@@ -1,0 +1,291 @@
+//! E-HTTP — the REST hot path (ISSUE 1 acceptance): trie-router
+//! dispatch vs the seed's linear-scan design, and keep-alive request
+//! throughput vs one-connection-per-request.
+//!
+//! The seed router scanned a `Vec<Route>` per request and the server
+//! closed every connection after one response. The v2 design compiles
+//! routes into a segment trie and holds connections open. This bench
+//! reproduces the seed design in miniature and races both.
+//!
+//! Run: `cargo bench --bench http_api`
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use submarine::experiment::spec::ExperimentSpec;
+use submarine::httpd::handler::Ctx;
+use submarine::httpd::server::{Server, Services};
+use submarine::httpd::{Envelope, Request, Response, Router};
+use submarine::orchestrator::Submitter;
+use submarine::sdk::ExperimentClient;
+use submarine::storage::MetaStore;
+use submarine::util::bench::{bench, fmt_secs, Table};
+use submarine::util::json::Json;
+
+// ---------------------------------------------------------------- seed
+// A faithful miniature of the seed router: linear scan over all routes,
+// segment-by-segment match, params re-collected per candidate.
+
+enum Seg {
+    Lit(String),
+    Param(String),
+}
+
+type LinearHandler =
+    dyn Fn(&Request, &BTreeMap<String, String>) -> Response + Send + Sync;
+
+struct LinearRoute {
+    method: String,
+    segments: Vec<Seg>,
+    handler: Box<LinearHandler>,
+}
+
+#[derive(Default)]
+struct LinearRouter {
+    routes: Vec<LinearRoute>,
+}
+
+impl LinearRouter {
+    fn add<F>(&mut self, method: &str, pattern: &str, handler: F)
+    where
+        F: Fn(&Request, &BTreeMap<String, String>) -> Response
+            + Send
+            + Sync
+            + 'static,
+    {
+        let segments = pattern
+            .trim_matches('/')
+            .split('/')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                if let Some(p) = s.strip_prefix(':') {
+                    Seg::Param(p.to_string())
+                } else {
+                    Seg::Lit(s.to_string())
+                }
+            })
+            .collect();
+        self.routes.push(LinearRoute {
+            method: method.to_uppercase(),
+            segments,
+            handler: Box::new(handler),
+        });
+    }
+
+    fn dispatch(&self, req: &Request) -> Response {
+        let parts: Vec<&str> = req
+            .path
+            .trim_matches('/')
+            .split('/')
+            .filter(|s| !s.is_empty())
+            .collect();
+        for route in &self.routes {
+            if route.segments.len() != parts.len()
+                || route.method != req.method
+            {
+                continue;
+            }
+            let mut params = BTreeMap::new();
+            let matches =
+                route.segments.iter().zip(&parts).all(|(seg, part)| {
+                    match seg {
+                        Seg::Lit(l) => l == part,
+                        Seg::Param(name) => {
+                            params.insert(
+                                name.clone(),
+                                part.to_string(),
+                            );
+                            true
+                        }
+                    }
+                });
+            if matches {
+                return (route.handler)(req, &params);
+            }
+        }
+        Response::error(404, "no route")
+    }
+}
+
+// ------------------------------------------------------------ fixtures
+
+const RESOURCES: usize = 20;
+
+fn linear_router() -> LinearRouter {
+    let mut r = LinearRouter::default();
+    for i in 0..RESOURCES {
+        r.add(
+            "GET",
+            &format!("/api/v1/res{i}"),
+            |_, _| Response::ok_result(Json::Null),
+        );
+        r.add(
+            "GET",
+            &format!("/api/v1/res{i}/:id"),
+            |_, p| Response::ok_result(Json::Str(p["id"].clone())),
+        );
+        r.add(
+            "POST",
+            &format!("/api/v1/res{i}"),
+            |_, _| Response::ok_result(Json::Null),
+        );
+    }
+    r
+}
+
+fn trie_router() -> Router {
+    let mut r = Router::new();
+    for i in 0..RESOURCES {
+        r.route(
+            "GET",
+            &format!("/api/v1/res{i}"),
+            Envelope::V1,
+            |_: &Ctx<'_>| -> submarine::Result<Json> { Ok(Json::Null) },
+        );
+        r.route(
+            "GET",
+            &format!("/api/v1/res{i}/:id"),
+            Envelope::V1,
+            |ctx: &Ctx<'_>| -> submarine::Result<Json> {
+                Ok(Json::Str(ctx.param("id")?.to_string()))
+            },
+        );
+        r.route(
+            "POST",
+            &format!("/api/v1/res{i}"),
+            Envelope::V1,
+            |_: &Ctx<'_>| -> submarine::Result<Json> { Ok(Json::Null) },
+        );
+    }
+    r
+}
+
+/// A request mix cycling through every resource (first- and
+/// last-registered routes, literal and param forms).
+fn request_mix() -> Vec<Request> {
+    let mut reqs = Vec::new();
+    for i in 0..RESOURCES {
+        reqs.push(Request::synthetic("GET", &format!("/api/v1/res{i}")));
+        reqs.push(Request::synthetic(
+            "GET",
+            &format!("/api/v1/res{i}/item-{i}"),
+        ));
+        reqs.push(Request::synthetic("POST", &format!("/api/v1/res{i}")));
+    }
+    reqs
+}
+
+struct NullSubmitter;
+impl Submitter for NullSubmitter {
+    fn name(&self) -> &'static str {
+        "null"
+    }
+    fn submit(&self, _: &str, _: &ExperimentSpec) -> submarine::Result<()> {
+        Ok(())
+    }
+    fn kill(&self, _: &str) -> submarine::Result<()> {
+        Ok(())
+    }
+}
+
+fn main() {
+    println!("E-HTTP: REST API hot path (trie + keep-alive vs seed)");
+
+    // ---- dispatch micro-bench --------------------------------------
+    let mix = request_mix();
+    let n = mix.len() as f64;
+    let lin = linear_router();
+    let lin_stats = bench(300, 0.5, || {
+        for req in &mix {
+            std::hint::black_box(lin.dispatch(req));
+        }
+    });
+    let trie = trie_router();
+    let trie_stats = bench(300, 0.5, || {
+        for req in &mix {
+            std::hint::black_box(trie.dispatch(req));
+        }
+    });
+
+    let mut t = Table::new(
+        &format!(
+            "router dispatch ({} routes, {} request mix)",
+            3 * RESOURCES,
+            mix.len()
+        ),
+        &["router", "p50/req", "p95/req", "dispatch/s"],
+    );
+    for (name, s) in
+        [("linear scan (seed)", &lin_stats), ("segment trie", &trie_stats)]
+    {
+        t.row(&[
+            name.into(),
+            fmt_secs(s.p50 / n),
+            fmt_secs(s.p95 / n),
+            format!("{:.0}", s.throughput(n)),
+        ]);
+    }
+    t.print();
+    println!(
+        "trie speedup over linear scan: {:.2}x",
+        lin_stats.mean / trie_stats.mean
+    );
+
+    // ---- end-to-end request throughput over TCP --------------------
+    let services = Arc::new(Services::new(
+        Arc::new(MetaStore::in_memory()),
+        Arc::new(NullSubmitter),
+    ));
+    let server = Arc::new(Server::bind(services, 0, None).unwrap());
+    let port = server.port();
+    let stop = server.stopper();
+    let handle = Arc::clone(&server).serve_background();
+
+    // seed design: one connection per request, framed by EOF
+    let close_stats = bench(200, 0.5, || {
+        let mut stream =
+            TcpStream::connect(("127.0.0.1", port)).unwrap();
+        write!(
+            stream,
+            "GET /api/v2/cluster HTTP/1.1\r\nhost: x\r\nconnection: close\r\n\r\n"
+        )
+        .unwrap();
+        let mut buf = String::new();
+        stream.read_to_string(&mut buf).unwrap();
+        assert!(buf.contains("200 OK"));
+    });
+
+    // v2 design: SDK client holding one keep-alive connection
+    let client = ExperimentClient::v2("127.0.0.1", port);
+    let keep_stats = bench(200, 0.5, || {
+        let (status, _) =
+            client.request("GET", "/api/v2/cluster", None).unwrap();
+        assert_eq!(status, 200);
+    });
+
+    let mut t = Table::new(
+        "request throughput over TCP (GET /api/v2/cluster)",
+        &["transport", "p50", "p95", "req/s"],
+    );
+    for (name, s) in [
+        ("connection-per-request (seed)", &close_stats),
+        ("keep-alive (v2 SDK)", &keep_stats),
+    ] {
+        t.row(&[
+            name.into(),
+            fmt_secs(s.p50),
+            fmt_secs(s.p95),
+            format!("{:.0}", s.throughput(1.0)),
+        ]);
+    }
+    t.print();
+    println!(
+        "keep-alive speedup over connection-per-request: {:.2}x",
+        close_stats.mean / keep_stats.mean
+    );
+
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let _ = TcpStream::connect(("127.0.0.1", port));
+    handle.join().unwrap();
+}

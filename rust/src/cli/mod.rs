@@ -85,6 +85,22 @@ fn bad(msg: &str) -> crate::SubmarineError {
     crate::SubmarineError::InvalidSpec(msg.to_string())
 }
 
+/// Build the REST client from `--server` / `--api` / `--token` flags
+/// (defaults to the typed `/api/v2` surface; `--api v1` targets old
+/// servers).
+fn client_from_flags(args: &Args) -> crate::Result<ExperimentClient> {
+    let (host, port) = args.server();
+    let mut client = match args.flag("api").unwrap_or("v2") {
+        "v1" => ExperimentClient::new(&host, port),
+        "v2" => ExperimentClient::v2(&host, port),
+        other => return Err(bad(&format!("unknown --api {other:?}"))),
+    };
+    if let Some(t) = args.flag("token") {
+        client = client.with_token(t);
+    }
+    Ok(client)
+}
+
 /// Build an [`ExperimentSpec`] from Listing-1 style `job run` flags.
 pub fn spec_from_job_flags(args: &Args) -> crate::Result<ExperimentSpec> {
     let name = args
@@ -192,21 +208,59 @@ fn dispatch(argv: &[String]) -> crate::Result<String> {
         "job" if argv.get(1).map(String::as_str) == Some("run") => {
             let args = Args::parse(&argv[2..])?;
             let spec = spec_from_job_flags(&args)?;
-            let (host, port) = args.server();
-            let client = ExperimentClient::new(&host, port);
+            let client = client_from_flags(&args)?;
             let id = client.create_experiment(&spec)?;
             Ok(format!("submitted {id}"))
         }
         "experiment" => {
             let sub = argv.get(1).map(String::as_str).unwrap_or("list");
             let args = Args::parse(&argv[2..])?;
-            let (host, port) = args.server();
-            let client = ExperimentClient::new(&host, port);
+            let client = client_from_flags(&args)?;
             match sub {
                 "list" => {
+                    let paged = args.flag("limit").is_some()
+                        || args.flag("offset").is_some()
+                        || args.flag("status").is_some();
+                    if paged && args.flag("api") == Some("v1") {
+                        // the v1 surface ignores these params; erroring
+                        // beats silently presenting unfiltered data
+                        return Err(bad(
+                            "--limit/--offset/--status need --api v2",
+                        ));
+                    }
+                    let (rows, total) = if paged {
+                        let limit = args
+                            .flag("limit")
+                            .map(|v| {
+                                v.parse().map_err(|_| bad("bad --limit"))
+                            })
+                            .transpose()?;
+                        let offset = args
+                            .flag("offset")
+                            .map(|v| {
+                                v.parse().map_err(|_| bad("bad --offset"))
+                            })
+                            .transpose()?
+                            .unwrap_or(0);
+                        client.list_experiments_paged(
+                            limit,
+                            offset,
+                            args.flag("status"),
+                        )?
+                    } else {
+                        let rows = client.list_experiments()?;
+                        let total = rows.len();
+                        (rows, total)
+                    };
                     let mut out = String::new();
-                    for (id, st) in client.list_experiments()? {
+                    for (id, st) in &rows {
                         out.push_str(&format!("{id}\t{st}\n"));
+                    }
+                    if paged {
+                        out.push_str(&format!(
+                            "({} of {total} experiments)\n",
+                            rows.len()
+                        ));
                     }
                     Ok(out)
                 }
@@ -234,8 +288,7 @@ fn dispatch(argv: &[String]) -> crate::Result<String> {
         "template" => {
             let sub = argv.get(1).map(String::as_str).unwrap_or("");
             let args = Args::parse(&argv[2..])?;
-            let (host, port) = args.server();
-            let client = ExperimentClient::new(&host, port);
+            let client = client_from_flags(&args)?;
             match sub {
                 "submit" => {
                     let name = args
@@ -290,8 +343,23 @@ fn serve(args: &Args) -> crate::Result<String> {
     let _ = services
         .templates
         .register(&crate::template::tf_mnist_template());
-    let server =
-        Arc::new(Server::bind(services, port, args.flag("token"))?);
+    let rate_limit = match args.flag("rate-limit") {
+        None => None,
+        Some(v) => {
+            let r: f64 = v.parse().map_err(|_| {
+                bad(&format!("--rate-limit {v:?} is not a number"))
+            })?;
+            if r <= 0.0 || !r.is_finite() {
+                return Err(bad("--rate-limit must be > 0"));
+            }
+            Some((r, (2.0 * r).max(1.0)))
+        }
+    };
+    let cfg = crate::httpd::ApiConfig {
+        auth_token: args.flag("token").map(str::to_string),
+        rate_limit,
+    };
+    let server = Arc::new(Server::bind_with_config(services, port, &cfg)?);
     println!("submarine server on 127.0.0.1:{}", server.port());
     server.serve()?;
     Ok(String::new())
@@ -301,13 +369,16 @@ fn usage() -> String {
     "usage: submarine <command>\n\
      commands:\n\
        server      [--port 8080] [--db wal.jsonl] [--artifacts DIR] [--token T]\n\
+                   [--rate-limit REQS_PER_SEC]\n\
        job run     --name N [--framework F] [--num_workers K] [--num_ps K]\n\
                    [--worker_resources R] [--ps_resources R]\n\
                    [--worker_launch_cmd C] [--model M --steps S --lr LR]\n\
                    [--server host:port]\n\
-       experiment  list | get <id> | kill <id>   [--server host:port]\n\
+       experiment  list [--limit N] [--offset N] [--status S]\n\
+                   | get <id> | kill <id>        [--server host:port]\n\
        template    submit <name> -P key=value... [--server host:port]\n\
-       version"
+       version\n\
+     client flags: [--server host:port] [--api v1|v2] [--token T]"
         .to_string()
 }
 
@@ -390,6 +461,22 @@ mod tests {
         let w = spec.workload.unwrap();
         assert_eq!(w.model, "deepfm");
         assert_eq!(w.steps, 250);
+    }
+
+    #[test]
+    fn api_flag_selects_base() {
+        let args = Args::parse(&argv(&["--api", "v1"])).unwrap();
+        assert_eq!(
+            client_from_flags(&args).unwrap().api_base(),
+            "/api/v1"
+        );
+        let args = Args::parse(&argv(&[])).unwrap();
+        assert_eq!(
+            client_from_flags(&args).unwrap().api_base(),
+            "/api/v2"
+        );
+        let args = Args::parse(&argv(&["--api", "v9"])).unwrap();
+        assert!(client_from_flags(&args).is_err());
     }
 
     #[test]

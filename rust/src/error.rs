@@ -21,6 +21,10 @@ pub enum SubmarineError {
     Io(#[from] std::io::Error),
     #[error("xla error: {0}")]
     Xla(String),
+    #[error("unauthorized: {0}")]
+    Unauthorized(String),
+    #[error("rate limited: {0}")]
+    RateLimited(String),
 }
 
 impl From<xla::Error> for SubmarineError {
@@ -39,7 +43,29 @@ impl SubmarineError {
             SubmarineError::AlreadyExists(_) => 409,
             SubmarineError::InvalidSpec(_) | SubmarineError::Json(_) => 400,
             SubmarineError::ResourcesUnavailable(_) => 503,
+            SubmarineError::Unauthorized(_) => 401,
+            SubmarineError::RateLimited(_) => 429,
             _ => 500,
+        }
+    }
+
+    /// Stable machine-readable error type for the v2 envelope's
+    /// `error.type` field.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            SubmarineError::NotFound(_) => "NotFound",
+            SubmarineError::AlreadyExists(_) => "AlreadyExists",
+            SubmarineError::InvalidSpec(_) => "InvalidSpec",
+            SubmarineError::ResourcesUnavailable(_) => {
+                "ResourcesUnavailable"
+            }
+            SubmarineError::Runtime(_) => "Runtime",
+            SubmarineError::Storage(_) => "Storage",
+            SubmarineError::Json(_) => "Json",
+            SubmarineError::Io(_) => "Io",
+            SubmarineError::Xla(_) => "Xla",
+            SubmarineError::Unauthorized(_) => "Unauthorized",
+            SubmarineError::RateLimited(_) => "RateLimited",
         }
     }
 }
@@ -58,6 +84,23 @@ mod tests {
         assert_eq!(
             SubmarineError::Runtime("x".into()).http_status(),
             500
+        );
+        assert_eq!(
+            SubmarineError::Unauthorized("x".into()).http_status(),
+            401
+        );
+        assert_eq!(
+            SubmarineError::RateLimited("x".into()).http_status(),
+            429
+        );
+    }
+
+    #[test]
+    fn kind_is_stable() {
+        assert_eq!(SubmarineError::NotFound("x".into()).kind(), "NotFound");
+        assert_eq!(
+            SubmarineError::RateLimited("x".into()).kind(),
+            "RateLimited"
         );
     }
 

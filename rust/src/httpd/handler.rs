@@ -1,0 +1,319 @@
+//! Typed request handlers.
+//!
+//! Every v2 endpoint is `fn(&Ctx, Input) -> crate::Result<Output>`:
+//! extraction (path params, query, JSON body parsed into spec types),
+//! serialization, and error→status mapping live here and in the router's
+//! envelope, not in each endpoint. Handlers return domain values; the
+//! router wraps them in the API envelope.
+
+use super::http::Request;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::marker::PhantomData;
+
+/// Per-request context handed to handlers: the parsed request plus the
+/// path parameters captured by the trie router.
+pub struct Ctx<'a> {
+    pub req: &'a Request,
+    pub params: &'a BTreeMap<String, String>,
+}
+
+fn invalid(msg: String) -> crate::SubmarineError {
+    crate::SubmarineError::InvalidSpec(msg)
+}
+
+impl<'a> Ctx<'a> {
+    /// Required path parameter (`:name` capture).
+    pub fn param(&self, name: &str) -> crate::Result<&str> {
+        self.params
+            .get(name)
+            .map(String::as_str)
+            .ok_or_else(|| invalid(format!("missing path param {name}")))
+    }
+
+    /// Optional query-string value.
+    pub fn query(&self, name: &str) -> Option<&str> {
+        self.req.query.get(name).map(String::as_str)
+    }
+
+    /// Optional numeric query-string value; non-numeric input is a 400.
+    pub fn query_usize(&self, name: &str) -> crate::Result<Option<usize>> {
+        match self.query(name) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| {
+                invalid(format!("query param {name} must be a number"))
+            }),
+        }
+    }
+
+    /// Parsed JSON request body (error if missing or malformed).
+    pub fn json_body(&self) -> crate::Result<Json> {
+        self.req.json()
+    }
+
+    /// JSON body parsed into a spec type.
+    pub fn body_as<T: FromBody>(&self) -> crate::Result<T> {
+        T::from_body(&self.json_body()?)
+    }
+}
+
+/// Types constructible from a JSON request body.
+pub trait FromBody: Sized {
+    fn from_body(j: &Json) -> crate::Result<Self>;
+}
+
+impl FromBody for crate::experiment::spec::ExperimentSpec {
+    fn from_body(j: &Json) -> crate::Result<Self> {
+        crate::experiment::spec::ExperimentSpec::from_json(j)
+    }
+}
+
+impl FromBody for crate::template::Template {
+    fn from_body(j: &Json) -> crate::Result<Self> {
+        crate::template::Template::from_json(j)
+    }
+}
+
+impl FromBody for crate::environment::Environment {
+    fn from_body(j: &Json) -> crate::Result<Self> {
+        crate::environment::Environment::from_json(j)
+    }
+}
+
+/// A routed endpoint. Closures `Fn(&Ctx) -> Result<Json>` qualify; use
+/// [`typed`] for the extractor-based `fn(&Ctx, Input) -> Result<Output>`
+/// form.
+pub trait Handler: Send + Sync {
+    fn handle(&self, ctx: &Ctx<'_>) -> crate::Result<Json>;
+}
+
+impl<F> Handler for F
+where
+    F: Fn(&Ctx<'_>) -> crate::Result<Json> + Send + Sync,
+{
+    fn handle(&self, ctx: &Ctx<'_>) -> crate::Result<Json> {
+        self(ctx)
+    }
+}
+
+/// Inputs the harness can pull out of a request before the handler runs.
+pub trait Extract: Sized {
+    fn extract(ctx: &Ctx<'_>) -> crate::Result<Self>;
+}
+
+impl Extract for () {
+    fn extract(_: &Ctx<'_>) -> crate::Result<()> {
+        Ok(())
+    }
+}
+
+/// Raw JSON body.
+impl Extract for Json {
+    fn extract(ctx: &Ctx<'_>) -> crate::Result<Json> {
+        ctx.json_body()
+    }
+}
+
+/// Optional raw JSON body (`None` when the body is empty).
+impl Extract for Option<Json> {
+    fn extract(ctx: &Ctx<'_>) -> crate::Result<Option<Json>> {
+        if ctx.req.body.is_empty() {
+            Ok(None)
+        } else {
+            ctx.json_body().map(Some)
+        }
+    }
+}
+
+/// JSON body parsed into a spec type (`Body(ExperimentSpec)` etc.).
+pub struct Body<T>(pub T);
+
+impl<T: FromBody> Extract for Body<T> {
+    fn extract(ctx: &Ctx<'_>) -> crate::Result<Body<T>> {
+        ctx.body_as().map(Body)
+    }
+}
+
+/// Pagination + status filter, from `limit` / `offset` / `status` query
+/// params (v2 list endpoints).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Page {
+    pub limit: Option<usize>,
+    pub offset: usize,
+    pub status: Option<String>,
+}
+
+impl Page {
+    /// Apply offset/limit to `items`; returns the page and the
+    /// pre-pagination total.
+    pub fn slice<T>(&self, items: Vec<T>) -> (Vec<T>, usize) {
+        let total = items.len();
+        let page = items
+            .into_iter()
+            .skip(self.offset)
+            .take(self.limit.unwrap_or(usize::MAX))
+            .collect();
+        (page, total)
+    }
+
+    /// The v2 list payload: `{items, total, limit, offset}`.
+    pub fn envelope(&self, items: Vec<Json>, total: usize) -> Json {
+        let mut out = Json::obj()
+            .set("items", Json::Arr(items))
+            .set("total", Json::Num(total as f64))
+            .set("offset", Json::Num(self.offset as f64));
+        if let Some(l) = self.limit {
+            out = out.set("limit", Json::Num(l as f64));
+        }
+        out
+    }
+}
+
+impl Extract for Page {
+    fn extract(ctx: &Ctx<'_>) -> crate::Result<Page> {
+        Ok(Page {
+            limit: ctx.query_usize("limit")?,
+            offset: ctx.query_usize("offset")?.unwrap_or(0),
+            status: ctx.query("status").map(str::to_string),
+        })
+    }
+}
+
+/// Handler outputs the harness knows how to serialize.
+pub trait IntoOutput {
+    fn into_output(self) -> Json;
+}
+
+impl IntoOutput for Json {
+    fn into_output(self) -> Json {
+        self
+    }
+}
+
+impl IntoOutput for bool {
+    fn into_output(self) -> Json {
+        Json::Bool(self)
+    }
+}
+
+impl IntoOutput for String {
+    fn into_output(self) -> Json {
+        Json::Str(self)
+    }
+}
+
+impl IntoOutput for Vec<Json> {
+    fn into_output(self) -> Json {
+        Json::Arr(self)
+    }
+}
+
+/// Adapter turning `fn(&Ctx, I) -> Result<O>` into a [`Handler`].
+pub struct Typed<F, I, O> {
+    f: F,
+    _marker: PhantomData<fn(I) -> O>,
+}
+
+/// Wrap a typed endpoint function: input extraction and output
+/// serialization happen in one place.
+pub fn typed<F, I, O>(f: F) -> Typed<F, I, O>
+where
+    F: Fn(&Ctx<'_>, I) -> crate::Result<O> + Send + Sync,
+    I: Extract,
+    O: IntoOutput,
+{
+    Typed {
+        f,
+        _marker: PhantomData,
+    }
+}
+
+impl<F, I, O> Handler for Typed<F, I, O>
+where
+    F: Fn(&Ctx<'_>, I) -> crate::Result<O> + Send + Sync,
+    I: Extract,
+    O: IntoOutput,
+{
+    fn handle(&self, ctx: &Ctx<'_>) -> crate::Result<Json> {
+        let input = I::extract(ctx)?;
+        (self.f)(ctx, input).map(IntoOutput::into_output)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx_of<'a>(
+        req: &'a Request,
+        params: &'a BTreeMap<String, String>,
+    ) -> Ctx<'a> {
+        Ctx { req, params }
+    }
+
+    #[test]
+    fn page_extraction_and_slice() {
+        let req = Request::synthetic(
+            "GET",
+            "/e?limit=2&offset=1&status=Running",
+        );
+        let params = BTreeMap::new();
+        let page = Page::extract(&ctx_of(&req, &params)).unwrap();
+        assert_eq!(page.limit, Some(2));
+        assert_eq!(page.offset, 1);
+        assert_eq!(page.status.as_deref(), Some("Running"));
+        let (items, total) = page.slice(vec![1, 2, 3, 4, 5]);
+        assert_eq!(items, vec![2, 3]);
+        assert_eq!(total, 5);
+    }
+
+    #[test]
+    fn bad_limit_is_invalid_spec() {
+        let req = Request::synthetic("GET", "/e?limit=abc");
+        let params = BTreeMap::new();
+        let err = Page::extract(&ctx_of(&req, &params)).unwrap_err();
+        assert_eq!(err.http_status(), 400);
+    }
+
+    #[test]
+    fn typed_handler_runs_extraction() {
+        let h = typed(|_ctx: &Ctx<'_>, page: Page| {
+            Ok(Json::Num(page.offset as f64))
+        });
+        let req = Request::synthetic("GET", "/e?offset=7");
+        let params = BTreeMap::new();
+        let out = h.handle(&ctx_of(&req, &params)).unwrap();
+        assert_eq!(out, Json::Num(7.0));
+    }
+
+    #[test]
+    fn body_extractor_parses_spec_types() {
+        let mut req = Request::synthetic("POST", "/e");
+        req.body = br#"{"meta":{"name":"m"},
+            "spec":{"Worker":{"replicas":1,"resources":"cpu=1"}}}"#
+            .to_vec();
+        let params = BTreeMap::new();
+        let Body(spec) =
+            Body::<crate::experiment::spec::ExperimentSpec>::extract(
+                &ctx_of(&req, &params),
+            )
+            .unwrap();
+        assert_eq!(spec.meta.name, "m");
+    }
+
+    #[test]
+    fn optional_body_none_when_empty() {
+        let req = Request::synthetic("POST", "/e");
+        let params = BTreeMap::new();
+        let v = Option::<Json>::extract(&ctx_of(&req, &params)).unwrap();
+        assert!(v.is_none());
+    }
+
+    #[test]
+    fn param_lookup_errors_when_missing() {
+        let req = Request::synthetic("GET", "/e");
+        let params = BTreeMap::new();
+        let c = ctx_of(&req, &params);
+        assert!(c.param("id").is_err());
+    }
+}

@@ -1,4 +1,9 @@
 //! HTTP/1.1 request parsing and response serialization (std-only).
+//!
+//! v2 upgrade: persistent connections. Requests carry their HTTP version
+//! so the server can honor HTTP/1.1 keep-alive semantics, responses are
+//! always content-length framed, and [`Request::read_next`] distinguishes
+//! a cleanly closed idle connection from a malformed request.
 
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -13,14 +18,35 @@ pub struct Request {
     pub query: BTreeMap<String, String>,
     pub headers: BTreeMap<String, String>,
     pub body: Vec<u8>,
+    /// `HTTP/1.1` or `HTTP/1.0` (keep-alive defaults differ).
+    pub version: String,
 }
 
 impl Request {
     /// Parse one request from a stream.
     pub fn read_from<R: Read>(stream: R) -> crate::Result<Request> {
         let mut reader = BufReader::new(stream);
+        match Self::read_next(&mut reader)? {
+            Some(req) => Ok(req),
+            None => Err(bad("missing method")),
+        }
+    }
+
+    /// Parse one request from a buffered reader. Returns `Ok(None)`
+    /// when the peer closed the connection before sending anything —
+    /// the clean end of a keep-alive session.
+    ///
+    /// Takes the reader by `&mut` so one `BufReader` can span a whole
+    /// keep-alive connection: any read-ahead beyond this request (e.g.
+    /// a pipelined next request) stays buffered for the next call
+    /// instead of being dropped with a per-request reader.
+    pub fn read_next<R: BufRead>(
+        reader: &mut R,
+    ) -> crate::Result<Option<Request>> {
         let mut line = String::new();
-        reader.read_line(&mut line)?;
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(None); // EOF before a request line
+        }
         let mut parts = line.trim_end().split(' ');
         let method = parts
             .next()
@@ -62,13 +88,30 @@ impl Request {
         if len > 0 {
             reader.read_exact(&mut body)?;
         }
-        Ok(Request {
+        Ok(Some(Request {
             method,
             path,
             query,
             headers,
             body,
-        })
+            version: version.to_string(),
+        }))
+    }
+
+    /// Bare request for unit tests and benches (no I/O).
+    pub fn synthetic(method: &str, path: &str) -> Request {
+        let (path, query) = match path.split_once('?') {
+            Some((p, q)) => (p.to_string(), parse_query(q)),
+            None => (path.to_string(), BTreeMap::new()),
+        };
+        Request {
+            method: method.to_string(),
+            path,
+            query,
+            headers: BTreeMap::new(),
+            body: Vec::new(),
+            version: "HTTP/1.1".to_string(),
+        }
     }
 
     pub fn json(&self) -> crate::Result<Json> {
@@ -81,6 +124,20 @@ impl Request {
         self.headers
             .get("authorization")?
             .strip_prefix("Bearer ")
+    }
+
+    /// HTTP/1.1 defaults to keep-alive unless `connection: close`;
+    /// HTTP/1.0 defaults to close unless `connection: keep-alive`.
+    pub fn wants_keep_alive(&self) -> bool {
+        let conn = self
+            .headers
+            .get("connection")
+            .map(|c| c.to_ascii_lowercase());
+        if self.version == "HTTP/1.0" {
+            conn.as_deref() == Some("keep-alive")
+        } else {
+            conn.as_deref() != Some("close")
+        }
     }
 }
 
@@ -135,6 +192,8 @@ pub struct Response {
     pub status: u16,
     pub content_type: &'static str,
     pub body: Vec<u8>,
+    /// Extra response headers (e.g. `Allow` on 405).
+    pub headers: Vec<(String, String)>,
 }
 
 impl Response {
@@ -143,6 +202,7 @@ impl Response {
             status,
             content_type: "application/json",
             body: body.dump().into_bytes(),
+            headers: Vec::new(),
         }
     }
 
@@ -150,7 +210,13 @@ impl Response {
         Self::json(200, body)
     }
 
-    /// Submarine-style envelope: `{"status":"OK","result":...}`.
+    /// Attach an extra header (builder style).
+    pub fn with_header(mut self, name: &str, value: &str) -> Response {
+        self.headers.push((name.to_string(), value.to_string()));
+        self
+    }
+
+    /// Submarine-style v1 envelope: `{"status":"OK","result":...}`.
     pub fn ok_result(result: Json) -> Response {
         Self::json(
             200,
@@ -160,6 +226,7 @@ impl Response {
         )
     }
 
+    /// v1 error envelope: `{"status":"ERROR","message":...}`.
     pub fn error(status: u16, msg: &str) -> Response {
         Self::json(
             status,
@@ -173,26 +240,54 @@ impl Response {
         Self::error(e.http_status(), &e.to_string())
     }
 
-    pub fn write_to<W: Write>(&self, mut w: W) -> std::io::Result<()> {
-        let reason = match self.status {
+    fn reason(&self) -> &'static str {
+        match self.status {
             200 => "OK",
             400 => "Bad Request",
             401 => "Unauthorized",
             404 => "Not Found",
             405 => "Method Not Allowed",
+            408 => "Request Timeout",
             409 => "Conflict",
+            429 => "Too Many Requests",
             503 => "Service Unavailable",
             _ => "Internal Server Error",
-        };
+        }
+    }
+
+    /// Serialize with `connection: close` (the v1 single-shot framing).
+    pub fn write_to<W: Write>(&self, w: W) -> std::io::Result<()> {
+        self.write_to_opts(w, false, false)
+    }
+
+    /// Serialize with explicit connection semantics. `head_only` writes
+    /// status line and headers (content-length included, per HEAD
+    /// semantics) but suppresses the body.
+    pub fn write_to_opts<W: Write>(
+        &self,
+        mut w: W,
+        keep_alive: bool,
+        head_only: bool,
+    ) -> std::io::Result<()> {
         write!(
             w,
-            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\n",
             self.status,
-            reason,
+            self.reason(),
             self.content_type,
             self.body.len()
         )?;
-        w.write_all(&self.body)?;
+        for (k, v) in &self.headers {
+            write!(w, "{k}: {v}\r\n")?;
+        }
+        write!(
+            w,
+            "connection: {}\r\n\r\n",
+            if keep_alive { "keep-alive" } else { "close" }
+        )?;
+        if !head_only {
+            w.write_all(&self.body)?;
+        }
         w.flush()
     }
 }
@@ -209,6 +304,8 @@ mod tests {
         assert_eq!(r.path, "/api/v1/experiment");
         assert_eq!(r.query["limit"], "5");
         assert_eq!(r.query["name"], "m x");
+        assert_eq!(r.version, "HTTP/1.1");
+        assert!(r.wants_keep_alive());
     }
 
     #[test]
@@ -231,6 +328,38 @@ mod tests {
     }
 
     #[test]
+    fn read_next_signals_clean_eof() {
+        assert!(Request::read_next(&mut &b""[..]).unwrap().is_none());
+        let raw = b"GET /x HTTP/1.1\r\n\r\n";
+        assert!(Request::read_next(&mut &raw[..]).unwrap().is_some());
+    }
+
+    #[test]
+    fn read_next_preserves_pipelined_requests() {
+        let raw = b"GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\n\r\n";
+        let mut reader = &raw[..];
+        let a = Request::read_next(&mut reader).unwrap().unwrap();
+        let b = Request::read_next(&mut reader).unwrap().unwrap();
+        assert_eq!(a.path, "/a");
+        assert_eq!(b.path, "/b");
+        assert!(Request::read_next(&mut reader).unwrap().is_none());
+    }
+
+    #[test]
+    fn keep_alive_defaults_by_version() {
+        let mut r = Request::synthetic("GET", "/x");
+        assert!(r.wants_keep_alive()); // 1.1 default
+        r.headers.insert("connection".into(), "close".into());
+        assert!(!r.wants_keep_alive());
+        let mut r10 = Request::synthetic("GET", "/x");
+        r10.version = "HTTP/1.0".into();
+        assert!(!r10.wants_keep_alive()); // 1.0 default
+        r10.headers
+            .insert("connection".into(), "Keep-Alive".into());
+        assert!(r10.wants_keep_alive());
+    }
+
+    #[test]
     fn response_serializes() {
         let r = Response::ok_result(Json::Str("hi".into()));
         let mut buf = Vec::new();
@@ -238,11 +367,32 @@ mod tests {
         let text = String::from_utf8(buf).unwrap();
         assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
         assert!(text.contains(r#""status":"OK""#));
+        assert!(text.contains("connection: close\r\n"));
+    }
+
+    #[test]
+    fn keep_alive_and_head_framing() {
+        let r = Response::ok(Json::Str("payload".into()))
+            .with_header("Allow", "GET, HEAD");
+        let mut buf = Vec::new();
+        r.write_to_opts(&mut buf, true, true).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.contains("connection: keep-alive\r\n"));
+        assert!(text.contains("Allow: GET, HEAD\r\n"));
+        assert!(text.contains("content-length: 9\r\n")); // "payload" + quotes
+        assert!(text.ends_with("\r\n\r\n")); // no body after headers
     }
 
     #[test]
     fn url_decoding() {
         assert_eq!(url_decode("a%20b%2Fc"), "a b/c");
         assert_eq!(url_decode("100%"), "100%"); // tolerate bad escapes
+    }
+
+    #[test]
+    fn synthetic_splits_query() {
+        let r = Request::synthetic("GET", "/api/v2/experiment?limit=3");
+        assert_eq!(r.path, "/api/v2/experiment");
+        assert_eq!(r.query["limit"], "3");
     }
 }

@@ -1,0 +1,328 @@
+//! Composable middleware chain around route dispatch.
+//!
+//! Middlewares wrap the matched handler (or the 404/405 terminal) in
+//! registration order: the first one added sees the request first and
+//! the response last. The matched route *pattern* (not the concrete
+//! path) is passed alongside so metrics aggregate per route, keeping
+//! cardinality bounded.
+
+use super::http::{Request, Response};
+use super::router::error_response;
+use crate::storage::MetricStore;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Continuation invoking the rest of the chain and the handler.
+pub type Next<'a> = &'a dyn Fn(&Request) -> Response;
+
+pub trait Middleware: Send + Sync {
+    /// `route` is the matched route pattern, `None` when no route
+    /// matched (the terminal will answer 404/405).
+    fn handle(
+        &self,
+        req: &Request,
+        route: Option<&str>,
+        next: Next<'_>,
+    ) -> Response;
+}
+
+/// Run `chain` around `terminal`.
+pub fn run_chain(
+    chain: &[Arc<dyn Middleware>],
+    req: &Request,
+    route: Option<&str>,
+    terminal: &dyn Fn(&Request) -> Response,
+) -> Response {
+    match chain.split_first() {
+        None => terminal(req),
+        Some((m, rest)) => m.handle(req, route, &|r: &Request| {
+            run_chain(rest, r, route, terminal)
+        }),
+    }
+}
+
+/// Bearer-token auth (§3.1: the REST service is responsible for
+/// authentication). Rejects every request without the expected token.
+pub struct AuthMiddleware {
+    token: String,
+}
+
+impl AuthMiddleware {
+    pub fn new(token: &str) -> AuthMiddleware {
+        AuthMiddleware {
+            token: token.to_string(),
+        }
+    }
+}
+
+impl Middleware for AuthMiddleware {
+    fn handle(
+        &self,
+        req: &Request,
+        _route: Option<&str>,
+        next: Next<'_>,
+    ) -> Response {
+        if req.bearer_token() == Some(self.token.as_str()) {
+            next(req)
+        } else {
+            error_response(
+                &req.path,
+                &crate::SubmarineError::Unauthorized(
+                    "missing or bad token".into(),
+                ),
+            )
+        }
+    }
+}
+
+/// Request logging: method, path, status, latency.
+#[derive(Default)]
+pub struct LogMiddleware;
+
+impl Middleware for LogMiddleware {
+    fn handle(
+        &self,
+        req: &Request,
+        route: Option<&str>,
+        next: Next<'_>,
+    ) -> Response {
+        let start = Instant::now();
+        let resp = next(req);
+        crate::debuglog!(
+            "httpd",
+            "{} {} -> {} [{}] in {:.1}us",
+            req.method,
+            req.path,
+            resp.status,
+            route.unwrap_or("-"),
+            start.elapsed().as_secs_f64() * 1e6
+        );
+        resp
+    }
+}
+
+/// Experiment-id key under which HTTP metrics land in the
+/// [`MetricStore`] (readable via the same metrics API as experiments).
+pub const HTTP_METRICS_KEY: &str = "__http__";
+
+/// Per-route latency/throughput metrics. Each request appends a
+/// latency sample to the series `("__http__", "<METHOD> <route>")`;
+/// series length over wall time gives throughput, and the store's
+/// `summary`/`sparkline` give the latency profile. Retention is
+/// bounded per route ([`HTTP_METRICS_CAP`] most recent samples) so a
+/// long-running server doesn't grow the store without limit.
+pub struct MetricsMiddleware {
+    metrics: Arc<MetricStore>,
+    seq: AtomicU64,
+}
+
+/// Minimum retained latency samples per route series (the store keeps
+/// between this and twice this).
+pub const HTTP_METRICS_CAP: usize = 4096;
+
+impl MetricsMiddleware {
+    pub fn new(metrics: Arc<MetricStore>) -> MetricsMiddleware {
+        MetricsMiddleware {
+            metrics,
+            seq: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Middleware for MetricsMiddleware {
+    fn handle(
+        &self,
+        req: &Request,
+        route: Option<&str>,
+        next: Next<'_>,
+    ) -> Response {
+        let start = Instant::now();
+        let resp = next(req);
+        // Both label halves must be bounded: the route side is a
+        // registered pattern (or "unmatched"), and the method side is
+        // folded to a fixed set so arbitrary request-line tokens can't
+        // mint unbounded metric series pre-auth.
+        let method = req.method.to_uppercase();
+        let method = match method.as_str() {
+            "GET" | "HEAD" | "POST" | "PUT" | "DELETE" | "PATCH"
+            | "OPTIONS" => method.as_str(),
+            _ => "OTHER",
+        };
+        let label =
+            format!("{} {}", method, route.unwrap_or("unmatched"));
+        let step = self.seq.fetch_add(1, Ordering::Relaxed);
+        self.metrics.log_bounded(
+            HTTP_METRICS_KEY,
+            &label,
+            step,
+            start.elapsed().as_secs_f64(),
+            HTTP_METRICS_CAP,
+        );
+        resp
+    }
+}
+
+/// Optional token-bucket rate limiter (global, `rate` requests/sec
+/// sustained with a burst of `burst`). Over-limit requests get 429.
+pub struct RateLimitMiddleware {
+    rate: f64,
+    burst: f64,
+    state: Mutex<(f64, Instant)>, // (tokens, last refill)
+}
+
+impl RateLimitMiddleware {
+    pub fn new(rate: f64, burst: f64) -> RateLimitMiddleware {
+        let rate = rate.max(1e-9);
+        let burst = burst.max(1.0);
+        RateLimitMiddleware {
+            rate,
+            burst,
+            state: Mutex::new((burst, Instant::now())),
+        }
+    }
+
+    fn try_take(&self) -> bool {
+        let mut s = self.state.lock().unwrap();
+        let now = Instant::now();
+        let elapsed = now.duration_since(s.1).as_secs_f64();
+        s.0 = (s.0 + elapsed * self.rate).min(self.burst);
+        s.1 = now;
+        if s.0 >= 1.0 {
+            s.0 -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+impl Middleware for RateLimitMiddleware {
+    fn handle(
+        &self,
+        req: &Request,
+        _route: Option<&str>,
+        next: Next<'_>,
+    ) -> Response {
+        if self.try_take() {
+            next(req)
+        } else {
+            error_response(
+                &req.path,
+                &crate::SubmarineError::RateLimited(
+                    "request rate over limit; retry later".into(),
+                ),
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn ok_terminal(_: &Request) -> Response {
+        Response::ok(Json::Bool(true))
+    }
+
+    #[test]
+    fn empty_chain_hits_terminal() {
+        let req = Request::synthetic("GET", "/x");
+        let resp = run_chain(&[], &req, None, &ok_terminal);
+        assert_eq!(resp.status, 200);
+    }
+
+    #[test]
+    fn auth_blocks_and_admits() {
+        let chain: Vec<Arc<dyn Middleware>> =
+            vec![Arc::new(AuthMiddleware::new("sekrit"))];
+        let anon = Request::synthetic("GET", "/api/v2/experiment");
+        let resp = run_chain(&chain, &anon, None, &ok_terminal);
+        assert_eq!(resp.status, 401);
+        let body =
+            String::from_utf8(resp.body).unwrap();
+        assert!(body.contains("Unauthorized"), "{body}");
+        let mut authed = Request::synthetic("GET", "/api/v2/experiment");
+        authed
+            .headers
+            .insert("authorization".into(), "Bearer sekrit".into());
+        let resp = run_chain(&chain, &authed, None, &ok_terminal);
+        assert_eq!(resp.status, 200);
+    }
+
+    #[test]
+    fn metrics_record_per_route() {
+        let store = Arc::new(MetricStore::new());
+        let chain: Vec<Arc<dyn Middleware>> = vec![Arc::new(
+            MetricsMiddleware::new(Arc::clone(&store)),
+        )];
+        let req = Request::synthetic("GET", "/api/v2/experiment/e-1");
+        for _ in 0..3 {
+            run_chain(
+                &chain,
+                &req,
+                Some("/api/v2/experiment/:id"),
+                &ok_terminal,
+            );
+        }
+        let series = store.series(
+            HTTP_METRICS_KEY,
+            "GET /api/v2/experiment/:id",
+        );
+        assert_eq!(series.len(), 3);
+        assert!(series.iter().all(|p| p.value >= 0.0));
+    }
+
+    #[test]
+    fn unknown_methods_fold_into_one_series() {
+        let store = Arc::new(MetricStore::new());
+        let chain: Vec<Arc<dyn Middleware>> = vec![Arc::new(
+            MetricsMiddleware::new(Arc::clone(&store)),
+        )];
+        for m in ["XQZ1", "XQZ2", "BREW"] {
+            let req = Request::synthetic(m, "/api/v2/cluster");
+            run_chain(&chain, &req, None, &ok_terminal);
+        }
+        let series =
+            store.series(HTTP_METRICS_KEY, "OTHER unmatched");
+        assert_eq!(series.len(), 3);
+    }
+
+    #[test]
+    fn rate_limit_hits_429_past_burst() {
+        let chain: Vec<Arc<dyn Middleware>> =
+            vec![Arc::new(RateLimitMiddleware::new(0.000001, 2.0))];
+        let req = Request::synthetic("GET", "/api/v2/cluster");
+        assert_eq!(run_chain(&chain, &req, None, &ok_terminal).status, 200);
+        assert_eq!(run_chain(&chain, &req, None, &ok_terminal).status, 200);
+        let limited = run_chain(&chain, &req, None, &ok_terminal);
+        assert_eq!(limited.status, 429);
+    }
+
+    #[test]
+    fn chain_runs_in_registration_order() {
+        struct Tag(&'static str);
+        impl Middleware for Tag {
+            fn handle(
+                &self,
+                req: &Request,
+                _route: Option<&str>,
+                next: Next<'_>,
+            ) -> Response {
+                next(req).with_header("x-tag", self.0)
+            }
+        }
+        let chain: Vec<Arc<dyn Middleware>> =
+            vec![Arc::new(Tag("outer")), Arc::new(Tag("inner"))];
+        let req = Request::synthetic("GET", "/x");
+        let resp = run_chain(&chain, &req, None, &ok_terminal);
+        // inner (closest to terminal) attaches first, outer last
+        let tags: Vec<&str> = resp
+            .headers
+            .iter()
+            .map(|(_, v)| v.as_str())
+            .collect();
+        assert_eq!(tags, vec!["inner", "outer"]);
+    }
+}

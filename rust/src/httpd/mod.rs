@@ -4,15 +4,28 @@
 //! for authentication.")
 //!
 //! A std-only HTTP/1.1 server (the offline registry lacks hyper/tokio):
-//! thread-pooled accept loop, request parser, router, bearer-token auth,
-//! JSON responses.  Routes mirror Apache Submarine's v1 API
-//! (`/api/v1/experiment`, `/api/v1/template`, `/api/v1/environment`,
-//! `/api/v1/model`, ...).
+//! capped thread-per-connection accept loop with keep-alive, request
+//! parser, compiled segment-trie router ([`trie`]), typed handlers with
+//! extractors ([`handler`]), a composable middleware chain
+//! ([`middleware`]: auth, logging, per-route metrics, rate limiting),
+//! and versioned JSON envelopes ([`router`]).
+//!
+//! Routes ([`v2`]) serve Apache Submarine's surface under `/api/v2`
+//! (typed envelope, pagination, filtering) with `/api/v1` kept as a
+//! compat shim (`/api/v1/experiment`, `/api/v1/template`,
+//! `/api/v1/environment`, `/api/v1/model`, ...). See `docs/API.md`.
 
+pub mod handler;
 pub mod http;
+pub mod middleware;
 pub mod router;
 pub mod server;
+pub mod trie;
+pub mod v2;
 
+pub use handler::{typed, Body, Ctx, Handler, Page};
 pub use http::{Request, Response};
-pub use router::Router;
+pub use middleware::Middleware;
+pub use router::{Envelope, Router};
 pub use server::Server;
+pub use v2::ApiConfig;

@@ -1,31 +1,106 @@
-//! Method + path-pattern router with `:param` captures.
+//! Trie router with typed handlers, envelopes, and a middleware chain.
+//!
+//! Dispatch = one trie walk (O(path segments)) → middleware chain →
+//! handler → envelope. The route table is compiled at registration into
+//! a segment trie ([`super::trie`]); handlers are [`Handler`] trait
+//! objects returning `Result<Json>`, so success/error serialization
+//! lives here in exactly one place:
+//!
+//! - v1 envelope (compat): `{"status":"OK","result":...}` /
+//!   `{"status":"ERROR","message":...}`
+//! - v2 envelope: `{"status":"OK","code":200,"result":...}` /
+//!   `{"status":"ERROR","code":C,"error":{"type":T,"message":M}}`
+//!
+//! 405 responses carry an `Allow` header; `HEAD` is answered by the
+//! matching `GET` route (the server suppresses the body).
 
+use super::handler::{Ctx, Handler};
 use super::http::{Request, Response};
+use super::middleware::{run_chain, Middleware};
+use super::trie::PathTrie;
+use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-type Handler = dyn Fn(&Request, &BTreeMap<String, String>) -> Response
-    + Send
-    + Sync;
-
-struct Route {
-    method: String,
-    segments: Vec<Seg>,
-    handler: Arc<Handler>,
+/// Which response envelope a route uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Envelope {
+    V1,
+    V2,
 }
 
-enum Seg {
-    Lit(String),
-    Param(String),
+/// Envelope implied by a request path (used for errors produced before
+/// a route is known: 404, auth, rate limiting, parse failures).
+pub fn envelope_of_path(path: &str) -> Envelope {
+    if path.starts_with("/api/v2") {
+        Envelope::V2
+    } else {
+        Envelope::V1
+    }
 }
 
-/// Routes requests to handlers; supports `/api/v1/experiment/:id` style
+/// Success wrapping for a handler's output.
+pub fn wrap_ok(envelope: Envelope, result: Json) -> Response {
+    match envelope {
+        Envelope::V1 => Response::ok_result(result),
+        Envelope::V2 => Response::json(
+            200,
+            Json::obj()
+                .set("status", Json::Str("OK".into()))
+                .set("code", Json::Num(200.0))
+                .set("result", result),
+        ),
+    }
+}
+
+/// Error wrapping with an explicit machine-readable kind.
+pub fn error_json(
+    envelope: Envelope,
+    code: u16,
+    kind: &str,
+    msg: &str,
+) -> Response {
+    match envelope {
+        Envelope::V1 => Response::error(code, msg),
+        Envelope::V2 => Response::json(
+            code,
+            Json::obj()
+                .set("status", Json::Str("ERROR".into()))
+                .set("code", Json::Num(code as f64))
+                .set(
+                    "error",
+                    Json::obj()
+                        .set("type", Json::Str(kind.to_string()))
+                        .set("message", Json::Str(msg.to_string())),
+                ),
+        ),
+    }
+}
+
+/// Error wrapping for a [`crate::SubmarineError`].
+pub fn wrap_err(envelope: Envelope, e: &crate::SubmarineError) -> Response {
+    error_json(envelope, e.http_status(), e.kind(), &e.to_string())
+}
+
+/// Envelope-correct error response for a raw path (middleware, parse
+/// failures — anywhere the matched route is not in hand).
+pub fn error_response(path: &str, e: &crate::SubmarineError) -> Response {
+    wrap_err(envelope_of_path(path), e)
+}
+
+struct RouteEntry {
+    handler: Arc<dyn Handler>,
+    envelope: Envelope,
+}
+
+type MethodMap = BTreeMap<String, RouteEntry>;
+
+/// Routes requests to handlers; supports `/api/v2/experiment/:id` style
 /// patterns.
 #[derive(Default)]
 pub struct Router {
-    routes: Vec<Route>,
-    /// Optional bearer token required on every request (§3.1 auth).
-    pub auth_token: Option<String>,
+    trie: PathTrie<MethodMap>,
+    middlewares: Vec<Arc<dyn Middleware>>,
 }
 
 impl Router {
@@ -33,80 +108,98 @@ impl Router {
         Router::default()
     }
 
-    pub fn with_auth(mut self, token: &str) -> Router {
-        self.auth_token = Some(token.to_string());
-        self
+    /// Append a middleware (outermost first).
+    pub fn add_middleware(&mut self, m: Arc<dyn Middleware>) {
+        self.middlewares.push(m);
     }
 
-    pub fn add<F>(&mut self, method: &str, pattern: &str, handler: F)
-    where
-        F: Fn(&Request, &BTreeMap<String, String>) -> Response
-            + Send
-            + Sync
-            + 'static,
+    /// Register a handler for `method pattern` under `envelope`.
+    pub fn route<H>(
+        &mut self,
+        method: &str,
+        pattern: &str,
+        envelope: Envelope,
+        handler: H,
+    ) where
+        H: Handler + 'static,
     {
-        let segments = pattern
-            .trim_matches('/')
-            .split('/')
-            .filter(|s| !s.is_empty())
-            .map(|s| {
-                if let Some(p) = s.strip_prefix(':') {
-                    Seg::Param(p.to_string())
-                } else {
-                    Seg::Lit(s.to_string())
-                }
-            })
-            .collect();
-        self.routes.push(Route {
-            method: method.to_uppercase(),
-            segments,
-            handler: Arc::new(handler),
-        });
+        self.route_shared(method, pattern, envelope, Arc::new(handler));
+    }
+
+    /// Register a shared handler (one endpoint served under both the v1
+    /// shim and v2 paths).
+    pub fn route_shared(
+        &mut self,
+        method: &str,
+        pattern: &str,
+        envelope: Envelope,
+        handler: Arc<dyn Handler>,
+    ) {
+        let slot = self
+            .trie
+            .entry(pattern)
+            .get_or_insert_with(MethodMap::new);
+        slot.insert(
+            method.to_uppercase(),
+            RouteEntry { handler, envelope },
+        );
     }
 
     pub fn dispatch(&self, req: &Request) -> Response {
-        if let Some(expect) = &self.auth_token {
-            if req.bearer_token() != Some(expect.as_str()) {
-                return Response::error(401, "missing or bad token");
+        let hit = self.trie.lookup(&req.path);
+        let label: Option<&str> = hit.as_ref().map(|(_, pat, _)| *pat);
+        let terminal = |r: &Request| -> Response {
+            match &hit {
+                None => error_json(
+                    envelope_of_path(&r.path),
+                    404,
+                    "NotFound",
+                    &format!("no route for {}", r.path),
+                ),
+                Some((methods, _pat, params)) => {
+                    dispatch_method(methods, params, r)
+                }
+            }
+        };
+        run_chain(&self.middlewares, req, label, &terminal)
+    }
+}
+
+fn dispatch_method(
+    methods: &MethodMap,
+    params: &BTreeMap<String, String>,
+    req: &Request,
+) -> Response {
+    let method = req.method.to_uppercase();
+    // HEAD is answered by the GET route; the server suppresses the body
+    // while keeping content-length (RFC 9110 §9.3.2).
+    let entry = methods.get(&method).or_else(|| {
+        (method == "HEAD").then(|| methods.get("GET")).flatten()
+    });
+    match entry {
+        Some(e) => {
+            let ctx = Ctx { req, params };
+            match e.handler.handle(&ctx) {
+                Ok(result) => wrap_ok(e.envelope, result),
+                Err(err) => wrap_err(e.envelope, &err),
             }
         }
-        let parts: Vec<&str> = req
-            .path
-            .trim_matches('/')
-            .split('/')
-            .filter(|s| !s.is_empty())
-            .collect();
-        let mut saw_path = false;
-        for route in &self.routes {
-            if route.segments.len() != parts.len() {
-                continue;
+        None => {
+            let mut allow: Vec<String> =
+                methods.keys().cloned().collect();
+            if methods.contains_key("GET")
+                && !methods.contains_key("HEAD")
+            {
+                allow.push("HEAD".to_string());
             }
-            let mut params = BTreeMap::new();
-            let matches =
-                route.segments.iter().zip(&parts).all(|(seg, part)| {
-                    match seg {
-                        Seg::Lit(l) => l == part,
-                        Seg::Param(name) => {
-                            params.insert(
-                                name.clone(),
-                                part.to_string(),
-                            );
-                            true
-                        }
-                    }
-                });
-            if !matches {
-                continue;
-            }
-            saw_path = true;
-            if route.method == req.method {
-                return (route.handler)(req, &params);
-            }
-        }
-        if saw_path {
-            Response::error(405, "method not allowed")
-        } else {
-            Response::error(404, &format!("no route for {}", req.path))
+            allow.sort();
+            error_json(
+                envelope_of_path(&req.path),
+                405,
+                "MethodNotAllowed",
+                &format!("method {method} not allowed"),
+            )
+            .with_header("Allow", &allow.join(", "))
         }
     }
 }
@@ -114,65 +207,143 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::json::Json;
+    use crate::httpd::middleware::AuthMiddleware;
 
     fn req(method: &str, path: &str) -> Request {
-        Request {
-            method: method.into(),
-            path: path.into(),
-            query: BTreeMap::new(),
-            headers: BTreeMap::new(),
-            body: Vec::new(),
+        Request::synthetic(method, path)
+    }
+
+    fn ok_handler(
+        text: &'static str,
+    ) -> impl Handler + 'static {
+        move |_: &Ctx<'_>| -> crate::Result<Json> {
+            Ok(Json::Str(text.to_string()))
         }
     }
 
     fn router() -> Router {
         let mut r = Router::new();
-        r.add("GET", "/api/v1/experiment", |_, _| {
-            Response::ok(Json::Str("list".into()))
-        });
-        r.add("GET", "/api/v1/experiment/:id", |_, p| {
-            Response::ok(Json::Str(format!("get {}", p["id"])))
-        });
-        r.add("POST", "/api/v1/experiment", |_, _| {
-            Response::ok(Json::Str("created".into()))
-        });
+        r.route(
+            "GET",
+            "/api/v1/experiment",
+            Envelope::V1,
+            ok_handler("list"),
+        );
+        r.route(
+            "GET",
+            "/api/v1/experiment/:id",
+            Envelope::V1,
+            |ctx: &Ctx<'_>| -> crate::Result<Json> {
+                Ok(Json::Str(format!("get {}", ctx.param("id")?)))
+            },
+        );
+        r.route(
+            "POST",
+            "/api/v1/experiment",
+            Envelope::V1,
+            ok_handler("created"),
+        );
+        r.route(
+            "GET",
+            "/api/v2/experiment",
+            Envelope::V2,
+            ok_handler("list2"),
+        );
         r
+    }
+
+    fn body_text(resp: &Response) -> String {
+        String::from_utf8(resp.body.clone()).unwrap()
     }
 
     #[test]
     fn literal_and_param_routes() {
         let r = router();
-        assert_eq!(
-            r.dispatch(&req("GET", "/api/v1/experiment")).body,
-            Json::Str("list".into()).dump().into_bytes()
-        );
+        let resp = r.dispatch(&req("GET", "/api/v1/experiment"));
+        assert_eq!(resp.status, 200);
+        assert!(body_text(&resp).contains(r#""result":"list""#));
         let resp = r.dispatch(&req("GET", "/api/v1/experiment/e-42"));
-        assert!(String::from_utf8(resp.body).unwrap().contains("get e-42"));
+        assert!(body_text(&resp).contains("get e-42"));
     }
 
     #[test]
     fn not_found_and_method_not_allowed() {
         let r = router();
         assert_eq!(r.dispatch(&req("GET", "/nope")).status, 404);
+        let resp = r.dispatch(&req("DELETE", "/api/v1/experiment"));
+        assert_eq!(resp.status, 405);
+        let allow = resp
+            .headers
+            .iter()
+            .find(|(k, _)| k == "Allow")
+            .map(|(_, v)| v.as_str());
+        assert_eq!(allow, Some("GET, HEAD, POST"));
+    }
+
+    #[test]
+    fn head_answered_by_get_route() {
+        let r = router();
+        let resp = r.dispatch(&req("HEAD", "/api/v1/experiment"));
+        assert_eq!(resp.status, 200);
+        assert!(body_text(&resp).contains("list"));
+    }
+
+    #[test]
+    fn envelopes_differ_by_version() {
+        let r = router();
+        let v1 = r.dispatch(&req("GET", "/api/v1/experiment"));
+        let j1 = Json::parse(&body_text(&v1)).unwrap();
+        assert!(j1.get("code").is_none());
+        assert_eq!(j1.str_field("status"), Some("OK"));
+        let v2 = r.dispatch(&req("GET", "/api/v2/experiment"));
+        let j2 = Json::parse(&body_text(&v2)).unwrap();
+        assert_eq!(j2.num_field("code"), Some(200.0));
+        // v2 errors carry the typed error object
+        let e2 = r.dispatch(&req("GET", "/api/v2/zzz"));
+        let j = Json::parse(&body_text(&e2)).unwrap();
         assert_eq!(
-            r.dispatch(&req("DELETE", "/api/v1/experiment")).status,
-            405
+            j.at(&["error", "type"]).and_then(Json::as_str),
+            Some("NotFound")
+        );
+        // v1 errors keep the flat message field
+        let e1 = r.dispatch(&req("GET", "/api/v1/zzz"));
+        let j = Json::parse(&body_text(&e1)).unwrap();
+        assert!(j.str_field("message").is_some());
+    }
+
+    #[test]
+    fn handler_errors_map_through_envelope() {
+        let mut r = router();
+        r.route(
+            "GET",
+            "/api/v2/boom",
+            Envelope::V2,
+            |_: &Ctx<'_>| -> crate::Result<Json> {
+                Err(crate::SubmarineError::NotFound("thing".into()))
+            },
+        );
+        let resp = r.dispatch(&req("GET", "/api/v2/boom"));
+        assert_eq!(resp.status, 404);
+        let j = Json::parse(&body_text(&resp)).unwrap();
+        assert_eq!(j.num_field("code"), Some(404.0));
+        assert_eq!(
+            j.at(&["error", "type"]).and_then(Json::as_str),
+            Some("NotFound")
         );
     }
 
     #[test]
     fn auth_enforced_when_configured() {
-        let r = router().with_auth("secret");
+        let mut r = router();
+        r.add_middleware(Arc::new(AuthMiddleware::new("secret")));
         assert_eq!(
             r.dispatch(&req("GET", "/api/v1/experiment")).status,
             401
         );
         let mut authed = req("GET", "/api/v1/experiment");
-        authed.headers.insert(
-            "authorization".into(),
-            "Bearer secret".into(),
-        );
+        authed
+            .headers
+            .insert("authorization".into(), "Bearer secret".into());
         assert_eq!(r.dispatch(&authed).status, 200);
     }
 

@@ -1,21 +1,26 @@
 //! The Submarine server (paper Fig. 1 control plane): wires every core
-//! service behind the REST API and runs the accept loop on a thread pool.
+//! service behind the REST API and runs a thread-per-connection accept
+//! loop capped at [`MAX_CONNECTIONS`] (beyond the cap, connections are
+//! shed with 503 rather than queued).
+//!
+//! Connections are HTTP/1.1 keep-alive: each connection thread loops
+//! read-request → dispatch → write content-length-framed response on the
+//! same socket until the client closes, asks for `connection: close`, or
+//! the per-connection request cap / idle timeout is hit.
 
 use super::http::{Request, Response};
 use super::router::Router;
-use crate::environment::{Environment, EnvironmentManager};
+use super::v2::{build_api, ApiConfig};
+use crate::environment::EnvironmentManager;
 use crate::experiment::manager::ExperimentManager;
 use crate::experiment::monitor::ExperimentMonitor;
-use crate::experiment::spec::ExperimentSpec;
 use crate::model::ModelRegistry;
 use crate::orchestrator::Submitter;
 use crate::storage::{MetaStore, MetricStore};
-use crate::template::{Template, TemplateManager};
-use crate::util::json::Json;
-use crate::util::threadpool::ThreadPool;
-use std::collections::BTreeMap;
+use crate::template::TemplateManager;
+use std::io::BufRead;
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 /// All core services (paper §3.2: "Submarine server consists of several
@@ -66,13 +71,38 @@ impl Services {
     }
 }
 
+/// Hard cap on requests served per connection (bounds one client's hold
+/// on a connection thread).
+const MAX_KEEPALIVE_REQUESTS: usize = 1024;
+
+/// Maximum concurrent connections. Keep-alive pins a thread per
+/// *connection* (not per request as in the seed design), so instead of
+/// a small fixed pool with an unbounded queue — which 8 long-lived
+/// clients could starve — each connection gets its own thread up to
+/// this cap, and connections beyond it are shed immediately with 503
+/// rather than queued behind busy ones.
+const MAX_CONNECTIONS: usize = 256;
+
+/// How long a keep-alive connection may sit idle between requests
+/// before the server reclaims its thread.
+const IDLE_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(5);
+
 /// The HTTP server.
 pub struct Server {
     router: Arc<Router>,
     listener: TcpListener,
-    pool: ThreadPool,
+    active: Arc<AtomicUsize>,
     stop: Arc<AtomicBool>,
     local_addr: std::net::SocketAddr,
+}
+
+/// Decrements the live-connection count even if a handler panics.
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
 }
 
 impl Server {
@@ -83,16 +113,29 @@ impl Server {
         port: u16,
         auth_token: Option<&str>,
     ) -> crate::Result<Server> {
-        let mut router = build_router(services);
-        if let Some(t) = auth_token {
-            router = router.with_auth(t);
-        }
+        Self::bind_with_config(
+            services,
+            port,
+            &ApiConfig {
+                auth_token: auth_token.map(str::to_string),
+                rate_limit: None,
+            },
+        )
+    }
+
+    /// Bind with the full API configuration (auth + rate limiting).
+    pub fn bind_with_config(
+        services: Arc<Services>,
+        port: u16,
+        cfg: &ApiConfig,
+    ) -> crate::Result<Server> {
+        let router = build_api(services, cfg);
         let listener = TcpListener::bind(("127.0.0.1", port))?;
         let local_addr = listener.local_addr()?;
         Ok(Server {
             router: Arc::new(router),
             listener,
-            pool: ThreadPool::new(8),
+            active: Arc::new(AtomicUsize::new(0)),
             stop: Arc::new(AtomicBool::new(false)),
             local_addr,
         })
@@ -117,8 +160,37 @@ impl Server {
             }
             match conn {
                 Ok(stream) => {
+                    if self.active.load(Ordering::Relaxed)
+                        >= MAX_CONNECTIONS
+                    {
+                        // Shed instead of queueing behind busy
+                        // connections: a prompt 503 beats an unbounded
+                        // backlog. The lingering close runs on its own
+                        // short-lived thread so a slow peer cannot
+                        // stall the accept loop at exactly the moment
+                        // the server is overloaded.
+                        let _ = std::thread::Builder::new()
+                            .name("submarine-shed".into())
+                            .spawn(move || shed_connection(stream));
+                        continue;
+                    }
+                    self.active.fetch_add(1, Ordering::Relaxed);
+                    let guard = ConnGuard(Arc::clone(&self.active));
                     let router = Arc::clone(&self.router);
-                    self.pool.execute(move || handle(&router, stream));
+                    let spawned = std::thread::Builder::new()
+                        .name("submarine-conn".into())
+                        .spawn(move || {
+                            let _guard = guard;
+                            handle(&router, stream);
+                        });
+                    if spawned.is_err() {
+                        crate::warnlog!(
+                            "httpd",
+                            "failed to spawn connection thread"
+                        );
+                        // guard was moved into the dropped closure, so
+                        // the count is already back down
+                    }
                 }
                 Err(e) => {
                     crate::warnlog!("httpd", "accept error: {e}");
@@ -140,285 +212,100 @@ impl Server {
     }
 }
 
-fn handle(router: &Router, stream: TcpStream) {
-    let peer = stream.peer_addr().ok();
-    let _ = stream.set_read_timeout(Some(std::time::Duration::from_secs(10)));
-    let response = match Request::read_from(&stream) {
-        Ok(req) => {
-            let resp = router.dispatch(&req);
-            crate::debuglog!(
-                "httpd",
-                "{} {} -> {} ({:?})",
-                req.method,
-                req.path,
-                resp.status,
-                peer
-            );
-            resp
+/// Refuse a connection with 503 and a lingering close. Writing first
+/// and then draining (bounded) before closing keeps the kernel from
+/// sending RST over unread input, which would discard the 503 in
+/// flight. Transport-layer errors like this one use the flat v1 error
+/// envelope: the request is never parsed, so the path (and thus the
+/// API version) is unknown.
+fn shed_connection(stream: TcpStream) {
+    use std::io::Read;
+    let _ = stream.set_read_timeout(Some(
+        std::time::Duration::from_millis(250),
+    ));
+    let resp = Response::error(503, "server at connection capacity");
+    let _ = resp.write_to_opts(&stream, false, false);
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    // bounded drain: at most ~64KB or ~8 read timeouts, then close
+    let mut sink = [0u8; 8192];
+    for _ in 0..8 {
+        match (&stream).read(&mut sink) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
         }
-        Err(e) => Response::error(400, &e.to_string()),
-    };
-    let _ = response.write_to(&stream);
+    }
     let _ = stream.shutdown(std::net::Shutdown::Both);
 }
 
-/// Build the v1 REST routes (mirrors Apache Submarine's API surface).
-pub fn build_router(s: Arc<Services>) -> Router {
-    let mut r = Router::new();
-
-    // ---- health / version
-    r.add("GET", "/api/v1/cluster", |_, _| {
-        Response::ok_result(
-            Json::obj()
-                .set("version", Json::Str(crate::version().into()))
-                .set("status", Json::Str("RUNNING".into())),
-        )
-    });
-
-    // ---- experiments
-    {
-        let s = Arc::clone(&s);
-        r.add("POST", "/api/v1/experiment", move |req, _| {
-            match req
-                .json()
-                .and_then(|j| ExperimentSpec::from_json(&j))
-                .and_then(|spec| s.experiments.submit(&spec))
-            {
-                Ok(id) => Response::ok_result(
-                    Json::obj().set("experimentId", Json::Str(id)),
-                ),
-                Err(e) => Response::from_err(&e),
-            }
-        });
-    }
-    {
-        let s = Arc::clone(&s);
-        r.add("GET", "/api/v1/experiment", move |_, _| {
-            let list: Vec<Json> = s
-                .experiments
-                .list()
-                .into_iter()
-                .map(|(id, st)| {
-                    Json::obj()
-                        .set("experimentId", Json::Str(id))
-                        .set("status", Json::Str(st.as_str().into()))
-                })
-                .collect();
-            Response::ok_result(Json::Arr(list))
-        });
-    }
-    {
-        let s = Arc::clone(&s);
-        r.add("GET", "/api/v1/experiment/:id", move |_, p| {
-            match s.experiments.get(&p["id"]) {
-                Ok(doc) => Response::ok_result(doc),
-                Err(e) => Response::from_err(&e),
-            }
-        });
-    }
-    {
-        let s = Arc::clone(&s);
-        r.add("DELETE", "/api/v1/experiment/:id", move |_, p| {
-            match s
-                .experiments
-                .kill(&p["id"])
-                .and_then(|_| s.experiments.delete(&p["id"]))
-            {
-                Ok(()) => Response::ok_result(Json::Bool(true)),
-                Err(e) => Response::from_err(&e),
-            }
-        });
-    }
-    {
-        let s = Arc::clone(&s);
-        r.add("POST", "/api/v1/experiment/:id/kill", move |_, p| {
-            match s.experiments.kill(&p["id"]) {
-                Ok(()) => Response::ok_result(Json::Bool(true)),
-                Err(e) => Response::from_err(&e),
-            }
-        });
-    }
-    {
-        let s = Arc::clone(&s);
-        r.add("GET", "/api/v1/experiment/:id/metrics", move |req, p| {
-            let metric = req
-                .query
-                .get("metric")
-                .cloned()
-                .unwrap_or_else(|| "loss".to_string());
-            let series = s.metrics.series(&p["id"], &metric);
-            let points: Vec<Json> = series
-                .iter()
-                .map(|pt| {
-                    Json::obj()
-                        .set("step", Json::Num(pt.step as f64))
-                        .set("value", Json::Num(pt.value))
-                })
-                .collect();
-            Response::ok_result(Json::Arr(points))
-        });
-    }
-
-    // ---- templates (paper §3.2.3)
-    {
-        let s = Arc::clone(&s);
-        r.add("POST", "/api/v1/template", move |req, _| {
-            match req
-                .json()
-                .and_then(|j| Template::from_json(&j))
-                .and_then(|t| s.templates.register(&t))
-            {
-                Ok(()) => Response::ok_result(Json::Bool(true)),
-                Err(e) => Response::from_err(&e),
-            }
-        });
-    }
-    {
-        let s = Arc::clone(&s);
-        r.add("GET", "/api/v1/template", move |_, _| {
-            Response::ok_result(Json::Arr(
-                s.templates
-                    .list()
-                    .into_iter()
-                    .map(Json::Str)
-                    .collect(),
-            ))
-        });
-    }
-    {
-        let s = Arc::clone(&s);
-        r.add("GET", "/api/v1/template/:name", move |_, p| {
-            match s.templates.get(&p["name"]) {
-                Ok(t) => Response::ok_result(t.to_json()),
-                Err(e) => Response::from_err(&e),
-            }
-        });
-    }
-    {
-        // "users can run experiments without writing one line of code":
-        // POST { "params": {name: value} } -> submitted experiment.
-        let s = Arc::clone(&s);
-        r.add("POST", "/api/v1/template/:name/submit", move |req, p| {
-            let values: BTreeMap<String, String> = match req.json() {
-                Ok(j) => j
-                    .get("params")
-                    .and_then(Json::as_obj)
-                    .map(|o| {
-                        o.iter()
-                            .map(|(k, v)| {
-                                (
-                                    k.clone(),
-                                    match v {
-                                        Json::Str(s) => s.clone(),
-                                        other => other.dump(),
-                                    },
-                                )
-                            })
-                            .collect()
-                    })
-                    .unwrap_or_default(),
-                Err(e) => return Response::from_err(&e),
-            };
-            match s
-                .templates
-                .instantiate(&p["name"], &values)
-                .and_then(|spec| s.experiments.submit(&spec))
-            {
-                Ok(id) => Response::ok_result(
-                    Json::obj().set("experimentId", Json::Str(id)),
-                ),
-                Err(e) => Response::from_err(&e),
-            }
-        });
-    }
-
-    // ---- environments (paper §3.2.1)
-    {
-        let s = Arc::clone(&s);
-        r.add("POST", "/api/v1/environment", move |req, _| {
-            match req
-                .json()
-                .and_then(|j| Environment::from_json(&j))
-                .and_then(|e| s.environments.register(&e))
-            {
-                Ok(()) => Response::ok_result(Json::Bool(true)),
-                Err(e) => Response::from_err(&e),
-            }
-        });
-    }
-    {
-        let s = Arc::clone(&s);
-        r.add("GET", "/api/v1/environment", move |_, _| {
-            Response::ok_result(Json::Arr(
-                s.environments
-                    .list()
-                    .into_iter()
-                    .map(Json::Str)
-                    .collect(),
-            ))
-        });
-    }
-    {
-        let s = Arc::clone(&s);
-        r.add("GET", "/api/v1/environment/:name", move |_, p| {
-            match s.environments.get(&p["name"]) {
-                Ok(env) => {
-                    let lock = s
-                        .environments
-                        .lock_of(&p["name"])
-                        .unwrap_or_default();
-                    Response::ok_result(env.to_json().set(
-                        "lock",
-                        Json::Arr(
-                            lock.into_iter().map(Json::Str).collect(),
-                        ),
-                    ))
+/// Serve one connection: keep-alive request loop. One `BufReader`
+/// spans the connection so pipelined read-ahead is never dropped.
+fn handle(router: &Router, stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(IDLE_TIMEOUT));
+    let _ = stream.set_nodelay(true);
+    let mut reader = std::io::BufReader::new(&stream);
+    for served in 0..MAX_KEEPALIVE_REQUESTS {
+        // Idle window first: waiting here separates "client sent
+        // nothing for IDLE_TIMEOUT" (routine keep-alive expiry — close
+        // silently) from a timeout in the middle of a request below
+        // (protocol problem — answer 408).
+        match reader.fill_buf() {
+            Ok(buf) if buf.is_empty() => break, // clean EOF
+            Ok(_) => {}
+            Err(_) => break, // idle timeout or dead socket
+        }
+        match Request::read_next(&mut reader) {
+            Ok(None) => break, // peer closed between requests
+            Ok(Some(req)) => {
+                let resp = router.dispatch(&req);
+                let keep = req.wants_keep_alive()
+                    && served + 1 < MAX_KEEPALIVE_REQUESTS;
+                let head_only = req.method.eq_ignore_ascii_case("HEAD");
+                if resp
+                    .write_to_opts(&stream, keep, head_only)
+                    .is_err()
+                {
+                    break;
                 }
-                Err(e) => Response::from_err(&e),
+                if !keep {
+                    break;
+                }
             }
-        });
-    }
-
-    // ---- models (paper §4.2)
-    {
-        let s = Arc::clone(&s);
-        r.add("GET", "/api/v1/model/:name", move |_, p| {
-            let versions = s.models.versions(&p["name"]);
-            if versions.is_empty() {
-                return Response::error(
-                    404,
-                    &format!("model {} not found", p["name"]),
+            Err(e) => {
+                // the request started arriving but didn't finish in
+                // time (trickled body) or didn't parse
+                let timed_out = matches!(
+                    &e,
+                    crate::SubmarineError::Io(io) if matches!(
+                        io.kind(),
+                        std::io::ErrorKind::WouldBlock
+                            | std::io::ErrorKind::TimedOut
+                    )
                 );
+                let resp = if timed_out {
+                    Response::error(408, "request incomplete")
+                } else {
+                    Response::error(400, &e.to_string())
+                };
+                let _ = resp.write_to_opts(&stream, false, false);
+                break;
             }
-            Response::ok_result(Json::Arr(
-                versions
-                    .iter()
-                    .map(|m| {
-                        Json::obj()
-                            .set(
-                                "version",
-                                Json::Num(m.version as f64),
-                            )
-                            .set(
-                                "stage",
-                                Json::Str(m.stage.as_str().into()),
-                            )
-                            .set(
-                                "experimentId",
-                                Json::Str(m.experiment_id.clone()),
-                            )
-                    })
-                    .collect(),
-            ))
-        });
+        }
     }
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+}
 
-    r
+/// Build the default-config router (v1 compat + v2). Kept for direct
+/// router-level use in tests and benches.
+pub fn build_router(s: Arc<Services>) -> Router {
+    build_api(s, &ApiConfig::default())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::experiment::spec::ExperimentSpec;
+    use crate::util::json::Json;
+    use std::io::{BufRead, BufReader, Read, Write};
 
     struct NullSubmitter;
     impl Submitter for NullSubmitter {
@@ -440,130 +327,134 @@ mod tests {
         ))
     }
 
-    fn dispatch(
-        router: &Router,
-        method: &str,
-        path: &str,
-        body: &str,
-    ) -> (u16, Json) {
-        let req = Request {
-            method: method.into(),
-            path: path.into(),
-            query: BTreeMap::new(),
-            headers: BTreeMap::new(),
-            body: body.as_bytes().to_vec(),
-        };
-        let resp = router.dispatch(&req);
-        let j = Json::parse(
-            std::str::from_utf8(&resp.body).unwrap_or("null"),
-        )
-        .unwrap_or(Json::Null);
-        (resp.status, j)
+    fn start() -> (Arc<Server>, u16, Arc<AtomicBool>,
+                   std::thread::JoinHandle<()>) {
+        let srv = Arc::new(Server::bind(services(), 0, None).unwrap());
+        let port = srv.port();
+        let stop = srv.stopper();
+        let handle = Arc::clone(&srv).serve_background();
+        (srv, port, stop, handle)
     }
 
-    const SPEC: &str = r#"{"meta":{"name":"mnist"},
-        "spec":{"Worker":{"replicas":1,"resources":"cpu=1"}}}"#;
-
-    #[test]
-    fn experiment_crud_over_router() {
-        let r = build_router(services());
-        let (st, j) = dispatch(&r, "POST", "/api/v1/experiment", SPEC);
-        assert_eq!(st, 200);
-        let id = j
-            .at(&["result", "experimentId"])
-            .unwrap()
-            .as_str()
-            .unwrap()
-            .to_string();
-        let (st, j) =
-            dispatch(&r, "GET", &format!("/api/v1/experiment/{id}"), "");
-        assert_eq!(st, 200);
-        assert_eq!(
-            j.at(&["result", "status"]).unwrap().as_str(),
-            Some("Accepted")
-        );
-        let (st, _) = dispatch(&r, "GET", "/api/v1/experiment", "");
-        assert_eq!(st, 200);
-        let (st, _) = dispatch(
-            &r,
-            "POST",
-            &format!("/api/v1/experiment/{id}/kill"),
-            "",
-        );
-        assert_eq!(st, 200);
-        let (st, j) = dispatch(
-            &r,
-            "DELETE",
-            &format!("/api/v1/experiment/{id}"),
-            "",
-        );
-        assert_eq!(st, 200, "{j:?}");
+    fn shutdown(
+        port: u16,
+        stop: Arc<AtomicBool>,
+        handle: std::thread::JoinHandle<()>,
+    ) {
+        stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(("127.0.0.1", port));
+        handle.join().unwrap();
     }
 
-    #[test]
-    fn bad_spec_is_400() {
-        let r = build_router(services());
-        let (st, _) = dispatch(&r, "POST", "/api/v1/experiment", "{}");
-        assert_eq!(st, 400);
-        let (st, _) =
-            dispatch(&r, "POST", "/api/v1/experiment", "not json");
-        assert_eq!(st, 400);
-    }
-
-    #[test]
-    fn template_register_and_submit() {
-        let r = build_router(services());
-        let tpl = crate::template::tf_mnist_template().to_json().dump();
-        let (st, _) = dispatch(&r, "POST", "/api/v1/template", &tpl);
-        assert_eq!(st, 200);
-        let (st, j) = dispatch(
-            &r,
-            "POST",
-            "/api/v1/template/tf-mnist-template/submit",
-            r#"{"params":{"learning_rate":"0.01","batch_size":"64"}}"#,
-        );
-        assert_eq!(st, 200, "{j:?}");
-        assert!(j.at(&["result", "experimentId"]).is_some());
-    }
-
-    #[test]
-    fn environment_register_and_lock() {
-        let r = build_router(services());
-        let (st, _) = dispatch(
-            &r,
-            "POST",
-            "/api/v1/environment",
-            r#"{"name":"tf","image":"submarine:tf",
-                "dependencies":["tensorflow>=2.0"]}"#,
-        );
-        assert_eq!(st, 200);
-        let (st, j) =
-            dispatch(&r, "GET", "/api/v1/environment/tf", "");
-        assert_eq!(st, 200);
-        let lock = j.at(&["result", "lock"]).unwrap().as_arr().unwrap();
-        assert!(!lock.is_empty());
+    /// Read one content-length-framed response off a reused stream.
+    fn read_response(
+        reader: &mut BufReader<&TcpStream>,
+    ) -> (u16, String) {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let status: u16 =
+            line.split(' ').nth(1).unwrap().parse().unwrap();
+        let mut len = 0usize;
+        loop {
+            let mut h = String::new();
+            reader.read_line(&mut h).unwrap();
+            let h = h.trim_end().to_ascii_lowercase();
+            if h.is_empty() {
+                break;
+            }
+            if let Some(v) = h.strip_prefix("content-length:") {
+                len = v.trim().parse().unwrap();
+            }
+        }
+        let mut body = vec![0u8; len];
+        reader.read_exact(&mut body).unwrap();
+        (status, String::from_utf8(body).unwrap())
     }
 
     #[test]
     fn end_to_end_over_tcp() {
-        let srv =
-            Arc::new(Server::bind(services(), 0, None).unwrap());
-        let port = srv.port();
-        let stop = srv.stopper();
-        let handle = Arc::clone(&srv).serve_background();
-        // real HTTP round trip
+        let (_srv, port, stop, handle) = start();
         let mut stream =
             TcpStream::connect(("127.0.0.1", port)).unwrap();
-        use std::io::{Read, Write};
-        write!(stream, "GET /api/v1/cluster HTTP/1.1\r\nhost: x\r\n\r\n")
-            .unwrap();
+        write!(
+            stream,
+            "GET /api/v1/cluster HTTP/1.1\r\nhost: x\r\nconnection: close\r\n\r\n"
+        )
+        .unwrap();
         let mut buf = String::new();
         stream.read_to_string(&mut buf).unwrap();
         assert!(buf.contains("200 OK"), "{buf}");
         assert!(buf.contains("RUNNING"));
-        // shutdown
-        stop.store(true, Ordering::Relaxed);
-        let _ = TcpStream::connect(("127.0.0.1", port));
-        handle.join().unwrap();
+        assert!(buf.contains("connection: close"));
+        shutdown(port, stop, handle);
+    }
+
+    #[test]
+    fn keep_alive_serves_many_requests_per_connection() {
+        let (_srv, port, stop, handle) = start();
+        let stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        let mut reader = BufReader::new(&stream);
+        for i in 0..5 {
+            write!(
+                &stream,
+                "GET /api/v2/cluster HTTP/1.1\r\nhost: x\r\n\r\n"
+            )
+            .unwrap();
+            let (status, body) = read_response(&mut reader);
+            assert_eq!(status, 200, "request {i}: {body}");
+            assert!(body.contains("RUNNING"));
+        }
+        drop(reader);
+        drop(stream);
+        shutdown(port, stop, handle);
+    }
+
+    #[test]
+    fn head_is_answered_without_body() {
+        let (_srv, port, stop, handle) = start();
+        let mut stream =
+            TcpStream::connect(("127.0.0.1", port)).unwrap();
+        write!(
+            stream,
+            "HEAD /api/v1/cluster HTTP/1.1\r\nhost: x\r\nconnection: close\r\n\r\n"
+        )
+        .unwrap();
+        let mut buf = String::new();
+        stream.read_to_string(&mut buf).unwrap();
+        assert!(buf.contains("200 OK"), "{buf}");
+        // content-length advertised, but no body bytes follow
+        assert!(buf.contains("content-length:"));
+        assert!(buf.trim_end().ends_with("connection: close"), "{buf}");
+        shutdown(port, stop, handle);
+    }
+
+    #[test]
+    fn unknown_method_gets_allow_header_over_tcp() {
+        let (_srv, port, stop, handle) = start();
+        let mut stream =
+            TcpStream::connect(("127.0.0.1", port)).unwrap();
+        write!(
+            stream,
+            "PATCH /api/v1/cluster HTTP/1.1\r\nhost: x\r\nconnection: close\r\n\r\n"
+        )
+        .unwrap();
+        let mut buf = String::new();
+        stream.read_to_string(&mut buf).unwrap();
+        assert!(buf.contains("405"), "{buf}");
+        assert!(buf.contains("Allow: GET, HEAD"), "{buf}");
+        shutdown(port, stop, handle);
+    }
+
+    #[test]
+    fn router_smoke_over_build_router() {
+        let r = build_router(services());
+        let resp =
+            r.dispatch(&Request::synthetic("GET", "/api/v2/cluster"));
+        assert_eq!(resp.status, 200);
+        let j = Json::parse(
+            std::str::from_utf8(&resp.body).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(j.num_field("code"), Some(200.0));
     }
 }

@@ -1,0 +1,185 @@
+//! Compiled segment trie for route dispatch.
+//!
+//! The v1 router scanned a `Vec<Route>` per request — O(routes ×
+//! segments) with a params allocation per candidate. The trie walks the
+//! path once: each segment either follows a literal edge (BTreeMap
+//! lookup) or the single `:param` edge, with backtracking so literal
+//! routes shadow parameter routes only where they actually match (e.g.
+//! `/a/b/d` and `/a/:x/c` coexist).
+
+use std::collections::BTreeMap;
+
+/// A per-path payload slot addressed by a `/seg/:param/...` pattern.
+pub struct PathTrie<T> {
+    root: Node<T>,
+}
+
+struct Node<T> {
+    literal: BTreeMap<String, Node<T>>,
+    /// At most one parameter edge per node: (param name, subtree).
+    param: Option<Box<(String, Node<T>)>>,
+    value: Option<T>,
+    /// The registered pattern, for metrics/log labels.
+    pattern: String,
+}
+
+impl<T> Default for Node<T> {
+    fn default() -> Node<T> {
+        Node {
+            literal: BTreeMap::new(),
+            param: None,
+            value: None,
+            pattern: String::new(),
+        }
+    }
+}
+
+impl<T> Default for PathTrie<T> {
+    fn default() -> PathTrie<T> {
+        PathTrie {
+            root: Node::default(),
+        }
+    }
+}
+
+fn segments(path: &str) -> impl Iterator<Item = &str> {
+    path.trim_matches('/').split('/').filter(|s| !s.is_empty())
+}
+
+impl<T> PathTrie<T> {
+    pub fn new() -> PathTrie<T> {
+        PathTrie::default()
+    }
+
+    /// Get-or-create the payload slot for `pattern`. Two patterns that
+    /// differ only in parameter *names* share a slot (the first name
+    /// wins), matching common router semantics.
+    pub fn entry(&mut self, pattern: &str) -> &mut Option<T> {
+        let mut node = &mut self.root;
+        for seg in segments(pattern) {
+            if let Some(name) = seg.strip_prefix(':') {
+                let boxed = node.param.get_or_insert_with(|| {
+                    Box::new((name.to_string(), Node::default()))
+                });
+                node = &mut boxed.1;
+            } else {
+                node = node
+                    .literal
+                    .entry(seg.to_string())
+                    .or_default();
+            }
+        }
+        if node.pattern.is_empty() {
+            node.pattern = normalize(pattern);
+        }
+        &mut node.value
+    }
+
+    /// Walk `path`; on a hit returns the payload, the registered
+    /// pattern, and the captured parameters.
+    pub fn lookup(
+        &self,
+        path: &str,
+    ) -> Option<(&T, &str, BTreeMap<String, String>)> {
+        let parts: Vec<&str> = segments(path).collect();
+        let mut captures: Vec<(String, String)> = Vec::new();
+        let node = find(&self.root, &parts, &mut captures)?;
+        let value = node.value.as_ref()?;
+        Some((
+            value,
+            node.pattern.as_str(),
+            captures.into_iter().collect(),
+        ))
+    }
+}
+
+fn normalize(pattern: &str) -> String {
+    let mut out = String::new();
+    for seg in segments(pattern) {
+        out.push('/');
+        out.push_str(seg);
+    }
+    if out.is_empty() {
+        out.push('/');
+    }
+    out
+}
+
+fn find<'a, T>(
+    node: &'a Node<T>,
+    parts: &[&str],
+    captures: &mut Vec<(String, String)>,
+) -> Option<&'a Node<T>> {
+    let (head, rest) = match parts.split_first() {
+        None => return node.value.is_some().then_some(node),
+        Some(x) => x,
+    };
+    if let Some(child) = node.literal.get(*head) {
+        if let Some(hit) = find(child, rest, captures) {
+            return Some(hit);
+        }
+    }
+    if let Some(boxed) = &node.param {
+        captures.push((boxed.0.clone(), head.to_string()));
+        if let Some(hit) = find(&boxed.1, rest, captures) {
+            return Some(hit);
+        }
+        captures.pop();
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_and_param_lookup() {
+        let mut t = PathTrie::new();
+        *t.entry("/api/v1/experiment") = Some(1);
+        *t.entry("/api/v1/experiment/:id") = Some(2);
+        let (v, pat, p) = t.lookup("/api/v1/experiment").unwrap();
+        assert_eq!((*v, pat), (1, "/api/v1/experiment"));
+        assert!(p.is_empty());
+        let (v, pat, p) = t.lookup("/api/v1/experiment/e-7").unwrap();
+        assert_eq!((*v, pat), (2, "/api/v1/experiment/:id"));
+        assert_eq!(p["id"], "e-7");
+        assert!(t.lookup("/api/v1/nope").is_none());
+    }
+
+    #[test]
+    fn backtracks_from_literal_to_param() {
+        let mut t = PathTrie::new();
+        *t.entry("/a/b/d") = Some(1);
+        *t.entry("/a/:x/c") = Some(2);
+        let (v, _, p) = t.lookup("/a/b/c").unwrap();
+        assert_eq!(*v, 2);
+        assert_eq!(p["x"], "b");
+        assert_eq!(*t.lookup("/a/b/d").unwrap().0, 1);
+    }
+
+    #[test]
+    fn nested_params_capture_in_order() {
+        let mut t = PathTrie::new();
+        *t.entry("/m/:name/v/:version") = Some(0);
+        let (_, _, p) = t.lookup("/m/bert/v/3").unwrap();
+        assert_eq!(p["name"], "bert");
+        assert_eq!(p["version"], "3");
+    }
+
+    #[test]
+    fn trailing_slashes_ignored() {
+        let mut t = PathTrie::new();
+        *t.entry("/x/y/") = Some(1);
+        assert!(t.lookup("/x/y").is_some());
+        assert!(t.lookup("x/y/").is_some());
+    }
+
+    #[test]
+    fn entry_is_reusable() {
+        let mut t: PathTrie<Vec<u32>> = PathTrie::new();
+        t.entry("/r").get_or_insert_with(Vec::new).push(1);
+        t.entry("/r").get_or_insert_with(Vec::new).push(2);
+        assert_eq!(t.lookup("/r").unwrap().0, &vec![1, 2]);
+    }
+}

@@ -1,0 +1,699 @@
+//! The REST API surface: every endpoint as a typed handler, registered
+//! under `/api/v2` (v2 envelope, pagination, filtering) with `/api/v1`
+//! kept as a thin compat shim over the same handlers and managers.
+//!
+//! See `docs/API.md` for the full route table.
+
+use super::handler::{typed, Body, Ctx, Handler, Page};
+use super::middleware::{
+    AuthMiddleware, LogMiddleware, MetricsMiddleware, RateLimitMiddleware,
+};
+use super::router::{Envelope, Router};
+use super::server::Services;
+use crate::environment::Environment;
+use crate::experiment::spec::ExperimentSpec;
+use crate::template::Template;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Server-side API configuration (threaded from the CLI flags).
+#[derive(Debug, Clone, Default)]
+pub struct ApiConfig {
+    /// Bearer token required on every request when set.
+    pub auth_token: Option<String>,
+    /// Global token-bucket limit `(requests_per_sec, burst)` when set.
+    pub rate_limit: Option<(f64, f64)>,
+}
+
+/// Build the full router: middleware chain + v1 compat + v2 routes.
+pub fn build_api(services: Arc<Services>, cfg: &ApiConfig) -> Router {
+    let mut r = Router::new();
+    // Outermost first: log everything, measure everything (including
+    // 401/429 rejections), then authenticate, then rate-limit. Auth
+    // sits before the limiter so unauthenticated traffic cannot drain
+    // the single global bucket and starve token-holding clients; the
+    // auth check itself is a cheap string compare.
+    r.add_middleware(Arc::new(LogMiddleware));
+    r.add_middleware(Arc::new(MetricsMiddleware::new(Arc::clone(
+        &services.metrics,
+    ))));
+    if let Some(token) = &cfg.auth_token {
+        r.add_middleware(Arc::new(AuthMiddleware::new(token)));
+    }
+    if let Some((rate, burst)) = cfg.rate_limit {
+        r.add_middleware(Arc::new(RateLimitMiddleware::new(rate, burst)));
+    }
+    register_routes(&mut r, services);
+    r
+}
+
+/// Register one handler under both `/api/v1{tail}` and `/api/v2{tail}`.
+fn both(r: &mut Router, method: &str, tail: &str, h: Arc<dyn Handler>) {
+    r.route_shared(
+        method,
+        &format!("/api/v1{tail}"),
+        Envelope::V1,
+        Arc::clone(&h),
+    );
+    r.route_shared(method, &format!("/api/v2{tail}"), Envelope::V2, h);
+}
+
+fn experiment_item(id: String, status: &str) -> Json {
+    Json::obj()
+        .set("experimentId", Json::Str(id))
+        .set("status", Json::Str(status.to_string()))
+}
+
+/// Lists without a status dimension reject `?status=` instead of
+/// silently returning unfiltered data.
+fn reject_status_filter(page: &Page, what: &str) -> crate::Result<()> {
+    if page.status.is_some() {
+        return Err(crate::SubmarineError::InvalidSpec(format!(
+            "{what} have no status; remove the status query param"
+        )));
+    }
+    Ok(())
+}
+
+fn register_routes(r: &mut Router, s: Arc<Services>) {
+    // ---- health / version ------------------------------------------
+    both(
+        r,
+        "GET",
+        "/cluster",
+        Arc::new(typed(|_: &Ctx<'_>, _: ()| {
+            Ok(Json::obj()
+                .set("version", Json::Str(crate::version().into()))
+                .set("status", Json::Str("RUNNING".into())))
+        })),
+    );
+
+    // ---- experiments -----------------------------------------------
+    {
+        let s = Arc::clone(&s);
+        both(
+            r,
+            "POST",
+            "/experiment",
+            Arc::new(typed(
+                move |_: &Ctx<'_>, Body(spec): Body<ExperimentSpec>| {
+                    let id = s.experiments.submit(&spec)?;
+                    Ok(Json::obj().set("experimentId", Json::Str(id)))
+                },
+            )),
+        );
+    }
+    {
+        // v1 list: the seed's bare array (compat shim).
+        let s = Arc::clone(&s);
+        r.route(
+            "GET",
+            "/api/v1/experiment",
+            Envelope::V1,
+            typed(move |_: &Ctx<'_>, _: ()| {
+                Ok(s.experiments
+                    .list()
+                    .into_iter()
+                    .map(|(id, st)| experiment_item(id, st.as_str()))
+                    .collect::<Vec<Json>>())
+            }),
+        );
+    }
+    {
+        // v2 list: pagination + status filter.
+        let s = Arc::clone(&s);
+        r.route(
+            "GET",
+            "/api/v2/experiment",
+            Envelope::V2,
+            typed(move |_: &Ctx<'_>, page: Page| {
+                let mut rows = s.experiments.list();
+                if let Some(want) = &page.status {
+                    rows.retain(|(_, st)| {
+                        st.as_str().eq_ignore_ascii_case(want)
+                    });
+                }
+                let (items, total) = page.slice(rows);
+                let items = items
+                    .into_iter()
+                    .map(|(id, st)| experiment_item(id, st.as_str()))
+                    .collect();
+                Ok(page.envelope(items, total))
+            }),
+        );
+    }
+    {
+        let s = Arc::clone(&s);
+        both(
+            r,
+            "GET",
+            "/experiment/:id",
+            Arc::new(typed(move |ctx: &Ctx<'_>, _: ()| {
+                s.experiments.get(ctx.param("id")?)
+            })),
+        );
+    }
+    {
+        let s = Arc::clone(&s);
+        both(
+            r,
+            "DELETE",
+            "/experiment/:id",
+            Arc::new(typed(move |ctx: &Ctx<'_>, _: ()| {
+                let id = ctx.param("id")?;
+                s.experiments.kill(id)?;
+                s.experiments.delete(id)?;
+                Ok(true)
+            })),
+        );
+    }
+    {
+        let s = Arc::clone(&s);
+        both(
+            r,
+            "POST",
+            "/experiment/:id/kill",
+            Arc::new(typed(move |ctx: &Ctx<'_>, _: ()| {
+                s.experiments.kill(ctx.param("id")?)?;
+                Ok(true)
+            })),
+        );
+    }
+    {
+        let s = Arc::clone(&s);
+        both(
+            r,
+            "GET",
+            "/experiment/:id/metrics",
+            Arc::new(typed(move |ctx: &Ctx<'_>, _: ()| {
+                let metric = ctx.query("metric").unwrap_or("loss");
+                let series =
+                    s.metrics.series(ctx.param("id")?, metric);
+                Ok(series
+                    .iter()
+                    .map(|pt| {
+                        Json::obj()
+                            .set("step", Json::Num(pt.step as f64))
+                            .set("value", Json::Num(pt.value))
+                    })
+                    .collect::<Vec<Json>>())
+            })),
+        );
+    }
+
+    // ---- templates (paper §3.2.3) ----------------------------------
+    {
+        let s = Arc::clone(&s);
+        both(
+            r,
+            "POST",
+            "/template",
+            Arc::new(typed(
+                move |_: &Ctx<'_>, Body(t): Body<Template>| {
+                    s.templates.register(&t)?;
+                    Ok(true)
+                },
+            )),
+        );
+    }
+    {
+        let s = Arc::clone(&s);
+        r.route(
+            "GET",
+            "/api/v1/template",
+            Envelope::V1,
+            typed(move |_: &Ctx<'_>, _: ()| {
+                Ok(s.templates
+                    .list()
+                    .into_iter()
+                    .map(Json::Str)
+                    .collect::<Vec<Json>>())
+            }),
+        );
+    }
+    {
+        let s = Arc::clone(&s);
+        r.route(
+            "GET",
+            "/api/v2/template",
+            Envelope::V2,
+            typed(move |_: &Ctx<'_>, page: Page| {
+                reject_status_filter(&page, "templates")?;
+                let (items, total) = page.slice(s.templates.list());
+                Ok(page.envelope(
+                    items.into_iter().map(Json::Str).collect(),
+                    total,
+                ))
+            }),
+        );
+    }
+    {
+        let s = Arc::clone(&s);
+        both(
+            r,
+            "GET",
+            "/template/:name",
+            Arc::new(typed(move |ctx: &Ctx<'_>, _: ()| {
+                Ok(s.templates.get(ctx.param("name")?)?.to_json())
+            })),
+        );
+    }
+    {
+        // "users can run experiments without writing one line of code":
+        // POST { "params": {name: value} } -> submitted experiment.
+        let s = Arc::clone(&s);
+        both(
+            r,
+            "POST",
+            "/template/:name/submit",
+            // body is required JSON (seed behavior: empty body is 400);
+            // `params` itself may be omitted for all-default templates
+            Arc::new(typed(
+                move |ctx: &Ctx<'_>, body: Json| {
+                    let values: BTreeMap<String, String> = body
+                        .get("params")
+                        .and_then(Json::as_obj)
+                        .map(|o| {
+                            o.iter()
+                                .map(|(k, v)| {
+                                    (
+                                        k.clone(),
+                                        match v {
+                                            Json::Str(s) => s.clone(),
+                                            other => other.dump(),
+                                        },
+                                    )
+                                })
+                                .collect()
+                        })
+                        .unwrap_or_default();
+                    let spec = s
+                        .templates
+                        .instantiate(ctx.param("name")?, &values)?;
+                    let id = s.experiments.submit(&spec)?;
+                    Ok(Json::obj().set("experimentId", Json::Str(id)))
+                },
+            )),
+        );
+    }
+
+    // ---- environments (paper §3.2.1) -------------------------------
+    {
+        let s = Arc::clone(&s);
+        both(
+            r,
+            "POST",
+            "/environment",
+            Arc::new(typed(
+                move |_: &Ctx<'_>, Body(env): Body<Environment>| {
+                    s.environments.register(&env)?;
+                    Ok(true)
+                },
+            )),
+        );
+    }
+    {
+        let s = Arc::clone(&s);
+        r.route(
+            "GET",
+            "/api/v1/environment",
+            Envelope::V1,
+            typed(move |_: &Ctx<'_>, _: ()| {
+                Ok(s.environments
+                    .list()
+                    .into_iter()
+                    .map(Json::Str)
+                    .collect::<Vec<Json>>())
+            }),
+        );
+    }
+    {
+        let s = Arc::clone(&s);
+        r.route(
+            "GET",
+            "/api/v2/environment",
+            Envelope::V2,
+            typed(move |_: &Ctx<'_>, page: Page| {
+                reject_status_filter(&page, "environments")?;
+                let (items, total) = page.slice(s.environments.list());
+                Ok(page.envelope(
+                    items.into_iter().map(Json::Str).collect(),
+                    total,
+                ))
+            }),
+        );
+    }
+    {
+        let s = Arc::clone(&s);
+        both(
+            r,
+            "GET",
+            "/environment/:name",
+            Arc::new(typed(move |ctx: &Ctx<'_>, _: ()| {
+                let name = ctx.param("name")?;
+                let env = s.environments.get(name)?;
+                let lock = s.environments.lock_of(name).unwrap_or_default();
+                Ok(env.to_json().set(
+                    "lock",
+                    Json::Arr(
+                        lock.into_iter().map(Json::Str).collect(),
+                    ),
+                ))
+            })),
+        );
+    }
+
+    // ---- models (paper §4.2) ---------------------------------------
+    {
+        // v1: the seed's bare version array.
+        let s = Arc::clone(&s);
+        r.route(
+            "GET",
+            "/api/v1/model/:name",
+            Envelope::V1,
+            typed(move |ctx: &Ctx<'_>, _: ()| {
+                let name = ctx.param("name")?;
+                let versions = s.models.versions(name);
+                if versions.is_empty() {
+                    return Err(crate::SubmarineError::NotFound(
+                        format!("model {name}"),
+                    ));
+                }
+                Ok(versions
+                    .iter()
+                    .map(model_version_json)
+                    .collect::<Vec<Json>>())
+            }),
+        );
+    }
+    {
+        // v2: pagination + `stage` filter.
+        let s = Arc::clone(&s);
+        r.route(
+            "GET",
+            "/api/v2/model/:name",
+            Envelope::V2,
+            typed(move |ctx: &Ctx<'_>, page: Page| {
+                // model versions filter on `stage`, not `status`
+                reject_status_filter(&page, "model versions")?;
+                let name = ctx.param("name")?;
+                let mut versions = s.models.versions(name);
+                if versions.is_empty() {
+                    return Err(crate::SubmarineError::NotFound(
+                        format!("model {name}"),
+                    ));
+                }
+                if let Some(stage) = ctx.query("stage") {
+                    versions.retain(|m| {
+                        m.stage.as_str().eq_ignore_ascii_case(stage)
+                    });
+                }
+                let (items, total) = page.slice(versions);
+                Ok(page.envelope(
+                    items.iter().map(model_version_json).collect(),
+                    total,
+                ))
+            }),
+        );
+    }
+}
+
+fn model_version_json(m: &crate::model::ModelVersion) -> Json {
+    Json::obj()
+        .set("version", Json::Num(m.version as f64))
+        .set("stage", Json::Str(m.stage.as_str().into()))
+        .set("experimentId", Json::Str(m.experiment_id.clone()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::httpd::http::Request;
+    use crate::orchestrator::Submitter;
+    use crate::storage::MetaStore;
+
+    struct NullSubmitter;
+    impl Submitter for NullSubmitter {
+        fn name(&self) -> &'static str {
+            "null"
+        }
+        fn submit(
+            &self,
+            _: &str,
+            _: &ExperimentSpec,
+        ) -> crate::Result<()> {
+            Ok(())
+        }
+        fn kill(&self, _: &str) -> crate::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn services() -> Arc<Services> {
+        Arc::new(Services::new(
+            Arc::new(MetaStore::in_memory()),
+            Arc::new(NullSubmitter),
+        ))
+    }
+
+    fn api() -> Router {
+        build_api(services(), &ApiConfig::default())
+    }
+
+    fn dispatch(
+        router: &Router,
+        method: &str,
+        path: &str,
+        body: &str,
+    ) -> (u16, Json) {
+        let mut req = Request::synthetic(method, path);
+        req.body = body.as_bytes().to_vec();
+        let resp = router.dispatch(&req);
+        let j = Json::parse(
+            std::str::from_utf8(&resp.body).unwrap_or("null"),
+        )
+        .unwrap_or(Json::Null);
+        (resp.status, j)
+    }
+
+    const SPEC: &str = r#"{"meta":{"name":"mnist"},
+        "spec":{"Worker":{"replicas":1,"resources":"cpu=1"}}}"#;
+
+    #[test]
+    fn experiment_crud_over_both_versions() {
+        let r = api();
+        for base in ["/api/v1", "/api/v2"] {
+            let (st, j) =
+                dispatch(&r, "POST", &format!("{base}/experiment"), SPEC);
+            assert_eq!(st, 200, "{base}: {j:?}");
+            let id = j
+                .at(&["result", "experimentId"])
+                .unwrap()
+                .as_str()
+                .unwrap()
+                .to_string();
+            let (st, j) = dispatch(
+                &r,
+                "GET",
+                &format!("{base}/experiment/{id}"),
+                "",
+            );
+            assert_eq!(st, 200);
+            assert_eq!(
+                j.at(&["result", "status"]).unwrap().as_str(),
+                Some("Accepted")
+            );
+            let (st, _) = dispatch(
+                &r,
+                "POST",
+                &format!("{base}/experiment/{id}/kill"),
+                "",
+            );
+            assert_eq!(st, 200);
+            let (st, j) = dispatch(
+                &r,
+                "DELETE",
+                &format!("{base}/experiment/{id}"),
+                "",
+            );
+            assert_eq!(st, 200, "{j:?}");
+        }
+    }
+
+    #[test]
+    fn v2_list_paginates_and_filters() {
+        let r = api();
+        for _ in 0..5 {
+            let (st, _) =
+                dispatch(&r, "POST", "/api/v2/experiment", SPEC);
+            assert_eq!(st, 200);
+        }
+        let (st, j) = dispatch(
+            &r,
+            "GET",
+            "/api/v2/experiment?limit=2&offset=1",
+            "",
+        );
+        assert_eq!(st, 200);
+        let result = j.get("result").unwrap();
+        assert_eq!(result.num_field("total"), Some(5.0));
+        assert_eq!(result.num_field("offset"), Some(1.0));
+        assert_eq!(
+            result.get("items").unwrap().as_arr().unwrap().len(),
+            2
+        );
+        // all seeds are Accepted: filtering by Running yields none
+        let (st, j) = dispatch(
+            &r,
+            "GET",
+            "/api/v2/experiment?status=Running",
+            "",
+        );
+        assert_eq!(st, 200);
+        assert_eq!(
+            j.at(&["result", "total"]).and_then(Json::as_f64),
+            Some(0.0)
+        );
+        let (st, j) = dispatch(
+            &r,
+            "GET",
+            "/api/v2/experiment?status=accepted",
+            "",
+        );
+        assert_eq!(st, 200, "{j:?}");
+        assert_eq!(
+            j.at(&["result", "total"]).and_then(Json::as_f64),
+            Some(5.0)
+        );
+    }
+
+    #[test]
+    fn v1_list_stays_bare_array() {
+        let r = api();
+        let (st, _) = dispatch(&r, "POST", "/api/v1/experiment", SPEC);
+        assert_eq!(st, 200);
+        let (st, j) = dispatch(&r, "GET", "/api/v1/experiment", "");
+        assert_eq!(st, 200);
+        assert_eq!(
+            j.get("result").unwrap().as_arr().unwrap().len(),
+            1
+        );
+    }
+
+    #[test]
+    fn bad_spec_is_400_with_v2_error_envelope() {
+        let r = api();
+        let (st, j) = dispatch(&r, "POST", "/api/v2/experiment", "{}");
+        assert_eq!(st, 400);
+        assert_eq!(j.str_field("status"), Some("ERROR"));
+        assert_eq!(j.num_field("code"), Some(400.0));
+        assert!(j.at(&["error", "message"]).is_some());
+        let (st, _) =
+            dispatch(&r, "POST", "/api/v2/experiment", "not json");
+        assert_eq!(st, 400);
+        // v1 keeps the flat shape
+        let (st, j) = dispatch(&r, "POST", "/api/v1/experiment", "{}");
+        assert_eq!(st, 400);
+        assert!(j.str_field("message").is_some());
+    }
+
+    #[test]
+    fn template_register_and_submit() {
+        let r = api();
+        let tpl = crate::template::tf_mnist_template().to_json().dump();
+        let (st, _) = dispatch(&r, "POST", "/api/v2/template", &tpl);
+        assert_eq!(st, 200);
+        let (st, j) = dispatch(
+            &r,
+            "POST",
+            "/api/v2/template/tf-mnist-template/submit",
+            r#"{"params":{"learning_rate":"0.01","batch_size":"64"}}"#,
+        );
+        assert_eq!(st, 200, "{j:?}");
+        assert!(j.at(&["result", "experimentId"]).is_some());
+        // v1 shim sees the same registry
+        let (st, j) = dispatch(&r, "GET", "/api/v1/template", "");
+        assert_eq!(st, 200);
+        assert_eq!(
+            j.get("result").unwrap().as_arr().unwrap().len(),
+            1
+        );
+    }
+
+    #[test]
+    fn environment_register_and_lock() {
+        let r = api();
+        let (st, _) = dispatch(
+            &r,
+            "POST",
+            "/api/v2/environment",
+            r#"{"name":"tf","image":"submarine:tf",
+                "dependencies":["tensorflow>=2.0"]}"#,
+        );
+        assert_eq!(st, 200);
+        let (st, j) =
+            dispatch(&r, "GET", "/api/v2/environment/tf", "");
+        assert_eq!(st, 200);
+        let lock = j.at(&["result", "lock"]).unwrap().as_arr().unwrap();
+        assert!(!lock.is_empty());
+    }
+
+    #[test]
+    fn status_filter_rejected_where_unsupported() {
+        let r = api();
+        let (st, j) =
+            dispatch(&r, "GET", "/api/v2/template?status=x", "");
+        assert_eq!(st, 400, "{j:?}");
+        let (st, _) =
+            dispatch(&r, "GET", "/api/v2/environment?status=x", "");
+        assert_eq!(st, 400);
+    }
+
+    #[test]
+    fn missing_model_is_not_found() {
+        let r = api();
+        let (st, j) = dispatch(&r, "GET", "/api/v2/model/nope", "");
+        assert_eq!(st, 404);
+        assert_eq!(
+            j.at(&["error", "type"]).and_then(Json::as_str),
+            Some("NotFound")
+        );
+    }
+
+    #[test]
+    fn http_metrics_recorded_per_route() {
+        let s = services();
+        let r = build_api(Arc::clone(&s), &ApiConfig::default());
+        for _ in 0..4 {
+            dispatch(&r, "GET", "/api/v2/cluster", "");
+        }
+        let series = s.metrics.series(
+            crate::httpd::middleware::HTTP_METRICS_KEY,
+            "GET /api/v2/cluster",
+        );
+        assert_eq!(series.len(), 4);
+    }
+
+    #[test]
+    fn auth_and_rate_limit_configurable() {
+        let cfg = ApiConfig {
+            auth_token: Some("tok".into()),
+            rate_limit: Some((0.000001, 2.0)),
+        };
+        let r = build_api(services(), &cfg);
+        // no token: 401, and (auth running before the limiter) the
+        // anon request must NOT consume rate budget
+        let (st, _) = dispatch(&r, "GET", "/api/v2/cluster", "");
+        assert_eq!(st, 401);
+        let mut req = Request::synthetic("GET", "/api/v2/cluster");
+        req.headers
+            .insert("authorization".into(), "Bearer tok".into());
+        // full burst of 2 available to the authed client...
+        assert_eq!(r.dispatch(&req).status, 200);
+        assert_eq!(r.dispatch(&req).status, 200);
+        // ...and the third authed request is shed with 429
+        let shed = r.dispatch(&req);
+        assert_eq!(shed.status, 429);
+    }
+}

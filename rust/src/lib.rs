@@ -19,6 +19,11 @@
 //!
 //! The [`runtime`] module loads the AOT artifacts via the PJRT C API and
 //! executes them on the request path with no Python anywhere.
+//!
+//! The REST surface is versioned: `/api/v2` (typed handlers, structured
+//! errors, pagination) with `/api/v1` as a compat shim, served over
+//! keep-alive HTTP/1.1 by a trie router and middleware chain — see
+//! [`httpd`] and the route reference in `docs/API.md` at the repo root.
 
 pub mod error;
 pub mod util;

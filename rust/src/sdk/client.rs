@@ -1,26 +1,80 @@
-//! HTTP client for the Submarine REST API (std-only, HTTP/1.1 with
-//! `connection: close` — matching the server).
+//! HTTP client for the Submarine REST API (std-only).
+//!
+//! v2 upgrade: HTTP/1.1 keep-alive. The client pools one connection and
+//! reuses it across requests, parses responses by `content-length`
+//! (falling back to read-to-EOF against old servers), and surfaces
+//! non-JSON error bodies instead of a bare parse failure. A stale
+//! pooled connection (server restarted or timed the socket out) is
+//! detected on failure and replaced by a fresh one transparently.
 
 use crate::experiment::spec::{ExperimentSpec, ExperimentStatus};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
-use std::io::{Read, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
+use std::sync::Mutex;
 
 /// Client bound to one server address.
 pub struct ExperimentClient {
     host: String,
     port: u16,
     token: Option<String>,
+    /// `/api/v1` (compat default) or `/api/v2`.
+    base: String,
+    /// Pooled keep-alive connection.
+    conn: Mutex<Option<TcpStream>>,
+}
+
+fn runtime(msg: String) -> crate::SubmarineError {
+    crate::SubmarineError::Runtime(msg)
+}
+
+/// Error from one roundtrip, tagged with whether the request is known
+/// to be unprocessed by the server (and thus safe to replay on a fresh
+/// connection — even for non-idempotent methods).
+struct RoundtripError {
+    retryable: bool,
+    err: crate::SubmarineError,
+}
+
+impl RoundtripError {
+    /// Failure before the server can have processed the request (write
+    /// failed, or the connection dropped before any response byte).
+    fn before_processing(e: std::io::Error) -> RoundtripError {
+        RoundtripError {
+            retryable: true,
+            err: e.into(),
+        }
+    }
+
+    /// Failure after the server may have acted (mid-response timeout,
+    /// truncation, unparseable body): never replayed automatically.
+    fn fatal(err: crate::SubmarineError) -> RoundtripError {
+        RoundtripError {
+            retryable: false,
+            err,
+        }
+    }
 }
 
 impl ExperimentClient {
+    /// Client speaking the v1 (compat) surface.
     pub fn new(host: &str, port: u16) -> ExperimentClient {
         ExperimentClient {
             host: host.to_string(),
             port,
             token: None,
+            base: "/api/v1".to_string(),
+            conn: Mutex::new(None),
         }
+    }
+
+    /// Client speaking the typed `/api/v2` surface (pagination, status
+    /// filtering, structured errors).
+    pub fn v2(host: &str, port: u16) -> ExperimentClient {
+        let mut c = Self::new(host, port);
+        c.base = "/api/v2".to_string();
+        c
     }
 
     pub fn with_token(mut self, token: &str) -> ExperimentClient {
@@ -28,16 +82,90 @@ impl ExperimentClient {
         self
     }
 
-    /// Raw request; returns (status, parsed body).
+    /// The API prefix this client targets (`/api/v1` or `/api/v2`).
+    pub fn api_base(&self) -> &str {
+        &self.base
+    }
+
+    fn connect(&self) -> crate::Result<TcpStream> {
+        let stream =
+            TcpStream::connect((self.host.as_str(), self.port))?;
+        let _ = stream
+            .set_read_timeout(Some(std::time::Duration::from_secs(60)));
+        let _ = stream.set_nodelay(true);
+        Ok(stream)
+    }
+
+    /// Raw request; returns (status, parsed body). Reuses the pooled
+    /// keep-alive connection when one is live.
     pub fn request(
         &self,
         method: &str,
         path: &str,
         body: Option<&Json>,
     ) -> crate::Result<(u16, Json)> {
-        let mut stream =
-            TcpStream::connect((self.host.as_str(), self.port))?;
         let payload = body.map(|j| j.dump()).unwrap_or_default();
+        // The pooled connection is only *reused* for idempotent
+        // methods: a request on a pooled socket may need to be replayed
+        // when the server closed it in the idle window, and replaying
+        // is only safe when running the request twice is harmless.
+        // Non-idempotent methods (POST, DELETE, ...) always go out on a
+        // fresh connection — which still ends up pooled for the GETs
+        // that dominate the hot path (status polls, lists, metrics).
+        let idempotent = matches!(
+            method.to_ascii_uppercase().as_str(),
+            "GET" | "HEAD"
+        );
+        if idempotent {
+            // Bind in a statement so the MutexGuard temporary is
+            // dropped here — the guard must not live into the block
+            // below, which re-locks `self.conn`.
+            let pooled = self.conn.lock().unwrap().take();
+            if let Some(stream) = pooled {
+                match self.roundtrip(&stream, method, path, &payload) {
+                    Ok((status, j, keep)) => {
+                        if keep {
+                            *self.conn.lock().unwrap() = Some(stream);
+                        }
+                        return Ok((status, j));
+                    }
+                    // Retry below ONLY when the failure proves the
+                    // server never processed the request (write
+                    // failed, or close before any response byte —
+                    // the stale keep-alive case). Errors mid-response
+                    // (timeout, truncation, bad JSON) are not retried.
+                    Err(e) if !e.retryable => return Err(e.err),
+                    Err(_) => {} // stale pooled conn; fall through
+                }
+            }
+        }
+        let stream = self.connect()?;
+        let (status, j, keep) = self
+            .roundtrip(&stream, method, path, &payload)
+            .map_err(|e| e.err)?;
+        if keep {
+            // pool only into an empty slot: a non-idempotent request
+            // bypasses the pool, and evicting a healthy pooled
+            // connection here would just churn sockets
+            let mut slot = self.conn.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(stream);
+            }
+        }
+        Ok((status, j))
+    }
+
+    /// One write/read cycle on `stream`. Returns (status, body,
+    /// connection-reusable). `RoundtripError::retryable` is true only
+    /// for failures that happened before the server can have processed
+    /// the request.
+    fn roundtrip(
+        &self,
+        mut stream: &TcpStream,
+        method: &str,
+        path: &str,
+        payload: &str,
+    ) -> Result<(u16, Json, bool), RoundtripError> {
         let mut req = format!(
             "{method} {path} HTTP/1.1\r\nhost: {}\r\ncontent-length: {}\r\n",
             self.host,
@@ -46,39 +174,139 @@ impl ExperimentClient {
         if let Some(t) = &self.token {
             req.push_str(&format!("authorization: Bearer {t}\r\n"));
         }
-        req.push_str("content-type: application/json\r\n\r\n");
-        req.push_str(&payload);
-        stream.write_all(req.as_bytes())?;
-        let mut raw = String::new();
-        stream.read_to_string(&mut raw)?;
-        let status: u16 = raw
+        req.push_str(
+            "content-type: application/json\r\nconnection: keep-alive\r\n\r\n",
+        );
+        req.push_str(payload);
+        stream
+            .write_all(req.as_bytes())
+            .map_err(RoundtripError::before_processing)?;
+
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        match reader.read_line(&mut line) {
+            // closed (or reset) before any response byte: the server
+            // never answered, so the caller may safely retry. A timeout
+            // is NOT retryable — the server may still be processing.
+            Ok(0) => {
+                return Err(RoundtripError::before_processing(
+                    std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "server closed connection",
+                    ),
+                ))
+            }
+            Err(e)
+                if line.is_empty()
+                    && matches!(
+                        e.kind(),
+                        std::io::ErrorKind::ConnectionReset
+                            | std::io::ErrorKind::ConnectionAborted
+                            | std::io::ErrorKind::BrokenPipe
+                    ) =>
+            {
+                return Err(RoundtripError::before_processing(e))
+            }
+            Err(e) => return Err(RoundtripError::fatal(e.into())),
+            Ok(_) => {}
+        }
+        let status: u16 = line
             .split(' ')
             .nth(1)
             .and_then(|s| s.parse().ok())
             .ok_or_else(|| {
-                crate::SubmarineError::Runtime("bad http response".into())
+                RoundtripError::fatal(runtime("bad http response".into()))
             })?;
-        let body_text = raw
-            .split_once("\r\n\r\n")
-            .map(|(_, b)| b)
-            .unwrap_or("");
-        let j = if body_text.trim().is_empty() {
+        let mut content_length: Option<usize> = None;
+        let mut keep = true;
+        loop {
+            let mut h = String::new();
+            let n = reader
+                .read_line(&mut h)
+                .map_err(|e| RoundtripError::fatal(e.into()))?;
+            if n == 0 {
+                return Err(RoundtripError::fatal(runtime(
+                    "truncated response headers".into(),
+                )));
+            }
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.split_once(':') {
+                let k = k.trim().to_ascii_lowercase();
+                let v = v.trim();
+                if k == "content-length" {
+                    content_length = v.parse().ok();
+                } else if k == "connection"
+                    && v.eq_ignore_ascii_case("close")
+                {
+                    keep = false;
+                }
+            }
+        }
+        // HEAD responses advertise the GET body's content-length but
+        // carry no body bytes — reading them would hang on the socket.
+        let body = if method.eq_ignore_ascii_case("HEAD") {
+            Vec::new()
+        } else {
+            match content_length {
+                Some(len) => {
+                    let mut b = vec![0u8; len];
+                    reader
+                        .read_exact(&mut b)
+                        .map_err(|e| RoundtripError::fatal(e.into()))?;
+                    b
+                }
+                None => {
+                    // old `connection: close` servers frame by EOF
+                    keep = false;
+                    let mut b = Vec::new();
+                    reader
+                        .read_to_end(&mut b)
+                        .map_err(|e| RoundtripError::fatal(e.into()))?;
+                    b
+                }
+            }
+        };
+        let text = String::from_utf8_lossy(&body);
+        let trimmed = text.trim();
+        let j = if trimmed.is_empty() {
             Json::Null
         } else {
-            Json::parse(body_text.trim())?
+            match Json::parse(trimmed) {
+                Ok(j) => j,
+                // Error bodies from proxies or crashing servers are
+                // often plain text; surface them instead of failing on
+                // the parse.
+                Err(_) if status >= 400 => {
+                    Json::Str(trimmed.to_string())
+                }
+                Err(e) => {
+                    let snippet: String =
+                        trimmed.chars().take(120).collect();
+                    return Err(RoundtripError::fatal(runtime(format!(
+                        "non-JSON response (status {status}, {e}): {snippet}"
+                    ))));
+                }
+            }
         };
-        Ok((status, j))
+        Ok((status, j, keep))
     }
 
     fn expect_ok(&self, r: (u16, Json)) -> crate::Result<Json> {
         let (status, j) = r;
-        if status == 200 {
+        if (200..300).contains(&status) {
             Ok(j.get("result").cloned().unwrap_or(j))
         } else {
-            Err(crate::SubmarineError::Runtime(format!(
-                "server returned {status}: {}",
-                j.str_field("message").unwrap_or("?")
-            )))
+            // v2 envelope, v1 envelope, or a raw non-JSON body
+            let msg = j
+                .at(&["error", "message"])
+                .and_then(Json::as_str)
+                .or_else(|| j.str_field("message"))
+                .or_else(|| j.as_str())
+                .unwrap_or("?");
+            Err(runtime(format!("server returned {status}: {msg}")))
         }
     }
 
@@ -90,29 +318,25 @@ impl ExperimentClient {
     ) -> crate::Result<String> {
         let r = self.request(
             "POST",
-            "/api/v1/experiment",
+            &format!("{}/experiment", self.base),
             Some(&spec.to_json()),
         )?;
         let res = self.expect_ok(r)?;
         res.str_field("experimentId")
             .map(str::to_string)
-            .ok_or_else(|| {
-                crate::SubmarineError::Runtime("missing experimentId".into())
-            })
+            .ok_or_else(|| runtime("missing experimentId".into()))
     }
 
     pub fn status(&self, id: &str) -> crate::Result<ExperimentStatus> {
         let r = self.request(
             "GET",
-            &format!("/api/v1/experiment/{id}"),
+            &format!("{}/experiment/{id}", self.base),
             None,
         )?;
         let res = self.expect_ok(r)?;
         res.str_field("status")
             .and_then(ExperimentStatus::parse)
-            .ok_or_else(|| {
-                crate::SubmarineError::Runtime("missing status".into())
-            })
+            .ok_or_else(|| runtime("missing status".into()))
     }
 
     /// Poll until terminal status or timeout.
@@ -137,18 +361,14 @@ impl ExperimentClient {
     pub fn kill(&self, id: &str) -> crate::Result<()> {
         let r = self.request(
             "POST",
-            &format!("/api/v1/experiment/{id}/kill"),
+            &format!("{}/experiment/{id}/kill", self.base),
             None,
         )?;
         self.expect_ok(r).map(|_| ())
     }
 
-    pub fn list_experiments(&self) -> crate::Result<Vec<(String, String)>> {
-        let r = self.request("GET", "/api/v1/experiment", None)?;
-        let res = self.expect_ok(r)?;
-        Ok(res
-            .as_arr()
-            .unwrap_or(&[])
+    fn parse_experiment_rows(items: &[Json]) -> Vec<(String, String)> {
+        items
             .iter()
             .filter_map(|e| {
                 Some((
@@ -156,7 +376,53 @@ impl ExperimentClient {
                     e.str_field("status")?.to_string(),
                 ))
             })
-            .collect())
+            .collect()
+    }
+
+    pub fn list_experiments(&self) -> crate::Result<Vec<(String, String)>> {
+        let r = self
+            .request("GET", &format!("{}/experiment", self.base), None)?;
+        let res = self.expect_ok(r)?;
+        // v1: bare array; v2: {items, total, ...}
+        let items = res
+            .as_arr()
+            .or_else(|| res.get("items").and_then(Json::as_arr))
+            .unwrap_or(&[]);
+        Ok(Self::parse_experiment_rows(items))
+    }
+
+    /// Paged/filtered listing. Returns the page rows plus the
+    /// pre-pagination total. Pagination and filtering are v2 features:
+    /// a client built with [`ExperimentClient::new`] (v1 base) still
+    /// works against an old server, which ignores the query params and
+    /// returns the full list.
+    pub fn list_experiments_paged(
+        &self,
+        limit: Option<usize>,
+        offset: usize,
+        status: Option<&str>,
+    ) -> crate::Result<(Vec<(String, String)>, usize)> {
+        let mut path =
+            format!("{}/experiment?offset={offset}", self.base);
+        if let Some(l) = limit {
+            path.push_str(&format!("&limit={l}"));
+        }
+        if let Some(st) = status {
+            path.push_str(&format!("&status={st}"));
+        }
+        let r = self.request("GET", &path, None)?;
+        let res = self.expect_ok(r)?;
+        // v2: {items, total, ...}; v1 fallback: bare array
+        let items = res
+            .get("items")
+            .and_then(Json::as_arr)
+            .or_else(|| res.as_arr())
+            .unwrap_or(&[]);
+        let total = res
+            .num_field("total")
+            .map(|t| t as usize)
+            .unwrap_or(items.len());
+        Ok((Self::parse_experiment_rows(items), total))
     }
 
     /// Fetch a metric series (step, value pairs).
@@ -167,7 +433,10 @@ impl ExperimentClient {
     ) -> crate::Result<Vec<(u64, f64)>> {
         let r = self.request(
             "GET",
-            &format!("/api/v1/experiment/{id}/metrics?metric={metric}"),
+            &format!(
+                "{}/experiment/{id}/metrics?metric={metric}",
+                self.base
+            ),
             None,
         )?;
         let res = self.expect_ok(r)?;
@@ -191,7 +460,7 @@ impl ExperimentClient {
     ) -> crate::Result<()> {
         let r = self.request(
             "POST",
-            "/api/v1/template",
+            &format!("{}/template", self.base),
             Some(&template.to_json()),
         )?;
         self.expect_ok(r).map(|_| ())
@@ -207,14 +476,67 @@ impl ExperimentClient {
         let body = Json::obj().set("params", Json::from_map(params));
         let r = self.request(
             "POST",
-            &format!("/api/v1/template/{name}/submit"),
+            &format!("{}/template/{name}/submit", self.base),
             Some(&body),
         )?;
         let res = self.expect_ok(r)?;
         res.str_field("experimentId")
             .map(str::to_string)
-            .ok_or_else(|| {
-                crate::SubmarineError::Runtime("missing experimentId".into())
-            })
+            .ok_or_else(|| runtime("missing experimentId".into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bases_differ_between_versions() {
+        let v1 = ExperimentClient::new("127.0.0.1", 1);
+        assert_eq!(v1.api_base(), "/api/v1");
+        let v2 = ExperimentClient::v2("127.0.0.1", 1);
+        assert_eq!(v2.api_base(), "/api/v2");
+    }
+
+    #[test]
+    fn expect_ok_reads_all_error_shapes() {
+        let c = ExperimentClient::new("127.0.0.1", 1);
+        // v1 flat message
+        let e = c
+            .expect_ok((
+                500,
+                Json::parse(r#"{"status":"ERROR","message":"boom"}"#)
+                    .unwrap(),
+            ))
+            .unwrap_err();
+        assert!(e.to_string().contains("boom"));
+        // v2 structured error
+        let e = c
+            .expect_ok((
+                404,
+                Json::parse(
+                    r#"{"status":"ERROR","code":404,
+                        "error":{"type":"NotFound","message":"gone"}}"#,
+                )
+                .unwrap(),
+            ))
+            .unwrap_err();
+        assert!(e.to_string().contains("gone"));
+        // raw text body surfaced as a string
+        let e = c
+            .expect_ok((502, Json::Str("bad gateway".into())))
+            .unwrap_err();
+        assert!(e.to_string().contains("bad gateway"));
+    }
+
+    #[test]
+    fn expect_ok_unwraps_result_field() {
+        let c = ExperimentClient::new("127.0.0.1", 1);
+        let j = Json::parse(
+            r#"{"status":"OK","code":200,"result":{"x":1}}"#,
+        )
+        .unwrap();
+        let res = c.expect_ok((200, j)).unwrap();
+        assert_eq!(res.num_field("x"), Some(1.0));
     }
 }

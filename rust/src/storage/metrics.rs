@@ -37,6 +37,30 @@ impl MetricStore {
             .push(MetricPoint { step, value });
     }
 
+    /// Log with a bound on retained samples: once the series exceeds
+    /// `2 * cap`, the oldest half is dropped (amortized O(1) per log),
+    /// keeping between `cap` and `2 * cap` of the most recent points.
+    /// Used for open-ended operational series (e.g. per-route HTTP
+    /// latency) that would otherwise grow without limit.
+    pub fn log_bounded(
+        &self,
+        experiment: &str,
+        metric: &str,
+        step: u64,
+        value: f64,
+        cap: usize,
+    ) {
+        let cap = cap.max(1);
+        let mut series = self.series.lock().unwrap();
+        let v = series
+            .entry((experiment.to_string(), metric.to_string()))
+            .or_default();
+        v.push(MetricPoint { step, value });
+        if v.len() > 2 * cap {
+            v.drain(..v.len() - cap);
+        }
+    }
+
     pub fn series(&self, experiment: &str, metric: &str) -> Vec<MetricPoint> {
         self.series
             .lock()
@@ -127,6 +151,19 @@ mod tests {
         assert_eq!(m.series("e1", "loss").len(), 2);
         assert_eq!(m.last("e1", "loss").unwrap().value, 0.5);
         assert_eq!(m.metrics_of("e1"), vec!["auc", "loss"]);
+    }
+
+    #[test]
+    fn bounded_log_caps_series() {
+        let m = MetricStore::new();
+        for i in 0..1000 {
+            m.log_bounded("http", "lat", i, i as f64, 100);
+        }
+        let s = m.series("http", "lat");
+        assert!(s.len() >= 100 && s.len() <= 200, "len={}", s.len());
+        // the retained window is the most recent one
+        assert_eq!(s.last().unwrap().step, 999);
+        assert!(s[0].step >= 800);
     }
 
     #[test]

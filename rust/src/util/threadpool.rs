@@ -1,7 +1,10 @@
 //! Fixed-size thread pool (DESIGN.md S2). Offline registry lacks `tokio` /
-//! `rayon`, so the HTTP server and the distributed-training driver share
-//! this std-only pool: bounded task queue, graceful shutdown on drop, and
-//! a `scope`-style join helper for fork/join workloads.
+//! `rayon`; this std-only pool offers a bounded task queue, graceful
+//! shutdown on drop, and a `scope`-style join helper for fork/join
+//! workloads. Currently has no in-tree callers: the HTTP server (its
+//! original user) moved to a capped thread-per-connection model with
+//! keep-alive in API v2. Kept as shared infrastructure for future
+//! fork/join work.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};

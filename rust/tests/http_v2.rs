@@ -1,0 +1,285 @@
+//! Integration tests for the v2 REST surface over a real TCP socket:
+//! auth, pagination, status filtering, the typed error envelope,
+//! keep-alive connections, `Allow`/`HEAD` handling, and the v1 compat
+//! shim — all driven through the SDK client (no PJRT artifacts needed).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use submarine::experiment::spec::ExperimentSpec;
+use submarine::httpd::server::{Server, Services};
+use submarine::httpd::ApiConfig;
+use submarine::orchestrator::Submitter;
+use submarine::sdk::ExperimentClient;
+use submarine::storage::MetaStore;
+use submarine::util::json::Json;
+
+struct NullSubmitter;
+impl Submitter for NullSubmitter {
+    fn name(&self) -> &'static str {
+        "null"
+    }
+    fn submit(&self, _: &str, _: &ExperimentSpec) -> submarine::Result<()> {
+        Ok(())
+    }
+    fn kill(&self, _: &str) -> submarine::Result<()> {
+        Ok(())
+    }
+}
+
+fn services() -> Arc<Services> {
+    Arc::new(Services::new(
+        Arc::new(MetaStore::in_memory()),
+        Arc::new(NullSubmitter),
+    ))
+}
+
+struct TestServer {
+    services: Arc<Services>,
+    port: u16,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TestServer {
+    fn start(cfg: &ApiConfig) -> TestServer {
+        let services = services();
+        let server = Arc::new(
+            Server::bind_with_config(Arc::clone(&services), 0, cfg)
+                .unwrap(),
+        );
+        let port = server.port();
+        let stop = server.stopper();
+        let handle = Arc::clone(&server).serve_background();
+        TestServer {
+            services,
+            port,
+            stop,
+            handle: Some(handle),
+        }
+    }
+}
+
+impl Drop for TestServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(("127.0.0.1", self.port));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn spec(name: &str) -> ExperimentSpec {
+    ExperimentSpec::parse(&format!(
+        r#"{{"meta":{{"name":"{name}"}},
+            "spec":{{"Worker":{{"replicas":1,"resources":"cpu=1"}}}}}}"#
+    ))
+    .unwrap()
+}
+
+#[test]
+fn v2_pagination_and_status_filtering_through_sdk() {
+    let srv = TestServer::start(&ApiConfig::default());
+    let client = ExperimentClient::v2("127.0.0.1", srv.port);
+
+    let mut ids = Vec::new();
+    for i in 0..5 {
+        ids.push(client.create_experiment(&spec(&format!("e{i}"))).unwrap());
+    }
+    // full list
+    let (rows, total) =
+        client.list_experiments_paged(None, 0, None).unwrap();
+    assert_eq!(total, 5);
+    assert_eq!(rows.len(), 5);
+    // a window
+    let (rows, total) =
+        client.list_experiments_paged(Some(2), 1, None).unwrap();
+    assert_eq!(total, 5);
+    assert_eq!(rows.len(), 2);
+    // status filter: kill one, then filter by Killed (case-insensitive)
+    client.kill(&ids[0]).unwrap();
+    let (rows, total) = client
+        .list_experiments_paged(None, 0, Some("killed"))
+        .unwrap();
+    assert_eq!(total, 1);
+    assert_eq!(rows[0].0, ids[0]);
+    assert_eq!(rows[0].1, "Killed");
+    let (_, accepted) = client
+        .list_experiments_paged(None, 0, Some("Accepted"))
+        .unwrap();
+    assert_eq!(accepted, 4);
+}
+
+#[test]
+fn v1_compat_shim_still_answers() {
+    let srv = TestServer::start(&ApiConfig::default());
+    let v1 = ExperimentClient::new("127.0.0.1", srv.port);
+    assert_eq!(v1.api_base(), "/api/v1");
+    let id = v1.create_experiment(&spec("compat")).unwrap();
+    let rows = v1.list_experiments().unwrap();
+    assert_eq!(rows.len(), 1);
+    assert_eq!(rows[0].0, id);
+    assert_eq!(
+        v1.status(&id).unwrap(),
+        submarine::experiment::spec::ExperimentStatus::Accepted
+    );
+    // raw v1 response keeps the flat envelope (no `code` field)
+    let (st, j) = v1.request("GET", "/api/v1/experiment", None).unwrap();
+    assert_eq!(st, 200);
+    assert_eq!(j.str_field("status"), Some("OK"));
+    assert!(j.get("code").is_none());
+    assert!(j.get("result").unwrap().as_arr().is_some());
+}
+
+#[test]
+fn auth_is_enforced_with_typed_error() {
+    let cfg = ApiConfig {
+        auth_token: Some("sekrit".into()),
+        rate_limit: None,
+    };
+    let srv = TestServer::start(&cfg);
+    let anon = ExperimentClient::v2("127.0.0.1", srv.port);
+    let err = anon.list_experiments().unwrap_err().to_string();
+    assert!(err.contains("401"), "{err}");
+    assert!(err.contains("missing or bad token"), "{err}");
+    // the raw body carries the structured error object
+    let (st, j) = anon.request("GET", "/api/v2/cluster", None).unwrap();
+    assert_eq!(st, 401);
+    assert_eq!(
+        j.at(&["error", "type"]).and_then(Json::as_str),
+        Some("Unauthorized")
+    );
+    let authed =
+        ExperimentClient::v2("127.0.0.1", srv.port).with_token("sekrit");
+    assert!(authed.list_experiments().is_ok());
+}
+
+#[test]
+fn v2_error_envelope_on_bad_input() {
+    let srv = TestServer::start(&ApiConfig::default());
+    let client = ExperimentClient::v2("127.0.0.1", srv.port);
+    let (st, j) = client
+        .request("POST", "/api/v2/experiment", Some(&Json::obj()))
+        .unwrap();
+    assert_eq!(st, 400);
+    assert_eq!(j.str_field("status"), Some("ERROR"));
+    assert_eq!(j.num_field("code"), Some(400.0));
+    assert!(
+        j.at(&["error", "type"]).and_then(Json::as_str).is_some(),
+        "{j:?}"
+    );
+    assert!(
+        j.at(&["error", "message"]).and_then(Json::as_str).is_some(),
+        "{j:?}"
+    );
+    // unknown routes are typed too
+    let (st, j) = client.request("GET", "/api/v2/nope", None).unwrap();
+    assert_eq!(st, 404);
+    assert_eq!(
+        j.at(&["error", "type"]).and_then(Json::as_str),
+        Some("NotFound")
+    );
+}
+
+#[test]
+fn sdk_reuses_one_connection_across_requests() {
+    let srv = TestServer::start(&ApiConfig::default());
+    let client = ExperimentClient::v2("127.0.0.1", srv.port);
+    for _ in 0..10 {
+        let (st, _) =
+            client.request("GET", "/api/v2/cluster", None).unwrap();
+        assert_eq!(st, 200);
+    }
+    // per-route middleware metrics saw all 10 requests
+    let series = srv.services.metrics.series(
+        submarine::httpd::middleware::HTTP_METRICS_KEY,
+        "GET /api/v2/cluster",
+    );
+    assert_eq!(series.len(), 10);
+}
+
+/// Read one content-length-framed response off a raw socket.
+fn read_response(reader: &mut BufReader<&TcpStream>) -> (u16, String, Vec<String>) {
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let status: u16 = line.split(' ').nth(1).unwrap().parse().unwrap();
+    let mut headers = Vec::new();
+    let mut len = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).unwrap();
+        let h = h.trim_end().to_string();
+        if h.is_empty() {
+            break;
+        }
+        let lower = h.to_ascii_lowercase();
+        if let Some(v) = lower.strip_prefix("content-length:") {
+            len = v.trim().parse().unwrap();
+        }
+        headers.push(h);
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body).unwrap();
+    (status, String::from_utf8(body).unwrap(), headers)
+}
+
+#[test]
+fn keep_alive_head_and_allow_over_raw_socket() {
+    let srv = TestServer::start(&ApiConfig::default());
+    let stream = TcpStream::connect(("127.0.0.1", srv.port)).unwrap();
+    let mut reader = BufReader::new(&stream);
+
+    // two requests on one connection
+    for _ in 0..2 {
+        write!(&stream, "GET /api/v2/cluster HTTP/1.1\r\nhost: x\r\n\r\n")
+            .unwrap();
+        let (st, body, headers) = read_response(&mut reader);
+        assert_eq!(st, 200);
+        assert!(body.contains("RUNNING"));
+        assert!(headers
+            .iter()
+            .any(|h| h.to_ascii_lowercase()
+                == "connection: keep-alive"));
+    }
+
+    // HEAD: headers advertise the GET body length, but no body follows
+    write!(&stream, "HEAD /api/v2/cluster HTTP/1.1\r\nhost: x\r\n\r\n")
+        .unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("200"), "{line}");
+    let mut advertised = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).unwrap();
+        let h = h.trim_end().to_ascii_lowercase();
+        if h.is_empty() {
+            break;
+        }
+        if let Some(v) = h.strip_prefix("content-length:") {
+            advertised = v.trim().parse().unwrap();
+        }
+    }
+    assert!(advertised > 0);
+
+    // 405 with an Allow header (no body was sent after HEAD, so the
+    // stream is positioned at the next response)
+    write!(
+        &stream,
+        "DELETE /api/v2/cluster HTTP/1.1\r\nhost: x\r\n\r\n"
+    )
+    .unwrap();
+    let (st, body, headers) = read_response(&mut reader);
+    assert_eq!(st, 405);
+    assert!(
+        headers.iter().any(|h| h == "Allow: GET, HEAD"),
+        "{headers:?}"
+    );
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(
+        j.at(&["error", "type"]).and_then(Json::as_str),
+        Some("MethodNotAllowed")
+    );
+}
