@@ -20,7 +20,7 @@ use submarine::httpd::{Envelope, Request, Response, Router};
 use submarine::orchestrator::Submitter;
 use submarine::sdk::ExperimentClient;
 use submarine::storage::MetaStore;
-use submarine::util::bench::{bench, fmt_secs, Table};
+use submarine::util::bench::{bench, bench_params, fmt_secs, Table};
 use submarine::util::json::Json;
 
 // ---------------------------------------------------------------- seed
@@ -195,14 +195,16 @@ fn main() {
     // ---- dispatch micro-bench --------------------------------------
     let mix = request_mix();
     let n = mix.len() as f64;
+    // BENCH_SMOKE=1 (CI) shrinks every stage of this bench
+    let (iters, secs) = bench_params(300, 0.5);
     let lin = linear_router();
-    let lin_stats = bench(300, 0.5, || {
+    let lin_stats = bench(iters, secs, || {
         for req in &mix {
             std::hint::black_box(lin.dispatch(req));
         }
     });
     let trie = trie_router();
-    let trie_stats = bench(300, 0.5, || {
+    let trie_stats = bench(iters, secs, || {
         for req in &mix {
             std::hint::black_box(trie.dispatch(req));
         }
@@ -243,7 +245,8 @@ fn main() {
     let handle = Arc::clone(&server).serve_background();
 
     // seed design: one connection per request, framed by EOF
-    let close_stats = bench(200, 0.5, || {
+    let (iters, secs) = bench_params(200, 0.5);
+    let close_stats = bench(iters, secs, || {
         let mut stream =
             TcpStream::connect(("127.0.0.1", port)).unwrap();
         write!(
@@ -258,7 +261,7 @@ fn main() {
 
     // v2 design: SDK client holding one keep-alive connection
     let client = ExperimentClient::v2("127.0.0.1", port);
-    let keep_stats = bench(200, 0.5, || {
+    let keep_stats = bench(iters, secs, || {
         let (status, _) =
             client.request("GET", "/api/v2/cluster", None).unwrap();
         assert_eq!(status, 200);

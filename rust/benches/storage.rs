@@ -1,0 +1,229 @@
+//! E-STORE — the storage engine v2 hot paths (ISSUE 2 acceptance):
+//!
+//! 1. indexed filtered list vs the seed's scan-and-filter,
+//! 2. group-committed WAL appends vs per-write fsync under concurrency,
+//! 3. recovery replay time: snapshot + WAL tail vs pure-WAL replay.
+//!
+//! Run: `cargo bench --bench storage` (`BENCH_SMOKE=1` shrinks the
+//! workloads; CI runs smoke mode and archives the output).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use submarine::storage::{MetaStore, StoreOptions};
+use submarine::util::bench::{
+    bench, bench_params, fmt_secs, scaled, Table,
+};
+use submarine::util::clock::Stopwatch;
+use submarine::util::json::Json;
+
+const STATUSES: [&str; 5] =
+    ["Accepted", "Running", "Succeeded", "Failed", "Killed"];
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "submarine-bench-storage-{tag}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn doc(i: usize) -> Json {
+    Json::obj()
+        .set("id", Json::Str(format!("e{i:06}")))
+        .set("status", Json::Str(STATUSES[i % STATUSES.len()].into()))
+        .set("payload", Json::Str("x".repeat(64)))
+}
+
+/// The seed's list path: clone the namespace, filter, slice.
+fn scan_and_filter(
+    store: &MetaStore,
+    status: &str,
+    limit: usize,
+) -> (usize, usize) {
+    let mut rows = store.list("exp");
+    rows.retain(|(_, d)| {
+        d.str_field("status")
+            .map(|s| s.eq_ignore_ascii_case(status))
+            .unwrap_or(false)
+    });
+    let total = rows.len();
+    (rows.into_iter().take(limit).count(), total)
+}
+
+fn bench_indexed_list() {
+    let n = scaled(20_000);
+    let store = MetaStore::in_memory();
+    store.define_index("exp", "status", true);
+    for i in 0..n {
+        store.put("exp", &format!("e{i:06}"), doc(i)).unwrap();
+    }
+    let (iters, secs) = bench_params(200, 0.5);
+
+    let scan = bench(iters, secs, || {
+        let (page, total) = scan_and_filter(&store, "running", 50);
+        assert!(page <= 50 && total > 0);
+    });
+    let indexed = bench(iters, secs, || {
+        let (page, total) = store
+            .index_page("exp", "status", "running", 0, Some(50))
+            .unwrap();
+        assert!(page.len() <= 50 && total > 0);
+    });
+
+    let mut t = Table::new(
+        &format!("filtered list, {n} docs, page of 50"),
+        &["path", "p50", "p95", "lists/s"],
+    );
+    for (name, s) in
+        [("scan-and-filter (seed)", &scan), ("status index", &indexed)]
+    {
+        t.row(&[
+            name.into(),
+            fmt_secs(s.p50),
+            fmt_secs(s.p95),
+            format!("{:.0}", s.throughput(1.0)),
+        ]);
+    }
+    t.print();
+    println!(
+        "index speedup over scan: {:.2}x",
+        scan.mean / indexed.mean
+    );
+}
+
+/// `writers` threads, `per_thread` puts each, against a fresh durable
+/// store; returns wall-clock seconds.
+fn hammer(opts: StoreOptions, writers: usize, per_thread: usize) -> f64 {
+    let dir = tmp_dir(if opts.group_commit { "group" } else { "direct" });
+    let store = Arc::new(MetaStore::open_with(&dir, opts).unwrap());
+    let sw = Stopwatch::start();
+    let mut handles = Vec::new();
+    for t in 0..writers {
+        let store = Arc::clone(&store);
+        handles.push(std::thread::spawn(move || {
+            for i in 0..per_thread {
+                store
+                    .put(
+                        &format!("ns{t}"),
+                        &format!("k{i:06}"),
+                        Json::Num(i as f64),
+                    )
+                    .unwrap();
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let secs = sw.elapsed_secs();
+    drop(store);
+    let _ = std::fs::remove_dir_all(&dir);
+    secs
+}
+
+fn bench_group_commit() {
+    let writers = 4;
+    let per_thread = scaled(2_000);
+    let total = (writers * per_thread) as f64;
+    // both sides fsync; the contrast is one fsync per *batch* vs one
+    // per *record*
+    let base = StoreOptions {
+        sync: true,
+        compact_threshold: 0,
+        ..StoreOptions::default()
+    };
+    let direct = hammer(
+        StoreOptions {
+            group_commit: false,
+            ..base.clone()
+        },
+        writers,
+        per_thread,
+    );
+    let grouped = hammer(
+        StoreOptions {
+            group_commit: true,
+            ..base
+        },
+        writers,
+        per_thread,
+    );
+
+    let mut t = Table::new(
+        &format!(
+            "durable puts, {writers} writers x {per_thread} records, \
+             fsync on"
+        ),
+        &["wal mode", "wall", "puts/s"],
+    );
+    for (name, secs) in [
+        ("per-write fsync (seed-style)", direct),
+        ("group commit", grouped),
+    ] {
+        t.row(&[
+            name.into(),
+            fmt_secs(secs),
+            format!("{:.0}", total / secs),
+        ]);
+    }
+    t.print();
+    println!("group-commit speedup: {:.2}x", direct / grouped);
+}
+
+fn bench_recovery() {
+    let n = scaled(20_000);
+    let dir = tmp_dir("recovery");
+    {
+        let store = MetaStore::open_with(
+            &dir,
+            StoreOptions {
+                compact_threshold: 0, // keep everything in the WAL
+                ..StoreOptions::default()
+            },
+        )
+        .unwrap();
+        for i in 0..n {
+            store.put("exp", &format!("e{i:06}"), doc(i)).unwrap();
+        }
+    }
+    let sw = Stopwatch::start();
+    let store = MetaStore::open(&dir).unwrap();
+    let pure_wal = sw.elapsed_secs();
+    assert_eq!(store.count("exp"), n);
+    store.compact().unwrap();
+    drop(store);
+    let sw = Stopwatch::start();
+    let store = MetaStore::open(&dir).unwrap();
+    let snap_tail = sw.elapsed_secs();
+    assert_eq!(store.count("exp"), n);
+    drop(store);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let mut t = Table::new(
+        &format!("recovery of {n} records"),
+        &["layout", "open time", "records/s"],
+    );
+    for (name, secs) in [
+        ("pure WAL replay", pure_wal),
+        ("snapshot + WAL tail", snap_tail),
+    ] {
+        t.row(&[
+            name.into(),
+            fmt_secs(secs),
+            format!("{:.0}", n as f64 / secs.max(1e-9)),
+        ]);
+    }
+    t.print();
+    println!(
+        "snapshot recovery speedup: {:.2}x",
+        pure_wal / snap_tail.max(1e-9)
+    );
+}
+
+fn main() {
+    println!("E-STORE: storage engine v2 (index / group commit / recovery)");
+    bench_indexed_list();
+    bench_group_commit();
+    bench_recovery();
+}

@@ -304,8 +304,65 @@ fn dispatch(argv: &[String]) -> crate::Result<String> {
                 ))),
             }
         }
+        "storage" => {
+            let sub = argv.get(1).map(String::as_str).unwrap_or("");
+            let rest = argv.get(2..).unwrap_or(&[]);
+            let args = Args::parse(rest)?;
+            storage_admin(sub, &args)
+        }
         other => Err(bad(&format!(
             "unknown command {other:?}; try `submarine help`"
+        ))),
+    }
+}
+
+/// The server/admin data directory from `--data-dir` (preferred) or the
+/// pre-v2 `--db` alias; either may also point at a legacy single-file
+/// WAL, which the engine migrates in place.
+fn data_dir(args: &Args) -> Option<&str> {
+    args.flag("data-dir").or_else(|| args.flag("db"))
+}
+
+/// `submarine storage stats|compact --data-dir DIR`: admin over a
+/// storage engine data directory. `stats` is a read-only inspection
+/// (safe while a server owns the directory); `compact` performs full
+/// recovery + rewrite and must only run with the server stopped.
+fn storage_admin(sub: &str, args: &Args) -> crate::Result<String> {
+    use crate::storage::MetaStore;
+    let dir = data_dir(args)
+        .ok_or_else(|| bad("storage commands need --data-dir DIR"))?;
+    match sub {
+        "stats" => {
+            let st = MetaStore::inspect(std::path::Path::new(dir))?;
+            Ok(format!(
+                "data dir:          {dir}\n\
+                 namespaces:        {}\n\
+                 documents:         {}\n\
+                 snapshot gen:      {}\n\
+                 wal records:       {} (replayable)\n\
+                 wal bytes:         {}\n\
+                 skipped records:   {} (blank/torn lines, tolerated)",
+                st.namespaces,
+                st.docs,
+                st.snapshot_gen,
+                st.wal_records,
+                st.wal_bytes,
+                st.skipped_records,
+            ))
+        }
+        "compact" => {
+            // full recovery + rewrite: requires exclusive ownership of
+            // the directory (stop the server first)
+            let store = MetaStore::open(std::path::Path::new(dir))?;
+            let rep = store.compact()?;
+            Ok(format!(
+                "compacted {dir}: snapshot gen {} ({} docs, {} stale \
+                 files removed)",
+                rep.gen, rep.docs, rep.removed_files
+            ))
+        }
+        other => Err(bad(&format!(
+            "unknown storage subcommand {other:?} (stats|compact)"
         ))),
     }
 }
@@ -322,7 +379,7 @@ fn serve(args: &Args) -> crate::Result<String> {
         .and_then(|p| p.parse().ok())
         .unwrap_or(8080);
     let artifacts = args.flag("artifacts").unwrap_or("artifacts");
-    let store = match args.flag("db") {
+    let store = match data_dir(args) {
         Some(path) => {
             Arc::new(MetaStore::open(std::path::Path::new(path))?)
         }
@@ -368,7 +425,7 @@ fn serve(args: &Args) -> crate::Result<String> {
 fn usage() -> String {
     "usage: submarine <command>\n\
      commands:\n\
-       server      [--port 8080] [--db wal.jsonl] [--artifacts DIR] [--token T]\n\
+       server      [--port 8080] [--data-dir DIR] [--artifacts DIR] [--token T]\n\
                    [--rate-limit REQS_PER_SEC]\n\
        job run     --name N [--framework F] [--num_workers K] [--num_ps K]\n\
                    [--worker_resources R] [--ps_resources R]\n\
@@ -377,8 +434,12 @@ fn usage() -> String {
        experiment  list [--limit N] [--offset N] [--status S]\n\
                    | get <id> | kill <id>        [--server host:port]\n\
        template    submit <name> -P key=value... [--server host:port]\n\
+       storage     stats | compact --data-dir DIR\n\
+                   (stats is read-only; compact needs the server stopped)\n\
        version\n\
-     client flags: [--server host:port] [--api v1|v2] [--token T]"
+     client flags: [--server host:port] [--api v1|v2] [--token T]\n\
+     (--db is a deprecated alias for --data-dir; legacy single-file\n\
+      WALs are migrated into the directory layout on first open)"
         .to_string()
 }
 
@@ -483,5 +544,36 @@ mod tests {
     fn unknown_command_fails() {
         assert_eq!(run(&argv(&["frobnicate"])), 2);
         assert_eq!(run(&argv(&["version"])), 0);
+    }
+
+    #[test]
+    fn storage_admin_stats_and_compact() {
+        let dir = std::env::temp_dir().join(format!(
+            "submarine-cli-store-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let s = crate::storage::MetaStore::open(&dir).unwrap();
+            s.put("exp", "e1", crate::util::json::Json::Num(1.0))
+                .unwrap();
+        }
+        let d = dir.to_str().unwrap().to_string();
+        let out =
+            dispatch(&argv(&["storage", "stats", "--data-dir", &d]))
+                .unwrap();
+        assert!(out.contains("documents:"), "{out}");
+        assert!(out.contains("skipped records:"), "{out}");
+        let out =
+            dispatch(&argv(&["storage", "compact", "--data-dir", &d]))
+                .unwrap();
+        assert!(out.contains("compacted"), "{out}");
+        assert!(
+            dispatch(&argv(&["storage", "frob", "--data-dir", &d]))
+                .is_err()
+        );
+        // --data-dir is required for offline admin
+        assert!(dispatch(&argv(&["storage", "stats"])).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,30 +1,74 @@
 //! Unified error type for the Submarine-RS platform.
+//!
+//! Hand-rolled `Display`/`Error`/`From` impls: the offline registry has
+//! no `thiserror`, and the surface is small enough to write by hand.
+
+use std::fmt;
 
 /// Platform-level errors surfaced through the REST API and CLI.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum SubmarineError {
-    #[error("not found: {0}")]
     NotFound(String),
-    #[error("already exists: {0}")]
     AlreadyExists(String),
-    #[error("invalid spec: {0}")]
     InvalidSpec(String),
-    #[error("resources unavailable: {0}")]
     ResourcesUnavailable(String),
-    #[error("runtime error: {0}")]
     Runtime(String),
-    #[error("storage error: {0}")]
     Storage(String),
-    #[error("json error: {0}")]
-    Json(#[from] crate::util::json::JsonError),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("xla error: {0}")]
+    Json(crate::util::json::JsonError),
+    Io(std::io::Error),
     Xla(String),
-    #[error("unauthorized: {0}")]
     Unauthorized(String),
-    #[error("rate limited: {0}")]
     RateLimited(String),
+}
+
+impl fmt::Display for SubmarineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmarineError::NotFound(m) => write!(f, "not found: {m}"),
+            SubmarineError::AlreadyExists(m) => {
+                write!(f, "already exists: {m}")
+            }
+            SubmarineError::InvalidSpec(m) => {
+                write!(f, "invalid spec: {m}")
+            }
+            SubmarineError::ResourcesUnavailable(m) => {
+                write!(f, "resources unavailable: {m}")
+            }
+            SubmarineError::Runtime(m) => write!(f, "runtime error: {m}"),
+            SubmarineError::Storage(m) => write!(f, "storage error: {m}"),
+            SubmarineError::Json(e) => write!(f, "json error: {e}"),
+            SubmarineError::Io(e) => write!(f, "io error: {e}"),
+            SubmarineError::Xla(m) => write!(f, "xla error: {m}"),
+            SubmarineError::Unauthorized(m) => {
+                write!(f, "unauthorized: {m}")
+            }
+            SubmarineError::RateLimited(m) => {
+                write!(f, "rate limited: {m}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmarineError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SubmarineError::Json(e) => Some(e),
+            SubmarineError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<crate::util::json::JsonError> for SubmarineError {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        SubmarineError::Json(e)
+    }
+}
+
+impl From<std::io::Error> for SubmarineError {
+    fn from(e: std::io::Error) -> Self {
+        SubmarineError::Io(e)
+    }
 }
 
 impl From<xla::Error> for SubmarineError {

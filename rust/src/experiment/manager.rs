@@ -12,6 +12,35 @@ use std::sync::Arc;
 
 const NS: &str = "experiment";
 
+/// Mirror a monitor-derived status into the experiment document (and
+/// thus the `status` secondary index). No-ops when the doc is gone or
+/// already current; storage failures are logged, not raised — the
+/// monitor remains the live authority.
+pub fn persist_status(
+    store: &MetaStore,
+    id: &str,
+    status: ExperimentStatus,
+) {
+    // atomic update: a concurrent delete() wins — a stale get-then-put
+    // here must never resurrect a deleted experiment doc
+    let res = store.update(NS, id, |doc| {
+        if doc.str_field("status") == Some(status.as_str()) {
+            None
+        } else {
+            Some(doc.clone().set(
+                "status",
+                Json::Str(status.as_str().to_string()),
+            ))
+        }
+    });
+    if let Err(e) = res {
+        crate::warnlog!(
+            "experiment-manager",
+            "failed to persist status of {id}: {e}"
+        );
+    }
+}
+
 /// The control-plane entry point for experiments.
 pub struct ExperimentManager {
     store: Arc<MetaStore>,
@@ -25,6 +54,27 @@ impl ExperimentManager {
         monitor: Arc<ExperimentMonitor>,
         submitter: Arc<dyn Submitter>,
     ) -> ExperimentManager {
+        // filtered v2 lists walk this instead of scanning the namespace
+        store.define_index(NS, "status", true);
+        // Docs persisted before the status field existed would never
+        // enter the index and silently vanish from filtered lists;
+        // backfill them with the same default the monitor reports for
+        // unknown experiments.
+        for (id, doc) in store.list(NS) {
+            if doc.str_field("status").is_none() {
+                let accepted = ExperimentStatus::Accepted.as_str();
+                if let Err(e) = store.put(
+                    NS,
+                    &id,
+                    doc.set("status", Json::Str(accepted.into())),
+                ) {
+                    crate::warnlog!(
+                        "experiment-manager",
+                        "status backfill of {id} failed: {e}"
+                    );
+                }
+            }
+        }
         ExperimentManager {
             store,
             monitor,
@@ -41,6 +91,10 @@ impl ExperimentManager {
         let id = crate::util::id::next("experiment");
         let doc = Json::obj()
             .set("id", Json::Str(id.clone()))
+            .set(
+                "status",
+                Json::Str(ExperimentStatus::Accepted.as_str().into()),
+            )
             .set("spec", spec.to_json())
             .set(
                 "submitter",
@@ -79,19 +133,77 @@ impl ExperimentManager {
         })?)
     }
 
+    /// Live status: the monitor when it has state for `id`, else the
+    /// status persisted in the doc — so a Killed experiment is still
+    /// Killed (and deletable) after a server restart, matching what
+    /// the filtered lists report.
     pub fn status(&self, id: &str) -> ExperimentStatus {
-        self.monitor.status(id)
+        if self.monitor.is_watched(id) {
+            return self.monitor.status(id);
+        }
+        self.store
+            .get(NS, id)
+            .and_then(|d| {
+                d.str_field("status").and_then(ExperimentStatus::parse)
+            })
+            .unwrap_or(ExperimentStatus::Accepted)
+    }
+
+    /// [`Self::status`] when the caller already holds the doc.
+    fn row_status(&self, id: &str, doc: &Json) -> ExperimentStatus {
+        if self.monitor.is_watched(id) {
+            return self.monitor.status(id);
+        }
+        doc.str_field("status")
+            .and_then(ExperimentStatus::parse)
+            .unwrap_or(ExperimentStatus::Accepted)
     }
 
     pub fn list(&self) -> Vec<(String, ExperimentStatus)> {
         self.store
             .list(NS)
             .into_iter()
-            .map(|(id, _)| {
-                let st = self.monitor.status(&id);
+            .map(|(id, doc)| {
+                let st = self.row_status(&id, &doc);
                 (id, st)
             })
             .collect()
+    }
+
+    /// One page of `(id, status)`, optionally filtered by status. The
+    /// filter walks the `status` secondary index (O(log n + page))
+    /// instead of scanning and filtering the namespace; the unfiltered
+    /// path pages the primary map without cloning it whole.
+    pub fn list_page(
+        &self,
+        status: Option<&str>,
+        offset: usize,
+        limit: Option<usize>,
+    ) -> (Vec<(String, ExperimentStatus)>, usize) {
+        let rows = |page: Vec<(String, Json)>| {
+            page.into_iter()
+                .map(|(id, doc)| {
+                    let st = self.row_status(&id, &doc);
+                    (id, st)
+                })
+                .collect()
+        };
+        match status {
+            None => {
+                let (page, total) = self.store.page(NS, offset, limit);
+                (rows(page), total)
+            }
+            Some(filter) => {
+                match self
+                    .store
+                    .index_page(NS, "status", filter, offset, limit)
+                {
+                    Ok((page, total)) => (rows(page), total),
+                    // the index is declared in `new`; unreachable
+                    Err(_) => (Vec::new(), 0),
+                }
+            }
+        }
     }
 
     pub fn kill(&self, id: &str) -> crate::Result<()> {
@@ -111,7 +223,7 @@ impl ExperimentManager {
 
     /// Delete a *terminal* experiment's metadata.
     pub fn delete(&self, id: &str) -> crate::Result<()> {
-        let st = self.monitor.status(id);
+        let st = self.status(id);
         if !st.is_terminal() && self.store.get(NS, id).is_some() {
             return Err(crate::SubmarineError::InvalidSpec(format!(
                 "experiment {id} is {}; kill it first",
@@ -191,6 +303,64 @@ mod tests {
         m.monitor().record(&id, Event::Killed);
         m.delete(&id).unwrap();
         assert!(m.get(&id).is_err());
+    }
+
+    #[test]
+    fn list_page_filters_via_status_index() {
+        let store = Arc::new(MetaStore::in_memory());
+        let monitor = Arc::new(ExperimentMonitor::new());
+        let m = ExperimentManager::new(
+            Arc::clone(&store),
+            Arc::clone(&monitor),
+            Arc::new(NullSubmitter),
+        );
+        // the same wiring Services installs
+        let sink = Arc::clone(&store);
+        monitor.set_observer(Box::new(move |id, st| {
+            persist_status(&sink, id, st)
+        }));
+        let ids: Vec<_> =
+            (0..4).map(|_| m.submit(&spec()).unwrap()).collect();
+        m.monitor().record(&ids[0], Event::Killed);
+        let (rows, total) = m.list_page(Some("accepted"), 0, None);
+        assert_eq!(total, 3);
+        assert!(rows
+            .iter()
+            .all(|(_, st)| *st == ExperimentStatus::Accepted));
+        let (rows, total) = m.list_page(Some("killed"), 0, None);
+        assert_eq!((rows.len(), total), (1, 1));
+        assert_eq!(rows[0].0, ids[0]);
+        let (rows, total) = m.list_page(None, 1, Some(2));
+        assert_eq!(total, 4);
+        assert_eq!(rows.len(), 2);
+    }
+
+    #[test]
+    fn terminal_status_survives_restart() {
+        let store = Arc::new(MetaStore::in_memory());
+        let monitor = Arc::new(ExperimentMonitor::new());
+        let a = ExperimentManager::new(
+            Arc::clone(&store),
+            Arc::clone(&monitor),
+            Arc::new(NullSubmitter),
+        );
+        let sink = Arc::clone(&store);
+        monitor.set_observer(Box::new(move |id, st| {
+            persist_status(&sink, id, st)
+        }));
+        let id = a.submit(&spec()).unwrap();
+        a.kill(&id).unwrap();
+        // "restart": same store, fresh monitor with no state — the
+        // persisted status must win over the Accepted default, and the
+        // experiment must stay deletable
+        let b = ExperimentManager::new(
+            Arc::clone(&store),
+            Arc::new(ExperimentMonitor::new()),
+            Arc::new(NullSubmitter),
+        );
+        assert_eq!(b.status(&id), ExperimentStatus::Killed);
+        b.delete(&id).unwrap();
+        assert!(b.get(&id).is_err());
     }
 
     #[test]

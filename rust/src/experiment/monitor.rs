@@ -36,10 +36,33 @@ struct ExpState {
     killed: bool,
 }
 
+/// Fig. 4 lifecycle, derived from container counters.
+fn derive(st: &ExpState) -> ExperimentStatus {
+    if st.killed {
+        ExperimentStatus::Killed
+    } else if st.containers_failed > 0 {
+        ExperimentStatus::Failed
+    } else if st.containers_expected > 0
+        && st.containers_finished >= st.containers_expected
+    {
+        ExperimentStatus::Succeeded
+    } else if st.containers_started > 0 {
+        ExperimentStatus::Running
+    } else {
+        ExperimentStatus::Accepted
+    }
+}
+
+/// Callback invoked with `(id, derived_status)` after every state
+/// change — the hook the storage layer uses to keep the persisted
+/// status (and its secondary index) in lockstep with the monitor.
+pub type StatusObserver = Box<dyn Fn(&str, ExperimentStatus) + Send + Sync>;
+
 /// Tracks per-experiment container progress and derives status.
 #[derive(Default)]
 pub struct ExperimentMonitor {
     state: Mutex<BTreeMap<String, ExpState>>,
+    observer: Mutex<Option<StatusObserver>>,
 }
 
 impl ExperimentMonitor {
@@ -47,32 +70,62 @@ impl ExperimentMonitor {
         ExperimentMonitor::default()
     }
 
+    /// Install the status observer (replaces any previous one). Wired by
+    /// `Services` so doc status / the status index track the monitor.
+    pub fn set_observer(&self, observer: StatusObserver) {
+        *self.observer.lock().unwrap() = Some(observer);
+    }
+
+    /// Invoke the observer outside the state lock (it may hit storage).
+    /// The status is re-derived *under the observer lock*: two racing
+    /// events then can't persist out of order (each notification sees a
+    /// status at least as fresh as its own transition, and the last one
+    /// to run wins with the latest state).
+    fn notify(&self, id: &str) {
+        let g = self.observer.lock().unwrap();
+        if let Some(f) = g.as_ref() {
+            f(id, self.status(id));
+        }
+    }
+
     /// Register a new experiment expecting `containers` containers.
     pub fn watch(&self, id: &str, containers: u32) {
-        let mut g = self.state.lock().unwrap();
-        let st = g.entry(id.to_string()).or_default();
-        st.containers_expected = containers;
-        st.events.push(Recorded {
-            at_millis: unix_millis(),
-            event: Event::Accepted,
-        });
+        {
+            let mut g = self.state.lock().unwrap();
+            let st = g.entry(id.to_string()).or_default();
+            st.containers_expected = containers;
+            st.events.push(Recorded {
+                at_millis: unix_millis(),
+                event: Event::Accepted,
+            });
+        }
+        self.notify(id);
     }
 
     /// Record an event for `id`.
     pub fn record(&self, id: &str, event: Event) {
-        let mut g = self.state.lock().unwrap();
-        let st = g.entry(id.to_string()).or_default();
-        match &event {
-            Event::ContainerStarted { .. } => st.containers_started += 1,
-            Event::ContainerFinished { .. } => st.containers_finished += 1,
-            Event::ContainerFailed { .. } => st.containers_failed += 1,
-            Event::Killed => st.killed = true,
-            _ => {}
+        {
+            let mut g = self.state.lock().unwrap();
+            let st = g.entry(id.to_string()).or_default();
+            match &event {
+                Event::ContainerStarted { .. } => {
+                    st.containers_started += 1
+                }
+                Event::ContainerFinished { .. } => {
+                    st.containers_finished += 1
+                }
+                Event::ContainerFailed { .. } => {
+                    st.containers_failed += 1
+                }
+                Event::Killed => st.killed = true,
+                _ => {}
+            }
+            st.events.push(Recorded {
+                at_millis: unix_millis(),
+                event,
+            });
         }
-        st.events.push(Recorded {
-            at_millis: unix_millis(),
-            event,
-        });
+        self.notify(id);
     }
 
     /// Derived status per Fig. 4's lifecycle.
@@ -80,22 +133,15 @@ impl ExperimentMonitor {
         let g = self.state.lock().unwrap();
         match g.get(id) {
             None => ExperimentStatus::Accepted,
-            Some(st) => {
-                if st.killed {
-                    ExperimentStatus::Killed
-                } else if st.containers_failed > 0 {
-                    ExperimentStatus::Failed
-                } else if st.containers_expected > 0
-                    && st.containers_finished >= st.containers_expected
-                {
-                    ExperimentStatus::Succeeded
-                } else if st.containers_started > 0 {
-                    ExperimentStatus::Running
-                } else {
-                    ExperimentStatus::Accepted
-                }
-            }
+            Some(st) => derive(st),
         }
+    }
+
+    /// Whether this (volatile) monitor has any state for `id`. After a
+    /// restart it does not, and callers should trust the persisted doc
+    /// status instead of the `Accepted` default.
+    pub fn is_watched(&self, id: &str) -> bool {
+        self.state.lock().unwrap().contains_key(id)
     }
 
     /// Success-likelihood prediction for an in-progress experiment (the
@@ -179,6 +225,29 @@ mod tests {
         m.record("e", Event::ContainerStarted { container: "c".into() });
         m.record("e", Event::ContainerFinished { container: "c".into() });
         assert!(m.success_estimate("e") > base);
+    }
+
+    #[test]
+    fn observer_sees_status_transitions() {
+        use std::sync::Arc;
+        let m = ExperimentMonitor::new();
+        let seen: Arc<Mutex<Vec<(String, ExperimentStatus)>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let sink = Arc::clone(&seen);
+        m.set_observer(Box::new(move |id, st| {
+            sink.lock().unwrap().push((id.to_string(), st));
+        }));
+        m.watch("e", 1);
+        m.record(
+            "e",
+            Event::ContainerStarted { container: "c".into() },
+        );
+        m.record("e", Event::Killed);
+        let seen = seen.lock().unwrap();
+        assert_eq!(seen.len(), 3);
+        assert_eq!(seen[0].1, ExperimentStatus::Accepted);
+        assert_eq!(seen[1].1, ExperimentStatus::Running);
+        assert_eq!(seen[2].1, ExperimentStatus::Killed);
     }
 
     #[test]

@@ -57,6 +57,17 @@ impl Services {
             Arc::clone(&monitor),
             submitter,
         ));
+        // Mirror monitor-derived statuses into the experiment docs so
+        // the persisted status (and its secondary index, which backs
+        // the v2 `?status=` filter) tracks the live lifecycle.
+        let status_sink = Arc::clone(&store);
+        monitor.set_observer(Box::new(move |id, st| {
+            crate::experiment::manager::persist_status(
+                &status_sink,
+                id,
+                st,
+            )
+        }));
         Services {
             templates: Arc::new(TemplateManager::new(Arc::clone(&store))),
             environments: Arc::new(EnvironmentManager::new(Arc::clone(

@@ -121,21 +121,20 @@ fn register_routes(r: &mut Router, s: Arc<Services>) {
         );
     }
     {
-        // v2 list: pagination + status filter.
+        // v2 list: pagination + status filter, served by the storage
+        // engine's `status` secondary index instead of scan-and-filter.
         let s = Arc::clone(&s);
         r.route(
             "GET",
             "/api/v2/experiment",
             Envelope::V2,
             typed(move |_: &Ctx<'_>, page: Page| {
-                let mut rows = s.experiments.list();
-                if let Some(want) = &page.status {
-                    rows.retain(|(_, st)| {
-                        st.as_str().eq_ignore_ascii_case(want)
-                    });
-                }
-                let (items, total) = page.slice(rows);
-                let items = items
+                let (rows, total) = s.experiments.list_page(
+                    page.status.as_deref(),
+                    page.offset,
+                    page.limit,
+                );
+                let items = rows
                     .into_iter()
                     .map(|(id, st)| experiment_item(id, st.as_str()))
                     .collect();
@@ -240,7 +239,8 @@ fn register_routes(r: &mut Router, s: Arc<Services>) {
             Envelope::V2,
             typed(move |_: &Ctx<'_>, page: Page| {
                 reject_status_filter(&page, "templates")?;
-                let (items, total) = page.slice(s.templates.list());
+                let (items, total) =
+                    s.templates.list_page(page.offset, page.limit);
                 Ok(page.envelope(
                     items.into_iter().map(Json::Str).collect(),
                     total,
@@ -336,7 +336,8 @@ fn register_routes(r: &mut Router, s: Arc<Services>) {
             Envelope::V2,
             typed(move |_: &Ctx<'_>, page: Page| {
                 reject_status_filter(&page, "environments")?;
-                let (items, total) = page.slice(s.environments.list());
+                let (items, total) =
+                    s.environments.list_page(page.offset, page.limit);
                 Ok(page.envelope(
                     items.into_iter().map(Json::Str).collect(),
                     total,
@@ -398,17 +399,18 @@ fn register_routes(r: &mut Router, s: Arc<Services>) {
                 // model versions filter on `stage`, not `status`
                 reject_status_filter(&page, "model versions")?;
                 let name = ctx.param("name")?;
-                let mut versions = s.models.versions(name);
-                if versions.is_empty() {
+                // existence = one name-index probe; the stage filter
+                // walks the stage index (no scan-and-filter, and no
+                // materializing versions that the filter discards)
+                if !s.models.exists(name) {
                     return Err(crate::SubmarineError::NotFound(
                         format!("model {name}"),
                     ));
                 }
-                if let Some(stage) = ctx.query("stage") {
-                    versions.retain(|m| {
-                        m.stage.as_str().eq_ignore_ascii_case(stage)
-                    });
-                }
+                let versions = match ctx.query("stage") {
+                    Some(stage) => s.models.versions_by_stage(name, stage),
+                    None => s.models.versions(name),
+                };
                 let (items, total) = page.slice(versions);
                 Ok(page.envelope(
                     items.iter().map(model_version_json).collect(),

@@ -72,11 +72,23 @@ pub struct ModelRegistry {
 
 impl ModelRegistry {
     pub fn new(store: Arc<MetaStore>) -> ModelRegistry {
+        // `name` replaces the seed's whole-namespace prefix scans;
+        // `stage` backs the v2 list endpoint's `?stage=` filter
+        store.define_index(NS, "name", false);
+        store.define_index(NS, "stage", true);
         ModelRegistry { store }
     }
 
     fn key(name: &str, version: u32) -> String {
         format!("{name}@{version:06}")
+    }
+
+    /// Keys of `name`'s versions via the name index, ascending (the
+    /// zero-padded key format sorts by version).
+    fn keys_of(&self, name: &str) -> Vec<String> {
+        self.store
+            .index_lookup(NS, "name", name)
+            .unwrap_or_default()
     }
 
     /// Register the next version of `name`; stores the parameter blob in
@@ -134,11 +146,14 @@ impl ModelRegistry {
     }
 
     pub fn latest_version(&self, name: &str) -> Option<u32> {
-        self.store
-            .list(NS)
+        self.keys_of(name)
             .into_iter()
-            .filter(|(k, _)| k.starts_with(&format!("{name}@")))
-            .filter_map(|(_, d)| d.num_field("version").map(|v| v as u32))
+            .filter_map(|k| {
+                self.store
+                    .get(NS, &k)
+                    .and_then(|d| d.num_field("version"))
+                    .map(|v| v as u32)
+            })
             .max()
     }
 
@@ -153,7 +168,11 @@ impl ModelRegistry {
                     "model {name} v{version}"
                 ))
             })?;
-        Ok(ModelVersion {
+        Ok(Self::version_from_doc(name, version, &doc))
+    }
+
+    fn version_from_doc(name: &str, version: u32, doc: &Json) -> ModelVersion {
+        ModelVersion {
             name: name.to_string(),
             version,
             experiment_id: doc
@@ -179,7 +198,7 @@ impl ModelRegistry {
                 .str_field("stage")
                 .and_then(Stage::parse)
                 .unwrap_or(Stage::None),
-        })
+        }
     }
 
     /// Load a version's parameter tensors back.
@@ -252,12 +271,11 @@ impl ModelRegistry {
                 to.as_str()
             )));
         }
-        // Only one Production version per model: demote the current one.
+        // Only one Production version per model: demote the current one
+        // (name ∩ stage index intersection instead of a namespace scan).
         if to == Stage::Production {
-            for (k, d) in self.store.list(NS) {
-                if k.starts_with(&format!("{name}@"))
-                    && d.str_field("stage") == Some("Production")
-                {
+            for k in self.stage_keys(name, Stage::Production.as_str()) {
+                if let Some(d) = self.store.get(NS, &k) {
                     self.store.put(
                         NS,
                         &k,
@@ -276,26 +294,61 @@ impl ModelRegistry {
         )
     }
 
-    /// All versions of `name`, ascending.
-    pub fn versions(&self, name: &str) -> Vec<ModelVersion> {
-        let mut out: Vec<ModelVersion> = self
+    /// Version keys of `name` in the given stage: intersection of the
+    /// `name` and `stage` secondary indexes (both key-sorted).
+    fn stage_keys(&self, name: &str, stage: &str) -> Vec<String> {
+        let in_stage: std::collections::BTreeSet<String> = self
             .store
-            .list(NS)
+            .index_lookup(NS, "stage", stage)
+            .unwrap_or_default()
             .into_iter()
-            .filter(|(k, _)| k.starts_with(&format!("{name}@")))
-            .filter_map(|(_, d)| {
-                let v = d.num_field("version")? as u32;
-                self.get(name, v).ok()
+            .collect();
+        self.keys_of(name)
+            .into_iter()
+            .filter(|k| in_stage.contains(k))
+            .collect()
+    }
+
+    fn from_keys(&self, name: &str, keys: Vec<String>) -> Vec<ModelVersion> {
+        let mut out: Vec<ModelVersion> = keys
+            .into_iter()
+            .filter_map(|k| {
+                let doc = self.store.get(NS, &k)?;
+                let v = doc.num_field("version")? as u32;
+                Some(Self::version_from_doc(name, v, &doc))
             })
             .collect();
         out.sort_by_key(|m| m.version);
         out
     }
 
+    /// Whether any version of `name` is registered (one index probe,
+    /// no document materialization).
+    pub fn exists(&self, name: &str) -> bool {
+        !self.keys_of(name).is_empty()
+    }
+
+    /// All versions of `name`, ascending (name-index walk).
+    pub fn versions(&self, name: &str) -> Vec<ModelVersion> {
+        let keys = self.keys_of(name);
+        self.from_keys(name, keys)
+    }
+
+    /// Versions of `name` currently in `stage` (accepts any case),
+    /// ascending — the v2 `?stage=` filter path.
+    pub fn versions_by_stage(
+        &self,
+        name: &str,
+        stage: &str,
+    ) -> Vec<ModelVersion> {
+        let keys = self.stage_keys(name, stage);
+        self.from_keys(name, keys)
+    }
+
     pub fn production_version(&self, name: &str) -> Option<ModelVersion> {
-        self.versions(name)
+        self.versions_by_stage(name, Stage::Production.as_str())
             .into_iter()
-            .find(|m| m.stage == Stage::Production)
+            .next()
     }
 }
 
@@ -368,6 +421,19 @@ mod tests {
             r.production_version("m").unwrap().version,
             v2
         );
+    }
+
+    #[test]
+    fn stage_filter_uses_index() {
+        let r = reg();
+        let v1 = r.register("m", "e", &params(), &[]).unwrap();
+        let v2 = r.register("m", "e", &params(), &[]).unwrap();
+        r.transition("m", v1, Stage::Staging).unwrap();
+        let staged = r.versions_by_stage("m", "staging");
+        assert_eq!(staged.len(), 1);
+        assert_eq!(staged[0].version, v1);
+        assert_eq!(r.versions_by_stage("m", "None")[0].version, v2);
+        assert!(r.versions_by_stage("ghost", "Staging").is_empty());
     }
 
     #[test]

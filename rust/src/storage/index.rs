@@ -1,0 +1,164 @@
+//! Secondary indexes over [`crate::storage::MetaStore`] documents.
+//!
+//! An index maps one top-level document field to the set of keys whose
+//! documents carry each value (`status -> {"accepted": {e1, e2}, ...}`).
+//! Indexes live next to the primary map inside the owning shard and are
+//! mutated under the same shard write lock as the document itself, so a
+//! reader never observes a doc/index mismatch. They are memory-only:
+//! recovery rebuilds them from the replayed documents, which keeps the
+//! WAL format index-agnostic.
+
+use crate::util::json::Json;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Declaration of one secondary index: which top-level field to index,
+/// and whether lookups fold ASCII case (status/stage-style enums do;
+/// name-style identifiers don't).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IndexDef {
+    pub field: String,
+    pub case_insensitive: bool,
+}
+
+impl IndexDef {
+    pub fn new(field: &str, case_insensitive: bool) -> IndexDef {
+        IndexDef {
+            field: field.to_string(),
+            case_insensitive,
+        }
+    }
+}
+
+/// One maintained posting map: normalized field value -> sorted key set.
+#[derive(Debug)]
+pub struct FieldIndex {
+    def: IndexDef,
+    postings: BTreeMap<String, BTreeSet<String>>,
+}
+
+impl FieldIndex {
+    pub fn new(def: IndexDef) -> FieldIndex {
+        FieldIndex {
+            def,
+            postings: BTreeMap::new(),
+        }
+    }
+
+    pub fn field(&self) -> &str {
+        &self.def.field
+    }
+
+    fn normalize(&self, value: &str) -> String {
+        if self.def.case_insensitive {
+            value.to_ascii_lowercase()
+        } else {
+            value.to_string()
+        }
+    }
+
+    /// The indexable value of `doc`, if present: strings index as-is,
+    /// numbers/bools by their JSON text; arrays/objects/null don't index.
+    fn value_of(&self, doc: &Json) -> Option<String> {
+        match doc.get(&self.def.field) {
+            Some(Json::Str(s)) => Some(self.normalize(s)),
+            Some(v @ (Json::Num(_) | Json::Bool(_))) => Some(v.dump()),
+            _ => None,
+        }
+    }
+
+    /// Add `key`'s posting for `doc` (called under the shard write lock).
+    pub fn add(&mut self, key: &str, doc: &Json) {
+        if let Some(v) = self.value_of(doc) {
+            self.postings.entry(v).or_default().insert(key.to_string());
+        }
+    }
+
+    /// Remove `key`'s posting for `doc` (the document being replaced or
+    /// deleted — the index must see the *old* doc to find the posting).
+    pub fn remove(&mut self, key: &str, doc: &Json) {
+        if let Some(v) = self.value_of(doc) {
+            if let Some(set) = self.postings.get_mut(&v) {
+                set.remove(key);
+                if set.is_empty() {
+                    self.postings.remove(&v);
+                }
+            }
+        }
+    }
+
+    /// Keys whose documents carry `value`, in key order.
+    pub fn lookup(&self, value: &str) -> Vec<String> {
+        self.postings
+            .get(&self.normalize(value))
+            .map(|set| set.iter().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    /// Number of keys posted under `value` (for stats / pagination
+    /// totals without materializing the key list).
+    pub fn cardinality(&self, value: &str) -> usize {
+        self.postings
+            .get(&self.normalize(value))
+            .map(BTreeSet::len)
+            .unwrap_or(0)
+    }
+
+    /// Distinct indexed values and their posting sizes.
+    pub fn histogram(&self) -> BTreeMap<String, usize> {
+        self.postings
+            .iter()
+            .map(|(v, set)| (v.clone(), set.len()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(status: &str) -> Json {
+        Json::obj().set("status", Json::Str(status.to_string()))
+    }
+
+    #[test]
+    fn add_lookup_remove_roundtrip() {
+        let mut idx = FieldIndex::new(IndexDef::new("status", true));
+        idx.add("e1", &doc("Running"));
+        idx.add("e2", &doc("Running"));
+        idx.add("e3", &doc("Failed"));
+        assert_eq!(idx.lookup("running"), vec!["e1", "e2"]);
+        assert_eq!(idx.lookup("RUNNING"), vec!["e1", "e2"]);
+        assert_eq!(idx.cardinality("failed"), 1);
+        idx.remove("e1", &doc("Running"));
+        assert_eq!(idx.lookup("Running"), vec!["e2"]);
+        idx.remove("e2", &doc("Running"));
+        assert!(idx.lookup("Running").is_empty());
+        // empty posting sets are pruned
+        assert_eq!(idx.histogram().len(), 1);
+    }
+
+    #[test]
+    fn case_sensitive_index_distinguishes() {
+        let mut idx = FieldIndex::new(IndexDef::new("name", false));
+        idx.add("k1", &Json::obj().set("name", Json::Str("A".into())));
+        assert_eq!(idx.lookup("A"), vec!["k1"]);
+        assert!(idx.lookup("a").is_empty());
+    }
+
+    #[test]
+    fn non_scalar_fields_do_not_index() {
+        let mut idx = FieldIndex::new(IndexDef::new("tags", true));
+        idx.add("k1", &Json::obj().set("tags", Json::Arr(vec![])));
+        idx.add("k2", &Json::obj());
+        assert!(idx.histogram().is_empty());
+        // removing unindexed docs is a no-op
+        idx.remove("k1", &Json::obj().set("tags", Json::Arr(vec![])));
+    }
+
+    #[test]
+    fn numbers_index_by_json_text() {
+        let mut idx = FieldIndex::new(IndexDef::new("version", false));
+        idx.add("k1", &Json::obj().set("version", Json::Num(3.0)));
+        assert_eq!(idx.lookup("3"), vec!["k1"]);
+    }
+}

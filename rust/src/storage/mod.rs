@@ -3,12 +3,16 @@
 //! Paper §3.2.2: "the experiment manager ... persists the experiment
 //! metadata in a database so that experiments become easy to compare and
 //! reproducible."  [`MetaStore`] is that database: a namespaced KV store
-//! over [`crate::util::json::Json`] documents with an append-only WAL so
-//! state survives restarts.  [`MetricStore`] holds time-series metrics
-//! (loss curves etc.) and renders the workbench-style summaries.
+//! over [`crate::util::json::Json`] documents — engine v2 with sharded
+//! locking, a group-committed WAL bounded by snapshot compaction, and
+//! secondary indexes (see [`kv`] and `docs/STORAGE.md`).  [`MetricStore`]
+//! holds time-series metrics (loss curves etc.) and renders the
+//! workbench-style summaries.
 
+pub mod index;
 pub mod kv;
 pub mod metrics;
+pub(crate) mod snapshot;
 
-pub use kv::MetaStore;
+pub use kv::{CompactReport, MetaStore, StorageStats, StoreOptions};
 pub use metrics::{MetricPoint, MetricStore};

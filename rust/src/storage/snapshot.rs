@@ -1,0 +1,252 @@
+//! Snapshot files and data-directory layout for the storage engine.
+//!
+//! A [`crate::storage::MetaStore`] data directory holds numbered
+//! generations:
+//!
+//! ```text
+//! data/
+//!   snapshot-000003.json   # full dump at generation 3
+//!   wal-000003.jsonl       # records appended since that snapshot
+//! ```
+//!
+//! Snapshots are written to `*.tmp`, fsynced, then atomically renamed,
+//! so a crash mid-snapshot leaves only a `*.tmp` leftover (deleted on
+//! the next open) and never a half-readable snapshot. See
+//! `docs/STORAGE.md` for the full recovery contract.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+const SNAPSHOT_FORMAT: &str = "submarine-snapshot-v1";
+
+pub(crate) fn snapshot_path(dir: &Path, gen: u64) -> PathBuf {
+    dir.join(format!("snapshot-{gen:06}.json"))
+}
+
+pub(crate) fn wal_path(dir: &Path, gen: u64) -> PathBuf {
+    dir.join(format!("wal-{gen:06}.jsonl"))
+}
+
+/// Generations present in a data directory, ascending.
+#[derive(Debug, Default)]
+pub(crate) struct DirScan {
+    pub snapshots: Vec<u64>,
+    pub wals: Vec<u64>,
+}
+
+fn parse_gen(name: &str, prefix: &str, suffix: &str) -> Option<u64> {
+    name.strip_prefix(prefix)?
+        .strip_suffix(suffix)?
+        .parse::<u64>()
+        .ok()
+}
+
+/// Scan a data directory. With `clean_tmp`, `*.tmp` leftovers from a
+/// crashed snapshot write (never renamed, so never authoritative) are
+/// deleted along the way; read-only inspection passes `false`.
+pub(crate) fn scan_dir(
+    dir: &Path,
+    clean_tmp: bool,
+) -> crate::Result<DirScan> {
+    let mut scan = DirScan::default();
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if name.ends_with(".tmp") {
+            if clean_tmp {
+                let _ = fs::remove_file(entry.path());
+            }
+            continue;
+        }
+        if let Some(g) = parse_gen(name, "snapshot-", ".json") {
+            scan.snapshots.push(g);
+        } else if let Some(g) = parse_gen(name, "wal-", ".jsonl") {
+            scan.wals.push(g);
+        }
+    }
+    scan.snapshots.sort_unstable();
+    scan.wals.sort_unstable();
+    Ok(scan)
+}
+
+/// Write the full dump as generation `gen`: tmp file, fsync, atomic
+/// rename, best-effort directory fsync.
+pub(crate) fn write_snapshot(
+    dir: &Path,
+    gen: u64,
+    dump: &[(String, Vec<(String, Json)>)],
+) -> crate::Result<()> {
+    let data = Json::Obj(
+        dump.iter()
+            .map(|(ns, docs)| {
+                (
+                    ns.clone(),
+                    Json::Obj(
+                        docs.iter()
+                            .map(|(k, v)| (k.clone(), v.clone()))
+                            .collect(),
+                    ),
+                )
+            })
+            .collect(),
+    );
+    let body = Json::obj()
+        .set("format", Json::Str(SNAPSHOT_FORMAT.into()))
+        .set("gen", Json::Num(gen as f64))
+        .set("data", data)
+        .dump();
+    let tmp = dir.join(format!("snapshot-{gen:06}.json.tmp"));
+    {
+        let mut f = fs::File::create(&tmp)?;
+        f.write_all(body.as_bytes())?;
+        f.write_all(b"\n")?;
+        f.sync_all()?;
+    }
+    fs::rename(&tmp, snapshot_path(dir, gen))?;
+    // directory entry durability is best-effort (platform-dependent)
+    let _ = fs::File::open(dir).and_then(|d| d.sync_all());
+    Ok(())
+}
+
+/// Load a snapshot file back into the namespace -> key -> doc map.
+pub(crate) fn load_snapshot(
+    path: &Path,
+) -> crate::Result<BTreeMap<String, BTreeMap<String, Json>>> {
+    let text = fs::read_to_string(path)?;
+    let bad = |msg: &str| {
+        crate::SubmarineError::Storage(format!(
+            "snapshot {}: {msg}",
+            path.display()
+        ))
+    };
+    let j = Json::parse(&text)
+        .map_err(|e| bad(&format!("unparseable: {e}")))?;
+    if j.str_field("format") != Some(SNAPSHOT_FORMAT) {
+        return Err(bad("unknown format"));
+    }
+    let data = j
+        .get("data")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| bad("missing data object"))?;
+    let mut out: BTreeMap<String, BTreeMap<String, Json>> = BTreeMap::new();
+    for (ns, docs) in data {
+        let docs =
+            docs.as_obj().ok_or_else(|| bad("namespace not an object"))?;
+        let space = out.entry(ns.clone()).or_default();
+        for (k, v) in docs {
+            space.insert(k.clone(), v.clone());
+        }
+    }
+    Ok(out)
+}
+
+/// Delete snapshot (and optionally WAL) files older than `keep_gen`.
+/// Returns how many files were removed. WAL files are only safe to
+/// drop once a newer snapshot covers them, so open-time cleanup passes
+/// `include_wals = false` and compaction passes `true`.
+pub(crate) fn remove_stale(
+    dir: &Path,
+    keep_gen: u64,
+    include_wals: bool,
+) -> usize {
+    let mut removed = 0;
+    let Ok(scan) = scan_dir(dir, true) else { return 0 };
+    for g in scan.snapshots {
+        if g < keep_gen && fs::remove_file(snapshot_path(dir, g)).is_ok() {
+            removed += 1;
+        }
+    }
+    if include_wals {
+        for g in scan.wals {
+            if g < keep_gen && fs::remove_file(wal_path(dir, g)).is_ok() {
+                removed += 1;
+            }
+        }
+    }
+    removed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "submarine-snap-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample() -> Vec<(String, Vec<(String, Json)>)> {
+        vec![(
+            "exp".to_string(),
+            vec![
+                ("e1".to_string(), Json::Num(1.0)),
+                (
+                    "e2".to_string(),
+                    Json::obj().set("status", Json::Str("Running".into())),
+                ),
+            ],
+        )]
+    }
+
+    #[test]
+    fn snapshot_roundtrip() {
+        let dir = tmp_dir("roundtrip");
+        write_snapshot(&dir, 3, &sample()).unwrap();
+        let loaded = load_snapshot(&snapshot_path(&dir, 3)).unwrap();
+        assert_eq!(loaded["exp"].len(), 2);
+        assert_eq!(
+            loaded["exp"]["e2"].str_field("status"),
+            Some("Running")
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scan_orders_generations_and_drops_tmp() {
+        let dir = tmp_dir("scan");
+        write_snapshot(&dir, 2, &sample()).unwrap();
+        write_snapshot(&dir, 1, &sample()).unwrap();
+        fs::write(wal_path(&dir, 2), b"").unwrap();
+        fs::write(dir.join("snapshot-000009.json.tmp"), b"junk").unwrap();
+        let scan = scan_dir(&dir, true).unwrap();
+        assert_eq!(scan.snapshots, vec![1, 2]);
+        assert_eq!(scan.wals, vec![2]);
+        assert!(!dir.join("snapshot-000009.json.tmp").exists());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_removal_respects_wal_flag() {
+        let dir = tmp_dir("stale");
+        write_snapshot(&dir, 1, &sample()).unwrap();
+        write_snapshot(&dir, 2, &sample()).unwrap();
+        fs::write(wal_path(&dir, 1), b"").unwrap();
+        fs::write(wal_path(&dir, 2), b"").unwrap();
+        assert_eq!(remove_stale(&dir, 2, false), 1);
+        assert!(wal_path(&dir, 1).exists());
+        assert_eq!(remove_stale(&dir, 2, true), 1);
+        assert!(!wal_path(&dir, 1).exists());
+        assert!(snapshot_path(&dir, 2).exists());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_snapshot_is_loud() {
+        let dir = tmp_dir("corrupt");
+        let p = snapshot_path(&dir, 1);
+        fs::write(&p, "not json").unwrap();
+        assert!(load_snapshot(&p).is_err());
+        fs::write(&p, r#"{"format":"other","data":{}}"#).unwrap();
+        assert!(load_snapshot(&p).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

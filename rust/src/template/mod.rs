@@ -217,6 +217,16 @@ impl TemplateManager {
         self.store.list(NS).into_iter().map(|(k, _)| k).collect()
     }
 
+    /// One name-ordered page plus the total (pages the primary map
+    /// instead of cloning every template document).
+    pub fn list_page(
+        &self,
+        offset: usize,
+        limit: Option<usize>,
+    ) -> (Vec<String>, usize) {
+        self.store.keys_page(NS, offset, limit)
+    }
+
     pub fn delete(&self, name: &str) -> crate::Result<()> {
         if !self.store.delete(NS, name)? {
             return Err(crate::SubmarineError::NotFound(format!(

@@ -37,6 +37,31 @@ impl Stats {
     }
 }
 
+/// True when `BENCH_SMOKE` is set (and not `0`): benches shrink their
+/// workloads so CI can run them on every commit as a provenance smoke
+/// test (results are uploaded as build artifacts).
+pub fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| v != "0").unwrap_or(false)
+}
+
+/// Scale an iteration/size knob down for smoke mode.
+pub fn scaled(n: usize) -> usize {
+    if smoke() {
+        (n / 10).max(1)
+    } else {
+        n
+    }
+}
+
+/// `(min_iters, min_secs)` for [`bench`], shrunk in smoke mode.
+pub fn bench_params(min_iters: usize, min_secs: f64) -> (usize, f64) {
+    if smoke() {
+        ((min_iters / 10).max(3), min_secs / 10.0)
+    } else {
+        (min_iters, min_secs)
+    }
+}
+
 /// Time `f` with warmup. `min_iters`/`min_secs` bound total effort.
 pub fn bench(min_iters: usize, min_secs: f64, mut f: impl FnMut()) -> Stats {
     // Warmup: a few runs to populate caches / JIT the PJRT executable.

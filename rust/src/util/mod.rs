@@ -1,9 +1,10 @@
 //! Infrastructure substrates: JSON, RNG, clocks, logging, thread pool,
 //! property-testing and bench harnesses (DESIGN.md S1–S4).
 //!
-//! These exist because the offline crate registry for this build only
-//! carries `xla`/`anyhow`/`thiserror`; everything else Submarine-RS needs
-//! is implemented here, std-only.
+//! These exist because this build has no external crate registry at
+//! all: the `xla` bindings resolve to the in-tree stub crate
+//! (`rust/xla-stub/`) and everything else Submarine-RS needs is
+//! implemented here, std-only.
 
 pub mod bench;
 pub mod clock;

@@ -1,0 +1,419 @@
+//! Crash-recovery and concurrency tests for the storage engine v2
+//! (ISSUE 2): torn-tail tolerance, snapshot+tail vs pure-WAL
+//! equivalence, compaction bounding the log, legacy migration, and a
+//! concurrent put/list hammer across shards.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use submarine::storage::{MetaStore, StoreOptions};
+use submarine::util::json::Json;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "submarine-recovery-{tag}-{}",
+        std::process::id()
+    ));
+    let _ = fs::remove_dir_all(&d);
+    let _ = fs::remove_file(&d);
+    d
+}
+
+/// The WAL files of a data dir, name-sorted (generation order).
+fn wal_files(dir: &Path) -> Vec<PathBuf> {
+    let mut out: Vec<PathBuf> = fs::read_dir(dir)
+        .unwrap()
+        .filter_map(|e| {
+            let p = e.unwrap().path();
+            let name = p.file_name()?.to_str()?.to_string();
+            (name.starts_with("wal-") && name.ends_with(".jsonl"))
+                .then_some(p)
+        })
+        .collect();
+    out.sort();
+    out
+}
+
+fn no_auto_compact() -> StoreOptions {
+    StoreOptions {
+        compact_threshold: 0,
+        ..StoreOptions::default()
+    }
+}
+
+#[test]
+fn truncated_final_record_loses_exactly_one_write() {
+    let dir = tmp_dir("torn-tail");
+    const N: usize = 8;
+    {
+        let s = MetaStore::open_with(&dir, no_auto_compact()).unwrap();
+        for i in 0..N {
+            s.put("exp", &format!("e{i}"), Json::Num(i as f64))
+                .unwrap();
+        }
+    }
+    // crash mid-append: chop the last record in half
+    let wal = wal_files(&dir).pop().unwrap();
+    let bytes = fs::read(&wal).unwrap();
+    let cut = bytes.len() - 9;
+    fs::write(&wal, &bytes[..cut]).unwrap();
+
+    let s = MetaStore::open_with(&dir, no_auto_compact()).unwrap();
+    assert_eq!(s.count("exp"), N - 1, "exactly the torn write is lost");
+    assert!(s.get("exp", &format!("e{}", N - 1)).is_none());
+    assert_eq!(s.get("exp", "e0"), Some(Json::Num(0.0)));
+    assert_eq!(s.stats().skipped_records, 1);
+
+    // the store keeps working after a tolerated torn tail
+    s.put("exp", "post-crash", Json::Bool(true)).unwrap();
+    drop(s);
+    let s = MetaStore::open(&dir).unwrap();
+    assert_eq!(s.get("exp", "post-crash"), Some(Json::Bool(true)));
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn blank_lines_and_torn_tail_are_counted_not_fatal() {
+    let dir = tmp_dir("blank");
+    fs::create_dir_all(&dir).unwrap();
+    fs::write(
+        dir.join("wal-000001.jsonl"),
+        concat!(
+            r#"{"op":"put","ns":"a","key":"k1","doc":1}"#,
+            "\n\n   \n",
+            r#"{"op":"put","ns":"a","key":"k2","doc":2}"#,
+            "\n",
+            r#"{"op":"put","ns":"a","key":"k3","#, // torn mid-record
+        ),
+    )
+    .unwrap();
+    let s = MetaStore::open(&dir).unwrap();
+    assert_eq!(s.count("a"), 2);
+    // two blank lines + one torn tail, uniformly counted
+    assert_eq!(s.stats().skipped_records, 3);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn complete_record_missing_only_newline_is_recovered() {
+    let dir = tmp_dir("no-newline");
+    fs::create_dir_all(&dir).unwrap();
+    // crash exactly between the payload write and its terminator
+    fs::write(
+        dir.join("wal-000001.jsonl"),
+        concat!(
+            r#"{"op":"put","ns":"a","key":"k1","doc":1}"#,
+            "\n",
+            r#"{"op":"put","ns":"a","key":"k2","doc":2}"#, // no \n
+        ),
+    )
+    .unwrap();
+    {
+        let s = MetaStore::open(&dir).unwrap();
+        assert_eq!(s.count("a"), 2, "complete tail record is applied");
+        assert_eq!(s.stats().skipped_records, 0);
+        // appends after the engine newline-terminates the tail must
+        // not fuse with it
+        s.put("a", "k3", Json::Num(3.0)).unwrap();
+    }
+    let s = MetaStore::open(&dir).unwrap();
+    assert_eq!(s.count("a"), 3);
+    assert_eq!(s.get("a", "k2"), Some(Json::Num(2.0)));
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn interior_corruption_is_a_hard_error() {
+    let dir = tmp_dir("interior");
+    fs::create_dir_all(&dir).unwrap();
+    for bad in [
+        "garbage\n{\"op\":\"put\",\"ns\":\"a\",\"key\":\"k\"}\n",
+        "{\"op\":\"frob\",\"ns\":\"a\",\"key\":\"k\"}\n{\"op\":\"del\",\
+         \"ns\":\"a\",\"key\":\"k\"}\n",
+        "{\"op\":\"put\",\"key\":\"no-ns\"}\n{\"op\":\"del\",\
+         \"ns\":\"a\",\"key\":\"k\"}\n",
+    ] {
+        fs::write(dir.join("wal-000001.jsonl"), bad).unwrap();
+        assert!(
+            MetaStore::open(&dir).is_err(),
+            "interior corruption must not be silently skipped: {bad:?}"
+        );
+    }
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn snapshot_plus_tail_equals_pure_wal_replay() {
+    let compacting = tmp_dir("equiv-snap");
+    let wal_only = tmp_dir("equiv-wal");
+    {
+        // same op script into both stores; one compacts every 10
+        // records, the other never does
+        let a = MetaStore::open_with(
+            &compacting,
+            StoreOptions {
+                compact_threshold: 10,
+                ..StoreOptions::default()
+            },
+        )
+        .unwrap();
+        let b = MetaStore::open_with(&wal_only, no_auto_compact()).unwrap();
+        for s in [&a, &b] {
+            for i in 0..60u32 {
+                let ns = ["exp", "model", "template"][(i % 3) as usize];
+                s.put(
+                    ns,
+                    &format!("k{:02}", i % 20),
+                    Json::obj()
+                        .set("v", Json::Num(i as f64))
+                        .set(
+                            "status",
+                            Json::Str(
+                                ["Accepted", "Running"][(i % 2) as usize]
+                                    .into(),
+                            ),
+                        ),
+                )
+                .unwrap();
+                if i % 7 == 0 {
+                    s.delete("exp", &format!("k{:02}", i % 20)).unwrap();
+                }
+            }
+        }
+        assert!(a.stats().compactions >= 1, "{:?}", a.stats());
+        assert_eq!(b.stats().compactions, 0);
+    }
+    let a = MetaStore::open(&compacting).unwrap();
+    let b = MetaStore::open(&wal_only).unwrap();
+    assert_eq!(
+        a.dump().dump(),
+        b.dump().dump(),
+        "snapshot+tail recovery must equal pure WAL replay"
+    );
+    assert_eq!(a.stats().docs, b.stats().docs);
+    let _ = fs::remove_dir_all(&compacting);
+    let _ = fs::remove_dir_all(&wal_only);
+}
+
+#[test]
+fn compaction_bounds_wal_and_drops_stale_generations() {
+    let dir = tmp_dir("bounds");
+    {
+        let s = MetaStore::open_with(
+            &dir,
+            StoreOptions {
+                compact_threshold: 16,
+                ..StoreOptions::default()
+            },
+        )
+        .unwrap();
+        for i in 0..200 {
+            s.put("ns", &format!("k{i:03}"), Json::Num(i as f64))
+                .unwrap();
+        }
+        let st = s.stats();
+        assert!(st.compactions >= 5, "{st:?}");
+        assert!(st.wal_records <= 32, "log not bounded: {st:?}");
+    }
+    // exactly one live generation on disk: one snapshot + one wal
+    let names: Vec<String> = fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    assert_eq!(names.len(), 2, "stale generations left behind: {names:?}");
+    let s = MetaStore::open(&dir).unwrap();
+    assert_eq!(s.count("ns"), 200);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn concurrent_put_list_hammer_across_shards() {
+    let dir = tmp_dir("hammer");
+    const WRITERS: usize = 8;
+    const PER_THREAD: usize = 120;
+    {
+        let s = Arc::new(
+            MetaStore::open_with(
+                &dir,
+                StoreOptions {
+                    compact_threshold: 64, // force compactions mid-storm
+                    ..StoreOptions::default()
+                },
+            )
+            .unwrap(),
+        );
+        let mut handles = Vec::new();
+        for t in 0..WRITERS {
+            let s = Arc::clone(&s);
+            handles.push(std::thread::spawn(move || {
+                let ns = format!("ns{}", t % 4);
+                for i in 0..PER_THREAD {
+                    let key = format!("t{t}-k{i:03}");
+                    s.put(&ns, &key, Json::Num(i as f64)).unwrap();
+                    // interleave reads with the writes
+                    assert!(s.get(&ns, &key).is_some());
+                    if i % 10 == 0 {
+                        let _ = s.list(&ns);
+                        let _ = s.count("ns0");
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        for t in 0..4 {
+            // 4 namespaces, 2 writer threads each
+            assert_eq!(
+                s.count(&format!("ns{t}")),
+                2 * PER_THREAD,
+                "ns{t} lost writes"
+            );
+        }
+    }
+    // every write survives reopen, through however many compactions
+    let s = MetaStore::open(&dir).unwrap();
+    for t in 0..4 {
+        assert_eq!(s.count(&format!("ns{t}")), 2 * PER_THREAD);
+    }
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn indexes_rebuild_from_recovered_state() {
+    let dir = tmp_dir("index-rebuild");
+    {
+        let s = MetaStore::open(&dir).unwrap();
+        s.define_index("exp", "status", true);
+        for (k, st) in
+            [("e1", "Running"), ("e2", "Running"), ("e3", "Failed")]
+        {
+            s.put(
+                "exp",
+                k,
+                Json::obj().set("status", Json::Str(st.into())),
+            )
+            .unwrap();
+        }
+        s.delete("exp", "e2").unwrap();
+        s.compact().unwrap();
+    }
+    let s = MetaStore::open(&dir).unwrap();
+    // declarations are code-level; re-declare and expect a backfill
+    s.define_index("exp", "status", true);
+    assert_eq!(
+        s.index_lookup("exp", "status", "running").unwrap(),
+        vec!["e1"]
+    );
+    assert_eq!(
+        s.index_lookup("exp", "status", "FAILED").unwrap(),
+        vec!["e3"]
+    );
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn legacy_single_file_wal_migrates_in_place() {
+    let path = tmp_dir("legacy"); // used as a *file* path here
+    fs::write(
+        &path,
+        concat!(
+            r#"{"op":"put","ns":"exp","key":"e1","doc":{"name":"m"}}"#,
+            "\n",
+            r#"{"op":"put","ns":"exp","key":"e2","doc":2}"#,
+            "\n",
+            r#"{"op":"del","ns":"exp","key":"e2"}"#,
+            "\n",
+            r#"{"op":"put","ns":"exp","key":"e3","doc":3"#, // torn
+        ),
+    )
+    .unwrap();
+    let s = MetaStore::open(&path).unwrap();
+    assert!(path.is_dir(), "file migrated into a data directory");
+    assert_eq!(s.count("exp"), 1);
+    assert_eq!(
+        s.get("exp", "e1").unwrap().str_field("name"),
+        Some("m")
+    );
+    assert_eq!(s.stats().skipped_records, 1);
+    drop(s);
+    // reopening the migrated directory is the normal v2 path
+    let s = MetaStore::open(&path).unwrap();
+    assert_eq!(s.count("exp"), 1);
+    let _ = fs::remove_dir_all(&path);
+}
+
+#[test]
+fn interrupted_migration_rolls_back_and_retries() {
+    // simulate a crash after migrate's rename but before the snapshot:
+    // the legacy data sits in <path>.migrating and <path> is a bare dir
+    let path = tmp_dir("migrate-crash");
+    let bak = PathBuf::from(format!(
+        "{}.migrating",
+        path.to_str().unwrap()
+    ));
+    let _ = fs::remove_file(&bak);
+    fs::write(
+        &bak,
+        concat!(
+            r#"{"op":"put","ns":"exp","key":"e1","doc":1}"#,
+            "\n"
+        ),
+    )
+    .unwrap();
+    fs::create_dir_all(&path).unwrap();
+    let s = MetaStore::open(&path).unwrap();
+    assert_eq!(
+        s.get("exp", "e1"),
+        Some(Json::Num(1.0)),
+        "legacy data must survive a crash mid-migration"
+    );
+    assert!(!bak.exists(), "backup consumed after successful retry");
+    let _ = fs::remove_dir_all(&path);
+}
+
+#[test]
+fn storage_inspect_is_read_only() {
+    let dir = tmp_dir("inspect");
+    {
+        let s = MetaStore::open(&dir).unwrap();
+        s.put("exp", "e1", Json::Num(1.0)).unwrap();
+    }
+    // leave a torn tail and a tmp leftover; inspect must report them
+    // without repairing anything
+    let wal = wal_files(&dir).pop().unwrap();
+    let bytes = fs::read(&wal).unwrap();
+    let torn =
+        [&bytes[..], &b"{\"op\":\"put\",\"ns\":\"exp\""[..]].concat();
+    fs::write(&wal, &torn).unwrap();
+    fs::write(dir.join("snapshot-000009.json.tmp"), b"junk").unwrap();
+    let st = MetaStore::inspect(&dir).unwrap();
+    assert_eq!(st.docs, 1);
+    assert_eq!(st.skipped_records, 1);
+    assert_eq!(
+        fs::read(&wal).unwrap(),
+        torn,
+        "inspect must not truncate the WAL"
+    );
+    assert!(
+        dir.join("snapshot-000009.json.tmp").exists(),
+        "inspect must not clean tmp files"
+    );
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn crashed_snapshot_tmp_is_discarded() {
+    let dir = tmp_dir("tmp-leftover");
+    {
+        let s = MetaStore::open(&dir).unwrap();
+        s.put("ns", "k", Json::Num(1.0)).unwrap();
+        s.compact().unwrap();
+    }
+    fs::write(dir.join("snapshot-000099.json.tmp"), "half-written")
+        .unwrap();
+    let s = MetaStore::open(&dir).unwrap();
+    assert_eq!(s.get("ns", "k"), Some(Json::Num(1.0)));
+    assert!(!dir.join("snapshot-000099.json.tmp").exists());
+    let _ = fs::remove_dir_all(&dir);
+}
