@@ -1,0 +1,169 @@
+//! Placement throughput of the execution pipeline's scheduler (paper
+//! §5.1.4/§5.1.5): flat FIFO (single root queue) vs a hierarchical
+//! capacity tree, and gang (YARN) vs non-gang (K8s-style) placement of
+//! distributed jobs.
+//!
+//! Run: `cargo bench --bench scheduler` (`BENCH_SMOKE=1` shrinks the
+//! workload for CI artifact runs).
+
+use submarine::cluster::{ClusterSim, Resources};
+use submarine::scheduler::k8s::K8sScheduler;
+use submarine::scheduler::queue::QueueTree;
+use submarine::scheduler::yarn::YarnScheduler;
+use submarine::scheduler::{JobRequest, Scheduler, TaskGroup};
+use submarine::util::bench::{scaled, Table};
+use submarine::util::clock::SimTime;
+
+fn job(id: usize, queue: &str, replicas: u32, gpus: u32) -> JobRequest {
+    JobRequest {
+        id: format!("j{id}"),
+        queue: queue.into(),
+        gang: true,
+        tasks: vec![TaskGroup {
+            name: "worker".into(),
+            replicas,
+            resources: Resources::new(2, 4096, gpus),
+            duration: SimTime::from_secs_f64(3600.0),
+        }],
+    }
+}
+
+/// Two levels, eight leaves under prod/dev.
+fn deep_tree() -> (QueueTree, Vec<String>) {
+    let mut t = QueueTree::flat();
+    t.add("root", "prod", 0.5, 1.0).unwrap();
+    t.add("root", "dev", 0.5, 1.0).unwrap();
+    let mut leaves = Vec::new();
+    for parent in ["root.prod", "root.dev"] {
+        for leaf in ["a", "b", "c", "d"] {
+            t.add(parent, leaf, 0.25, 1.0).unwrap();
+            leaves.push(format!("{parent}.{leaf}"));
+        }
+    }
+    (t, leaves)
+}
+
+fn big_cluster() -> ClusterSim {
+    ClusterSim::homogeneous(128, Resources::new(64, 262_144, 8), 2)
+}
+
+/// Place `jobs` to exhaustion; returns (containers placed, scheduler
+/// decision seconds, wall seconds).
+fn run(
+    mut sched: Box<dyn Scheduler>,
+    jobs: Vec<JobRequest>,
+    sim: &mut ClusterSim,
+) -> (usize, f64, f64) {
+    for j in jobs {
+        sched.submit(j);
+    }
+    let wall = std::time::Instant::now();
+    let mut placed = 0;
+    loop {
+        let p = sched.schedule(sim);
+        if p.is_empty() {
+            break;
+        }
+        placed += p.len();
+    }
+    (placed, sched.busy_until().as_secs_f64(), wall.elapsed().as_secs_f64())
+}
+
+fn flat_vs_tree(n_jobs: usize) {
+    let mut t = Table::new(
+        "placement throughput: flat FIFO vs capacity tree \
+         (1-container jobs, 128 nodes)",
+        &["queueing", "placed", "decision time", "containers/s",
+          "wall time"],
+    );
+    // flat: every job in root
+    let flat_jobs: Vec<JobRequest> =
+        (0..n_jobs).map(|i| job(i, "root", 1, 0)).collect();
+    let mut sim = big_cluster();
+    let (placed, dec, wall) = run(
+        Box::new(YarnScheduler::new(QueueTree::flat())),
+        flat_jobs,
+        &mut sim,
+    );
+    t.row(&[
+        "flat FIFO".into(),
+        placed.to_string(),
+        format!("{dec:.3}s"),
+        format!("{:.0}", placed as f64 / dec.max(1e-9)),
+        format!("{wall:.3}s"),
+    ]);
+    // tree: jobs round-robin over 8 leaves
+    let (tree, leaves) = deep_tree();
+    let tree_jobs: Vec<JobRequest> = (0..n_jobs)
+        .map(|i| job(i, &leaves[i % leaves.len()], 1, 0))
+        .collect();
+    let mut sim = big_cluster();
+    let (placed, dec, wall) =
+        run(Box::new(YarnScheduler::new(tree)), tree_jobs, &mut sim);
+    t.row(&[
+        "capacity tree (8 leaves)".into(),
+        placed.to_string(),
+        format!("{dec:.3}s"),
+        format!("{:.0}", placed as f64 / dec.max(1e-9)),
+        format!("{wall:.3}s"),
+    ]);
+    t.print();
+}
+
+fn gang_vs_non_gang(n_jobs: usize) {
+    const GANG: u32 = 5;
+    let mut t = Table::new(
+        "gang (YARN) vs non-gang (K8s) placement of 5-replica GPU gangs \
+         on a constrained cluster",
+        &["scheduler", "containers placed", "whole gangs",
+          "stranded pods", "decision time"],
+    );
+    // 8 nodes x 9 GPUs = 24 pod slots of 3 GPUs each; a 5-pod gang does
+    // not divide 24, so the non-gang model binds part of a gang whose
+    // remainder can never fit — those pods strand their GPUs.
+    let n_jobs = n_jobs.max(GANG as usize + 2);
+    let make_jobs = || -> Vec<JobRequest> {
+        (0..n_jobs).map(|i| job(i, "root", GANG, 3)).collect()
+    };
+    let constrained =
+        || ClusterSim::homogeneous(8, Resources::new(64, 262_144, 9), 2);
+
+    let mut sim = constrained();
+    let (placed, dec, _) = run(
+        Box::new(YarnScheduler::new(QueueTree::flat())),
+        make_jobs(),
+        &mut sim,
+    );
+    t.row(&[
+        "YARN gang".into(),
+        placed.to_string(),
+        (placed / GANG as usize).to_string(),
+        (placed % GANG as usize).to_string(),
+        format!("{dec:.3}s"),
+    ]);
+
+    let mut sim = constrained();
+    let (placed, dec, _) =
+        run(Box::new(K8sScheduler::new()), make_jobs(), &mut sim);
+    t.row(&[
+        "K8s non-gang".into(),
+        placed.to_string(),
+        (placed / GANG as usize).to_string(),
+        (placed % GANG as usize).to_string(),
+        format!("{dec:.3}s"),
+    ]);
+    t.print();
+    println!(
+        "shape check: the gang scheduler places whole jobs or nothing \
+         (stranded pods = 0); the non-gang model binds a subset of a \
+         job's pods, holding GPUs for a gang that can never complete \
+         (§5.1.3's co-scheduling gap)."
+    );
+}
+
+fn main() {
+    println!("scheduler placement bench (execution pipeline PR)");
+    let n = scaled(2_000);
+    flat_vs_tree(n);
+    gang_vs_non_gang(scaled(16));
+}

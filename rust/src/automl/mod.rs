@@ -13,6 +13,8 @@
 use crate::util::rng::Rng;
 use std::collections::BTreeMap;
 
+pub mod tune;
+
 /// Search space for one parameter.
 #[derive(Debug, Clone)]
 pub enum ParamSpace {

@@ -1,0 +1,401 @@
+//! Tune API plumbing: the request shape behind `POST /experiment/tune`
+//! and the driver that runs a search strategy where every trial is a
+//! *real child experiment* submitted through the execution pipeline
+//! (manager → scheduler → cluster sim → monitor), not an in-process
+//! function call.
+//!
+//! The search strategies themselves live in [`crate::automl`]
+//! ([`random_search`] / [`successive_halving`]); this module parses the
+//! request JSON, records each trial's experiment id alongside its score,
+//! and assembles the response payload.
+
+use super::{random_search, successive_halving, ParamSpace};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Hard cap on trials per tune request (each trial is a scheduled
+/// experiment; unbounded fan-out would let one request flood the queue).
+pub const MAX_TRIALS: usize = 64;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    RandomSearch,
+    SuccessiveHalving,
+}
+
+impl Strategy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Strategy::RandomSearch => "random_search",
+            Strategy::SuccessiveHalving => "successive_halving",
+        }
+    }
+}
+
+/// Parsed `POST /experiment/tune` body.
+#[derive(Debug, Clone)]
+pub struct TuneRequest {
+    pub strategy: Strategy,
+    /// Number of configurations (rung-0 size for halving).
+    pub trials: usize,
+    /// Full budget per trial (random search).
+    pub budget: u32,
+    /// Rung-0 / ceiling budgets (successive halving).
+    pub min_budget: u32,
+    pub max_budget: u32,
+    pub seed: u64,
+    /// Per-trial wall-clock cap; a trial still running past it is
+    /// killed and scored as failed.
+    pub trial_timeout_ms: u64,
+    pub space: BTreeMap<String, ParamSpace>,
+    /// Registered template to instantiate per trial...
+    pub template: Option<String>,
+    /// ...or a raw experiment spec with `{{param}}` placeholders.
+    pub base_spec: Option<Json>,
+}
+
+fn bad(msg: String) -> crate::SubmarineError {
+    crate::SubmarineError::InvalidSpec(msg)
+}
+
+fn two_floats(j: &Json, kind: &str, name: &str) -> crate::Result<(f64, f64)> {
+    let arr = j.as_arr().unwrap_or(&[]);
+    let (lo, hi) = match (arr.first(), arr.get(1)) {
+        (Some(a), Some(b)) => (a.as_f64(), b.as_f64()),
+        _ => (None, None),
+    };
+    match (lo, hi) {
+        (Some(lo), Some(hi)) if lo.is_finite() && hi.is_finite() && lo < hi => {
+            Ok((lo, hi))
+        }
+        _ => Err(bad(format!(
+            "space.{name}.{kind} must be [lo, hi] with lo < hi"
+        ))),
+    }
+}
+
+/// `{"log_uniform":[lo,hi]}` | `{"uniform":[lo,hi]}` |
+/// `{"choice":["a","b",...]}`.
+fn parse_space_entry(name: &str, j: &Json) -> crate::Result<ParamSpace> {
+    if let Some(r) = j.get("log_uniform") {
+        let (lo, hi) = two_floats(r, "log_uniform", name)?;
+        if lo <= 0.0 {
+            return Err(bad(format!(
+                "space.{name}.log_uniform needs lo > 0"
+            )));
+        }
+        return Ok(ParamSpace::LogUniform { lo, hi });
+    }
+    if let Some(r) = j.get("uniform") {
+        let (lo, hi) = two_floats(r, "uniform", name)?;
+        return Ok(ParamSpace::Uniform { lo, hi });
+    }
+    if let Some(r) = j.get("choice") {
+        let choices: Vec<String> = r
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|v| match v {
+                Json::Str(s) => s.clone(),
+                other => other.dump(),
+            })
+            .collect();
+        if choices.is_empty() {
+            return Err(bad(format!(
+                "space.{name}.choice must be a non-empty array"
+            )));
+        }
+        return Ok(ParamSpace::Choice(choices));
+    }
+    Err(bad(format!(
+        "space.{name} needs one of log_uniform | uniform | choice"
+    )))
+}
+
+/// Parse and validate the tune request body.
+pub fn parse_request(j: &Json) -> crate::Result<TuneRequest> {
+    let strategy = match j.str_field("strategy").unwrap_or("random_search")
+    {
+        "random_search" => Strategy::RandomSearch,
+        "successive_halving" => Strategy::SuccessiveHalving,
+        other => {
+            return Err(bad(format!(
+                "unknown strategy {other:?} \
+                 (random_search | successive_halving)"
+            )))
+        }
+    };
+    let trials = j.num_field("trials").unwrap_or(8.0) as usize;
+    if trials == 0 || trials > MAX_TRIALS {
+        return Err(bad(format!(
+            "trials must be in 1..={MAX_TRIALS}"
+        )));
+    }
+    let budget = j.num_field("budget").unwrap_or(100.0) as u32;
+    if budget == 0 {
+        return Err(bad("budget must be >= 1".into()));
+    }
+    let min_budget =
+        j.num_field("min_budget").unwrap_or((budget / 4).max(1) as f64)
+            as u32;
+    let max_budget = j.num_field("max_budget").unwrap_or(budget as f64) as u32;
+    if min_budget == 0 || max_budget < min_budget {
+        return Err(bad(
+            "need 1 <= min_budget <= max_budget".into(),
+        ));
+    }
+    let mut space = BTreeMap::new();
+    if let Some(Json::Obj(entries)) = j.get("space") {
+        for (name, entry) in entries {
+            space.insert(name.clone(), parse_space_entry(name, entry)?);
+        }
+    }
+    if space.is_empty() {
+        return Err(bad(
+            "space must declare at least one parameter".into(),
+        ));
+    }
+    let template = j.str_field("template").map(str::to_string);
+    let base_spec = j.get("spec").cloned();
+    if template.is_some() == base_spec.is_some() {
+        return Err(bad(
+            "provide exactly one of template (registered name) or \
+             spec (raw experiment spec with {{param}} placeholders)"
+                .into(),
+        ));
+    }
+    Ok(TuneRequest {
+        strategy,
+        trials,
+        budget,
+        min_budget,
+        max_budget,
+        seed: j.num_field("seed").unwrap_or(42.0) as u64,
+        trial_timeout_ms: j
+            .num_field("trial_timeout_ms")
+            .unwrap_or(10_000.0) as u64,
+        space,
+        template,
+        base_spec,
+    })
+}
+
+/// One completed trial: the child experiment it ran as, plus its score.
+#[derive(Debug, Clone)]
+pub struct TrialRun {
+    pub experiment_id: String,
+    pub params: BTreeMap<String, String>,
+    pub score: f64,
+    pub budget: u32,
+    pub status: String,
+}
+
+impl TrialRun {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .set("experimentId", Json::Str(self.experiment_id.clone()))
+            .set("params", Json::from_map(&self.params))
+            .set("score", Json::Num(self.score))
+            .set("budget", Json::Num(self.budget as f64))
+            .set("status", Json::Str(self.status.clone()))
+    }
+}
+
+/// Deterministic stand-in objective for simulated trials. The cluster
+/// sim runs no real training, so tune over the sim pipeline scores a
+/// reproducible surrogate: a concave bowl peaking at learning rate 0.05
+/// plus pseudo-noise that shrinks with budget (so successive halving's
+/// rungs behave as they would against a real objective). Callers prefer
+/// a real logged metric when one exists (local submitter trials).
+pub fn surrogate_objective(
+    params: &BTreeMap<String, String>,
+    budget: u32,
+    seed: u64,
+) -> f64 {
+    let mut quality = 0.0;
+    let mut h: u64 = seed ^ 0x9E37_79B9_7F4A_7C15;
+    for (k, v) in params {
+        for b in k.bytes().chain(v.bytes()) {
+            h = h.wrapping_mul(1_099_511_628_211).wrapping_add(b as u64);
+        }
+        if !(k.contains("lr") || k.contains("learning_rate")) {
+            continue;
+        }
+        if let Ok(x) = v.parse::<f64>() {
+            if x > 0.0 {
+                quality -= (x.ln() - (0.05f64).ln()).powi(2);
+            }
+        }
+    }
+    let mut rng = crate::util::rng::Rng::new(h);
+    let noise = (rng.f64() - 0.5) / (budget.max(1) as f64).sqrt();
+    quality + 0.1 * noise
+}
+
+/// Run the requested strategy, with `run_trial` executing each
+/// configuration as a child experiment. Returns the response payload.
+pub fn run_tune(
+    req: &TuneRequest,
+    mut run_trial: impl FnMut(&BTreeMap<String, String>, u32) -> TrialRun,
+) -> Json {
+    let mut runs: Vec<TrialRun> = Vec::new();
+    let result = {
+        let eval =
+            |params: &BTreeMap<String, String>, budget: u32| -> f64 {
+                let r = run_trial(params, budget);
+                let score = r.score;
+                runs.push(r);
+                score
+            };
+        match req.strategy {
+            Strategy::RandomSearch => random_search(
+                &req.space, req.trials, req.budget, req.seed, eval,
+            ),
+            Strategy::SuccessiveHalving => successive_halving(
+                &req.space,
+                req.trials,
+                req.min_budget,
+                req.max_budget,
+                req.seed,
+                eval,
+            ),
+        }
+    };
+    let best_id = runs
+        .iter()
+        .rev()
+        .find(|r| {
+            r.params == result.best.params
+                && r.budget == result.best.budget
+        })
+        .map(|r| r.experiment_id.clone())
+        .unwrap_or_default();
+    Json::obj()
+        .set("strategy", Json::Str(req.strategy.as_str().into()))
+        .set(
+            "best",
+            Json::obj()
+                .set("experimentId", Json::Str(best_id))
+                .set("params", Json::from_map(&result.best.params))
+                .set("score", Json::Num(result.best.score))
+                .set("budget", Json::Num(result.best.budget as f64)),
+        )
+        .set(
+            "trials",
+            Json::Arr(runs.iter().map(TrialRun::to_json).collect()),
+        )
+        .set("total_budget", Json::Num(result.total_budget as f64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn body(extra: &str) -> Json {
+        Json::parse(&format!(
+            r#"{{"template":"t","space":{{"learning_rate":
+                {{"log_uniform":[0.0001,1.0]}}}}{extra}}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_defaults() {
+        let r = parse_request(&body("")).unwrap();
+        assert_eq!(r.strategy, Strategy::RandomSearch);
+        assert_eq!(r.trials, 8);
+        assert_eq!(r.budget, 100);
+        assert_eq!(r.template.as_deref(), Some("t"));
+        assert!(r.base_spec.is_none());
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        // no spec source
+        assert!(parse_request(
+            &Json::parse(
+                r#"{"space":{"x":{"uniform":[0,1]}}}"#
+            )
+            .unwrap()
+        )
+        .is_err());
+        // empty space
+        assert!(parse_request(
+            &Json::parse(r#"{"template":"t","space":{}}"#).unwrap()
+        )
+        .is_err());
+        // bad strategy / trials / range
+        assert!(parse_request(&body(r#","strategy":"grid""#)).is_err());
+        assert!(parse_request(&body(r#","trials":0"#)).is_err());
+        assert!(parse_request(&body(r#","trials":1000"#)).is_err());
+        let bad_range = Json::parse(
+            r#"{"template":"t",
+                "space":{"x":{"uniform":[1.0,0.0]}}}"#,
+        )
+        .unwrap();
+        assert!(parse_request(&bad_range).is_err());
+        let bad_log = Json::parse(
+            r#"{"template":"t",
+                "space":{"x":{"log_uniform":[0.0,1.0]}}}"#,
+        )
+        .unwrap();
+        assert!(parse_request(&bad_log).is_err());
+    }
+
+    #[test]
+    fn choice_space_parses_mixed_values() {
+        let j = Json::parse(
+            r#"{"template":"t",
+                "space":{"batch":{"choice":[64,"128"]}}}"#,
+        )
+        .unwrap();
+        let r = parse_request(&j).unwrap();
+        match &r.space["batch"] {
+            ParamSpace::Choice(c) => {
+                assert_eq!(c, &vec!["64".to_string(), "128".to_string()])
+            }
+            other => panic!("wrong space: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn surrogate_peaks_near_good_lr_and_is_deterministic() {
+        let p = |lr: &str| {
+            let mut m = BTreeMap::new();
+            m.insert("learning_rate".to_string(), lr.to_string());
+            m
+        };
+        let good = surrogate_objective(&p("0.05"), 100, 7);
+        let bad = surrogate_objective(&p("0.8"), 100, 7);
+        assert!(good > bad, "good={good} bad={bad}");
+        assert_eq!(
+            surrogate_objective(&p("0.1"), 50, 7),
+            surrogate_objective(&p("0.1"), 50, 7)
+        );
+    }
+
+    #[test]
+    fn run_tune_records_every_trial_and_best_id() {
+        let req = parse_request(&body(r#","trials":5,"budget":10"#))
+            .unwrap();
+        let mut n = 0;
+        let out = run_tune(&req, |params, budget| {
+            n += 1;
+            TrialRun {
+                experiment_id: format!("exp-{n}"),
+                params: params.clone(),
+                score: surrogate_objective(params, budget, 1),
+                budget,
+                status: "Succeeded".into(),
+            }
+        });
+        let trials = out.get("trials").unwrap().as_arr().unwrap();
+        assert_eq!(trials.len(), 5);
+        let best_id = out
+            .at(&["best", "experimentId"])
+            .and_then(Json::as_str)
+            .unwrap();
+        assert!(best_id.starts_with("exp-"), "{best_id}");
+        assert_eq!(out.num_field("total_budget"), Some(50.0));
+    }
+}

@@ -214,7 +214,7 @@ fn dispatch(argv: &[String]) -> crate::Result<String> {
         }
         "experiment" => {
             let sub = argv.get(1).map(String::as_str).unwrap_or("list");
-            let args = Args::parse(&argv[2..])?;
+            let args = Args::parse(argv.get(2..).unwrap_or(&[]))?;
             let client = client_from_flags(&args)?;
             match sub {
                 "list" => {
@@ -280,14 +280,70 @@ fn dispatch(argv: &[String]) -> crate::Result<String> {
                     client.kill(id)?;
                     Ok(format!("killed {id}"))
                 }
+                "events" => {
+                    let id = args
+                        .positional
+                        .first()
+                        .ok_or_else(|| bad("experiment events <id>"))?;
+                    let mut out = String::new();
+                    for e in client.events(id)? {
+                        let at = e.num_field("at_millis").unwrap_or(0.0)
+                            as u64;
+                        let ty = e
+                            .at(&["event", "type"])
+                            .and_then(crate::util::json::Json::as_str)
+                            .unwrap_or("?");
+                        let container = e
+                            .at(&["event", "container"])
+                            .and_then(crate::util::json::Json::as_str)
+                            .unwrap_or("");
+                        out.push_str(&format!(
+                            "{at}\t{ty}\t{container}\n"
+                        ));
+                    }
+                    Ok(out)
+                }
+                "tune" => {
+                    // a tune call answers only after every trial ran;
+                    // size the read timeout to the search budget
+                    let trials: f64 = args
+                        .flag("trials")
+                        .and_then(|v| v.parse().ok())
+                        .unwrap_or(8.0);
+                    let per_ms: f64 = args
+                        .flag("trial-timeout-ms")
+                        .and_then(|v| v.parse().ok())
+                        .unwrap_or(10_000.0);
+                    let secs =
+                        (trials * per_ms / 1000.0 + 30.0).min(3600.0);
+                    let client = client_from_flags(&args)?
+                        .with_read_timeout(
+                            std::time::Duration::from_secs_f64(secs),
+                        );
+                    run_tune_command(&args, &client)
+                }
                 other => Err(bad(&format!(
                     "unknown experiment subcommand {other:?}"
                 ))),
             }
         }
+        "cluster" => {
+            let sub = argv.get(1).map(String::as_str).unwrap_or("status");
+            let args = Args::parse(argv.get(2..).unwrap_or(&[]))?;
+            let client = client_from_flags(&args)?;
+            match sub {
+                "status" => {
+                    let j = client.cluster_status()?;
+                    Ok(format_cluster_status(&j))
+                }
+                other => Err(bad(&format!(
+                    "unknown cluster subcommand {other:?} (status)"
+                ))),
+            }
+        }
         "template" => {
             let sub = argv.get(1).map(String::as_str).unwrap_or("");
-            let args = Args::parse(&argv[2..])?;
+            let args = Args::parse(argv.get(2..).unwrap_or(&[]))?;
             let client = client_from_flags(&args)?;
             match sub {
                 "submit" => {
@@ -314,6 +370,180 @@ fn dispatch(argv: &[String]) -> crate::Result<String> {
             "unknown command {other:?}; try `submarine help`"
         ))),
     }
+}
+
+/// `-P key=log:lo:hi | uniform:lo:hi | choice:a|b|c` -> search-space
+/// entry JSON for the tune request.
+fn parse_space_flag(spec: &str) -> crate::Result<crate::util::json::Json> {
+    use crate::util::json::Json;
+    let range = |kind: &str, rest: &str| -> crate::Result<Json> {
+        let (lo, hi) = rest.split_once(':').ok_or_else(|| {
+            bad(&format!("{kind} space needs {kind}:lo:hi"))
+        })?;
+        let lo: f64 = lo
+            .parse()
+            .map_err(|_| bad(&format!("bad lo in {spec:?}")))?;
+        let hi: f64 = hi
+            .parse()
+            .map_err(|_| bad(&format!("bad hi in {spec:?}")))?;
+        Ok(Json::Arr(vec![Json::Num(lo), Json::Num(hi)]))
+    };
+    if let Some(rest) = spec.strip_prefix("log:") {
+        Ok(crate::util::json::Json::obj()
+            .set("log_uniform", range("log", rest)?))
+    } else if let Some(rest) = spec.strip_prefix("uniform:") {
+        Ok(crate::util::json::Json::obj()
+            .set("uniform", range("uniform", rest)?))
+    } else if let Some(rest) = spec.strip_prefix("choice:") {
+        let choices: Vec<crate::util::json::Json> = rest
+            .split('|')
+            .filter(|c| !c.is_empty())
+            .map(|c| crate::util::json::Json::Str(c.to_string()))
+            .collect();
+        if choices.is_empty() {
+            return Err(bad(&format!("empty choice list in {spec:?}")));
+        }
+        Ok(crate::util::json::Json::obj()
+            .set("choice", crate::util::json::Json::Arr(choices)))
+    } else {
+        Err(bad(&format!(
+            "space {spec:?} must start with log: | uniform: | choice:"
+        )))
+    }
+}
+
+/// `submarine experiment tune`: build the tune request from flags and
+/// run it through the server's AutoML endpoint.
+fn run_tune_command(
+    args: &Args,
+    client: &ExperimentClient,
+) -> crate::Result<String> {
+    use crate::util::json::Json;
+    if args.params.is_empty() {
+        return Err(bad(
+            "experiment tune needs at least one -P name=log:lo:hi | \
+             uniform:lo:hi | choice:a|b|c",
+        ));
+    }
+    let mut space = Json::obj();
+    for (name, spec) in &args.params {
+        space = space.set(name, parse_space_flag(spec)?);
+    }
+    let mut req = Json::obj().set("space", space);
+    for (flag, key) in [
+        ("strategy", "strategy"),
+        ("template", "template"),
+    ] {
+        if let Some(v) = args.flag(flag) {
+            req = req.set(key, Json::Str(v.to_string()));
+        }
+    }
+    for (flag, key) in [
+        ("trials", "trials"),
+        ("budget", "budget"),
+        ("min-budget", "min_budget"),
+        ("max-budget", "max_budget"),
+        ("seed", "seed"),
+        ("trial-timeout-ms", "trial_timeout_ms"),
+    ] {
+        if let Some(v) = args.flag(flag) {
+            let n: f64 = v
+                .parse()
+                .map_err(|_| bad(&format!("bad --{flag} {v:?}")))?;
+            req = req.set(key, Json::Num(n));
+        }
+    }
+    if args.flag("template").is_none() {
+        // no template: tune over a Listing-1-style base spec built from
+        // the job flags (requires --name)
+        req = req.set("spec", spec_from_job_flags(args)?.to_json());
+    }
+    let result = client.tune(&req)?;
+    let mut out = String::new();
+    let trials = result
+        .get("trials")
+        .and_then(Json::as_arr)
+        .unwrap_or(&[]);
+    for t in trials {
+        out.push_str(&format!(
+            "{}\t{}\tscore={:.4}\tbudget={}\t{}\n",
+            t.str_field("experimentId").unwrap_or("-"),
+            t.str_field("status").unwrap_or("?"),
+            t.num_field("score").unwrap_or(f64::NAN),
+            t.num_field("budget").unwrap_or(0.0),
+            t.get("params").map(|p| p.dump()).unwrap_or_default(),
+        ));
+    }
+    if let Some(best) = result.get("best") {
+        out.push_str(&format!(
+            "best: {} score={:.4} params={}\n",
+            best.str_field("experimentId").unwrap_or("-"),
+            best.num_field("score").unwrap_or(f64::NAN),
+            best.get("params").map(|p| p.dump()).unwrap_or_default(),
+        ));
+    }
+    Ok(out)
+}
+
+/// Human-readable `cluster status` output.
+fn format_cluster_status(j: &crate::util::json::Json) -> String {
+    use crate::util::json::Json;
+    let mut out = format!(
+        "version:   {}\nstatus:    {}\n",
+        j.str_field("version").unwrap_or("?"),
+        j.str_field("status").unwrap_or("?"),
+    );
+    let Some(sched) = j.str_field("scheduler") else {
+        out.push_str(
+            "(no execution engine attached; start the server with \
+             --scheduler yarn|k8s for cluster detail)\n",
+        );
+        return out;
+    };
+    out.push_str(&format!("scheduler: {sched}\n"));
+    out.push_str(&format!(
+        "sim time:  {:.1}s   gpu util: {:.1}%\n",
+        j.num_field("sim_now_s").unwrap_or(0.0),
+        j.num_field("gpu_utilization").unwrap_or(0.0) * 100.0,
+    ));
+    out.push_str(&format!(
+        "running:   {} containers   pending: {} jobs   \
+         unknown-queue submissions: {}\n",
+        j.num_field("running_containers").unwrap_or(0.0),
+        j.num_field("pending_jobs").unwrap_or(0.0),
+        j.num_field("unknown_queue_count").unwrap_or(0.0),
+    ));
+    if let Some(nodes) = j.get("nodes").and_then(Json::as_arr) {
+        out.push_str(&format!("nodes ({}):\n", nodes.len()));
+        for n in nodes {
+            out.push_str(&format!(
+                "  {}  alloc {} / cap {}\n",
+                n.str_field("id").unwrap_or("?"),
+                n.get("allocated").map(|r| r.dump()).unwrap_or_default(),
+                n.get("capacity").map(|r| r.dump()).unwrap_or_default(),
+            ));
+        }
+    }
+    if let Some(queues) = j.get("queues").and_then(Json::as_arr) {
+        out.push_str("queues:\n");
+        for q in queues {
+            out.push_str(&format!(
+                "  {}  used {:.3} / cap {:.3} (max {:.3}){}\n",
+                q.str_field("name").unwrap_or("?"),
+                q.num_field("used_share").unwrap_or(0.0),
+                q.num_field("capacity").unwrap_or(0.0),
+                q.num_field("max_capacity").unwrap_or(0.0),
+                if q.get("leaf").and_then(Json::as_bool)
+                    == Some(true)
+                {
+                    ""
+                } else {
+                    "  [parent]"
+                },
+            ));
+        }
+    }
+    out
 }
 
 /// The server/admin data directory from `--data-dir` (preferred) or the
@@ -367,11 +597,51 @@ fn storage_admin(sub: &str, args: &Args) -> crate::Result<String> {
     }
 }
 
-/// `submarine server`: full stack with the local (PJRT) submitter.
+/// Parse `--queues "eng=0.5:0.8,sci=0.5:0.6"` into children of `root`
+/// (capacity:max_capacity, both fractions of root).
+fn parse_queue_config(
+    queues: &mut crate::scheduler::queue::QueueTree,
+    spec: &str,
+) -> crate::Result<()> {
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (name, shares) = part.split_once('=').ok_or_else(|| {
+            bad(&format!("queue token {part:?} is not name=cap:max"))
+        })?;
+        let (cap, max) = shares.split_once(':').ok_or_else(|| {
+            bad(&format!("queue token {part:?} is not name=cap:max"))
+        })?;
+        let cap: f64 = cap
+            .parse()
+            .map_err(|_| bad(&format!("bad capacity in {part:?}")))?;
+        let max: f64 = max
+            .parse()
+            .map_err(|_| bad(&format!("bad max_capacity in {part:?}")))?;
+        queues.add("root", name.trim(), cap, max)?;
+    }
+    Ok(())
+}
+
+/// `submarine server`: full stack. `--scheduler yarn|k8s` (default
+/// yarn) runs experiments through the simulated execution pipeline
+/// (background scheduler loop + cluster sim); `--scheduler local` runs
+/// bound workloads for real on the PJRT runtime.
 fn serve(args: &Args) -> crate::Result<String> {
+    use crate::cluster::ClusterSim;
+    use crate::experiment::monitor::ExperimentMonitor;
     use crate::httpd::server::{Server, Services};
+    use crate::orchestrator::engine::EngineConfig;
     use crate::orchestrator::local::LocalSubmitter;
+    use crate::orchestrator::sim_submitter::SimSubmitter;
+    use crate::scheduler::k8s::K8sScheduler;
+    use crate::scheduler::queue::QueueTree;
+    use crate::scheduler::yarn::YarnScheduler;
+    use crate::scheduler::Scheduler;
     use crate::storage::{MetaStore, MetricStore};
+    use crate::util::clock::SimTime;
     use std::sync::Arc;
 
     let port: u16 = args
@@ -385,17 +655,82 @@ fn serve(args: &Args) -> crate::Result<String> {
         }
         None => Arc::new(MetaStore::in_memory()),
     };
-    let monitor =
-        Arc::new(crate::experiment::monitor::ExperimentMonitor::new());
     let metrics = Arc::new(MetricStore::new());
-    let submitter = Arc::new(LocalSubmitter::new(
-        Arc::clone(&monitor),
-        Arc::clone(&metrics),
-        std::path::Path::new(artifacts),
-    ));
-    let services = Arc::new(Services::with_parts(
-        store, monitor, metrics, submitter,
-    ));
+    let scheduler_kind = args.flag("scheduler").unwrap_or("yarn");
+    let services = match scheduler_kind {
+        "local" => {
+            let monitor = Arc::new(ExperimentMonitor::new());
+            let submitter = Arc::new(LocalSubmitter::new(
+                Arc::clone(&monitor),
+                Arc::clone(&metrics),
+                std::path::Path::new(artifacts),
+            ));
+            Services::with_parts(store, monitor, metrics, submitter)
+        }
+        "yarn" | "k8s" => {
+            let nodes: usize = args
+                .flag("nodes")
+                .map(|v| v.parse().map_err(|_| bad("bad --nodes")))
+                .transpose()?
+                .unwrap_or(4);
+            let node_res = crate::cluster::Resources::parse(
+                args.flag("node-resources")
+                    .unwrap_or("cpu=16,memory=64G,gpu=4"),
+            )?;
+            let sockets: u32 = args
+                .flag("sockets")
+                .map(|v| v.parse().map_err(|_| bad("bad --sockets")))
+                .transpose()?
+                .unwrap_or(2);
+            let sim = ClusterSim::homogeneous(
+                nodes.max(1),
+                node_res,
+                sockets,
+            );
+            let monitor = Arc::new(ExperimentMonitor::new());
+            let scheduler: Box<dyn Scheduler + Send> =
+                if scheduler_kind == "yarn" {
+                    let mut queues = QueueTree::flat();
+                    if let Some(qspec) = args.flag("queues") {
+                        parse_queue_config(&mut queues, qspec)?;
+                    }
+                    if let Some(d) = args.flag("default-queue") {
+                        queues.set_default_queue(d)?;
+                    }
+                    Box::new(YarnScheduler::new(queues))
+                } else {
+                    Box::new(K8sScheduler::new())
+                };
+            let task_secs: f64 = args
+                .flag("sim-task-secs")
+                .map(|v| {
+                    v.parse().map_err(|_| bad("bad --sim-task-secs"))
+                })
+                .transpose()?
+                .unwrap_or(10.0);
+            if task_secs <= 0.0 || !task_secs.is_finite() {
+                return Err(bad("--sim-task-secs must be > 0"));
+            }
+            let submitter = Arc::new(
+                SimSubmitter::new(scheduler, sim, monitor)
+                    .with_container_duration(SimTime::from_secs_f64(
+                        task_secs,
+                    )),
+            );
+            Services::with_sim_executor(
+                store,
+                submitter,
+                metrics,
+                EngineConfig::default(),
+            )
+        }
+        other => {
+            return Err(bad(&format!(
+                "unknown --scheduler {other:?} (yarn | k8s | local)"
+            )))
+        }
+    };
+    let services = Arc::new(services);
     // built-in template, as the community templates of §3.2.3
     let _ = services
         .templates
@@ -427,19 +762,30 @@ fn usage() -> String {
      commands:\n\
        server      [--port 8080] [--data-dir DIR] [--artifacts DIR] [--token T]\n\
                    [--rate-limit REQS_PER_SEC]\n\
+                   [--scheduler yarn|k8s|local] [--nodes N]\n\
+                   [--node-resources cpu=16,memory=64G,gpu=4] [--sockets S]\n\
+                   [--queues eng=0.5:0.8,sci=0.5:0.6] [--default-queue root.eng]\n\
+                   [--sim-task-secs SECS]\n\
        job run     --name N [--framework F] [--num_workers K] [--num_ps K]\n\
-                   [--worker_resources R] [--ps_resources R]\n\
+                   [--worker_resources R] [--ps_resources R] [--queue Q]\n\
                    [--worker_launch_cmd C] [--model M --steps S --lr LR]\n\
                    [--server host:port]\n\
        experiment  list [--limit N] [--offset N] [--status S]\n\
-                   | get <id> | kill <id>        [--server host:port]\n\
+                   | get <id> | kill <id> | events <id>\n\
+                   | tune [--template T] [--strategy random_search|successive_halving]\n\
+                          [--trials N] [--budget B] [--min-budget B] [--max-budget B]\n\
+                          -P param=log:lo:hi|uniform:lo:hi|choice:a|b|c ...\n\
+                                                 [--server host:port]\n\
+       cluster     status                        [--server host:port]\n\
        template    submit <name> -P key=value... [--server host:port]\n\
        storage     stats | compact --data-dir DIR\n\
                    (stats is read-only; compact needs the server stopped)\n\
        version\n\
      client flags: [--server host:port] [--api v1|v2] [--token T]\n\
      (--db is a deprecated alias for --data-dir; legacy single-file\n\
-      WALs are migrated into the directory layout on first open)"
+      WALs are migrated into the directory layout on first open;\n\
+      --scheduler yarn runs experiments on the simulated cluster via the\n\
+      execution engine, local runs bound workloads on the PJRT runtime)"
         .to_string()
 }
 
@@ -544,6 +890,38 @@ mod tests {
     fn unknown_command_fails() {
         assert_eq!(run(&argv(&["frobnicate"])), 2);
         assert_eq!(run(&argv(&["version"])), 0);
+    }
+
+    #[test]
+    fn space_flag_parsing() {
+        let j = parse_space_flag("log:0.0001:1.0").unwrap();
+        assert!(j.get("log_uniform").is_some());
+        let j = parse_space_flag("uniform:0:1").unwrap();
+        assert_eq!(
+            j.get("uniform").unwrap().as_arr().unwrap().len(),
+            2
+        );
+        let j = parse_space_flag("choice:64|128|256").unwrap();
+        assert_eq!(
+            j.get("choice").unwrap().as_arr().unwrap().len(),
+            3
+        );
+        assert!(parse_space_flag("grid:1:2").is_err());
+        assert!(parse_space_flag("log:oops:1").is_err());
+        assert!(parse_space_flag("choice:").is_err());
+    }
+
+    #[test]
+    fn queue_config_parsing() {
+        let mut q = crate::scheduler::queue::QueueTree::flat();
+        parse_queue_config(&mut q, "eng=0.5:0.8, sci=0.5:0.6").unwrap();
+        assert!(q.is_leaf("root.eng"));
+        assert!((q.get("root.sci").unwrap().capacity - 0.5).abs() < 1e-9);
+        let mut q = crate::scheduler::queue::QueueTree::flat();
+        assert!(parse_queue_config(&mut q, "eng=0.5").is_err());
+        assert!(parse_queue_config(&mut q, "eng").is_err());
+        // invalid shares are rejected by the tree's validation
+        assert!(parse_queue_config(&mut q, "eng=0.5:0.1").is_err());
     }
 
     #[test]

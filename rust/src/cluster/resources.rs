@@ -108,6 +108,15 @@ impl Resources {
         *self == Resources::ZERO
     }
 
+    /// JSON shape used by the cluster status endpoint.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj()
+            .set("vcores", Json::Num(self.vcores as f64))
+            .set("memory_mb", Json::Num(self.memory_mb as f64))
+            .set("gpus", Json::Num(self.gpus as f64))
+    }
+
     /// Dominant-share fraction of `self` within `capacity` (DRF-style).
     pub fn dominant_share(&self, capacity: &Resources) -> f64 {
         let mut share = 0f64;

@@ -19,11 +19,54 @@ pub enum Event {
     Killed,
 }
 
+impl Event {
+    /// JSON shape served by `GET /experiment/:id/events`.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        match self {
+            Event::Accepted => {
+                Json::obj().set("type", Json::Str("Accepted".into()))
+            }
+            Event::ContainerStarted { container } => Json::obj()
+                .set("type", Json::Str("ContainerStarted".into()))
+                .set("container", Json::Str(container.clone())),
+            Event::ContainerFinished { container } => Json::obj()
+                .set("type", Json::Str("ContainerFinished".into()))
+                .set("container", Json::Str(container.clone())),
+            Event::ContainerFailed { container, reason } => Json::obj()
+                .set("type", Json::Str("ContainerFailed".into()))
+                .set("container", Json::Str(container.clone()))
+                .set("reason", Json::Str(reason.clone())),
+            Event::MetricLogged {
+                metric,
+                step,
+                value,
+            } => Json::obj()
+                .set("type", Json::Str("MetricLogged".into()))
+                .set("metric", Json::Str(metric.clone()))
+                .set("step", Json::Num(*step as f64))
+                .set("value", Json::Num(*value)),
+            Event::Killed => {
+                Json::obj().set("type", Json::Str("Killed".into()))
+            }
+        }
+    }
+}
+
 /// A recorded event with timestamp.
 #[derive(Debug, Clone)]
 pub struct Recorded {
     pub at_millis: u64,
     pub event: Event,
+}
+
+impl Recorded {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj()
+            .set("at_millis", Json::Num(self.at_millis as f64))
+            .set("event", self.event.to_json())
+    }
 }
 
 #[derive(Default)]

@@ -33,6 +33,11 @@ pub struct Services {
     pub templates: Arc<TemplateManager>,
     pub environments: Arc<EnvironmentManager>,
     pub models: Arc<ModelRegistry>,
+    /// Background scheduler loop, present when the stack was assembled
+    /// over the simulated YARN/K8s pipeline (`with_sim_executor`). Feeds
+    /// the extended `GET /cluster` payload; dropping `Services` stops
+    /// the loop.
+    pub executor: Option<Arc<crate::orchestrator::engine::ExecutionEngine>>,
 }
 
 impl Services {
@@ -78,7 +83,34 @@ impl Services {
             monitor,
             metrics,
             store,
+            executor: None,
         }
+    }
+
+    /// Assemble the full stack over the simulated execution pipeline:
+    /// experiments POSTed to the API are gang-scheduled onto the cluster
+    /// sim by a background loop and run to tracked completion (the
+    /// paper's Fig. 4 serving path). The submitter must already carry
+    /// the monitor it reports into.
+    pub fn with_sim_executor(
+        store: Arc<MetaStore>,
+        submitter: Arc<crate::orchestrator::sim_submitter::SimSubmitter>,
+        metrics: Arc<MetricStore>,
+        cfg: crate::orchestrator::engine::EngineConfig,
+    ) -> Services {
+        let monitor = Arc::clone(submitter.monitor());
+        let mut services = Services::with_parts(
+            store,
+            monitor,
+            metrics,
+            Arc::clone(&submitter) as Arc<dyn Submitter>,
+        );
+        services.executor = Some(
+            crate::orchestrator::engine::ExecutionEngine::start(
+                submitter, cfg,
+            ),
+        );
+        services
     }
 }
 

@@ -77,17 +77,35 @@ fn reject_status_filter(page: &Page, what: &str) -> crate::Result<()> {
 }
 
 fn register_routes(r: &mut Router, s: Arc<Services>) {
-    // ---- health / version ------------------------------------------
-    both(
-        r,
-        "GET",
-        "/cluster",
-        Arc::new(typed(|_: &Ctx<'_>, _: ()| {
-            Ok(Json::obj()
-                .set("version", Json::Str(crate::version().into()))
-                .set("status", Json::Str("RUNNING".into())))
-        })),
-    );
+    // ---- health / cluster status -----------------------------------
+    {
+        // health + (when the execution engine is attached) the live
+        // cluster picture: nodes, utilization, queue shares, pending
+        // jobs, unknown-queue warnings
+        let s = Arc::clone(&s);
+        both(
+            r,
+            "GET",
+            "/cluster",
+            Arc::new(typed(move |_: &Ctx<'_>, _: ()| {
+                let mut out = Json::obj()
+                    .set(
+                        "version",
+                        Json::Str(crate::version().into()),
+                    )
+                    .set("status", Json::Str("RUNNING".into()));
+                if let Some(engine) = &s.executor {
+                    let status = engine.cluster_status();
+                    if let Some(fields) = status.as_obj() {
+                        for (k, v) in fields {
+                            out = out.set(k, v.clone());
+                        }
+                    }
+                }
+                Ok(out)
+            })),
+        );
+    }
 
     // ---- experiments -----------------------------------------------
     {
@@ -176,6 +194,40 @@ fn register_routes(r: &mut Router, s: Arc<Services>) {
             Arc::new(typed(move |ctx: &Ctx<'_>, _: ()| {
                 s.experiments.kill(ctx.param("id")?)?;
                 Ok(true)
+            })),
+        );
+    }
+    {
+        // Fig. 4's "records important events": the monitor's per-
+        // experiment event log. Volatile — empty after a server restart
+        // even though the terminal status survives in the doc.
+        let s = Arc::clone(&s);
+        both(
+            r,
+            "GET",
+            "/experiment/:id/events",
+            Arc::new(typed(move |ctx: &Ctx<'_>, _: ()| {
+                let id = ctx.param("id")?;
+                s.experiments.get(id)?; // 404 for unknown ids
+                Ok(s.monitor
+                    .events(id)
+                    .iter()
+                    .map(|e| e.to_json())
+                    .collect::<Vec<Json>>())
+            })),
+        );
+    }
+    {
+        // AutoML entry point (paper §4.1): each trial is a real child
+        // experiment submitted through the same pipeline.
+        let s = Arc::clone(&s);
+        both(
+            r,
+            "POST",
+            "/experiment/tune",
+            Arc::new(typed(move |_: &Ctx<'_>, body: Json| {
+                let req = crate::automl::tune::parse_request(&body)?;
+                run_tune_over_pipeline(&s, &req)
             })),
         );
     }
@@ -421,6 +473,112 @@ fn register_routes(r: &mut Router, s: Arc<Services>) {
     }
 }
 
+/// Poll until `id` reaches a terminal status or `timeout_ms` passes; a
+/// trial that overruns its budgeted wall time is killed so it frees its
+/// queue share and containers.
+fn wait_terminal(
+    s: &Services,
+    id: &str,
+    timeout_ms: u64,
+) -> crate::experiment::spec::ExperimentStatus {
+    let deadline = std::time::Instant::now()
+        + std::time::Duration::from_millis(timeout_ms);
+    loop {
+        let st = s.experiments.status(id);
+        if st.is_terminal() {
+            return st;
+        }
+        if std::time::Instant::now() >= deadline {
+            crate::warnlog!(
+                "tune",
+                "trial {id} timed out after {timeout_ms}ms; killing"
+            );
+            let _ = s.experiments.kill(id);
+            return s.experiments.status(id);
+        }
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+}
+
+/// Run a tune request where every trial is a child experiment submitted
+/// through the manager → scheduler → cluster pipeline. Scores prefer a
+/// real logged `loss` metric (negated; local-submitter trials train for
+/// real); sim-pipeline trials fall back to the deterministic surrogate.
+/// Trials that fail, are killed, or time out score `f64::MIN`.
+fn run_tune_over_pipeline(
+    s: &Arc<Services>,
+    req: &crate::automl::tune::TuneRequest,
+) -> crate::Result<Json> {
+    use crate::automl::tune;
+    // fail fast on an unknown template instead of 64 failed trials
+    if let Some(name) = &req.template {
+        s.templates.get(name)?;
+    }
+    let make_spec = |params: &BTreeMap<String, String>,
+                     budget: u32|
+     -> crate::Result<ExperimentSpec> {
+        let mut spec = match (&req.template, &req.base_spec) {
+            (Some(name), _) => s.templates.instantiate(name, params)?,
+            (None, Some(base)) => {
+                let filled =
+                    crate::template::substitute(base, params)?;
+                ExperimentSpec::from_json(&filled)?
+            }
+            (None, None) => {
+                return Err(crate::SubmarineError::InvalidSpec(
+                    "tune request lost its spec source".into(),
+                ))
+            }
+        };
+        // the rung budget rides on the child spec as workload steps, so
+        // it is visible on the experiment doc (and drives real training
+        // time under the local submitter)
+        let mut w = spec.workload.clone().unwrap_or_default();
+        w.steps = budget;
+        spec.workload = Some(w);
+        Ok(spec)
+    };
+    let run_trial = |params: &BTreeMap<String, String>,
+                     budget: u32|
+     -> tune::TrialRun {
+        let submitted = make_spec(params, budget)
+            .and_then(|spec| s.experiments.submit(&spec));
+        match submitted {
+            Ok(id) => {
+                let st = wait_terminal(s, &id, req.trial_timeout_ms);
+                let score = if st
+                    == crate::experiment::spec::ExperimentStatus::Succeeded
+                {
+                    match s.metrics.last(&id, "loss") {
+                        Some(p) => -p.value,
+                        None => tune::surrogate_objective(
+                            params, budget, req.seed,
+                        ),
+                    }
+                } else {
+                    f64::MIN
+                };
+                s.metrics.log(&id, "objective", budget as u64, score);
+                tune::TrialRun {
+                    experiment_id: id,
+                    params: params.clone(),
+                    score,
+                    budget,
+                    status: st.as_str().to_string(),
+                }
+            }
+            Err(e) => tune::TrialRun {
+                experiment_id: String::new(),
+                params: params.clone(),
+                score: f64::MIN,
+                budget,
+                status: format!("SubmitFailed: {e}"),
+            },
+        }
+    };
+    Ok(tune::run_tune(req, run_trial))
+}
+
 fn model_version_json(m: &crate::model::ModelVersion) -> Json {
     Json::obj()
         .set("version", Json::Num(m.version as f64))
@@ -661,6 +819,82 @@ mod tests {
             j.at(&["error", "type"]).and_then(Json::as_str),
             Some("NotFound")
         );
+    }
+
+    #[test]
+    fn events_endpoint_serves_monitor_log() {
+        let r = api();
+        let (st, j) = dispatch(&r, "POST", "/api/v2/experiment", SPEC);
+        assert_eq!(st, 200);
+        let id = j
+            .at(&["result", "experimentId"])
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .to_string();
+        let (st, j) = dispatch(
+            &r,
+            "GET",
+            &format!("/api/v2/experiment/{id}/events"),
+            "",
+        );
+        assert_eq!(st, 200);
+        let events = j.get("result").unwrap().as_arr().unwrap();
+        assert!(!events.is_empty());
+        assert_eq!(
+            events[0].at(&["event", "type"]).and_then(Json::as_str),
+            Some("Accepted")
+        );
+        let (st, _) = dispatch(
+            &r,
+            "GET",
+            "/api/v2/experiment/ghost/events",
+            "",
+        );
+        assert_eq!(st, 404);
+    }
+
+    #[test]
+    fn tune_validates_and_times_out_dead_submitters() {
+        let r = api();
+        // bad request: no template/spec source
+        let (st, _) = dispatch(
+            &r,
+            "POST",
+            "/api/v2/experiment/tune",
+            r#"{"space":{"x":{"uniform":[0,1]}}}"#,
+        );
+        assert_eq!(st, 400);
+        // unknown template is a 404 before any trial runs
+        let (st, _) = dispatch(
+            &r,
+            "POST",
+            "/api/v2/experiment/tune",
+            r#"{"template":"nope",
+                "space":{"x":{"uniform":[0,1]}}}"#,
+        );
+        assert_eq!(st, 404);
+        // the NullSubmitter never progresses trials: they hit the
+        // per-trial timeout, get killed, and score as failed
+        let tpl = crate::template::tf_mnist_template().to_json().dump();
+        let (st, _) = dispatch(&r, "POST", "/api/v2/template", &tpl);
+        assert_eq!(st, 200);
+        let (st, j) = dispatch(
+            &r,
+            "POST",
+            "/api/v2/experiment/tune",
+            r#"{"template":"tf-mnist-template","trials":2,
+                "budget":10,"trial_timeout_ms":1,
+                "space":{"learning_rate":
+                    {"log_uniform":[0.0001,1.0]}}}"#,
+        );
+        assert_eq!(st, 200, "{j:?}");
+        let trials =
+            j.at(&["result", "trials"]).unwrap().as_arr().unwrap();
+        assert_eq!(trials.len(), 2);
+        assert!(trials
+            .iter()
+            .all(|t| t.str_field("status") == Some("Killed")));
     }
 
     #[test]

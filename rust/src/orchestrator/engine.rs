@@ -1,0 +1,170 @@
+//! Execution engine: the background scheduler loop that closes the
+//! paper's submit→schedule→monitor pipeline (Fig. 4, §5.1.5).
+//!
+//! PR 1 built the REST surface and PR 2 the persisted status path, but an
+//! experiment POSTed to the API still sat `Accepted` forever: nothing
+//! drove the scheduler or advanced simulated time. The engine owns that
+//! loop — every tick it pumps the [`SimSubmitter`], which runs one
+//! scheduling pass (placing accepted jobs through the capacity tree onto
+//! the cluster sim) and advances simulated time so container lifecycle
+//! events flow into the [`crate::experiment::monitor::ExperimentMonitor`]
+//! and, via the PR-2 status observer, into the persisted, index-filtered
+//! experiment status.
+
+use super::sim_submitter::SimSubmitter;
+use crate::util::clock::SimTime;
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// How the background loop maps real time to simulated time.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Real-time sleep between scheduling passes.
+    pub tick: std::time::Duration,
+    /// Simulated time advanced per pass.
+    pub sim_step: SimTime,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        // 1ms real : 250ms simulated — a 60s-container experiment
+        // completes in ~a quarter second of wall time while the sim
+        // clock stays fine-grained enough for Running to be observable.
+        EngineConfig {
+            tick: std::time::Duration::from_millis(1),
+            sim_step: SimTime::from_millis(250),
+        }
+    }
+}
+
+/// Handle on the background scheduler loop. Owned by
+/// [`crate::httpd::server::Services`]; dropping it stops the loop.
+pub struct ExecutionEngine {
+    submitter: Arc<SimSubmitter>,
+    stop: Arc<AtomicBool>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl ExecutionEngine {
+    /// Spawn the loop over `submitter`.
+    pub fn start(
+        submitter: Arc<SimSubmitter>,
+        cfg: EngineConfig,
+    ) -> Arc<ExecutionEngine> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let loop_stop = Arc::clone(&stop);
+        let loop_submitter = Arc::clone(&submitter);
+        let handle = std::thread::Builder::new()
+            .name("submarine-engine".into())
+            .spawn(move || {
+                while !loop_stop.load(Ordering::Relaxed) {
+                    // Only pump (and so advance simulated time) when a
+                    // pass could do something: an idle server must not
+                    // dilute gpu_utilization with idle sim time or burn
+                    // CPU on empty scheduling passes.
+                    if loop_submitter.has_work() {
+                        loop_submitter.pump(cfg.sim_step);
+                    }
+                    std::thread::sleep(cfg.tick);
+                }
+            })
+            .expect("spawn engine thread");
+        Arc::new(ExecutionEngine {
+            submitter,
+            stop,
+            handle: Mutex::new(Some(handle)),
+        })
+    }
+
+    /// The submitter the loop drives (status queries, tests).
+    pub fn submitter(&self) -> &Arc<SimSubmitter> {
+        &self.submitter
+    }
+
+    /// Cluster + queue snapshot for `GET /cluster`.
+    pub fn cluster_status(&self) -> Json {
+        self.submitter.cluster_status()
+    }
+
+    /// Stop the loop and join the thread (idempotent).
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ExecutionEngine {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterSim, Resources};
+    use crate::experiment::monitor::ExperimentMonitor;
+    use crate::experiment::spec::{ExperimentSpec, ExperimentStatus};
+    use crate::orchestrator::Submitter;
+    use crate::scheduler::queue::QueueTree;
+    use crate::scheduler::yarn::YarnScheduler;
+
+    fn fast_submitter() -> Arc<SimSubmitter> {
+        let sim =
+            ClusterSim::homogeneous(2, Resources::new(16, 65536, 4), 2);
+        Arc::new(
+            SimSubmitter::new(
+                Box::new(YarnScheduler::new(QueueTree::flat())),
+                sim,
+                Arc::new(ExperimentMonitor::new()),
+            )
+            .with_container_duration(SimTime::from_millis(100)),
+        )
+    }
+
+    #[test]
+    fn background_loop_completes_experiments() {
+        let submitter = fast_submitter();
+        let monitor = Arc::clone(submitter.monitor());
+        let engine = ExecutionEngine::start(
+            Arc::clone(&submitter),
+            EngineConfig {
+                tick: std::time::Duration::from_millis(1),
+                sim_step: SimTime::from_millis(50),
+            },
+        );
+        let spec = ExperimentSpec::parse(
+            r#"{"meta":{"name":"bg"},
+                "spec":{"Worker":{"replicas":2,"resources":"cpu=1"}}}"#,
+        )
+        .unwrap();
+        monitor.watch("e-bg", spec.total_containers());
+        submitter.submit("e-bg", &spec).unwrap();
+        // no manual pump: the engine's thread must finish the experiment
+        let deadline = std::time::Instant::now()
+            + std::time::Duration::from_secs(5);
+        while monitor.status("e-bg") != ExperimentStatus::Succeeded {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "experiment stuck in {:?}",
+                monitor.status("e-bg")
+            );
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        engine.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_and_drop_stops_loop() {
+        let engine = ExecutionEngine::start(
+            fast_submitter(),
+            EngineConfig::default(),
+        );
+        engine.shutdown();
+        engine.shutdown();
+        drop(engine);
+    }
+}

@@ -10,7 +10,11 @@
 //!   real through the PJRT runtime (quickstart, E8/E9).
 //! - [`tony`] is the TonY-like distributed runner (paper §3.2.2/§6.1):
 //!   worker grad steps, rust-side all-reduce, network model (E3).
+//! - [`engine`] is the background scheduler loop that drives
+//!   [`sim_submitter::SimSubmitter`] so experiments POSTed over REST run
+//!   to completion without any manual pumping.
 
+pub mod engine;
 pub mod local;
 pub mod sim_submitter;
 pub mod tony;

@@ -4,6 +4,10 @@
 //! DESIGN.md §Substitutions cluster substrate: experiments become gang
 //! jobs on the discrete-event cluster; container lifecycle events flow
 //! back into the [`ExperimentMonitor`].
+//!
+//! Driven either manually (`pump`/`drain`, as the scheduling benches do)
+//! or by the background loop in [`crate::orchestrator::engine`], which is
+//! what closes the paper's submit→schedule→monitor serving path.
 
 use super::Submitter;
 use crate::cluster::ClusterSim;
@@ -11,14 +15,24 @@ use crate::experiment::monitor::{Event, ExperimentMonitor};
 use crate::experiment::spec::ExperimentSpec;
 use crate::scheduler::{JobRequest, Scheduler};
 use crate::util::clock::SimTime;
+use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
+
+/// Book-keeping for one submitted job.
+struct JobEntry {
+    req: JobRequest,
+    placed: u32,
+    finished: u32,
+    /// Terminal (all containers finished, or killed): the job's queue
+    /// share has been released and it no longer gates `drain`.
+    done: bool,
+}
 
 struct Inner {
     scheduler: Box<dyn Scheduler + Send>,
     sim: ClusterSim,
-    /// job id -> (request, containers placed, containers finished)
-    jobs: BTreeMap<String, (JobRequest, u32, u32)>,
+    jobs: BTreeMap<String, JobEntry>,
     /// container id -> job id
     container_job: BTreeMap<String, String>,
 }
@@ -57,6 +71,10 @@ impl SimSubmitter {
         self
     }
 
+    pub fn monitor(&self) -> &Arc<ExperimentMonitor> {
+        &self.monitor
+    }
+
     /// Submit with an explicit per-experiment container duration
     /// (arrival-trace replays give every experiment its own runtime).
     pub fn submit_with_duration(
@@ -67,7 +85,15 @@ impl SimSubmitter {
     ) -> crate::Result<()> {
         let job = spec.to_job(id, duration);
         let mut g = self.inner.lock().unwrap();
-        g.jobs.insert(id.to_string(), (job.clone(), 0, 0));
+        g.jobs.insert(
+            id.to_string(),
+            JobEntry {
+                req: job.clone(),
+                placed: 0,
+                finished: 0,
+                done: false,
+            },
+        );
         g.scheduler.submit(job);
         Ok(())
     }
@@ -82,7 +108,7 @@ impl SimSubmitter {
             g.container_job
                 .insert(p.container.clone(), p.job.clone());
             if let Some(e) = g.jobs.get_mut(&p.job) {
-                e.1 += 1;
+                e.placed += 1;
             }
             self.monitor.record(
                 &p.job,
@@ -102,10 +128,12 @@ impl SimSubmitter {
                     },
                 );
                 if let Some(e) = g.jobs.get_mut(&job) {
-                    e.2 += 1;
-                    if e.2 >= e.0.total_containers() {
+                    e.finished += 1;
+                    if !e.done && e.finished >= e.req.total_containers()
+                    {
+                        e.done = true;
                         // release queue share etc.
-                        let req = e.0.clone();
+                        let req = e.req.clone();
                         g.scheduler.job_finished(&req);
                     }
                 }
@@ -121,10 +149,9 @@ impl SimSubmitter {
         loop {
             self.pump(step);
             let g = self.inner.lock().unwrap();
-            let all_done = g
-                .jobs
-                .values()
-                .all(|(req, _, fin)| *fin >= req.total_containers());
+            let all_done = g.jobs.values().all(|e| {
+                e.done || e.finished >= e.req.total_containers()
+            });
             let elapsed = g.sim.now().saturating_sub(start);
             if all_done || elapsed.0 >= max.0 {
                 return elapsed;
@@ -147,6 +174,73 @@ impl SimSubmitter {
     pub fn pending_jobs(&self) -> usize {
         self.inner.lock().unwrap().scheduler.pending_jobs()
     }
+
+    /// Whether a scheduling pass could do anything right now (pending
+    /// jobs to place or containers to complete). The background engine
+    /// skips pumping — and so freezes simulated time — while idle, so
+    /// `gpu_utilization` is not diluted by idle wall-clock time.
+    pub fn has_work(&self) -> bool {
+        let g = self.inner.lock().unwrap();
+        g.scheduler.pending_jobs() > 0 || g.sim.running_containers() > 0
+    }
+
+    /// Snapshot of the cluster + queue state for the status endpoint:
+    /// nodes with capacity/allocation, time-averaged GPU utilization,
+    /// queue shares, pending jobs, and the unknown-queue warning metric.
+    pub fn cluster_status(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        let nodes: Vec<Json> = g
+            .sim
+            .nodes
+            .iter()
+            .map(|n| {
+                Json::obj()
+                    .set("id", Json::Str(n.id.clone()))
+                    .set("capacity", n.capacity.to_json())
+                    .set("allocated", n.allocated.to_json())
+                    .set(
+                        "free_gpus",
+                        Json::Num(n.free_gpu_indices().len() as f64),
+                    )
+            })
+            .collect();
+        let queues: Vec<Json> = g
+            .scheduler
+            .queue_stats()
+            .into_iter()
+            .map(|q| {
+                Json::obj()
+                    .set("name", Json::Str(q.name))
+                    .set("capacity", Json::Num(q.capacity))
+                    .set("max_capacity", Json::Num(q.max_capacity))
+                    .set("used_share", Json::Num(q.used_share))
+                    .set("leaf", Json::Bool(q.is_leaf))
+            })
+            .collect();
+        Json::obj()
+            .set("scheduler", Json::Str(self.kind.to_string()))
+            .set("sim_now_s", Json::Num(g.sim.now().as_secs_f64()))
+            .set(
+                "gpu_utilization",
+                Json::Num(g.sim.gpu_utilization()),
+            )
+            .set(
+                "running_containers",
+                Json::Num(g.sim.running_containers() as f64),
+            )
+            .set(
+                "pending_jobs",
+                Json::Num(g.scheduler.pending_jobs() as f64),
+            )
+            .set("total_capacity", g.sim.total_capacity().to_json())
+            .set("allocated", g.sim.total_allocated().to_json())
+            .set("nodes", Json::Arr(nodes))
+            .set("queues", Json::Arr(queues))
+            .set(
+                "unknown_queue_count",
+                Json::Num(g.scheduler.unknown_queue_count() as f64),
+            )
+    }
 }
 
 impl Submitter for SimSubmitter {
@@ -158,16 +252,34 @@ impl Submitter for SimSubmitter {
         self.submit_with_duration(id, spec, self.container_duration)
     }
 
+    /// Kill frees everything the job holds: the pending entry if it was
+    /// never placed, the running sim containers, and the queue share if
+    /// it was charged.
     fn kill(&self, id: &str) -> crate::Result<()> {
-        let mut g = self.inner.lock().unwrap();
-        let running: Vec<String> = g
-            .container_job
-            .iter()
-            .filter(|(_, j)| j.as_str() == id)
-            .map(|(c, _)| c.clone())
-            .collect();
-        for c in running {
-            let _ = g.sim.fail(&c); // already-finished containers are fine
+        {
+            let mut g = self.inner.lock().unwrap();
+            let g = &mut *g;
+            g.scheduler.cancel(id);
+            let running: Vec<String> = g
+                .container_job
+                .iter()
+                .filter(|(_, j)| j.as_str() == id)
+                .map(|(c, _)| c.clone())
+                .collect();
+            for c in running {
+                let _ = g.sim.fail(&c); // finished containers are fine
+            }
+            if let Some(e) = g.jobs.get_mut(id) {
+                if !e.done {
+                    e.done = true;
+                    if e.placed > 0 {
+                        // the share was charged at placement and the
+                        // completion path will never run now
+                        let req = e.req.clone();
+                        g.scheduler.job_finished(&req);
+                    }
+                }
+            }
         }
         self.monitor.record(id, Event::Killed);
         Ok(())
@@ -221,7 +333,7 @@ mod tests {
     }
 
     #[test]
-    fn kill_fails_running_containers() {
+    fn kill_fails_running_containers_and_frees_resources() {
         let s = submitter();
         let spec = listing2_spec();
         s.monitor.watch("exp-1", spec.total_containers());
@@ -229,6 +341,37 @@ mod tests {
         s.pump(SimTime::from_millis(10));
         s.kill("exp-1").unwrap();
         assert_eq!(s.monitor.status("exp-1"), ExperimentStatus::Killed);
+        let st = s.cluster_status();
+        assert_eq!(st.num_field("running_containers"), Some(0.0));
+        // queue share released on kill: root's used_share back to ~0
+        let queues = st.get("queues").unwrap().as_arr().unwrap();
+        let root = queues
+            .iter()
+            .find(|q| q.str_field("name") == Some("root"))
+            .unwrap();
+        assert!(root.num_field("used_share").unwrap() < 1e-6);
+    }
+
+    #[test]
+    fn kill_of_pending_job_cancels_it() {
+        // cluster too small for the gang: job stays pending
+        let sim =
+            ClusterSim::homogeneous(1, Resources::new(2, 4096, 0), 1);
+        let s = SimSubmitter::new(
+            Box::new(YarnScheduler::new(QueueTree::flat())),
+            sim,
+            Arc::new(ExperimentMonitor::new()),
+        );
+        let spec = listing2_spec();
+        s.monitor.watch("e", spec.total_containers());
+        s.submit("e", &spec).unwrap();
+        s.pump(SimTime::from_millis(1));
+        assert_eq!(s.pending_jobs(), 1);
+        s.kill("e").unwrap();
+        assert_eq!(s.pending_jobs(), 0);
+        assert_eq!(s.monitor.status("e"), ExperimentStatus::Killed);
+        // a killed job no longer gates drain
+        s.drain(SimTime::from_millis(1), SimTime::from_millis(10));
     }
 
     #[test]
@@ -239,5 +382,22 @@ mod tests {
         s.submit("e", &spec).unwrap();
         s.drain(SimTime::from_millis(20), SimTime::from_secs_f64(10.0));
         assert!(s.gpu_utilization() > 0.0);
+    }
+
+    #[test]
+    fn cluster_status_reports_nodes_and_queues() {
+        let s = submitter();
+        let st = s.cluster_status();
+        assert_eq!(st.str_field("scheduler"), Some("yarn-capacity"));
+        assert_eq!(
+            st.get("nodes").unwrap().as_arr().unwrap().len(),
+            4
+        );
+        assert!(st.get("queues").unwrap().as_arr().unwrap().len() >= 1);
+        assert_eq!(st.num_field("unknown_queue_count"), Some(0.0));
+        assert_eq!(
+            st.at(&["total_capacity", "gpus"]).and_then(Json::as_f64),
+            Some(8.0)
+        );
     }
 }

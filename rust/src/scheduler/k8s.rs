@@ -175,6 +175,13 @@ impl Scheduler for K8sScheduler {
     fn busy_until(&self) -> SimTime {
         self.busy_until
     }
+
+    fn cancel(&mut self, job: &str) -> bool {
+        let before = self.queue.len();
+        self.queue.retain(|p| p.job != job);
+        self.jobs_with_pending.remove(job);
+        before != self.queue.len()
+    }
 }
 
 #[cfg(test)]

@@ -55,6 +55,18 @@ impl JobRequest {
     }
 }
 
+/// Per-queue accounting snapshot for the cluster status surface. All
+/// shares are absolute cluster fractions (see [`queue`]'s unit
+/// convention).
+#[derive(Debug, Clone)]
+pub struct QueueStat {
+    pub name: String,
+    pub capacity: f64,
+    pub max_capacity: f64,
+    pub used_share: f64,
+    pub is_leaf: bool,
+}
+
 /// A placement decision: container bound to a node (+ specific GPUs).
 #[derive(Debug, Clone)]
 pub struct Placement {
@@ -90,6 +102,24 @@ pub trait Scheduler {
     /// Notify the scheduler that every container of `job` finished, so
     /// it can release any share/quota accounting (default: no-op).
     fn job_finished(&mut self, _job: &JobRequest) {}
+
+    /// Remove a still-pending (unplaced) job from the queue — the kill
+    /// path for experiments that were never scheduled. Returns whether a
+    /// pending job was removed.
+    fn cancel(&mut self, _job: &str) -> bool {
+        false
+    }
+
+    /// Live queue accounting for the cluster status endpoint (empty for
+    /// schedulers without queue-level share tracking).
+    fn queue_stats(&self) -> Vec<QueueStat> {
+        Vec::new()
+    }
+
+    /// How many submissions named a queue that failed to resolve.
+    fn unknown_queue_count(&self) -> u64 {
+        0
+    }
 }
 
 /// Helper shared by both schedulers: pick a GPU set of size `want` on a

@@ -3,17 +3,28 @@
 //! capacity and may burst to `max_capacity`; leaves hold FIFO job queues.
 //! The scheduler picks the most under-served leaf first, which is what
 //! yields the multi-tenant utilization the paper claims over flat FIFO.
+//!
+//! # Unit convention
+//!
+//! Every stored share — `capacity`, `max_capacity`, `used_share` — is an
+//! **absolute fraction of the whole cluster** (cluster dominant-share, in
+//! `[0, 1]`).  `add()` takes its `capacity`/`max_capacity` *inputs* as
+//! fractions of the parent queue (the natural YARN config shape) and
+//! converts both to the absolute convention on insert, so `charge()` and
+//! `within_limits()` always compare like with like.
 
 use crate::cluster::Resources;
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 
-/// A node in the queue tree.
+/// A node in the queue tree. All share fields are absolute fractions of
+/// the cluster (see the module-level unit convention).
 #[derive(Debug)]
 pub struct Queue {
     pub name: String,
-    /// Guaranteed fraction of the *cluster* (computed from the tree).
+    /// Guaranteed share of the *cluster* (computed from the tree).
     pub capacity: f64,
-    /// Burst ceiling as a fraction of the cluster.
+    /// Burst ceiling as an absolute fraction of the cluster.
     pub max_capacity: f64,
     /// Dominant-share of resources currently used by this queue's jobs.
     pub used_share: f64,
@@ -25,6 +36,12 @@ pub struct Queue {
 #[derive(Debug)]
 pub struct QueueTree {
     queues: BTreeMap<String, Queue>,
+    /// Explicit fallback leaf for unknown queue names (falls back to the
+    /// first registered leaf under root when unset or stale).
+    default_queue: Option<String>,
+    /// How many job-queue names failed to resolve and were redirected to
+    /// the default queue (surfaced on the cluster status endpoint).
+    unknown_resolutions: AtomicU64,
 }
 
 impl QueueTree {
@@ -42,11 +59,22 @@ impl QueueTree {
                 parent: None,
             },
         );
-        QueueTree { queues }
+        QueueTree {
+            queues,
+            default_queue: None,
+            unknown_resolutions: AtomicU64::new(0),
+        }
     }
 
-    /// Add `child` under `parent` with `capacity` (fraction of the
-    /// parent's capacity) and `max_capacity` (fraction of the cluster).
+    /// Add `child` under `parent`. `capacity` and `max_capacity` are
+    /// fractions of the *parent* queue; both are stored as absolute
+    /// cluster fractions (parent share × input).  `max_capacity` may
+    /// exceed 1.0 of the parent (elastic burst past the parent's
+    /// guarantee, still bounded by every ancestor's own ceiling); the
+    /// stored absolute ceiling is clamped to 1.0 — the whole cluster.
+    /// Rejects non-finite or out-of-range inputs, `max_capacity <
+    /// capacity`, and sibling guarantees that would oversubscribe the
+    /// parent (sum > 1.0).
     pub fn add(
         &mut self,
         parent: &str,
@@ -54,23 +82,54 @@ impl QueueTree {
         capacity: f64,
         max_capacity: f64,
     ) -> crate::Result<()> {
+        if !capacity.is_finite() || capacity <= 0.0 || capacity > 1.0 {
+            return Err(invalid(format!(
+                "queue {parent}.{child}: capacity {capacity} must be a \
+                 fraction of the parent in (0, 1]"
+            )));
+        }
+        if !max_capacity.is_finite() || max_capacity < capacity {
+            return Err(invalid(format!(
+                "queue {parent}.{child}: max_capacity {max_capacity} must \
+                 be finite and >= capacity {capacity}"
+            )));
+        }
         let full = format!("{parent}.{child}");
         if self.queues.contains_key(&full) {
             return Err(crate::SubmarineError::AlreadyExists(full));
         }
         let parent_cap = {
-            let p = self.queues.get_mut(parent).ok_or_else(|| {
+            let p = self.queues.get(parent).ok_or_else(|| {
                 crate::SubmarineError::NotFound(format!("queue {parent}"))
             })?;
-            p.children.push(full.clone());
+            // sibling guarantees (as fractions of the parent) must not
+            // oversubscribe it
+            let sibling_sum: f64 = p
+                .children
+                .iter()
+                .filter_map(|c| self.queues.get(c))
+                .map(|c| c.capacity / p.capacity.max(1e-12))
+                .sum();
+            if sibling_sum + capacity > 1.0 + 1e-9 {
+                return Err(invalid(format!(
+                    "queue {full}: sibling capacities sum to {:.4} > 1.0 \
+                     of parent {parent}",
+                    sibling_sum + capacity
+                )));
+            }
             p.capacity
         };
+        self.queues
+            .get_mut(parent)
+            .expect("parent checked above")
+            .children
+            .push(full.clone());
         self.queues.insert(
             full.clone(),
             Queue {
                 name: full,
                 capacity: parent_cap * capacity,
-                max_capacity,
+                max_capacity: (parent_cap * max_capacity).min(1.0),
                 used_share: 0.0,
                 children: Vec::new(),
                 parent: Some(parent.to_string()),
@@ -90,22 +149,98 @@ impl QueueTree {
             .unwrap_or(false)
     }
 
-    /// Leaf that `job_queue` resolves to; unknown queues fall back to the
-    /// first leaf under root (YARN's default-queue behavior).
+    /// Set the leaf unknown queue names resolve to (must be a leaf).
+    pub fn set_default_queue(&mut self, name: &str) -> crate::Result<()> {
+        if !self.is_leaf(name) {
+            return Err(invalid(format!(
+                "default queue {name:?} is not a leaf queue"
+            )));
+        }
+        self.default_queue = Some(name.to_string());
+        Ok(())
+    }
+
+    /// How many submissions named a queue that did not resolve (and were
+    /// redirected to the default queue).
+    pub fn unknown_queue_count(&self) -> u64 {
+        self.unknown_resolutions.load(Ordering::Relaxed)
+    }
+
+    /// First leaf under `start` in registration (depth-first) order —
+    /// YARN's default-queue behavior.
+    fn first_leaf_under(&self, start: &str) -> Option<String> {
+        let mut stack = vec![start.to_string()];
+        while let Some(name) = stack.pop() {
+            match self.queues.get(&name) {
+                Some(q) if q.children.is_empty() => return Some(name),
+                Some(q) => {
+                    // push in reverse so the first-registered child is
+                    // visited first
+                    for c in q.children.iter().rev() {
+                        stack.push(c.clone());
+                    }
+                }
+                None => {}
+            }
+        }
+        None
+    }
+
+    /// Leaf that `job_queue` resolves to. Accepts a full dotted path to
+    /// a leaf (`root.prod.ads`), an unambiguous short leaf name
+    /// (`ads`), or an interior queue (`root`, `root.prod` — descends to
+    /// its first leaf, so the spec default `"root"` is always valid).
+    /// Anything else resolves to the configured default queue (or the
+    /// first leaf under root) and increments the unknown-queue counter.
     pub fn resolve(&self, job_queue: &str) -> String {
         if self.is_leaf(job_queue) {
             return job_queue.to_string();
         }
-        // first leaf in the tree (BTreeMap order is deterministic)
-        self.queues
+        // known interior queue: descend to its first leaf
+        if self.queues.contains_key(job_queue) {
+            if let Some(leaf) = self.first_leaf_under(job_queue) {
+                return leaf;
+            }
+        }
+        // short name: unique match on a leaf's last path segment
+        let mut matches = self
+            .queues
             .iter()
-            .find(|(_, q)| q.children.is_empty())
-            .map(|(n, _)| n.clone())
-            .unwrap_or_else(|| "root".to_string())
+            .filter(|(name, q)| {
+                q.children.is_empty()
+                    && name.rsplit('.').next() == Some(job_queue)
+            })
+            .map(|(name, _)| name);
+        if let Some(hit) = matches.next() {
+            if matches.next().is_none() {
+                return hit.clone();
+            }
+        }
+        self.unknown_resolutions.fetch_add(1, Ordering::Relaxed);
+        let fallback = match &self.default_queue {
+            Some(d) if self.is_leaf(d) => d.clone(),
+            _ => self
+                .first_leaf_under("root")
+                .unwrap_or_else(|| "root".to_string()),
+        };
+        crate::warnlog!(
+            "queue-tree",
+            "unknown queue {job_queue:?}; using {fallback:?}"
+        );
+        fallback
     }
 
     /// Record `delta` dominant-share usage on `leaf` and its ancestors.
+    /// Non-finite deltas are dropped (with a warning) instead of
+    /// corrupting the share ledger.
     pub fn charge(&mut self, leaf: &str, delta: f64) {
+        if !delta.is_finite() {
+            crate::warnlog!(
+                "queue-tree",
+                "dropping non-finite share delta {delta} on {leaf}"
+            );
+            return;
+        }
         let mut cur = Some(leaf.to_string());
         while let Some(name) = cur {
             if let Some(q) = self.queues.get_mut(&name) {
@@ -118,7 +253,8 @@ impl QueueTree {
     }
 
     /// Can `leaf` absorb `delta` more share without exceeding its burst
-    /// ceiling (and every ancestor its own)?
+    /// ceiling (and every ancestor its own)? All quantities are absolute
+    /// cluster fractions.
     pub fn within_limits(&self, leaf: &str, delta: f64) -> bool {
         let mut cur = Some(leaf.to_string());
         while let Some(name) = cur {
@@ -144,8 +280,13 @@ impl QueueTree {
             .filter(|(_, q)| q.children.is_empty())
             .map(|(n, q)| (n, q.used_share / q.capacity.max(1e-9)))
             .collect();
-        leaves.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        leaves.sort_by(|a, b| a.1.total_cmp(&b.1));
         leaves.into_iter().map(|(n, _)| n.clone()).collect()
+    }
+
+    /// All queues (name order) for status reporting.
+    pub fn iter(&self) -> impl Iterator<Item = &Queue> {
+        self.queues.values()
     }
 
     /// Jain's fairness index over leaf relative usages (1.0 = perfectly
@@ -174,6 +315,10 @@ impl QueueTree {
     }
 }
 
+fn invalid(msg: String) -> crate::SubmarineError {
+    crate::SubmarineError::InvalidSpec(msg)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -194,6 +339,11 @@ mod tests {
         assert!(
             (t.get("root.prod.ads").unwrap().capacity - 0.3).abs() < 1e-9
         );
+        // max_capacity converts to the same absolute convention
+        assert!(
+            (t.get("root.prod.ads").unwrap().max_capacity - 0.36).abs()
+                < 1e-9
+        );
     }
 
     #[test]
@@ -201,6 +351,38 @@ mod tests {
         let mut t = tree();
         assert!(t.add("root", "prod", 0.1, 0.1).is_err());
         assert!(t.add("root.nope", "x", 0.1, 0.1).is_err());
+    }
+
+    #[test]
+    fn add_validates_inputs() {
+        let mut t = QueueTree::flat();
+        // regression: pre-PR all of these were silently accepted
+        assert!(t.add("root", "a", f64::NAN, 1.0).is_err());
+        assert!(t.add("root", "a", 0.5, f64::NAN).is_err());
+        assert!(t.add("root", "a", 0.0, 0.5).is_err());
+        assert!(t.add("root", "a", 1.5, 2.0).is_err());
+        // max_capacity below the guarantee is a spec error
+        assert!(t.add("root", "a", 0.5, 0.3).is_err());
+        // sibling guarantees must not oversubscribe the parent
+        t.add("root", "a", 0.7, 0.8).unwrap();
+        assert!(t.add("root", "b", 0.4, 0.5).is_err());
+        t.add("root", "b", 0.3, 0.4).unwrap();
+        // elastic burst past the parent is allowed, but the stored
+        // absolute ceiling never exceeds the whole cluster
+        t.add("root.b", "kid", 0.5, 5.0).unwrap();
+        assert!(
+            (t.get("root.b.kid").unwrap().max_capacity - 1.0).abs()
+                < 1e-9
+        );
+    }
+
+    #[test]
+    fn rejected_child_leaves_parent_untouched() {
+        let mut t = QueueTree::flat();
+        assert!(t.add("root", "bad", 0.5, 0.1).is_err());
+        // a rejected add must not leave a dangling child edge
+        t.add("root", "ok", 1.0, 1.0).unwrap();
+        assert_eq!(t.resolve("nope"), "root.ok");
     }
 
     #[test]
@@ -217,12 +399,42 @@ mod tests {
     }
 
     #[test]
+    fn non_finite_charge_is_dropped() {
+        let mut t = tree();
+        t.charge("root.dev", f64::NAN);
+        t.charge("root.dev", f64::INFINITY);
+        assert_eq!(t.get("root.dev").unwrap().used_share, 0.0);
+        // and ordering still works afterwards
+        assert_eq!(t.leaves_by_need().len(), 3);
+    }
+
+    #[test]
     fn limits_respect_ancestor_ceilings() {
         let mut t = tree();
-        assert!(t.within_limits("root.prod.ads", 0.5)); // under 0.6 ceiling
-        t.charge("root.prod.search", 0.6);
-        // ads alone ok (0.3 < 0.6) but root.prod would hit 0.9 > 0.8
+        // ads ceiling is 0.6 of prod's 0.6 = 0.36 absolute
+        assert!(t.within_limits("root.prod.ads", 0.3));
+        assert!(!t.within_limits("root.prod.ads", 0.4));
+        t.charge("root.prod.search", 0.3);
+        // ads alone ok (0.3 <= 0.36) but root.prod would hit 0.6+... >
+        // its 0.8 ceiling only at 0.51; check the ancestor walk with a
+        // bigger parent load
+        t.charge("root.prod.search", 0.3);
         assert!(!t.within_limits("root.prod.ads", 0.3));
+    }
+
+    #[test]
+    fn child_ceiling_is_relative_to_parent_share() {
+        // regression (unit-mixing bug): pre-PR `add()` stored
+        // max_capacity as given while capacity was pre-multiplied by the
+        // parent's share, so a child of a 50% parent configured with
+        // max_capacity 0.6 (of the parent) could burst to 0.6 of the
+        // whole cluster.
+        let mut t = QueueTree::flat();
+        t.add("root", "half", 0.5, 0.5).unwrap();
+        t.add("root.half", "kid", 0.5, 0.6).unwrap();
+        // kid's ceiling is 0.6 of its parent's 0.5 = 0.3 of the cluster
+        assert!(t.within_limits("root.half.kid", 0.29));
+        assert!(!t.within_limits("root.half.kid", 0.35));
     }
 
     #[test]
@@ -235,11 +447,43 @@ mod tests {
     }
 
     #[test]
-    fn resolve_falls_back_to_first_leaf() {
+    fn resolve_full_paths_and_short_names() {
         let t = tree();
         assert_eq!(t.resolve("root.prod.ads"), "root.prod.ads");
-        let fallback = t.resolve("nonexistent");
-        assert!(t.is_leaf(&fallback));
+        // regression: pre-PR a short leaf name fell through to an
+        // arbitrary (alphabetically-first) leaf of the whole tree
+        assert_eq!(t.resolve("ads"), "root.prod.ads");
+        assert_eq!(t.resolve("search"), "root.prod.search");
+        assert_eq!(t.resolve("dev"), "root.dev");
+        // interior queues (incl. the spec default "root") descend to
+        // their first leaf without counting as unknown
+        assert_eq!(t.resolve("root"), "root.prod.ads");
+        assert_eq!(t.resolve("root.prod"), "root.prod.ads");
+        assert_eq!(t.unknown_queue_count(), 0);
+    }
+
+    #[test]
+    fn unknown_queue_uses_default_and_counts() {
+        let mut t = tree();
+        t.set_default_queue("root.prod.search").unwrap();
+        assert!(t.set_default_queue("root.prod").is_err()); // not a leaf
+        assert_eq!(t.resolve("nonexistent"), "root.prod.search");
+        assert_eq!(t.unknown_queue_count(), 1);
+        // "prod" is ambiguous as a short name only if several leaves end
+        // with it; here it names an interior queue -> unknown
+        assert_eq!(t.resolve("prod"), "root.prod.search");
+        assert_eq!(t.unknown_queue_count(), 2);
+    }
+
+    #[test]
+    fn fallback_is_first_registered_leaf_under_root() {
+        // regression: pre-PR the fallback was the alphabetically-first
+        // leaf of the whole tree, not the first leaf under root
+        let mut t = QueueTree::flat();
+        t.add("root", "zulu", 0.5, 0.6).unwrap();
+        t.add("root", "alpha", 0.5, 0.6).unwrap();
+        assert_eq!(t.resolve("nope"), "root.zulu");
+        assert_eq!(t.unknown_queue_count(), 1);
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //!   on one socket when possible.
 
 use super::queue::QueueTree;
-use super::{pick_gpus, JobRequest, Placement, Scheduler};
+use super::{pick_gpus, JobRequest, Placement, QueueStat, Scheduler};
 use crate::cluster::ClusterSim;
 use crate::util::clock::SimTime;
 use std::collections::VecDeque;
@@ -48,6 +48,10 @@ pub struct YarnScheduler {
     /// Cluster capacity seen on the last scheduling pass (for releasing
     /// queue shares on job completion).
     last_cluster_cap: crate::cluster::Resources,
+    /// Leaf each placed job was charged to, so the release path charges
+    /// the same queue without re-resolving (and without re-counting
+    /// unknown names).
+    placed_leaf: std::collections::BTreeMap<String, String>,
 }
 
 impl YarnScheduler {
@@ -60,6 +64,7 @@ impl YarnScheduler {
             topology_aware: true,
             placed_counter: 0,
             last_cluster_cap: crate::cluster::Resources::ZERO,
+            placed_leaf: std::collections::BTreeMap::new(),
         }
     }
 
@@ -186,6 +191,7 @@ impl YarnScheduler {
             out.push(p);
         }
         self.queues.charge(&leaf, delta);
+        self.placed_leaf.insert(job.id.clone(), leaf);
         Some(out)
     }
 }
@@ -195,7 +201,11 @@ impl Scheduler for YarnScheduler {
         "yarn-capacity"
     }
 
-    fn submit(&mut self, job: JobRequest) {
+    fn submit(&mut self, mut job: JobRequest) {
+        // Resolve the queue once at submit time (short names, unknowns
+        // -> default queue) so the allocate loop compares leaf names
+        // directly and the unknown-queue counter ticks once per job.
+        job.queue = self.queues.resolve(&job.queue);
         self.pending.push_back(job);
     }
 
@@ -215,7 +225,7 @@ impl Scheduler for YarnScheduler {
                     .pending
                     .iter()
                     .enumerate()
-                    .filter(|(_, j)| self.queues.resolve(&j.queue) == leaf)
+                    .filter(|(_, j)| j.queue == leaf)
                     .map(|(i, _)| i)
                     .collect();
                 for idx in idxs {
@@ -250,6 +260,29 @@ impl Scheduler for YarnScheduler {
         let cap = self.last_cluster_cap;
         release_job_share(self, job, &cap);
     }
+
+    fn cancel(&mut self, job: &str) -> bool {
+        let before = self.pending.len();
+        self.pending.retain(|j| j.id != job);
+        before != self.pending.len()
+    }
+
+    fn queue_stats(&self) -> Vec<QueueStat> {
+        self.queues
+            .iter()
+            .map(|q| QueueStat {
+                name: q.name.clone(),
+                capacity: q.capacity,
+                max_capacity: q.max_capacity,
+                used_share: q.used_share,
+                is_leaf: self.queues.is_leaf(&q.name),
+            })
+            .collect()
+    }
+
+    fn unknown_queue_count(&self) -> u64 {
+        self.queues.unknown_queue_count()
+    }
 }
 
 /// Release the queue share held by a finished job (the experiment monitor
@@ -259,7 +292,10 @@ pub fn release_job_share(
     job: &JobRequest,
     cluster_cap: &crate::cluster::Resources,
 ) {
-    let leaf = sched.queues.resolve(&job.queue);
+    let leaf = sched
+        .placed_leaf
+        .remove(&job.id)
+        .unwrap_or_else(|| sched.queues.resolve(&job.queue));
     let delta = QueueTree::share_of(&job.total_resources(), cluster_cap);
     sched.queues.charge(&leaf, -delta);
 }
@@ -361,7 +397,7 @@ mod tests {
     fn queue_ceiling_defers_job() {
         let mut sim = sim4(); // 16 GPUs total
         let mut queues = QueueTree::flat();
-        queues.add("root", "tiny", 1.0, 0.10).unwrap(); // 10% ceiling
+        queues.add("root", "tiny", 0.10, 0.10).unwrap(); // 10% ceiling
         let mut s = YarnScheduler::new(queues);
         let mut job = small_job("j", 4, 1); // 4/16 GPUs = 25% share
         job.queue = "root.tiny".into();
@@ -372,10 +408,46 @@ mod tests {
     }
 
     #[test]
+    fn cancel_removes_pending_job() {
+        let mut sim = ClusterSim::homogeneous(
+            1,
+            Resources::new(16, 65536, 2),
+            1,
+        );
+        let mut s = YarnScheduler::new(QueueTree::flat());
+        s.submit(small_job("big", 2, 2)); // cannot fit -> stays pending
+        assert!(s.schedule(&mut sim).is_empty());
+        assert_eq!(s.pending_jobs(), 1);
+        assert!(s.cancel("big"));
+        assert!(!s.cancel("big")); // already gone
+        assert_eq!(s.pending_jobs(), 0);
+    }
+
+    #[test]
+    fn short_queue_names_resolve_at_submit() {
+        let mut sim = sim4();
+        let mut queues = QueueTree::flat();
+        queues.add("root", "eng", 0.5, 1.0).unwrap();
+        queues.add("root", "sci", 0.5, 1.0).unwrap();
+        let mut s = YarnScheduler::new(queues);
+        let mut job = small_job("j", 1, 1);
+        job.queue = "eng".into(); // short leaf name
+        s.submit(job);
+        assert_eq!(s.schedule(&mut sim).len(), 1);
+        assert_eq!(s.unknown_queue_count(), 0);
+        let eng = s.queues.get("root.eng").unwrap();
+        assert!(eng.used_share > 0.0, "share charged to resolved leaf");
+        let mut stray = small_job("k", 0, 1);
+        stray.queue = "nope".into();
+        s.submit(stray);
+        assert_eq!(s.unknown_queue_count(), 1);
+    }
+
+    #[test]
     fn share_released_allows_next_job() {
         let mut sim = sim4();
         let mut queues = QueueTree::flat();
-        queues.add("root", "q", 1.0, 0.30).unwrap();
+        queues.add("root", "q", 0.30, 0.30).unwrap();
         let mut s = YarnScheduler::new(queues);
         let mut j1 = small_job("j1", 4, 1);
         j1.queue = "root.q".into();

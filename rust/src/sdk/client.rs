@@ -21,6 +21,9 @@ pub struct ExperimentClient {
     token: Option<String>,
     /// `/api/v1` (compat default) or `/api/v2`.
     base: String,
+    /// Per-request read timeout (long synchronous calls like `tune`
+    /// need more than the 60s default — see `with_read_timeout`).
+    read_timeout: std::time::Duration,
     /// Pooled keep-alive connection.
     conn: Mutex<Option<TcpStream>>,
 }
@@ -65,6 +68,7 @@ impl ExperimentClient {
             port,
             token: None,
             base: "/api/v1".to_string(),
+            read_timeout: std::time::Duration::from_secs(60),
             conn: Mutex::new(None),
         }
     }
@@ -82,6 +86,17 @@ impl ExperimentClient {
         self
     }
 
+    /// Raise the per-request read timeout (default 60s). A synchronous
+    /// `tune` call runs every trial before answering; size this to
+    /// roughly `trials * trial_timeout` plus margin.
+    pub fn with_read_timeout(
+        mut self,
+        timeout: std::time::Duration,
+    ) -> ExperimentClient {
+        self.read_timeout = timeout;
+        self
+    }
+
     /// The API prefix this client targets (`/api/v1` or `/api/v2`).
     pub fn api_base(&self) -> &str {
         &self.base
@@ -90,8 +105,7 @@ impl ExperimentClient {
     fn connect(&self) -> crate::Result<TcpStream> {
         let stream =
             TcpStream::connect((self.host.as_str(), self.port))?;
-        let _ = stream
-            .set_read_timeout(Some(std::time::Duration::from_secs(60)));
+        let _ = stream.set_read_timeout(Some(self.read_timeout));
         let _ = stream.set_nodelay(true);
         Ok(stream)
     }
@@ -423,6 +437,38 @@ impl ExperimentClient {
             .map(|t| t as usize)
             .unwrap_or(items.len());
         Ok((Self::parse_experiment_rows(items), total))
+    }
+
+    /// Live cluster/queue snapshot from `GET /cluster` (version +
+    /// status always; nodes/queues/utilization when the server runs the
+    /// execution engine).
+    pub fn cluster_status(&self) -> crate::Result<Json> {
+        let r =
+            self.request("GET", &format!("{}/cluster", self.base), None)?;
+        self.expect_ok(r)
+    }
+
+    /// The monitor's event log for an experiment.
+    pub fn events(&self, id: &str) -> crate::Result<Vec<Json>> {
+        let r = self.request(
+            "GET",
+            &format!("{}/experiment/{id}/events", self.base),
+            None,
+        )?;
+        let res = self.expect_ok(r)?;
+        Ok(res.as_arr().unwrap_or(&[]).to_vec())
+    }
+
+    /// Run an AutoML tune request (`POST /experiment/tune`); trials run
+    /// as child experiments through the server's execution pipeline.
+    /// Blocks until the search completes.
+    pub fn tune(&self, request: &Json) -> crate::Result<Json> {
+        let r = self.request(
+            "POST",
+            &format!("{}/experiment/tune", self.base),
+            Some(request),
+        )?;
+        self.expect_ok(r)
     }
 
     /// Fetch a metric series (step, value pairs).

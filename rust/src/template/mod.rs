@@ -137,8 +137,10 @@ impl Template {
     }
 }
 
-/// Recursively replace `{{name}}` inside every string value.
-fn substitute(
+/// Recursively replace `{{name}}` inside every string value. Shared
+/// with the tune endpoint, which substitutes search-space samples into a
+/// raw base spec.
+pub(crate) fn substitute(
     j: &Json,
     values: &BTreeMap<String, String>,
 ) -> crate::Result<Json> {

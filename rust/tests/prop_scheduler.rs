@@ -179,7 +179,7 @@ fn queue_ceilings_never_exceeded() {
     check(40, |g| {
         let mut queues = QueueTree::flat();
         let ceiling = 0.2 + g.f64() * 0.5;
-        queues.add("root", "capped", 1.0, ceiling).unwrap();
+        queues.add("root", "capped", ceiling, ceiling).unwrap();
         let mut sched = YarnScheduler::new(queues);
         let mut sim = ClusterSim::homogeneous(
             4,
