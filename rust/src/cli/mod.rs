@@ -48,7 +48,7 @@ impl Args {
                 if let Some((k, v)) = name.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
                     i += 1;
-                } else if matches!(name, "insecure" | "verbose") {
+                } else if matches!(name, "insecure" | "verbose" | "once") {
                     out.flags.insert(name.to_string(), "true".into());
                     i += 1;
                 } else {
@@ -218,6 +218,37 @@ fn dispatch(argv: &[String]) -> crate::Result<String> {
             let client = client_from_flags(&args)?;
             match sub {
                 "list" => {
+                    if let Some(sel) = args.flag("selector") {
+                        // label selectors are a v2 resource feature;
+                        // --status/--limit/--offset compose with them
+                        if args.flag("api") == Some("v1") {
+                            return Err(bad(
+                                "--selector needs --api v2",
+                            ));
+                        }
+                        let mut query = format!("label={sel}");
+                        if let Some(st) = args.flag("status") {
+                            query.push_str(&format!("&status={st}"));
+                        }
+                        for flag in ["limit", "offset"] {
+                            if let Some(v) = args.flag(flag) {
+                                let n: usize =
+                                    v.parse().map_err(|_| {
+                                        bad(&format!(
+                                            "bad --{flag} {v:?}"
+                                        ))
+                                    })?;
+                                query.push_str(&format!(
+                                    "&{flag}={n}"
+                                ));
+                            }
+                        }
+                        let res = client.list_resources_query(
+                            "experiment",
+                            &query,
+                        )?;
+                        return Ok(format_resource_list(&res));
+                    }
                     let paged = args.flag("limit").is_some()
                         || args.flag("offset").is_some()
                         || args.flag("status").is_some();
@@ -366,6 +397,113 @@ fn dispatch(argv: &[String]) -> crate::Result<String> {
             let args = Args::parse(rest)?;
             storage_admin(sub, &args)
         }
+        "get" => {
+            // generic declarative read: any kind, any name, selectors
+            let args = Args::parse(argv.get(1..).unwrap_or(&[]))?;
+            let kind = args
+                .positional
+                .first()
+                .ok_or_else(|| {
+                    bad("get <kind> [name] [--selector k=v,...]")
+                })?
+                .clone();
+            let client = client_from_flags(&args)?;
+            match args.positional.get(1) {
+                Some(name) => {
+                    Ok(client.get_resource(&kind, name)?.pretty())
+                }
+                None => {
+                    let res = client
+                        .list_resources(&kind, args.flag("selector"))?;
+                    Ok(format_resource_list(&res))
+                }
+            }
+        }
+        "watch" => {
+            let args = Args::parse(argv.get(1..).unwrap_or(&[]))?;
+            let kind = args
+                .positional
+                .first()
+                .ok_or_else(|| {
+                    bad("watch <kind> [--since REV] [--once]")
+                })?
+                .clone();
+            let client = client_from_flags(&args)?;
+            let since = match args.flag("since") {
+                Some(v) => {
+                    v.parse().map_err(|_| bad("bad --since"))?
+                }
+                None => client.resource_bookmark(&kind)?,
+            };
+            let once = args.flag("once").is_some();
+            let mut w = client.watcher(&kind, since);
+            loop {
+                match w.next()? {
+                    crate::sdk::WatchStep::Events(events) => {
+                        for e in &events {
+                            println!("{}", format_watch_event(e));
+                        }
+                    }
+                    crate::sdk::WatchStep::Resync(items) => {
+                        println!(
+                            "-- watch position compacted; resynced \
+                             {} items, resuming at rv {} --",
+                            items.len(),
+                            w.since
+                        );
+                    }
+                }
+                if once {
+                    break;
+                }
+            }
+            Ok(String::new())
+        }
+        "label" => {
+            // submarine label <kind> <name> k=v ... (k- removes)
+            let args = Args::parse(argv.get(1..).unwrap_or(&[]))?;
+            if args.positional.len() < 3 {
+                return Err(bad(
+                    "label <kind> <name> key=value ... (key- removes)",
+                ));
+            }
+            let kind = args.positional[0].clone();
+            let name = args.positional[1].clone();
+            let mut labels = crate::util::json::Json::obj();
+            for term in &args.positional[2..] {
+                if let Some(k) = term.strip_suffix('-') {
+                    if k.is_empty() || k.contains('=') {
+                        return Err(bad(&format!(
+                            "bad label removal {term:?}"
+                        )));
+                    }
+                    labels =
+                        labels.set(k, crate::util::json::Json::Null);
+                } else {
+                    let (k, v) =
+                        term.split_once('=').ok_or_else(|| {
+                            bad(&format!(
+                                "label term {term:?} is not key=value \
+                                 or key-"
+                            ))
+                        })?;
+                    labels = labels.set(
+                        k,
+                        crate::util::json::Json::Str(v.to_string()),
+                    );
+                }
+            }
+            let patch = crate::util::json::Json::obj().set(
+                "meta",
+                crate::util::json::Json::obj().set("labels", labels),
+            );
+            let client = client_from_flags(&args)?;
+            let doc = client.patch_resource(&kind, &name, &patch)?;
+            Ok(format!(
+                "labeled {kind}/{name} (resource_version {})",
+                crate::resource::resource_version(&doc)
+            ))
+        }
         other => Err(bad(&format!(
             "unknown command {other:?}; try `submarine help`"
         ))),
@@ -483,6 +621,58 @@ fn run_tune_command(
         ));
     }
     Ok(out)
+}
+
+/// Tabular rendering of a v2 resource list payload.
+fn format_resource_list(res: &crate::util::json::Json) -> String {
+    use crate::util::json::Json;
+    let items = res.get("items").and_then(Json::as_arr).unwrap_or(&[]);
+    let mut out = String::new();
+    for item in items {
+        match item {
+            Json::Str(name) => out.push_str(&format!("{name}\n")),
+            obj => {
+                let name = obj
+                    .str_field("experimentId")
+                    .map(str::to_string)
+                    .or_else(|| {
+                        obj.num_field("version")
+                            .map(|v| format!("v{v}"))
+                    })
+                    .unwrap_or_else(|| obj.dump());
+                let state = obj
+                    .str_field("status")
+                    .or_else(|| obj.str_field("stage"))
+                    .unwrap_or("-");
+                let labels = obj
+                    .get("labels")
+                    .map(|l| l.dump())
+                    .unwrap_or_default();
+                out.push_str(&format!("{name}\t{state}\t{labels}\n"));
+            }
+        }
+    }
+    out.push_str(&format!(
+        "({} of {} @ resource_version {})\n",
+        items.len(),
+        res.num_field("total").unwrap_or(items.len() as f64),
+        res.num_field("resource_version").unwrap_or(0.0),
+    ));
+    out
+}
+
+/// One-line rendering of a watch event.
+fn format_watch_event(e: &crate::util::json::Json) -> String {
+    use crate::util::json::Json;
+    let ty = e.str_field("type").unwrap_or("?");
+    let name = e.str_field("name").unwrap_or("?");
+    let rv = e.num_field("resource_version").unwrap_or(0.0);
+    let state = e
+        .at(&["object", "status"])
+        .and_then(Json::as_str)
+        .or_else(|| e.at(&["object", "stage"]).and_then(Json::as_str))
+        .unwrap_or("");
+    format!("{rv}\t{ty}\t{name}\t{state}")
 }
 
 /// Human-readable `cluster status` output.
@@ -771,6 +961,7 @@ fn usage() -> String {
                    [--worker_launch_cmd C] [--model M --steps S --lr LR]\n\
                    [--server host:port]\n\
        experiment  list [--limit N] [--offset N] [--status S]\n\
+                   [--selector k=v,k2=v2]\n\
                    | get <id> | kill <id> | events <id>\n\
                    | tune [--template T] [--strategy random_search|successive_halving]\n\
                           [--trials N] [--budget B] [--min-budget B] [--max-budget B]\n\
@@ -778,6 +969,12 @@ fn usage() -> String {
                                                  [--server host:port]\n\
        cluster     status                        [--server host:port]\n\
        template    submit <name> -P key=value... [--server host:port]\n\
+       get         <kind> [name] [--selector k=v,...]   (kind: experiment|\n\
+                   template|environment; `get <kind> <name>` prints the\n\
+                   full document with its meta block)\n\
+       watch       <kind> [--since REV] [--once]  (long-poll change feed;\n\
+                   auto-relists after a 410 Gone compaction)\n\
+       label       <kind> <name> key=value ... key-   (merge-patch labels)\n\
        storage     stats | compact --data-dir DIR\n\
                    (stats is read-only; compact needs the server stopped)\n\
        version\n\
@@ -922,6 +1119,38 @@ mod tests {
         assert!(parse_queue_config(&mut q, "eng").is_err());
         // invalid shares are rejected by the tree's validation
         assert!(parse_queue_config(&mut q, "eng=0.5:0.1").is_err());
+    }
+
+    #[test]
+    fn label_command_validates_terms_before_any_network_call() {
+        assert!(dispatch(&argv(&["label", "experiment"])).is_err());
+        assert!(dispatch(&argv(&[
+            "label",
+            "experiment",
+            "e-1",
+            "nokv"
+        ]))
+        .is_err());
+        assert!(
+            dispatch(&argv(&["label", "experiment", "e-1", "-"]))
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn get_and_watch_require_a_kind() {
+        assert!(dispatch(&argv(&["get"])).is_err());
+        assert!(dispatch(&argv(&["watch"])).is_err());
+        // selector on the v1 surface is rejected client-side
+        assert!(dispatch(&argv(&[
+            "experiment",
+            "list",
+            "--selector",
+            "a=b",
+            "--api",
+            "v1"
+        ]))
+        .is_err());
     }
 
     #[test]

@@ -77,31 +77,75 @@ pub struct EnvironmentManager {
 
 impl EnvironmentManager {
     pub fn new(store: Arc<MetaStore>) -> EnvironmentManager {
+        // label selectors on the v2 list walk k=v postings over meta
+        store.define_index(NS, "meta.labels", false);
         EnvironmentManager {
             store,
             index: PackageIndex::builtin(),
         }
     }
 
+    /// Resolve an environment's constraint set into the `pkg=version`
+    /// lock list (pure CPU — no storage access, so the REST layer may
+    /// call it while holding store locks). Unsatisfiable constraints
+    /// error out.
+    pub fn resolve_lock(
+        &self,
+        env: &Environment,
+    ) -> crate::Result<Vec<String>> {
+        let solver = DependencySolver::new(&self.index);
+        let resolved = solver.resolve(&env.dependencies)?;
+        Ok(resolved
+            .iter()
+            .map(|(p, v)| format!("{p}={v}"))
+            .collect())
+    }
+
     /// Register after *resolving* the dependency set — an environment
     /// whose constraints are unsatisfiable is rejected up front, which is
     /// what makes experiments reproducible later.
     pub fn register(&self, env: &Environment) -> crate::Result<()> {
+        self.register_labeled(env, None)
+    }
+
+    /// Register with client-supplied resource labels; the stored doc
+    /// carries the resolved lock plus the unified `meta` block.
+    pub fn register_labeled(
+        &self,
+        env: &Environment,
+        labels: Option<&Json>,
+    ) -> crate::Result<()> {
+        // duplicate check first (and again atomically in create_rev):
+        // a duplicate must answer 409 even when its constraint set no
+        // longer resolves, and skipping the solver for duplicates is
+        // free
         if self.store.get(NS, &env.name).is_some() {
             return Err(crate::SubmarineError::AlreadyExists(format!(
                 "environment {}",
                 env.name
             )));
         }
-        let solver = DependencySolver::new(&self.index);
-        let resolved = solver.resolve(&env.dependencies)?;
-        let mut doc = env.to_json();
-        let lock: Vec<Json> = resolved
-            .iter()
-            .map(|(p, v)| Json::Str(format!("{p}={v}")))
+        let labels = match labels {
+            Some(l) => Some(crate::resource::sanitize_labels(l)?),
+            None => None,
+        };
+        let lock: Vec<Json> = self
+            .resolve_lock(env)?
+            .into_iter()
+            .map(Json::Str)
             .collect();
-        doc = doc.set("lock", Json::Arr(lock));
-        self.store.put(NS, &env.name, doc)
+        let doc = env.to_json().set("lock", Json::Arr(lock));
+        self.store
+            .create_rev(NS, &env.name, |rev| {
+                crate::resource::stamp_new(
+                    doc,
+                    &env.name,
+                    labels.as_ref(),
+                    rev,
+                )
+                .expect("labels sanitized above")
+            })
+            .map(|_| ())
     }
 
     pub fn get(&self, name: &str) -> crate::Result<Environment> {

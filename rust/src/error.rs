@@ -19,6 +19,12 @@ pub enum SubmarineError {
     Xla(String),
     Unauthorized(String),
     RateLimited(String),
+    /// Optimistic-concurrency failure: the caller's `If-Match`
+    /// resource_version no longer matches the stored document (HTTP 412).
+    PreconditionFailed(String),
+    /// A watch `since` revision that has been compacted out of the
+    /// change feed (HTTP 410): relist and watch from the fresh bookmark.
+    Gone(String),
 }
 
 impl fmt::Display for SubmarineError {
@@ -45,6 +51,10 @@ impl fmt::Display for SubmarineError {
             SubmarineError::RateLimited(m) => {
                 write!(f, "rate limited: {m}")
             }
+            SubmarineError::PreconditionFailed(m) => {
+                write!(f, "precondition failed: {m}")
+            }
+            SubmarineError::Gone(m) => write!(f, "gone: {m}"),
         }
     }
 }
@@ -89,6 +99,8 @@ impl SubmarineError {
             SubmarineError::ResourcesUnavailable(_) => 503,
             SubmarineError::Unauthorized(_) => 401,
             SubmarineError::RateLimited(_) => 429,
+            SubmarineError::PreconditionFailed(_) => 412,
+            SubmarineError::Gone(_) => 410,
             _ => 500,
         }
     }
@@ -110,6 +122,10 @@ impl SubmarineError {
             SubmarineError::Xla(_) => "Xla",
             SubmarineError::Unauthorized(_) => "Unauthorized",
             SubmarineError::RateLimited(_) => "RateLimited",
+            SubmarineError::PreconditionFailed(_) => {
+                "PreconditionFailed"
+            }
+            SubmarineError::Gone(_) => "Gone",
         }
     }
 }

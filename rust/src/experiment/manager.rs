@@ -15,7 +15,10 @@ const NS: &str = "experiment";
 /// Mirror a monitor-derived status into the experiment document (and
 /// thus the `status` secondary index). No-ops when the doc is gone or
 /// already current; storage failures are logged, not raised — the
-/// monitor remains the live authority.
+/// monitor remains the live authority. A real transition bumps
+/// `meta.resource_version` and lands on the change feed, which is what
+/// lets `?watch=1` clients observe the execution pipeline's lifecycle
+/// without polling.
 pub fn persist_status(
     store: &MetaStore,
     id: &str,
@@ -23,14 +26,16 @@ pub fn persist_status(
 ) {
     // atomic update: a concurrent delete() wins — a stale get-then-put
     // here must never resurrect a deleted experiment doc
-    let res = store.update(NS, id, |doc| {
+    let res = store.update_rev(NS, id, |doc, rev| {
         if doc.str_field("status") == Some(status.as_str()) {
-            None
+            Ok(None)
         } else {
-            Some(doc.clone().set(
+            let doc = doc.clone().set(
                 "status",
                 Json::Str(status.as_str().to_string()),
-            ))
+            );
+            // status churn moves resource_version, not generation
+            Ok(Some(crate::resource::stamp_update(doc, id, rev, false)))
         }
     });
     if let Err(e) = res {
@@ -56,21 +61,30 @@ impl ExperimentManager {
     ) -> ExperimentManager {
         // filtered v2 lists walk this instead of scanning the namespace
         store.define_index(NS, "status", true);
-        // Docs persisted before the status field existed would never
-        // enter the index and silently vanish from filtered lists;
-        // backfill them with the same default the monitor reports for
-        // unknown experiments.
+        // label selectors (`?label=k=v`) walk k=v postings over meta
+        store.define_index(NS, "meta.labels", false);
+        // Docs persisted before the status field (or the unified meta
+        // block) existed would vanish from filtered lists or carry no
+        // resource_version; backfill both with the defaults the rest
+        // of the system assumes.
         for (id, doc) in store.list(NS) {
-            if doc.str_field("status").is_none() {
+            let needs_status = doc.str_field("status").is_none();
+            let needs_meta = doc.get("meta").is_none();
+            if needs_status || needs_meta {
                 let accepted = ExperimentStatus::Accepted.as_str();
-                if let Err(e) = store.put(
-                    NS,
-                    &id,
-                    doc.set("status", Json::Str(accepted.into())),
-                ) {
+                let doc = if needs_status {
+                    doc.set("status", Json::Str(accepted.into()))
+                } else {
+                    doc
+                };
+                if let Err(e) = store.put_rev(NS, &id, |rev| {
+                    crate::resource::stamp_update(
+                        doc, &id, rev, false,
+                    )
+                }) {
                     crate::warnlog!(
                         "experiment-manager",
-                        "status backfill of {id} failed: {e}"
+                        "status/meta backfill of {id} failed: {e}"
                     );
                 }
             }
@@ -88,6 +102,17 @@ impl ExperimentManager {
 
     /// Accept + persist + submit. Returns the experiment id.
     pub fn submit(&self, spec: &ExperimentSpec) -> crate::Result<String> {
+        self.submit_labeled(spec, None)
+    }
+
+    /// [`Self::submit`] with client-supplied resource labels; the doc
+    /// is stamped with the unified `meta` block (name, labels,
+    /// resource_version, generation, timestamps).
+    pub fn submit_labeled(
+        &self,
+        spec: &ExperimentSpec,
+        labels: Option<&Json>,
+    ) -> crate::Result<String> {
         let id = crate::util::id::next("experiment");
         let doc = Json::obj()
             .set("id", Json::Str(id.clone()))
@@ -104,7 +129,16 @@ impl ExperimentManager {
                 "accepted_at",
                 Json::Num(crate::util::clock::unix_millis() as f64),
             );
-        self.store.put(NS, &id, doc)?;
+        // validate labels before the write so a bad label map is a
+        // clean 400 with nothing persisted
+        let labels = match labels {
+            Some(l) => Some(crate::resource::sanitize_labels(l)?),
+            None => None,
+        };
+        self.store.put_rev(NS, &id, |rev| {
+            crate::resource::stamp_new(doc, &id, labels.as_ref(), rev)
+                .expect("labels sanitized above")
+        })?;
         self.monitor.watch(&id, spec.total_containers());
         self.submitter.submit(&id, spec)?;
         crate::info!("experiment-manager", "accepted {id} ({})",
@@ -149,8 +183,14 @@ impl ExperimentManager {
             .unwrap_or(ExperimentStatus::Accepted)
     }
 
-    /// [`Self::status`] when the caller already holds the doc.
-    fn row_status(&self, id: &str, doc: &Json) -> ExperimentStatus {
+    /// [`Self::status`] when the caller already holds the doc (the
+    /// generic resource layer renders rows this way — one monitor
+    /// probe, no second store read).
+    pub fn status_of_doc(
+        &self,
+        id: &str,
+        doc: &Json,
+    ) -> ExperimentStatus {
         if self.monitor.is_watched(id) {
             return self.monitor.status(id);
         }
@@ -164,7 +204,7 @@ impl ExperimentManager {
             .list(NS)
             .into_iter()
             .map(|(id, doc)| {
-                let st = self.row_status(&id, &doc);
+                let st = self.status_of_doc(&id, &doc);
                 (id, st)
             })
             .collect()
@@ -183,7 +223,7 @@ impl ExperimentManager {
         let rows = |page: Vec<(String, Json)>| {
             page.into_iter()
                 .map(|(id, doc)| {
-                    let st = self.row_status(&id, &doc);
+                    let st = self.status_of_doc(&id, &doc);
                     (id, st)
                 })
                 .collect()

@@ -12,10 +12,12 @@ use std::collections::BTreeMap;
 use std::marker::PhantomData;
 
 /// Per-request context handed to handlers: the parsed request plus the
-/// path parameters captured by the trie router.
+/// path parameters captured by the trie router, and a side channel for
+/// response headers (`ETag` on resource reads).
 pub struct Ctx<'a> {
     pub req: &'a Request,
     pub params: &'a BTreeMap<String, String>,
+    resp_headers: std::cell::RefCell<Vec<(String, String)>>,
 }
 
 fn invalid(msg: String) -> crate::SubmarineError {
@@ -23,6 +25,30 @@ fn invalid(msg: String) -> crate::SubmarineError {
 }
 
 impl<'a> Ctx<'a> {
+    pub fn new(
+        req: &'a Request,
+        params: &'a BTreeMap<String, String>,
+    ) -> Ctx<'a> {
+        Ctx {
+            req,
+            params,
+            resp_headers: std::cell::RefCell::new(Vec::new()),
+        }
+    }
+
+    /// Attach a header to the (successful) response.
+    pub fn set_resp_header(&self, name: &str, value: &str) {
+        self.resp_headers
+            .borrow_mut()
+            .push((name.to_string(), value.to_string()));
+    }
+
+    /// Drain the headers handlers attached (called by the router after
+    /// a successful dispatch).
+    pub fn take_resp_headers(&self) -> Vec<(String, String)> {
+        std::mem::take(&mut *self.resp_headers.borrow_mut())
+    }
+
     /// Required path parameter (`:name` capture).
     pub fn param(&self, name: &str) -> crate::Result<&str> {
         self.params
@@ -145,11 +171,23 @@ pub struct Page {
 
 impl Page {
     /// Apply offset/limit to `items`; returns the page and the
-    /// pre-pagination total.
+    /// pre-pagination total. Prefer [`Page::window`] when the caller
+    /// has an iterator and a known total — this eager form forces the
+    /// full result vector to exist first.
     pub fn slice<T>(&self, items: Vec<T>) -> (Vec<T>, usize) {
         let total = items.len();
+        let (page, _) = self.window(items.into_iter(), total);
+        (page, total)
+    }
+
+    /// Iterator-based paging: materializes only the requested window,
+    /// so `?limit=10` over a 10k-key namespace clones 10 rows, not 10k.
+    pub fn window<T>(
+        &self,
+        items: impl Iterator<Item = T>,
+        total: usize,
+    ) -> (Vec<T>, usize) {
         let page = items
-            .into_iter()
             .skip(self.offset)
             .take(self.limit.unwrap_or(usize::MAX))
             .collect();
@@ -248,7 +286,7 @@ mod tests {
         req: &'a Request,
         params: &'a BTreeMap<String, String>,
     ) -> Ctx<'a> {
-        Ctx { req, params }
+        Ctx::new(req, params)
     }
 
     #[test]

@@ -43,6 +43,17 @@ impl Request {
     pub fn read_next<R: BufRead>(
         reader: &mut R,
     ) -> crate::Result<Option<Request>> {
+        Self::read_next_tracked(reader, &mut None)
+    }
+
+    /// [`Self::read_next`] that records the request path as soon as the
+    /// request line parses, even when the rest of the request errors
+    /// out — so transport-layer error responses (400/408) can pick the
+    /// envelope matching the API version the client was talking to.
+    pub fn read_next_tracked<R: BufRead>(
+        reader: &mut R,
+        seen_path: &mut Option<String>,
+    ) -> crate::Result<Option<Request>> {
         let mut line = String::new();
         if reader.read_line(&mut line)? == 0 {
             return Ok(None); // EOF before a request line
@@ -55,13 +66,14 @@ impl Request {
             .to_string();
         let target = parts.next().ok_or_else(|| bad("missing path"))?;
         let version = parts.next().unwrap_or("");
-        if !version.starts_with("HTTP/1.") {
-            return Err(bad("unsupported HTTP version"));
-        }
         let (path, query) = match target.split_once('?') {
             Some((p, q)) => (p.to_string(), parse_query(q)),
             None => (target.to_string(), BTreeMap::new()),
         };
+        *seen_path = Some(path.clone());
+        if !version.starts_with("HTTP/1.") {
+            return Err(bad("unsupported HTTP version"));
+        }
         let mut headers = BTreeMap::new();
         loop {
             let mut h = String::new();
@@ -186,14 +198,64 @@ fn bad(msg: &str) -> crate::SubmarineError {
     crate::SubmarineError::InvalidSpec(format!("http: {msg}"))
 }
 
+/// Sink handed to a [`StreamProducer`]: each `chunk` call becomes one
+/// HTTP/1.1 chunked-transfer frame, flushed immediately so watch
+/// clients see events as they happen.
+pub struct ChunkSink<'a> {
+    w: &'a mut dyn Write,
+}
+
+impl ChunkSink<'_> {
+    pub fn chunk(&mut self, data: &[u8]) -> std::io::Result<()> {
+        if data.is_empty() {
+            return Ok(()); // an empty chunk would terminate the stream
+        }
+        write!(self.w, "{:x}\r\n", data.len())?;
+        self.w.write_all(data)?;
+        self.w.write_all(b"\r\n")?;
+        self.w.flush()
+    }
+}
+
+/// Producer for a chunked-transfer streaming response body (the
+/// `?watch=1&stream=1` path). Invoked once with the live socket's
+/// chunk sink after the headers are written.
+pub type StreamProducer =
+    Box<dyn FnOnce(&mut ChunkSink<'_>) -> std::io::Result<()> + Send>;
+
+/// Interior slot for the stream producer so `Response` can keep its
+/// by-reference write API (the producer is taken on first write).
+pub struct StreamBody(pub std::sync::Mutex<Option<StreamProducer>>);
+
+impl StreamBody {
+    pub fn new(producer: StreamProducer) -> StreamBody {
+        StreamBody(std::sync::Mutex::new(Some(producer)))
+    }
+}
+
 /// An HTTP response.
-#[derive(Debug, Clone)]
 pub struct Response {
     pub status: u16,
     pub content_type: &'static str,
     pub body: Vec<u8>,
     /// Extra response headers (e.g. `Allow` on 405).
     pub headers: Vec<(String, String)>,
+    /// When set, the response body is produced incrementally with
+    /// chunked transfer-encoding and the connection closes after the
+    /// stream ends; `body` is ignored.
+    pub stream: Option<StreamBody>,
+}
+
+impl std::fmt::Debug for Response {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Response")
+            .field("status", &self.status)
+            .field("content_type", &self.content_type)
+            .field("body_len", &self.body.len())
+            .field("headers", &self.headers)
+            .field("stream", &self.stream.is_some())
+            .finish()
+    }
 }
 
 impl Response {
@@ -203,7 +265,27 @@ impl Response {
             content_type: "application/json",
             body: body.dump().into_bytes(),
             headers: Vec::new(),
+            stream: None,
         }
+    }
+
+    /// A chunked-transfer streaming response (see [`StreamProducer`]).
+    pub fn stream(
+        status: u16,
+        content_type: &'static str,
+        producer: StreamProducer,
+    ) -> Response {
+        Response {
+            status,
+            content_type,
+            body: Vec::new(),
+            headers: Vec::new(),
+            stream: Some(StreamBody::new(producer)),
+        }
+    }
+
+    pub fn is_stream(&self) -> bool {
+        self.stream.is_some()
     }
 
     pub fn ok(body: Json) -> Response {
@@ -249,6 +331,8 @@ impl Response {
             405 => "Method Not Allowed",
             408 => "Request Timeout",
             409 => "Conflict",
+            410 => "Gone",
+            412 => "Precondition Failed",
             429 => "Too Many Requests",
             503 => "Service Unavailable",
             _ => "Internal Server Error",
@@ -269,6 +353,34 @@ impl Response {
         keep_alive: bool,
         head_only: bool,
     ) -> std::io::Result<()> {
+        if let Some(stream) = &self.stream {
+            // Chunked transfer: the body length is unknown up front
+            // (watch events arrive over time). Streams always close
+            // the connection when done — the producer may have ended
+            // mid-event on error, so the socket can't be trusted for
+            // another framed exchange.
+            write!(
+                w,
+                "HTTP/1.1 {} {}\r\ncontent-type: {}\r\n\
+                 transfer-encoding: chunked\r\n",
+                self.status,
+                self.reason(),
+                self.content_type,
+            )?;
+            for (k, v) in &self.headers {
+                write!(w, "{k}: {v}\r\n")?;
+            }
+            write!(w, "connection: close\r\n\r\n")?;
+            if !head_only {
+                if let Some(producer) = stream.0.lock().unwrap().take()
+                {
+                    let mut sink = ChunkSink { w: &mut w };
+                    producer(&mut sink)?;
+                }
+                w.write_all(b"0\r\n\r\n")?;
+            }
+            return w.flush();
+        }
         write!(
             w,
             "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\n",
@@ -381,6 +493,49 @@ mod tests {
         assert!(text.contains("Allow: GET, HEAD\r\n"));
         assert!(text.contains("content-length: 9\r\n")); // "payload" + quotes
         assert!(text.ends_with("\r\n\r\n")); // no body after headers
+    }
+
+    #[test]
+    fn tracked_read_records_path_on_partial_requests() {
+        // body shorter than content-length: the read errors, but the
+        // path was already captured for envelope selection
+        let raw =
+            b"POST /api/v2/experiment HTTP/1.1\r\ncontent-length: 99\r\n\r\n{}";
+        let mut seen = None;
+        let mut reader = &raw[..];
+        let res = Request::read_next_tracked(&mut reader, &mut seen);
+        assert!(res.is_err());
+        assert_eq!(seen.as_deref(), Some("/api/v2/experiment"));
+        // bad version still yields the path
+        let raw = b"GET /api/v2/x SPDY/9\r\n\r\n";
+        let mut seen = None;
+        let mut reader = &raw[..];
+        assert!(
+            Request::read_next_tracked(&mut reader, &mut seen).is_err()
+        );
+        assert_eq!(seen.as_deref(), Some("/api/v2/x"));
+    }
+
+    #[test]
+    fn stream_response_writes_chunked_frames() {
+        let r = Response::stream(
+            200,
+            "application/x-json-stream",
+            Box::new(|sink| {
+                sink.chunk(b"hello\n")?;
+                sink.chunk(b"world\n")
+            }),
+        );
+        assert!(r.is_stream());
+        let mut buf = Vec::new();
+        r.write_to_opts(&mut buf, true, false).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.contains("transfer-encoding: chunked\r\n"));
+        // streams force connection: close even when keep-alive was asked
+        assert!(text.contains("connection: close\r\n"));
+        assert!(text.contains("6\r\nhello\n\r\n"));
+        assert!(text.contains("6\r\nworld\n\r\n"));
+        assert!(text.ends_with("0\r\n\r\n"));
     }
 
     #[test]

@@ -18,6 +18,7 @@
 pub mod handler;
 pub mod http;
 pub mod middleware;
+pub mod resource;
 pub mod router;
 pub mod server;
 pub mod trie;
@@ -26,6 +27,7 @@ pub mod v2;
 pub use handler::{typed, Body, Ctx, Handler, Page};
 pub use http::{Request, Response};
 pub use middleware::Middleware;
-pub use router::{Envelope, Router};
+pub use resource::{Caps, FilterSpec, ResourceKind};
+pub use router::{Envelope, RawHandler, Router};
 pub use server::Server;
 pub use v2::ApiConfig;

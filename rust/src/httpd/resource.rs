@@ -1,0 +1,798 @@
+//! The generic declarative resource engine (ISSUE 4 tentpole).
+//!
+//! The v2 API used to be four hand-rolled copies of the same CRUD
+//! shape. Here a kind describes itself once via [`ResourceKind`]
+//! (validate, render, lifecycle hooks, which indexed filters it
+//! exposes) and [`register_kind`] serves the whole declarative surface
+//! for it:
+//!
+//! - `GET /api/v2/{kind}` — list with pagination, indexed filters
+//!   (`?status=`, `?stage=`), label selectors (`?label=k=v,k2=v2`
+//!   walking the `meta.labels` index), and a `resource_version`
+//!   bookmark for starting watches;
+//! - `GET /api/v2/{kind}?watch=1&since=REV` — long-poll (default) or
+//!   chunked-stream (`&stream=1`) change feed, `410 Gone` + relist
+//!   guidance when `since` has been compacted out of the feed;
+//! - `POST` — create (`409` when the name exists);
+//! - `GET /{name}` — read with an `ETag` carrying
+//!   `meta.resource_version`;
+//! - `PUT`/`PATCH /{name}` — replace / RFC 7386 merge-patch, honoring
+//!   `If-Match` with `412` on stale revisions (checked atomically under
+//!   the storage shard lock: of two racing conditional writers exactly
+//!   one wins);
+//! - `DELETE /{name}` — conditional delete with kind teardown hooks.
+//!
+//! Scoped kinds (model versions live under `/model/:name`) plug in via
+//! [`ResourceKind::scope_index`].
+
+use super::handler::{typed, Ctx, Extract, Page};
+use super::http::{ChunkSink, Request, Response, StreamProducer};
+use super::router::{wrap_err, wrap_ok, Envelope, Router};
+use super::server::Services;
+use crate::resource::{
+    labels_of, merge_patch, resource_version, sanitize_labels,
+    stamp_update, strip_meta, strip_volatile, Selector,
+};
+use crate::storage::{Change, MetaStore, UpdateRev};
+use crate::util::json::Json;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Default long-poll window for `?watch=1`.
+const DEFAULT_WATCH_MS: u64 = 30_000;
+/// Hard cap on a single watch request's window.
+const MAX_WATCH_MS: u64 = 300_000;
+/// Max feed records pulled per wait round.
+const WATCH_BATCH: usize = 256;
+
+/// One indexed query filter a kind exposes on its list endpoint.
+#[derive(Debug)]
+pub struct FilterSpec {
+    /// Query parameter name (`status`, `stage`).
+    pub query: &'static str,
+    /// Secondary-index field backing it.
+    pub index_field: &'static str,
+}
+
+/// Which of the generic verbs a kind supports.
+#[derive(Debug, Clone, Copy)]
+pub struct Caps {
+    pub create: bool,
+    pub update: bool,
+    pub delete: bool,
+}
+
+/// A resource kind served generically under `/api/v2`. Implementations
+/// are ~30-60 lines of validation/rendering/hooks; the HTTP scaffolding
+/// (meta stamping, conditional writes, selectors, watches, pagination)
+/// lives here once.
+pub trait ResourceKind: Send + Sync {
+    /// URL segment under `/api/v2` — also the storage namespace.
+    fn kind(&self) -> &'static str;
+
+    /// Storage namespace (defaults to [`Self::kind`]).
+    fn ns(&self) -> &'static str {
+        self.kind()
+    }
+
+    /// Scoped collections: `Some(index_field)` puts the collection at
+    /// `/api/v2/{kind}/:name` with rows constrained to the scope via
+    /// that secondary index (model versions under their model name).
+    fn scope_index(&self) -> Option<&'static str> {
+        None
+    }
+
+    /// Storage-key prefix of a scope's rows (watch filtering).
+    fn scope_prefix(&self, scope: &str) -> String {
+        format!("{scope}@")
+    }
+
+    /// Addressable resource name for a storage key — what `meta.name`
+    /// and watch events carry: scoped kinds map the internal key back
+    /// to the coordinates the item endpoint accepts (model
+    /// `ctr@000003` -> `ctr/3`); unscoped kinds use the key as-is.
+    fn display_name(&self, key: &str) -> String {
+        key.to_string()
+    }
+
+    /// 404 the whole collection when the scope has no rows.
+    fn missing_scope_is_404(&self) -> bool {
+        false
+    }
+
+    fn caps(&self) -> Caps;
+
+    /// Indexed query filters the list endpoint accepts.
+    fn filters(&self) -> &'static [FilterSpec] {
+        &[]
+    }
+
+    /// Storage key of the item addressed by this request.
+    fn item_key(&self, ctx: &Ctx<'_>) -> crate::Result<String> {
+        Ok(ctx.param("name")?.to_string())
+    }
+
+    /// POST: validate the body and perform the create (through the
+    /// kind's manager, which stamps `meta`); returns the response
+    /// payload.
+    fn create(&self, s: &Services, body: &Json) -> crate::Result<Json> {
+        let _ = (s, body);
+        Err(crate::SubmarineError::InvalidSpec(format!(
+            "{} resources cannot be created via the API",
+            self.kind()
+        )))
+    }
+
+    /// List-item rendering.
+    fn render_row(&self, s: &Services, key: &str, doc: &Json) -> Json;
+
+    /// Single-document rendering (live status overlays etc.).
+    fn render_doc(&self, s: &Services, key: &str, doc: Json) -> Json {
+        let _ = (s, key);
+        doc
+    }
+
+    /// PUT/PATCH: build the full replacement document from the old doc
+    /// and the desired client state. `meta` handling is the engine's
+    /// job — implementations only deal with kind fields. Runs outside
+    /// the storage locks against a snapshot (expensive validation like
+    /// the environment dependency solver is fine); the engine commits
+    /// only if the document is still exactly that snapshot, retrying
+    /// otherwise.
+    fn apply_update(
+        &self,
+        s: &Services,
+        key: &str,
+        old: &Json,
+        desired: &Json,
+    ) -> crate::Result<Json>;
+
+    /// Post-commit hook for updates (e.g. demote the previous
+    /// Production model version).
+    fn post_update(
+        &self,
+        s: &Services,
+        key: &str,
+        doc: &Json,
+    ) -> crate::Result<()> {
+        let _ = (s, key, doc);
+        Ok(())
+    }
+
+    /// Teardown before the document is removed (kill containers, ...).
+    fn pre_delete(
+        &self,
+        s: &Services,
+        key: &str,
+        doc: &Json,
+    ) -> crate::Result<()> {
+        let _ = (s, key, doc);
+        Ok(())
+    }
+
+    /// Whether [`Self::pre_delete`] has side effects that themselves
+    /// bump the document's revision (killing an experiment persists a
+    /// status). Teardown-free kinds get a fully atomic
+    /// `If-Match`-checked delete; teardown kinds are checked against
+    /// the version the client saw before teardown ran.
+    fn delete_has_teardown(&self) -> bool {
+        false
+    }
+}
+
+fn invalid(msg: String) -> crate::SubmarineError {
+    crate::SubmarineError::InvalidSpec(msg)
+}
+
+fn not_found(kind: &dyn ResourceKind, key: &str) -> crate::SubmarineError {
+    crate::SubmarineError::NotFound(format!("{} {key}", kind.kind()))
+}
+
+fn etag_of(doc: &Json) -> String {
+    format!("\"{}\"", resource_version(doc))
+}
+
+/// Parsed `If-Match` header.
+enum Precondition {
+    /// `If-Match: *` — any existing version.
+    Any,
+    /// `If-Match: "REV"` — exactly this resource_version.
+    Rev(u64),
+}
+
+fn parse_if_match(req: &Request) -> crate::Result<Option<Precondition>> {
+    let Some(raw) = req.headers.get("if-match") else {
+        return Ok(None);
+    };
+    let t = raw.trim();
+    if t == "*" {
+        return Ok(Some(Precondition::Any));
+    }
+    let t = t.strip_prefix("W/").unwrap_or(t);
+    let t = t.trim_matches('"');
+    let rev: u64 = t.parse().map_err(|_| {
+        invalid(format!(
+            "If-Match must be a resource_version ETag or *, got {raw:?}"
+        ))
+    })?;
+    Ok(Some(Precondition::Rev(rev)))
+}
+
+fn check_precondition(
+    p: Option<&Precondition>,
+    doc: &Json,
+) -> crate::Result<()> {
+    if let Some(Precondition::Rev(want)) = p {
+        let have = resource_version(doc);
+        if *want != have {
+            return Err(crate::SubmarineError::PreconditionFailed(
+                format!(
+                    "resource_version mismatch: If-Match {want}, \
+                     current {have}"
+                ),
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Register the full generic surface for one kind.
+pub fn register_kind(
+    r: &mut Router,
+    s: &Arc<Services>,
+    kind: &Arc<dyn ResourceKind>,
+) {
+    let coll = match kind.scope_index() {
+        None => format!("/api/v2/{}", kind.kind()),
+        Some(_) => format!("/api/v2/{}/:name", kind.kind()),
+    };
+    let item = match kind.scope_index() {
+        None => format!("{coll}/:name"),
+        Some(_) => format!("{coll}/:version"),
+    };
+    let caps = kind.caps();
+
+    {
+        // list | watch (raw: watch escapes the enveloped-Json contract)
+        let s = Arc::clone(s);
+        let k = Arc::clone(kind);
+        r.route_raw(
+            "GET",
+            &coll,
+            Arc::new(move |ctx: &Ctx<'_>| -> Response {
+                let watching = matches!(
+                    ctx.query("watch"),
+                    Some("1") | Some("true")
+                );
+                if watching {
+                    watch_response(&s, &k, ctx)
+                } else {
+                    match list(&s, &k, ctx) {
+                        Ok(j) => wrap_ok(Envelope::V2, j),
+                        Err(e) => wrap_err(Envelope::V2, &e),
+                    }
+                }
+            }),
+        );
+    }
+    if caps.create {
+        let s = Arc::clone(s);
+        let k = Arc::clone(kind);
+        r.route(
+            "POST",
+            &coll,
+            Envelope::V2,
+            typed(move |_: &Ctx<'_>, body: Json| k.create(&s, &body)),
+        );
+    }
+    {
+        let s = Arc::clone(s);
+        let k = Arc::clone(kind);
+        r.route(
+            "GET",
+            &item,
+            Envelope::V2,
+            typed(move |ctx: &Ctx<'_>, _: ()| {
+                let key = k.item_key(ctx)?;
+                let doc = s
+                    .store
+                    .get(k.ns(), &key)
+                    .ok_or_else(|| not_found(&*k, &key))?;
+                ctx.set_resp_header("ETag", &etag_of(&doc));
+                Ok(k.render_doc(&s, &key, doc))
+            }),
+        );
+    }
+    if caps.update {
+        for (method, is_patch) in [("PUT", false), ("PATCH", true)] {
+            let s = Arc::clone(s);
+            let k = Arc::clone(kind);
+            r.route(
+                method,
+                &item,
+                Envelope::V2,
+                typed(move |ctx: &Ctx<'_>, body: Json| {
+                    write_resource(&s, &k, ctx, &body, is_patch)
+                }),
+            );
+        }
+    }
+    if caps.delete {
+        let s = Arc::clone(s);
+        let k = Arc::clone(kind);
+        r.route(
+            "DELETE",
+            &item,
+            Envelope::V2,
+            typed(move |ctx: &Ctx<'_>, _: ()| {
+                delete_resource(&s, &k, ctx)
+            }),
+        );
+    }
+}
+
+fn intersect(a: Vec<String>, b: Vec<String>) -> Vec<String> {
+    let set: std::collections::BTreeSet<&str> =
+        b.iter().map(String::as_str).collect();
+    a.into_iter().filter(|k| set.contains(k.as_str())).collect()
+}
+
+/// Generic list: candidate keys come from the scope / filter / selector
+/// indexes (intersected, all key-ordered); only the requested window
+/// of documents is ever materialized.
+fn list(
+    s: &Services,
+    kind: &Arc<dyn ResourceKind>,
+    ctx: &Ctx<'_>,
+) -> crate::Result<Json> {
+    let page = Page::extract(ctx)?;
+    let selector = match ctx.query("label") {
+        Some(raw) => Selector::parse(raw)?,
+        None => Selector::default(),
+    };
+    let ns = kind.ns();
+    let filters = kind.filters();
+    if page.status.is_some()
+        && !filters.iter().any(|f| f.query == "status")
+    {
+        return Err(invalid(format!(
+            "{}s have no status; remove the status query param",
+            kind.kind()
+        )));
+    }
+    let mut active: Vec<(&FilterSpec, String)> = Vec::new();
+    for f in filters {
+        let v = if f.query == "status" {
+            page.status.clone()
+        } else {
+            ctx.query(f.query).map(str::to_string)
+        };
+        if let Some(v) = v {
+            active.push((f, v));
+        }
+    }
+    // Bookmark BEFORE reading state: a write racing this list shows up
+    // again in a watch started from the bookmark (at-least-once), it
+    // can never fall silently between list and watch.
+    let bookmark = s.store.current_rev();
+    let mut candidates: Option<Vec<String>> = None;
+    if let Some(scope_field) = kind.scope_index() {
+        let scope = ctx.param("name")?;
+        let keys = s.store.index_lookup(ns, scope_field, scope)?;
+        if keys.is_empty() && kind.missing_scope_is_404() {
+            return Err(crate::SubmarineError::NotFound(format!(
+                "{} {scope}",
+                kind.kind()
+            )));
+        }
+        candidates = Some(keys);
+    }
+    for (f, v) in &active {
+        let keys = s.store.index_lookup(ns, f.index_field, v)?;
+        candidates = Some(match candidates {
+            None => keys,
+            Some(prev) => intersect(prev, keys),
+        });
+    }
+    if !selector.is_empty() {
+        // first pair narrows via the meta.labels index; remaining
+        // pairs are verified on the candidate docs below
+        let tokens = selector.tokens();
+        let keys =
+            s.store.index_lookup(ns, "meta.labels", &tokens[0])?;
+        candidates = Some(match candidates {
+            None => keys,
+            Some(prev) => intersect(prev, keys),
+        });
+    }
+    let (rows, total): (Vec<(String, Json)>, usize) = match candidates {
+        // unfiltered: page the primary map inside the store
+        None => s.store.page(ns, page.offset, page.limit),
+        Some(keys) => {
+            if selector.pairs.len() > 1 {
+                let mut matched: Vec<(String, Json)> = Vec::new();
+                for k in keys {
+                    if let Some(d) = s.store.get(ns, &k) {
+                        if selector.matches(&d) {
+                            matched.push((k, d));
+                        }
+                    }
+                }
+                let total = matched.len();
+                page.window(matched.into_iter(), total)
+            } else {
+                // page the key list; fetch only the window's docs
+                let total = keys.len();
+                let (win, _) = page.window(keys.into_iter(), total);
+                (
+                    win.into_iter()
+                        .filter_map(|k| {
+                            s.store.get(ns, &k).map(|d| (k, d))
+                        })
+                        .collect(),
+                    total,
+                )
+            }
+        }
+    };
+    let items: Vec<Json> = rows
+        .iter()
+        .map(|(k, d)| kind.render_row(s, k, d))
+        .collect();
+    Ok(page
+        .envelope(items, total)
+        .set("resource_version", Json::Num(bookmark as f64)))
+}
+
+/// How often a write retries validation when concurrent writers keep
+/// changing the document underneath it (single-doc contention is rare;
+/// this bound exists so the loop provably terminates).
+const WRITE_RETRIES: usize = 16;
+
+fn write_resource(
+    s: &Services,
+    kind: &Arc<dyn ResourceKind>,
+    ctx: &Ctx<'_>,
+    body: &Json,
+    is_patch: bool,
+) -> crate::Result<Json> {
+    let key = kind.item_key(ctx)?;
+    let expected = parse_if_match(ctx.req)?;
+    let ns = kind.ns();
+    for _ in 0..WRITE_RETRIES {
+        // All potentially expensive work — merge, kind validation
+        // (environment updates run the dependency solver), label
+        // sanitizing — happens here against a snapshot, OUTSIDE the
+        // storage locks, so one slow PUT cannot stall other writers
+        // or the change feed.
+        let snapshot = s
+            .store
+            .get(ns, &key)
+            .ok_or_else(|| not_found(&**kind, &key))?;
+        check_precondition(expected.as_ref(), &snapshot)?;
+        let desired = if is_patch {
+            merge_patch(&snapshot, body)
+        } else {
+            body.clone()
+        };
+        let new_doc = kind.apply_update(s, &key, &snapshot, &desired)?;
+        // labels: client-specified (meta.labels or top-level labels)
+        // or carried over from the stored doc
+        let new_labels = match desired
+            .at(&["meta", "labels"])
+            .or_else(|| desired.get("labels"))
+        {
+            Some(l) => sanitize_labels(l)?,
+            None => labels_of(&snapshot),
+        };
+        let old_meta =
+            snapshot.get("meta").cloned().unwrap_or_else(Json::obj);
+        let new_doc =
+            new_doc.set("meta", old_meta.set("labels", new_labels));
+        // no-op writes don't bump resource_version or spam the feed
+        let noop = strip_meta(&new_doc) == strip_meta(&snapshot)
+            && labels_of(&new_doc) == labels_of(&snapshot);
+
+        // Commit under the shard lock: the doc must still be exactly
+        // the snapshot we validated (this subsumes the If-Match check
+        // — of racing conditional writers exactly one wins); if a
+        // concurrent writer moved it, loop and revalidate.
+        let mut stale = false;
+        let mut written: Option<Json> = None;
+        let outcome = s.store.update_rev(ns, &key, |old, rev| {
+            if *old != snapshot {
+                stale = true;
+                return Ok(None);
+            }
+            if noop {
+                return Ok(None);
+            }
+            let bump = strip_volatile(&new_doc)
+                != strip_volatile(&snapshot);
+            let stamped = stamp_update(
+                new_doc.clone(),
+                &kind.display_name(&key),
+                rev,
+                bump,
+            );
+            written = Some(stamped.clone());
+            Ok(Some(stamped))
+        })?;
+        if stale {
+            continue;
+        }
+        return match outcome {
+            UpdateRev::Missing => Err(not_found(&**kind, &key)),
+            UpdateRev::Unchanged => {
+                // run the post-commit hook even for no-op writes: a
+                // prior attempt may have committed and then failed in
+                // the hook (e.g. Production demotion) — the retry
+                // must finish the job instead of being swallowed by
+                // no-op detection
+                kind.post_update(s, &key, &snapshot)?;
+                ctx.set_resp_header("ETag", &etag_of(&snapshot));
+                Ok(kind.render_doc(s, &key, snapshot))
+            }
+            UpdateRev::Written(rev) => {
+                let doc = written.expect("written doc recorded");
+                kind.post_update(s, &key, &doc)?;
+                ctx.set_resp_header("ETag", &format!("\"{rev}\""));
+                Ok(kind.render_doc(s, &key, doc))
+            }
+        };
+    }
+    Err(crate::SubmarineError::ResourcesUnavailable(format!(
+        "{} {key}: concurrent writers kept invalidating the update; \
+         retry",
+        kind.kind()
+    )))
+}
+
+fn delete_resource(
+    s: &Services,
+    kind: &Arc<dyn ResourceKind>,
+    ctx: &Ctx<'_>,
+) -> crate::Result<Json> {
+    let key = kind.item_key(ctx)?;
+    let expected = parse_if_match(ctx.req)?;
+    let ns = kind.ns();
+    if !kind.delete_has_teardown() {
+        // no side effects: check the precondition under the same
+        // shard lock as the removal — a racing PUT can never slip in
+        // between check and delete
+        let removed = s.store.delete_if(ns, &key, |old| {
+            check_precondition(expected.as_ref(), old)
+        })?;
+        if !removed {
+            return Err(not_found(&**kind, &key));
+        }
+        return Ok(Json::Bool(true));
+    }
+    let doc = s
+        .store
+        .get(ns, &key)
+        .ok_or_else(|| not_found(&**kind, &key))?;
+    // Teardown kinds: the If-Match revision is judged against the
+    // version the client saw — the teardown itself (killing a live
+    // experiment persists a terminal status) bumps the revision, and
+    // that self-inflicted bump must not fail the delete.
+    check_precondition(expected.as_ref(), &doc)?;
+    kind.pre_delete(s, &key, &doc)?;
+    let removed = s.store.delete_if(ns, &key, |now| {
+        // A conditional client still gets atomicity for everything
+        // the teardown does not touch: if a concurrent writer changed
+        // the spec or labels during the teardown window, their
+        // committed update must not be silently destroyed. Only
+        // status churn (the kill's own side effect) is tolerated.
+        if expected.is_some()
+            && (strip_volatile(now) != strip_volatile(&doc)
+                || labels_of(now) != labels_of(&doc))
+        {
+            return Err(crate::SubmarineError::PreconditionFailed(
+                "resource changed while delete teardown was running; \
+                 re-read and retry"
+                    .into(),
+            ));
+        }
+        Ok(())
+    })?;
+    if !removed {
+        return Err(not_found(&**kind, &key));
+    }
+    Ok(Json::Bool(true))
+}
+
+// ------------------------------------------------------------------ watch
+
+struct WatchParams {
+    since: Option<u64>,
+    timeout: Duration,
+    stream: bool,
+}
+
+fn watch_params(ctx: &Ctx<'_>) -> crate::Result<WatchParams> {
+    let since = match ctx.query("since") {
+        None => None,
+        Some(v) => Some(v.parse().map_err(|_| {
+            invalid("since must be a non-negative integer".into())
+        })?),
+    };
+    let timeout_ms = match ctx.query("timeout_ms") {
+        None => DEFAULT_WATCH_MS,
+        Some(v) => v
+            .parse::<u64>()
+            .map_err(|_| {
+                invalid("timeout_ms must be a positive integer".into())
+            })?
+            .clamp(1, MAX_WATCH_MS),
+    };
+    Ok(WatchParams {
+        since,
+        timeout: Duration::from_millis(timeout_ms),
+        stream: matches!(ctx.query("stream"), Some("1") | Some("true")),
+    })
+}
+
+/// One change-feed record in its wire shape.
+fn change_json(kind: &dyn ResourceKind, c: &Change) -> Json {
+    let ty = if c.doc.is_some() { "PUT" } else { "DELETE" };
+    let mut j = Json::obj()
+        .set("type", Json::Str(ty.to_string()))
+        .set("kind", Json::Str(kind.kind().to_string()))
+        .set("name", Json::Str(kind.display_name(&c.key)))
+        .set("resource_version", Json::Num(c.rev as f64));
+    if let Some(d) = &c.doc {
+        j = j.set("object", d.clone());
+    }
+    j
+}
+
+/// Long-poll: block until at least one matching event lands past
+/// `since` (or the window closes), then answer one enveloped batch
+/// with the `resource_version` to resume from.
+fn watch_long_poll(
+    store: &MetaStore,
+    ns: &str,
+    prefix: Option<&str>,
+    kind: &dyn ResourceKind,
+    since: u64,
+    timeout: Duration,
+) -> crate::Result<Json> {
+    let deadline = Instant::now() + timeout;
+    let mut cursor = since;
+    let mut events: Vec<Json> = Vec::new();
+    loop {
+        let now = Instant::now();
+        let remaining = if now >= deadline {
+            Duration::from_millis(0)
+        } else {
+            deadline - now
+        };
+        let batch =
+            store.wait_changes(ns, cursor, remaining, WATCH_BATCH)?;
+        if batch.is_empty() {
+            break; // window closed
+        }
+        cursor = batch.last().map(|c| c.rev).unwrap_or(cursor);
+        for c in &batch {
+            if let Some(p) = prefix {
+                if !c.key.starts_with(p) {
+                    continue;
+                }
+            }
+            events.push(change_json(kind, c));
+        }
+        if !events.is_empty() || Instant::now() >= deadline {
+            break;
+        }
+    }
+    Ok(Json::obj()
+        .set("events", Json::Arr(events))
+        .set("resource_version", Json::Num(cursor as f64)))
+}
+
+/// Chunked stream: one JSON line per event as it happens, a terminal
+/// `BOOKMARK` line carrying the resume revision, and an `ERROR` line
+/// (e.g. 410 after feed compaction) if the feed position is lost
+/// mid-stream.
+fn stream_watch(
+    store: &MetaStore,
+    ns: &str,
+    prefix: Option<&str>,
+    kind: &dyn ResourceKind,
+    since: u64,
+    timeout: Duration,
+    sink: &mut ChunkSink<'_>,
+) -> std::io::Result<()> {
+    let deadline = Instant::now() + timeout;
+    let mut cursor = since;
+    loop {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match store.wait_changes(ns, cursor, deadline - now, WATCH_BATCH)
+        {
+            Err(e) => {
+                let j = Json::obj()
+                    .set("type", Json::Str("ERROR".into()))
+                    .set("code", Json::Num(e.http_status() as f64))
+                    .set("message", Json::Str(e.to_string()));
+                sink.chunk(format!("{}\n", j.dump()).as_bytes())?;
+                return Ok(());
+            }
+            Ok(batch) => {
+                if batch.is_empty() {
+                    break; // window closed
+                }
+                cursor = batch.last().map(|c| c.rev).unwrap_or(cursor);
+                for c in &batch {
+                    if let Some(p) = prefix {
+                        if !c.key.starts_with(p) {
+                            continue;
+                        }
+                    }
+                    sink.chunk(
+                        format!("{}\n", change_json(&*kind, c).dump())
+                            .as_bytes(),
+                    )?;
+                }
+            }
+        }
+    }
+    let bookmark = Json::obj()
+        .set("type", Json::Str("BOOKMARK".into()))
+        .set("resource_version", Json::Num(cursor as f64));
+    sink.chunk(format!("{}\n", bookmark.dump()).as_bytes())
+}
+
+fn watch_response(
+    s: &Arc<Services>,
+    kind: &Arc<dyn ResourceKind>,
+    ctx: &Ctx<'_>,
+) -> Response {
+    let params = match watch_params(ctx) {
+        Ok(p) => p,
+        Err(e) => return wrap_err(Envelope::V2, &e),
+    };
+    let prefix = if kind.scope_index().is_some() {
+        match ctx.param("name") {
+            Ok(scope) => Some(kind.scope_prefix(scope)),
+            Err(e) => return wrap_err(Envelope::V2, &e),
+        }
+    } else {
+        None
+    };
+    // default: only future events (the client just listed)
+    let since = params.since.unwrap_or_else(|| s.store.current_rev());
+    if params.stream {
+        let store = Arc::clone(&s.store);
+        let ns = kind.ns().to_string();
+        let k = Arc::clone(kind);
+        let timeout = params.timeout;
+        let producer: StreamProducer = Box::new(move |sink| {
+            stream_watch(
+                &store,
+                &ns,
+                prefix.as_deref(),
+                &*k,
+                since,
+                timeout,
+                sink,
+            )
+        });
+        Response::stream(200, "application/x-json-stream", producer)
+    } else {
+        match watch_long_poll(
+            &s.store,
+            kind.ns(),
+            prefix.as_deref(),
+            &**kind,
+            since,
+            params.timeout,
+        ) {
+            Ok(result) => wrap_ok(Envelope::V2, result),
+            Err(e) => wrap_err(Envelope::V2, &e),
+        }
+    }
+}

@@ -88,9 +88,29 @@ pub fn error_response(path: &str, e: &crate::SubmarineError) -> Response {
     wrap_err(envelope_of_path(path), e)
 }
 
-struct RouteEntry {
-    handler: Arc<dyn Handler>,
-    envelope: Envelope,
+/// A handler that owns its full [`Response`] — no envelope wrapping.
+/// The watch endpoints use this: a long-poll batch or a chunked stream
+/// doesn't fit the enveloped-`Json` contract. Closures
+/// `Fn(&Ctx) -> Response` qualify.
+pub trait RawHandler: Send + Sync {
+    fn handle(&self, ctx: &Ctx<'_>) -> Response;
+}
+
+impl<F> RawHandler for F
+where
+    F: Fn(&Ctx<'_>) -> Response + Send + Sync,
+{
+    fn handle(&self, ctx: &Ctx<'_>) -> Response {
+        self(ctx)
+    }
+}
+
+enum RouteEntry {
+    Json {
+        handler: Arc<dyn Handler>,
+        envelope: Envelope,
+    },
+    Raw(Arc<dyn RawHandler>),
 }
 
 type MethodMap = BTreeMap<String, RouteEntry>;
@@ -141,8 +161,23 @@ impl Router {
             .get_or_insert_with(MethodMap::new);
         slot.insert(
             method.to_uppercase(),
-            RouteEntry { handler, envelope },
+            RouteEntry::Json { handler, envelope },
         );
+    }
+
+    /// Register a raw handler that builds its own [`Response`]
+    /// (streaming/watch endpoints; middleware still applies).
+    pub fn route_raw(
+        &mut self,
+        method: &str,
+        pattern: &str,
+        handler: Arc<dyn RawHandler>,
+    ) {
+        let slot = self
+            .trie
+            .entry(pattern)
+            .get_or_insert_with(MethodMap::new);
+        slot.insert(method.to_uppercase(), RouteEntry::Raw(handler));
     }
 
     pub fn dispatch(&self, req: &Request) -> Response {
@@ -177,12 +212,21 @@ fn dispatch_method(
         (method == "HEAD").then(|| methods.get("GET")).flatten()
     });
     match entry {
-        Some(e) => {
-            let ctx = Ctx { req, params };
-            match e.handler.handle(&ctx) {
-                Ok(result) => wrap_ok(e.envelope, result),
-                Err(err) => wrap_err(e.envelope, &err),
+        Some(RouteEntry::Json { handler, envelope }) => {
+            let ctx = Ctx::new(req, params);
+            match handler.handle(&ctx) {
+                Ok(result) => {
+                    let mut resp = wrap_ok(*envelope, result);
+                    for (k, v) in ctx.take_resp_headers() {
+                        resp = resp.with_header(&k, &v);
+                    }
+                    resp
+                }
+                Err(err) => wrap_err(*envelope, &err),
             }
+        }
+        Some(RouteEntry::Raw(handler)) => {
+            handler.handle(&Ctx::new(req, params))
         }
         None => {
             let mut allow: Vec<String> =

@@ -9,7 +9,7 @@
 //! the per-connection request cap / idle timeout is hit.
 
 use super::http::{Request, Response};
-use super::router::Router;
+use super::router::{envelope_of_path, error_json, Router};
 use super::v2::{build_api, ApiConfig};
 use crate::environment::EnvironmentManager;
 use crate::experiment::manager::ExperimentManager;
@@ -296,12 +296,16 @@ fn handle(router: &Router, stream: TcpStream) {
             Ok(_) => {}
             Err(_) => break, // idle timeout or dead socket
         }
-        match Request::read_next(&mut reader) {
+        let mut seen_path: Option<String> = None;
+        match Request::read_next_tracked(&mut reader, &mut seen_path) {
             Ok(None) => break, // peer closed between requests
             Ok(Some(req)) => {
                 let resp = router.dispatch(&req);
+                // A streaming response (watch) owns the socket until it
+                // ends and always closes — its length is unframed.
                 let keep = req.wants_keep_alive()
-                    && served + 1 < MAX_KEEPALIVE_REQUESTS;
+                    && served + 1 < MAX_KEEPALIVE_REQUESTS
+                    && !resp.is_stream();
                 let head_only = req.method.eq_ignore_ascii_case("HEAD");
                 if resp
                     .write_to_opts(&stream, keep, head_only)
@@ -314,8 +318,11 @@ fn handle(router: &Router, stream: TcpStream) {
                 }
             }
             Err(e) => {
-                // the request started arriving but didn't finish in
-                // time (trickled body) or didn't parse
+                // The request started arriving but didn't finish in
+                // time (trickled body) or didn't parse. The request
+                // line may already have revealed which API version the
+                // client speaks — answer in that envelope rather than
+                // defaulting to the flat v1 shape.
                 let timed_out = matches!(
                     &e,
                     crate::SubmarineError::Io(io) if matches!(
@@ -324,10 +331,23 @@ fn handle(router: &Router, stream: TcpStream) {
                             | std::io::ErrorKind::TimedOut
                     )
                 );
+                let envelope = envelope_of_path(
+                    seen_path.as_deref().unwrap_or(""),
+                );
                 let resp = if timed_out {
-                    Response::error(408, "request incomplete")
+                    error_json(
+                        envelope,
+                        408,
+                        "Timeout",
+                        "request incomplete",
+                    )
                 } else {
-                    Response::error(400, &e.to_string())
+                    error_json(
+                        envelope,
+                        400,
+                        "InvalidSpec",
+                        &e.to_string(),
+                    )
                 };
                 let _ = resp.write_to_opts(&stream, false, false);
                 break;

@@ -1,17 +1,28 @@
-//! The REST API surface: every endpoint as a typed handler, registered
-//! under `/api/v2` (v2 envelope, pagination, filtering) with `/api/v1`
-//! kept as a thin compat shim over the same handlers and managers.
+//! The REST API surface.
 //!
-//! See `docs/API.md` for the full route table.
+//! `/api/v2` is a *declarative resource API*: the four resource kinds
+//! (experiment, template, environment, model version) are described as
+//! [`ResourceKind`] implementations — each ~40 lines of validation,
+//! rendering, and lifecycle hooks — and registered through the generic
+//! engine in [`super::resource`], which serves list/get/create/update/
+//! patch/delete, `ETag`/`If-Match` optimistic concurrency, label
+//! selectors, and `?watch=1` change streams for all of them from one
+//! code path. Non-CRUD verbs (kill, events, metrics, tune, template
+//! submit, cluster status) remain explicit routes, and `/api/v1` stays
+//! a thin compat shim over the same managers.
+//!
+//! See `docs/API.md` for the full route table and protocol details.
 
-use super::handler::{typed, Body, Ctx, Handler, Page};
+use super::handler::{typed, Body, Ctx, Handler};
 use super::middleware::{
     AuthMiddleware, LogMiddleware, MetricsMiddleware, RateLimitMiddleware,
 };
+use super::resource::{register_kind, Caps, FilterSpec, ResourceKind};
 use super::router::{Envelope, Router};
 use super::server::Services;
 use crate::environment::Environment;
 use crate::experiment::spec::ExperimentSpec;
+use crate::model::Stage;
 use crate::template::Template;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -59,24 +70,315 @@ fn both(r: &mut Router, method: &str, tail: &str, h: Arc<dyn Handler>) {
     r.route_shared(method, &format!("/api/v2{tail}"), Envelope::V2, h);
 }
 
-fn experiment_item(id: String, status: &str) -> Json {
-    Json::obj()
-        .set("experimentId", Json::Str(id))
-        .set("status", Json::Str(status.to_string()))
+fn experiment_item(id: &str, status: &str, doc: &Json) -> Json {
+    let mut item = Json::obj()
+        .set("experimentId", Json::Str(id.to_string()))
+        .set("status", Json::Str(status.to_string()));
+    let labels = crate::resource::labels_of(doc);
+    if labels.as_obj().map(|o| !o.is_empty()).unwrap_or(false) {
+        item = item.set("labels", labels);
+    }
+    let rv = crate::resource::resource_version(doc);
+    if rv > 0 {
+        item = item.set("resource_version", Json::Num(rv as f64));
+    }
+    item
 }
 
-/// Lists without a status dimension reject `?status=` instead of
-/// silently returning unfiltered data.
-fn reject_status_filter(page: &Page, what: &str) -> crate::Result<()> {
-    if page.status.is_some() {
-        return Err(crate::SubmarineError::InvalidSpec(format!(
-            "{what} have no status; remove the status query param"
-        )));
-    }
-    Ok(())
+/// Labels riding on a client payload: `meta.labels` (the doc shape) or
+/// a top-level `labels` convenience field.
+fn labels_in(body: &Json) -> Option<&Json> {
+    body.at(&["meta", "labels"]).or_else(|| body.get("labels"))
 }
+
+// ---------------------------------------------------------------- kinds
+
+/// Experiments: created through the manager (which submits to the
+/// execution pipeline), spec replaceable, teardown kills containers.
+struct ExperimentKind;
+
+impl ResourceKind for ExperimentKind {
+    fn kind(&self) -> &'static str {
+        "experiment"
+    }
+    fn caps(&self) -> Caps {
+        Caps {
+            create: true,
+            update: true,
+            delete: true,
+        }
+    }
+    fn filters(&self) -> &'static [FilterSpec] {
+        static F: [FilterSpec; 1] = [FilterSpec {
+            query: "status",
+            index_field: "status",
+        }];
+        &F
+    }
+    fn create(&self, s: &Services, body: &Json) -> crate::Result<Json> {
+        let spec = ExperimentSpec::from_json(body)?;
+        let id = s.experiments.submit_labeled(&spec, labels_in(body))?;
+        Ok(Json::obj().set("experimentId", Json::Str(id)))
+    }
+    fn render_row(&self, s: &Services, key: &str, doc: &Json) -> Json {
+        let st = s.experiments.status_of_doc(key, doc);
+        experiment_item(key, st.as_str(), doc)
+    }
+    fn render_doc(&self, s: &Services, key: &str, doc: Json) -> Json {
+        let st = s.experiments.status_of_doc(key, &doc);
+        doc.set("status", Json::Str(st.as_str().to_string()))
+    }
+    fn apply_update(
+        &self,
+        _s: &Services,
+        _key: &str,
+        old: &Json,
+        desired: &Json,
+    ) -> crate::Result<Json> {
+        // only the spec is client-mutable; id/status/submitter/
+        // accepted_at are server-managed and carried over
+        let spec_json = desired.get("spec").ok_or_else(|| {
+            crate::SubmarineError::InvalidSpec(
+                "experiment update needs a spec field".into(),
+            )
+        })?;
+        let spec = ExperimentSpec::from_json(spec_json)?;
+        Ok(old.clone().set("spec", spec.to_json()))
+    }
+    fn pre_delete(
+        &self,
+        s: &Services,
+        key: &str,
+        doc: &Json,
+    ) -> crate::Result<()> {
+        // stop containers first; the terminal status lands in the doc
+        // (and the change feed) before the tombstone
+        if !s.experiments.status_of_doc(key, doc).is_terminal() {
+            s.experiments.kill(key)?;
+        }
+        Ok(())
+    }
+    fn delete_has_teardown(&self) -> bool {
+        true
+    }
+}
+
+/// Predefined templates (paper §3.2.3): register-once documents whose
+/// content may be replaced wholesale.
+struct TemplateKind;
+
+impl ResourceKind for TemplateKind {
+    fn kind(&self) -> &'static str {
+        "template"
+    }
+    fn caps(&self) -> Caps {
+        Caps {
+            create: true,
+            update: true,
+            delete: true,
+        }
+    }
+    fn create(&self, s: &Services, body: &Json) -> crate::Result<Json> {
+        let t = Template::from_json(body)?;
+        s.templates.register_labeled(&t, labels_in(body))?;
+        Ok(Json::Bool(true))
+    }
+    fn render_row(&self, _s: &Services, key: &str, _doc: &Json) -> Json {
+        Json::Str(key.to_string())
+    }
+    fn apply_update(
+        &self,
+        _s: &Services,
+        key: &str,
+        _old: &Json,
+        desired: &Json,
+    ) -> crate::Result<Json> {
+        let t = Template::from_json(desired)?;
+        if t.name != key {
+            return Err(crate::SubmarineError::InvalidSpec(format!(
+                "template name is immutable ({key} != {})",
+                t.name
+            )));
+        }
+        Ok(t.to_json())
+    }
+}
+
+/// Environments (paper §3.2.1): the dependency lock is re-resolved when
+/// the constraint set changes, so an update can never leave a stale
+/// lock behind.
+struct EnvironmentKind;
+
+impl ResourceKind for EnvironmentKind {
+    fn kind(&self) -> &'static str {
+        "environment"
+    }
+    fn caps(&self) -> Caps {
+        Caps {
+            create: true,
+            update: true,
+            delete: true,
+        }
+    }
+    fn create(&self, s: &Services, body: &Json) -> crate::Result<Json> {
+        let env = Environment::from_json(body)?;
+        s.environments.register_labeled(&env, labels_in(body))?;
+        Ok(Json::Bool(true))
+    }
+    fn render_row(&self, _s: &Services, key: &str, _doc: &Json) -> Json {
+        Json::Str(key.to_string())
+    }
+    fn apply_update(
+        &self,
+        s: &Services,
+        key: &str,
+        old: &Json,
+        desired: &Json,
+    ) -> crate::Result<Json> {
+        let env = Environment::from_json(desired)?;
+        if env.name != key {
+            return Err(crate::SubmarineError::InvalidSpec(format!(
+                "environment name is immutable ({key} != {})",
+                env.name
+            )));
+        }
+        let mut doc = env.to_json();
+        let deps_changed =
+            old.get("dependencies") != doc.get("dependencies");
+        if deps_changed {
+            let lock: Vec<Json> = s
+                .environments
+                .resolve_lock(&env)?
+                .into_iter()
+                .map(Json::Str)
+                .collect();
+            doc = doc.set("lock", Json::Arr(lock));
+        } else {
+            doc = doc.set(
+                "lock",
+                old.get("lock")
+                    .cloned()
+                    .unwrap_or_else(|| Json::Arr(Vec::new())),
+            );
+        }
+        Ok(doc)
+    }
+}
+
+/// Model versions (paper §4.2): registered by the training pipeline,
+/// scoped under their model name, mutable only in stage (checked
+/// transitions) and labels.
+struct ModelKind;
+
+impl ResourceKind for ModelKind {
+    fn kind(&self) -> &'static str {
+        "model"
+    }
+    fn scope_index(&self) -> Option<&'static str> {
+        Some("name")
+    }
+    fn missing_scope_is_404(&self) -> bool {
+        true
+    }
+    fn caps(&self) -> Caps {
+        Caps {
+            create: false,
+            update: true,
+            delete: false,
+        }
+    }
+    fn filters(&self) -> &'static [FilterSpec] {
+        static F: [FilterSpec; 1] = [FilterSpec {
+            query: "stage",
+            index_field: "stage",
+        }];
+        &F
+    }
+    fn item_key(&self, ctx: &Ctx<'_>) -> crate::Result<String> {
+        let name = ctx.param("name")?;
+        let version: u32 =
+            ctx.param("version")?.parse().map_err(|_| {
+                crate::SubmarineError::InvalidSpec(
+                    "model version must be a number".into(),
+                )
+            })?;
+        Ok(crate::model::ModelRegistry::doc_key(name, version))
+    }
+    fn display_name(&self, key: &str) -> String {
+        crate::model::ModelRegistry::display_name(key)
+    }
+    fn render_row(&self, _s: &Services, _key: &str, doc: &Json) -> Json {
+        model_version_json_from_doc(doc)
+    }
+    fn apply_update(
+        &self,
+        _s: &Services,
+        _key: &str,
+        old: &Json,
+        desired: &Json,
+    ) -> crate::Result<Json> {
+        // only `stage` (checked transition) and labels are mutable
+        let from = old
+            .str_field("stage")
+            .and_then(Stage::parse)
+            .unwrap_or(Stage::None);
+        let to = match desired.str_field("stage") {
+            None => from,
+            Some(raw) => Stage::parse(raw).ok_or_else(|| {
+                crate::SubmarineError::InvalidSpec(format!(
+                    "unknown stage {raw:?}"
+                ))
+            })?,
+        };
+        if to != from && !from.can_transition(to) {
+            return Err(crate::SubmarineError::InvalidSpec(format!(
+                "illegal stage transition {} -> {}",
+                from.as_str(),
+                to.as_str()
+            )));
+        }
+        Ok(old
+            .clone()
+            .set("stage", Json::Str(to.as_str().to_string())))
+    }
+    fn post_update(
+        &self,
+        s: &Services,
+        key: &str,
+        doc: &Json,
+    ) -> crate::Result<()> {
+        // only one Production version per model; racing promotions
+        // resolve to the one with the higher resource_version
+        if doc.str_field("stage") == Some(Stage::Production.as_str()) {
+            if let Some(name) = doc.str_field("name") {
+                s.models.demote_other_production(
+                    name,
+                    key,
+                    crate::resource::resource_version(doc),
+                )?;
+            }
+        }
+        Ok(())
+    }
+}
+
+fn kinds() -> Vec<Arc<dyn ResourceKind>> {
+    vec![
+        Arc::new(ExperimentKind),
+        Arc::new(TemplateKind),
+        Arc::new(EnvironmentKind),
+        Arc::new(ModelKind),
+    ]
+}
+
+// ---------------------------------------------------------------- routes
 
 fn register_routes(r: &mut Router, s: Arc<Services>) {
+    // ---- the declarative v2 resource surface -----------------------
+    for kind in kinds() {
+        register_kind(r, &s, &kind);
+    }
+
     // ---- health / cluster status -----------------------------------
     {
         // health + (when the execution engine is attached) the live
@@ -107,92 +409,15 @@ fn register_routes(r: &mut Router, s: Arc<Services>) {
         );
     }
 
-    // ---- experiments -----------------------------------------------
+    // ---- experiment verbs beyond CRUD ------------------------------
     {
         let s = Arc::clone(&s);
         both(
             r,
             "POST",
-            "/experiment",
-            Arc::new(typed(
-                move |_: &Ctx<'_>, Body(spec): Body<ExperimentSpec>| {
-                    let id = s.experiments.submit(&spec)?;
-                    Ok(Json::obj().set("experimentId", Json::Str(id)))
-                },
-            )),
-        );
-    }
-    {
-        // v1 list: the seed's bare array (compat shim).
-        let s = Arc::clone(&s);
-        r.route(
-            "GET",
-            "/api/v1/experiment",
-            Envelope::V1,
-            typed(move |_: &Ctx<'_>, _: ()| {
-                Ok(s.experiments
-                    .list()
-                    .into_iter()
-                    .map(|(id, st)| experiment_item(id, st.as_str()))
-                    .collect::<Vec<Json>>())
-            }),
-        );
-    }
-    {
-        // v2 list: pagination + status filter, served by the storage
-        // engine's `status` secondary index instead of scan-and-filter.
-        let s = Arc::clone(&s);
-        r.route(
-            "GET",
-            "/api/v2/experiment",
-            Envelope::V2,
-            typed(move |_: &Ctx<'_>, page: Page| {
-                let (rows, total) = s.experiments.list_page(
-                    page.status.as_deref(),
-                    page.offset,
-                    page.limit,
-                );
-                let items = rows
-                    .into_iter()
-                    .map(|(id, st)| experiment_item(id, st.as_str()))
-                    .collect();
-                Ok(page.envelope(items, total))
-            }),
-        );
-    }
-    {
-        let s = Arc::clone(&s);
-        both(
-            r,
-            "GET",
-            "/experiment/:id",
+            "/experiment/:name/kill",
             Arc::new(typed(move |ctx: &Ctx<'_>, _: ()| {
-                s.experiments.get(ctx.param("id")?)
-            })),
-        );
-    }
-    {
-        let s = Arc::clone(&s);
-        both(
-            r,
-            "DELETE",
-            "/experiment/:id",
-            Arc::new(typed(move |ctx: &Ctx<'_>, _: ()| {
-                let id = ctx.param("id")?;
-                s.experiments.kill(id)?;
-                s.experiments.delete(id)?;
-                Ok(true)
-            })),
-        );
-    }
-    {
-        let s = Arc::clone(&s);
-        both(
-            r,
-            "POST",
-            "/experiment/:id/kill",
-            Arc::new(typed(move |ctx: &Ctx<'_>, _: ()| {
-                s.experiments.kill(ctx.param("id")?)?;
+                s.experiments.kill(ctx.param("name")?)?;
                 Ok(true)
             })),
         );
@@ -205,9 +430,9 @@ fn register_routes(r: &mut Router, s: Arc<Services>) {
         both(
             r,
             "GET",
-            "/experiment/:id/events",
+            "/experiment/:name/events",
             Arc::new(typed(move |ctx: &Ctx<'_>, _: ()| {
-                let id = ctx.param("id")?;
+                let id = ctx.param("name")?;
                 s.experiments.get(id)?; // 404 for unknown ids
                 Ok(s.monitor
                     .events(id)
@@ -236,11 +461,11 @@ fn register_routes(r: &mut Router, s: Arc<Services>) {
         both(
             r,
             "GET",
-            "/experiment/:id/metrics",
+            "/experiment/:name/metrics",
             Arc::new(typed(move |ctx: &Ctx<'_>, _: ()| {
                 let metric = ctx.query("metric").unwrap_or("loss");
                 let series =
-                    s.metrics.series(ctx.param("id")?, metric);
+                    s.metrics.series(ctx.param("name")?, metric);
                 Ok(series
                     .iter()
                     .map(|pt| {
@@ -249,65 +474,6 @@ fn register_routes(r: &mut Router, s: Arc<Services>) {
                             .set("value", Json::Num(pt.value))
                     })
                     .collect::<Vec<Json>>())
-            })),
-        );
-    }
-
-    // ---- templates (paper §3.2.3) ----------------------------------
-    {
-        let s = Arc::clone(&s);
-        both(
-            r,
-            "POST",
-            "/template",
-            Arc::new(typed(
-                move |_: &Ctx<'_>, Body(t): Body<Template>| {
-                    s.templates.register(&t)?;
-                    Ok(true)
-                },
-            )),
-        );
-    }
-    {
-        let s = Arc::clone(&s);
-        r.route(
-            "GET",
-            "/api/v1/template",
-            Envelope::V1,
-            typed(move |_: &Ctx<'_>, _: ()| {
-                Ok(s.templates
-                    .list()
-                    .into_iter()
-                    .map(Json::Str)
-                    .collect::<Vec<Json>>())
-            }),
-        );
-    }
-    {
-        let s = Arc::clone(&s);
-        r.route(
-            "GET",
-            "/api/v2/template",
-            Envelope::V2,
-            typed(move |_: &Ctx<'_>, page: Page| {
-                reject_status_filter(&page, "templates")?;
-                let (items, total) =
-                    s.templates.list_page(page.offset, page.limit);
-                Ok(page.envelope(
-                    items.into_iter().map(Json::Str).collect(),
-                    total,
-                ))
-            }),
-        );
-    }
-    {
-        let s = Arc::clone(&s);
-        both(
-            r,
-            "GET",
-            "/template/:name",
-            Arc::new(typed(move |ctx: &Ctx<'_>, _: ()| {
-                Ok(s.templates.get(ctx.param("name")?)?.to_json())
             })),
         );
     }
@@ -350,19 +516,121 @@ fn register_routes(r: &mut Router, s: Arc<Services>) {
         );
     }
 
-    // ---- environments (paper §3.2.1) -------------------------------
+    // ---- /api/v1 compat shim ---------------------------------------
+    register_v1_shim(r, s);
+}
+
+/// The seed-era `/api/v1` surface: bare arrays, flat envelopes, no
+/// concurrency control. Kept as a thin layer over the same managers.
+fn register_v1_shim(r: &mut Router, s: Arc<Services>) {
     {
         let s = Arc::clone(&s);
-        both(
-            r,
+        r.route(
             "POST",
-            "/environment",
-            Arc::new(typed(
-                move |_: &Ctx<'_>, Body(env): Body<Environment>| {
-                    s.environments.register(&env)?;
-                    Ok(true)
-                },
-            )),
+            "/api/v1/experiment",
+            Envelope::V1,
+            typed(move |_: &Ctx<'_>, Body(spec): Body<ExperimentSpec>| {
+                let id = s.experiments.submit(&spec)?;
+                Ok(Json::obj().set("experimentId", Json::Str(id)))
+            }),
+        );
+    }
+    {
+        // v1 list: the seed's bare array.
+        let s = Arc::clone(&s);
+        r.route(
+            "GET",
+            "/api/v1/experiment",
+            Envelope::V1,
+            typed(move |_: &Ctx<'_>, _: ()| {
+                Ok(s.experiments
+                    .list()
+                    .into_iter()
+                    .map(|(id, st)| {
+                        Json::obj()
+                            .set("experimentId", Json::Str(id))
+                            .set(
+                                "status",
+                                Json::Str(st.as_str().to_string()),
+                            )
+                    })
+                    .collect::<Vec<Json>>())
+            }),
+        );
+    }
+    {
+        let s = Arc::clone(&s);
+        r.route(
+            "GET",
+            "/api/v1/experiment/:name",
+            Envelope::V1,
+            typed(move |ctx: &Ctx<'_>, _: ()| {
+                s.experiments.get(ctx.param("name")?)
+            }),
+        );
+    }
+    {
+        let s = Arc::clone(&s);
+        r.route(
+            "DELETE",
+            "/api/v1/experiment/:name",
+            Envelope::V1,
+            typed(move |ctx: &Ctx<'_>, _: ()| {
+                let id = ctx.param("name")?;
+                s.experiments.kill(id)?;
+                s.experiments.delete(id)?;
+                Ok(true)
+            }),
+        );
+    }
+    {
+        let s = Arc::clone(&s);
+        r.route(
+            "POST",
+            "/api/v1/template",
+            Envelope::V1,
+            typed(move |_: &Ctx<'_>, Body(t): Body<Template>| {
+                s.templates.register(&t)?;
+                Ok(true)
+            }),
+        );
+    }
+    {
+        let s = Arc::clone(&s);
+        r.route(
+            "GET",
+            "/api/v1/template",
+            Envelope::V1,
+            typed(move |_: &Ctx<'_>, _: ()| {
+                Ok(s.templates
+                    .list()
+                    .into_iter()
+                    .map(Json::Str)
+                    .collect::<Vec<Json>>())
+            }),
+        );
+    }
+    {
+        let s = Arc::clone(&s);
+        r.route(
+            "GET",
+            "/api/v1/template/:name",
+            Envelope::V1,
+            typed(move |ctx: &Ctx<'_>, _: ()| {
+                Ok(s.templates.get(ctx.param("name")?)?.to_json())
+            }),
+        );
+    }
+    {
+        let s = Arc::clone(&s);
+        r.route(
+            "POST",
+            "/api/v1/environment",
+            Envelope::V1,
+            typed(move |_: &Ctx<'_>, Body(env): Body<Environment>| {
+                s.environments.register(&env)?;
+                Ok(true)
+            }),
         );
     }
     {
@@ -384,26 +652,9 @@ fn register_routes(r: &mut Router, s: Arc<Services>) {
         let s = Arc::clone(&s);
         r.route(
             "GET",
-            "/api/v2/environment",
-            Envelope::V2,
-            typed(move |_: &Ctx<'_>, page: Page| {
-                reject_status_filter(&page, "environments")?;
-                let (items, total) =
-                    s.environments.list_page(page.offset, page.limit);
-                Ok(page.envelope(
-                    items.into_iter().map(Json::Str).collect(),
-                    total,
-                ))
-            }),
-        );
-    }
-    {
-        let s = Arc::clone(&s);
-        both(
-            r,
-            "GET",
-            "/environment/:name",
-            Arc::new(typed(move |ctx: &Ctx<'_>, _: ()| {
+            "/api/v1/environment/:name",
+            Envelope::V1,
+            typed(move |ctx: &Ctx<'_>, _: ()| {
                 let name = ctx.param("name")?;
                 let env = s.environments.get(name)?;
                 let lock = s.environments.lock_of(name).unwrap_or_default();
@@ -413,13 +664,11 @@ fn register_routes(r: &mut Router, s: Arc<Services>) {
                         lock.into_iter().map(Json::Str).collect(),
                     ),
                 ))
-            })),
+            }),
         );
     }
-
-    // ---- models (paper §4.2) ---------------------------------------
     {
-        // v1: the seed's bare version array.
+        // v1 model: the seed's bare version array.
         let s = Arc::clone(&s);
         r.route(
             "GET",
@@ -427,8 +676,9 @@ fn register_routes(r: &mut Router, s: Arc<Services>) {
             Envelope::V1,
             typed(move |ctx: &Ctx<'_>, _: ()| {
                 let name = ctx.param("name")?;
-                let versions = s.models.versions(name);
-                if versions.is_empty() {
+                let (versions, total) =
+                    s.models.versions_page(name, None, 0, None);
+                if total == 0 {
                     return Err(crate::SubmarineError::NotFound(
                         format!("model {name}"),
                     ));
@@ -437,37 +687,6 @@ fn register_routes(r: &mut Router, s: Arc<Services>) {
                     .iter()
                     .map(model_version_json)
                     .collect::<Vec<Json>>())
-            }),
-        );
-    }
-    {
-        // v2: pagination + `stage` filter.
-        let s = Arc::clone(&s);
-        r.route(
-            "GET",
-            "/api/v2/model/:name",
-            Envelope::V2,
-            typed(move |ctx: &Ctx<'_>, page: Page| {
-                // model versions filter on `stage`, not `status`
-                reject_status_filter(&page, "model versions")?;
-                let name = ctx.param("name")?;
-                // existence = one name-index probe; the stage filter
-                // walks the stage index (no scan-and-filter, and no
-                // materializing versions that the filter discards)
-                if !s.models.exists(name) {
-                    return Err(crate::SubmarineError::NotFound(
-                        format!("model {name}"),
-                    ));
-                }
-                let versions = match ctx.query("stage") {
-                    Some(stage) => s.models.versions_by_stage(name, stage),
-                    None => s.models.versions(name),
-                };
-                let (items, total) = page.slice(versions);
-                Ok(page.envelope(
-                    items.iter().map(model_version_json).collect(),
-                    total,
-                ))
             }),
         );
     }
@@ -584,6 +803,31 @@ fn model_version_json(m: &crate::model::ModelVersion) -> Json {
         .set("version", Json::Num(m.version as f64))
         .set("stage", Json::Str(m.stage.as_str().into()))
         .set("experimentId", Json::Str(m.experiment_id.clone()))
+}
+
+/// The v2 list-row shape of a model-version document (the doc itself is
+/// the source of truth; no re-materialization through the registry).
+fn model_version_json_from_doc(doc: &Json) -> Json {
+    let mut item = Json::obj()
+        .set(
+            "version",
+            Json::Num(doc.num_field("version").unwrap_or(0.0)),
+        )
+        .set(
+            "stage",
+            Json::Str(doc.str_field("stage").unwrap_or("None").into()),
+        )
+        .set(
+            "experimentId",
+            Json::Str(
+                doc.str_field("experiment_id").unwrap_or("").into(),
+            ),
+        );
+    let labels = crate::resource::labels_of(doc);
+    if labels.as_obj().map(|o| !o.is_empty()).unwrap_or(false) {
+        item = item.set("labels", labels);
+    }
+    item
 }
 
 #[cfg(test)]
@@ -703,6 +947,8 @@ mod tests {
             result.get("items").unwrap().as_arr().unwrap().len(),
             2
         );
+        // lists carry the watch bookmark
+        assert!(result.num_field("resource_version").is_some());
         // all seeds are Accepted: filtering by Running yields none
         let (st, j) = dispatch(
             &r,
@@ -779,6 +1025,13 @@ mod tests {
             j.get("result").unwrap().as_arr().unwrap().len(),
             1
         );
+        // duplicate registration is a 409 Conflict
+        let (st, j) = dispatch(&r, "POST", "/api/v2/template", &tpl);
+        assert_eq!(st, 409, "{j:?}");
+        assert_eq!(
+            j.at(&["error", "type"]).and_then(Json::as_str),
+            Some("AlreadyExists")
+        );
     }
 
     #[test]
@@ -797,6 +1050,12 @@ mod tests {
         assert_eq!(st, 200);
         let lock = j.at(&["result", "lock"]).unwrap().as_arr().unwrap();
         assert!(!lock.is_empty());
+        // documents carry the unified meta block
+        assert!(j.at(&["result", "meta", "resource_version"]).is_some());
+        assert_eq!(
+            j.at(&["result", "meta", "name"]).and_then(Json::as_str),
+            Some("tf")
+        );
     }
 
     #[test]
@@ -931,5 +1190,243 @@ mod tests {
         // ...and the third authed request is shed with 429
         let shed = r.dispatch(&req);
         assert_eq!(shed.status, 429);
+    }
+
+    #[test]
+    fn created_docs_carry_meta_and_etag() {
+        let r = api();
+        let body = r#"{"meta":{"name":"mnist",
+            "labels":{"team":"vision"}},
+            "spec":{"Worker":{"replicas":1,"resources":"cpu=1"}}}"#;
+        let (st, j) = dispatch(&r, "POST", "/api/v2/experiment", body);
+        assert_eq!(st, 200, "{j:?}");
+        let id = j
+            .at(&["result", "experimentId"])
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .to_string();
+        let mut req = Request::synthetic(
+            "GET",
+            &format!("/api/v2/experiment/{id}"),
+        );
+        req.body = Vec::new();
+        let resp = r.dispatch(&req);
+        assert_eq!(resp.status, 200);
+        let etag = resp
+            .headers
+            .iter()
+            .find(|(k, _)| k == "ETag")
+            .map(|(_, v)| v.clone());
+        assert!(etag.is_some(), "GET must carry an ETag");
+        let j = Json::parse(
+            std::str::from_utf8(&resp.body).unwrap(),
+        )
+        .unwrap();
+        let meta = j.at(&["result", "meta"]).unwrap();
+        assert_eq!(meta.str_field("name"), Some(id.as_str()));
+        assert_eq!(
+            meta.at(&["labels", "team"]).and_then(Json::as_str),
+            Some("vision")
+        );
+        let rv = meta.num_field("resource_version").unwrap();
+        assert_eq!(etag.unwrap(), format!("\"{rv}\""));
+        // label selector list finds it
+        let (st, j) = dispatch(
+            &r,
+            "GET",
+            "/api/v2/experiment?label=team=vision",
+            "",
+        );
+        assert_eq!(st, 200);
+        assert_eq!(
+            j.at(&["result", "total"]).and_then(Json::as_f64),
+            Some(1.0)
+        );
+        let (st, j) = dispatch(
+            &r,
+            "GET",
+            "/api/v2/experiment?label=team=nlp",
+            "",
+        );
+        assert_eq!(st, 200, "{j:?}");
+        assert_eq!(
+            j.at(&["result", "total"]).and_then(Json::as_f64),
+            Some(0.0)
+        );
+    }
+
+    #[test]
+    fn stale_if_match_put_is_412() {
+        let r = api();
+        let (st, j) = dispatch(&r, "POST", "/api/v2/experiment", SPEC);
+        assert_eq!(st, 200);
+        let id = j
+            .at(&["result", "experimentId"])
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .to_string();
+        let (_, j) = dispatch(
+            &r,
+            "GET",
+            &format!("/api/v2/experiment/{id}"),
+            "",
+        );
+        let rv = j
+            .at(&["result", "meta", "resource_version"])
+            .and_then(Json::as_u64)
+            .unwrap();
+        let put_body = format!(
+            r#"{{"spec":{{"meta":{{"name":"mnist"}},
+                "spec":{{"Worker":{{"replicas":2,"resources":"cpu=2"}}}}}}}}"#
+        );
+        let put = |if_match: Option<String>| -> (u16, Json) {
+            let mut req = Request::synthetic(
+                "PUT",
+                &format!("/api/v2/experiment/{id}"),
+            );
+            req.body = put_body.as_bytes().to_vec();
+            if let Some(m) = if_match {
+                req.headers.insert("if-match".into(), m);
+            }
+            let resp = r.dispatch(&req);
+            let j = Json::parse(
+                std::str::from_utf8(&resp.body).unwrap_or("null"),
+            )
+            .unwrap_or(Json::Null);
+            (resp.status, j)
+        };
+        // fresh If-Match wins and bumps the version + generation
+        let (st, j) = put(Some(format!("\"{rv}\"")));
+        assert_eq!(st, 200, "{j:?}");
+        let new_rv = j
+            .at(&["result", "meta", "resource_version"])
+            .and_then(Json::as_u64)
+            .unwrap();
+        assert!(new_rv > rv);
+        assert_eq!(
+            j.at(&["result", "meta", "generation"])
+                .and_then(Json::as_u64),
+            Some(2)
+        );
+        // the old version is now stale: 412 with the typed error
+        let (st, j) = put(Some(format!("\"{rv}\"")));
+        assert_eq!(st, 412, "{j:?}");
+        assert_eq!(
+            j.at(&["error", "type"]).and_then(Json::as_str),
+            Some("PreconditionFailed")
+        );
+        // If-Match: * only requires existence
+        let (st, _) = put(Some("*".into()));
+        assert_eq!(st, 200);
+        // garbage If-Match is a 400, not a silent overwrite
+        let (st, _) = put(Some("not-a-rev".into()));
+        assert_eq!(st, 400);
+    }
+
+    #[test]
+    fn patch_merges_labels() {
+        let r = api();
+        let (st, j) = dispatch(&r, "POST", "/api/v2/experiment", SPEC);
+        assert_eq!(st, 200);
+        let id = j
+            .at(&["result", "experimentId"])
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .to_string();
+        let (st, j) = dispatch(
+            &r,
+            "PATCH",
+            &format!("/api/v2/experiment/{id}"),
+            r#"{"meta":{"labels":{"team":"vision","tier":"dev"}}}"#,
+        );
+        assert_eq!(st, 200, "{j:?}");
+        assert_eq!(
+            j.at(&["result", "meta", "labels", "team"])
+                .and_then(Json::as_str),
+            Some("vision")
+        );
+        // labels-only patch must NOT bump generation
+        assert_eq!(
+            j.at(&["result", "meta", "generation"])
+                .and_then(Json::as_u64),
+            Some(1)
+        );
+        // merge-patch null removes one label, keeps the other
+        let (st, j) = dispatch(
+            &r,
+            "PATCH",
+            &format!("/api/v2/experiment/{id}"),
+            r#"{"meta":{"labels":{"tier":null}}}"#,
+        );
+        assert_eq!(st, 200, "{j:?}");
+        let labels = j.at(&["result", "meta", "labels"]).unwrap();
+        assert_eq!(labels.str_field("team"), Some("vision"));
+        assert!(labels.get("tier").is_none());
+    }
+
+    #[test]
+    fn model_versions_served_generically() {
+        let s = services();
+        let r = build_api(Arc::clone(&s), &ApiConfig::default());
+        let params = vec![vec![1.0f32]];
+        let v1 = s.models.register("ctr", "e-1", &params, &[]).unwrap();
+        let v2 = s.models.register("ctr", "e-2", &params, &[]).unwrap();
+        let (st, j) = dispatch(&r, "GET", "/api/v2/model/ctr", "");
+        assert_eq!(st, 200, "{j:?}");
+        assert_eq!(
+            j.at(&["result", "total"]).and_then(Json::as_f64),
+            Some(2.0)
+        );
+        // single version GET with meta
+        let (st, j) = dispatch(
+            &r,
+            "GET",
+            &format!("/api/v2/model/ctr/{v1}"),
+            "",
+        );
+        assert_eq!(st, 200, "{j:?}");
+        assert!(j.at(&["result", "meta", "resource_version"]).is_some());
+        // stage transition via PUT: None -> Staging -> Production
+        for (v, stage) in
+            [(v1, "Staging"), (v1, "Production"), (v2, "Staging")]
+        {
+            let (st, j) = dispatch(
+                &r,
+                "PUT",
+                &format!("/api/v2/model/ctr/{v}"),
+                &format!(r#"{{"stage":"{stage}"}}"#),
+            );
+            assert_eq!(st, 200, "{stage}: {j:?}");
+        }
+        // illegal transition rejected
+        let (st, _) = dispatch(
+            &r,
+            "PUT",
+            &format!("/api/v2/model/ctr/{v2}"),
+            r#"{"stage":"Archived"}"#,
+        );
+        assert_eq!(st, 200); // Staging -> Archived is legal
+        let (st, _) = dispatch(
+            &r,
+            "PUT",
+            &format!("/api/v2/model/ctr/{v2}"),
+            r#"{"stage":"Production"}"#,
+        );
+        assert_eq!(st, 400); // Archived -> Production is not
+        // stage filter still walks the index
+        let (st, j) = dispatch(
+            &r,
+            "GET",
+            "/api/v2/model/ctr?stage=production",
+            "",
+        );
+        assert_eq!(st, 200);
+        assert_eq!(
+            j.at(&["result", "total"]).and_then(Json::as_f64),
+            Some(1.0)
+        );
     }
 }

@@ -29,6 +29,7 @@ pub mod error;
 pub mod util;
 
 pub mod cluster;
+pub mod resource;
 pub mod scheduler;
 pub mod storage;
 

@@ -73,14 +73,33 @@ pub struct ModelRegistry {
 impl ModelRegistry {
     pub fn new(store: Arc<MetaStore>) -> ModelRegistry {
         // `name` replaces the seed's whole-namespace prefix scans;
-        // `stage` backs the v2 list endpoint's `?stage=` filter
+        // `stage` backs the v2 list endpoint's `?stage=` filter;
+        // `meta.labels` backs `?label=k=v` selectors
         store.define_index(NS, "name", false);
         store.define_index(NS, "stage", true);
+        store.define_index(NS, "meta.labels", false);
         ModelRegistry { store }
     }
 
-    fn key(name: &str, version: u32) -> String {
+    /// Storage key of one model version (zero-padded so the key order
+    /// is the version order). Public: the generic resource layer
+    /// addresses version documents through it.
+    pub fn doc_key(name: &str, version: u32) -> String {
         format!("{name}@{version:06}")
+    }
+
+    /// Addressable resource name of a version doc key — the
+    /// `/api/v2/model/:name/:version` coordinates (`ctr@000003` ->
+    /// `ctr/3`). This is what `meta.name` and watch events carry.
+    pub fn display_name(key: &str) -> String {
+        match key.split_once('@') {
+            Some((model, v)) => {
+                let v = v.trim_start_matches('0');
+                let v = if v.is_empty() { "0" } else { v };
+                format!("{model}/{v}")
+            }
+            None => key.to_string(),
+        }
     }
 
     /// Keys of `name`'s versions via the name index, ascending (the
@@ -141,7 +160,12 @@ impl ModelRegistry {
                 "registered_at",
                 Json::Num(crate::util::clock::unix_millis() as f64),
             );
-        self.store.put(NS, &Self::key(name, version), doc)?;
+        let key = Self::doc_key(name, version);
+        let display = Self::display_name(&key);
+        self.store.put_rev(NS, &key, |rev| {
+            crate::resource::stamp_new(doc, &display, None, rev)
+                .expect("no labels to sanitize")
+        })?;
         Ok(version)
     }
 
@@ -162,7 +186,7 @@ impl ModelRegistry {
     {
         let doc = self
             .store
-            .get(NS, &Self::key(name, version))
+            .get(NS, &Self::doc_key(name, version))
             .ok_or_else(|| {
                 crate::SubmarineError::NotFound(format!(
                     "model {name} v{version}"
@@ -254,7 +278,7 @@ impl ModelRegistry {
         version: u32,
         to: Stage,
     ) -> crate::Result<()> {
-        let key = Self::key(name, version);
+        let key = Self::doc_key(name, version);
         let doc = self.store.get(NS, &key).ok_or_else(|| {
             crate::SubmarineError::NotFound(format!(
                 "model {name} v{version}"
@@ -274,24 +298,53 @@ impl ModelRegistry {
         // Only one Production version per model: demote the current one
         // (name ∩ stage index intersection instead of a namespace scan).
         if to == Stage::Production {
-            for k in self.stage_keys(name, Stage::Production.as_str()) {
-                if let Some(d) = self.store.get(NS, &k) {
-                    self.store.put(
-                        NS,
-                        &k,
-                        d.set(
-                            "stage",
-                            Json::Str(Stage::Archived.as_str().into()),
-                        ),
-                    )?;
-                }
-            }
+            self.demote_other_production(name, &key, u64::MAX)?;
         }
-        self.store.put(
-            NS,
-            &key,
-            doc.set("stage", Json::Str(to.as_str().into())),
-        )
+        self.store.put_rev(NS, &key, |rev| {
+            crate::resource::stamp_update(
+                doc.set("stage", Json::Str(to.as_str().into())),
+                &Self::display_name(&key),
+                rev,
+                false,
+            )
+        })?;
+        Ok(())
+    }
+
+    /// Archive every Production version of `name` except `keep_key`
+    /// (the single-Production invariant; also the post-commit hook of
+    /// the generic resource layer's stage updates). Only versions
+    /// whose `resource_version` is below `keep_rv` are archived: when
+    /// two promotions race, each skips the other's *newer* write, so
+    /// the later promotion deterministically wins instead of the two
+    /// archiving each other into a zero-Production state. Pass
+    /// `u64::MAX` to archive unconditionally.
+    pub fn demote_other_production(
+        &self,
+        name: &str,
+        keep_key: &str,
+        keep_rv: u64,
+    ) -> crate::Result<()> {
+        for k in self.stage_keys(name, Stage::Production.as_str()) {
+            if k == keep_key {
+                continue;
+            }
+            self.store.update_rev(NS, &k, |d, rev| {
+                if crate::resource::resource_version(d) >= keep_rv {
+                    return Ok(None); // a newer promotion; let it win
+                }
+                Ok(Some(crate::resource::stamp_update(
+                    d.clone().set(
+                        "stage",
+                        Json::Str(Stage::Archived.as_str().into()),
+                    ),
+                    &Self::display_name(&k),
+                    rev,
+                    false,
+                )))
+            })?;
+        }
+        Ok(())
     }
 
     /// Version keys of `name` in the given stage: intersection of the
@@ -343,6 +396,30 @@ impl ModelRegistry {
     ) -> Vec<ModelVersion> {
         let keys = self.stage_keys(name, stage);
         self.from_keys(name, keys)
+    }
+
+    /// One page of `name`'s versions (optionally stage-filtered) plus
+    /// the pre-pagination total. Pages the *key list* and materializes
+    /// only the window's documents — `?limit=10` over 10k versions
+    /// loads 10 docs, not 10k.
+    pub fn versions_page(
+        &self,
+        name: &str,
+        stage: Option<&str>,
+        offset: usize,
+        limit: Option<usize>,
+    ) -> (Vec<ModelVersion>, usize) {
+        let keys = match stage {
+            Some(st) => self.stage_keys(name, st),
+            None => self.keys_of(name),
+        };
+        let total = keys.len();
+        let window: Vec<String> = keys
+            .into_iter()
+            .skip(offset)
+            .take(limit.unwrap_or(usize::MAX))
+            .collect();
+        (self.from_keys(name, window), total)
     }
 
     pub fn production_version(&self, name: &str) -> Option<ModelVersion> {
@@ -434,6 +511,40 @@ mod tests {
         assert_eq!(staged[0].version, v1);
         assert_eq!(r.versions_by_stage("m", "None")[0].version, v2);
         assert!(r.versions_by_stage("ghost", "Staging").is_empty());
+    }
+
+    #[test]
+    fn versions_page_windows_the_key_list() {
+        let r = reg();
+        for i in 0..7 {
+            r.register("m", &format!("e-{i}"), &params(), &[]).unwrap();
+        }
+        let (page, total) = r.versions_page("m", None, 2, Some(3));
+        assert_eq!(total, 7);
+        assert_eq!(
+            page.iter().map(|m| m.version).collect::<Vec<_>>(),
+            vec![3, 4, 5]
+        );
+        r.transition("m", 1, Stage::Staging).unwrap();
+        let (page, total) =
+            r.versions_page("m", Some("staging"), 0, None);
+        assert_eq!((page.len(), total), (1, 1));
+        assert_eq!(page[0].version, 1);
+    }
+
+    #[test]
+    fn registered_versions_carry_meta() {
+        let r = reg();
+        let v = r.register("m", "e", &params(), &[]).unwrap();
+        let doc = r
+            .store
+            .get(NS, &ModelRegistry::doc_key("m", v))
+            .unwrap();
+        assert!(crate::resource::resource_version(&doc) > 0);
+        assert_eq!(
+            doc.at(&["meta", "name"]).and_then(Json::as_str),
+            Some("m/1")
+        );
     }
 
     #[test]

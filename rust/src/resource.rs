@@ -1,0 +1,390 @@
+//! The declarative resource model (ISSUE 4 tentpole).
+//!
+//! Every document the v2 API serves — experiment, template,
+//! environment, model version — carries a uniform `meta` block:
+//!
+//! ```json
+//! {
+//!   "meta": {
+//!     "name": "experiment-1",
+//!     "labels": {"team": "vision"},
+//!     "resource_version": 42,
+//!     "generation": 3,
+//!     "created_at": 1700000000000,
+//!     "updated_at": 1700000001000
+//!   },
+//!   ...kind-specific fields...
+//! }
+//! ```
+//!
+//! - `resource_version` is the global storage revision of the last
+//!   write (see `storage/kv.rs`): it backs `ETag`/`If-Match`
+//!   optimistic concurrency and watch resumption.
+//! - `generation` counts *spec* changes only — status/stage churn bumps
+//!   `resource_version` but not `generation`.
+//! - `labels` are free-form string pairs, indexed as `key=value`
+//!   postings so `?label=k=v` selectors are index walks, not scans.
+//!
+//! This module is the storage-adjacent half of the model: stamping,
+//! label selectors, and RFC 7386 JSON merge-patch. The HTTP engine that
+//! serves it generically lives in `httpd/resource.rs`.
+
+use crate::util::json::Json;
+
+/// `meta.resource_version` of a document (0 when unstamped).
+pub fn resource_version(doc: &Json) -> u64 {
+    doc.at(&["meta", "resource_version"])
+        .and_then(Json::as_u64)
+        .unwrap_or(0)
+}
+
+/// `meta.labels` of a document (empty object when unstamped).
+pub fn labels_of(doc: &Json) -> Json {
+    doc.at(&["meta", "labels"]).cloned().unwrap_or_else(Json::obj)
+}
+
+/// Validate + canonicalize a client-supplied label map: every value
+/// must be a scalar and is coerced to its string form. Keys and values
+/// must be non-empty and free of the selector metacharacters `=`/`,`.
+pub fn sanitize_labels(labels: &Json) -> crate::Result<Json> {
+    let bad = |msg: String| crate::SubmarineError::InvalidSpec(msg);
+    let pairs = match labels {
+        Json::Null => return Ok(Json::obj()),
+        Json::Obj(pairs) => pairs,
+        other => {
+            return Err(bad(format!(
+                "labels must be an object of string pairs, got {}",
+                other.dump()
+            )))
+        }
+    };
+    let mut out = Json::obj();
+    for (k, v) in pairs {
+        if k.is_empty() || k.contains('=') || k.contains(',') {
+            return Err(bad(format!("invalid label key {k:?}")));
+        }
+        let val = match v {
+            Json::Str(s) => s.clone(),
+            Json::Num(_) | Json::Bool(_) => v.dump(),
+            other => {
+                return Err(bad(format!(
+                    "label {k:?} must be a scalar, got {}",
+                    other.dump()
+                )))
+            }
+        };
+        if val.is_empty() || val.contains('=') || val.contains(',') {
+            return Err(bad(format!(
+                "invalid value {val:?} for label {k:?}"
+            )));
+        }
+        out = out.set(k, Json::Str(val));
+    }
+    Ok(out)
+}
+
+/// Stamp the `meta` block onto a brand-new resource document.
+pub fn stamp_new(
+    doc: Json,
+    name: &str,
+    labels: Option<&Json>,
+    rev: u64,
+) -> crate::Result<Json> {
+    let now = crate::util::clock::unix_millis() as f64;
+    let labels = match labels {
+        Some(l) => sanitize_labels(l)?,
+        None => Json::obj(),
+    };
+    Ok(doc.set(
+        "meta",
+        Json::obj()
+            .set("name", Json::Str(name.to_string()))
+            .set("labels", labels)
+            .set("resource_version", Json::Num(rev as f64))
+            .set("generation", Json::Num(1.0))
+            .set("created_at", Json::Num(now))
+            .set("updated_at", Json::Num(now)),
+    ))
+}
+
+/// Re-stamp `meta` on an updated document: `resource_version` and
+/// `updated_at` always move; `generation` bumps only when the caller
+/// saw a spec change. Missing meta fields (pre-redesign documents) are
+/// backfilled with defaults.
+pub fn stamp_update(
+    doc: Json,
+    name: &str,
+    rev: u64,
+    bump_generation: bool,
+) -> Json {
+    let now = crate::util::clock::unix_millis() as f64;
+    let meta = doc.get("meta").cloned().unwrap_or_else(Json::obj);
+    let generation = meta.num_field("generation").unwrap_or(1.0);
+    let mut meta = meta
+        .set("name", Json::Str(name.to_string()))
+        .set("resource_version", Json::Num(rev as f64))
+        .set("updated_at", Json::Num(now));
+    if meta.get("labels").is_none() {
+        meta = meta.set("labels", Json::obj());
+    }
+    if meta.get("created_at").is_none() {
+        meta = meta.set("created_at", Json::Num(now));
+    }
+    meta = meta.set(
+        "generation",
+        Json::Num(if bump_generation {
+            generation + 1.0
+        } else {
+            generation
+        }),
+    );
+    doc.set("meta", meta)
+}
+
+/// A document minus its `meta` block — what "the same resource content"
+/// means for no-op update detection.
+pub fn strip_meta(doc: &Json) -> Json {
+    match doc {
+        Json::Obj(pairs) => Json::Obj(
+            pairs
+                .iter()
+                .filter(|(k, _)| k != "meta")
+                .cloned()
+                .collect(),
+        ),
+        other => other.clone(),
+    }
+}
+
+/// A document minus `meta` **and** its kind-managed state fields
+/// (`status`, `stage`) — what "the spec changed" means for `generation`
+/// bumping.
+pub fn strip_volatile(doc: &Json) -> Json {
+    match doc {
+        Json::Obj(pairs) => Json::Obj(
+            pairs
+                .iter()
+                .filter(|(k, _)| {
+                    k != "meta" && k != "status" && k != "stage"
+                })
+                .cloned()
+                .collect(),
+        ),
+        other => other.clone(),
+    }
+}
+
+/// RFC 7386 JSON merge-patch: objects merge recursively, `null` removes
+/// a key, everything else replaces.
+pub fn merge_patch(base: &Json, patch: &Json) -> Json {
+    match patch {
+        Json::Obj(pp) => {
+            let mut out: Vec<(String, Json)> = match base {
+                Json::Obj(bp) => bp.clone(),
+                _ => Vec::new(),
+            };
+            for (k, v) in pp {
+                if v.is_null() {
+                    out.retain(|(bk, _)| bk != k);
+                } else if let Some(slot) =
+                    out.iter_mut().find(|(bk, _)| bk == k)
+                {
+                    slot.1 = merge_patch(&slot.1, v);
+                } else {
+                    out.push((k.clone(), merge_patch(&Json::Null, v)));
+                }
+            }
+            Json::Obj(out)
+        }
+        other => other.clone(),
+    }
+}
+
+/// A parsed label selector: the conjunction of `key=value` pairs from
+/// `?label=k1=v1,k2=v2`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Selector {
+    pub pairs: Vec<(String, String)>,
+}
+
+impl Selector {
+    /// Parse `k=v[,k2=v2...]`; empty input is the match-all selector.
+    pub fn parse(raw: &str) -> crate::Result<Selector> {
+        let mut pairs = Vec::new();
+        for part in raw.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (k, v) = part.split_once('=').ok_or_else(|| {
+                crate::SubmarineError::InvalidSpec(format!(
+                    "label selector term {part:?} is not key=value"
+                ))
+            })?;
+            if k.is_empty() || v.is_empty() {
+                return Err(crate::SubmarineError::InvalidSpec(
+                    format!("label selector term {part:?} is not key=value"),
+                ));
+            }
+            pairs.push((k.to_string(), v.to_string()));
+        }
+        Ok(Selector { pairs })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pairs.is_empty()
+    }
+
+    /// The `key=value` posting tokens this selector looks up in the
+    /// `meta.labels` index.
+    pub fn tokens(&self) -> Vec<String> {
+        self.pairs
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect()
+    }
+
+    /// Whether `doc.meta.labels` satisfies every pair.
+    pub fn matches(&self, doc: &Json) -> bool {
+        let labels = labels_of(doc);
+        self.pairs.iter().all(|(k, v)| {
+            labels.str_field(k).map(|have| have == v).unwrap_or(false)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stamp_new_builds_full_meta() {
+        let labels =
+            Json::obj().set("team", Json::Str("vision".into()));
+        let doc = stamp_new(
+            Json::obj().set("spec", Json::Num(1.0)),
+            "e-1",
+            Some(&labels),
+            7,
+        )
+        .unwrap();
+        assert_eq!(doc.at(&["meta", "name"]).unwrap().as_str(), Some("e-1"));
+        assert_eq!(resource_version(&doc), 7);
+        assert_eq!(
+            doc.at(&["meta", "generation"]).and_then(Json::as_u64),
+            Some(1)
+        );
+        assert_eq!(
+            doc.at(&["meta", "labels", "team"]).and_then(Json::as_str),
+            Some("vision")
+        );
+        assert!(doc.at(&["meta", "created_at"]).is_some());
+    }
+
+    #[test]
+    fn bad_labels_rejected() {
+        for bad in [
+            Json::Arr(vec![]),
+            Json::obj().set("a=b", Json::Str("x".into())),
+            Json::obj().set("a", Json::Str("x,y".into())),
+            Json::obj().set("a", Json::Arr(vec![])),
+        ] {
+            assert!(sanitize_labels(&bad).is_err(), "{}", bad.dump());
+        }
+        // scalars coerce to strings
+        let ok = sanitize_labels(
+            &Json::obj().set("gpu", Json::Num(4.0)),
+        )
+        .unwrap();
+        assert_eq!(ok.str_field("gpu"), Some("4"));
+    }
+
+    #[test]
+    fn stamp_update_moves_rv_and_optionally_generation() {
+        let doc = stamp_new(Json::obj(), "x", None, 1).unwrap();
+        let doc = stamp_update(doc, "x", 5, false);
+        assert_eq!(resource_version(&doc), 5);
+        assert_eq!(
+            doc.at(&["meta", "generation"]).and_then(Json::as_u64),
+            Some(1)
+        );
+        let doc = stamp_update(doc, "x", 9, true);
+        assert_eq!(resource_version(&doc), 9);
+        assert_eq!(
+            doc.at(&["meta", "generation"]).and_then(Json::as_u64),
+            Some(2)
+        );
+        // legacy doc without meta gets backfilled
+        let legacy = stamp_update(
+            Json::obj().set("spec", Json::Num(1.0)),
+            "old",
+            3,
+            false,
+        );
+        assert_eq!(resource_version(&legacy), 3);
+        assert!(legacy.at(&["meta", "created_at"]).is_some());
+        assert!(legacy.at(&["meta", "labels"]).is_some());
+    }
+
+    #[test]
+    fn strip_helpers_split_spec_from_state() {
+        let doc = Json::obj()
+            .set("spec", Json::Num(1.0))
+            .set("status", Json::Str("Running".into()))
+            .set("meta", Json::obj());
+        let a = strip_volatile(&doc);
+        assert!(a.get("status").is_none());
+        assert!(a.get("meta").is_none());
+        assert!(a.get("spec").is_some());
+        let b = strip_meta(&doc);
+        assert!(b.get("status").is_some());
+        assert!(b.get("meta").is_none());
+    }
+
+    #[test]
+    fn merge_patch_follows_rfc7386() {
+        let base = Json::parse(
+            r#"{"a":"b","c":{"d":"e","f":"g"}}"#,
+        )
+        .unwrap();
+        let patch =
+            Json::parse(r#"{"a":"z","c":{"f":null,"h":1}}"#).unwrap();
+        let merged = merge_patch(&base, &patch);
+        assert_eq!(merged.str_field("a"), Some("z"));
+        assert_eq!(merged.at(&["c", "d"]).and_then(Json::as_str), Some("e"));
+        assert!(merged.at(&["c", "f"]).is_none());
+        assert_eq!(merged.at(&["c", "h"]).and_then(Json::as_f64), Some(1.0));
+        // non-object patch replaces wholesale
+        let replaced = merge_patch(&base, &Json::Num(3.0));
+        assert_eq!(replaced, Json::Num(3.0));
+    }
+
+    #[test]
+    fn selector_parse_and_match() {
+        let sel = Selector::parse("team=vision,tier=prod").unwrap();
+        assert_eq!(sel.tokens(), vec!["team=vision", "tier=prod"]);
+        let doc = stamp_new(
+            Json::obj(),
+            "x",
+            Some(
+                &Json::obj()
+                    .set("team", Json::Str("vision".into()))
+                    .set("tier", Json::Str("prod".into())),
+            ),
+            1,
+        )
+        .unwrap();
+        assert!(sel.matches(&doc));
+        let other = stamp_new(
+            Json::obj(),
+            "y",
+            Some(&Json::obj().set("team", Json::Str("vision".into()))),
+            2,
+        )
+        .unwrap();
+        assert!(!sel.matches(&other));
+        assert!(Selector::parse("").unwrap().is_empty());
+        assert!(Selector::parse("oops").is_err());
+        assert!(Selector::parse("=v").is_err());
+    }
+}

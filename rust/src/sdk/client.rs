@@ -118,6 +118,18 @@ impl ExperimentClient {
         path: &str,
         body: Option<&Json>,
     ) -> crate::Result<(u16, Json)> {
+        self.request_with_headers(method, path, body, &[])
+    }
+
+    /// [`Self::request`] with extra request headers (`If-Match` for
+    /// conditional writes).
+    pub fn request_with_headers(
+        &self,
+        method: &str,
+        path: &str,
+        body: Option<&Json>,
+        extra_headers: &[(&str, &str)],
+    ) -> crate::Result<(u16, Json)> {
         let payload = body.map(|j| j.dump()).unwrap_or_default();
         // The pooled connection is only *reused* for idempotent
         // methods: a request on a pooled socket may need to be replayed
@@ -136,7 +148,13 @@ impl ExperimentClient {
             // below, which re-locks `self.conn`.
             let pooled = self.conn.lock().unwrap().take();
             if let Some(stream) = pooled {
-                match self.roundtrip(&stream, method, path, &payload) {
+                match self.roundtrip(
+                    &stream,
+                    method,
+                    path,
+                    &payload,
+                    extra_headers,
+                ) {
                     Ok((status, j, keep)) => {
                         if keep {
                             *self.conn.lock().unwrap() = Some(stream);
@@ -155,8 +173,26 @@ impl ExperimentClient {
         }
         let stream = self.connect()?;
         let (status, j, keep) = self
-            .roundtrip(&stream, method, path, &payload)
-            .map_err(|e| e.err)?;
+            .roundtrip(&stream, method, path, &payload, extra_headers)
+            .map_err(|e| {
+                // A *fresh* connection that died before any response
+                // byte is not a stale-socket artifact: tell the caller
+                // what is known, especially for non-idempotent methods
+                // we refuse to replay automatically.
+                if e.retryable && !idempotent {
+                    runtime(format!(
+                        "{method} {path} failed on a fresh connection \
+                         before the server sent any response (it may \
+                         have restarted or dropped the connection); \
+                         not retried automatically because {method} is \
+                         not idempotent — verify server state before \
+                         retrying: {}",
+                        e.err
+                    ))
+                } else {
+                    e.err
+                }
+            })?;
         if keep {
             // pool only into an empty slot: a non-idempotent request
             // bypasses the pool, and evicting a healthy pooled
@@ -179,6 +215,7 @@ impl ExperimentClient {
         method: &str,
         path: &str,
         payload: &str,
+        extra_headers: &[(&str, &str)],
     ) -> Result<(u16, Json, bool), RoundtripError> {
         let mut req = format!(
             "{method} {path} HTTP/1.1\r\nhost: {}\r\ncontent-length: {}\r\n",
@@ -187,6 +224,9 @@ impl ExperimentClient {
         );
         if let Some(t) = &self.token {
             req.push_str(&format!("authorization: Bearer {t}\r\n"));
+        }
+        for (k, v) in extra_headers {
+            req.push_str(&format!("{k}: {v}\r\n"));
         }
         req.push_str(
             "content-type: application/json\r\nconnection: keep-alive\r\n\r\n",
@@ -529,6 +569,245 @@ impl ExperimentClient {
         res.str_field("experimentId")
             .map(str::to_string)
             .ok_or_else(|| runtime("missing experimentId".into()))
+    }
+
+    // -------------------------------------------- declarative resources
+
+    /// Fetch one resource document (with its `meta` block).
+    pub fn get_resource(
+        &self,
+        kind: &str,
+        name: &str,
+    ) -> crate::Result<Json> {
+        let r = self.request(
+            "GET",
+            &format!("{}/{kind}/{name}", self.base),
+            None,
+        )?;
+        self.expect_ok(r)
+    }
+
+    /// List a resource collection, optionally filtered by a label
+    /// selector (`k=v[,k2=v2]`). Returns the v2 list payload
+    /// (`items`, `total`, `resource_version` bookmark).
+    pub fn list_resources(
+        &self,
+        kind: &str,
+        selector: Option<&str>,
+    ) -> crate::Result<Json> {
+        match selector {
+            Some(sel) => {
+                self.list_resources_query(kind, &format!("label={sel}"))
+            }
+            None => self.list_resources_query(kind, ""),
+        }
+    }
+
+    /// List with a raw query string (compose `label`, `status`/`stage`
+    /// filters, and `limit`/`offset` freely).
+    pub fn list_resources_query(
+        &self,
+        kind: &str,
+        query: &str,
+    ) -> crate::Result<Json> {
+        let mut path = format!("{}/{kind}", self.base);
+        if !query.is_empty() {
+            path.push('?');
+            path.push_str(query);
+        }
+        let r = self.request("GET", &path, None)?;
+        self.expect_ok(r)
+    }
+
+    /// Conditional replace: `PUT` with `If-Match: "<expect_rv>"`. A
+    /// concurrent writer who got there first surfaces as
+    /// [`crate::SubmarineError::PreconditionFailed`] — re-read, rebase,
+    /// retry.
+    pub fn update_if(
+        &self,
+        kind: &str,
+        name: &str,
+        doc: &Json,
+        expect_rv: u64,
+    ) -> crate::Result<Json> {
+        let etag = format!("\"{expect_rv}\"");
+        let (status, j) = self.request_with_headers(
+            "PUT",
+            &format!("{}/{kind}/{name}", self.base),
+            Some(doc),
+            &[("if-match", &etag)],
+        )?;
+        if status == 412 {
+            return Err(crate::SubmarineError::PreconditionFailed(
+                j.at(&["error", "message"])
+                    .and_then(Json::as_str)
+                    .unwrap_or("resource_version mismatch")
+                    .to_string(),
+            ));
+        }
+        self.expect_ok((status, j))
+    }
+
+    /// RFC 7386 merge-patch (labels, spec fields); unconditional.
+    pub fn patch_resource(
+        &self,
+        kind: &str,
+        name: &str,
+        patch: &Json,
+    ) -> crate::Result<Json> {
+        let r = self.request(
+            "PATCH",
+            &format!("{}/{kind}/{name}", self.base),
+            Some(patch),
+        )?;
+        self.expect_ok(r)
+    }
+
+    /// One long-poll watch request: events past `since` (empty on
+    /// timeout) plus the revision to resume from. A compacted `since`
+    /// surfaces as [`crate::SubmarineError::Gone`] — relist, then
+    /// watch from the fresh bookmark (or let [`Watcher`] do it).
+    pub fn watch_once(
+        &self,
+        kind: &str,
+        since: u64,
+        timeout_ms: u64,
+    ) -> crate::Result<(Vec<Json>, u64)> {
+        let path = format!(
+            "{}/{kind}?watch=1&since={since}&timeout_ms={timeout_ms}",
+            self.base
+        );
+        let (status, j) = self.request("GET", &path, None)?;
+        if status == 410 {
+            return Err(crate::SubmarineError::Gone(
+                j.at(&["error", "message"])
+                    .and_then(Json::as_str)
+                    .unwrap_or("watch revision compacted")
+                    .to_string(),
+            ));
+        }
+        let res = self.expect_ok((status, j))?;
+        let events = res
+            .get("events")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .to_vec();
+        let rv = res
+            .num_field("resource_version")
+            .map(|v| v as u64)
+            .unwrap_or(since);
+        Ok((events, rv))
+    }
+
+    /// The current list bookmark for `kind` (start watches here).
+    /// `limit=1` keeps the probe O(1) — only the bookmark matters,
+    /// not the rows.
+    pub fn resource_bookmark(&self, kind: &str) -> crate::Result<u64> {
+        let res = self.list_resources_query(kind, "limit=1")?;
+        Ok(res
+            .num_field("resource_version")
+            .map(|v| v as u64)
+            .unwrap_or(0))
+    }
+
+    /// Blocking watch iterator over any resource kind.
+    pub fn watcher(&self, kind: &str, since: u64) -> Watcher<'_> {
+        Watcher {
+            client: self,
+            kind: kind.to_string(),
+            since,
+            timeout_ms: 10_000,
+        }
+    }
+
+    /// Watch experiments; `since: None` starts from the current
+    /// bookmark (future events only).
+    pub fn watch_experiments(
+        &self,
+        since: Option<u64>,
+    ) -> crate::Result<Watcher<'_>> {
+        let since = match since {
+            Some(rev) => rev,
+            None => self.resource_bookmark("experiment")?,
+        };
+        Ok(self.watcher("experiment", since))
+    }
+}
+
+/// One step of a [`Watcher`].
+#[derive(Debug)]
+pub enum WatchStep {
+    /// Change events past the previous position.
+    Events(Vec<Json>),
+    /// The watch position was compacted away (`410 Gone`): the watcher
+    /// relisted — these are the current items — and resumed from the
+    /// fresh bookmark. State derived from earlier events must be
+    /// rebuilt from this snapshot.
+    Resync(Vec<Json>),
+}
+
+/// Blocking watch iterator: repeated long-polls that ride the pooled
+/// keep-alive connection, transparently recovering from feed
+/// compaction with a relist + rewatch.
+pub struct Watcher<'a> {
+    client: &'a ExperimentClient,
+    kind: String,
+    /// Resume position (advances as batches arrive).
+    pub since: u64,
+    timeout_ms: u64,
+}
+
+impl Watcher<'_> {
+    /// Per-request long-poll window (default 10s).
+    pub fn with_timeout_ms(mut self, timeout_ms: u64) -> Self {
+        self.timeout_ms = timeout_ms.max(1);
+        self
+    }
+
+    /// Block until the next non-empty batch (or resync) arrives.
+    pub fn next(&mut self) -> crate::Result<WatchStep> {
+        // The long-poll window must close before the client's socket
+        // read timeout does, or an idle watch turns into a spurious
+        // io error. A proportional margin (window = 3/4 of the socket
+        // timeout) keeps short timeouts from degenerating into a
+        // busy-poll loop.
+        let socket_ms =
+            self.client.read_timeout.as_millis().min(u64::MAX as u128)
+                as u64;
+        let window_ms = self
+            .timeout_ms
+            .min((socket_ms.saturating_mul(3) / 4).max(1));
+        loop {
+            match self.client.watch_once(
+                &self.kind,
+                self.since,
+                window_ms,
+            ) {
+                Ok((events, rv)) => {
+                    self.since = rv;
+                    if events.is_empty() {
+                        continue; // idle window; poll again
+                    }
+                    return Ok(WatchStep::Events(events));
+                }
+                Err(crate::SubmarineError::Gone(_)) => {
+                    let res = self
+                        .client
+                        .list_resources(&self.kind, None)?;
+                    self.since = res
+                        .num_field("resource_version")
+                        .map(|v| v as u64)
+                        .unwrap_or(0);
+                    let items = res
+                        .get("items")
+                        .and_then(Json::as_arr)
+                        .unwrap_or(&[])
+                        .to_vec();
+                    return Ok(WatchStep::Resync(items));
+                }
+                Err(e) => return Err(e),
+            }
+        }
     }
 }
 

@@ -16,5 +16,5 @@
 pub mod client;
 pub mod highlevel;
 
-pub use client::ExperimentClient;
+pub use client::{ExperimentClient, WatchStep, Watcher};
 pub use highlevel::DeepFm;

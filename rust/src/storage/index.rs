@@ -1,19 +1,23 @@
 //! Secondary indexes over [`crate::storage::MetaStore`] documents.
 //!
-//! An index maps one top-level document field to the set of keys whose
-//! documents carry each value (`status -> {"accepted": {e1, e2}, ...}`).
-//! Indexes live next to the primary map inside the owning shard and are
-//! mutated under the same shard write lock as the document itself, so a
-//! reader never observes a doc/index mismatch. They are memory-only:
-//! recovery rebuilds them from the replayed documents, which keeps the
-//! WAL format index-agnostic.
+//! An index maps one document field to the set of keys whose documents
+//! carry each value (`status -> {"accepted": {e1, e2}, ...}`). The
+//! field may be a dotted path into nested objects (`meta.labels`), and
+//! a field that resolves to an **object** posts one `key=value` token
+//! per pair — which is how label selectors (`?label=team=vision`) are
+//! served without scanning. A field resolving to an array of strings
+//! posts each element. Indexes live next to the primary map inside the
+//! owning shard and are mutated under the same shard write lock as the
+//! document itself, so a reader never observes a doc/index mismatch.
+//! They are memory-only: recovery rebuilds them from the replayed
+//! documents, which keeps the WAL format index-agnostic.
 
 use crate::util::json::Json;
 use std::collections::{BTreeMap, BTreeSet};
 
-/// Declaration of one secondary index: which top-level field to index,
-/// and whether lookups fold ASCII case (status/stage-style enums do;
-/// name-style identifiers don't).
+/// Declaration of one secondary index: which field (dotted path) to
+/// index, and whether lookups fold ASCII case (status/stage-style enums
+/// do; name-style identifiers and labels don't).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct IndexDef {
     pub field: String,
@@ -56,27 +60,57 @@ impl FieldIndex {
         }
     }
 
-    /// The indexable value of `doc`, if present: strings index as-is,
-    /// numbers/bools by their JSON text; arrays/objects/null don't index.
-    fn value_of(&self, doc: &Json) -> Option<String> {
-        match doc.get(&self.def.field) {
-            Some(Json::Str(s)) => Some(self.normalize(s)),
-            Some(v @ (Json::Num(_) | Json::Bool(_))) => Some(v.dump()),
-            _ => None,
+    /// Resolve the (possibly dotted) index path inside `doc`.
+    fn resolve<'a>(&self, doc: &'a Json) -> Option<&'a Json> {
+        let mut cur = doc;
+        for part in self.def.field.split('.') {
+            cur = cur.get(part)?;
+        }
+        Some(cur)
+    }
+
+    /// The posting tokens of `doc`: strings index as-is, numbers/bools
+    /// by their JSON text, objects as one `key=value` token per scalar
+    /// pair (labels), string arrays one token per element; null and
+    /// nested composites don't index.
+    fn values_of(&self, doc: &Json) -> Vec<String> {
+        let Some(node) = self.resolve(doc) else {
+            return Vec::new();
+        };
+        match node {
+            Json::Str(s) => vec![self.normalize(s)],
+            v @ (Json::Num(_) | Json::Bool(_)) => vec![v.dump()],
+            Json::Obj(pairs) => pairs
+                .iter()
+                .filter_map(|(k, v)| match v {
+                    Json::Str(s) => {
+                        Some(self.normalize(&format!("{k}={s}")))
+                    }
+                    v @ (Json::Num(_) | Json::Bool(_)) => Some(
+                        self.normalize(&format!("{k}={}", v.dump())),
+                    ),
+                    _ => None,
+                })
+                .collect(),
+            Json::Arr(items) => items
+                .iter()
+                .filter_map(|v| v.as_str().map(|s| self.normalize(s)))
+                .collect(),
+            _ => Vec::new(),
         }
     }
 
-    /// Add `key`'s posting for `doc` (called under the shard write lock).
+    /// Add `key`'s postings for `doc` (called under the shard write lock).
     pub fn add(&mut self, key: &str, doc: &Json) {
-        if let Some(v) = self.value_of(doc) {
+        for v in self.values_of(doc) {
             self.postings.entry(v).or_default().insert(key.to_string());
         }
     }
 
-    /// Remove `key`'s posting for `doc` (the document being replaced or
-    /// deleted — the index must see the *old* doc to find the posting).
+    /// Remove `key`'s postings for `doc` (the document being replaced or
+    /// deleted — the index must see the *old* doc to find the postings).
     pub fn remove(&mut self, key: &str, doc: &Json) {
-        if let Some(v) = self.value_of(doc) {
+        for v in self.values_of(doc) {
             if let Some(set) = self.postings.get_mut(&v) {
                 set.remove(key);
                 if set.is_empty() {
@@ -153,6 +187,42 @@ mod tests {
         assert!(idx.histogram().is_empty());
         // removing unindexed docs is a no-op
         idx.remove("k1", &Json::obj().set("tags", Json::Arr(vec![])));
+    }
+
+    #[test]
+    fn label_map_posts_one_token_per_pair() {
+        let mut idx =
+            FieldIndex::new(IndexDef::new("meta.labels", false));
+        let doc = Json::obj().set(
+            "meta",
+            Json::obj().set(
+                "labels",
+                Json::obj()
+                    .set("team", Json::Str("vision".into()))
+                    .set("tier", Json::Str("prod".into())),
+            ),
+        );
+        idx.add("e1", &doc);
+        assert_eq!(idx.lookup("team=vision"), vec!["e1"]);
+        assert_eq!(idx.lookup("tier=prod"), vec!["e1"]);
+        assert!(idx.lookup("team=nlp").is_empty());
+        idx.remove("e1", &doc);
+        assert!(idx.histogram().is_empty());
+    }
+
+    #[test]
+    fn string_arrays_post_each_element() {
+        let mut idx = FieldIndex::new(IndexDef::new("tags", false));
+        let doc = Json::obj().set(
+            "tags",
+            Json::Arr(vec![
+                Json::Str("a".into()),
+                Json::Str("b".into()),
+            ]),
+        );
+        idx.add("k", &doc);
+        assert_eq!(idx.lookup("a"), vec!["k"]);
+        assert_eq!(idx.lookup("b"), vec!["k"]);
     }
 
     #[test]

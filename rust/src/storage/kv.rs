@@ -25,17 +25,26 @@
 //!   maintained under the same shard lock as the documents, giving the
 //!   v2 list endpoints O(log n + page) filtered reads instead of
 //!   namespace scans.
+//! - **Observe:** every write is assigned a monotonically increasing
+//!   global revision and published to a bounded in-memory change feed
+//!   ([`Change`]) in the same critical section, so `?watch=1&since=REV`
+//!   streams deliver updates without polling; a `since` that has fallen
+//!   off the ring answers `410 Gone` and the client relists. The
+//!   rev-assign + publish critical section runs the caller's doc
+//!   builder under the (global) feed mutex — strict feed ordering is
+//!   bought with a short cross-shard serialization window on writes;
+//!   reads never take it beyond a ring scan.
 
 use crate::storage::index::{FieldIndex, IndexDef};
 use crate::storage::snapshot;
 use crate::util::json::Json;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::fs;
 use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex, MutexGuard, RwLock};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Namespaces hash onto this many independently locked shards.
 pub const SHARD_COUNT: usize = 16;
@@ -52,6 +61,10 @@ pub struct StoreOptions {
     /// Auto-compact once this many WAL records accumulate since the
     /// last snapshot. `0` disables auto-compaction (manual only).
     pub compact_threshold: u64,
+    /// Change-feed ring size: how many recent writes stay available to
+    /// `?watch=1&since=REV` resumers before they must relist (`410`).
+    /// `0` disables the feed (watchers always get `Gone`).
+    pub feed_capacity: usize,
 }
 
 impl Default for StoreOptions {
@@ -60,6 +73,7 @@ impl Default for StoreOptions {
             sync: false,
             group_commit: true,
             compact_threshold: 4096,
+            feed_capacity: 1024,
         }
     }
 }
@@ -90,6 +104,106 @@ pub struct CompactReport {
     pub docs: usize,
     /// Stale snapshot/WAL files removed.
     pub removed_files: usize,
+}
+
+// ------------------------------------------------------------ change feed
+
+/// One record in the bounded in-memory change feed (ISSUE 4): every
+/// write is assigned a monotonically increasing global revision and
+/// published here so `?watch=1&since=REV` streams see it without
+/// polling.
+#[derive(Debug, Clone)]
+pub struct Change {
+    /// Global revision assigned to this write.
+    pub rev: u64,
+    pub ns: String,
+    pub key: String,
+    /// `Some(doc)` for puts, `None` for deletes.
+    pub doc: Option<Json>,
+}
+
+/// Outcome of a conditional [`MetaStore::update_rev`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UpdateRev {
+    /// The key does not exist.
+    Missing,
+    /// The closure declined to write; nothing changed.
+    Unchanged,
+    /// Written at this revision.
+    Written(u64),
+}
+
+struct Feed {
+    /// Next revision to assign (revisions start at 1).
+    next_rev: u64,
+    /// Global floor set at open: the whole pre-restart history counts
+    /// as compacted (the feed is volatile).
+    floor: u64,
+    /// Highest revision evicted from the ring *per namespace*: a
+    /// watcher has truly missed events only when its own namespace
+    /// lost records — churn elsewhere must not force spurious relists.
+    dropped: BTreeMap<String, u64>,
+    entries: VecDeque<Change>,
+    capacity: usize,
+}
+
+impl Feed {
+    fn drop_mark(&mut self, ns: String, rev: u64) {
+        let slot = self.dropped.entry(ns).or_insert(0);
+        *slot = (*slot).max(rev);
+    }
+
+    fn push(&mut self, c: Change) {
+        if self.capacity == 0 {
+            self.drop_mark(c.ns, c.rev);
+            return;
+        }
+        if self.entries.len() >= self.capacity {
+            if let Some(old) = self.entries.pop_front() {
+                self.drop_mark(old.ns, old.rev);
+            }
+        }
+        self.entries.push_back(c);
+    }
+
+    fn gone(&self, ns: &str, since: u64) -> Option<crate::SubmarineError> {
+        let dropped = self
+            .dropped
+            .get(ns)
+            .copied()
+            .unwrap_or(0)
+            .max(self.floor);
+        if since < dropped {
+            return Some(crate::SubmarineError::Gone(format!(
+                "watch revision {since} has been compacted out of the \
+                 change feed (oldest retained for {ns}: {}); relist \
+                 and resume from the fresh resource_version",
+                dropped + 1
+            )));
+        }
+        // A bookmark past the newest assigned revision is from another
+        // timeline (another server, or a counter that could not be
+        // fully restored). Waiting on it would hang forever — force
+        // the relist instead.
+        if since >= self.next_rev {
+            return Some(crate::SubmarineError::Gone(format!(
+                "watch revision {since} is ahead of the server's \
+                 current revision {} (server restarted?); relist and \
+                 resume from the fresh resource_version",
+                self.next_rev - 1
+            )));
+        }
+        None
+    }
+
+    fn collect(&self, ns: &str, since: u64, limit: usize) -> Vec<Change> {
+        self.entries
+            .iter()
+            .filter(|c| c.rev > since && c.ns == ns)
+            .take(limit.max(1))
+            .cloned()
+            .collect()
+    }
 }
 
 // ---------------------------------------------------------------- shards
@@ -192,11 +306,20 @@ fn storage_err(msg: impl Into<String>) -> crate::SubmarineError {
     crate::SubmarineError::Storage(msg.into())
 }
 
-fn wal_record(op: &str, ns: &str, key: &str, doc: Option<&Json>) -> Vec<u8> {
+fn wal_record(
+    op: &str,
+    ns: &str,
+    key: &str,
+    doc: Option<&Json>,
+    rev: u64,
+) -> Vec<u8> {
     let mut rec = Json::obj()
         .set("op", Json::Str(op.to_string()))
         .set("ns", Json::Str(ns.to_string()))
         .set("key", Json::Str(key.to_string()));
+    if rev > 0 {
+        rec = rec.set("rev", Json::Num(rev as f64));
+    }
     if let Some(d) = doc {
         rec = rec.set("doc", d.clone());
     }
@@ -205,11 +328,28 @@ fn wal_record(op: &str, ns: &str, key: &str, doc: Option<&Json>) -> Vec<u8> {
     line
 }
 
+/// A standalone revision high-water marker (written at WAL rotation):
+/// deletes consume revisions but leave no doc behind, so without this
+/// a compaction could lose the counter's high-water mark and a restart
+/// would re-assign revisions — silently skipping watch events for
+/// clients holding pre-restart bookmarks.
+fn rev_marker(rev: u64) -> Vec<u8> {
+    let mut line = Json::obj()
+        .set("op", Json::Str("rev".into()))
+        .set("rev", Json::Num(rev as f64))
+        .dump()
+        .into_bytes();
+    line.push(b'\n');
+    line
+}
+
 /// Outcome of validating one WAL line.
 enum WalLine {
     Blank,
-    Put { ns: String, key: String, doc: Json },
-    Del { ns: String, key: String },
+    Put { ns: String, key: String, doc: Json, rev: u64 },
+    Del { ns: String, key: String, rev: u64 },
+    /// Revision high-water marker (no document payload).
+    Rev(u64),
     Invalid(String),
 }
 
@@ -227,6 +367,15 @@ fn parse_wal_line(raw: &[u8]) -> WalLine {
         Ok(j) => j,
         Err(e) => return WalLine::Invalid(format!("unparseable: {e}")),
     };
+    // pre-redesign records carry no rev; treat it as 0 (unknown)
+    let rev = rec.get("rev").and_then(Json::as_u64).unwrap_or(0);
+    if rec.str_field("op") == Some("rev") {
+        return if rev > 0 {
+            WalLine::Rev(rev)
+        } else {
+            WalLine::Invalid("rev marker without rev".into())
+        };
+    }
     let ns = match rec.str_field("ns") {
         Some(ns) => ns.to_string(),
         None => return WalLine::Invalid("missing ns".into()),
@@ -238,9 +387,9 @@ fn parse_wal_line(raw: &[u8]) -> WalLine {
     match rec.str_field("op") {
         Some("put") => {
             let doc = rec.get("doc").cloned().unwrap_or(Json::Null);
-            WalLine::Put { ns, key, doc }
+            WalLine::Put { ns, key, doc, rev }
         }
-        Some("del") => WalLine::Del { ns, key },
+        Some("del") => WalLine::Del { ns, key, rev },
         other => WalLine::Invalid(format!("unknown op {other:?}")),
     }
 }
@@ -257,6 +406,10 @@ struct Replay {
     /// the payload, before the terminator): it is applied and included
     /// in `valid_len`, but needs a `\n` before the next append.
     needs_newline: bool,
+    /// Highest revision seen on any record or marker — restores the
+    /// global revision counter across restarts even when the writes
+    /// carrying the top revisions were deletes.
+    max_rev: u64,
 }
 
 /// Replay one WAL file into `data`. Only the final, *unterminated*
@@ -272,6 +425,7 @@ fn replay_wal(
         applied: 0,
         valid_len: 0,
         needs_newline: false,
+        max_rev: 0,
     };
     let bytes = match fs::read(path) {
         Ok(b) => b,
@@ -283,14 +437,19 @@ fn replay_wal(
     let n = bytes.len();
     let mut pos = 0usize;
     let mut line_no = 0usize;
-    let mut apply = |line: WalLine, applied: &mut u64| match line {
-        WalLine::Put { ns, key, doc } => {
+    let mut apply = |line: WalLine, out: &mut Replay| match line {
+        WalLine::Put { ns, key, doc, rev } => {
             data.entry(ns).or_default().insert(key, doc);
-            *applied += 1;
+            out.applied += 1;
+            out.max_rev = out.max_rev.max(rev);
         }
-        WalLine::Del { ns, key } => {
+        WalLine::Del { ns, key, rev } => {
             data.entry(ns).or_default().remove(&key);
-            *applied += 1;
+            out.applied += 1;
+            out.max_rev = out.max_rev.max(rev);
+        }
+        WalLine::Rev(rev) => {
+            out.max_rev = out.max_rev.max(rev);
         }
         WalLine::Blank | WalLine::Invalid(_) => unreachable!(),
     };
@@ -309,7 +468,7 @@ fn replay_wal(
                             path.display()
                         )));
                     }
-                    line => apply(line, &mut out.applied),
+                    line => apply(line, &mut out),
                 }
                 pos += i + 1;
                 out.valid_len = pos as u64;
@@ -329,7 +488,7 @@ fn replay_wal(
                     }
                     line => {
                         // complete record, missing only its newline
-                        apply(line, &mut out.applied);
+                        apply(line, &mut out);
                         out.valid_len = n as u64;
                         out.needs_newline = true;
                     }
@@ -348,6 +507,13 @@ pub struct MetaStore {
     shards: Vec<RwLock<Shard>>,
     /// Declared secondary indexes per namespace.
     defs: RwLock<BTreeMap<String, Vec<IndexDef>>>,
+    /// Global revision counter + bounded change feed. The revision is
+    /// assigned and the record published in one critical section so
+    /// the feed is strictly rev-ordered; writers take it briefly while
+    /// already holding their shard write lock (shard → feed, never the
+    /// reverse).
+    feed: Mutex<Feed>,
+    feed_cv: Condvar,
     opts: StoreOptions,
     dur: Option<Durability>,
     path: Option<PathBuf>,
@@ -361,6 +527,14 @@ impl MetaStore {
                 .map(|_| RwLock::new(Shard::default()))
                 .collect(),
             defs: RwLock::new(BTreeMap::new()),
+            feed: Mutex::new(Feed {
+                next_rev: 1,
+                floor: 0,
+                dropped: BTreeMap::new(),
+                entries: VecDeque::new(),
+                capacity: opts.feed_capacity,
+            }),
+            feed_cv: Condvar::new(),
             opts,
             dur: None,
             path: None,
@@ -371,6 +545,12 @@ impl MetaStore {
     /// Volatile store (tests, benches).
     pub fn in_memory() -> MetaStore {
         MetaStore::empty(StoreOptions::default())
+    }
+
+    /// Volatile store with explicit [`StoreOptions`] (e.g. a small
+    /// `feed_capacity` to exercise watch-resume-after-compaction).
+    pub fn in_memory_with(opts: StoreOptions) -> MetaStore {
+        MetaStore::empty(opts)
     }
 
     /// Durable store over a data directory (created if absent), default
@@ -415,10 +595,12 @@ impl MetaStore {
         // snapshot rename and rotation, and replaying it in full
         // converges on the crash-time state.
         let mut replayed = 0u64;
+        let mut wal_max_rev = 0u64;
         let mut current_tail = Replay {
             applied: 0,
             valid_len: 0,
             needs_newline: false,
+            max_rev: 0,
         };
         for &wg in &scan.wals {
             let rep = replay_wal(
@@ -427,6 +609,7 @@ impl MetaStore {
                 &mut skipped,
             )?;
             replayed += rep.applied;
+            wal_max_rev = wal_max_rev.max(rep.max_rev);
             if wg == gen {
                 current_tail = rep;
             }
@@ -458,6 +641,33 @@ impl MetaStore {
         }
 
         let mut store = MetaStore::empty(opts);
+        // The global revision counter must never regress across a
+        // restart: resume from the max of (a) every WAL record's rev
+        // (deletes consume revs but leave no doc), (b) the rotation
+        // marker a compaction stamps into the fresh WAL, and (c) every
+        // surviving doc's meta.resource_version (covers pre-rev WALs).
+        // The feed itself is volatile: everything before the restart
+        // counts as compacted, so a watcher resuming across it gets
+        // `410 Gone` and relists.
+        let mut max_rev = wal_max_rev;
+        for docs in data.values() {
+            for doc in docs.values() {
+                if let Some(rv) = doc
+                    .at(&["meta", "resource_version"])
+                    .and_then(Json::as_u64)
+                {
+                    max_rev = max_rev.max(rv);
+                }
+            }
+        }
+        {
+            let feed = store
+                .feed
+                .get_mut()
+                .unwrap_or_else(|e| e.into_inner());
+            feed.next_rev = max_rev + 1;
+            feed.floor = max_rev;
+        }
         for (ns, docs) in data {
             let shard = &mut store.shards[shard_of(&ns)];
             let space = shard.get_mut().unwrap().spaces.entry(ns);
@@ -540,29 +750,114 @@ impl MetaStore {
     // ------------------------------------------------------------ writes
 
     pub fn put(&self, ns: &str, key: &str, doc: Json) -> crate::Result<()> {
-        let line = wal_record("put", ns, key, Some(&doc));
-        let ticket = {
+        self.put_rev(ns, key, |_| doc).map(|_| ())
+    }
+
+    /// Put where the new document may embed its assigned revision:
+    /// `make` receives the global revision this write will carry (the
+    /// resource layer stamps it into `meta.resource_version`). The
+    /// record is published to the change feed in the same critical
+    /// section that assigns the revision, so the feed is rev-ordered.
+    pub fn put_rev(
+        &self,
+        ns: &str,
+        key: &str,
+        make: impl FnOnce(u64) -> Json,
+    ) -> crate::Result<u64> {
+        self.publish_put(ns, key, make, false)
+    }
+
+    /// Create-only put: fails with `AlreadyExists` when the key is
+    /// present (checked atomically under the shard write lock) — the
+    /// REST layer's `409` on POST of an existing resource.
+    pub fn create_rev(
+        &self,
+        ns: &str,
+        key: &str,
+        make: impl FnOnce(u64) -> Json,
+    ) -> crate::Result<u64> {
+        self.publish_put(ns, key, make, true)
+    }
+
+    /// The one write protocol behind [`Self::put_rev`] /
+    /// [`Self::create_rev`]: shard write lock -> rev assignment + feed
+    /// publish (one feed critical section, so the feed stays
+    /// rev-ordered) -> memory apply -> WAL.
+    fn publish_put(
+        &self,
+        ns: &str,
+        key: &str,
+        make: impl FnOnce(u64) -> Json,
+        must_create: bool,
+    ) -> crate::Result<u64> {
+        let (ticket, rev) = {
             let mut shard = self.shards[shard_of(ns)].write().unwrap();
             let space = self.space_mut(&mut shard, ns);
+            if must_create && space.docs.contains_key(key) {
+                return Err(crate::SubmarineError::AlreadyExists(
+                    format!("{ns} {key}"),
+                ));
+            }
+            let (doc, rev) = {
+                let mut feed = self.feed_lock();
+                let rev = feed.next_rev;
+                feed.next_rev += 1;
+                let doc = make(rev);
+                feed.push(Change {
+                    rev,
+                    ns: ns.to_string(),
+                    key: key.to_string(),
+                    doc: Some(doc.clone()),
+                });
+                (doc, rev)
+            };
+            self.feed_cv.notify_all();
+            let line = wal_record("put", ns, key, Some(&doc), rev);
             space.put(key, doc);
-            self.log_write(line)?
+            (self.log_write(line)?, rev)
         };
-        self.finish_write(ticket)
+        self.finish_write(ticket)?;
+        Ok(rev)
     }
 
     pub fn delete(&self, ns: &str, key: &str) -> crate::Result<bool> {
-        let line = wal_record("del", ns, key, None);
+        self.delete_if(ns, key, |_| Ok(()))
+    }
+
+    /// Conditional delete: `pred` sees the current doc under the shard
+    /// write lock and may veto (e.g. a stale `If-Match` → a
+    /// `PreconditionFailed` error). Returns `false` when the key does
+    /// not exist. Deletes publish a tombstone to the change feed.
+    pub fn delete_if(
+        &self,
+        ns: &str,
+        key: &str,
+        pred: impl FnOnce(&Json) -> crate::Result<()>,
+    ) -> crate::Result<bool> {
         let ticket = {
             let mut shard = self.shards[shard_of(ns)].write().unwrap();
-            let existed = shard
-                .spaces
-                .get_mut(ns)
-                .map(|space| space.delete(key))
-                .unwrap_or(false);
-            if !existed {
+            let Some(space) = shard.spaces.get_mut(ns) else {
                 return Ok(false);
-            }
-            self.log_write(line)?
+            };
+            let Some(old) = space.docs.get(key) else {
+                return Ok(false);
+            };
+            pred(old)?;
+            space.delete(key);
+            let rev = {
+                let mut feed = self.feed_lock();
+                let rev = feed.next_rev;
+                feed.next_rev += 1;
+                feed.push(Change {
+                    rev,
+                    ns: ns.to_string(),
+                    key: key.to_string(),
+                    doc: None,
+                });
+                rev
+            };
+            self.feed_cv.notify_all();
+            self.log_write(wal_record("del", ns, key, None, rev))?
         };
         self.finish_write(ticket)?;
         Ok(true)
@@ -579,21 +874,120 @@ impl MetaStore {
         key: &str,
         f: impl FnOnce(&Json) -> Option<Json>,
     ) -> crate::Result<bool> {
-        let ticket = {
+        let outcome = self.update_rev(ns, key, |old, _| Ok(f(old)))?;
+        Ok(outcome != UpdateRev::Missing)
+    }
+
+    /// Revision-aware atomic read-modify-write, the substrate of
+    /// optimistic concurrency: `f` sees `(current doc, revision the
+    /// write would carry)` under the shard write lock and returns
+    /// `Ok(Some(new_doc))` to write, `Ok(None)` to leave the doc
+    /// untouched, or `Err` to abort (a stale `If-Match` maps to
+    /// `PreconditionFailed` here — exactly one of two racing
+    /// conditional writers can win).
+    pub fn update_rev(
+        &self,
+        ns: &str,
+        key: &str,
+        f: impl FnOnce(&Json, u64) -> crate::Result<Option<Json>>,
+    ) -> crate::Result<UpdateRev> {
+        let (ticket, rev) = {
             let mut shard = self.shards[shard_of(ns)].write().unwrap();
             let Some(space) = shard.spaces.get_mut(ns) else {
-                return Ok(false);
+                return Ok(UpdateRev::Missing);
             };
             let Some(old) = space.docs.get(key).cloned() else {
-                return Ok(false);
+                return Ok(UpdateRev::Missing);
             };
-            let Some(new_doc) = f(&old) else { return Ok(true) };
-            let line = wal_record("put", ns, key, Some(&new_doc));
+            let (new_doc, rev) = {
+                let mut feed = self.feed_lock();
+                let rev = feed.next_rev;
+                match f(&old, rev)? {
+                    None => return Ok(UpdateRev::Unchanged),
+                    Some(nd) => {
+                        feed.next_rev += 1;
+                        feed.push(Change {
+                            rev,
+                            ns: ns.to_string(),
+                            key: key.to_string(),
+                            doc: Some(nd.clone()),
+                        });
+                        (nd, rev)
+                    }
+                }
+            };
+            self.feed_cv.notify_all();
+            let line = wal_record("put", ns, key, Some(&new_doc), rev);
             space.put(key, new_doc);
-            self.log_write(line)?
+            (self.log_write(line)?, rev)
         };
         self.finish_write(ticket)?;
-        Ok(true)
+        Ok(UpdateRev::Written(rev))
+    }
+
+    // -------------------------------------------------------- change feed
+
+    /// The feed mutex is taken with user-supplied closures on the
+    /// stack (doc builders may panic); recover the guard from a
+    /// poisoned lock instead of bricking every subsequent write. A
+    /// panicking closure can at worst leak an unpublished revision
+    /// number, which watchers simply skip over.
+    fn feed_lock(&self) -> std::sync::MutexGuard<'_, Feed> {
+        self.feed.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// The latest assigned revision (0 before any write) — the list
+    /// bookmark clients resume watches from.
+    pub fn current_rev(&self) -> u64 {
+        self.feed_lock().next_rev - 1
+    }
+
+    /// Feed records for `ns` with revision > `since`, oldest first.
+    /// `Err(Gone)` when `since` predates the oldest retained record —
+    /// the caller must relist and resume from a fresh bookmark.
+    pub fn changes_since(
+        &self,
+        ns: &str,
+        since: u64,
+        limit: usize,
+    ) -> crate::Result<Vec<Change>> {
+        let feed = self.feed_lock();
+        if let Some(gone) = feed.gone(ns, since) {
+            return Err(gone);
+        }
+        Ok(feed.collect(ns, since, limit))
+    }
+
+    /// Blocking [`Self::changes_since`]: waits up to `wait` for at
+    /// least one record past `since`, returning an empty batch on
+    /// timeout. This is the long-poll primitive behind `?watch=1`.
+    pub fn wait_changes(
+        &self,
+        ns: &str,
+        since: u64,
+        wait: Duration,
+        limit: usize,
+    ) -> crate::Result<Vec<Change>> {
+        let deadline = Instant::now() + wait;
+        let mut feed = self.feed_lock();
+        loop {
+            if let Some(gone) = feed.gone(ns, since) {
+                return Err(gone);
+            }
+            let hits = feed.collect(ns, since, limit);
+            if !hits.is_empty() {
+                return Ok(hits);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(Vec::new());
+            }
+            let (g, _) = self
+                .feed_cv
+                .wait_timeout(feed, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            feed = g;
+        }
     }
 
     /// Record the WAL line while the shard lock is held (so per-key WAL
@@ -978,18 +1372,24 @@ impl MetaStore {
             let recs = std::mem::take(&mut p.records);
             let seq = p.seq;
             drop(p);
+            // The fresh WAL opens with a revision high-water marker:
+            // the deleted generations may have held the only records
+            // carrying the top revisions (tombstones), and losing the
+            // mark would make a restarted server re-assign them.
+            let marker = rev_marker(self.current_rev().max(1));
             let rotate = || -> std::io::Result<(fs::File, u64)> {
                 let mut file = fs::OpenOptions::new()
                     .create(true)
                     .append(true)
                     .open(snapshot::wal_path(&d.dir, new_gen))?;
+                file.write_all(&marker)?;
                 if !buf.is_empty() {
                     file.write_all(&buf)?;
-                    if self.opts.sync {
-                        file.sync_data()?;
-                    }
                 }
-                Ok((file, buf.len() as u64))
+                if self.opts.sync {
+                    file.sync_data()?;
+                }
+                Ok((file, (marker.len() + buf.len()) as u64))
             };
             match rotate() {
                 Ok((file, bytes)) => {
@@ -1263,6 +1663,220 @@ mod tests {
         // None leaves the doc untouched
         assert!(s.update("ns", "k", |_| None).unwrap());
         assert_eq!(s.get("ns", "k"), Some(Json::Num(2.0)));
+    }
+
+    #[test]
+    fn revisions_are_monotonic_and_feed_orders_them() {
+        let s = MetaStore::in_memory();
+        assert_eq!(s.current_rev(), 0);
+        let r1 = s.put_rev("ns", "a", |_| Json::Num(1.0)).unwrap();
+        let r2 = s.put_rev("ns", "b", |rev| Json::Num(rev as f64)).unwrap();
+        assert!(r2 > r1);
+        assert_eq!(s.current_rev(), r2);
+        // the doc built by `make` saw its own revision
+        assert_eq!(s.get("ns", "b"), Some(Json::Num(r2 as f64)));
+        let changes = s.changes_since("ns", 0, 100).unwrap();
+        assert_eq!(changes.len(), 2);
+        assert_eq!(changes[0].rev, r1);
+        assert_eq!(changes[1].rev, r2);
+        // deletes publish tombstones
+        s.delete("ns", "a").unwrap();
+        let changes = s.changes_since("ns", r2, 100).unwrap();
+        assert_eq!(changes.len(), 1);
+        assert!(changes[0].doc.is_none());
+        // namespace filtering
+        assert!(s.changes_since("other", 0, 100).unwrap().is_empty());
+    }
+
+    #[test]
+    fn feed_overflow_signals_gone() {
+        let s = MetaStore::in_memory_with(StoreOptions {
+            feed_capacity: 4,
+            ..StoreOptions::default()
+        });
+        for i in 0..10 {
+            s.put("ns", &format!("k{i}"), Json::Num(i as f64)).unwrap();
+        }
+        // rev 0 predates the ring: Gone
+        let err = s.changes_since("ns", 0, 100).unwrap_err();
+        assert_eq!(err.http_status(), 410);
+        // resuming from the current bookmark is clean
+        let rev = s.current_rev();
+        assert!(s.changes_since("ns", rev, 100).unwrap().is_empty());
+    }
+
+    #[test]
+    fn churn_elsewhere_does_not_gone_a_quiet_namespace() {
+        let s = MetaStore::in_memory_with(StoreOptions {
+            feed_capacity: 4,
+            ..StoreOptions::default()
+        });
+        s.put("quiet", "q", Json::Num(0.0)).unwrap(); // rev 1
+        let bookmark = s.current_rev();
+        // heavy churn in another namespace evicts the quiet
+        // namespace's *event*, then rolls far past the bookmark
+        for i in 0..20 {
+            s.put("busy", &format!("k{i}"), Json::Num(i as f64))
+                .unwrap();
+        }
+        // the quiet watcher missed nothing after its bookmark: no 410
+        assert!(s
+            .changes_since("quiet", bookmark, 100)
+            .unwrap()
+            .is_empty());
+        // but a quiet-namespace bookmark from before its own evicted
+        // event is still Gone
+        let err = s.changes_since("quiet", 0, 100).unwrap_err();
+        assert_eq!(err.http_status(), 410);
+        // and the busy namespace reports Gone for stale positions
+        assert_eq!(
+            s.changes_since("busy", 2, 100).unwrap_err().http_status(),
+            410
+        );
+    }
+
+    #[test]
+    fn revision_counter_survives_deletes_and_compaction() {
+        let dir = tmp_dir("rev-hwm");
+        let bookmark;
+        {
+            let s = MetaStore::open(&dir).unwrap();
+            s.put("ns", "a", Json::Num(1.0)).unwrap(); // rev 1
+            s.delete("ns", "a").unwrap(); // tombstone holds rev 2
+            bookmark = s.current_rev();
+            assert_eq!(bookmark, 2);
+        }
+        {
+            // plain restart: WAL records carry their revisions, so
+            // the counter does NOT regress even though no surviving
+            // doc references rev 2 — a pre-restart bookmark can never
+            // silently skip post-restart events
+            let s = MetaStore::open(&dir).unwrap();
+            assert_eq!(s.current_rev(), bookmark);
+            s.put("ns", "b", Json::Num(2.0)).unwrap(); // rev 3
+            let changes = s.changes_since("ns", bookmark, 10).unwrap();
+            assert_eq!(changes.len(), 1);
+            assert!(changes[0].rev > bookmark);
+            // compaction rotates the WAL away; the rotation marker
+            // preserves the high-water mark
+            s.compact().unwrap();
+        }
+        let s = MetaStore::open(&dir).unwrap();
+        assert!(s.current_rev() >= 3, "{}", s.current_rev());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bookmark_from_the_future_is_gone_not_a_hang() {
+        // defense in depth: a bookmark beyond anything ever assigned
+        // (another server's timeline) forces a relist instead of a
+        // wait that can never be satisfied
+        let s = MetaStore::in_memory();
+        s.put("ns", "k", Json::Null).unwrap();
+        assert_eq!(
+            s.changes_since("ns", 999, 10)
+                .unwrap_err()
+                .http_status(),
+            410
+        );
+    }
+
+    #[test]
+    fn create_rev_conflicts_on_existing_key() {
+        let s = MetaStore::in_memory();
+        s.create_rev("ns", "k", |_| Json::Num(1.0)).unwrap();
+        let err = s.create_rev("ns", "k", |_| Json::Num(2.0)).unwrap_err();
+        assert_eq!(err.http_status(), 409);
+        assert_eq!(s.get("ns", "k"), Some(Json::Num(1.0)));
+    }
+
+    #[test]
+    fn update_rev_supports_conditional_writes() {
+        let s = MetaStore::in_memory();
+        assert_eq!(
+            s.update_rev("ns", "k", |_, _| Ok(None)).unwrap(),
+            UpdateRev::Missing
+        );
+        s.put("ns", "k", Json::Num(1.0)).unwrap();
+        // closure veto aborts without writing
+        let err = s
+            .update_rev("ns", "k", |_, _| {
+                Err(crate::SubmarineError::PreconditionFailed(
+                    "stale".into(),
+                ))
+            })
+            .unwrap_err();
+        assert_eq!(err.http_status(), 412);
+        assert_eq!(s.get("ns", "k"), Some(Json::Num(1.0)));
+        match s
+            .update_rev("ns", "k", |_, rev| {
+                Ok(Some(Json::Num(rev as f64)))
+            })
+            .unwrap()
+        {
+            UpdateRev::Written(rev) => {
+                assert_eq!(s.get("ns", "k"), Some(Json::Num(rev as f64)))
+            }
+            other => panic!("expected write, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn wait_changes_wakes_on_write() {
+        use std::sync::Arc;
+        let s = Arc::new(MetaStore::in_memory());
+        let rev = s.current_rev();
+        let watcher = {
+            let s = Arc::clone(&s);
+            std::thread::spawn(move || {
+                s.wait_changes(
+                    "ns",
+                    rev,
+                    Duration::from_secs(5),
+                    16,
+                )
+                .unwrap()
+            })
+        };
+        std::thread::sleep(Duration::from_millis(20));
+        s.put("ns", "k", Json::Num(7.0)).unwrap();
+        let changes = watcher.join().unwrap();
+        assert_eq!(changes.len(), 1);
+        assert_eq!(changes[0].key, "k");
+        // timeout path returns empty, not an error
+        let none = s
+            .wait_changes(
+                "ns",
+                s.current_rev(),
+                Duration::from_millis(10),
+                16,
+            )
+            .unwrap();
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn revision_counter_survives_reopen_via_doc_meta() {
+        let dir = tmp_dir("revs");
+        let rev = {
+            let s = MetaStore::open(&dir).unwrap();
+            s.put_rev("ns", "k", |rev| {
+                Json::obj().set(
+                    "meta",
+                    Json::obj()
+                        .set("resource_version", Json::Num(rev as f64)),
+                )
+            })
+            .unwrap()
+        };
+        let s = MetaStore::open(&dir).unwrap();
+        // counter resumes past the persisted max; old watch positions
+        // are Gone (the feed is volatile)
+        assert_eq!(s.current_rev(), rev);
+        let next = s.put_rev("ns", "k2", |r| Json::Num(r as f64)).unwrap();
+        assert!(next > rev);
+        assert_eq!(s.changes_since("ns", 0, 10).unwrap_err().http_status(), 410);
+        let _ = fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -14,5 +14,8 @@ pub mod kv;
 pub mod metrics;
 pub(crate) mod snapshot;
 
-pub use kv::{CompactReport, MetaStore, StorageStats, StoreOptions};
+pub use kv::{
+    Change, CompactReport, MetaStore, StorageStats, StoreOptions,
+    UpdateRev,
+};
 pub use metrics::{MetricPoint, MetricStore};

@@ -195,17 +195,38 @@ pub struct TemplateManager {
 
 impl TemplateManager {
     pub fn new(store: Arc<MetaStore>) -> TemplateManager {
+        // label selectors on the v2 list walk k=v postings over meta
+        store.define_index(NS, "meta.labels", false);
         TemplateManager { store }
     }
 
     pub fn register(&self, template: &Template) -> crate::Result<()> {
-        if self.store.get(NS, &template.name).is_some() {
-            return Err(crate::SubmarineError::AlreadyExists(format!(
-                "template {}",
-                template.name
-            )));
-        }
-        self.store.put(NS, &template.name, template.to_json())
+        self.register_labeled(template, None)
+    }
+
+    /// Register with client-supplied resource labels; the stored doc
+    /// carries the unified `meta` block. Duplicate names are a 409
+    /// (checked atomically under the storage shard lock).
+    pub fn register_labeled(
+        &self,
+        template: &Template,
+        labels: Option<&Json>,
+    ) -> crate::Result<()> {
+        let labels = match labels {
+            Some(l) => Some(crate::resource::sanitize_labels(l)?),
+            None => None,
+        };
+        self.store
+            .create_rev(NS, &template.name, |rev| {
+                crate::resource::stamp_new(
+                    template.to_json(),
+                    &template.name,
+                    labels.as_ref(),
+                    rev,
+                )
+                .expect("labels sanitized above")
+            })
+            .map(|_| ())
     }
 
     pub fn get(&self, name: &str) -> crate::Result<Template> {

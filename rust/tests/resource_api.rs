@@ -1,0 +1,624 @@
+//! Integration tests for the declarative resource API (ISSUE 4):
+//! unified `meta` blocks, `ETag`/`If-Match` optimistic concurrency
+//! (racing writers), label selectors, long-poll and chunked watch
+//! streams with `410 Gone` resume-after-compaction, transport-error
+//! envelope selection, and the acceptance path — a watcher observing
+//! an execution-engine-driven status transition without polling.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use submarine::cluster::{ClusterSim, Resources};
+use submarine::experiment::monitor::ExperimentMonitor;
+use submarine::experiment::spec::ExperimentSpec;
+use submarine::httpd::http::Request;
+use submarine::httpd::server::{Server, Services};
+use submarine::httpd::{ApiConfig, Router};
+use submarine::orchestrator::engine::EngineConfig;
+use submarine::orchestrator::sim_submitter::SimSubmitter;
+use submarine::orchestrator::Submitter;
+use submarine::scheduler::queue::QueueTree;
+use submarine::scheduler::yarn::YarnScheduler;
+use submarine::sdk::{ExperimentClient, WatchStep};
+use submarine::storage::{MetaStore, MetricStore, StoreOptions};
+use submarine::util::clock::SimTime;
+use submarine::util::json::Json;
+
+struct NullSubmitter;
+impl Submitter for NullSubmitter {
+    fn name(&self) -> &'static str {
+        "null"
+    }
+    fn submit(&self, _: &str, _: &ExperimentSpec) -> submarine::Result<()> {
+        Ok(())
+    }
+    fn kill(&self, _: &str) -> submarine::Result<()> {
+        Ok(())
+    }
+}
+
+fn services_over(store: Arc<MetaStore>) -> Arc<Services> {
+    Arc::new(Services::new(store, Arc::new(NullSubmitter)))
+}
+
+fn api(store: Arc<MetaStore>) -> Router {
+    submarine::httpd::server::build_router(services_over(store))
+}
+
+fn dispatch(r: &Router, method: &str, path: &str, body: &str) -> (u16, Json) {
+    let mut req = Request::synthetic(method, path);
+    req.body = body.as_bytes().to_vec();
+    let resp = r.dispatch(&req);
+    let j = Json::parse(std::str::from_utf8(&resp.body).unwrap_or("null"))
+        .unwrap_or(Json::Null);
+    (resp.status, j)
+}
+
+const SPEC: &str = r#"{"meta":{"name":"mnist"},
+    "spec":{"Worker":{"replicas":1,"resources":"cpu=1"}}}"#;
+
+fn post_experiment(r: &Router, body: &str) -> String {
+    let (st, j) = dispatch(r, "POST", "/api/v2/experiment", body);
+    assert_eq!(st, 200, "{j:?}");
+    j.at(&["result", "experimentId"])
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .to_string()
+}
+
+// ------------------------------------------------------------ concurrency
+
+#[test]
+fn racing_if_match_puts_exactly_one_wins() {
+    let r = Arc::new(api(Arc::new(MetaStore::in_memory())));
+    let id = post_experiment(&r, SPEC);
+    let (_, j) =
+        dispatch(&r, "GET", &format!("/api/v2/experiment/{id}"), "");
+    let rv = j
+        .at(&["result", "meta", "resource_version"])
+        .and_then(Json::as_u64)
+        .unwrap();
+
+    let put = |r: &Router, replicas: u32, rv: u64| -> u16 {
+        let mut req = Request::synthetic(
+            "PUT",
+            &format!("/api/v2/experiment/{id}"),
+        );
+        req.body = format!(
+            r#"{{"spec":{{"meta":{{"name":"mnist"}},
+                "spec":{{"Worker":{{"replicas":{replicas},
+                                    "resources":"cpu=1"}}}}}}}}"#
+        )
+        .into_bytes();
+        req.headers
+            .insert("if-match".into(), format!("\"{rv}\""));
+        r.dispatch(&req).status
+    };
+
+    // two writers race with the same base revision: the storage layer
+    // checks If-Match under the shard write lock, so exactly one wins
+    let mut handles = Vec::new();
+    for replicas in [2u32, 3u32] {
+        let r = Arc::clone(&r);
+        let id = id.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut req = Request::synthetic(
+                "PUT",
+                &format!("/api/v2/experiment/{id}"),
+            );
+            req.body = format!(
+                r#"{{"spec":{{"meta":{{"name":"mnist"}},
+                    "spec":{{"Worker":{{"replicas":{replicas},
+                                        "resources":"cpu=1"}}}}}}}}"#
+            )
+            .into_bytes();
+            req.headers
+                .insert("if-match".into(), format!("\"{rv}\""));
+            r.dispatch(&req).status
+        }));
+    }
+    let mut statuses: Vec<u16> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    statuses.sort_unstable();
+    assert_eq!(statuses, vec![200, 412], "one winner, one loser");
+
+    // the loser can rebase: re-read and retry with the fresh revision
+    let (_, j) =
+        dispatch(&r, "GET", &format!("/api/v2/experiment/{id}"), "");
+    let fresh = j
+        .at(&["result", "meta", "resource_version"])
+        .and_then(Json::as_u64)
+        .unwrap();
+    assert!(fresh > rv);
+    assert_eq!(put(&r, 5, fresh), 200);
+}
+
+#[test]
+fn conditional_delete_and_create_conflict() {
+    let r = api(Arc::new(MetaStore::in_memory()));
+    // duplicate environment create is 409
+    let env = r#"{"name":"tf","image":"i","dependencies":[]}"#;
+    let (st, _) = dispatch(&r, "POST", "/api/v2/environment", env);
+    assert_eq!(st, 200);
+    let (st, j) = dispatch(&r, "POST", "/api/v2/environment", env);
+    assert_eq!(st, 409, "{j:?}");
+    // stale If-Match delete is 412; fresh one succeeds
+    let (_, j) = dispatch(&r, "GET", "/api/v2/environment/tf", "");
+    let rv = j
+        .at(&["result", "meta", "resource_version"])
+        .and_then(Json::as_u64)
+        .unwrap();
+    let del = |if_match: &str| -> u16 {
+        let mut req =
+            Request::synthetic("DELETE", "/api/v2/environment/tf");
+        req.headers
+            .insert("if-match".into(), if_match.to_string());
+        r.dispatch(&req).status
+    };
+    assert_eq!(del(&format!("\"{}\"", rv + 999)), 412);
+    assert_eq!(del(&format!("\"{rv}\"")), 200);
+    let (st, _) = dispatch(&r, "GET", "/api/v2/environment/tf", "");
+    assert_eq!(st, 404);
+}
+
+// ------------------------------------------------------------------ watch
+
+#[test]
+fn long_poll_watch_delivers_and_resumes_after_compaction() {
+    // tiny feed so compaction is easy to trigger
+    let store = Arc::new(MetaStore::in_memory_with(StoreOptions {
+        feed_capacity: 4,
+        ..StoreOptions::default()
+    }));
+    let r = api(store);
+    let (_, j) = dispatch(&r, "GET", "/api/v2/experiment", "");
+    let rv0 = j
+        .at(&["result", "resource_version"])
+        .and_then(Json::as_u64)
+        .unwrap();
+    let id = post_experiment(&r, SPEC);
+    // watch from the pre-create bookmark sees the create event
+    let (st, j) = dispatch(
+        &r,
+        "GET",
+        &format!("/api/v2/experiment?watch=1&since={rv0}&timeout_ms=1000"),
+        "",
+    );
+    assert_eq!(st, 200, "{j:?}");
+    let events = j.at(&["result", "events"]).unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    assert_eq!(events[0].str_field("type"), Some("PUT"));
+    assert_eq!(events[0].str_field("name"), Some(id.as_str()));
+    assert_eq!(
+        events[0].at(&["object", "status"]).and_then(Json::as_str),
+        Some("Accepted")
+    );
+    let resume = j
+        .at(&["result", "resource_version"])
+        .and_then(Json::as_u64)
+        .unwrap();
+    assert!(resume > rv0);
+
+    // overflow the feed: the old position is now 410 Gone
+    for _ in 0..8 {
+        post_experiment(&r, SPEC);
+    }
+    let (st, j) = dispatch(
+        &r,
+        "GET",
+        &format!("/api/v2/experiment?watch=1&since={rv0}&timeout_ms=10"),
+        "",
+    );
+    assert_eq!(st, 410, "{j:?}");
+    assert_eq!(
+        j.at(&["error", "type"]).and_then(Json::as_str),
+        Some("Gone")
+    );
+    // the documented recovery: relist (fresh bookmark), then rewatch
+    let (st, j) = dispatch(&r, "GET", "/api/v2/experiment", "");
+    assert_eq!(st, 200);
+    let fresh = j
+        .at(&["result", "resource_version"])
+        .and_then(Json::as_u64)
+        .unwrap();
+    assert_eq!(
+        j.at(&["result", "total"]).and_then(Json::as_f64),
+        Some(9.0)
+    );
+    let (st, j) = dispatch(
+        &r,
+        "GET",
+        &format!(
+            "/api/v2/experiment?watch=1&since={fresh}&timeout_ms=10"
+        ),
+        "",
+    );
+    assert_eq!(st, 200, "{j:?}");
+    assert!(j
+        .at(&["result", "events"])
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .is_empty());
+}
+
+#[test]
+fn watch_validates_params_and_scopes_deletes() {
+    let r = api(Arc::new(MetaStore::in_memory()));
+    let (st, _) = dispatch(
+        &r,
+        "GET",
+        "/api/v2/experiment?watch=1&since=abc",
+        "",
+    );
+    assert_eq!(st, 400);
+    // deletes surface as tombstone events
+    let (_, j) = dispatch(&r, "GET", "/api/v2/experiment", "");
+    let rv = j
+        .at(&["result", "resource_version"])
+        .and_then(Json::as_u64)
+        .unwrap();
+    let id = post_experiment(&r, SPEC);
+    let (st, _) = dispatch(
+        &r,
+        "DELETE",
+        &format!("/api/v2/experiment/{id}"),
+        "",
+    );
+    assert_eq!(st, 200);
+    let (st, j) = dispatch(
+        &r,
+        "GET",
+        &format!("/api/v2/experiment?watch=1&since={rv}&timeout_ms=10"),
+        "",
+    );
+    assert_eq!(st, 200);
+    let events = j.at(&["result", "events"]).unwrap().as_arr().unwrap();
+    let types: Vec<&str> = events
+        .iter()
+        .filter_map(|e| e.str_field("type"))
+        .collect();
+    // create (PUT), kill status write (PUT), tombstone (DELETE)
+    assert!(types.contains(&"DELETE"), "{types:?}");
+    assert_eq!(types.last(), Some(&"DELETE"));
+}
+
+// ------------------------------------------------------- selectors + meta
+
+#[test]
+fn label_selectors_walk_the_index() {
+    let r = api(Arc::new(MetaStore::in_memory()));
+    let labeled = |team: &str, tier: &str| -> String {
+        format!(
+            r#"{{"meta":{{"name":"m","labels":{{"team":"{team}",
+                "tier":"{tier}"}}}},
+                "spec":{{"Worker":{{"replicas":1,
+                                    "resources":"cpu=1"}}}}}}"#
+        )
+    };
+    post_experiment(&r, &labeled("vision", "prod"));
+    post_experiment(&r, &labeled("vision", "dev"));
+    post_experiment(&r, &labeled("nlp", "prod"));
+    post_experiment(&r, SPEC); // unlabeled
+
+    let total = |path: &str| -> f64 {
+        let (st, j) = dispatch(&r, "GET", path, "");
+        assert_eq!(st, 200, "{path}: {j:?}");
+        j.at(&["result", "total"]).and_then(Json::as_f64).unwrap()
+    };
+    assert_eq!(total("/api/v2/experiment?label=team=vision"), 2.0);
+    assert_eq!(
+        total("/api/v2/experiment?label=team=vision,tier=prod"),
+        1.0
+    );
+    assert_eq!(total("/api/v2/experiment?label=team=robotics"), 0.0);
+    assert_eq!(total("/api/v2/experiment"), 4.0);
+    // selector composes with the status index filter
+    assert_eq!(
+        total("/api/v2/experiment?label=team=vision&status=accepted"),
+        2.0
+    );
+    // malformed selector is a 400
+    let (st, _) =
+        dispatch(&r, "GET", "/api/v2/experiment?label=oops", "");
+    assert_eq!(st, 400);
+    // selectors work on templates/environments too
+    let (st, _) = dispatch(
+        &r,
+        "POST",
+        "/api/v2/environment",
+        r#"{"name":"e1","image":"i","dependencies":[],
+            "labels":{"team":"vision"}}"#,
+    );
+    assert_eq!(st, 200);
+    assert_eq!(total("/api/v2/environment?label=team=vision"), 1.0);
+    assert_eq!(total("/api/v2/environment?label=team=nlp"), 0.0);
+}
+
+// --------------------------------------------------- transport envelopes
+
+#[test]
+fn transport_errors_pick_envelope_from_request_line() {
+    let store = Arc::new(MetaStore::in_memory());
+    let server = Arc::new(
+        Server::bind_with_config(
+            services_over(store),
+            0,
+            &ApiConfig::default(),
+        )
+        .unwrap(),
+    );
+    let port = server.port();
+    let stop = server.stopper();
+    let handle = Arc::clone(&server).serve_background();
+
+    let roundtrip = |raw: &str| -> String {
+        let mut stream =
+            TcpStream::connect(("127.0.0.1", port)).unwrap();
+        stream.write_all(raw.as_bytes()).unwrap();
+        let _ = stream.shutdown(std::net::Shutdown::Write);
+        let mut buf = String::new();
+        let _ = stream.read_to_string(&mut buf);
+        buf
+    };
+    // a v2 request line that fails to parse answers in the v2 envelope
+    let v2 = roundtrip("GET /api/v2/experiment SPDY/9\r\n\r\n");
+    assert!(v2.contains("400"), "{v2}");
+    assert!(v2.contains(r#""code":400"#), "{v2}");
+    assert!(v2.contains(r#""type":"InvalidSpec""#), "{v2}");
+    // a v1 request line keeps the flat envelope
+    let v1 = roundtrip("GET /api/v1/experiment SPDY/9\r\n\r\n");
+    assert!(v1.contains("400"), "{v1}");
+    assert!(!v1.contains(r#""code":400"#), "{v1}");
+    assert!(v1.contains(r#""message""#), "{v1}");
+
+    stop.store(true, Ordering::Relaxed);
+    let _ = TcpStream::connect(("127.0.0.1", port));
+    handle.join().unwrap();
+}
+
+// --------------------------------------------------------- SDK over TCP
+
+struct TestServer {
+    port: u16,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TestServer {
+    fn start(store: Arc<MetaStore>) -> TestServer {
+        let server = Arc::new(
+            Server::bind_with_config(
+                services_over(store),
+                0,
+                &ApiConfig::default(),
+            )
+            .unwrap(),
+        );
+        let port = server.port();
+        let stop = server.stopper();
+        let handle = Arc::clone(&server).serve_background();
+        TestServer {
+            port,
+            stop,
+            handle: Some(handle),
+        }
+    }
+
+    fn client(&self) -> ExperimentClient {
+        ExperimentClient::v2("127.0.0.1", self.port)
+    }
+}
+
+impl Drop for TestServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(("127.0.0.1", self.port));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[test]
+fn sdk_update_if_and_patch_roundtrip() {
+    let srv = TestServer::start(Arc::new(MetaStore::in_memory()));
+    let client = srv.client();
+    let spec = ExperimentSpec::parse(SPEC).unwrap();
+    let id = client.create_experiment(&spec).unwrap();
+
+    let doc = client.get_resource("experiment", &id).unwrap();
+    let rv = doc
+        .at(&["meta", "resource_version"])
+        .and_then(Json::as_u64)
+        .unwrap();
+    // conditional update with the fresh revision wins
+    let put_doc = Json::obj().set(
+        "spec",
+        Json::parse(
+            r#"{"meta":{"name":"mnist"},
+                "spec":{"Worker":{"replicas":2,"resources":"cpu=2"}}}"#,
+        )
+        .unwrap(),
+    );
+    let updated = client
+        .update_if("experiment", &id, &put_doc, rv)
+        .unwrap();
+    let new_rv = updated
+        .at(&["meta", "resource_version"])
+        .and_then(Json::as_u64)
+        .unwrap();
+    assert!(new_rv > rv);
+    // ...and the stale revision now surfaces as PreconditionFailed
+    let err = client
+        .update_if("experiment", &id, &put_doc, rv)
+        .unwrap_err();
+    assert!(
+        matches!(
+            err,
+            submarine::SubmarineError::PreconditionFailed(_)
+        ),
+        "{err}"
+    );
+    // merge-patch labels, then find it by selector
+    client
+        .patch_resource(
+            "experiment",
+            &id,
+            &Json::parse(r#"{"meta":{"labels":{"team":"vision"}}}"#)
+                .unwrap(),
+        )
+        .unwrap();
+    let res = client
+        .list_resources("experiment", Some("team=vision"))
+        .unwrap();
+    assert_eq!(res.num_field("total"), Some(1.0));
+}
+
+#[test]
+fn sdk_watcher_resyncs_after_compaction() {
+    let store = Arc::new(MetaStore::in_memory_with(StoreOptions {
+        feed_capacity: 4,
+        ..StoreOptions::default()
+    }));
+    let srv = TestServer::start(store);
+    let client = srv.client();
+    let spec = ExperimentSpec::parse(SPEC).unwrap();
+    for _ in 0..9 {
+        client.create_experiment(&spec).unwrap();
+    }
+    // revision 1 has long been compacted: the watcher recovers with a
+    // relist and resumes cleanly
+    let mut w = client.watcher("experiment", 1).with_timeout_ms(500);
+    match w.next().unwrap() {
+        WatchStep::Resync(items) => assert_eq!(items.len(), 9),
+        other => panic!("expected resync, got {other:?}"),
+    }
+    let resumed = w.since;
+    assert!(resumed > 1);
+    // new events flow normally after the resync
+    let id = client.create_experiment(&spec).unwrap();
+    match w.next().unwrap() {
+        WatchStep::Events(events) => {
+            assert!(events
+                .iter()
+                .any(|e| e.str_field("name") == Some(id.as_str())));
+        }
+        other => panic!("expected events, got {other:?}"),
+    }
+}
+
+#[test]
+fn chunked_stream_watch_over_tcp() {
+    let srv = TestServer::start(Arc::new(MetaStore::in_memory()));
+    let client = srv.client();
+    let bookmark = client.resource_bookmark("experiment").unwrap();
+    let spec = ExperimentSpec::parse(SPEC).unwrap();
+    let id = client.create_experiment(&spec).unwrap();
+
+    let mut stream =
+        TcpStream::connect(("127.0.0.1", srv.port)).unwrap();
+    write!(
+        stream,
+        "GET /api/v2/experiment?watch=1&stream=1&since={bookmark}\
+         &timeout_ms=300 HTTP/1.1\r\nhost: x\r\n\r\n"
+    )
+    .unwrap();
+    let mut buf = String::new();
+    stream.read_to_string(&mut buf).unwrap(); // server closes at timeout
+    assert!(buf.contains("transfer-encoding: chunked"), "{buf}");
+    assert!(buf.contains(r#""type":"PUT""#), "{buf}");
+    assert!(buf.contains(&id), "{buf}");
+    assert!(buf.contains(r#""type":"BOOKMARK""#), "{buf}");
+    // terminal zero-length chunk ends the stream
+    assert!(buf.ends_with("0\r\n\r\n"), "{buf}");
+}
+
+// ------------------------------------------------- acceptance: execution
+
+/// Full-stack acceptance: a watcher started at `since=REV` observes an
+/// execution-engine-driven status transition (Accepted → Running →
+/// Succeeded) **without a single status poll**.
+#[test]
+fn watcher_sees_engine_driven_transition_without_polling() {
+    let sim =
+        ClusterSim::homogeneous(2, Resources::new(16, 65536, 4), 2);
+    let submitter = Arc::new(
+        SimSubmitter::new(
+            Box::new(YarnScheduler::new(QueueTree::flat())),
+            sim,
+            Arc::new(ExperimentMonitor::new()),
+        )
+        .with_container_duration(SimTime::from_millis(200)),
+    );
+    let services = Arc::new(Services::with_sim_executor(
+        Arc::new(MetaStore::in_memory()),
+        submitter,
+        Arc::new(MetricStore::new()),
+        EngineConfig {
+            tick: std::time::Duration::from_millis(1),
+            sim_step: SimTime::from_millis(50),
+        },
+    ));
+    let server = Arc::new(
+        Server::bind_with_config(services, 0, &ApiConfig::default())
+            .unwrap(),
+    );
+    let port = server.port();
+    let stop = server.stopper();
+    let handle = Arc::clone(&server).serve_background();
+
+    let client = ExperimentClient::v2("127.0.0.1", port);
+    let since = client.resource_bookmark("experiment").unwrap();
+    let spec = ExperimentSpec::parse(
+        r#"{"meta":{"name":"watched"},
+            "spec":{"Worker":{"replicas":2,
+                              "resources":"cpu=1,gpu=1"}}}"#,
+    )
+    .unwrap();
+    let id = client.create_experiment(&spec).unwrap();
+
+    // only the watch stream from here on — no GET /experiment/:id
+    let mut w =
+        client.watcher("experiment", since).with_timeout_ms(2_000);
+    let deadline = std::time::Instant::now()
+        + std::time::Duration::from_secs(30);
+    let mut seen: Vec<String> = Vec::new();
+    while std::time::Instant::now() < deadline {
+        match w.next().unwrap() {
+            WatchStep::Events(events) => {
+                for e in events {
+                    if e.str_field("name") != Some(id.as_str()) {
+                        continue;
+                    }
+                    if let Some(st) = e
+                        .at(&["object", "status"])
+                        .and_then(Json::as_str)
+                    {
+                        seen.push(st.to_string());
+                    }
+                }
+            }
+            WatchStep::Resync(_) => {
+                panic!("feed compacted mid-test (capacity too small?)")
+            }
+        }
+        if seen.iter().any(|s| s == "Succeeded") {
+            break;
+        }
+    }
+    assert!(
+        seen.iter().any(|s| s == "Running"),
+        "never saw Running: {seen:?}"
+    );
+    assert!(
+        seen.iter().any(|s| s == "Succeeded"),
+        "never saw Succeeded: {seen:?}"
+    );
+
+    stop.store(true, Ordering::Relaxed);
+    let _ = TcpStream::connect(("127.0.0.1", port));
+    handle.join().unwrap();
+}
