@@ -20,7 +20,9 @@ use submarine::httpd::{Envelope, Request, Response, Router};
 use submarine::orchestrator::Submitter;
 use submarine::sdk::ExperimentClient;
 use submarine::storage::MetaStore;
-use submarine::util::bench::{bench, bench_params, fmt_secs, Table};
+use submarine::util::bench::{
+    bench, bench_params, fmt_secs, record_result, Table,
+};
 use submarine::util::json::Json;
 
 // ---------------------------------------------------------------- seed
@@ -233,6 +235,7 @@ fn main() {
         "trie speedup over linear scan: {:.2}x",
         lin_stats.mean / trie_stats.mean
     );
+    record_result("http.trie_dispatch", lin_stats.mean, trie_stats.mean);
 
     // ---- end-to-end request throughput over TCP --------------------
     let services = Arc::new(Services::new(
@@ -286,6 +289,36 @@ fn main() {
     println!(
         "keep-alive speedup over connection-per-request: {:.2}x",
         close_stats.mean / keep_stats.mean
+    );
+    record_result("http.keepalive", close_stats.mean, keep_stats.mean);
+
+    // ---- repeat-GET of a cached-body resource over keep-alive ------
+    // Register one template, then hammer its item GET: after the first
+    // request the server answers from the revision-keyed encoded-body
+    // cache. Informational only — GET /cluster is a different endpoint,
+    // not this op's pre-PR path, so no BENCH_5.json entry is recorded
+    // here (the apples-to-apples repeat-GET baseline race lives in
+    // benches/storage.rs as storage.repeat_get).
+    let tpl = Json::parse(
+        r#"{"name":"bench-tpl",
+            "experimentSpec":{"meta":{"name":"m"},
+            "spec":{"Worker":{"replicas":1,"resources":"cpu=1"}}}}"#,
+    )
+    .unwrap();
+    let (status, _) = client
+        .request("POST", "/api/v2/template", Some(&tpl))
+        .unwrap();
+    assert_eq!(status, 200, "template registration failed");
+    let cached_stats = bench(iters, secs, || {
+        let (status, _) = client
+            .request("GET", "/api/v2/template/bench-tpl", None)
+            .unwrap();
+        assert_eq!(status, 200);
+    });
+    println!(
+        "cached-body item GET p50 {} (for scale: cluster render p50 {})",
+        fmt_secs(cached_stats.p50),
+        fmt_secs(keep_stats.p50),
     );
 
     stop.store(true, std::sync::atomic::Ordering::Relaxed);

@@ -12,7 +12,7 @@
 use submarine::resource::Selector;
 use submarine::storage::MetaStore;
 use submarine::util::bench::{
-    bench, bench_params, fmt_secs, scaled, Table,
+    bench, bench_params, fmt_secs, record_result, scaled, Table,
 };
 use submarine::util::json::Json;
 
@@ -102,6 +102,34 @@ fn bench_watch_fanout() {
         "watch speedup over polling fan-out: {:.2}x",
         poll.mean / watch.mean
     );
+    record_result("resource.watch_fanout", poll.mean, watch.mean);
+
+    // --- fan-out cost per delivered event (ISSUE 5) ----------------
+    // Pre-PR, every feed read deep-cloned each event's document; now a
+    // batch hand-out is refcount bumps. Race the two on one batch.
+    let cursor = store.current_rev().saturating_sub(64);
+    let batch = store.changes_since(NS, cursor, 64).unwrap();
+    assert!(!batch.is_empty());
+    let (iters, secs) = bench_params(300, 0.3);
+    let deep = bench(iters, secs, || {
+        for c in &batch {
+            std::hint::black_box(
+                c.doc.as_ref().map(|d| d.json().clone()),
+            );
+        }
+    });
+    let shared = bench(iters, secs, || {
+        for c in &batch {
+            std::hint::black_box(c.doc.clone());
+        }
+    });
+    println!(
+        "event hand-out: deep clone {} vs Arc {} per batch ({:.2}x)",
+        fmt_secs(deep.p50),
+        fmt_secs(shared.p50),
+        deep.mean / shared.mean
+    );
+    record_result("resource.watch_event_handout", deep.mean, shared.mean);
 }
 
 /// `?label=team=team3` — index walk vs loading and matching every doc.
@@ -156,6 +184,7 @@ fn bench_selector() {
         "index speedup over selector scan: {:.2}x",
         scan.mean / indexed.mean
     );
+    record_result("resource.selector_index", scan.mean, indexed.mean);
 }
 
 fn main() {

@@ -1,17 +1,22 @@
-//! E-STORE — the storage engine v2 hot paths (ISSUE 2 acceptance):
+//! E-STORE — the storage engine hot paths (ISSUE 2 + ISSUE 5
+//! acceptance):
 //!
 //! 1. indexed filtered list vs the seed's scan-and-filter,
 //! 2. group-committed WAL appends vs per-write fsync under concurrency,
-//! 3. recovery replay time: snapshot + WAL tail vs pure-WAL replay.
+//! 3. recovery replay time: snapshot + WAL tail vs pure-WAL replay,
+//! 4. repeat-GET: deep-clone + re-serialize (pre-ISSUE-5 read path)
+//!    vs `Arc` hand-out + revision-cached encoded body,
+//! 5. list pages: per-row deep clones vs shared documents.
 //!
 //! Run: `cargo bench --bench storage` (`BENCH_SMOKE=1` shrinks the
-//! workloads; CI runs smoke mode and archives the output).
+//! workloads, and records baseline/optimized pairs into
+//! `BENCH_5.json`; CI runs smoke mode and archives both).
 
 use std::path::PathBuf;
 use std::sync::Arc;
 use submarine::storage::{MetaStore, StoreOptions};
 use submarine::util::bench::{
-    bench, bench_params, fmt_secs, scaled, Table,
+    bench, bench_params, fmt_secs, record_result, scaled, Table,
 };
 use submarine::util::clock::Stopwatch;
 use submarine::util::json::Json;
@@ -89,6 +94,151 @@ fn bench_indexed_list() {
     println!(
         "index speedup over scan: {:.2}x",
         scan.mean / indexed.mean
+    );
+    record_result("storage.indexed_list", scan.mean, indexed.mean);
+}
+
+/// The pre-ISSUE-5 serializer in miniature: per-char string writes and
+/// `format!`-allocating numbers — what `Json::dump` cost before the
+/// byte-buffer rewrite, raced as the repeat-GET baseline.
+fn baseline_dump(j: &Json) -> String {
+    fn write_str(out: &mut String, s: &str) {
+        out.push('"');
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\r' => out.push_str("\\r"),
+                '\t' => out.push_str("\\t"),
+                '\x08' => out.push_str("\\b"),
+                '\x0c' => out.push_str("\\f"),
+                c if (c as u32) < 0x20 => {
+                    out.push_str(&format!("\\u{:04x}", c as u32))
+                }
+                c => out.push(c),
+            }
+        }
+        out.push('"');
+    }
+    fn write(j: &Json, out: &mut String) {
+        match j {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(n) => {
+                if n.is_finite() && *n == n.trunc() && n.abs() < 1e15 {
+                    out.push_str(&format!("{}", *n as i64));
+                } else if n.is_finite() {
+                    out.push_str(&format!("{}", n));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => write_str(out, s),
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write(v, out);
+                }
+                out.push(']');
+            }
+            Json::Obj(o) => {
+                out.push('{');
+                for (i, (k, v)) in o.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_str(out, k);
+                    out.push(':');
+                    write(v, out);
+                }
+                out.push('}');
+            }
+        }
+    }
+    let mut s = String::new();
+    write(j, &mut s);
+    s
+}
+
+/// Repeat-GET and list-page read paths: the pre-PR semantics (deep
+/// clone out of the map, re-serialize per request) reproduced in-bench
+/// vs the shared-`Arc` + cached-encoded-body paths.
+fn bench_hot_reads() {
+    let n = scaled(10_000);
+    let store = MetaStore::in_memory();
+    for i in 0..n {
+        store.put("exp", &format!("e{i:06}"), doc(i)).unwrap();
+    }
+    let (iters, secs) = bench_params(200, 0.5);
+
+    // --- repeat GET of a small working set (the dashboard reload) ---
+    let hot: Vec<String> =
+        (0..64).map(|i| format!("e{:06}", i * (n / 64).max(1))).collect();
+    let get_baseline = bench(iters, secs, || {
+        for k in &hot {
+            let d = store.get("exp", k).unwrap();
+            let owned = d.json().clone(); // pre-PR: deep clone out
+            std::hint::black_box(baseline_dump(&owned)); // + serialize
+        }
+    });
+    let get_cached = bench(iters, secs, || {
+        for k in &hot {
+            let d = store.get("exp", k).unwrap(); // refcount bump
+            std::hint::black_box(d.encoded()); // cached bytes
+        }
+    });
+
+    // --- one list page of 50 --------------------------------------
+    let page_baseline = bench(iters, secs, || {
+        let (page, total) = store.page("exp", n / 2, Some(50));
+        // pre-PR: every row deep-cloned for the caller
+        let owned: Vec<(String, Json)> = page
+            .iter()
+            .map(|(k, d)| (k.clone(), d.json().clone()))
+            .collect();
+        std::hint::black_box((owned, total));
+    });
+    let page_shared = bench(iters, secs, || {
+        std::hint::black_box(store.page("exp", n / 2, Some(50)));
+    });
+
+    let mut t = Table::new(
+        &format!("hot reads, {n} docs (64 repeat-GETs / page of 50)"),
+        &["path", "p50", "p95", "ops/s"],
+    );
+    for (name, s) in [
+        ("GET: clone + serialize (pre-PR)", &get_baseline),
+        ("GET: Arc + cached body", &get_cached),
+        ("page: deep-clone rows (pre-PR)", &page_baseline),
+        ("page: shared rows", &page_shared),
+    ] {
+        t.row(&[
+            name.into(),
+            fmt_secs(s.p50),
+            fmt_secs(s.p95),
+            format!("{:.0}", s.throughput(1.0)),
+        ]);
+    }
+    t.print();
+    println!(
+        "repeat-GET speedup: {:.2}x, list-page speedup: {:.2}x",
+        get_baseline.mean / get_cached.mean,
+        page_baseline.mean / page_shared.mean
+    );
+    record_result(
+        "storage.repeat_get",
+        get_baseline.mean,
+        get_cached.mean,
+    );
+    record_result(
+        "storage.list_page",
+        page_baseline.mean,
+        page_shared.mean,
     );
 }
 
@@ -169,6 +319,7 @@ fn bench_group_commit() {
     }
     t.print();
     println!("group-commit speedup: {:.2}x", direct / grouped);
+    record_result("storage.group_commit", direct, grouped);
 }
 
 fn bench_recovery() {
@@ -222,8 +373,12 @@ fn bench_recovery() {
 }
 
 fn main() {
-    println!("E-STORE: storage engine v2 (index / group commit / recovery)");
+    println!(
+        "E-STORE: storage engine (index / group commit / recovery / \
+         hot reads)"
+    );
     bench_indexed_list();
+    bench_hot_reads();
     bench_group_commit();
     bench_recovery();
 }

@@ -72,6 +72,7 @@ impl ExperimentManager {
             let needs_meta = doc.get("meta").is_none();
             if needs_status || needs_meta {
                 let accepted = ExperimentStatus::Accepted.as_str();
+                let doc = doc.json().clone();
                 let doc = if needs_status {
                     doc.set("status", Json::Str(accepted.into()))
                 } else {
@@ -147,14 +148,13 @@ impl ExperimentManager {
     }
 
     pub fn get(&self, id: &str) -> crate::Result<Json> {
-        let mut doc = self.store.get(NS, id).ok_or_else(|| {
+        let doc = self.store.get(NS, id).ok_or_else(|| {
             crate::SubmarineError::NotFound(format!("experiment {id}"))
         })?;
-        doc = doc.set(
+        Ok(doc.json().clone().set(
             "status",
             Json::Str(self.status(id).as_str().to_string()),
-        );
-        Ok(doc)
+        ))
     }
 
     pub fn spec_of(&self, id: &str) -> crate::Result<ExperimentSpec> {
@@ -220,7 +220,7 @@ impl ExperimentManager {
         offset: usize,
         limit: Option<usize>,
     ) -> (Vec<(String, ExperimentStatus)>, usize) {
-        let rows = |page: Vec<(String, Json)>| {
+        let rows = |page: Vec<(String, std::sync::Arc<crate::storage::Doc>)>| {
             page.into_iter()
                 .map(|(id, doc)| {
                     let st = self.status_of_doc(&id, &doc);

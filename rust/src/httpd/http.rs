@@ -244,6 +244,10 @@ pub struct Response {
     /// chunked transfer-encoding and the connection closes after the
     /// stream ends; `body` is ignored.
     pub stream: Option<StreamBody>,
+    /// Advertised `Content-Length` when the body is intentionally not
+    /// materialized (the HEAD fast path over a cached encoded body).
+    /// `None` means "length of `body`".
+    pub declared_len: Option<usize>,
 }
 
 impl std::fmt::Debug for Response {
@@ -260,12 +264,43 @@ impl std::fmt::Debug for Response {
 
 impl Response {
     pub fn json(status: u16, body: Json) -> Response {
+        let mut buf = Vec::with_capacity(128);
+        body.dump_into(&mut buf);
+        Self::from_bytes(status, "application/json", buf)
+    }
+
+    /// A response over a pre-serialized body (the cached-document fast
+    /// path splices stored bytes instead of re-serializing).
+    pub fn from_bytes(
+        status: u16,
+        content_type: &'static str,
+        body: Vec<u8>,
+    ) -> Response {
         Response {
             status,
-            content_type: "application/json",
-            body: body.dump().into_bytes(),
+            content_type,
+            body,
             headers: Vec::new(),
             stream: None,
+            declared_len: None,
+        }
+    }
+
+    /// A body-less response advertising `Content-Length: len` — HEAD
+    /// answered from a cached encoded body without ever materializing
+    /// the bytes that would not be sent.
+    pub fn head_with_len(
+        status: u16,
+        content_type: &'static str,
+        len: usize,
+    ) -> Response {
+        Response {
+            status,
+            content_type,
+            body: Vec::new(),
+            headers: Vec::new(),
+            stream: None,
+            declared_len: Some(len),
         }
     }
 
@@ -281,6 +316,7 @@ impl Response {
             body: Vec::new(),
             headers: Vec::new(),
             stream: Some(StreamBody::new(producer)),
+            declared_len: None,
         }
     }
 
@@ -387,7 +423,7 @@ impl Response {
             self.status,
             self.reason(),
             self.content_type,
-            self.body.len()
+            self.declared_len.unwrap_or(self.body.len())
         )?;
         for (k, v) in &self.headers {
             write!(w, "{k}: {v}\r\n")?;

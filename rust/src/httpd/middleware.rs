@@ -10,7 +10,7 @@ use super::http::{Request, Response};
 use super::router::error_response;
 use crate::storage::MetricStore;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Continuation invoking the rest of the chain and the handler.
@@ -165,34 +165,86 @@ impl Middleware for MetricsMiddleware {
 
 /// Optional token-bucket rate limiter (global, `rate` requests/sec
 /// sustained with a burst of `burst`). Over-limit requests get 429.
+///
+/// Lock-free (ISSUE 5): the bucket lives in one `AtomicU64` packing
+/// milli-tokens (high 32 bits) and the last-refill time in wrapping
+/// milliseconds since construction (low 32 bits). A grant is one CAS;
+/// a denial is one load — the limiter stopped being a global mutex
+/// every request had to queue on.
 pub struct RateLimitMiddleware {
     rate: f64,
-    burst: f64,
-    state: Mutex<(f64, Instant)>, // (tokens, last refill)
+    /// Burst cap in milli-tokens (clamped so it packs into 32 bits).
+    burst_m: u32,
+    start: Instant,
+    /// `(tokens_milli << 32) | last_refill_ms`.
+    state: AtomicU64,
+}
+
+const MILLI: f64 = 1000.0;
+
+fn pack(tokens_m: u32, last_ms: u32) -> u64 {
+    ((tokens_m as u64) << 32) | last_ms as u64
+}
+
+fn unpack(state: u64) -> (u32, u32) {
+    ((state >> 32) as u32, state as u32)
 }
 
 impl RateLimitMiddleware {
     pub fn new(rate: f64, burst: f64) -> RateLimitMiddleware {
         let rate = rate.max(1e-9);
-        let burst = burst.max(1.0);
+        // full 32-bit range would overflow the milli-token packing
+        let burst_m =
+            (burst.max(1.0) * MILLI).min(u32::MAX as f64) as u32;
         RateLimitMiddleware {
             rate,
-            burst,
-            state: Mutex::new((burst, Instant::now())),
+            burst_m,
+            start: Instant::now(),
+            state: AtomicU64::new(pack(burst_m, 0)),
         }
     }
 
     fn try_take(&self) -> bool {
-        let mut s = self.state.lock().unwrap();
-        let now = Instant::now();
-        let elapsed = now.duration_since(s.1).as_secs_f64();
-        s.0 = (s.0 + elapsed * self.rate).min(self.burst);
-        s.1 = now;
-        if s.0 >= 1.0 {
-            s.0 -= 1.0;
-            true
-        } else {
-            false
+        // wrapping ms: elapsed stays correct across the ~49-day wrap
+        // as long as refills are less than 49 days apart
+        let now_ms = self.start.elapsed().as_millis() as u32;
+        loop {
+            let cur = self.state.load(Ordering::Relaxed);
+            let (tokens_m, last_ms) = unpack(cur);
+            // A racing thread may have stored a *newer* timestamp than
+            // this thread's `now_ms` sample; the wrapped difference
+            // would then read as ~49 days and refill the whole burst.
+            // Differences within 60s of the wrap point can only be
+            // that race (threads diverge by scheduling delays, not
+            // minutes): clamp them to zero and keep the newer
+            // timestamp so time never flows backwards. Larger values
+            // are genuine idle time and refill normally.
+            let raw = now_ms.wrapping_sub(last_ms);
+            let (elapsed_ms, new_last) = if raw > u32::MAX - 60_000 {
+                (0.0, last_ms)
+            } else {
+                (raw as f64, now_ms)
+            };
+            let refilled = (tokens_m as f64 + elapsed_ms * self.rate)
+                .min(self.burst_m as f64);
+            if refilled < MILLI {
+                // denial path: no write, no contention — the refill
+                // credit stays derivable from the unchanged timestamp
+                return false;
+            }
+            let next = pack((refilled - MILLI) as u32, new_last);
+            if self
+                .state
+                .compare_exchange_weak(
+                    cur,
+                    next,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                )
+                .is_ok()
+            {
+                return true;
+            }
         }
     }
 }
@@ -298,6 +350,30 @@ mod tests {
         assert_eq!(run_chain(&chain, &req, None, &ok_terminal).status, 200);
         let limited = run_chain(&chain, &req, None, &ok_terminal);
         assert_eq!(limited.status, 429);
+    }
+
+    #[test]
+    fn rate_limiter_grants_exactly_burst_under_contention() {
+        // negligible refill rate: 8 threads race for exactly 64 tokens
+        let mw = Arc::new(RateLimitMiddleware::new(0.000001, 64.0));
+        let granted = Arc::new(AtomicU64::new(0));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let mw = Arc::clone(&mw);
+                let granted = Arc::clone(&granted);
+                std::thread::spawn(move || {
+                    for _ in 0..64 {
+                        if mw.try_take() {
+                            granted.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(granted.load(Ordering::Relaxed), 64);
     }
 
     #[test]

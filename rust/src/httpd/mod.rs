@@ -29,5 +29,5 @@ pub use http::{Request, Response};
 pub use middleware::Middleware;
 pub use resource::{Caps, FilterSpec, ResourceKind};
 pub use router::{Envelope, RawHandler, Router};
-pub use server::Server;
+pub use server::{Server, ServerOptions};
 pub use v2::ApiConfig;

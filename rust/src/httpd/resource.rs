@@ -27,14 +27,16 @@
 
 use super::handler::{typed, Ctx, Extract, Page};
 use super::http::{ChunkSink, Request, Response, StreamProducer};
-use super::router::{wrap_err, wrap_ok, Envelope, Router};
+use super::router::{
+    v2_ok_head, v2_ok_raw, wrap_err, wrap_ok, Envelope, Router,
+};
 use super::server::Services;
 use crate::resource::{
     labels_of, merge_patch, resource_version, sanitize_labels,
     stamp_update, strip_meta, strip_volatile, Selector,
 };
-use crate::storage::{Change, MetaStore, UpdateRev};
-use crate::util::json::Json;
+use crate::storage::{Change, Doc, MetaStore, UpdateRev};
+use crate::util::json::{write_json_string, write_json_u64, Json};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -130,6 +132,16 @@ pub trait ResourceKind: Send + Sync {
     fn render_doc(&self, s: &Services, key: &str, doc: Json) -> Json {
         let _ = (s, key);
         doc
+    }
+
+    /// Whether [`Self::render_doc`] is the identity (the default). If
+    /// so, item GETs are served straight from the stored document's
+    /// revision-keyed encoded-body cache — no render, no serialize —
+    /// and HEADs answer `Content-Length` without materializing a body.
+    /// **Must** be overridden to `false` by any kind that also
+    /// overrides `render_doc`, or GETs will bypass the overlay.
+    fn serves_cached_doc(&self) -> bool {
+        true
     }
 
     /// PUT/PATCH: build the full replacement document from the old doc
@@ -286,21 +298,15 @@ pub fn register_kind(
         );
     }
     {
+        // Item GET is a raw route: the hot path answers straight from
+        // the document's cached encoded body (one splice into the v2
+        // envelope), which the enveloped-Json contract can't express.
         let s = Arc::clone(s);
         let k = Arc::clone(kind);
-        r.route(
+        r.route_raw(
             "GET",
             &item,
-            Envelope::V2,
-            typed(move |ctx: &Ctx<'_>, _: ()| {
-                let key = k.item_key(ctx)?;
-                let doc = s
-                    .store
-                    .get(k.ns(), &key)
-                    .ok_or_else(|| not_found(&*k, &key))?;
-                ctx.set_resp_header("ETag", &etag_of(&doc));
-                Ok(k.render_doc(&s, &key, doc))
-            }),
+            Arc::new(move |ctx: &Ctx<'_>| get_item(&s, &k, ctx)),
         );
     }
     if caps.update {
@@ -329,6 +335,38 @@ pub fn register_kind(
             }),
         );
     }
+}
+
+/// Item GET/HEAD. Kinds with identity rendering are served from the
+/// revision-keyed body cache: first GET of a revision serializes once,
+/// every repeat GET (and every HEAD) after that splices the shared
+/// bytes — zero parse, zero render, zero serialize. Kinds with a
+/// render overlay (experiment live status) keep the rendered path.
+fn get_item(
+    s: &Services,
+    kind: &Arc<dyn ResourceKind>,
+    ctx: &Ctx<'_>,
+) -> Response {
+    let key = match kind.item_key(ctx) {
+        Ok(key) => key,
+        Err(e) => return wrap_err(Envelope::V2, &e),
+    };
+    let Some(doc) = s.store.get(kind.ns(), &key) else {
+        return wrap_err(Envelope::V2, &not_found(&**kind, &key));
+    };
+    let etag = etag_of(&doc);
+    let resp = if kind.serves_cached_doc() {
+        let body = doc.encoded();
+        if ctx.req.method.eq_ignore_ascii_case("HEAD") {
+            v2_ok_head(body.len())
+        } else {
+            v2_ok_raw(&body)
+        }
+    } else {
+        let rendered = kind.render_doc(s, &key, doc.json().clone());
+        wrap_ok(Envelope::V2, rendered)
+    };
+    resp.with_header("ETag", &etag)
 }
 
 fn intersect(a: Vec<String>, b: Vec<String>) -> Vec<String> {
@@ -405,12 +443,13 @@ fn list(
             Some(prev) => intersect(prev, keys),
         });
     }
-    let (rows, total): (Vec<(String, Json)>, usize) = match candidates {
+    let (rows, total): (Vec<(String, Arc<Doc>)>, usize) = match candidates
+    {
         // unfiltered: page the primary map inside the store
         None => s.store.page(ns, page.offset, page.limit),
         Some(keys) => {
             if selector.pairs.len() > 1 {
-                let mut matched: Vec<(String, Json)> = Vec::new();
+                let mut matched: Vec<(String, Arc<Doc>)> = Vec::new();
                 for k in keys {
                     if let Some(d) = s.store.get(ns, &k) {
                         if selector.matches(&d) {
@@ -465,17 +504,18 @@ fn write_resource(
         // sanitizing — happens here against a snapshot, OUTSIDE the
         // storage locks, so one slow PUT cannot stall other writers
         // or the change feed.
-        let snapshot = s
+        let shared = s
             .store
             .get(ns, &key)
             .ok_or_else(|| not_found(&**kind, &key))?;
-        check_precondition(expected.as_ref(), &snapshot)?;
+        let snapshot = shared.json();
+        check_precondition(expected.as_ref(), snapshot)?;
         let desired = if is_patch {
-            merge_patch(&snapshot, body)
+            merge_patch(snapshot, body)
         } else {
             body.clone()
         };
-        let new_doc = kind.apply_update(s, &key, &snapshot, &desired)?;
+        let new_doc = kind.apply_update(s, &key, snapshot, &desired)?;
         // labels: client-specified (meta.labels or top-level labels)
         // or carried over from the stored doc
         let new_labels = match desired
@@ -483,15 +523,15 @@ fn write_resource(
             .or_else(|| desired.get("labels"))
         {
             Some(l) => sanitize_labels(l)?,
-            None => labels_of(&snapshot),
+            None => labels_of(snapshot),
         };
         let old_meta =
             snapshot.get("meta").cloned().unwrap_or_else(Json::obj);
         let new_doc =
             new_doc.set("meta", old_meta.set("labels", new_labels));
         // no-op writes don't bump resource_version or spam the feed
-        let noop = strip_meta(&new_doc) == strip_meta(&snapshot)
-            && labels_of(&new_doc) == labels_of(&snapshot);
+        let noop = strip_meta(&new_doc) == strip_meta(snapshot)
+            && labels_of(&new_doc) == labels_of(snapshot);
 
         // Commit under the shard lock: the doc must still be exactly
         // the snapshot we validated (this subsumes the If-Match check
@@ -500,15 +540,15 @@ fn write_resource(
         let mut stale = false;
         let mut written: Option<Json> = None;
         let outcome = s.store.update_rev(ns, &key, |old, rev| {
-            if *old != snapshot {
+            if old != snapshot {
                 stale = true;
                 return Ok(None);
             }
             if noop {
                 return Ok(None);
             }
-            let bump = strip_volatile(&new_doc)
-                != strip_volatile(&snapshot);
+            let bump =
+                strip_volatile(&new_doc) != strip_volatile(snapshot);
             let stamped = stamp_update(
                 new_doc.clone(),
                 &kind.display_name(&key),
@@ -529,9 +569,9 @@ fn write_resource(
                 // the hook (e.g. Production demotion) — the retry
                 // must finish the job instead of being swallowed by
                 // no-op detection
-                kind.post_update(s, &key, &snapshot)?;
-                ctx.set_resp_header("ETag", &etag_of(&snapshot));
-                Ok(kind.render_doc(s, &key, snapshot))
+                kind.post_update(s, &key, snapshot)?;
+                ctx.set_resp_header("ETag", &etag_of(snapshot));
+                Ok(kind.render_doc(s, &key, snapshot.clone()))
             }
             UpdateRev::Written(rev) => {
                 let doc = written.expect("written doc recorded");
@@ -633,7 +673,8 @@ fn watch_params(ctx: &Ctx<'_>) -> crate::Result<WatchParams> {
     })
 }
 
-/// One change-feed record in its wire shape.
+/// One change-feed record in its wire shape (long-poll batches embed
+/// it in the response envelope as parsed JSON).
 fn change_json(kind: &dyn ResourceKind, c: &Change) -> Json {
     let ty = if c.doc.is_some() { "PUT" } else { "DELETE" };
     let mut j = Json::obj()
@@ -642,9 +683,40 @@ fn change_json(kind: &dyn ResourceKind, c: &Change) -> Json {
         .set("name", Json::Str(kind.display_name(&c.key)))
         .set("resource_version", Json::Num(c.rev as f64));
     if let Some(d) = &c.doc {
-        j = j.set("object", d.clone());
+        j = j.set("object", d.json().clone());
     }
     j
+}
+
+/// One change-feed record as a ready-to-send stream line: the event
+/// shell is written field-by-field and the object payload is spliced
+/// in from the document's cached serialization — watch fan-out to N
+/// streams serializes each revision at most once, globally. Byte-equal
+/// to `change_json(..).dump()` plus the trailing newline.
+fn change_line(kind: &dyn ResourceKind, c: &Change) -> Vec<u8> {
+    let enc = c.doc.as_ref().map(|d| d.encoded());
+    let name = kind.display_name(&c.key);
+    let mut line = Vec::with_capacity(
+        96 + name.len() + enc.as_ref().map_or(0, |e| e.len()),
+    );
+    line.extend_from_slice(b"{\"type\":");
+    line.extend_from_slice(if c.doc.is_some() {
+        b"\"PUT\""
+    } else {
+        b"\"DELETE\""
+    });
+    line.extend_from_slice(b",\"kind\":");
+    write_json_string(&mut line, kind.kind());
+    line.extend_from_slice(b",\"name\":");
+    write_json_string(&mut line, &name);
+    line.extend_from_slice(b",\"resource_version\":");
+    write_json_u64(&mut line, c.rev);
+    if let Some(e) = &enc {
+        line.extend_from_slice(b",\"object\":");
+        line.extend_from_slice(e);
+    }
+    line.extend_from_slice(b"}\n");
+    line
 }
 
 /// Long-poll: block until at least one matching event lands past
@@ -732,10 +804,7 @@ fn stream_watch(
                             continue;
                         }
                     }
-                    sink.chunk(
-                        format!("{}\n", change_json(&*kind, c).dump())
-                            .as_bytes(),
-                    )?;
+                    sink.chunk(&change_line(kind, c))?;
                 }
             }
         }

@@ -53,6 +53,34 @@ pub fn wrap_ok(envelope: Envelope, result: Json) -> Response {
     }
 }
 
+/// The exact byte prefix `wrap_ok(Envelope::V2, ..)` serializes to —
+/// kept in lockstep by `v2_raw_envelope_matches_wrap_ok` so the
+/// cached-body fast path below stays byte-compatible.
+const V2_OK_PREFIX: &[u8] = b"{\"status\":\"OK\",\"code\":200,\"result\":";
+
+/// v2 success response spliced around a pre-serialized result — the
+/// repeat-GET fast path writes a stored document's cached bytes
+/// without re-serializing (or even re-parsing) anything.
+pub fn v2_ok_raw(result: &[u8]) -> Response {
+    let mut body =
+        Vec::with_capacity(V2_OK_PREFIX.len() + result.len() + 1);
+    body.extend_from_slice(V2_OK_PREFIX);
+    body.extend_from_slice(result);
+    body.push(b'}');
+    Response::from_bytes(200, "application/json", body)
+}
+
+/// v2 success HEAD response for a result whose encoded length is
+/// already known — advertises the GET body's `Content-Length` without
+/// materializing a body that will not be sent.
+pub fn v2_ok_head(result_len: usize) -> Response {
+    Response::head_with_len(
+        200,
+        "application/json",
+        V2_OK_PREFIX.len() + result_len + 1,
+    )
+}
+
 /// Error wrapping with an explicit machine-readable kind.
 pub fn error_json(
     envelope: Envelope,
@@ -389,6 +417,17 @@ mod tests {
             .headers
             .insert("authorization".into(), "Bearer secret".into());
         assert_eq!(r.dispatch(&authed).status, 200);
+    }
+
+    #[test]
+    fn v2_raw_envelope_matches_wrap_ok() {
+        let result = Json::parse(r#"{"a":[1,2],"b":"x"}"#).unwrap();
+        let enveloped = wrap_ok(Envelope::V2, result.clone());
+        let raw = v2_ok_raw(&result.dump().into_bytes());
+        assert_eq!(enveloped.body, raw.body);
+        let head = v2_ok_head(result.dump().len());
+        assert_eq!(head.declared_len, Some(raw.body.len()));
+        assert!(head.body.is_empty());
     }
 
     #[test]

@@ -128,6 +128,11 @@ impl ResourceKind for ExperimentKind {
         let st = s.experiments.status_of_doc(key, &doc);
         doc.set("status", Json::Str(st.as_str().to_string()))
     }
+    /// `render_doc` overlays the live monitor status, so experiment
+    /// GETs cannot be served from the stored document's body cache.
+    fn serves_cached_doc(&self) -> bool {
+        false
+    }
     fn apply_update(
         &self,
         _s: &Services,

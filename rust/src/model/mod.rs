@@ -300,6 +300,7 @@ impl ModelRegistry {
         if to == Stage::Production {
             self.demote_other_production(name, &key, u64::MAX)?;
         }
+        let doc = doc.json().clone();
         self.store.put_rev(NS, &key, |rev| {
             crate::resource::stamp_update(
                 doc.set("stage", Json::Str(to.as_str().into())),

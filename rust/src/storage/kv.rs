@@ -26,25 +26,83 @@
 //!   v2 list endpoints O(log n + page) filtered reads instead of
 //!   namespace scans.
 //! - **Observe:** every write is assigned a monotonically increasing
-//!   global revision and published to a bounded in-memory change feed
-//!   ([`Change`]) in the same critical section, so `?watch=1&since=REV`
-//!   streams deliver updates without polling; a `since` that has fallen
-//!   off the ring answers `410 Gone` and the client relists. The
-//!   rev-assign + publish critical section runs the caller's doc
-//!   builder under the (global) feed mutex — strict feed ordering is
-//!   bought with a short cross-shard serialization window on writes;
-//!   reads never take it beyond a ring scan.
+//!   global revision (an `AtomicU64` — no lock) and published to a
+//!   bounded in-memory change feed ([`Change`]), so
+//!   `?watch=1&since=REV` streams deliver updates without polling; a
+//!   `since` that has fallen off the ring answers `410 Gone` and the
+//!   client relists. The caller's doc builder runs *outside* the feed
+//!   mutex (it used to run inside, serializing every cross-shard write
+//!   on one lock); a small sequencer re-orders completions so the feed
+//!   still publishes strictly rev-ordered.
+//! - **Zero-clone reads (ISSUE 5):** documents are stored as
+//!   [`Arc<Doc>`]; `get`, list pages, and feed entries hand out
+//!   refcount bumps instead of deep clones, and each `Doc` lazily
+//!   caches its compact serialization (`Arc<[u8]>`) so repeat GETs and
+//!   watch fan-out write cached bytes straight to the socket. The cache
+//!   is revision-keyed implicitly: every write installs a fresh `Doc`,
+//!   so a cached body can never outlive its revision.
 
 use crate::storage::index::{FieldIndex, IndexDef};
 use crate::storage::snapshot;
-use crate::util::json::Json;
+use crate::util::json::{write_json_string, write_json_u64, Json};
 use std::collections::{BTreeMap, VecDeque};
 use std::fs;
 use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex, MutexGuard, RwLock};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, RwLock};
 use std::time::{Duration, Instant};
+
+/// A stored document: the parsed JSON plus a lazily-filled,
+/// revision-keyed cache of its compact serialization. Readers share the
+/// same allocation via `Arc<Doc>`; writers always install a *new* `Doc`
+/// (fresh empty cache), which is what makes the cache safe — the
+/// revision bump that already invalidates ETags also invalidates this.
+#[derive(Debug)]
+pub struct Doc {
+    json: Json,
+    encoded: OnceLock<Arc<[u8]>>,
+}
+
+impl Doc {
+    pub fn new(json: Json) -> Doc {
+        Doc {
+            json,
+            encoded: OnceLock::new(),
+        }
+    }
+
+    /// The parsed document.
+    pub fn json(&self) -> &Json {
+        &self.json
+    }
+
+    /// Compact serialization of the document, computed once per
+    /// revision and shared by every reader from then on (repeat GETs,
+    /// watch fan-out, WAL appends).
+    pub fn encoded(&self) -> Arc<[u8]> {
+        Arc::clone(self.encoded.get_or_init(|| {
+            let mut buf = Vec::with_capacity(128);
+            self.json.dump_into(&mut buf);
+            Arc::from(buf)
+        }))
+    }
+
+    /// The cached serialization only if someone already paid for it —
+    /// lets cache-opportunistic consumers (snapshot writes splice
+    /// warm docs and serialize cold ones) avoid *forcing* a fill,
+    /// which would pin encoded bytes for documents nobody reads.
+    pub fn encoded_if_cached(&self) -> Option<Arc<[u8]>> {
+        self.encoded.get().map(Arc::clone)
+    }
+}
+
+impl std::ops::Deref for Doc {
+    type Target = Json;
+    fn deref(&self) -> &Json {
+        &self.json
+    }
+}
 
 /// Namespaces hash onto this many independently locked shards.
 pub const SHARD_COUNT: usize = 16;
@@ -111,7 +169,8 @@ pub struct CompactReport {
 /// One record in the bounded in-memory change feed (ISSUE 4): every
 /// write is assigned a monotonically increasing global revision and
 /// published here so `?watch=1&since=REV` streams see it without
-/// polling.
+/// polling. The document rides as an [`Arc<Doc>`], so fanning one
+/// change out to N watchers is N refcount bumps, not N deep clones.
 #[derive(Debug, Clone)]
 pub struct Change {
     /// Global revision assigned to this write.
@@ -119,7 +178,7 @@ pub struct Change {
     pub ns: String,
     pub key: String,
     /// `Some(doc)` for puts, `None` for deletes.
-    pub doc: Option<Json>,
+    pub doc: Option<Arc<Doc>>,
 }
 
 /// Outcome of a conditional [`MetaStore::update_rev`].
@@ -134,8 +193,17 @@ pub enum UpdateRev {
 }
 
 struct Feed {
-    /// Next revision to assign (revisions start at 1).
-    next_rev: u64,
+    /// Highest revision published to the ring, in order. Revisions are
+    /// *assigned* lock-free from [`MetaStore::next_rev`]; completions
+    /// arrive here possibly out of order and [`Feed::sequence`] holds
+    /// them back until every predecessor has landed, so the ring stays
+    /// strictly rev-ordered without running doc builders under this
+    /// mutex.
+    published: u64,
+    /// Completions waiting for a predecessor (`None` = the revision
+    /// was allocated but the write was declined/aborted — a gap the
+    /// sequencer must still step over).
+    pending: BTreeMap<u64, Option<Change>>,
     /// Global floor set at open: the whole pre-restart history counts
     /// as compacted (the feed is volatile).
     floor: u64,
@@ -166,7 +234,37 @@ impl Feed {
         self.entries.push_back(c);
     }
 
-    fn gone(&self, ns: &str, since: u64) -> Option<crate::SubmarineError> {
+    /// The publish-in-order sequencer: record `rev`'s completion and
+    /// flush the now-contiguous run onto the ring. Returns whether any
+    /// entry became visible (the caller notifies watchers then).
+    fn sequence(&mut self, rev: u64, change: Option<Change>) -> bool {
+        debug_assert!(rev > self.published, "revision published twice");
+        self.pending.insert(rev, change);
+        let mut advanced = false;
+        loop {
+            let next = self.published + 1;
+            match self.pending.remove(&next) {
+                None => break,
+                Some(entry) => {
+                    self.published = next;
+                    if let Some(c) = entry {
+                        self.push(c);
+                        advanced = true;
+                    }
+                }
+            }
+        }
+        advanced
+    }
+
+    /// `next_rev` is the assigned-revision counter (loaded from the
+    /// store's atomic) — it bounds what a legitimate bookmark can be.
+    fn gone(
+        &self,
+        ns: &str,
+        since: u64,
+        next_rev: u64,
+    ) -> Option<crate::SubmarineError> {
         let dropped = self
             .dropped
             .get(ns)
@@ -185,12 +283,12 @@ impl Feed {
         // timeline (another server, or a counter that could not be
         // fully restored). Waiting on it would hang forever — force
         // the relist instead.
-        if since >= self.next_rev {
+        if since >= next_rev {
             return Some(crate::SubmarineError::Gone(format!(
                 "watch revision {since} is ahead of the server's \
                  current revision {} (server restarted?); relist and \
                  resume from the fresh resource_version",
-                self.next_rev - 1
+                next_rev - 1
             )));
         }
         None
@@ -210,19 +308,19 @@ impl Feed {
 
 #[derive(Default)]
 struct Namespace {
-    docs: BTreeMap<String, Json>,
+    docs: BTreeMap<String, Arc<Doc>>,
     indexes: Vec<FieldIndex>,
 }
 
 impl Namespace {
-    fn put(&mut self, key: &str, doc: Json) {
+    fn put(&mut self, key: &str, doc: Arc<Doc>) {
         if let Some(old) = self.docs.get(key) {
             for idx in &mut self.indexes {
-                idx.remove(key, old);
+                idx.remove(key, old.json());
             }
         }
         for idx in &mut self.indexes {
-            idx.add(key, &doc);
+            idx.add(key, doc.json());
         }
         self.docs.insert(key.to_string(), doc);
     }
@@ -231,7 +329,7 @@ impl Namespace {
         match self.docs.remove(key) {
             Some(old) => {
                 for idx in &mut self.indexes {
-                    idx.remove(key, &old);
+                    idx.remove(key, old.json());
                 }
                 true
             }
@@ -306,25 +404,62 @@ fn storage_err(msg: impl Into<String>) -> crate::SubmarineError {
     crate::SubmarineError::Storage(msg.into())
 }
 
+/// Guard tying an allocated revision to its mandatory sequencer
+/// hand-off: [`RevGuard::publish`] delivers the change, and plain drop
+/// (a declined conditional write, an `Err`, or a panicking doc builder)
+/// delivers an explicit gap — without one or the other the sequencer
+/// would stall behind the missing revision forever.
+struct RevGuard<'a> {
+    store: &'a MetaStore,
+    rev: u64,
+    done: bool,
+}
+
+impl RevGuard<'_> {
+    fn publish(mut self, change: Change) {
+        self.done = true;
+        self.store.sequence(self.rev, Some(change));
+    }
+}
+
+impl Drop for RevGuard<'_> {
+    fn drop(&mut self) {
+        if !self.done {
+            self.store.sequence(self.rev, None);
+        }
+    }
+}
+
+/// Build one WAL line without cloning the document: the record shell is
+/// written field-by-field into one buffer and the payload is spliced in
+/// from the doc's cached serialization (also warming the cache the
+/// first GET would otherwise pay for).
 fn wal_record(
     op: &str,
     ns: &str,
     key: &str,
-    doc: Option<&Json>,
+    doc: Option<&Doc>,
     rev: u64,
 ) -> Vec<u8> {
-    let mut rec = Json::obj()
-        .set("op", Json::Str(op.to_string()))
-        .set("ns", Json::Str(ns.to_string()))
-        .set("key", Json::Str(key.to_string()));
+    let enc = doc.map(|d| d.encoded());
+    let payload = enc.as_ref().map(|e| e.len()).unwrap_or(0);
+    let mut line =
+        Vec::with_capacity(48 + ns.len() + key.len() + payload);
+    line.extend_from_slice(b"{\"op\":");
+    write_json_string(&mut line, op);
+    line.extend_from_slice(b",\"ns\":");
+    write_json_string(&mut line, ns);
+    line.extend_from_slice(b",\"key\":");
+    write_json_string(&mut line, key);
     if rev > 0 {
-        rec = rec.set("rev", Json::Num(rev as f64));
+        line.extend_from_slice(b",\"rev\":");
+        write_json_u64(&mut line, rev);
     }
-    if let Some(d) = doc {
-        rec = rec.set("doc", d.clone());
+    if let Some(e) = &enc {
+        line.extend_from_slice(b",\"doc\":");
+        line.extend_from_slice(e);
     }
-    let mut line = rec.dump().into_bytes();
-    line.push(b'\n');
+    line.extend_from_slice(b"}\n");
     line
 }
 
@@ -334,12 +469,10 @@ fn wal_record(
 /// would re-assign revisions — silently skipping watch events for
 /// clients holding pre-restart bookmarks.
 fn rev_marker(rev: u64) -> Vec<u8> {
-    let mut line = Json::obj()
-        .set("op", Json::Str("rev".into()))
-        .set("rev", Json::Num(rev as f64))
-        .dump()
-        .into_bytes();
-    line.push(b'\n');
+    let mut line = Vec::with_capacity(32);
+    line.extend_from_slice(b"{\"op\":\"rev\",\"rev\":");
+    write_json_u64(&mut line, rev);
+    line.extend_from_slice(b"}\n");
     line
 }
 
@@ -507,11 +640,15 @@ pub struct MetaStore {
     shards: Vec<RwLock<Shard>>,
     /// Declared secondary indexes per namespace.
     defs: RwLock<BTreeMap<String, Vec<IndexDef>>>,
-    /// Global revision counter + bounded change feed. The revision is
-    /// assigned and the record published in one critical section so
-    /// the feed is strictly rev-ordered; writers take it briefly while
-    /// already holding their shard write lock (shard → feed, never the
-    /// reverse).
+    /// Next revision to assign (revisions start at 1). Lock-free: a
+    /// writer grabs its revision with one `fetch_add` while holding
+    /// only its shard lock, builds the document, and hands the result
+    /// to the feed sequencer — cross-shard writes no longer serialize
+    /// on the feed mutex for the duration of the doc builder.
+    next_rev: AtomicU64,
+    /// Bounded change feed + publish sequencer; writers take it only
+    /// for the (short) publish step while already holding their shard
+    /// write lock (shard → feed, never the reverse).
     feed: Mutex<Feed>,
     feed_cv: Condvar,
     opts: StoreOptions,
@@ -527,8 +664,10 @@ impl MetaStore {
                 .map(|_| RwLock::new(Shard::default()))
                 .collect(),
             defs: RwLock::new(BTreeMap::new()),
+            next_rev: AtomicU64::new(1),
             feed: Mutex::new(Feed {
-                next_rev: 1,
+                published: 0,
+                pending: BTreeMap::new(),
                 floor: 0,
                 dropped: BTreeMap::new(),
                 entries: VecDeque::new(),
@@ -660,12 +799,13 @@ impl MetaStore {
                 }
             }
         }
+        store.next_rev = AtomicU64::new(max_rev + 1);
         {
             let feed = store
                 .feed
                 .get_mut()
                 .unwrap_or_else(|e| e.into_inner());
-            feed.next_rev = max_rev + 1;
+            feed.published = max_rev;
             feed.floor = max_rev;
         }
         for (ns, docs) in data {
@@ -673,7 +813,7 @@ impl MetaStore {
             let space = shard.get_mut().unwrap().spaces.entry(ns);
             let space = space.or_default();
             for (k, v) in docs {
-                space.docs.insert(k, v);
+                space.docs.insert(k, Arc::new(Doc::new(v)));
             }
         }
         store.dur = Some(Durability {
@@ -780,9 +920,9 @@ impl MetaStore {
     }
 
     /// The one write protocol behind [`Self::put_rev`] /
-    /// [`Self::create_rev`]: shard write lock -> rev assignment + feed
-    /// publish (one feed critical section, so the feed stays
-    /// rev-ordered) -> memory apply -> WAL.
+    /// [`Self::create_rev`]: shard write lock -> lock-free rev
+    /// assignment -> doc build (no feed mutex) -> memory apply ->
+    /// in-order feed publish -> WAL.
     fn publish_put(
         &self,
         ns: &str,
@@ -798,22 +938,19 @@ impl MetaStore {
                     format!("{ns} {key}"),
                 ));
             }
-            let (doc, rev) = {
-                let mut feed = self.feed_lock();
-                let rev = feed.next_rev;
-                feed.next_rev += 1;
-                let doc = make(rev);
-                feed.push(Change {
-                    rev,
-                    ns: ns.to_string(),
-                    key: key.to_string(),
-                    doc: Some(doc.clone()),
-                });
-                (doc, rev)
-            };
-            self.feed_cv.notify_all();
-            let line = wal_record("put", ns, key, Some(&doc), rev);
-            space.put(key, doc);
+            let guard = self.alloc_rev();
+            let rev = guard.rev;
+            let doc = Arc::new(Doc::new(make(rev)));
+            let line = self.dur.is_some().then(|| {
+                wal_record("put", ns, key, Some(&doc), rev)
+            });
+            space.put(key, Arc::clone(&doc));
+            guard.publish(Change {
+                rev,
+                ns: ns.to_string(),
+                key: key.to_string(),
+                doc: Some(doc),
+            });
             (self.log_write(line)?, rev)
         };
         self.finish_write(ticket)?;
@@ -842,22 +979,21 @@ impl MetaStore {
             let Some(old) = space.docs.get(key) else {
                 return Ok(false);
             };
-            pred(old)?;
+            pred(old.json())?;
             space.delete(key);
-            let rev = {
-                let mut feed = self.feed_lock();
-                let rev = feed.next_rev;
-                feed.next_rev += 1;
-                feed.push(Change {
-                    rev,
-                    ns: ns.to_string(),
-                    key: key.to_string(),
-                    doc: None,
-                });
-                rev
-            };
-            self.feed_cv.notify_all();
-            self.log_write(wal_record("del", ns, key, None, rev))?
+            let guard = self.alloc_rev();
+            let rev = guard.rev;
+            guard.publish(Change {
+                rev,
+                ns: ns.to_string(),
+                key: key.to_string(),
+                doc: None,
+            });
+            let line = self
+                .dur
+                .is_some()
+                .then(|| wal_record("del", ns, key, None, rev));
+            self.log_write(line)?
         };
         self.finish_write(ticket)?;
         Ok(true)
@@ -899,26 +1035,26 @@ impl MetaStore {
             let Some(old) = space.docs.get(key).cloned() else {
                 return Ok(UpdateRev::Missing);
             };
-            let (new_doc, rev) = {
-                let mut feed = self.feed_lock();
-                let rev = feed.next_rev;
-                match f(&old, rev)? {
-                    None => return Ok(UpdateRev::Unchanged),
-                    Some(nd) => {
-                        feed.next_rev += 1;
-                        feed.push(Change {
-                            rev,
-                            ns: ns.to_string(),
-                            key: key.to_string(),
-                            doc: Some(nd.clone()),
-                        });
-                        (nd, rev)
-                    }
-                }
+            // The revision is allocated up front so `f` can stamp it
+            // into the document; a declined/aborted write abandons it
+            // (the guard publishes a gap for the sequencer to step
+            // over — watchers never see abandoned revisions).
+            let guard = self.alloc_rev();
+            let rev = guard.rev;
+            let new_doc = match f(old.json(), rev)? {
+                None => return Ok(UpdateRev::Unchanged),
+                Some(nd) => Arc::new(Doc::new(nd)),
             };
-            self.feed_cv.notify_all();
-            let line = wal_record("put", ns, key, Some(&new_doc), rev);
-            space.put(key, new_doc);
+            let line = self.dur.is_some().then(|| {
+                wal_record("put", ns, key, Some(&new_doc), rev)
+            });
+            space.put(key, Arc::clone(&new_doc));
+            guard.publish(Change {
+                rev,
+                ns: ns.to_string(),
+                key: key.to_string(),
+                doc: Some(new_doc),
+            });
             (self.log_write(line)?, rev)
         };
         self.finish_write(ticket)?;
@@ -927,19 +1063,41 @@ impl MetaStore {
 
     // -------------------------------------------------------- change feed
 
-    /// The feed mutex is taken with user-supplied closures on the
-    /// stack (doc builders may panic); recover the guard from a
-    /// poisoned lock instead of bricking every subsequent write. A
-    /// panicking closure can at worst leak an unpublished revision
-    /// number, which watchers simply skip over.
+    /// The feed mutex can see panics unwind past it (watch closures on
+    /// the waiter side); recover the guard from a poisoned lock instead
+    /// of bricking every subsequent write.
     fn feed_lock(&self) -> std::sync::MutexGuard<'_, Feed> {
         self.feed.lock().unwrap_or_else(|e| e.into_inner())
     }
 
-    /// The latest assigned revision (0 before any write) — the list
+    /// Allocate the next revision lock-free. The returned guard *must*
+    /// reach the sequencer exactly once: `publish` hands it a change,
+    /// dropping it (decline, error, panic in a doc builder) publishes
+    /// an explicit gap — either way the sequencer can keep advancing.
+    fn alloc_rev(&self) -> RevGuard<'_> {
+        RevGuard {
+            store: self,
+            rev: self.next_rev.fetch_add(1, Ordering::Relaxed),
+            done: false,
+        }
+    }
+
+    /// Hand a completed (or abandoned) revision to the feed sequencer
+    /// and wake watchers if entries became visible.
+    fn sequence(&self, rev: u64, change: Option<Change>) {
+        let advanced = {
+            let mut feed = self.feed_lock();
+            feed.sequence(rev, change)
+        };
+        if advanced {
+            self.feed_cv.notify_all();
+        }
+    }
+
+    /// The latest published revision (0 before any write) — the list
     /// bookmark clients resume watches from.
     pub fn current_rev(&self) -> u64 {
-        self.feed_lock().next_rev - 1
+        self.feed_lock().published
     }
 
     /// Feed records for `ns` with revision > `since`, oldest first.
@@ -951,8 +1109,9 @@ impl MetaStore {
         since: u64,
         limit: usize,
     ) -> crate::Result<Vec<Change>> {
+        let next = self.next_rev.load(Ordering::Relaxed);
         let feed = self.feed_lock();
-        if let Some(gone) = feed.gone(ns, since) {
+        if let Some(gone) = feed.gone(ns, since, next) {
             return Err(gone);
         }
         Ok(feed.collect(ns, since, limit))
@@ -971,7 +1130,8 @@ impl MetaStore {
         let deadline = Instant::now() + wait;
         let mut feed = self.feed_lock();
         loop {
-            if let Some(gone) = feed.gone(ns, since) {
+            let next = self.next_rev.load(Ordering::Relaxed);
+            if let Some(gone) = feed.gone(ns, since, next) {
                 return Err(gone);
             }
             let hits = feed.collect(ns, since, limit);
@@ -991,10 +1151,17 @@ impl MetaStore {
     }
 
     /// Record the WAL line while the shard lock is held (so per-key WAL
-    /// order matches memory order). Group mode only buffers the record
-    /// and returns a ticket to await; direct mode writes through.
-    fn log_write(&self, line: Vec<u8>) -> crate::Result<Option<u64>> {
-        let Some(d) = &self.dur else { return Ok(None) };
+    /// order matches memory order). `None` means the store is volatile
+    /// (the caller skipped serializing a record nobody would read).
+    /// Group mode only buffers the record and returns a ticket to
+    /// await; direct mode writes through.
+    fn log_write(
+        &self,
+        line: Option<Vec<u8>>,
+    ) -> crate::Result<Option<u64>> {
+        let (Some(d), Some(line)) = (&self.dur, line) else {
+            return Ok(None);
+        };
         if self.opts.group_commit {
             let mut p = d.pending.lock().unwrap();
             p.buf.extend_from_slice(&line);
@@ -1129,7 +1296,10 @@ impl MetaStore {
 
     // ------------------------------------------------------------- reads
 
-    pub fn get(&self, ns: &str, key: &str) -> Option<Json> {
+    /// Zero-clone point read: the returned [`Arc<Doc>`] is a refcount
+    /// bump on the stored document (`Doc` derefs to [`Json`], so read
+    /// call sites use it like the document itself).
+    pub fn get(&self, ns: &str, key: &str) -> Option<Arc<Doc>> {
         let shard = self.shards[shard_of(ns)].read().unwrap();
         shard
             .spaces
@@ -1138,8 +1308,9 @@ impl MetaStore {
             .cloned()
     }
 
-    /// All `(key, doc)` pairs in a namespace, key-ordered.
-    pub fn list(&self, ns: &str) -> Vec<(String, Json)> {
+    /// All `(key, doc)` pairs in a namespace, key-ordered. Documents
+    /// are shared, not cloned.
+    pub fn list(&self, ns: &str) -> Vec<(String, Arc<Doc>)> {
         let shard = self.shards[shard_of(ns)].read().unwrap();
         shard
             .spaces
@@ -1148,7 +1319,7 @@ impl MetaStore {
                 space
                     .docs
                     .iter()
-                    .map(|(k, v)| (k.clone(), v.clone()))
+                    .map(|(k, v)| (k.clone(), Arc::clone(v)))
                     .collect()
             })
             .unwrap_or_default()
@@ -1160,13 +1331,13 @@ impl MetaStore {
     }
 
     /// One key-ordered page of a namespace plus the pre-pagination
-    /// total — clones only the page, not the namespace.
+    /// total — shares only the page's documents, deep-clones nothing.
     pub fn page(
         &self,
         ns: &str,
         offset: usize,
         limit: Option<usize>,
-    ) -> (Vec<(String, Json)>, usize) {
+    ) -> (Vec<(String, Arc<Doc>)>, usize) {
         let shard = self.shards[shard_of(ns)].read().unwrap();
         match shard.spaces.get(ns) {
             None => (Vec::new(), 0),
@@ -1177,7 +1348,7 @@ impl MetaStore {
                     .iter()
                     .skip(offset)
                     .take(limit.unwrap_or(usize::MAX))
-                    .map(|(k, v)| (k.clone(), v.clone()))
+                    .map(|(k, v)| (k.clone(), Arc::clone(v)))
                     .collect();
                 (page, total)
             }
@@ -1261,7 +1432,8 @@ impl MetaStore {
 
     /// One page of `(key, doc)` whose indexed `field` equals `value`,
     /// plus the total match count — the index walk replaces the seed's
-    /// scan-and-filter.
+    /// scan-and-filter, and the page shares documents instead of
+    /// cloning them.
     pub fn index_page(
         &self,
         ns: &str,
@@ -1269,7 +1441,7 @@ impl MetaStore {
         value: &str,
         offset: usize,
         limit: Option<usize>,
-    ) -> crate::Result<(Vec<(String, Json)>, usize)> {
+    ) -> crate::Result<(Vec<(String, Arc<Doc>)>, usize)> {
         if !self.index_defined(ns, field) {
             return Err(Self::no_index(ns, field));
         }
@@ -1287,7 +1459,7 @@ impl MetaStore {
             .skip(offset)
             .take(limit.unwrap_or(usize::MAX))
             .filter_map(|k| {
-                space.docs.get(&k).map(|d| (k.clone(), d.clone()))
+                space.docs.get(&k).map(|d| (k.clone(), Arc::clone(d)))
             })
             .collect();
         Ok((page, total))
@@ -1335,7 +1507,7 @@ impl MetaStore {
         //    step 4 deletes it.
         let guards: Vec<_> =
             self.shards.iter().map(|sh| sh.read().unwrap()).collect();
-        let mut dump: Vec<(String, Vec<(String, Json)>)> = Vec::new();
+        let mut dump: Vec<(String, Vec<(String, Arc<Doc>)>)> = Vec::new();
         let mut docs = 0usize;
         for g in &guards {
             for (ns, space) in &g.spaces {
@@ -1348,7 +1520,7 @@ impl MetaStore {
                     space
                         .docs
                         .iter()
-                        .map(|(k, v)| (k.clone(), v.clone()))
+                        .map(|(k, v)| (k.clone(), Arc::clone(v)))
                         .collect(),
                 ));
             }
@@ -1489,7 +1661,7 @@ impl MetaStore {
                         space
                             .docs
                             .iter()
-                            .map(|(k, v)| (k.clone(), v.clone()))
+                            .map(|(k, v)| (k.clone(), v.json().clone()))
                             .collect(),
                     ),
                 );
@@ -1569,9 +1741,16 @@ fn migrate_legacy_file(
     let bak = migration_backup_path(path);
     fs::rename(path, &bak)?;
     fs::create_dir_all(path)?;
-    let dump: Vec<(String, Vec<(String, Json)>)> = data
+    let dump: Vec<(String, Vec<(String, Arc<Doc>)>)> = data
         .into_iter()
-        .map(|(ns, docs)| (ns, docs.into_iter().collect()))
+        .map(|(ns, docs)| {
+            (
+                ns,
+                docs.into_iter()
+                    .map(|(k, v)| (k, Arc::new(Doc::new(v))))
+                    .collect(),
+            )
+        })
         .collect();
     snapshot::write_snapshot(path, 1, &dump)?;
     fs::remove_file(&bak)?;
@@ -1597,6 +1776,11 @@ mod tests {
         d
     }
 
+    /// Owned-`Json` view of a stored doc for equality asserts.
+    fn got(s: &MetaStore, ns: &str, key: &str) -> Option<Json> {
+        s.get(ns, key).map(|d| d.json().clone())
+    }
+
     #[test]
     fn put_get_delete_roundtrip() {
         let s = MetaStore::in_memory();
@@ -1616,8 +1800,8 @@ mod tests {
         let s = MetaStore::in_memory();
         s.put("a", "k", Json::Num(1.0)).unwrap();
         s.put("b", "k", Json::Num(2.0)).unwrap();
-        assert_eq!(s.get("a", "k"), Some(Json::Num(1.0)));
-        assert_eq!(s.get("b", "k"), Some(Json::Num(2.0)));
+        assert_eq!(got(&s, "a", "k"), Some(Json::Num(1.0)));
+        assert_eq!(got(&s, "b", "k"), Some(Json::Num(2.0)));
         assert_eq!(s.count("a"), 1);
     }
 
@@ -1659,10 +1843,10 @@ mod tests {
                 d.as_f64().unwrap() + 1.0
             )))
             .unwrap());
-        assert_eq!(s.get("ns", "k"), Some(Json::Num(2.0)));
+        assert_eq!(got(&s, "ns", "k"), Some(Json::Num(2.0)));
         // None leaves the doc untouched
         assert!(s.update("ns", "k", |_| None).unwrap());
-        assert_eq!(s.get("ns", "k"), Some(Json::Num(2.0)));
+        assert_eq!(got(&s, "ns", "k"), Some(Json::Num(2.0)));
     }
 
     #[test]
@@ -1674,7 +1858,7 @@ mod tests {
         assert!(r2 > r1);
         assert_eq!(s.current_rev(), r2);
         // the doc built by `make` saw its own revision
-        assert_eq!(s.get("ns", "b"), Some(Json::Num(r2 as f64)));
+        assert_eq!(got(&s, "ns", "b"), Some(Json::Num(r2 as f64)));
         let changes = s.changes_since("ns", 0, 100).unwrap();
         assert_eq!(changes.len(), 2);
         assert_eq!(changes[0].rev, r1);
@@ -1787,7 +1971,7 @@ mod tests {
         s.create_rev("ns", "k", |_| Json::Num(1.0)).unwrap();
         let err = s.create_rev("ns", "k", |_| Json::Num(2.0)).unwrap_err();
         assert_eq!(err.http_status(), 409);
-        assert_eq!(s.get("ns", "k"), Some(Json::Num(1.0)));
+        assert_eq!(got(&s, "ns", "k"), Some(Json::Num(1.0)));
     }
 
     #[test]
@@ -1807,7 +1991,7 @@ mod tests {
             })
             .unwrap_err();
         assert_eq!(err.http_status(), 412);
-        assert_eq!(s.get("ns", "k"), Some(Json::Num(1.0)));
+        assert_eq!(got(&s, "ns", "k"), Some(Json::Num(1.0)));
         match s
             .update_rev("ns", "k", |_, rev| {
                 Ok(Some(Json::Num(rev as f64)))
@@ -1815,7 +1999,7 @@ mod tests {
             .unwrap()
         {
             UpdateRev::Written(rev) => {
-                assert_eq!(s.get("ns", "k"), Some(Json::Num(rev as f64)))
+                assert_eq!(got(&s, "ns", "k"), Some(Json::Num(rev as f64)))
             }
             other => panic!("expected write, got {other:?}"),
         }
@@ -1890,7 +2074,7 @@ mod tests {
             s.delete("exp", "e2").unwrap();
         }
         let s = MetaStore::open(&dir).unwrap();
-        assert_eq!(s.get("exp", "e1"), Some(Json::Num(3.0)));
+        assert_eq!(got(&s, "exp", "e1"), Some(Json::Num(3.0)));
         assert!(s.get("exp", "e2").is_none());
         let _ = fs::remove_dir_all(&dir);
     }
@@ -1980,7 +2164,7 @@ mod tests {
         }
         let s = MetaStore::open(&dir).unwrap();
         assert_eq!(s.count("ns"), 50);
-        assert_eq!(s.get("ns", "k049"), Some(Json::Num(49.0)));
+        assert_eq!(got(&s, "ns", "k049"), Some(Json::Num(49.0)));
         let _ = fs::remove_dir_all(&dir);
     }
 

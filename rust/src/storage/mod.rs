@@ -15,7 +15,7 @@ pub mod metrics;
 pub(crate) mod snapshot;
 
 pub use kv::{
-    Change, CompactReport, MetaStore, StorageStats, StoreOptions,
+    Change, CompactReport, Doc, MetaStore, StorageStats, StoreOptions,
     UpdateRev,
 };
 pub use metrics::{MetricPoint, MetricStore};

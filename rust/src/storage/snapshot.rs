@@ -14,11 +14,13 @@
 //! the next open) and never a half-readable snapshot. See
 //! `docs/STORAGE.md` for the full recovery contract.
 
-use crate::util::json::Json;
+use crate::storage::kv::Doc;
+use crate::util::json::{write_json_string, write_json_u64, Json};
 use std::collections::BTreeMap;
 use std::fs;
 use std::io::Write;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 const SNAPSHOT_FORMAT: &str = "submarine-snapshot-v1";
 
@@ -74,35 +76,49 @@ pub(crate) fn scan_dir(
 }
 
 /// Write the full dump as generation `gen`: tmp file, fsync, atomic
-/// rename, best-effort directory fsync.
+/// rename, best-effort directory fsync. The body is serialized
+/// incrementally from the shared documents — no intermediate `Json`
+/// tree and no per-document deep clone (the compaction pass holds
+/// every shard lock while this runs, so the less work here the
+/// shorter the write pause).
 pub(crate) fn write_snapshot(
     dir: &Path,
     gen: u64,
-    dump: &[(String, Vec<(String, Json)>)],
+    dump: &[(String, Vec<(String, Arc<Doc>)>)],
 ) -> crate::Result<()> {
-    let data = Json::Obj(
-        dump.iter()
-            .map(|(ns, docs)| {
-                (
-                    ns.clone(),
-                    Json::Obj(
-                        docs.iter()
-                            .map(|(k, v)| (k.clone(), v.clone()))
-                            .collect(),
-                    ),
-                )
-            })
-            .collect(),
-    );
-    let body = Json::obj()
-        .set("format", Json::Str(SNAPSHOT_FORMAT.into()))
-        .set("gen", Json::Num(gen as f64))
-        .set("data", data)
-        .dump();
+    let mut body = Vec::with_capacity(4096);
+    body.extend_from_slice(b"{\"format\":");
+    write_json_string(&mut body, SNAPSHOT_FORMAT);
+    body.extend_from_slice(b",\"gen\":");
+    write_json_u64(&mut body, gen);
+    body.extend_from_slice(b",\"data\":{");
+    for (i, (ns, docs)) in dump.iter().enumerate() {
+        if i > 0 {
+            body.push(b',');
+        }
+        write_json_string(&mut body, ns);
+        body.extend_from_slice(b":{");
+        for (j, (k, doc)) in docs.iter().enumerate() {
+            if j > 0 {
+                body.push(b',');
+            }
+            write_json_string(&mut body, k);
+            body.push(b':');
+            // splice the cached encoding when a WAL append or GET
+            // already paid for it; only cold docs serialize here (and
+            // without forcing a cache fill they would keep forever)
+            match doc.encoded_if_cached() {
+                Some(enc) => body.extend_from_slice(&enc),
+                None => doc.json().dump_into(&mut body),
+            }
+        }
+        body.push(b'}');
+    }
+    body.extend_from_slice(b"}}");
     let tmp = dir.join(format!("snapshot-{gen:06}.json.tmp"));
     {
         let mut f = fs::File::create(&tmp)?;
-        f.write_all(body.as_bytes())?;
+        f.write_all(&body)?;
         f.write_all(b"\n")?;
         f.sync_all()?;
     }
@@ -184,14 +200,17 @@ mod tests {
         d
     }
 
-    fn sample() -> Vec<(String, Vec<(String, Json)>)> {
+    fn sample() -> Vec<(String, Vec<(String, Arc<Doc>)>)> {
         vec![(
             "exp".to_string(),
             vec![
-                ("e1".to_string(), Json::Num(1.0)),
+                ("e1".to_string(), Arc::new(Doc::new(Json::Num(1.0)))),
                 (
                     "e2".to_string(),
-                    Json::obj().set("status", Json::Str("Running".into())),
+                    Arc::new(Doc::new(
+                        Json::obj()
+                            .set("status", Json::Str("Running".into())),
+                    )),
                 ),
             ],
         )]

@@ -84,6 +84,57 @@ pub fn bench(min_iters: usize, min_secs: f64, mut f: impl FnMut()) -> Stats {
     Stats::from_samples(samples)
 }
 
+/// Machine-readable result sink (ISSUE 5): in smoke mode every bench
+/// that races a baseline against its optimized path also records
+/// `(op, baseline ns, optimized ns, ratio)` into `BENCH_5.json` at the
+/// repo root (override the directory with `BENCH_RESULTS_DIR`), so CI
+/// uploads make the perf trajectory trackable PR-over-PR. Entries
+/// merge by `op`: bench binaries run sequentially and each read-
+/// modify-writes the shared file.
+pub fn record_result(op: &str, baseline_secs: f64, optimized_secs: f64) {
+    if !smoke() {
+        return;
+    }
+    let path = std::env::var("BENCH_RESULTS_DIR")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| {
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..")
+        })
+        .join("BENCH_5.json");
+    let mut results: Vec<crate::util::json::Json> =
+        match std::fs::read_to_string(&path)
+            .ok()
+            .and_then(|t| crate::util::json::Json::parse(&t).ok())
+        {
+            Some(j) => j
+                .get("results")
+                .and_then(crate::util::json::Json::as_arr)
+                .map(|a| a.to_vec())
+                .unwrap_or_default(),
+            None => Vec::new(),
+        };
+    results.retain(|r| r.str_field("op") != Some(op));
+    use crate::util::json::Json;
+    let baseline_ns = baseline_secs * 1e9;
+    let optimized_ns = optimized_secs * 1e9;
+    results.push(
+        Json::obj()
+            .set("op", Json::Str(op.to_string()))
+            .set("baseline_ns", Json::Num(baseline_ns.round()))
+            .set("optimized_ns", Json::Num(optimized_ns.round()))
+            .set(
+                "ratio",
+                Json::Num(baseline_ns / optimized_ns.max(1.0)),
+            ),
+    );
+    let doc = Json::obj().set("results", Json::Arr(results));
+    if let Err(e) = std::fs::write(&path, doc.pretty()) {
+        eprintln!("bench: failed to write {}: {e}", path.display());
+    } else {
+        println!("bench: recorded {op} -> {}", path.display());
+    }
+}
+
 /// Human duration formatting.
 pub fn fmt_secs(s: f64) -> String {
     if s >= 1.0 {

@@ -6,6 +6,14 @@
 //! and `\uXXXX` (including surrogate pairs), numbers, booleans, null.
 //! Object key order is preserved (insertion order) so serialized specs stay
 //! diff-stable.
+//!
+//! Serialization is allocation-free beyond the output buffer (ISSUE 5):
+//! [`Json::dump_into`] appends to a caller-owned `Vec<u8>`, escape-free
+//! string spans are bulk-copied with one `extend_from_slice`, and numbers
+//! format through `fmt::Write` straight into the buffer instead of
+//! `format!` temporaries. The parser takes the same tack on the way in:
+//! escape-free strings become one bulk slice copy and collections are
+//! preallocated from input-size heuristics.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -146,29 +154,38 @@ impl Json {
     // -------------------------------------------------------- serializing
     /// Compact serialization.
     pub fn dump(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s, None, 0);
-        s
-    }
-    /// Pretty serialization with 2-space indent.
-    pub fn pretty(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s, Some(2), 0);
-        s
+        let mut out = Vec::with_capacity(128);
+        self.write(&mut out, None, 0);
+        // The serializer only emits `str` slices and ASCII syntax.
+        String::from_utf8(out).expect("json serializer emits utf-8")
     }
 
-    fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
+    /// Compact serialization appended to a caller-owned buffer — the
+    /// zero-allocation form every hot serialization call site uses
+    /// (response bodies, WAL records, cached document bodies).
+    pub fn dump_into(&self, out: &mut Vec<u8>) {
+        self.write(out, None, 0);
+    }
+
+    /// Pretty serialization with 2-space indent.
+    pub fn pretty(&self) -> String {
+        let mut out = Vec::with_capacity(256);
+        self.write(&mut out, Some(2), 0);
+        String::from_utf8(out).expect("json serializer emits utf-8")
+    }
+
+    fn write(&self, out: &mut Vec<u8>, indent: Option<usize>, depth: usize) {
         match self {
-            Json::Null => out.push_str("null"),
-            Json::Bool(true) => out.push_str("true"),
-            Json::Bool(false) => out.push_str("false"),
-            Json::Num(n) => write_num(out, *n),
-            Json::Str(s) => write_str(out, s),
+            Json::Null => out.extend_from_slice(b"null"),
+            Json::Bool(true) => out.extend_from_slice(b"true"),
+            Json::Bool(false) => out.extend_from_slice(b"false"),
+            Json::Num(n) => write_json_num(out, *n),
+            Json::Str(s) => write_json_string(out, s),
             Json::Arr(a) => {
-                out.push('[');
+                out.push(b'[');
                 for (i, v) in a.iter().enumerate() {
                     if i > 0 {
-                        out.push(',');
+                        out.push(b',');
                     }
                     newline_indent(out, indent, depth + 1);
                     v.write(out, indent, depth + 1);
@@ -176,26 +193,26 @@ impl Json {
                 if !a.is_empty() {
                     newline_indent(out, indent, depth);
                 }
-                out.push(']');
+                out.push(b']');
             }
             Json::Obj(o) => {
-                out.push('{');
+                out.push(b'{');
                 for (i, (k, v)) in o.iter().enumerate() {
                     if i > 0 {
-                        out.push(',');
+                        out.push(b',');
                     }
                     newline_indent(out, indent, depth + 1);
-                    write_str(out, k);
-                    out.push(':');
+                    write_json_string(out, k);
+                    out.push(b':');
                     if indent.is_some() {
-                        out.push(' ');
+                        out.push(b' ');
                     }
                     v.write(out, indent, depth + 1);
                 }
                 if !o.is_empty() {
                     newline_indent(out, indent, depth);
                 }
-                out.push('}');
+                out.push(b'}');
             }
         }
     }
@@ -207,43 +224,93 @@ impl fmt::Display for Json {
     }
 }
 
-fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
+fn newline_indent(out: &mut Vec<u8>, indent: Option<usize>, depth: usize) {
     if let Some(n) = indent {
-        out.push('\n');
-        for _ in 0..n * depth {
-            out.push(' ');
-        }
+        out.push(b'\n');
+        out.resize(out.len() + n * depth, b' ');
     }
 }
 
-fn write_num(out: &mut String, n: f64) {
+/// Adapter letting `fmt::Write` formatting land directly in a byte
+/// buffer (numbers, `\uXXXX` escapes) with no `String` temporary.
+struct FmtBytes<'a>(&'a mut Vec<u8>);
+
+impl fmt::Write for FmtBytes<'_> {
+    fn write_str(&mut self, s: &str) -> fmt::Result {
+        self.0.extend_from_slice(s.as_bytes());
+        Ok(())
+    }
+}
+
+/// Append the JSON text of `n` to `out` (integral values print without
+/// a fraction; non-finite values have no JSON form and print `null`).
+pub fn write_json_num(out: &mut Vec<u8>, n: f64) {
+    use fmt::Write as _;
     if n.is_finite() && n == n.trunc() && n.abs() < 1e15 {
-        out.push_str(&format!("{}", n as i64));
+        write_json_i64(out, n as i64);
     } else if n.is_finite() {
-        out.push_str(&format!("{}", n));
+        let _ = write!(FmtBytes(out), "{}", n);
     } else {
-        out.push_str("null"); // JSON has no Inf/NaN
+        out.extend_from_slice(b"null"); // JSON has no Inf/NaN
     }
 }
 
-fn write_str(out: &mut String, s: &str) {
-    out.push('"');
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\r' => out.push_str("\\r"),
-            '\t' => out.push_str("\\t"),
-            '\x08' => out.push_str("\\b"),
-            '\x0c' => out.push_str("\\f"),
-            c if (c as u32) < 0x20 => {
-                out.push_str(&format!("\\u{:04x}", c as u32))
-            }
-            c => out.push(c),
+/// Append a decimal integer without intermediate allocation.
+pub fn write_json_u64(out: &mut Vec<u8>, mut v: u64) {
+    let mut tmp = [0u8; 20];
+    let mut i = tmp.len();
+    loop {
+        i -= 1;
+        tmp[i] = b'0' + (v % 10) as u8;
+        v /= 10;
+        if v == 0 {
+            break;
         }
     }
-    out.push('"');
+    out.extend_from_slice(&tmp[i..]);
+}
+
+fn write_json_i64(out: &mut Vec<u8>, v: i64) {
+    if v < 0 {
+        out.push(b'-');
+        write_json_u64(out, v.unsigned_abs());
+    } else {
+        write_json_u64(out, v as u64);
+    }
+}
+
+/// Append a JSON string literal (quoted and escaped) to `out`.
+/// Escape-free spans — the overwhelmingly common case — are copied with
+/// one `extend_from_slice` instead of per-character pushes; multi-byte
+/// UTF-8 passes through raw (RFC 8259 permits unescaped non-ASCII).
+pub fn write_json_string(out: &mut Vec<u8>, s: &str) {
+    use fmt::Write as _;
+    out.push(b'"');
+    let bytes = s.as_bytes();
+    let mut start = 0;
+    for (i, &b) in bytes.iter().enumerate() {
+        let esc: &[u8] = match b {
+            b'"' => b"\\\"",
+            b'\\' => b"\\\\",
+            b'\n' => b"\\n",
+            b'\r' => b"\\r",
+            b'\t' => b"\\t",
+            0x08 => b"\\b",
+            0x0c => b"\\f",
+            b if b < 0x20 => {
+                out.extend_from_slice(&bytes[start..i]);
+                let _ = write!(FmtBytes(out), "\\u{:04x}", b);
+                start = i + 1;
+                continue;
+            }
+            _ => continue,
+        };
+        out.extend_from_slice(&bytes[start..i]);
+        out.extend_from_slice(esc);
+        start = i + 1;
+    }
+    out.extend_from_slice(&bytes[start..]);
+    out.push(b'"');
 }
 
 struct Parser<'a> {
@@ -306,9 +373,17 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Preallocation hint for a collection opening at the current
+    /// position: a conservative guess from the remaining input size
+    /// (~16 bytes per element, capped so hostile input cannot reserve
+    /// unbounded memory up front).
+    fn collection_hint(&self) -> usize {
+        ((self.bytes.len() - self.pos) / 16).clamp(4, 64)
+    }
+
     fn object(&mut self) -> Result<Json, JsonError> {
         self.expect(b'{')?;
-        let mut fields = Vec::new();
+        let mut fields = Vec::with_capacity(self.collection_hint());
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
@@ -333,7 +408,7 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> Result<Json, JsonError> {
         self.expect(b'[')?;
-        let mut items = Vec::new();
+        let mut items = Vec::with_capacity(self.collection_hint());
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
@@ -353,7 +428,28 @@ impl<'a> Parser<'a> {
 
     fn string(&mut self) -> Result<String, JsonError> {
         self.expect(b'"')?;
-        let mut s = String::new();
+        // Fast path: scan to the closing quote; a string with no
+        // escapes and no control chars becomes one validated bulk copy
+        // instead of a byte-at-a-time rebuild.
+        let raw = self.bytes; // copy of the &'a [u8], not a self-borrow
+        let start = self.pos;
+        let mut scan = self.pos;
+        while let Some(&b) = raw.get(scan) {
+            match b {
+                b'"' => {
+                    let text = std::str::from_utf8(&raw[start..scan])
+                        .map_err(|_| self.err("invalid utf-8"))?;
+                    self.pos = scan + 1;
+                    return Ok(text.to_string());
+                }
+                b'\\' => break,
+                b if b < 0x20 => break, // slow path reports the error
+                _ => scan += 1,
+            }
+        }
+        // Slow path (escapes present or malformed): re-scan from the
+        // start with a capacity hint from the clean prefix.
+        let mut s = String::with_capacity(scan - start + 16);
         loop {
             match self.bump() {
                 None => return Err(self.err("unterminated string")),
@@ -565,5 +661,51 @@ mod tests {
     fn integral_numbers_stay_integral() {
         assert_eq!(Json::Num(256.0).dump(), "256");
         assert_eq!(Json::Num(0.001).dump(), "0.001");
+        assert_eq!(Json::Num(-42.0).dump(), "-42");
+    }
+
+    #[test]
+    fn dump_into_appends_to_existing_buffer() {
+        let j = Json::parse(r#"{"a":[1,"x"],"b":null}"#).unwrap();
+        let mut buf = b"result:".to_vec();
+        j.dump_into(&mut buf);
+        assert_eq!(
+            std::str::from_utf8(&buf).unwrap(),
+            r#"result:{"a":[1,"x"],"b":null}"#
+        );
+        // identical to dump()
+        assert_eq!(&buf[7..], j.dump().as_bytes());
+    }
+
+    #[test]
+    fn byte_helpers_match_dump() {
+        let mut buf = Vec::new();
+        write_json_u64(&mut buf, 0);
+        buf.push(b' ');
+        write_json_u64(&mut buf, 18_446_744_073_709_551_615);
+        assert_eq!(buf, b"0 18446744073709551615");
+        for s in ["plain", "esc\"\\\n\t", "unicode \u{1F600} é", "\u{1}"] {
+            let mut via_helper = Vec::new();
+            write_json_string(&mut via_helper, s);
+            assert_eq!(
+                via_helper,
+                Json::Str(s.to_string()).dump().into_bytes(),
+                "mismatch for {s:?}"
+            );
+        }
+        for n in [1.5, -0.25, 3e20, f64::NAN, f64::INFINITY] {
+            let mut via_helper = Vec::new();
+            write_json_num(&mut via_helper, n);
+            assert_eq!(via_helper, Json::Num(n).dump().into_bytes());
+        }
+    }
+
+    #[test]
+    fn fast_and_slow_string_paths_agree() {
+        // escape-free (fast path) and escaped (slow path) round-trip
+        for raw in [r#""hello world""#, r#""aA\n b""#] {
+            let j = Json::parse(raw).unwrap();
+            assert_eq!(Json::parse(&j.dump()).unwrap(), j);
+        }
     }
 }

@@ -1,0 +1,318 @@
+//! Integration tests for the serving hot path (ISSUE 5): worker-pool
+//! saturation behavior (parked watchers must not starve request
+//! workers; the 503 shed still triggers at the connection cap), the
+//! HEAD fast path over the cached encoded body, and the `Arc<Doc>`
+//! no-torn-reads guarantee under racing conditional writers.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+use submarine::experiment::spec::ExperimentSpec;
+use submarine::httpd::server::{Server, ServerOptions, Services};
+use submarine::httpd::ApiConfig;
+use submarine::orchestrator::Submitter;
+use submarine::storage::MetaStore;
+use submarine::util::json::Json;
+
+struct NullSubmitter;
+impl Submitter for NullSubmitter {
+    fn name(&self) -> &'static str {
+        "null"
+    }
+    fn submit(&self, _: &str, _: &ExperimentSpec) -> submarine::Result<()> {
+        Ok(())
+    }
+    fn kill(&self, _: &str) -> submarine::Result<()> {
+        Ok(())
+    }
+}
+
+fn services() -> Arc<Services> {
+    Arc::new(Services::new(
+        Arc::new(MetaStore::in_memory()),
+        Arc::new(NullSubmitter),
+    ))
+}
+
+fn start_with(
+    opts: ServerOptions,
+) -> (u16, Arc<AtomicBool>, std::thread::JoinHandle<()>) {
+    let srv = Arc::new(
+        Server::bind_with_options(
+            services(),
+            0,
+            &ApiConfig::default(),
+            opts,
+        )
+        .unwrap(),
+    );
+    let port = srv.port();
+    let stop = srv.stopper();
+    let handle = srv.serve_background();
+    (port, stop, handle)
+}
+
+fn shutdown(
+    port: u16,
+    stop: Arc<AtomicBool>,
+    handle: std::thread::JoinHandle<()>,
+) {
+    stop.store(true, Ordering::Relaxed);
+    let _ = TcpStream::connect(("127.0.0.1", port));
+    handle.join().unwrap();
+}
+
+/// Read one content-length-framed response off a stream.
+fn read_response(stream: &TcpStream) -> (u16, Vec<String>, Vec<u8>) {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let status: u16 = line.split(' ').nth(1).unwrap().parse().unwrap();
+    let mut headers = Vec::new();
+    let mut len = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).unwrap();
+        let h = h.trim_end().to_string();
+        if h.is_empty() {
+            break;
+        }
+        if let Some(v) =
+            h.to_ascii_lowercase().strip_prefix("content-length:")
+        {
+            len = v.trim().parse().unwrap();
+        }
+        headers.push(h);
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body).unwrap();
+    (status, headers, body)
+}
+
+fn plain_get(port: u16, path: &str) -> (u16, Vec<String>, Vec<u8>) {
+    let stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    write!(
+        &stream,
+        "GET {path} HTTP/1.1\r\nhost: x\r\nconnection: close\r\n\r\n"
+    )
+    .unwrap();
+    read_response(&stream)
+}
+
+/// With a 2-worker pool and more open watch connections than workers,
+/// plain GETs must still complete: watch requests migrate off the pool
+/// onto their dedicated lane the moment they are recognized.
+#[test]
+fn parked_watchers_do_not_starve_request_workers() {
+    let (port, stop, handle) = start_with(ServerOptions {
+        workers: Some(2),
+        max_connections: 32,
+    });
+
+    // 3 long-polls + 1 chunked stream, all parked for several seconds
+    let mut watchers = Vec::new();
+    for i in 0..4 {
+        let stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        let extra = if i == 3 { "&stream=1" } else { "" };
+        write!(
+            &stream,
+            "GET /api/v2/experiment?watch=1&timeout_ms=4000{extra} \
+             HTTP/1.1\r\nhost: x\r\n\r\n"
+        )
+        .unwrap();
+        watchers.push(stream);
+    }
+    // give the pool a moment to pick all four up (and migrate them)
+    std::thread::sleep(Duration::from_millis(300));
+
+    // every request worker would be occupied if watchers pinned them;
+    // these must answer promptly anyway
+    for _ in 0..3 {
+        let (status, _, body) = plain_get(port, "/api/v2/cluster");
+        assert_eq!(status, 200);
+        assert!(!body.is_empty());
+    }
+
+    drop(watchers);
+    shutdown(port, stop, handle);
+}
+
+/// Past `max_connections` live connections the server sheds with a
+/// prompt 503 instead of queueing.
+#[test]
+fn shed_path_still_triggers_at_connection_cap() {
+    let (port, stop, handle) = start_with(ServerOptions {
+        workers: Some(2),
+        max_connections: 6,
+    });
+
+    // fill the cap: 4 parked watchers + 2 idle keep-alive connections
+    let mut held = Vec::new();
+    for _ in 0..4 {
+        let stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        write!(
+            &stream,
+            "GET /api/v2/experiment?watch=1&timeout_ms=4000 \
+             HTTP/1.1\r\nhost: x\r\n\r\n"
+        )
+        .unwrap();
+        held.push(stream);
+    }
+    for _ in 0..2 {
+        held.push(TcpStream::connect(("127.0.0.1", port)).unwrap());
+    }
+    std::thread::sleep(Duration::from_millis(300));
+
+    // one over the cap: 503 in the flat v1 envelope, then close
+    let over = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    over.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut buf = String::new();
+    let _ = (&over).read_to_string(&mut buf);
+    assert!(buf.contains("503"), "expected shed, got: {buf}");
+    assert!(buf.contains("connection capacity"), "{buf}");
+
+    drop(held);
+    shutdown(port, stop, handle);
+}
+
+/// HEAD on a cached-body resource advertises exactly the GET body's
+/// length without a body following, and repeat GETs serve identical
+/// bytes and ETags from the revision-keyed cache.
+#[test]
+fn head_advertises_cached_body_length() {
+    let (port, stop, handle) =
+        start_with(ServerOptions::default());
+
+    let stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    let body = r#"{"name":"t1","experimentSpec":{"meta":{"name":"m"},
+        "spec":{"Worker":{"replicas":1,"resources":"cpu=1"}}}}"#;
+    write!(
+        &stream,
+        "POST /api/v2/template HTTP/1.1\r\nhost: x\r\n\
+         content-length: {}\r\nconnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    )
+    .unwrap();
+    let (status, _, _) = read_response(&stream);
+    assert_eq!(status, 200);
+
+    let (status, headers, get_body) =
+        plain_get(port, "/api/v2/template/t1");
+    assert_eq!(status, 200);
+    let etag_of = |headers: &[String]| {
+        headers
+            .iter()
+            .find(|h| h.to_ascii_lowercase().starts_with("etag:"))
+            .cloned()
+    };
+    let get_etag = etag_of(&headers);
+    assert!(get_etag.is_some(), "{headers:?}");
+    // body is the enveloped stored doc
+    let j = Json::parse(std::str::from_utf8(&get_body).unwrap()).unwrap();
+    assert_eq!(
+        j.at(&["result", "name"]).and_then(Json::as_str),
+        Some("t1")
+    );
+
+    // repeat GET: identical bytes (served from the cache)
+    let (_, headers2, get_body2) =
+        plain_get(port, "/api/v2/template/t1");
+    assert_eq!(get_body, get_body2);
+    assert_eq!(get_etag, etag_of(&headers2));
+
+    // HEAD: same content-length, no body
+    let stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    write!(
+        &stream,
+        "HEAD /api/v2/template/t1 HTTP/1.1\r\nhost: x\r\n\
+         connection: close\r\n\r\n"
+    )
+    .unwrap();
+    let mut reader = BufReader::new(&stream);
+    let mut head_text = String::new();
+    reader.read_to_string(&mut head_text).unwrap();
+    assert!(head_text.contains("200 OK"), "{head_text}");
+    assert!(
+        head_text
+            .to_ascii_lowercase()
+            .contains(&format!("content-length: {}", get_body.len())),
+        "HEAD must advertise the GET body length: {head_text}"
+    );
+    assert!(head_text.trim_end().ends_with("connection: close"));
+
+    shutdown(port, stop, handle);
+}
+
+/// Readers holding `Arc<Doc>` handles race a conditional writer that
+/// replaces the document thousands of times: no reader may ever
+/// observe a half-written ("torn") document.
+#[test]
+fn arc_reads_racing_writers_never_observe_torn_documents() {
+    let store = Arc::new(MetaStore::in_memory());
+    let pair = |i: u64| {
+        Json::obj()
+            .set("a", Json::Num(i as f64))
+            .set("b", Json::Num(i as f64))
+            .set("pad", Json::Str("x".repeat(256)))
+    };
+    store.put("ns", "doc", pair(0)).unwrap();
+    let done = Arc::new(AtomicBool::new(false));
+
+    let writer = {
+        let store = Arc::clone(&store);
+        let done = Arc::clone(&done);
+        std::thread::spawn(move || {
+            for i in 1..=2_000u64 {
+                store
+                    .update_rev("ns", "doc", |_, _| Ok(Some(pair(i))))
+                    .unwrap();
+            }
+            done.store(true, Ordering::Relaxed);
+        })
+    };
+    let readers: Vec<_> = (0..4)
+        .map(|_| {
+            let store = Arc::clone(&store);
+            let done = Arc::clone(&done);
+            std::thread::spawn(move || {
+                let mut seen = 0u64;
+                while !done.load(Ordering::Relaxed) {
+                    let d = store.get("ns", "doc").unwrap();
+                    let a = d.num_field("a").unwrap();
+                    let b = d.num_field("b").unwrap();
+                    assert_eq!(
+                        a, b,
+                        "torn document observed: a={a} b={b}"
+                    );
+                    // the cached encoding is torn-free too
+                    let enc = d.encoded();
+                    let parsed = Json::parse(
+                        std::str::from_utf8(&enc).unwrap(),
+                    )
+                    .unwrap();
+                    assert_eq!(
+                        parsed.num_field("a"),
+                        parsed.num_field("b")
+                    );
+                    seen += 1;
+                }
+                seen
+            })
+        })
+        .collect();
+    writer.join().unwrap();
+    for r in readers {
+        assert!(r.join().unwrap() > 0);
+    }
+    // monotone final state
+    assert_eq!(
+        store.get("ns", "doc").unwrap().num_field("a"),
+        Some(2_000.0)
+    );
+}

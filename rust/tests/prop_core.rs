@@ -185,7 +185,7 @@ fn metastore_behaves_like_a_map() {
         }
         prop_assert_eq!(store.count("ns"), model.len());
         for (k, v) in &model {
-            let got = store.get("ns", k);
+            let got = store.get("ns", k).map(|d| d.json().clone());
             prop_assert_eq!(got.as_ref(), Some(v));
         }
         Ok(())

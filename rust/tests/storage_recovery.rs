@@ -41,6 +41,11 @@ fn no_auto_compact() -> StoreOptions {
     }
 }
 
+/// Owned-`Json` view of a stored doc for equality asserts.
+fn got(s: &MetaStore, ns: &str, key: &str) -> Option<Json> {
+    s.get(ns, key).map(|d| d.json().clone())
+}
+
 #[test]
 fn truncated_final_record_loses_exactly_one_write() {
     let dir = tmp_dir("torn-tail");
@@ -61,14 +66,14 @@ fn truncated_final_record_loses_exactly_one_write() {
     let s = MetaStore::open_with(&dir, no_auto_compact()).unwrap();
     assert_eq!(s.count("exp"), N - 1, "exactly the torn write is lost");
     assert!(s.get("exp", &format!("e{}", N - 1)).is_none());
-    assert_eq!(s.get("exp", "e0"), Some(Json::Num(0.0)));
+    assert_eq!(got(&s, "exp", "e0"), Some(Json::Num(0.0)));
     assert_eq!(s.stats().skipped_records, 1);
 
     // the store keeps working after a tolerated torn tail
     s.put("exp", "post-crash", Json::Bool(true)).unwrap();
     drop(s);
     let s = MetaStore::open(&dir).unwrap();
-    assert_eq!(s.get("exp", "post-crash"), Some(Json::Bool(true)));
+    assert_eq!(got(&s, "exp", "post-crash"), Some(Json::Bool(true)));
     let _ = fs::remove_dir_all(&dir);
 }
 
@@ -118,7 +123,7 @@ fn complete_record_missing_only_newline_is_recovered() {
     }
     let s = MetaStore::open(&dir).unwrap();
     assert_eq!(s.count("a"), 3);
-    assert_eq!(s.get("a", "k2"), Some(Json::Num(2.0)));
+    assert_eq!(got(&s, "a", "k2"), Some(Json::Num(2.0)));
     let _ = fs::remove_dir_all(&dir);
 }
 
@@ -364,7 +369,7 @@ fn interrupted_migration_rolls_back_and_retries() {
     fs::create_dir_all(&path).unwrap();
     let s = MetaStore::open(&path).unwrap();
     assert_eq!(
-        s.get("exp", "e1"),
+        got(&s, "exp", "e1"),
         Some(Json::Num(1.0)),
         "legacy data must survive a crash mid-migration"
     );
@@ -413,7 +418,7 @@ fn crashed_snapshot_tmp_is_discarded() {
     fs::write(dir.join("snapshot-000099.json.tmp"), "half-written")
         .unwrap();
     let s = MetaStore::open(&dir).unwrap();
-    assert_eq!(s.get("ns", "k"), Some(Json::Num(1.0)));
+    assert_eq!(got(&s, "ns", "k"), Some(Json::Num(1.0)));
     assert!(!dir.join("snapshot-000099.json.tmp").exists());
     let _ = fs::remove_dir_all(&dir);
 }
