@@ -1,0 +1,168 @@
+//! The unwrap/expect baseline ratchet.
+//!
+//! `baseline.json` grandfathers the `.unwrap()` / `.expect(` call
+//! sites that existed in `httpd/` and `orchestrator/` production code
+//! when the lint landed. The ratchet only turns one way:
+//!
+//! - a file whose count **exceeds** its baseline fails the lint (new
+//!   sites are rejected);
+//! - a file whose count **dropped** below its baseline produces a
+//!   non-blocking stale-baseline warning — shrink the baseline with
+//!   `cargo run --bin submarine-lint -- --write-baseline` in the same
+//!   PR that removes the sites.
+
+use super::Finding;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// The checked-in baseline, embedded at compile time so the binary has
+/// no runtime file dependency.
+pub const BASELINE_JSON: &str = include_str!("baseline.json");
+
+/// Parse a baseline document (`{"unwrap": {"<file>": <count>}}`).
+pub fn parse(text: &str) -> Result<BTreeMap<String, u64>, String> {
+    let doc = Json::parse(text)
+        .map_err(|e| format!("baseline.json: {e}"))?;
+    let Some(Json::Obj(pairs)) = doc.get("unwrap") else {
+        return Err(
+            "baseline.json: missing `unwrap` object".to_string()
+        );
+    };
+    let mut out = BTreeMap::new();
+    for (file, v) in pairs {
+        let Some(count) = v.as_u64() else {
+            return Err(format!(
+                "baseline.json: non-integer count for {file}"
+            ));
+        };
+        out.insert(file.clone(), count);
+    }
+    Ok(out)
+}
+
+/// The checked-in baseline.
+pub fn load() -> Result<BTreeMap<String, u64>, String> {
+    parse(BASELINE_JSON)
+}
+
+/// Serialize a baseline document (stable key order, trailing newline —
+/// diff-friendly).
+pub fn render(counts: &BTreeMap<String, u64>) -> String {
+    let mut out = String::from("{\n  \"unwrap\": {\n");
+    let last = counts.len().saturating_sub(1);
+    for (i, (file, count)) in counts.iter().enumerate() {
+        out.push_str("    \"");
+        out.push_str(file);
+        out.push_str("\": ");
+        out.push_str(&count.to_string());
+        if i != last {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("  }\n}\n");
+    out
+}
+
+/// Outcome of comparing current counts against the baseline.
+pub struct RatchetReport {
+    /// Blocking: a file grew past its grandfathered count.
+    pub errors: Vec<Finding>,
+    /// Non-blocking: a file shrank and the baseline is stale.
+    pub warnings: Vec<Finding>,
+}
+
+pub fn ratchet(
+    current: &BTreeMap<String, u64>,
+    baseline: &BTreeMap<String, u64>,
+) -> RatchetReport {
+    let mut rep = RatchetReport {
+        errors: Vec::new(),
+        warnings: Vec::new(),
+    };
+    for (file, &count) in current {
+        let allowed = baseline.get(file).copied().unwrap_or(0);
+        if count > allowed {
+            rep.errors.push(Finding {
+                rule: "unwrap-ratchet",
+                file: file.clone(),
+                line: 0,
+                message: format!(
+                    "{count} unwrap/expect sites exceed the \
+                     grandfathered baseline of {allowed}; handle the \
+                     error (v2 envelope / poison recovery) instead"
+                ),
+            });
+        } else if count < allowed {
+            rep.warnings.push(Finding {
+                rule: "unwrap-ratchet",
+                file: file.clone(),
+                line: 0,
+                message: format!(
+                    "count dropped to {count} (baseline {allowed}) — \
+                     shrink the baseline with --write-baseline"
+                ),
+            });
+        }
+    }
+    for (file, &allowed) in baseline {
+        if allowed > 0 && !current.contains_key(file) {
+            rep.warnings.push(Finding {
+                rule: "unwrap-ratchet",
+                file: file.clone(),
+                line: 0,
+                message: format!(
+                    "file has no unwrap/expect sites left (baseline \
+                     {allowed}) — shrink the baseline with \
+                     --write-baseline"
+                ),
+            });
+        }
+    }
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checked_in_baseline_parses() {
+        let b = load().expect("baseline.json must parse");
+        assert!(b.values().all(|&v| v > 0));
+    }
+
+    #[test]
+    fn render_roundtrips() {
+        let mut counts = BTreeMap::new();
+        counts.insert("httpd/server.rs".to_string(), 1u64);
+        counts.insert("orchestrator/tony.rs".to_string(), 2u64);
+        let text = render(&counts);
+        assert_eq!(parse(&text).unwrap(), counts);
+    }
+
+    #[test]
+    fn ratchet_rejects_increase_tolerates_equal() {
+        let mut baseline = BTreeMap::new();
+        baseline.insert("httpd/a.rs".to_string(), 2u64);
+        let mut current = baseline.clone();
+        let rep = ratchet(&current, &baseline);
+        assert!(rep.errors.is_empty());
+        assert!(rep.warnings.is_empty());
+        current.insert("httpd/a.rs".to_string(), 3);
+        assert_eq!(ratchet(&current, &baseline).errors.len(), 1);
+        // brand-new file with sites: also an error
+        current.insert("httpd/a.rs".to_string(), 2);
+        current.insert("httpd/b.rs".to_string(), 1);
+        assert_eq!(ratchet(&current, &baseline).errors.len(), 1);
+    }
+
+    #[test]
+    fn ratchet_warns_on_stale_baseline() {
+        let mut baseline = BTreeMap::new();
+        baseline.insert("httpd/a.rs".to_string(), 2u64);
+        let rep = ratchet(&BTreeMap::new(), &baseline);
+        assert!(rep.errors.is_empty());
+        assert_eq!(rep.warnings.len(), 1);
+    }
+}

@@ -1,0 +1,143 @@
+//! The canonical lock acquisition order for the whole platform.
+//!
+//! A thread may acquire a lock only while every lock it already holds
+//! ranks *strictly earlier* (same-rank acquisitions must have strictly
+//! ascending ordinals — compaction's shard sweep). This single table is
+//! enforced twice, from the same declaration:
+//!
+//! - statically, by `submarine-lint` ([`crate::analysis::rules`]),
+//!   which flags any function whose guard-liveness implies an
+//!   out-of-order acquisition;
+//! - dynamically, by the debug-build tracker
+//!   ([`crate::analysis::tracker`]), which panics the moment a thread
+//!   actually acquires out of order — even when the interleaving never
+//!   deadlocks in that run.
+//!
+//! The order was derived from (and is verified against) every
+//! acquisition path in `storage/kv.rs`:
+//!
+//! | rank | lock | why it sits here |
+//! |------|------|------------------|
+//! | CompactGate | `Durability::compacting` | taken first, alone, gates a compaction pass |
+//! | Shard | `MetaStore::shards[i]` | writers take their shard, compaction takes all 16 ascending |
+//! | WalWriter | `Durability::writer` | compaction rotates the WAL while holding all shard read locks |
+//! | WalPending | `Durability::pending` | the group-commit leader drains pending under the writer lock |
+//! | Feed | `MetaStore::feed` | `current_rev()` runs under writer+shards during rotation |
+//! | Index | `MetaStore::defs` | declaration reads/writes; never held across shard/WAL work |
+//! | Metrics | `MetricStore::series` | leaf lock, logged to after storage work completes |
+//! | WalFlush | `Durability::flush` | durability waiters take it last (leader publishes seq under writer) |
+//! | ConnQueue | `ConnQueue::q` | httpd connection hand-off; independent of storage locks |
+//!
+//! The ISSUE-6 mandated subsequence — shard → feed → index → metrics —
+//! is preserved inside the full order.
+
+/// Lock ranks, earliest-acquirable first. Gaps between values leave
+/// room for future locks without renumbering.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum LockRank {
+    /// `Durability::compacting` — the compaction gate.
+    CompactGate = 0,
+    /// One of the 16 `MetaStore` shard `RwLock`s; ordinal = shard
+    /// index, and same-rank acquisitions must ascend.
+    Shard = 10,
+    /// `Durability::writer` — the WAL append handle.
+    WalWriter = 20,
+    /// `Durability::pending` — the group-commit buffer.
+    WalPending = 30,
+    /// `MetaStore::feed` — change-feed ring + publish sequencer.
+    Feed = 40,
+    /// `MetaStore::defs` — secondary index declarations.
+    Index = 50,
+    /// `MetricStore::series` — metric time series.
+    Metrics = 60,
+    /// `Durability::flush` — durable-sequence watermark.
+    WalFlush = 70,
+    /// `httpd::ConnQueue` — connection hand-off lanes.
+    ConnQueue = 80,
+}
+
+impl LockRank {
+    pub fn name(self) -> &'static str {
+        match self {
+            LockRank::CompactGate => "CompactGate",
+            LockRank::Shard => "Shard",
+            LockRank::WalWriter => "WalWriter",
+            LockRank::WalPending => "WalPending",
+            LockRank::Feed => "Feed",
+            LockRank::Index => "Index",
+            LockRank::Metrics => "Metrics",
+            LockRank::WalFlush => "WalFlush",
+            LockRank::ConnQueue => "ConnQueue",
+        }
+    }
+
+    pub fn rank(self) -> u8 {
+        self as u8
+    }
+}
+
+/// Field/receiver name → rank, for raw `.lock()` / `.read()` /
+/// `.write()` / `.try_lock()` sites. The static pass resolves the
+/// identifier immediately left of the acquisition method (skipping one
+/// index expression, so `self.shards[i].write()` resolves to `shards`).
+pub const RECEIVER_RANKS: &[(&str, LockRank)] = &[
+    ("compacting", LockRank::CompactGate),
+    ("shards", LockRank::Shard),
+    ("sh", LockRank::Shard),
+    ("writer", LockRank::WalWriter),
+    ("pending", LockRank::WalPending),
+    ("feed", LockRank::Feed),
+    ("defs", LockRank::Index),
+    ("series", LockRank::Metrics),
+    ("flush", LockRank::WalFlush),
+    ("q", LockRank::ConnQueue),
+];
+
+/// Helper functions that acquire a lock on the caller's behalf — the
+/// static pass treats a call to one as an acquisition of its rank.
+pub const CALL_RANKS: &[(&str, LockRank)] = &[
+    ("feed_lock", LockRank::Feed),
+    ("current_rev", LockRank::Feed),
+    ("shard_read", LockRank::Shard),
+    ("shard_write", LockRank::Shard),
+    ("series_lock", LockRank::Metrics),
+    ("lanes", LockRank::ConnQueue),
+];
+
+/// Ranks that must never be held across a file or socket write
+/// (`.write_all(` / `.sync_data(`). The feed mutex serializes every
+/// write's publish step — an fsync under it would stall the whole
+/// write path (the exact regression ISSUE 5 removed).
+pub const NO_IO_RANKS: &[LockRank] = &[LockRank::Feed];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn order_is_strict() {
+        let ranks = [
+            LockRank::CompactGate,
+            LockRank::Shard,
+            LockRank::WalWriter,
+            LockRank::WalPending,
+            LockRank::Feed,
+            LockRank::Index,
+            LockRank::Metrics,
+            LockRank::WalFlush,
+            LockRank::ConnQueue,
+        ];
+        for w in ranks.windows(2) {
+            assert!(w[0].rank() < w[1].rank(), "{w:?}");
+        }
+    }
+
+    #[test]
+    fn issue_subsequence_preserved() {
+        // shard → feed → index → metrics, as declared by ISSUE 6
+        assert!(LockRank::Shard < LockRank::Feed);
+        assert!(LockRank::Feed < LockRank::Index);
+        assert!(LockRank::Index < LockRank::Metrics);
+    }
+}

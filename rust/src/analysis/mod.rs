@@ -1,0 +1,229 @@
+//! `submarine-lint`: in-tree static analysis for the invariants the
+//! platform's performance and liveness depend on.
+//!
+//! The module is dependency-free (like `util/json.rs`) and enforces
+//! four rules over a hand-rolled token scan of `src/`:
+//!
+//! 1. lock acquisition order ([`lock_order`], [`rules::lock_order`]),
+//! 2. zero allocations in registered hot paths
+//!    ([`rules::hot_path`]),
+//! 3. a one-way `.unwrap()`/`.expect(` ratchet for request paths
+//!    ([`baseline`]),
+//! 4. resource-kind registration completeness
+//!    ([`rules::completeness`]).
+//!
+//! The same rank table also backs a debug-build runtime tracker
+//! ([`tracker`]) wired into `storage/kv.rs`, `storage/metrics.rs` and
+//! `httpd/server.rs`.
+//!
+//! Run it with `cargo run --bin submarine-lint`; CI runs it as a
+//! blocking step and uploads the `--report` JSON as an artifact. See
+//! `docs/ANALYSIS.md` for the workflow.
+
+pub mod baseline;
+pub mod lock_order;
+pub mod rules;
+pub mod scanner;
+pub mod tracker;
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// One diagnostic from any rule.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    /// Path relative to `src/`, with `/` separators.
+    pub file: String,
+    /// 1-based; 0 when the finding is file- or tree-scoped.
+    pub line: usize,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn render(&self) -> String {
+        if self.line == 0 {
+            format!("[{}] {}: {}", self.rule, self.file, self.message)
+        } else {
+            format!(
+                "[{}] {}:{}: {}",
+                self.rule, self.file, self.line, self.message
+            )
+        }
+    }
+}
+
+/// Full result of a lint run over one source tree.
+pub struct Report {
+    /// Blocking findings — any entry fails the run.
+    pub findings: Vec<Finding>,
+    /// Non-blocking notices (stale baseline entries).
+    pub warnings: Vec<Finding>,
+    /// Current unwrap/expect counts per in-scope file (the shape
+    /// `--write-baseline` persists).
+    pub unwrap_counts: BTreeMap<String, u64>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn ok(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Machine-readable report (uploaded as a CI artifact).
+    pub fn to_json(&self) -> Json {
+        fn arr(findings: &[Finding]) -> Json {
+            Json::Arr(
+                findings
+                    .iter()
+                    .map(|f| {
+                        Json::obj()
+                            .set("rule", Json::Str(f.rule.to_string()))
+                            .set("file", Json::Str(f.file.clone()))
+                            .set("line", Json::Num(f.line as f64))
+                            .set(
+                                "message",
+                                Json::Str(f.message.clone()),
+                            )
+                    })
+                    .collect(),
+            )
+        }
+        let counts = Json::Obj(
+            self.unwrap_counts
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                .collect(),
+        );
+        Json::obj()
+            .set("ok", Json::Bool(self.ok()))
+            .set(
+                "files_scanned",
+                Json::Num(self.files_scanned as f64),
+            )
+            .set("findings", arr(&self.findings))
+            .set("warnings", arr(&self.warnings))
+            .set("unwrap_counts", counts)
+    }
+}
+
+/// Recursively collect `.rs` files under `dir`, keyed by their
+/// `/`-separated path relative to `src/`, in sorted order.
+fn collect_sources(
+    dir: &Path,
+    rel: &str,
+    out: &mut BTreeMap<String, String>,
+) -> io::Result<()> {
+    let mut entries: Vec<_> =
+        fs::read_dir(dir)?.collect::<io::Result<_>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let child_rel = if rel.is_empty() {
+            name.to_string()
+        } else {
+            format!("{rel}/{name}")
+        };
+        let path = entry.path();
+        if path.is_dir() {
+            collect_sources(&path, &child_rel, out)?;
+        } else if name.ends_with(".rs") {
+            out.insert(child_rel, fs::read_to_string(&path)?);
+        }
+    }
+    Ok(())
+}
+
+/// Run every rule over the crate rooted at `crate_dir` (the directory
+/// containing `src/`).
+pub fn run_all(crate_dir: &Path) -> Result<Report, String> {
+    let src = crate_dir.join("src");
+    let mut sources = BTreeMap::new();
+    collect_sources(&src, "", &mut sources)
+        .map_err(|e| format!("reading {}: {e}", src.display()))?;
+    if sources.is_empty() {
+        return Err(format!("no .rs files under {}", src.display()));
+    }
+
+    let scans: BTreeMap<String, scanner::Scan> = sources
+        .iter()
+        .map(|(rel, text)| (rel.clone(), scanner::scan(text)))
+        .collect();
+
+    let mut findings = Vec::new();
+    let mut unwrap_counts = BTreeMap::new();
+    for (rel, sc) in &scans {
+        findings.extend(rules::lock_order(rel, sc));
+        findings.extend(rules::hot_path(rel, sc));
+        let sites = rules::unwrap_sites(rel, sc);
+        if !sites.is_empty() {
+            unwrap_counts.insert(rel.clone(), sites.len() as u64);
+        }
+    }
+    findings.extend(rules::completeness(&scans));
+
+    let base = baseline::load()?;
+    let ratchet = baseline::ratchet(&unwrap_counts, &base);
+    findings.extend(ratchet.errors);
+
+    Ok(Report {
+        findings,
+        warnings: ratchet.warnings,
+        unwrap_counts,
+        files_scanned: scans.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The lint must pass over its own tree — this is the same
+    /// invariant CI enforces via `cargo run --bin submarine-lint`.
+    #[test]
+    fn own_tree_is_clean() {
+        let crate_dir = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let report = run_all(crate_dir).expect("lint run");
+        assert!(
+            report.ok(),
+            "blocking findings:\n{}",
+            report
+                .findings
+                .iter()
+                .map(|f| f.render())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+        assert!(report.files_scanned > 20);
+        // the grandfathered sites really exist
+        assert!(!report.unwrap_counts.is_empty());
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let rep = Report {
+            findings: vec![Finding {
+                rule: "lock-order",
+                file: "storage/kv.rs".to_string(),
+                line: 7,
+                message: "m".to_string(),
+            }],
+            warnings: Vec::new(),
+            unwrap_counts: BTreeMap::new(),
+            files_scanned: 1,
+        };
+        let j = rep.to_json();
+        assert_eq!(
+            j.get("ok").and_then(|v| v.as_bool()),
+            Some(false)
+        );
+        let dump = j.dump();
+        assert!(dump.contains("\"lock-order\""));
+        assert!(dump.contains("\"storage/kv.rs\""));
+    }
+}

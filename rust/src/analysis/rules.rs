@@ -1,0 +1,734 @@
+//! The rule engine: four project invariants checked over
+//! [`crate::analysis::scanner::Scan`] results.
+//!
+//! 1. **lock-order** — no function may acquire a lock while holding a
+//!    later-ranked one (per [`crate::analysis::lock_order`]), and no
+//!    prohibited guard may be live across a file/socket write. The
+//!    pass is intra-procedural: cross-function compositions are the
+//!    runtime tracker's job ([`crate::analysis::tracker`]).
+//! 2. **hot-path allocations** — registered hot functions may not
+//!    introduce `clone()` / `to_string()` / `format!` / `Vec::new`
+//!    (freezing the ISSUE-5 zero-clone wins). Grandfathered sites
+//!    carry a `lint: allow(hot)` comment.
+//! 3. **unwrap/expect ratchet** — `.unwrap()` / `.expect(` in
+//!    `httpd/` and `orchestrator/` production code is compared against
+//!    the checked-in baseline; the count may only go down.
+//! 4. **resource-kind completeness** — every `impl ResourceKind` in
+//!    `httpd/v2.rs` is registered in `kinds()` and every field it
+//!    filters on has a `define_index` declaration somewhere in `src/`.
+
+use super::lock_order::{
+    LockRank, CALL_RANKS, NO_IO_RANKS, RECEIVER_RANKS,
+};
+use super::scanner::Scan;
+use super::Finding;
+use std::collections::BTreeMap;
+
+// ------------------------------------------------------- unwrap ratchet
+
+/// Directories (relative to `src/`) where `.unwrap()` / `.expect(` are
+/// banned outside `#[cfg(test)]` items.
+pub const UNWRAP_SCOPE: &[&str] = &["httpd/", "orchestrator/"];
+
+/// Inline opt-out marker for an individually reviewed site.
+pub const ALLOW_UNWRAP: &str = "lint: allow(unwrap)";
+
+/// Line numbers of non-test `.unwrap()` / `.expect(` sites in `rel`
+/// (one entry per site; a line with two sites appears twice).
+pub fn unwrap_sites(rel: &str, sc: &Scan) -> Vec<usize> {
+    if !UNWRAP_SCOPE.iter().any(|p| rel.starts_with(p)) {
+        return Vec::new();
+    }
+    let mut sites = Vec::new();
+    for (idx, text) in sc.lines.iter().enumerate() {
+        let ln = idx + 1;
+        if sc.in_test(ln) {
+            continue;
+        }
+        if sc
+            .orig_lines
+            .get(idx)
+            .is_some_and(|o| o.contains(ALLOW_UNWRAP))
+        {
+            continue;
+        }
+        let count = text.matches(".unwrap()").count()
+            + text.matches(".expect(").count();
+        for _ in 0..count {
+            sites.push(ln);
+        }
+    }
+    sites
+}
+
+// ------------------------------------------------------------- hot path
+
+/// Functions frozen at zero hot-path allocations: `(file, fn)`.
+/// Register a new hot function by adding it here (see
+/// `docs/ANALYSIS.md`); grandfathered allocations inside one carry a
+/// `lint: allow(hot)` comment.
+pub const HOT_REGISTRY: &[(&str, &str)] = &[
+    // kv.rs read paths + feed handout
+    ("storage/kv.rs", "get"),
+    ("storage/kv.rs", "list"),
+    ("storage/kv.rs", "page"),
+    ("storage/kv.rs", "keys_page"),
+    ("storage/kv.rs", "index_page"),
+    ("storage/kv.rs", "wal_record"),
+    // resource.rs cached-GET/HEAD + watch serialization
+    ("httpd/resource.rs", "get_item"),
+    ("httpd/resource.rs", "change_line"),
+    // json.rs dump paths
+    ("util/json.rs", "dump_into"),
+    ("util/json.rs", "write"),
+    ("util/json.rs", "write_json_string"),
+    ("util/json.rs", "write_json_u64"),
+    ("util/json.rs", "write_json_i64"),
+    ("util/json.rs", "write_json_num"),
+];
+
+/// Tokens a hot function may not introduce.
+pub const HOT_TOKENS: &[&str] =
+    &[".clone()", ".to_string()", "format!(", "Vec::new("];
+
+/// Inline opt-out marker for a reviewed hot-path allocation.
+pub const ALLOW_HOT: &str = "lint: allow(hot)";
+
+pub fn hot_path(rel: &str, sc: &Scan) -> Vec<Finding> {
+    let wanted: Vec<&str> = HOT_REGISTRY
+        .iter()
+        .filter(|(f, _)| *f == rel)
+        .map(|(_, name)| *name)
+        .collect();
+    let mut findings = Vec::new();
+    if wanted.is_empty() {
+        return findings;
+    }
+    for f in &sc.fns {
+        if !wanted.contains(&f.name.as_str()) || sc.in_test(f.start) {
+            continue;
+        }
+        for ln in f.start..=f.end {
+            let Some(text) = sc.lines.get(ln - 1) else { continue };
+            if sc
+                .orig_lines
+                .get(ln - 1)
+                .is_some_and(|o| o.contains(ALLOW_HOT))
+            {
+                continue;
+            }
+            for tok in HOT_TOKENS {
+                if text.contains(tok) {
+                    findings.push(Finding {
+                        rule: "hot-path",
+                        file: rel.to_string(),
+                        line: ln,
+                        message: format!(
+                            "hot fn `{}` introduces `{}` (register \
+                             rationale with `{}` or remove the \
+                             allocation)",
+                            f.name, tok, ALLOW_HOT
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    findings
+}
+
+// ----------------------------------------------------------- lock order
+
+const ACQ_METHODS: &[&str] =
+    &[".lock()", ".read()", ".write()", ".try_lock()"];
+const GUARD_CONSUMERS: &[&str] =
+    &[".unwrap()", ".expect(", ".unwrap_or_else("];
+const IO_TOKENS: &[&str] = &[".write_all(", ".sync_data("];
+
+fn starts_with(chars: &[char], pos: usize, pat: &str) -> bool {
+    let mut i = pos;
+    for pc in pat.chars() {
+        if i >= chars.len() || chars[i] != pc {
+            return false;
+        }
+        i += 1;
+    }
+    true
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+fn receiver_rank(name: &str) -> Option<LockRank> {
+    RECEIVER_RANKS
+        .iter()
+        .find(|(n, _)| *n == name)
+        .map(|(_, r)| *r)
+}
+
+fn call_rank(name: &str) -> Option<LockRank> {
+    CALL_RANKS.iter().find(|(n, _)| *n == name).map(|(_, r)| *r)
+}
+
+/// Advance past `.unwrap()` / `.expect(..)` / `.unwrap_or_else(..)`
+/// chains following an acquisition; returns the index of the next
+/// significant char. If that char continues the method/field chain,
+/// the guard was consumed in-expression (a temporary).
+fn skip_guard_consumers(chars: &[char], mut pos: usize) -> usize {
+    let n = chars.len();
+    loop {
+        while pos < n
+            && (chars[pos] == ' '
+                || chars[pos] == '\t'
+                || chars[pos] == '\n')
+        {
+            pos += 1;
+        }
+        let mut matched = false;
+        for gc in GUARD_CONSUMERS {
+            if starts_with(chars, pos, gc) {
+                if *gc == ".unwrap()" {
+                    pos += gc.chars().count();
+                } else {
+                    // skip to the matching close paren
+                    while pos < n && chars[pos] != '(' {
+                        pos += 1;
+                    }
+                    let mut depth = 1;
+                    pos += 1;
+                    while pos < n && depth > 0 {
+                        if chars[pos] == '(' {
+                            depth += 1;
+                        } else if chars[pos] == ')' {
+                            depth -= 1;
+                        }
+                        pos += 1;
+                    }
+                }
+                matched = true;
+                break;
+            }
+        }
+        if !matched {
+            return pos;
+        }
+    }
+}
+
+/// The identifier immediately left of `pos` (the `.` of an acquisition
+/// method), skipping one balanced index expression so
+/// `self.shards[shard_of(ns)].write()` resolves to `shards`.
+fn receiver_before(chars: &[char], pos: usize) -> String {
+    let mut j = pos as i64 - 1;
+    if j >= 0 && chars[j as usize] == ']' {
+        let mut depth = 1;
+        j -= 1;
+        while j >= 0 && depth > 0 {
+            if chars[j as usize] == ']' {
+                depth += 1;
+            } else if chars[j as usize] == '[' {
+                depth -= 1;
+            }
+            j -= 1;
+        }
+    }
+    let end = (j + 1) as usize;
+    while j >= 0 && is_ident(chars[j as usize]) {
+        j -= 1;
+    }
+    chars[(j + 1) as usize..end].iter().collect()
+}
+
+struct LiveGuard {
+    rank: LockRank,
+    binding: Option<String>,
+    depth: i32,
+    line: usize,
+}
+
+/// Intra-procedural guard-liveness walk over every non-test function.
+pub fn lock_order(rel: &str, sc: &Scan) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let blanked = sc.blanked();
+    for f in &sc.fns {
+        if sc.in_test(f.start) {
+            continue;
+        }
+        let start_off: usize = sc.lines[..f.start - 1]
+            .iter()
+            .map(|l| l.chars().count() + 1)
+            .sum();
+        let end_off: usize = sc.lines[..f.end.min(sc.lines.len())]
+            .iter()
+            .map(|l| l.chars().count() + 1)
+            .sum();
+        let body: Vec<char> = blanked
+            .chars()
+            .skip(start_off)
+            .take(end_off.saturating_sub(start_off))
+            .collect();
+        analyze_fn(rel, &f.name, &body, f.start, &mut findings);
+    }
+    findings
+}
+
+fn analyze_fn(
+    rel: &str,
+    fname: &str,
+    body: &[char],
+    first_line: usize,
+    findings: &mut Vec<Finding>,
+) {
+    let n = body.len();
+    let mut i = 0usize;
+    let mut line = first_line;
+    let mut depth = 0i32;
+    let mut live: Vec<LiveGuard> = Vec::new();
+    let mut pending_let: Option<String> = None;
+
+    // check + record one acquisition; `after` = index just past the
+    // acquisition expression (for temporary-vs-bound classification)
+    fn acquire(
+        rel: &str,
+        fname: &str,
+        body: &[char],
+        after: usize,
+        line: usize,
+        depth: i32,
+        rank: LockRank,
+        live: &mut Vec<LiveGuard>,
+        pending_let: &Option<String>,
+        findings: &mut Vec<Finding>,
+    ) {
+        for held in live.iter() {
+            if held.rank > rank {
+                findings.push(Finding {
+                    rule: "lock-order",
+                    file: rel.to_string(),
+                    line,
+                    message: format!(
+                        "fn `{fname}` acquires {} (rank {}) while {} \
+                         (rank {}) is held since line {}",
+                        rank.name(),
+                        rank.rank(),
+                        held.rank.name(),
+                        held.rank.rank(),
+                        held.line
+                    ),
+                });
+            }
+        }
+        let j = skip_guard_consumers(body, after);
+        let consumed =
+            j < body.len() && (body[j] == '.' || body[j] == '?');
+        let binding = if consumed {
+            None // temporary: guard dies at the statement `;`
+        } else {
+            pending_let.clone()
+        };
+        live.push(LiveGuard {
+            rank,
+            binding,
+            depth,
+            line,
+        });
+    }
+
+    while i < n {
+        let c = body[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == '{' {
+            depth += 1;
+            i += 1;
+            continue;
+        }
+        if c == '}' {
+            live.retain(|g| g.depth < depth);
+            depth -= 1;
+            i += 1;
+            continue;
+        }
+        if c == ';' {
+            // temporaries die at statement end; a pending let completes
+            live.retain(|g| {
+                !(g.binding.is_none() && g.depth == depth)
+            });
+            pending_let = None;
+            i += 1;
+            continue;
+        }
+        if is_ident(c) {
+            let mut j = i;
+            while j < n && is_ident(body[j]) {
+                j += 1;
+            }
+            let word: String = body[i..j].iter().collect();
+            let prev = if i > 0 { body[i - 1] } else { ' ' };
+            if is_ident(prev) || prev == '\'' {
+                i = j;
+                continue;
+            }
+            // helper-call acquisition: `self.feed_lock()` or bare
+            // `feed_lock(...)`
+            if let Some(rank) = call_rank(&word) {
+                if j < n && body[j] == '(' {
+                    let mut k = j + 1;
+                    let mut d2 = 1;
+                    while k < n && d2 > 0 {
+                        if body[k] == '(' {
+                            d2 += 1;
+                        } else if body[k] == ')' {
+                            d2 -= 1;
+                        } else if body[k] == '\n' {
+                            line += 1;
+                        }
+                        k += 1;
+                    }
+                    acquire(
+                        rel,
+                        fname,
+                        body,
+                        k,
+                        line,
+                        depth,
+                        rank,
+                        &mut live,
+                        &pending_let,
+                        findings,
+                    );
+                    i = k;
+                    continue;
+                }
+            }
+            if prev == '.' {
+                i = j;
+                continue;
+            }
+            if word == "let" {
+                // binding name: first pattern ident that isn't
+                // mut/ref (tuple patterns bind their first element —
+                // good enough: `let (shard, _t) = ...` tracks `shard`)
+                let mut k = j;
+                let mut name: Option<String> = None;
+                while k < n {
+                    if body[k] == '\n' {
+                        line += 1;
+                    }
+                    if body[k] == '=' || body[k] == ';' {
+                        break;
+                    }
+                    if is_ident(body[k]) {
+                        let mut e = k;
+                        while e < n && is_ident(body[e]) {
+                            e += 1;
+                        }
+                        let w: String =
+                            body[k..e].iter().collect();
+                        if w != "mut" && w != "ref" {
+                            name = Some(w);
+                            break;
+                        }
+                        k = e;
+                        continue;
+                    }
+                    k += 1;
+                }
+                pending_let =
+                    Some(name.unwrap_or_else(|| "_pat".to_string()));
+                i = j;
+                continue;
+            }
+            if word == "drop" {
+                let mut k = j;
+                while k < n && (body[k] == ' ' || body[k] == '\t') {
+                    k += 1;
+                }
+                if k < n && body[k] == '(' {
+                    let mut e = k + 1;
+                    let s = e;
+                    while e < n && is_ident(body[e]) {
+                        e += 1;
+                    }
+                    let nm: String = body[s..e].iter().collect();
+                    live.retain(|g| {
+                        g.binding.as_deref() != Some(nm.as_str())
+                    });
+                }
+                i = j;
+                continue;
+            }
+            i = j;
+            continue;
+        }
+        if c == '.' {
+            let mut matched = false;
+            for m in ACQ_METHODS {
+                if starts_with(body, i, m) {
+                    let recv = receiver_before(body, i);
+                    let after = i + m.chars().count();
+                    if let Some(rank) = receiver_rank(&recv) {
+                        acquire(
+                            rel,
+                            fname,
+                            body,
+                            after,
+                            line,
+                            depth,
+                            rank,
+                            &mut live,
+                            &pending_let,
+                            findings,
+                        );
+                    }
+                    i = after;
+                    matched = true;
+                    break;
+                }
+            }
+            if matched {
+                continue;
+            }
+            for tok in IO_TOKENS {
+                if starts_with(body, i, tok) {
+                    for held in &live {
+                        if NO_IO_RANKS.contains(&held.rank) {
+                            findings.push(Finding {
+                                rule: "lock-order",
+                                file: rel.to_string(),
+                                line,
+                                message: format!(
+                                    "fn `{fname}` performs a \
+                                     file/socket write while {} is \
+                                     held since line {}",
+                                    held.rank.name(),
+                                    held.line
+                                ),
+                            });
+                        }
+                    }
+                    i += tok.chars().count();
+                    matched = true;
+                    break;
+                }
+            }
+            if matched {
+                continue;
+            }
+            i += 1;
+            continue;
+        }
+        i += 1;
+    }
+}
+
+// --------------------------------------------------------- completeness
+
+/// Every `impl ResourceKind for X` in `httpd/v2.rs` must be registered
+/// in `kinds()`, and every index field its `index_field` /
+/// `scope_index` mentions (plus the implicit `meta.labels` label
+/// index) must appear in a `define_index` call somewhere in `src/`.
+pub fn completeness(scans: &BTreeMap<String, Scan>) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let Some(v2) = scans.get("httpd/v2.rs") else {
+        findings.push(Finding {
+            rule: "completeness",
+            file: "httpd/v2.rs".to_string(),
+            line: 0,
+            message: "httpd/v2.rs not found".to_string(),
+        });
+        return findings;
+    };
+    let mut kind_impls: Vec<(String, usize, usize)> = Vec::new();
+    for im in &v2.impls {
+        let parts: Vec<&str> = im.header.split(' ').collect();
+        if let Some(pos) = parts.iter().position(|p| *p == "for") {
+            if parts.contains(&"ResourceKind") && pos + 1 < parts.len()
+            {
+                kind_impls.push((
+                    parts[pos + 1].to_string(),
+                    im.start,
+                    im.end,
+                ));
+            }
+        }
+    }
+    let kinds_fn = v2.fns.iter().find(|f| f.name == "kinds");
+    let kinds_text: String = match kinds_fn {
+        Some(f) => v2.lines[f.start - 1..f.end.min(v2.lines.len())]
+            .join("\n"),
+        None => String::new(),
+    };
+    let mut required: Vec<String> = vec!["meta.labels".to_string()];
+    for (name, a, b) in &kind_impls {
+        if kinds_fn.is_none() || !kinds_text.contains(name.as_str()) {
+            findings.push(Finding {
+                rule: "completeness",
+                file: "httpd/v2.rs".to_string(),
+                line: *a,
+                message: format!(
+                    "ResourceKind `{name}` is not registered in \
+                     kinds()"
+                ),
+            });
+        }
+        for f in &v2.fns {
+            if (f.name == "index_field" || f.name == "scope_index")
+                && *a <= f.start
+                && f.start <= *b
+            {
+                for s in &v2.strings {
+                    if f.start <= s.line
+                        && s.line <= f.end
+                        && !s.value.is_empty()
+                        && !required.contains(&s.value)
+                    {
+                        required.push(s.value.clone());
+                    }
+                }
+            }
+        }
+    }
+    // collect declared fields: strings inside `define_index(...)` spans
+    let mut declared: Vec<String> = Vec::new();
+    for sc in scans.values() {
+        let joined = sc.blanked();
+        let chars: Vec<char> = joined.chars().collect();
+        let needle: Vec<char> = "define_index(".chars().collect();
+        let mut start = 0usize;
+        while start + needle.len() <= chars.len() {
+            if chars[start..start + needle.len()] != needle[..] {
+                start += 1;
+                continue;
+            }
+            let ln_start = chars[..start]
+                .iter()
+                .filter(|c| **c == '\n')
+                .count()
+                + 1;
+            let mut e = start + needle.len() - 1;
+            let mut d2 = 0;
+            while e < chars.len() {
+                if chars[e] == '(' {
+                    d2 += 1;
+                } else if chars[e] == ')' {
+                    d2 -= 1;
+                    if d2 == 0 {
+                        break;
+                    }
+                }
+                e += 1;
+            }
+            let ln_end = chars[..e.min(chars.len())]
+                .iter()
+                .filter(|c| **c == '\n')
+                .count()
+                + 1;
+            for s in &sc.strings {
+                if ln_start <= s.line
+                    && s.line <= ln_end
+                    && !s.value.is_empty()
+                    && !declared.contains(&s.value)
+                {
+                    declared.push(s.value.clone());
+                }
+            }
+            start = e + 1;
+        }
+    }
+    for f in required {
+        if !declared.contains(&f) {
+            findings.push(Finding {
+                rule: "completeness",
+                file: "httpd/v2.rs".to_string(),
+                line: 0,
+                message: format!(
+                    "ResourceKind filter field `{f}` has no \
+                     define_index declaration"
+                ),
+            });
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::scanner::scan;
+
+    #[test]
+    fn unwrap_counted_outside_tests_only() {
+        let src = "fn h() {\n    x.unwrap();\n    y.expect(\"m\");\n}\n\
+                   #[cfg(test)]\nmod tests {\n    fn t() {\n        \
+                   z.unwrap();\n    }\n}\n";
+        let sc = scan(src);
+        assert_eq!(unwrap_sites("httpd/handler.rs", &sc), vec![2, 3]);
+        // out of scope → not counted
+        assert!(unwrap_sites("storage/kv.rs", &sc).is_empty());
+    }
+
+    #[test]
+    fn lock_inversion_flagged() {
+        let src = "impl Store {\n    fn inverted(&self) {\n        \
+                   let feed = self.feed.lock().unwrap();\n        \
+                   let shard = self.shards[0].write().unwrap();\n    \
+                   }\n}\n";
+        let f = lock_order("storage/kv.rs", &scan(src));
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("Shard"));
+        assert!(f[0].message.contains("Feed"));
+    }
+
+    #[test]
+    fn scoped_release_is_clean() {
+        let src = "impl Store {\n    fn ordered(&self) {\n        \
+                   let mut shard = self.shards[0].write().unwrap();\n\
+                           {\n            let mut feed = \
+                   self.feed_lock();\n            feed.push(1);\n     \
+                   }\n        shard.touch();\n    }\n}\n";
+        assert!(lock_order("storage/kv.rs", &scan(src)).is_empty());
+    }
+
+    #[test]
+    fn temporary_consumed_guard_is_released() {
+        let src = "fn gen(&self) -> u64 {\n    let new_gen = \
+                   d.writer.lock().unwrap().gen + 1;\n    let shard = \
+                   self.shards[0].read().unwrap();\n    new_gen\n}\n";
+        assert!(lock_order("storage/kv.rs", &scan(src)).is_empty());
+    }
+
+    #[test]
+    fn drop_releases_binding() {
+        let src = "fn seq(&self) {\n    let feed = \
+                   self.feed.lock().unwrap();\n    drop(feed);\n    \
+                   let shard = self.shards[0].write().unwrap();\n}\n";
+        assert!(lock_order("storage/kv.rs", &scan(src)).is_empty());
+    }
+
+    #[test]
+    fn io_under_feed_guard_flagged() {
+        let src = "fn rotate(&self) {\n    let feed = \
+                   self.feed.lock().unwrap();\n    \
+                   self.file.write_all(b\"x\").unwrap();\n}\n";
+        let f = lock_order("storage/kv.rs", &scan(src));
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("file/socket write"));
+    }
+
+    #[test]
+    fn hot_clone_flagged_and_allow_respected() {
+        let src = "impl M {\n    pub fn get(&self) -> J {\n        \
+                   self.doc.clone()\n    }\n    pub fn list(&self) -> \
+                   J {\n        self.doc.clone() // lint: allow(hot)\n\
+                       }\n}\n";
+        let sc = scan(src);
+        let f = hot_path("storage/kv.rs", &sc);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 3);
+    }
+}

@@ -1,0 +1,552 @@
+//! Hand-rolled Rust token scanner for `submarine-lint`.
+//!
+//! Same zero-deps philosophy as `util/json.rs`: no syn, no proc-macro2,
+//! just a character state machine. It blanks comments and string/char
+//! literals (so token matching never fires inside either), tracks brace
+//! nesting, and records `fn` / `impl` / `mod` spans plus `#[cfg(test)]`
+//! regions so rules can scope themselves to production code.
+//!
+//! The scanner is deliberately *approximate*: it does not parse Rust,
+//! it recognizes the shapes this codebase actually uses. Every rule
+//! built on it is validated against the real tree (zero findings) and
+//! against fixtures (known-bad snippets must flag) in
+//! `tests/analysis.rs`.
+
+/// A `fn` item span, 1-based inclusive lines.
+#[derive(Debug, Clone)]
+pub struct FnSpan {
+    pub name: String,
+    pub start: usize,
+    pub end: usize,
+}
+
+/// An `impl` block span with its (whitespace-normalized) header, e.g.
+/// `ResourceKind for ModelKind`.
+#[derive(Debug, Clone)]
+pub struct ImplSpan {
+    pub header: String,
+    pub start: usize,
+    pub end: usize,
+}
+
+/// A string literal and the line it starts on.
+#[derive(Debug, Clone)]
+pub struct StringLit {
+    pub line: usize,
+    pub value: String,
+}
+
+/// Result of scanning one source file.
+#[derive(Debug, Default)]
+pub struct Scan {
+    /// Source lines with comments and literals blanked to spaces
+    /// (column positions preserved).
+    pub lines: Vec<String>,
+    /// The original source lines (for `lint: allow(...)` comments).
+    pub orig_lines: Vec<String>,
+    pub strings: Vec<StringLit>,
+    pub fns: Vec<FnSpan>,
+    pub impls: Vec<ImplSpan>,
+    /// `#[cfg(test)]`-gated item spans.
+    pub test_spans: Vec<(usize, usize)>,
+}
+
+impl Scan {
+    /// Whether `line` falls inside a `#[cfg(test)]` item.
+    pub fn in_test(&self, line: usize) -> bool {
+        self.test_spans.iter().any(|&(a, b)| a <= line && line <= b)
+    }
+
+    /// The blanked source re-joined (used by span-level rules).
+    pub fn blanked(&self) -> String {
+        self.lines.join("\n")
+    }
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Blank comments and string/char literals to spaces, collecting string
+/// literal contents as we go. Newlines are preserved so line numbers
+/// and brace nesting survive.
+fn strip(src: &str) -> (String, Vec<StringLit>) {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out = chars.clone();
+    let mut strings = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+
+    macro_rules! blank {
+        ($j:expr) => {
+            if out[$j] != '\n' {
+                out[$j] = ' ';
+            }
+        };
+    }
+
+    while i < n {
+        let c = chars[i];
+        let nxt = if i + 1 < n { chars[i + 1] } else { '\0' };
+        let prev = if i > 0 { chars[i - 1] } else { ' ' };
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        // line comment
+        if c == '/' && nxt == '/' {
+            while i < n && chars[i] != '\n' {
+                blank!(i);
+                i += 1;
+            }
+            continue;
+        }
+        // block comment (nesting)
+        if c == '/' && nxt == '*' {
+            let mut depth = 1;
+            blank!(i);
+            blank!(i + 1);
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                    continue;
+                }
+                if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    blank!(i);
+                    blank!(i + 1);
+                    i += 2;
+                    continue;
+                }
+                if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    blank!(i);
+                    blank!(i + 1);
+                    i += 2;
+                    continue;
+                }
+                blank!(i);
+                i += 1;
+            }
+            continue;
+        }
+        // raw strings r"..." / r#"..."# / br"..." / br#"..."#
+        if ((c == 'r' && (nxt == '"' || nxt == '#'))
+            || (c == 'b' && nxt == 'r'))
+            && !is_ident(prev)
+        {
+            let j = if c == 'b' { i + 2 } else { i + 1 };
+            let mut hashes = 0usize;
+            let mut k = j;
+            while k < n && chars[k] == '#' {
+                hashes += 1;
+                k += 1;
+            }
+            if k < n && chars[k] == '"' {
+                let start_line = line;
+                k += 1;
+                let mut content = String::new();
+                'outer: while k < n {
+                    if chars[k] == '"' {
+                        let mut all = true;
+                        for h in 0..hashes {
+                            if k + 1 + h >= n || chars[k + 1 + h] != '#'
+                            {
+                                all = false;
+                                break;
+                            }
+                        }
+                        if all {
+                            break 'outer;
+                        }
+                    }
+                    if chars[k] == '\n' {
+                        line += 1;
+                    }
+                    content.push(chars[k]);
+                    k += 1;
+                }
+                strings.push(StringLit {
+                    line: start_line,
+                    value: content,
+                });
+                let end = (k + hashes).min(n - 1);
+                for t in i..=end {
+                    blank!(t);
+                }
+                i = end + 1;
+                continue;
+            }
+            i += 1;
+            continue;
+        }
+        // byte string b"..."
+        if c == 'b' && nxt == '"' && !is_ident(prev) {
+            let start_line = line;
+            let mut k = i + 2;
+            let mut content = String::new();
+            while k < n && chars[k] != '"' {
+                if chars[k] == '\\' {
+                    content.push(chars[k]);
+                    if k + 1 < n {
+                        content.push(chars[k + 1]);
+                        if chars[k + 1] == '\n' {
+                            line += 1;
+                        }
+                    }
+                    k += 2;
+                    continue;
+                }
+                if chars[k] == '\n' {
+                    line += 1;
+                }
+                content.push(chars[k]);
+                k += 1;
+            }
+            strings.push(StringLit {
+                line: start_line,
+                value: content,
+            });
+            let end = k.min(n - 1);
+            for t in i..=end {
+                blank!(t);
+            }
+            i = k + 1;
+            continue;
+        }
+        // byte char b'x' / b'\n'
+        if c == 'b' && nxt == '\'' && !is_ident(prev) {
+            let mut k = i + 2;
+            if k < n && chars[k] == '\\' {
+                k += 2;
+            } else {
+                k += 1;
+            }
+            let end = k.min(n - 1);
+            for t in i..=end {
+                blank!(t);
+            }
+            i = k + 1;
+            continue;
+        }
+        // normal string
+        if c == '"' {
+            let start_line = line;
+            let mut k = i + 1;
+            let mut content = String::new();
+            while k < n && chars[k] != '"' {
+                if chars[k] == '\\' {
+                    content.push(chars[k]);
+                    if k + 1 < n {
+                        content.push(chars[k + 1]);
+                        if chars[k + 1] == '\n' {
+                            line += 1;
+                        }
+                    }
+                    k += 2;
+                    continue;
+                }
+                if chars[k] == '\n' {
+                    line += 1;
+                }
+                content.push(chars[k]);
+                k += 1;
+            }
+            strings.push(StringLit {
+                line: start_line,
+                value: content,
+            });
+            let end = k.min(n - 1);
+            for t in i..=end {
+                blank!(t);
+            }
+            i = k + 1;
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            let k = i + 1;
+            if k < n && (chars[k].is_alphabetic() || chars[k] == '_') {
+                let mut j = k;
+                while j < n && is_ident(chars[j]) {
+                    j += 1;
+                }
+                if j < n && chars[j] == '\'' && j == k + 1 {
+                    // 'x' single-char literal
+                    for t in i..=j {
+                        blank!(t);
+                    }
+                    i = j + 1;
+                } else {
+                    // lifetime — leave as-is
+                    i = j;
+                }
+                continue;
+            }
+            if k < n && chars[k] == '\\' {
+                let mut j = k + 1;
+                if j < n && chars[j] == 'u' {
+                    while j < n && chars[j] != '}' {
+                        j += 1;
+                    }
+                }
+                j += 1; // past escaped char / closing `}` to the quote
+                let end = j.min(n - 1);
+                for t in i..=end {
+                    blank!(t);
+                }
+                i = j + 1;
+                continue;
+            }
+            // any other single char literal: '{', '▁', ' ', '1' ...
+            let mut end = None;
+            let mut t = k;
+            while t < n && t < k + 4 {
+                if chars[t] == '\'' {
+                    end = Some(t);
+                    break;
+                }
+                t += 1;
+            }
+            if let Some(e) = end {
+                for t in i..=e {
+                    blank!(t);
+                }
+                i = e + 1;
+                continue;
+            }
+            i += 1;
+            continue;
+        }
+        i += 1;
+    }
+    (out.into_iter().collect(), strings)
+}
+
+/// Items awaiting their opening brace.
+struct PendingItem {
+    kind: ItemKind,
+    name: String,
+    start: usize,
+    cfg_test: bool,
+}
+
+#[derive(PartialEq, Clone, Copy)]
+enum ItemKind {
+    Fn,
+    Impl,
+    Mod,
+}
+
+/// Full scan of one source file: strip, then walk the blanked text
+/// tracking brace depth and item boundaries.
+pub fn scan(src: &str) -> Scan {
+    let (blanked, strings) = strip(src);
+    let mut sc = Scan {
+        lines: blanked.split('\n').map(str::to_string).collect(),
+        orig_lines: src.split('\n').map(str::to_string).collect(),
+        strings,
+        ..Scan::default()
+    };
+
+    let chars: Vec<char> = blanked.chars().collect();
+    let n = chars.len();
+    let mut depth = 0i32;
+    // (item, body_depth) for items whose body brace is open
+    let mut open: Vec<(PendingItem, i32)> = Vec::new();
+    let mut pend: Vec<PendingItem> = Vec::new();
+    let mut pending_cfg_test = false;
+    let mut i = 0usize;
+    let mut line = 1usize;
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == '{' {
+            depth += 1;
+            if let Some(item) = pend.pop() {
+                open.push((item, depth));
+            }
+            i += 1;
+            continue;
+        }
+        if c == '}' {
+            let mut still = Vec::new();
+            for (item, d) in open {
+                if d == depth {
+                    if item.cfg_test {
+                        sc.test_spans.push((item.start, line));
+                    }
+                    match item.kind {
+                        ItemKind::Fn => sc.fns.push(FnSpan {
+                            name: item.name,
+                            start: item.start,
+                            end: line,
+                        }),
+                        ItemKind::Impl => sc.impls.push(ImplSpan {
+                            header: item.name,
+                            start: item.start,
+                            end: line,
+                        }),
+                        ItemKind::Mod => {}
+                    }
+                } else {
+                    still.push((item, d));
+                }
+            }
+            open = still;
+            depth -= 1;
+            i += 1;
+            continue;
+        }
+        if c == ';' {
+            // `mod foo;` / trait method declaration — cancel pending
+            pend.pop();
+            i += 1;
+            continue;
+        }
+        if is_ident(c) {
+            let mut j = i;
+            while j < n && is_ident(chars[j]) {
+                j += 1;
+            }
+            let word: String = chars[i..j].iter().collect();
+            let prev = if i > 0 { chars[i - 1] } else { ' ' };
+            if is_ident(prev) || prev == '\'' {
+                i = j;
+                continue;
+            }
+            match word.as_str() {
+                "fn" | "mod" => {
+                    let mut k = j;
+                    while k < n && !is_ident(chars[k]) {
+                        if chars[k] == '\n' {
+                            line += 1;
+                        }
+                        if chars[k] == '(' || chars[k] == '{'
+                            || chars[k] == ';'
+                        {
+                            break;
+                        }
+                        k += 1;
+                    }
+                    let mut name = String::new();
+                    while k < n && is_ident(chars[k]) {
+                        name.push(chars[k]);
+                        k += 1;
+                    }
+                    pend.push(PendingItem {
+                        kind: if word == "fn" {
+                            ItemKind::Fn
+                        } else {
+                            ItemKind::Mod
+                        },
+                        name,
+                        start: line,
+                        cfg_test: pending_cfg_test,
+                    });
+                    pending_cfg_test = false;
+                    i = k;
+                }
+                "impl" => {
+                    let mut k = j;
+                    let mut hdr = String::new();
+                    while k < n && chars[k] != '{' && chars[k] != ';' {
+                        if chars[k] == '\n' {
+                            line += 1;
+                        }
+                        hdr.push(chars[k]);
+                        k += 1;
+                    }
+                    let hdr = hdr.split_whitespace().collect::<Vec<_>>();
+                    pend.push(PendingItem {
+                        kind: ItemKind::Impl,
+                        name: hdr.join(" "),
+                        start: line,
+                        cfg_test: pending_cfg_test,
+                    });
+                    pending_cfg_test = false;
+                    i = k;
+                }
+                _ => {
+                    i = j;
+                }
+            }
+            continue;
+        }
+        if c == '#' {
+            let frag: String = chars[i..(i + 16).min(n)]
+                .iter()
+                .filter(|c| **c != ' ')
+                .collect();
+            if frag.starts_with("#[cfg(test)]") {
+                pending_cfg_test = true;
+            }
+            i += 1;
+            continue;
+        }
+        i += 1;
+    }
+    sc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_blanked() {
+        let sc = scan(
+            "fn f() {\n    let x = \"a.unwrap()\"; // .unwrap()\n}\n",
+        );
+        assert!(!sc.lines[1].contains(".unwrap()"));
+        assert_eq!(sc.strings.len(), 1);
+        assert_eq!(sc.strings[0].value, "a.unwrap()");
+    }
+
+    #[test]
+    fn fn_spans_tracked() {
+        let sc = scan("fn outer() {\n    if x {\n    }\n}\nfn two() {}\n");
+        let names: Vec<&str> =
+            sc.fns.iter().map(|f| f.name.as_str()).collect();
+        assert!(names.contains(&"outer"));
+        assert!(names.contains(&"two"));
+        let outer = sc.fns.iter().find(|f| f.name == "outer").unwrap();
+        assert_eq!((outer.start, outer.end), (1, 4));
+    }
+
+    #[test]
+    fn cfg_test_mod_excluded() {
+        let src = "fn prod() {}\n#[cfg(test)]\nmod tests {\n    fn t() \
+                   {}\n}\n";
+        let sc = scan(src);
+        assert!(!sc.in_test(1));
+        assert!(sc.in_test(4));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let sc = scan(
+            "fn f<'a>(x: &'a str) -> char {\n    let c = '{';\n    \
+             let b = b'\\n';\n    c\n}\n",
+        );
+        // the '{' literal must not unbalance brace tracking
+        assert_eq!(sc.fns.len(), 1);
+        assert_eq!(sc.fns[0].end, 5);
+    }
+
+    #[test]
+    fn raw_strings() {
+        let sc = scan("fn f() {\n    let j = r#\"{\"a\":1}\"#;\n}\n");
+        assert_eq!(sc.fns.len(), 1);
+        assert_eq!(sc.strings[0].value, "{\"a\":1}");
+    }
+}

@@ -1,0 +1,121 @@
+//! `submarine-lint` — run the in-tree static analysis over `src/`.
+//!
+//! Exit status 0 when the tree is clean, 1 on any blocking finding,
+//! 2 on usage/setup errors. CI runs this as a blocking step and
+//! uploads the `--report` JSON as an artifact.
+//!
+//! ```text
+//! submarine-lint [--root <crate-dir>] [--report <file>] [--write-baseline]
+//! ```
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+use submarine::analysis;
+
+struct Opts {
+    root: PathBuf,
+    report: Option<PathBuf>,
+    write_baseline: bool,
+}
+
+fn parse_args() -> Result<Opts, String> {
+    let mut opts = Opts {
+        root: PathBuf::from(env!("CARGO_MANIFEST_DIR")),
+        report: None,
+        write_baseline: false,
+    };
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => {
+                opts.root = PathBuf::from(
+                    args.next().ok_or("--root needs a path")?,
+                );
+            }
+            "--report" => {
+                opts.report = Some(PathBuf::from(
+                    args.next().ok_or("--report needs a path")?,
+                ));
+            }
+            "--write-baseline" => opts.write_baseline = true,
+            "--help" | "-h" => {
+                return Err(String::new()); // print usage, exit 2
+            }
+            other => {
+                return Err(format!("unknown argument `{other}`"));
+            }
+        }
+    }
+    Ok(opts)
+}
+
+fn main() -> ExitCode {
+    let opts = match parse_args() {
+        Ok(o) => o,
+        Err(msg) => {
+            if !msg.is_empty() {
+                eprintln!("submarine-lint: {msg}");
+            }
+            eprintln!(
+                "usage: submarine-lint [--root <crate-dir>] \
+                 [--report <file>] [--write-baseline]"
+            );
+            return ExitCode::from(2);
+        }
+    };
+
+    let report = match analysis::run_all(&opts.root) {
+        Ok(r) => r,
+        Err(msg) => {
+            eprintln!("submarine-lint: {msg}");
+            return ExitCode::from(2);
+        }
+    };
+
+    if opts.write_baseline {
+        let path = opts
+            .root
+            .join("src")
+            .join("analysis")
+            .join("baseline.json");
+        let text = analysis::baseline::render(&report.unwrap_counts);
+        if let Err(e) = std::fs::write(&path, text) {
+            eprintln!(
+                "submarine-lint: writing {}: {e}",
+                path.display()
+            );
+            return ExitCode::from(2);
+        }
+        println!("baseline rewritten: {}", path.display());
+    }
+
+    if let Some(path) = &opts.report {
+        let json = report.to_json().dump();
+        if let Err(e) = std::fs::write(path, json + "\n") {
+            eprintln!(
+                "submarine-lint: writing {}: {e}",
+                path.display()
+            );
+            return ExitCode::from(2);
+        }
+    }
+
+    for w in &report.warnings {
+        eprintln!("warning: {}", w.render());
+    }
+    for f in &report.findings {
+        eprintln!("error: {}", f.render());
+    }
+    println!(
+        "submarine-lint: {} files scanned, {} blocking finding(s), \
+         {} warning(s)",
+        report.files_scanned,
+        report.findings.len(),
+        report.warnings.len()
+    );
+    if report.ok() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

@@ -408,7 +408,13 @@ impl Response {
             }
             write!(w, "connection: close\r\n\r\n")?;
             if !head_only {
-                if let Some(producer) = stream.0.lock().unwrap().take()
+                // poison recovery: a panicked producer elsewhere must
+                // not kill every later streaming response
+                if let Some(producer) = stream
+                    .0
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .take()
                 {
                     let mut sink = ChunkSink { w: &mut w };
                     producer(&mut sink)?;

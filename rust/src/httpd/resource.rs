@@ -363,7 +363,7 @@ fn get_item(
             v2_ok_raw(&body)
         }
     } else {
-        let rendered = kind.render_doc(s, &key, doc.json().clone());
+        let rendered = kind.render_doc(s, &key, doc.json().clone()); // lint: allow(hot)
         wrap_ok(Envelope::V2, rendered)
     };
     resp.with_header("ETag", &etag)
@@ -574,7 +574,13 @@ fn write_resource(
                 Ok(kind.render_doc(s, &key, snapshot.clone()))
             }
             UpdateRev::Written(rev) => {
-                let doc = written.expect("written doc recorded");
+                let doc = written.ok_or_else(|| {
+                    crate::SubmarineError::Runtime(
+                        "update committed but no written doc was \
+                         recorded"
+                            .to_string(),
+                    )
+                })?;
                 kind.post_update(s, &key, &doc)?;
                 ctx.set_resp_header("ETag", &format!("\"{rev}\""));
                 Ok(kind.render_doc(s, &key, doc))

@@ -19,6 +19,8 @@
 use super::http::{Request, Response};
 use super::router::{envelope_of_path, error_json, Router};
 use super::v2::{build_api, ApiConfig};
+use crate::analysis::lock_order::LockRank;
+use crate::analysis::tracker;
 use crate::environment::EnvironmentManager;
 use crate::experiment::manager::ExperimentManager;
 use crate::experiment::monitor::ExperimentMonitor;
@@ -30,7 +32,7 @@ use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 /// All core services (paper §3.2: "Submarine server consists of several
@@ -263,16 +265,27 @@ impl Server {
         );
         self.listener.set_nonblocking(false)?;
         let queue = Arc::new(ConnQueue::default());
-        let pool: Vec<_> = (0..workers)
-            .map(|i| {
-                let queue = Arc::clone(&queue);
-                let router = Arc::clone(&self.router);
-                std::thread::Builder::new()
-                    .name(format!("submarine-worker-{i}"))
-                    .spawn(move || worker_loop(&router, &queue))
-                    .expect("spawn request worker")
-            })
-            .collect();
+        let mut pool = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let worker_queue = Arc::clone(&queue);
+            let router = Arc::clone(&self.router);
+            let spawned = std::thread::Builder::new()
+                .name(format!("submarine-worker-{i}"))
+                .spawn(move || worker_loop(&router, &worker_queue));
+            match spawned {
+                Ok(h) => pool.push(h),
+                Err(e) => {
+                    // unwind the partial pool before reporting failure
+                    queue.close();
+                    for h in pool {
+                        let _ = h.join();
+                    }
+                    return Err(crate::SubmarineError::Runtime(
+                        format!("spawning request worker {i}: {e}"),
+                    ));
+                }
+            }
+        }
         for conn in self.listener.incoming() {
             if self.stop.load(Ordering::Relaxed) {
                 break;
@@ -369,22 +382,29 @@ struct ConnQueue {
 }
 
 impl ConnQueue {
+    /// Lane guard + its lock-order token. Recovers from poisoning: a
+    /// worker panicking mid-push must not brick the whole pool.
+    fn lanes(&self) -> (MutexGuard<'_, Lanes>, tracker::Held) {
+        let held = tracker::acquired(LockRank::ConnQueue, 0);
+        (self.q.lock().unwrap_or_else(|e| e.into_inner()), held)
+    }
+
     fn push(&self, conn: Conn) {
-        let mut q = self.q.lock().unwrap();
+        let (mut q, _held) = self.lanes();
         q.fresh.push_back(conn);
         drop(q);
         self.cv.notify_one();
     }
 
     fn park(&self, conn: Conn) {
-        let mut q = self.q.lock().unwrap();
+        let (mut q, _held) = self.lanes();
         q.parked.push_back(conn);
         drop(q);
         self.cv.notify_one();
     }
 
     fn pop(&self) -> Option<Conn> {
-        let mut q = self.q.lock().unwrap();
+        let (mut q, _held) = self.lanes();
         loop {
             if self.stopping.load(Ordering::Relaxed) {
                 // shutdown: drop whatever is still queued — the
@@ -399,7 +419,10 @@ impl ConnQueue {
             if let Some(c) = q.parked.pop_front() {
                 return Some(c);
             }
-            q = self.cv.wait(q).unwrap();
+            q = self
+                .cv
+                .wait(q)
+                .unwrap_or_else(|e| e.into_inner());
         }
     }
 

@@ -25,6 +25,7 @@
 //! keep-alive HTTP/1.1 by a trie router and middleware chain — see
 //! [`httpd`] and the route reference in `docs/API.md` at the repo root.
 
+pub mod analysis;
 pub mod error;
 pub mod util;
 

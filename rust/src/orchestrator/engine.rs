@@ -90,7 +90,12 @@ impl ExecutionEngine {
     /// Stop the loop and join the thread (idempotent).
     pub fn shutdown(&self) {
         self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.handle.lock().unwrap().take() {
+        if let Some(h) = self
+            .handle
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .take()
+        {
             let _ = h.join();
         }
     }

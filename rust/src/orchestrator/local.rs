@@ -43,7 +43,10 @@ impl LocalSubmitter {
     /// Block until every submitted experiment thread has finished
     /// (examples call this before reading final metrics).
     pub fn join_all(&self) {
-        let mut g = self.threads.lock().unwrap();
+        let mut g = self
+            .threads
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
         for t in g.drain(..) {
             let _ = t.join();
         }
@@ -67,7 +70,7 @@ impl Submitter for LocalSubmitter {
         let kill = Arc::new(AtomicBool::new(false));
         self.kill_flags
             .lock()
-            .unwrap()
+            .unwrap_or_else(|e| e.into_inner())
             .insert(id.to_string(), Arc::clone(&kill));
 
         let monitor = Arc::clone(&self.monitor);
@@ -169,12 +172,20 @@ impl Submitter for LocalSubmitter {
                 }
             })
             .map_err(|e| crate::SubmarineError::Runtime(e.to_string()))?;
-        self.threads.lock().unwrap().push(handle);
+        self.threads
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(handle);
         Ok(())
     }
 
     fn kill(&self, id: &str) -> crate::Result<()> {
-        if let Some(flag) = self.kill_flags.lock().unwrap().get(id) {
+        if let Some(flag) = self
+            .kill_flags
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(id)
+        {
             flag.store(true, Ordering::Relaxed);
         }
         self.monitor.record(id, Event::Killed);

@@ -17,7 +17,7 @@ use crate::scheduler::{JobRequest, Scheduler};
 use crate::util::clock::SimTime;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 /// Book-keeping for one submitted job.
 struct JobEntry {
@@ -71,6 +71,13 @@ impl SimSubmitter {
         self
     }
 
+    /// The submitter state; recovers from poisoning so one panicked
+    /// pump (e.g. a scheduler invariant trip) cannot wedge every
+    /// status endpoint that reads through this lock afterwards.
+    fn state(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     pub fn monitor(&self) -> &Arc<ExperimentMonitor> {
         &self.monitor
     }
@@ -84,7 +91,7 @@ impl SimSubmitter {
         duration: SimTime,
     ) -> crate::Result<()> {
         let job = spec.to_job(id, duration);
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.state();
         g.jobs.insert(
             id.to_string(),
             JobEntry {
@@ -101,7 +108,7 @@ impl SimSubmitter {
     /// Drive scheduling + simulated time forward by `dt`; emits monitor
     /// events for containers that start/finish. Returns (#placed, #done).
     pub fn pump(&self, dt: SimTime) -> (usize, usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.state();
         let g = &mut *g; // split borrows across the struct's fields
         let placed = g.scheduler.schedule(&mut g.sim);
         for p in &placed {
@@ -148,7 +155,7 @@ impl SimSubmitter {
         let start = self.now();
         loop {
             self.pump(step);
-            let g = self.inner.lock().unwrap();
+            let g = self.state();
             let all_done = g.jobs.values().all(|e| {
                 e.done || e.finished >= e.req.total_containers()
             });
@@ -160,19 +167,19 @@ impl SimSubmitter {
     }
 
     pub fn now(&self) -> SimTime {
-        self.inner.lock().unwrap().sim.now()
+        self.state().sim.now()
     }
 
     pub fn gpu_utilization(&self) -> f64 {
-        self.inner.lock().unwrap().sim.gpu_utilization()
+        self.state().sim.gpu_utilization()
     }
 
     pub fn scheduler_busy_until(&self) -> SimTime {
-        self.inner.lock().unwrap().scheduler.busy_until()
+        self.state().scheduler.busy_until()
     }
 
     pub fn pending_jobs(&self) -> usize {
-        self.inner.lock().unwrap().scheduler.pending_jobs()
+        self.state().scheduler.pending_jobs()
     }
 
     /// Whether a scheduling pass could do anything right now (pending
@@ -180,7 +187,7 @@ impl SimSubmitter {
     /// skips pumping — and so freezes simulated time — while idle, so
     /// `gpu_utilization` is not diluted by idle wall-clock time.
     pub fn has_work(&self) -> bool {
-        let g = self.inner.lock().unwrap();
+        let g = self.state();
         g.scheduler.pending_jobs() > 0 || g.sim.running_containers() > 0
     }
 
@@ -188,7 +195,7 @@ impl SimSubmitter {
     /// nodes with capacity/allocation, time-averaged GPU utilization,
     /// queue shares, pending jobs, and the unknown-queue warning metric.
     pub fn cluster_status(&self) -> Json {
-        let g = self.inner.lock().unwrap();
+        let g = self.state();
         let nodes: Vec<Json> = g
             .sim
             .nodes
@@ -257,7 +264,7 @@ impl Submitter for SimSubmitter {
     /// it was charged.
     fn kill(&self, id: &str) -> crate::Result<()> {
         {
-            let mut g = self.inner.lock().unwrap();
+            let mut g = self.state();
             let g = &mut *g;
             g.scheduler.cancel(id);
             let running: Vec<String> = g

@@ -42,6 +42,8 @@
 //!   is revision-keyed implicitly: every write installs a fresh `Doc`,
 //!   so a cached body can never outlive its revision.
 
+use crate::analysis::lock_order::LockRank;
+use crate::analysis::tracker;
 use crate::storage::index::{FieldIndex, IndexDef};
 use crate::storage::snapshot;
 use crate::util::json::{write_json_string, write_json_u64, Json};
@@ -50,7 +52,10 @@ use std::fs;
 use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, RwLock};
+use std::sync::{
+    Arc, Condvar, Mutex, MutexGuard, OnceLock, RwLock,
+    RwLockReadGuard, RwLockWriteGuard,
+};
 use std::time::{Duration, Instant};
 
 /// A stored document: the parsed JSON plus a lazily-filled,
@@ -190,6 +195,28 @@ pub enum UpdateRev {
     Unchanged,
     /// Written at this revision.
     Written(u64),
+}
+
+/// The feed guard plus its lock-order token, so every holder of the
+/// feed mutex is visible to the debug-build tracker
+/// ([`crate::analysis::tracker`]). Derefs to [`Feed`]; the long-poll
+/// path reaches `guard` directly to park on the feed condvar.
+struct TrackedFeed<'a> {
+    guard: MutexGuard<'a, Feed>,
+    _held: tracker::Held,
+}
+
+impl std::ops::Deref for TrackedFeed<'_> {
+    type Target = Feed;
+    fn deref(&self) -> &Feed {
+        &self.guard
+    }
+}
+
+impl std::ops::DerefMut for TrackedFeed<'_> {
+    fn deref_mut(&mut self) -> &mut Feed {
+        &mut self.guard
+    }
 }
 
 struct Feed {
@@ -931,7 +958,7 @@ impl MetaStore {
         must_create: bool,
     ) -> crate::Result<u64> {
         let (ticket, rev) = {
-            let mut shard = self.shards[shard_of(ns)].write().unwrap();
+            let (mut shard, _held) = self.shard_write(ns);
             let space = self.space_mut(&mut shard, ns);
             if must_create && space.docs.contains_key(key) {
                 return Err(crate::SubmarineError::AlreadyExists(
@@ -972,7 +999,7 @@ impl MetaStore {
         pred: impl FnOnce(&Json) -> crate::Result<()>,
     ) -> crate::Result<bool> {
         let ticket = {
-            let mut shard = self.shards[shard_of(ns)].write().unwrap();
+            let (mut shard, _held) = self.shard_write(ns);
             let Some(space) = shard.spaces.get_mut(ns) else {
                 return Ok(false);
             };
@@ -1028,7 +1055,7 @@ impl MetaStore {
         f: impl FnOnce(&Json, u64) -> crate::Result<Option<Json>>,
     ) -> crate::Result<UpdateRev> {
         let (ticket, rev) = {
-            let mut shard = self.shards[shard_of(ns)].write().unwrap();
+            let (mut shard, _held) = self.shard_write(ns);
             let Some(space) = shard.spaces.get_mut(ns) else {
                 return Ok(UpdateRev::Missing);
             };
@@ -1066,8 +1093,32 @@ impl MetaStore {
     /// The feed mutex can see panics unwind past it (watch closures on
     /// the waiter side); recover the guard from a poisoned lock instead
     /// of bricking every subsequent write.
-    fn feed_lock(&self) -> std::sync::MutexGuard<'_, Feed> {
-        self.feed.lock().unwrap_or_else(|e| e.into_inner())
+    fn feed_lock(&self) -> TrackedFeed<'_> {
+        let _held = tracker::acquired(LockRank::Feed, 0);
+        TrackedFeed {
+            guard: self.feed.lock().unwrap_or_else(|e| e.into_inner()),
+            _held,
+        }
+    }
+
+    /// Shard read lock + its lock-order token (ordinal = shard index).
+    fn shard_read(
+        &self,
+        ns: &str,
+    ) -> (RwLockReadGuard<'_, Shard>, tracker::Held) {
+        let i = shard_of(ns);
+        let held = tracker::acquired(LockRank::Shard, i as u32);
+        (self.shards[i].read().unwrap(), held)
+    }
+
+    /// Shard write lock + its lock-order token (ordinal = shard index).
+    fn shard_write(
+        &self,
+        ns: &str,
+    ) -> (RwLockWriteGuard<'_, Shard>, tracker::Held) {
+        let i = shard_of(ns);
+        let held = tracker::acquired(LockRank::Shard, i as u32);
+        (self.shards[i].write().unwrap(), held)
     }
 
     /// Allocate the next revision lock-free. The returned guard *must*
@@ -1144,9 +1195,9 @@ impl MetaStore {
             }
             let (g, _) = self
                 .feed_cv
-                .wait_timeout(feed, deadline - now)
+                .wait_timeout(feed.guard, deadline - now)
                 .unwrap_or_else(|e| e.into_inner());
-            feed = g;
+            feed.guard = g;
         }
     }
 
@@ -1163,12 +1214,14 @@ impl MetaStore {
             return Ok(None);
         };
         if self.opts.group_commit {
+            let _held = tracker::acquired(LockRank::WalPending, 0);
             let mut p = d.pending.lock().unwrap();
             p.buf.extend_from_slice(&line);
             p.records += 1;
             p.seq += 1;
             Ok(Some(p.seq))
         } else {
+            let _held = tracker::acquired(LockRank::WalWriter, 0);
             let mut w = d.writer.lock().unwrap();
             w.file.write_all(&line)?;
             if self.opts.sync {
@@ -1196,6 +1249,8 @@ impl MetaStore {
             && pressure >= d.compact_retry_at.load(Ordering::Relaxed)
         {
             if let Ok(guard) = d.compacting.try_lock() {
+                let _held =
+                    tracker::try_acquired(LockRank::CompactGate, 0);
                 match self.compact_locked(d, guard) {
                     Ok(_) => {
                         d.compact_retry_at.store(0, Ordering::Relaxed)
@@ -1223,6 +1278,7 @@ impl MetaStore {
     fn wait_durable(&self, d: &Durability, ticket: u64) -> crate::Result<()> {
         loop {
             {
+                let _held = tracker::acquired(LockRank::WalFlush, 0);
                 let fs_ = d.flush.lock().unwrap();
                 if let Some(e) = &fs_.error {
                     return Err(storage_err(e.clone()));
@@ -1232,12 +1288,15 @@ impl MetaStore {
                 }
             }
             if let Ok(mut w) = d.writer.try_lock() {
+                let _held =
+                    tracker::try_acquired(LockRank::WalWriter, 0);
                 // leader: flush everything pending (including ours)
                 self.flush_batch(d, &mut w)?;
             } else {
                 // follower: wait for the current leader's notify; the
                 // timeout guards against a leader that errored between
                 // our check and its notify
+                let _held = tracker::acquired(LockRank::WalFlush, 0);
                 let g = d.flush.lock().unwrap();
                 if g.seq >= ticket || g.error.is_some() {
                     continue;
@@ -1259,6 +1318,7 @@ impl MetaStore {
         w: &mut Writer,
     ) -> crate::Result<()> {
         let (buf, seq, recs) = {
+            let _held = tracker::acquired(LockRank::WalPending, 0);
             let mut p = d.pending.lock().unwrap();
             let buf = std::mem::take(&mut p.buf);
             let recs = std::mem::take(&mut p.records);
@@ -1274,6 +1334,7 @@ impl MetaStore {
             });
             if let Err(e) = res {
                 let msg = format!("wal append failed: {e}");
+                let _held = tracker::acquired(LockRank::WalFlush, 0);
                 let mut fs_ = d.flush.lock().unwrap();
                 fs_.error = Some(msg.clone());
                 drop(fs_);
@@ -1285,6 +1346,7 @@ impl MetaStore {
             d.wal_pressure.fetch_add(recs, Ordering::Relaxed);
         }
         {
+            let _held = tracker::acquired(LockRank::WalFlush, 0);
             let mut fs_ = d.flush.lock().unwrap();
             if fs_.seq < seq {
                 fs_.seq = seq;
@@ -1300,7 +1362,7 @@ impl MetaStore {
     /// bump on the stored document (`Doc` derefs to [`Json`], so read
     /// call sites use it like the document itself).
     pub fn get(&self, ns: &str, key: &str) -> Option<Arc<Doc>> {
-        let shard = self.shards[shard_of(ns)].read().unwrap();
+        let (shard, _held) = self.shard_read(ns);
         shard
             .spaces
             .get(ns)
@@ -1311,7 +1373,7 @@ impl MetaStore {
     /// All `(key, doc)` pairs in a namespace, key-ordered. Documents
     /// are shared, not cloned.
     pub fn list(&self, ns: &str) -> Vec<(String, Arc<Doc>)> {
-        let shard = self.shards[shard_of(ns)].read().unwrap();
+        let (shard, _held) = self.shard_read(ns);
         shard
             .spaces
             .get(ns)
@@ -1319,14 +1381,15 @@ impl MetaStore {
                 space
                     .docs
                     .iter()
-                    .map(|(k, v)| (k.clone(), Arc::clone(v)))
+                    // keys must leave the lock as owned strings
+                    .map(|(k, v)| (k.clone(), Arc::clone(v))) // lint: allow(hot)
                     .collect()
             })
             .unwrap_or_default()
     }
 
     pub fn count(&self, ns: &str) -> usize {
-        let shard = self.shards[shard_of(ns)].read().unwrap();
+        let (shard, _held) = self.shard_read(ns);
         shard.spaces.get(ns).map(|s| s.docs.len()).unwrap_or(0)
     }
 
@@ -1338,9 +1401,9 @@ impl MetaStore {
         offset: usize,
         limit: Option<usize>,
     ) -> (Vec<(String, Arc<Doc>)>, usize) {
-        let shard = self.shards[shard_of(ns)].read().unwrap();
+        let (shard, _held) = self.shard_read(ns);
         match shard.spaces.get(ns) {
-            None => (Vec::new(), 0),
+            None => (Vec::new(), 0), // lint: allow(hot)
             Some(space) => {
                 let total = space.docs.len();
                 let page = space
@@ -1348,7 +1411,7 @@ impl MetaStore {
                     .iter()
                     .skip(offset)
                     .take(limit.unwrap_or(usize::MAX))
-                    .map(|(k, v)| (k.clone(), Arc::clone(v)))
+                    .map(|(k, v)| (k.clone(), Arc::clone(v))) // lint: allow(hot)
                     .collect();
                 (page, total)
             }
@@ -1362,9 +1425,9 @@ impl MetaStore {
         offset: usize,
         limit: Option<usize>,
     ) -> (Vec<String>, usize) {
-        let shard = self.shards[shard_of(ns)].read().unwrap();
+        let (shard, _held) = self.shard_read(ns);
         match shard.spaces.get(ns) {
-            None => (Vec::new(), 0),
+            None => (Vec::new(), 0), // lint: allow(hot)
             Some(space) => {
                 let total = space.docs.len();
                 let page = space
@@ -1387,6 +1450,7 @@ impl MetaStore {
     pub fn define_index(&self, ns: &str, field: &str, case_insensitive: bool) {
         let def = IndexDef::new(field, case_insensitive);
         {
+            let _held = tracker::acquired(LockRank::Index, 0);
             let mut defs = self.defs.write().unwrap();
             let list = defs.entry(ns.to_string()).or_default();
             if list.contains(&def) {
@@ -1395,7 +1459,7 @@ impl MetaStore {
             list.push(def.clone());
         }
         // backfill the live namespace, if it exists yet
-        let mut shard = self.shards[shard_of(ns)].write().unwrap();
+        let (mut shard, _held) = self.shard_write(ns);
         if let Some(space) = shard.spaces.get_mut(ns) {
             if space.index(field).is_none() {
                 let mut idx = FieldIndex::new(def);
@@ -1421,7 +1485,7 @@ impl MetaStore {
         if !self.index_defined(ns, field) {
             return Err(Self::no_index(ns, field));
         }
-        let shard = self.shards[shard_of(ns)].read().unwrap();
+        let (shard, _held) = self.shard_read(ns);
         Ok(shard
             .spaces
             .get(ns)
@@ -1445,12 +1509,12 @@ impl MetaStore {
         if !self.index_defined(ns, field) {
             return Err(Self::no_index(ns, field));
         }
-        let shard = self.shards[shard_of(ns)].read().unwrap();
+        let (shard, _held) = self.shard_read(ns);
         let Some(space) = shard.spaces.get(ns) else {
-            return Ok((Vec::new(), 0));
+            return Ok((Vec::new(), 0)); // lint: allow(hot)
         };
         let Some(idx) = space.index(field) else {
-            return Ok((Vec::new(), 0));
+            return Ok((Vec::new(), 0)); // lint: allow(hot)
         };
         let total = idx.cardinality(value);
         let page = idx
@@ -1459,17 +1523,16 @@ impl MetaStore {
             .skip(offset)
             .take(limit.unwrap_or(usize::MAX))
             .filter_map(|k| {
-                space.docs.get(&k).map(|d| (k.clone(), Arc::clone(d)))
+                space.docs.get(&k).map(|d| (k.clone(), Arc::clone(d))) // lint: allow(hot)
             })
             .collect();
         Ok((page, total))
     }
 
     fn index_defined(&self, ns: &str, field: &str) -> bool {
-        self.defs
-            .read()
-            .unwrap()
-            .get(ns)
+        let _held = tracker::acquired(LockRank::Index, 0);
+        let defs = self.defs.read().unwrap();
+        defs.get(ns)
             .map(|list| list.iter().any(|d| d.field == field))
             .unwrap_or(false)
     }
@@ -1486,6 +1549,7 @@ impl MetaStore {
                 removed_files: 0,
             });
         };
+        let _held = tracker::acquired(LockRank::CompactGate, 0);
         let guard = d.compacting.lock().unwrap();
         self.compact_locked(d, guard)
     }
@@ -1495,7 +1559,10 @@ impl MetaStore {
         d: &Durability,
         _compacting: MutexGuard<'_, ()>,
     ) -> crate::Result<CompactReport> {
-        let new_gen = d.writer.lock().unwrap().gen + 1;
+        let new_gen = {
+            let _held = tracker::acquired(LockRank::WalWriter, 0);
+            d.writer.lock().unwrap().gen + 1
+        };
 
         // 1. Take every shard's *read* lock and hold them through the
         //    rotation. Writers (which need write locks to apply + enqueue)
@@ -1505,8 +1572,16 @@ impl MetaStore {
         //    can slip into the old WAL afterwards. Without this, a write
         //    flushed to the old WAL after the copy would be lost when
         //    step 4 deletes it.
-        let guards: Vec<_> =
-            self.shards.iter().map(|sh| sh.read().unwrap()).collect();
+        let mut held = Vec::with_capacity(self.shards.len());
+        let guards: Vec<_> = self
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, sh)| {
+                held.push(tracker::acquired(LockRank::Shard, i as u32));
+                sh.read().unwrap()
+            })
+            .collect();
         let mut dump: Vec<(String, Vec<(String, Arc<Doc>)>)> = Vec::new();
         let mut docs = 0usize;
         for g in &guards {
@@ -1538,12 +1613,15 @@ impl MetaStore {
         //    Failure here is sticky — waiters whose records we drained
         //    must not report durability.
         {
+            let _hw = tracker::acquired(LockRank::WalWriter, 0);
             let mut w = d.writer.lock().unwrap();
+            let _hp = tracker::acquired(LockRank::WalPending, 0);
             let mut p = d.pending.lock().unwrap();
             let buf = std::mem::take(&mut p.buf);
             let recs = std::mem::take(&mut p.records);
             let seq = p.seq;
             drop(p);
+            drop(_hp);
             // The fresh WAL opens with a revision high-water marker:
             // the deleted generations may have held the only records
             // carrying the top revisions (tombstones), and losing the
@@ -1570,6 +1648,8 @@ impl MetaStore {
                     w.records_since_snapshot = recs;
                     w.wal_bytes = bytes;
                     d.wal_pressure.store(recs, Ordering::Relaxed);
+                    let _hf =
+                        tracker::acquired(LockRank::WalFlush, 0);
                     let mut fs_ = d.flush.lock().unwrap();
                     if fs_.seq < seq {
                         fs_.seq = seq;
@@ -1579,6 +1659,8 @@ impl MetaStore {
                 }
                 Err(e) => {
                     let msg = format!("wal rotation failed: {e}");
+                    let _hf =
+                        tracker::acquired(LockRank::WalFlush, 0);
                     let mut fs_ = d.flush.lock().unwrap();
                     fs_.error = Some(msg.clone());
                     drop(fs_);
@@ -1589,6 +1671,7 @@ impl MetaStore {
         }
 
         drop(guards); // release writers before file cleanup
+        drop(held);
 
         // 4. Everything older than the new snapshot is now redundant.
         let removed = snapshot::remove_stale(&d.dir, new_gen, true);
@@ -1611,7 +1694,8 @@ impl MetaStore {
         let mut namespaces = 0;
         let mut docs = 0;
         let mut indexes = 0;
-        for sh in &self.shards {
+        for (i, sh) in self.shards.iter().enumerate() {
+            let _held = tracker::acquired(LockRank::Shard, i as u32);
             let g = sh.read().unwrap();
             for space in g.spaces.values() {
                 namespaces += 1;
@@ -1623,6 +1707,8 @@ impl MetaStore {
             match &self.dur {
                 None => (0, 0, 0, 0),
                 Some(d) => {
+                    let _held =
+                        tracker::acquired(LockRank::WalWriter, 0);
                     let w = d.writer.lock().unwrap();
                     (
                         w.gen,
@@ -1649,7 +1735,8 @@ impl MetaStore {
     /// used by the crash-recovery equivalence tests.
     pub fn dump(&self) -> Json {
         let mut spaces: BTreeMap<String, Json> = BTreeMap::new();
-        for sh in &self.shards {
+        for (i, sh) in self.shards.iter().enumerate() {
+            let _held = tracker::acquired(LockRank::Shard, i as u32);
             let g = sh.read().unwrap();
             for (ns, space) in &g.spaces {
                 if space.docs.is_empty() {
@@ -1679,6 +1766,7 @@ impl MetaStore {
     ) -> &'a mut Namespace {
         if !shard.spaces.contains_key(ns) {
             let mut space = Namespace::default();
+            let _held = tracker::acquired(LockRank::Index, 0);
             let defs = self.defs.read().unwrap();
             if let Some(list) = defs.get(ns) {
                 for def in list {

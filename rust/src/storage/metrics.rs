@@ -7,8 +7,10 @@
 //! the same at-a-glance curve in the terminal and CSV export feeds the
 //! benches' figures.
 
+use crate::analysis::lock_order::LockRank;
+use crate::analysis::tracker;
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 
 /// One logged observation.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -28,10 +30,21 @@ impl MetricStore {
         MetricStore::default()
     }
 
+    /// Series guard + its lock-order token ([`Metrics`] is a leaf
+    /// rank: nothing may be acquired under it).
+    fn series_lock(
+        &self,
+    ) -> (
+        MutexGuard<'_, BTreeMap<(String, String), Vec<MetricPoint>>>,
+        tracker::Held,
+    ) {
+        let held = tracker::acquired(LockRank::Metrics, 0);
+        (self.series.lock().unwrap(), held)
+    }
+
     pub fn log(&self, experiment: &str, metric: &str, step: u64, value: f64) {
-        self.series
-            .lock()
-            .unwrap()
+        let (mut series, _held) = self.series_lock();
+        series
             .entry((experiment.to_string(), metric.to_string()))
             .or_default()
             .push(MetricPoint { step, value });
@@ -51,7 +64,7 @@ impl MetricStore {
         cap: usize,
     ) {
         let cap = cap.max(1);
-        let mut series = self.series.lock().unwrap();
+        let (mut series, _held) = self.series_lock();
         let v = series
             .entry((experiment.to_string(), metric.to_string()))
             .or_default();
@@ -62,18 +75,16 @@ impl MetricStore {
     }
 
     pub fn series(&self, experiment: &str, metric: &str) -> Vec<MetricPoint> {
-        self.series
-            .lock()
-            .unwrap()
+        let (series, _held) = self.series_lock();
+        series
             .get(&(experiment.to_string(), metric.to_string()))
             .cloned()
             .unwrap_or_default()
     }
 
     pub fn metrics_of(&self, experiment: &str) -> Vec<String> {
-        self.series
-            .lock()
-            .unwrap()
+        let (series, _held) = self.series_lock();
+        series
             .keys()
             .filter(|(e, _)| e == experiment)
             .map(|(_, m)| m.clone())

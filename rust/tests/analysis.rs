@@ -1,0 +1,284 @@
+//! Integration tests for `submarine-lint` (ISSUE 6 satellites c + d).
+//!
+//! Fixture snippets with a known lock inversion, a hot-path clone, and
+//! a fresh unwrap must flag; clean fixtures must pass. The runtime
+//! tracker's deterministic-interleaving regression runs in a subprocess
+//! (the inversion panics, and a panic must not take the test harness
+//! down with it).
+
+use std::collections::BTreeMap;
+use submarine::analysis::scanner::scan;
+use submarine::analysis::{baseline, rules, run_all};
+
+// ------------------------------------------------ static-rule fixtures
+
+/// Canonical inversion: feed mutex held while a shard lock is taken.
+#[test]
+fn fixture_lock_inversion_flags() {
+    let bad = "impl Store {\n\
+               \x20   fn publish(&self) {\n\
+               \x20       let feed = self.feed.lock().unwrap();\n\
+               \x20       let shard = self.shards[3].write().unwrap();\n\
+               \x20       shard.touch(feed.rev);\n\
+               \x20   }\n\
+               }\n";
+    let findings = rules::lock_order("storage/kv.rs", &scan(bad));
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, "lock-order");
+    assert_eq!(findings[0].line, 4);
+    assert!(findings[0].message.contains("Shard"));
+    assert!(findings[0].message.contains("Feed"));
+}
+
+/// Same locks, canonical order: clean.
+#[test]
+fn fixture_lock_order_clean_passes() {
+    let good = "impl Store {\n\
+                \x20   fn publish(&self) {\n\
+                \x20       let shard = self.shards[3].write().unwrap();\n\
+                \x20       let feed = self.feed.lock().unwrap();\n\
+                \x20       shard.touch(feed.rev);\n\
+                \x20   }\n\
+                }\n";
+    let findings = rules::lock_order("storage/kv.rs", &scan(good));
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+/// Helper-call acquisitions (`self.feed_lock()`, `self.shard_read()`)
+/// are tracked just like direct `.lock()` calls.
+#[test]
+fn fixture_helper_call_inversion_flags() {
+    let bad = "impl Store {\n\
+               \x20   fn scan(&self, ns: &str) {\n\
+               \x20       let feed = self.feed_lock();\n\
+               \x20       let (shard, _held) = self.shard_read(ns);\n\
+               \x20   }\n\
+               }\n";
+    let findings = rules::lock_order("storage/kv.rs", &scan(bad));
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert!(findings[0].message.contains("Shard"));
+}
+
+/// WAL/socket writes under the feed mutex are prohibited.
+#[test]
+fn fixture_io_under_feed_flags() {
+    let bad = "impl Store {\n\
+               \x20   fn rotate(&self) {\n\
+               \x20       let feed = self.feed.lock().unwrap();\n\
+               \x20       self.file.write_all(feed.bytes()).unwrap();\n\
+               \x20   }\n\
+               }\n";
+    let findings = rules::lock_order("storage/kv.rs", &scan(bad));
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert!(findings[0].message.contains("file/socket write"));
+}
+
+/// A registered hot function introducing `.clone()` flags; the same
+/// token under `lint: allow(hot)` or in an unregistered function does
+/// not.
+#[test]
+fn fixture_hot_path_clone_flags() {
+    let bad = "impl Kv {\n\
+               \x20   pub fn get(&self) -> Doc {\n\
+               \x20       self.doc.clone()\n\
+               \x20   }\n\
+               \x20   pub fn cold(&self) -> Doc {\n\
+               \x20       self.doc.clone()\n\
+               \x20   }\n\
+               }\n";
+    let findings = rules::hot_path("storage/kv.rs", &scan(bad));
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, "hot-path");
+    assert_eq!(findings[0].line, 3);
+
+    let allowed = "impl Kv {\n\
+                   \x20   pub fn get(&self) -> Doc {\n\
+                   \x20       self.doc.clone() // lint: allow(hot)\n\
+                   \x20   }\n\
+                   }\n";
+    assert!(rules::hot_path("storage/kv.rs", &scan(allowed)).is_empty());
+}
+
+/// Zero-copy hot function: clean.
+#[test]
+fn fixture_hot_path_clean_passes() {
+    let good = "impl Kv {\n\
+                \x20   pub fn get(&self) -> Arc<Doc> {\n\
+                \x20       Arc::clone(&self.doc)\n\
+                \x20   }\n\
+                }\n";
+    assert!(rules::hot_path("storage/kv.rs", &scan(good)).is_empty());
+}
+
+/// A fresh `.unwrap()` in a request path is counted, and the ratchet
+/// rejects any count above the grandfathered baseline.
+#[test]
+fn fixture_fresh_unwrap_fails_ratchet() {
+    let src = "fn handle(&self) {\n\
+               \x20   let doc = body.parse().unwrap();\n\
+               }\n";
+    let sites = rules::unwrap_sites("httpd/handler.rs", &scan(src));
+    assert_eq!(sites, vec![2]);
+
+    let mut current = BTreeMap::new();
+    current.insert("httpd/handler.rs".to_string(), sites.len() as u64);
+    let rep = baseline::ratchet(&current, &BTreeMap::new());
+    assert_eq!(rep.errors.len(), 1, "fresh unwrap must block");
+    assert_eq!(rep.errors[0].rule, "unwrap-ratchet");
+}
+
+/// Test code and reviewed `lint: allow(unwrap)` sites are exempt.
+#[test]
+fn fixture_unwrap_exemptions_pass() {
+    let src = "fn handle(&self) {\n\
+               \x20   let doc = body.parse().unwrap(); \
+               // lint: allow(unwrap)\n\
+               }\n\
+               #[cfg(test)]\n\
+               mod tests {\n\
+               \x20   fn t() {\n\
+               \x20       x.unwrap();\n\
+               \x20   }\n\
+               }\n";
+    assert!(rules::unwrap_sites("httpd/handler.rs", &scan(src)).is_empty());
+}
+
+/// The ratchet only turns one way: equal counts pass, decreases warn
+/// (stale baseline), increases fail.
+#[test]
+fn ratchet_is_one_way() {
+    let mut base = BTreeMap::new();
+    base.insert("httpd/server.rs".to_string(), 2u64);
+
+    let rep = baseline::ratchet(&base, &base);
+    assert!(rep.errors.is_empty() && rep.warnings.is_empty());
+
+    let mut fewer = base.clone();
+    fewer.insert("httpd/server.rs".to_string(), 1);
+    let rep = baseline::ratchet(&fewer, &base);
+    assert!(rep.errors.is_empty());
+    assert_eq!(rep.warnings.len(), 1);
+
+    let mut more = base.clone();
+    more.insert("httpd/server.rs".to_string(), 3);
+    assert_eq!(baseline::ratchet(&more, &base).errors.len(), 1);
+}
+
+/// The same invariant CI enforces: the lint is clean over its own tree.
+#[test]
+fn lint_passes_over_own_tree() {
+    let crate_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = run_all(crate_dir).expect("lint run");
+    assert!(
+        report.ok(),
+        "blocking findings:\n{}",
+        report
+            .findings
+            .iter()
+            .map(|f| f.render())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+// -------------------------------- runtime tracker (subprocess, debug)
+
+/// Child half of the deterministic-interleaving regression. A no-op
+/// pass unless the parent sets `SUBMARINE_TRACKER_CHILD=1`; then it
+/// stages the classic two-thread deadlock — thread A takes a shard
+/// lock then the feed mutex (canonical), thread B takes the feed mutex
+/// then a shard lock (inverted) — with a barrier guaranteeing both
+/// first acquisitions happen before either second one. Without the
+/// tracker this interleaving deadlocks; with it, thread B panics
+/// before blocking, and the child exits 42 to prove it.
+#[test]
+fn tracker_child_inverted_interleaving() {
+    if std::env::var("SUBMARINE_TRACKER_CHILD").is_err() {
+        return;
+    }
+    use std::sync::{Arc, Barrier, Mutex, RwLock};
+    use submarine::analysis::lock_order::LockRank;
+    use submarine::analysis::tracker;
+
+    let shard = Arc::new(RwLock::new(0u64));
+    let feed = Arc::new(Mutex::new(0u64));
+    let gate = Arc::new(Barrier::new(2));
+
+    let a = {
+        let (shard, feed, gate) =
+            (Arc::clone(&shard), Arc::clone(&feed), Arc::clone(&gate));
+        std::thread::spawn(move || {
+            let _hs = tracker::acquired(LockRank::Shard, 0);
+            let _s = shard.read().unwrap();
+            gate.wait();
+            // Blocks until thread B's panic releases the feed mutex —
+            // the deadlock half that the tracker must break.
+            let _hf = tracker::acquired(LockRank::Feed, 0);
+            let _f = feed.lock().unwrap_or_else(|e| e.into_inner());
+        })
+    };
+    let b = {
+        let (shard, feed, gate) =
+            (Arc::clone(&shard), Arc::clone(&feed), Arc::clone(&gate));
+        std::thread::spawn(move || -> Option<String> {
+            let _hf = tracker::acquired(LockRank::Feed, 0);
+            let _f = feed.lock().unwrap();
+            gate.wait();
+            let caught = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| {
+                    let _hs = tracker::acquired(LockRank::Shard, 0);
+                    let _s = shard.read().unwrap();
+                }),
+            );
+            match caught {
+                Ok(()) => None,
+                Err(p) => p
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| {
+                        p.downcast_ref::<&str>()
+                            .map(|s| s.to_string())
+                    }),
+            }
+        })
+    };
+    let msg = b.join().expect("thread B must not die outside the trap");
+    a.join().expect("thread A must complete once B releases feed");
+    match msg {
+        Some(m) if m.contains("lock-order violation") => {
+            std::process::exit(42)
+        }
+        other => {
+            eprintln!("expected tracker panic, got {other:?}");
+            std::process::exit(1)
+        }
+    }
+}
+
+/// Parent half: re-run this binary filtered to the child test with the
+/// env guard set, and require the tracker-panic exit code. Debug
+/// builds only — in release the tracker compiles to a no-op and the
+/// staged interleaving would genuinely deadlock.
+#[cfg(debug_assertions)]
+#[test]
+fn tracker_panics_on_inverted_interleaving() {
+    let exe = std::env::current_exe().expect("current_exe");
+    let out = std::process::Command::new(exe)
+        .args([
+            "tracker_child_inverted_interleaving",
+            "--exact",
+            "--test-threads=1",
+            "--nocapture",
+        ])
+        .env("SUBMARINE_TRACKER_CHILD", "1")
+        .output()
+        .expect("spawn child test process");
+    assert_eq!(
+        out.status.code(),
+        Some(42),
+        "child must exit via the tracker panic path\nstdout:\n{}\n\
+         stderr:\n{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr),
+    );
+}
