@@ -1,0 +1,242 @@
+//! E-FANOUT — C10k watch fan-out on the epoll reactor (ISSUE 7
+//! acceptance): with 10k `?watch=1&stream=1` connections parked on the
+//! reactor, plain GET latency must stay flat, and pushing one event to
+//! every watcher must beat the poll-based alternative (every client
+//! re-GETs the list to discover the change).
+//!
+//! Records to `BENCH_6.json`:
+//!   - `http.plain_get_p50_vs_watchers` / `http.plain_get_p99_vs_watchers`
+//!     (baseline = GET latency with zero watchers, optimized = same GET
+//!     with the full watcher fleet parked),
+//!   - `http.watch_fanout_vs_poll` (baseline = one poll round across
+//!     the fleet, optimized = one event fanned to every parked stream).
+//!
+//! Run: `cargo bench --bench watch_fanout` (BENCH_SMOKE=1 shrinks the
+//! fleet 10x).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use submarine::experiment::spec::ExperimentSpec;
+use submarine::httpd::reactor::raise_nofile_limit;
+use submarine::httpd::server::{Server, ServerOptions, Services};
+use submarine::httpd::ApiConfig;
+use submarine::orchestrator::Submitter;
+use submarine::sdk::ExperimentClient;
+use submarine::storage::MetaStore;
+use submarine::util::bench::{fmt_secs, record_result_to, scaled, Table};
+use submarine::util::json::Json;
+
+struct NullSubmitter;
+impl Submitter for NullSubmitter {
+    fn name(&self) -> &'static str {
+        "null"
+    }
+    fn submit(&self, _: &str, _: &ExperimentSpec) -> submarine::Result<()> {
+        Ok(())
+    }
+    fn kill(&self, _: &str) -> submarine::Result<()> {
+        Ok(())
+    }
+}
+
+/// Time `n` keep-alive GETs and return sorted per-request seconds.
+fn sample_gets(client: &ExperimentClient, n: usize) -> Vec<f64> {
+    let mut samples = Vec::with_capacity(n);
+    for _ in 0..n {
+        let started = Instant::now();
+        let (status, _) =
+            client.request("GET", "/api/v2/cluster", None).unwrap();
+        assert_eq!(status, 200);
+        samples.push(started.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples
+}
+
+fn pct(sorted: &[f64], p: f64) -> f64 {
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx]
+}
+
+fn main() {
+    println!("E-FANOUT: watch fan-out vs poll on the epoll reactor");
+
+    let want = scaled(10_000);
+    // one client fd + one server fd per watcher, plus slack
+    let effective = raise_nofile_limit((want as u64) * 2 + 1024);
+    let budget = (effective.saturating_sub(1024) / 2) as usize;
+    let fleet = want.min(budget).max(1);
+    if fleet < want {
+        println!(
+            "note: RLIMIT_NOFILE caps the fleet at {fleet} \
+             (wanted {want})"
+        );
+    }
+
+    let services = Arc::new(Services::new(
+        Arc::new(MetaStore::in_memory()),
+        Arc::new(NullSubmitter),
+    ));
+    let server = Arc::new(
+        Server::bind_with_options(
+            services,
+            0,
+            &ApiConfig::default(),
+            ServerOptions {
+                max_connections: fleet + 64,
+                ..Default::default()
+            },
+        )
+        .unwrap(),
+    );
+    let port = server.port();
+    let stop = server.stopper();
+    let handle = server.serve_background();
+
+    let client = ExperimentClient::v2("127.0.0.1", port);
+    let samples = scaled(500);
+
+    // ---- plain GET latency, empty reactor --------------------------
+    let base = sample_gets(&client, samples);
+    let (base_p50, base_p99) = (pct(&base, 0.50), pct(&base, 0.99));
+
+    // ---- park the watcher fleet ------------------------------------
+    // `since` defaults to the current revision, so every stream parks
+    // with no backlog; reading the response head confirms the reactor
+    // has registered the tail before we measure anything.
+    let parked_at = Instant::now();
+    let mut watchers = Vec::with_capacity(fleet);
+    for _ in 0..fleet {
+        let stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(60)))
+            .unwrap();
+        write!(
+            &stream,
+            "GET /api/v2/template?watch=1&stream=1&\
+             timeout_ms=120000 HTTP/1.1\r\nhost: x\r\n\r\n"
+        )
+        .unwrap();
+        watchers.push(BufReader::with_capacity(512, stream));
+    }
+    for w in &mut watchers {
+        let mut line = String::new();
+        loop {
+            line.clear();
+            w.read_line(&mut line).unwrap();
+            if line == "\r\n" {
+                break; // end of response head; stream is parked
+            }
+        }
+    }
+    let park_secs = parked_at.elapsed().as_secs_f64();
+
+    // ---- plain GET latency with the fleet parked -------------------
+    let loaded = sample_gets(&client, samples);
+    let (load_p50, load_p99) = (pct(&loaded, 0.50), pct(&loaded, 0.99));
+
+    // ---- poll round vs one-event fan-out ---------------------------
+    // Baseline: every "client" in the fleet re-GETs the template list
+    // to discover a change (one keep-alive connection, sequential —
+    // the server-side cost of a poll storm, without connect overhead).
+    let poll_started = Instant::now();
+    for _ in 0..fleet {
+        let (status, _) =
+            client.request("GET", "/api/v2/template", None).unwrap();
+        assert_eq!(status, 200);
+    }
+    let poll_secs = poll_started.elapsed().as_secs_f64();
+
+    // Optimized: publish once, then confirm the event line on every
+    // parked stream.
+    let tpl = Json::parse(
+        r#"{"name":"fan-evt",
+            "experimentSpec":{"meta":{"name":"m"},
+            "spec":{"Worker":{"replicas":1,"resources":"cpu=1"}}}}"#,
+    )
+    .unwrap();
+    let fan_started = Instant::now();
+    let (status, _) = client
+        .request("POST", "/api/v2/template", Some(&tpl))
+        .unwrap();
+    assert_eq!(status, 200, "publish failed");
+    for (i, w) in watchers.iter_mut().enumerate() {
+        let mut line = String::new();
+        loop {
+            line.clear();
+            let n = w.read_line(&mut line).unwrap();
+            assert!(n > 0, "watcher {i} hit EOF before the event");
+            if line.contains("fan-evt") {
+                break;
+            }
+        }
+    }
+    let fan_secs = fan_started.elapsed().as_secs_f64();
+
+    // ---- report ----------------------------------------------------
+    let mut t = Table::new(
+        &format!("plain GET /api/v2/cluster vs {fleet} parked watchers"),
+        &["fleet", "p50", "p99"],
+    );
+    t.row(&[
+        "0 watchers".into(),
+        fmt_secs(base_p50),
+        fmt_secs(base_p99),
+    ]);
+    t.row(&[
+        format!("{fleet} watchers"),
+        fmt_secs(load_p50),
+        fmt_secs(load_p99),
+    ]);
+    t.print();
+
+    let mut t = Table::new(
+        &format!("one change reaching {fleet} clients"),
+        &["strategy", "total", "per client"],
+    );
+    t.row(&[
+        "poll round (seed model)".into(),
+        fmt_secs(poll_secs),
+        fmt_secs(poll_secs / fleet as f64),
+    ]);
+    t.row(&[
+        "stream fan-out (reactor)".into(),
+        fmt_secs(fan_secs),
+        fmt_secs(fan_secs / fleet as f64),
+    ]);
+    t.print();
+    println!(
+        "parked {fleet} watchers in {} ({:.0}/s); fan-out speedup \
+         over polling: {:.2}x",
+        fmt_secs(park_secs),
+        fleet as f64 / park_secs.max(1e-9),
+        poll_secs / fan_secs.max(1e-9),
+    );
+
+    record_result_to(
+        "BENCH_6.json",
+        "http.plain_get_p50_vs_watchers",
+        base_p50,
+        load_p50,
+    );
+    record_result_to(
+        "BENCH_6.json",
+        "http.plain_get_p99_vs_watchers",
+        base_p99,
+        load_p99,
+    );
+    record_result_to(
+        "BENCH_6.json",
+        "http.watch_fanout_vs_poll",
+        poll_secs,
+        fan_secs,
+    );
+
+    drop(watchers);
+    stop.store(true, Ordering::Relaxed);
+    let _ = TcpStream::connect(("127.0.0.1", port));
+    handle.join().unwrap();
+}

@@ -1,0 +1,254 @@
+//! CI bench-regression gate (ISSUE 7 satellite).
+//!
+//! The smoke benches record `(op, baseline_ns, optimized_ns)` into
+//! `BENCH_*.json` files at the repo root ([`crate::util::bench`]).
+//! This gate globs those files and fails when any op's
+//! `optimized_ns / baseline_ns` ratio exceeds a tolerance — i.e. when
+//! an "optimized" path has regressed to within noise of (or worse
+//! than) its baseline. The tolerance is deliberately loose (CI runners
+//! are noisy; the default allows the optimized path to be up to
+//! `max_ratio`× the baseline) so the gate catches order-of-magnitude
+//! regressions, not jitter.
+//!
+//! Run via `cargo run --bin submarine-benchgate -- --dir .. \
+//! --max-ratio 3.0`; CI runs it as a blocking step right after the
+//! bench smoke loop produces the files it checks.
+
+use crate::util::bench::Table;
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// One `(op, baseline, optimized)` record from a results file.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    pub file: String,
+    pub op: String,
+    pub baseline_ns: f64,
+    pub optimized_ns: f64,
+}
+
+impl BenchRecord {
+    /// `optimized / baseline`: < 1.0 means the optimized path wins;
+    /// values above the gate's tolerance are regressions.
+    pub fn ratio(&self) -> f64 {
+        self.optimized_ns / self.baseline_ns.max(1.0)
+    }
+}
+
+/// Outcome of a gate run over one directory.
+pub struct GateReport {
+    pub records: Vec<BenchRecord>,
+    pub violations: Vec<BenchRecord>,
+    pub max_ratio: f64,
+}
+
+impl GateReport {
+    pub fn ok(&self) -> bool {
+        !self.records.is_empty() && self.violations.is_empty()
+    }
+
+    /// Aligned table for the CI job log, one row per op.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            &format!(
+                "bench gate (fail when optimized/baseline > {:.2})",
+                self.max_ratio
+            ),
+            &["file", "op", "baseline", "optimized", "ratio", "verdict"],
+        );
+        for r in &self.records {
+            let verdict = if r.ratio() > self.max_ratio {
+                "REGRESSED"
+            } else {
+                "ok"
+            };
+            t.row(&[
+                r.file.clone(),
+                r.op.clone(),
+                format!("{:.0}ns", r.baseline_ns),
+                format!("{:.0}ns", r.optimized_ns),
+                format!("{:.3}", r.ratio()),
+                verdict.to_string(),
+            ]);
+        }
+        t.render()
+    }
+}
+
+/// `BENCH_*.json` files under `dir`, sorted by name.
+pub fn results_files(dir: &Path) -> Vec<PathBuf> {
+    let mut files: Vec<PathBuf> = std::fs::read_dir(dir)
+        .ok()
+        .into_iter()
+        .flatten()
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .map(|n| {
+                    n.starts_with("BENCH_") && n.ends_with(".json")
+                })
+                .unwrap_or(false)
+        })
+        .collect();
+    files.sort();
+    files
+}
+
+/// Parse one results file into records. Malformed files yield an error
+/// rather than silently passing the gate.
+pub fn parse_results(path: &Path) -> Result<Vec<BenchRecord>, String> {
+    let name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .unwrap_or("?")
+        .to_string();
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("{name}: {e}"))?;
+    let doc = Json::parse(&text)
+        .map_err(|e| format!("{name}: bad JSON: {e}"))?;
+    let results = doc
+        .get("results")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("{name}: missing `results` array"))?;
+    let mut records = Vec::with_capacity(results.len());
+    for r in results {
+        let op = r
+            .str_field("op")
+            .ok_or_else(|| format!("{name}: record missing `op`"))?;
+        let baseline_ns = r.num_field("baseline_ns").ok_or_else(|| {
+            format!("{name}: `{op}` missing `baseline_ns`")
+        })?;
+        let optimized_ns =
+            r.num_field("optimized_ns").ok_or_else(|| {
+                format!("{name}: `{op}` missing `optimized_ns`")
+            })?;
+        if baseline_ns <= 0.0 || optimized_ns <= 0.0 {
+            return Err(format!(
+                "{name}: `{op}` has non-positive timings"
+            ));
+        }
+        records.push(BenchRecord {
+            file: name.clone(),
+            op: op.to_string(),
+            baseline_ns,
+            optimized_ns,
+        });
+    }
+    Ok(records)
+}
+
+/// Run the gate over every `BENCH_*.json` in `dir`. Zero records is a
+/// failure: the gate exists to check fresh bench output, and an empty
+/// run means the benches never produced any (e.g. the smoke loop was
+/// skipped or the artifact glob broke — exactly the bug this PR fixes).
+pub fn run(dir: &Path, max_ratio: f64) -> Result<GateReport, String> {
+    let files = results_files(dir);
+    let mut records = Vec::new();
+    for f in &files {
+        records.extend(parse_results(f)?);
+    }
+    if records.is_empty() {
+        return Err(format!(
+            "no BENCH_*.json records found under {} — run the smoke \
+             benches first (BENCH_SMOKE=1)",
+            dir.display()
+        ));
+    }
+    let violations: Vec<BenchRecord> = records
+        .iter()
+        .filter(|r| r.ratio() > max_ratio)
+        .cloned()
+        .collect();
+    Ok(GateReport {
+        records,
+        violations,
+        max_ratio,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "submarine-benchgate-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn write_results(dir: &Path, file: &str, rows: &[(&str, f64, f64)]) {
+        let results: Vec<Json> = rows
+            .iter()
+            .map(|(op, b, o)| {
+                Json::obj()
+                    .set("op", Json::Str(op.to_string()))
+                    .set("baseline_ns", Json::Num(*b))
+                    .set("optimized_ns", Json::Num(*o))
+            })
+            .collect();
+        let doc = Json::obj().set("results", Json::Arr(results));
+        std::fs::write(dir.join(file), doc.pretty()).unwrap();
+    }
+
+    #[test]
+    fn passes_when_all_ops_within_tolerance() {
+        let d = tmpdir("pass");
+        write_results(
+            &d,
+            "BENCH_5.json",
+            &[("a", 1000.0, 200.0), ("b", 1000.0, 1500.0)],
+        );
+        write_results(&d, "BENCH_6.json", &[("c", 500.0, 400.0)]);
+        let rep = run(&d, 2.0).unwrap();
+        assert!(rep.ok(), "{}", rep.render());
+        assert_eq!(rep.records.len(), 3);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn fails_on_regressed_ratio() {
+        let d = tmpdir("fail");
+        write_results(
+            &d,
+            "BENCH_6.json",
+            &[("fast", 1000.0, 100.0), ("slow", 100.0, 900.0)],
+        );
+        let rep = run(&d, 2.0).unwrap();
+        assert!(!rep.ok());
+        assert_eq!(rep.violations.len(), 1);
+        assert_eq!(rep.violations[0].op, "slow");
+        assert!(rep.render().contains("REGRESSED"));
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn zero_records_is_an_error() {
+        let d = tmpdir("empty");
+        assert!(run(&d, 2.0).is_err());
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn malformed_file_is_an_error() {
+        let d = tmpdir("malformed");
+        std::fs::write(d.join("BENCH_9.json"), "{not json").unwrap();
+        assert!(run(&d, 2.0).is_err());
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn non_bench_files_are_ignored() {
+        let d = tmpdir("ignore");
+        std::fs::write(d.join("OTHER.json"), "{}").unwrap();
+        write_results(&d, "BENCH_1.json", &[("x", 10.0, 10.0)]);
+        let rep = run(&d, 2.0).unwrap();
+        assert_eq!(rep.records.len(), 1);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}

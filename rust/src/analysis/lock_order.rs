@@ -26,7 +26,8 @@
 //! | Index | `MetaStore::defs` | declaration reads/writes; never held across shard/WAL work |
 //! | Metrics | `MetricStore::series` | leaf lock, logged to after storage work completes |
 //! | WalFlush | `Durability::flush` | durability waiters take it last (leader publishes seq under writer) |
-//! | ConnQueue | `ConnQueue::q` | httpd connection hand-off; independent of storage locks |
+//! | ConnQueue | `JobQueue::q` | httpd reactor → worker job hand-off; independent of storage locks |
+//! | ReactorDone | `DoneQueue::completions` | worker → reactor completion hand-back; never held with the job queue |
 //!
 //! The ISSUE-6 mandated subsequence — shard → feed → index → metrics —
 //! is preserved inside the full order.
@@ -53,8 +54,11 @@ pub enum LockRank {
     Metrics = 60,
     /// `Durability::flush` — durable-sequence watermark.
     WalFlush = 70,
-    /// `httpd::ConnQueue` — connection hand-off lanes.
+    /// `httpd::reactor::JobQueue` — reactor → worker job hand-off.
     ConnQueue = 80,
+    /// `httpd::reactor::DoneQueue` — worker → reactor completion
+    /// hand-back.
+    ReactorDone = 90,
 }
 
 impl LockRank {
@@ -69,6 +73,7 @@ impl LockRank {
             LockRank::Metrics => "Metrics",
             LockRank::WalFlush => "WalFlush",
             LockRank::ConnQueue => "ConnQueue",
+            LockRank::ReactorDone => "ReactorDone",
         }
     }
 
@@ -92,6 +97,7 @@ pub const RECEIVER_RANKS: &[(&str, LockRank)] = &[
     ("series", LockRank::Metrics),
     ("flush", LockRank::WalFlush),
     ("q", LockRank::ConnQueue),
+    ("completions", LockRank::ReactorDone),
 ];
 
 /// Helper functions that acquire a lock on the caller's behalf — the
@@ -102,7 +108,6 @@ pub const CALL_RANKS: &[(&str, LockRank)] = &[
     ("shard_read", LockRank::Shard),
     ("shard_write", LockRank::Shard),
     ("series_lock", LockRank::Metrics),
-    ("lanes", LockRank::ConnQueue),
 ];
 
 /// Ranks that must never be held across a file or socket write
@@ -127,6 +132,7 @@ mod tests {
             LockRank::Metrics,
             LockRank::WalFlush,
             LockRank::ConnQueue,
+            LockRank::ReactorDone,
         ];
         for w in ranks.windows(2) {
             assert!(w[0].rank() < w[1].rank(), "{w:?}");

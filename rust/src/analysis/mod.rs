@@ -21,6 +21,7 @@
 //! `docs/ANALYSIS.md` for the workflow.
 
 pub mod baseline;
+pub mod benchgate;
 pub mod lock_order;
 pub mod rules;
 pub mod scanner;

@@ -78,6 +78,12 @@ pub const HOT_REGISTRY: &[(&str, &str)] = &[
     // resource.rs cached-GET/HEAD + watch serialization
     ("httpd/resource.rs", "get_item"),
     ("httpd/resource.rs", "change_line"),
+    // reactor hot loops: event dispatch, readiness re-arm, parked-tail
+    // stepping, and the connection write-buffer drain
+    ("httpd/reactor.rs", "dispatch_events"),
+    ("httpd/reactor.rs", "rearm"),
+    ("httpd/reactor.rs", "step_tail"),
+    ("httpd/conn.rs", "flush_out"),
     // json.rs dump paths
     ("util/json.rs", "dump_into"),
     ("util/json.rs", "write"),

@@ -1,0 +1,111 @@
+//! `submarine-benchgate` — CI bench-regression gate over `BENCH_*.json`.
+//!
+//! Exit status 0 when every recorded op's `optimized_ns/baseline_ns`
+//! ratio is within tolerance, 1 on any regression (or when no records
+//! exist at all — a silently-empty gate is a broken gate), 2 on
+//! usage/setup errors. CI runs this as a blocking step right after the
+//! bench smoke loop.
+//!
+//! ```text
+//! submarine-benchgate [--dir <results-dir>] [--max-ratio <float>]
+//! ```
+//!
+//! `--max-ratio` defaults to `BENCH_GATE_MAX_RATIO` (env), then 2.0.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+use submarine::analysis::benchgate;
+
+struct Opts {
+    dir: PathBuf,
+    max_ratio: f64,
+}
+
+fn parse_args() -> Result<Opts, String> {
+    let mut opts = Opts {
+        dir: PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(".."),
+        max_ratio: std::env::var("BENCH_GATE_MAX_RATIO")
+            .ok()
+            .and_then(|v| v.parse::<f64>().ok())
+            .unwrap_or(2.0),
+    };
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--dir" => {
+                opts.dir = PathBuf::from(
+                    args.next().ok_or("--dir needs a path")?,
+                );
+            }
+            "--max-ratio" => {
+                opts.max_ratio = args
+                    .next()
+                    .ok_or("--max-ratio needs a number")?
+                    .parse::<f64>()
+                    .map_err(|_| {
+                        "--max-ratio must be a float".to_string()
+                    })?;
+            }
+            "--help" | "-h" => {
+                return Err(String::new()); // print usage, exit 2
+            }
+            other => {
+                return Err(format!("unknown argument `{other}`"));
+            }
+        }
+    }
+    if opts.max_ratio <= 0.0 {
+        return Err("--max-ratio must be positive".to_string());
+    }
+    Ok(opts)
+}
+
+fn main() -> ExitCode {
+    let opts = match parse_args() {
+        Ok(o) => o,
+        Err(msg) => {
+            if !msg.is_empty() {
+                eprintln!("submarine-benchgate: {msg}");
+            }
+            eprintln!(
+                "usage: submarine-benchgate [--dir <results-dir>] \
+                 [--max-ratio <float>]"
+            );
+            return ExitCode::from(2);
+        }
+    };
+
+    let report = match benchgate::run(&opts.dir, opts.max_ratio) {
+        Ok(r) => r,
+        Err(msg) => {
+            eprintln!("submarine-benchgate: {msg}");
+            return ExitCode::from(1);
+        }
+    };
+
+    println!("{}", report.render());
+    println!(
+        "submarine-benchgate: {} record(s), {} regression(s), \
+         tolerance {:.2}",
+        report.records.len(),
+        report.violations.len(),
+        report.max_ratio
+    );
+    if report.ok() {
+        ExitCode::SUCCESS
+    } else {
+        for v in &report.violations {
+            eprintln!(
+                "error: {}/{} regressed: optimized {:.0}ns vs \
+                 baseline {:.0}ns (ratio {:.3} > {:.2})",
+                v.file,
+                v.op,
+                v.optimized_ns,
+                v.baseline_ns,
+                v.ratio(),
+                report.max_ratio
+            );
+        }
+        ExitCode::from(1)
+    }
+}

@@ -822,7 +822,7 @@ fn parse_queue_config(
 fn serve(args: &Args) -> crate::Result<String> {
     use crate::cluster::ClusterSim;
     use crate::experiment::monitor::ExperimentMonitor;
-    use crate::httpd::server::{Server, Services};
+    use crate::httpd::server::{Server, ServerOptions, Services};
     use crate::orchestrator::engine::EngineConfig;
     use crate::orchestrator::local::LocalSubmitter;
     use crate::orchestrator::sim_submitter::SimSubmitter;
@@ -941,7 +941,27 @@ fn serve(args: &Args) -> crate::Result<String> {
         auth_token: args.flag("token").map(str::to_string),
         rate_limit,
     };
-    let server = Arc::new(Server::bind_with_config(services, port, &cfg)?);
+    // reactor knobs: flags override the SUBMARINE_HTTP_* env defaults
+    let mut http_opts = ServerOptions::default();
+    if let Some(v) = args.flag("http-workers") {
+        let n: usize =
+            v.parse().map_err(|_| bad("bad --http-workers"))?;
+        if n == 0 {
+            return Err(bad("--http-workers must be > 0"));
+        }
+        http_opts.workers = Some(n);
+    }
+    if let Some(v) = args.flag("http-max-conns") {
+        let n: usize =
+            v.parse().map_err(|_| bad("bad --http-max-conns"))?;
+        if n == 0 {
+            return Err(bad("--http-max-conns must be > 0"));
+        }
+        http_opts.max_connections = n;
+    }
+    let server = Arc::new(Server::bind_with_options(
+        services, port, &cfg, http_opts,
+    )?);
     println!("submarine server on 127.0.0.1:{}", server.port());
     server.serve()?;
     Ok(String::new())
@@ -952,6 +972,7 @@ fn usage() -> String {
      commands:\n\
        server      [--port 8080] [--data-dir DIR] [--artifacts DIR] [--token T]\n\
                    [--rate-limit REQS_PER_SEC]\n\
+                   [--http-workers N] [--http-max-conns N]\n\
                    [--scheduler yarn|k8s|local] [--nodes N]\n\
                    [--node-resources cpu=16,memory=64G,gpu=4] [--sockets S]\n\
                    [--queues eng=0.5:0.8,sci=0.5:0.6] [--default-queue root.eng]\n\

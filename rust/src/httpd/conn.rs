@@ -1,0 +1,410 @@
+//! Per-connection state machine for the epoll reactor.
+//!
+//! A [`Conn`] owns one nonblocking socket plus its reusable read/write
+//! buffers and tracks where the connection is in the request cycle:
+//!
+//! ```text
+//! ReadHeaders -> ReadBody -> Handle -> WriteResponse -+-> KeepAliveIdle
+//!      ^                                              |      |
+//!      +----------------------------------------------+------+
+//!                                                     +-> Tail (parked
+//!                                                         watch/stream)
+//! ```
+//!
+//! All reads and writes are partial-tolerant: `EAGAIN` leaves the
+//! buffers where they were and the reactor resumes on the next
+//! readiness event. Parsing reuses [`Request::read_next_tracked`] over
+//! the buffered bytes, so the wire dialect (header folding, body caps,
+//! envelope tracking for transport errors) is identical to the
+//! blocking path.
+
+use super::http::Request;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+/// Reject header blocks beyond this size (slow-loris cap).
+pub const MAX_HEADER_BYTES: usize = 256 * 1024;
+/// Body cap, matching [`Request::read_next_tracked`]'s limit.
+pub const MAX_BODY_BYTES: usize = 64 * 1024 * 1024;
+/// Read granularity for the per-connection buffer.
+const READ_CHUNK: usize = 16 * 1024;
+
+/// Where a connection is in its request/response cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConnState {
+    /// Accumulating bytes until the header terminator appears.
+    ReadHeaders,
+    /// Headers parsed structurally; waiting for `content-length`
+    /// bytes of body.
+    ReadBody,
+    /// A full request was handed to the worker pool; awaiting its
+    /// response.
+    Handle,
+    /// Draining the framed response from `wbuf`.
+    WriteResponse,
+    /// Between keep-alive requests.
+    KeepAliveIdle,
+    /// Parked on a resumable watch/stream tail.
+    Tail,
+}
+
+/// Result of one nonblocking read pass.
+#[derive(Debug, PartialEq, Eq)]
+pub enum ReadOutcome {
+    /// New bytes were buffered.
+    Progress,
+    /// Nothing available right now (`EAGAIN`).
+    WouldBlock,
+    /// Orderly peer close.
+    Eof,
+    /// Hard socket error; close the connection.
+    Err,
+}
+
+/// Result of one nonblocking write pass.
+#[derive(Debug, PartialEq, Eq)]
+pub enum WriteOutcome {
+    /// `wbuf` fully drained.
+    Done,
+    /// Partial write; resume on the next writability event.
+    Blocked,
+    /// Hard socket error; close the connection.
+    Err,
+}
+
+/// Result of attempting to parse one request from the read buffer.
+pub enum ParseOutcome {
+    /// Not enough bytes yet. `in_body` distinguishes "still reading
+    /// headers" from "headers done, body incomplete" for state
+    /// accounting.
+    Partial { in_body: bool },
+    /// One complete request; its bytes were consumed from the buffer.
+    Complete(Box<Request>),
+    /// Malformed or oversized request — answer 400 and close.
+    Bad(crate::SubmarineError),
+}
+
+/// One reactor-managed connection.
+pub struct Conn {
+    pub stream: TcpStream,
+    pub state: ConnState,
+    /// Buffered inbound bytes; `rpos..` is the unconsumed region.
+    pub rbuf: Vec<u8>,
+    pub rpos: usize,
+    /// Outbound bytes; `wpos..` is the unwritten region.
+    pub wbuf: Vec<u8>,
+    pub wpos: usize,
+    /// Requests served on this connection (keep-alive budget).
+    pub served: u32,
+    /// Keep the connection open once the current response drains.
+    pub keep: bool,
+    /// Last moment the connection went idle (for the reap sweep).
+    pub idle_since: Instant,
+    /// Set when the first byte of a new request arrives; cleared when
+    /// the request completes. Drives the 408 sweep.
+    pub req_start: Option<Instant>,
+    /// Path of the request currently being read, as soon as the
+    /// request line parses — picks the error envelope for 400/408.
+    pub seen_path: Option<String>,
+    /// Cached epoll interest mask, so re-arms only issue `EPOLL_CTL_MOD`
+    /// when the mask actually changes.
+    pub interest: u32,
+    /// Peer closed its write side: serve whatever is already
+    /// buffered, then close instead of re-entering keep-alive.
+    pub eof: bool,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream, now: Instant) -> Conn {
+        Conn {
+            stream,
+            state: ConnState::ReadHeaders,
+            rbuf: Vec::with_capacity(4 * 1024),
+            rpos: 0,
+            wbuf: Vec::with_capacity(4 * 1024),
+            wpos: 0,
+            served: 0,
+            keep: true,
+            idle_since: now,
+            req_start: None,
+            seen_path: None,
+            interest: 0,
+            eof: false,
+        }
+    }
+
+    /// Pull whatever the socket has into `rbuf` (one bounded pass —
+    /// the reactor loops while this reports progress).
+    pub fn read_some(&mut self) -> ReadOutcome {
+        if self.rpos > 0
+            && (self.rpos == self.rbuf.len() || self.rpos >= READ_CHUNK)
+        {
+            self.rbuf.drain(..self.rpos);
+            self.rpos = 0;
+        }
+        let old = self.rbuf.len();
+        self.rbuf.resize(old + READ_CHUNK, 0);
+        let got = self.stream.read(&mut self.rbuf[old..]);
+        match got {
+            Ok(0) => {
+                self.rbuf.truncate(old);
+                ReadOutcome::Eof
+            }
+            Ok(n) => {
+                self.rbuf.truncate(old + n);
+                ReadOutcome::Progress
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::Interrupted =>
+            {
+                self.rbuf.truncate(old);
+                ReadOutcome::WouldBlock
+            }
+            Err(_) => {
+                self.rbuf.truncate(old);
+                ReadOutcome::Err
+            }
+        }
+    }
+
+    /// Drain as much of `wbuf` as the socket accepts right now.
+    pub fn flush_out(&mut self) -> WriteOutcome {
+        while self.wpos < self.wbuf.len() {
+            let put = self.stream.write(&self.wbuf[self.wpos..]);
+            match put {
+                Ok(0) => return WriteOutcome::Err,
+                Ok(n) => self.wpos += n,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    return WriteOutcome::Blocked;
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => return WriteOutcome::Err,
+            }
+        }
+        self.wbuf.clear();
+        self.wpos = 0;
+        WriteOutcome::Done
+    }
+
+    /// Bytes queued but not yet written.
+    pub fn pending_out(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+
+    /// Unconsumed inbound bytes (pipelined next request, usually).
+    pub fn pending_in(&self) -> bool {
+        self.rpos < self.rbuf.len()
+    }
+
+    /// Attempt to parse one request from the buffered bytes,
+    /// consuming them on success and updating the 408 bookkeeping.
+    pub fn try_parse(&mut self) -> ParseOutcome {
+        if self.pending_in() && self.req_start.is_none() {
+            self.req_start = Some(Instant::now());
+        }
+        let (consumed, outcome) =
+            parse_ready(&self.rbuf[self.rpos..], &mut self.seen_path);
+        match &outcome {
+            ParseOutcome::Complete(_) => {
+                self.rpos += consumed;
+                self.req_start = None;
+            }
+            ParseOutcome::Partial { in_body } => {
+                self.state = if *in_body {
+                    ConnState::ReadBody
+                } else {
+                    ConnState::ReadHeaders
+                };
+            }
+            ParseOutcome::Bad(_) => {}
+        }
+        outcome
+    }
+
+    /// Reset per-request bookkeeping after a response fully drains.
+    pub fn await_next_request(&mut self, now: Instant) {
+        self.state = ConnState::KeepAliveIdle;
+        self.req_start = None;
+        self.seen_path = None;
+        self.idle_since = now;
+        if self.rpos > 0 && !self.pending_in() {
+            self.rbuf.clear();
+            self.rpos = 0;
+        }
+    }
+}
+
+/// Index one past the blank line terminating the header block, if the
+/// buffer holds one.
+fn header_end(buf: &[u8]) -> Option<usize> {
+    let mut line_start = 0;
+    for (i, &b) in buf.iter().enumerate() {
+        if b != b'\n' {
+            continue;
+        }
+        let mut line = &buf[line_start..i];
+        if let [rest @ .., b'\r'] = line {
+            line = rest;
+        }
+        if line.is_empty() && line_start > 0 {
+            return Some(i + 1);
+        }
+        line_start = i + 1;
+    }
+    None
+}
+
+/// Declared `content-length` of a complete header block (last
+/// occurrence wins, matching the map-based parser).
+fn content_length(head: &[u8]) -> usize {
+    let mut len = 0usize;
+    for line in head.split(|&b| b == b'\n') {
+        let line = std::str::from_utf8(line).unwrap_or("");
+        let line = line.trim_end_matches('\r');
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                len = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    len
+}
+
+/// Parse one request out of `buf` if it is complete, returning how
+/// many bytes it occupied. Shared with unit tests; [`Conn::try_parse`]
+/// wraps it with buffer bookkeeping.
+pub fn parse_ready(
+    buf: &[u8],
+    seen_path: &mut Option<String>,
+) -> (usize, ParseOutcome) {
+    let Some(head_end) = header_end(buf) else {
+        if buf.len() > MAX_HEADER_BYTES {
+            return (
+                0,
+                ParseOutcome::Bad(crate::SubmarineError::InvalidSpec(
+                    "http: header block too large".to_string(),
+                )),
+            );
+        }
+        return (0, ParseOutcome::Partial { in_body: false });
+    };
+    let body_len = content_length(&buf[..head_end]);
+    if body_len > MAX_BODY_BYTES {
+        // run the shared parser over just the headers so the
+        // canonical "body too large" error (and envelope tracking)
+        // comes from one place
+        let mut slice = &buf[..head_end];
+        let err = match Request::read_next_tracked(&mut slice, seen_path)
+        {
+            Err(e) => e,
+            Ok(_) => crate::SubmarineError::InvalidSpec(
+                "http: body too large".to_string(),
+            ),
+        };
+        return (0, ParseOutcome::Bad(err));
+    }
+    let total = head_end + body_len;
+    if buf.len() < total {
+        return (0, ParseOutcome::Partial { in_body: true });
+    }
+    let mut slice = &buf[..total];
+    match Request::read_next_tracked(&mut slice, seen_path) {
+        Ok(Some(req)) => (total, ParseOutcome::Complete(Box::new(req))),
+        Ok(None) => (
+            0,
+            ParseOutcome::Bad(crate::SubmarineError::InvalidSpec(
+                "http: empty request".to_string(),
+            )),
+        ),
+        Err(e) => (0, ParseOutcome::Bad(e)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(buf: &[u8]) -> (usize, ParseOutcome) {
+        let mut seen = None;
+        parse_ready(buf, &mut seen)
+    }
+
+    #[test]
+    fn partial_headers_wait_for_more() {
+        let (n, out) = parse(b"GET /x HTTP/1.1\r\nHost: a\r\n");
+        assert_eq!(n, 0);
+        assert!(matches!(out, ParseOutcome::Partial { in_body: false }));
+    }
+
+    #[test]
+    fn partial_body_waits_for_more() {
+        let raw = b"POST /x HTTP/1.1\r\ncontent-length: 10\r\n\r\nabc";
+        let (n, out) = parse(raw);
+        assert_eq!(n, 0);
+        assert!(matches!(out, ParseOutcome::Partial { in_body: true }));
+    }
+
+    #[test]
+    fn complete_request_consumes_exactly_its_bytes() {
+        let raw =
+            b"POST /x HTTP/1.1\r\ncontent-length: 3\r\n\r\nabcGET /y ";
+        let (n, out) = parse(raw);
+        let ParseOutcome::Complete(req) = out else {
+            panic!("expected complete");
+        };
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body, b"abc");
+        assert_eq!(&raw[n..], b"GET /y ");
+    }
+
+    #[test]
+    fn pipelined_requests_parse_in_sequence() {
+        let raw = b"GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\n\r\n";
+        let (n, out) = parse(raw);
+        assert!(matches!(out, ParseOutcome::Complete(_)));
+        let (m, out2) = parse(&raw[n..]);
+        let ParseOutcome::Complete(req2) = out2 else {
+            panic!("expected second request");
+        };
+        assert_eq!(req2.path, "/b");
+        assert_eq!(n + m, raw.len());
+    }
+
+    #[test]
+    fn bad_version_is_rejected_with_path_tracked() {
+        let mut seen = None;
+        let (_, out) =
+            parse_ready(b"GET /api/v2/x SPDY/9\r\n\r\n", &mut seen);
+        assert!(matches!(out, ParseOutcome::Bad(_)));
+        assert_eq!(seen.as_deref(), Some("/api/v2/x"));
+    }
+
+    #[test]
+    fn oversized_header_block_is_rejected() {
+        let mut raw = b"GET /x HTTP/1.1\r\n".to_vec();
+        raw.extend(std::iter::repeat(b'a').take(MAX_HEADER_BYTES + 2));
+        let (_, out) = parse(&raw);
+        assert!(matches!(out, ParseOutcome::Bad(_)));
+    }
+
+    #[test]
+    fn oversized_declared_body_is_rejected_before_buffering() {
+        let raw = format!(
+            "POST /x HTTP/1.1\r\ncontent-length: {}\r\n\r\n",
+            MAX_BODY_BYTES + 1
+        );
+        let (_, out) = parse(raw.as_bytes());
+        assert!(matches!(out, ParseOutcome::Bad(_)));
+    }
+
+    #[test]
+    fn bare_lf_line_endings_are_tolerated() {
+        let (_, out) = parse(b"GET /x HTTP/1.1\nHost: a\n\n");
+        assert!(matches!(out, ParseOutcome::Complete(_)));
+    }
+}

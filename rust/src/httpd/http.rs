@@ -233,6 +233,67 @@ impl StreamBody {
     }
 }
 
+/// One advance of a resumable response tail (see [`TailSource`]).
+pub enum TailStep {
+    /// Nothing to emit yet; park until woken or `deadline()` passes.
+    Pending,
+    /// Pre-framed chunked bytes to write; the tail stays parked for
+    /// more.
+    Data(Vec<u8>),
+    /// Final bytes (terminal chunk included); the connection closes
+    /// after they drain.
+    End(Vec<u8>),
+    /// A long-poll tail resolved into a complete framed response.
+    Respond(Box<Response>),
+}
+
+/// A resumable producer for a deferred response tail. Unlike
+/// [`StreamProducer`] — which owns the socket until the stream ends —
+/// a `TailSource` is *stepped*: each call emits whatever is ready and
+/// returns, so the epoll reactor can hold thousands of watch streams
+/// as parked entries instead of pinned threads. Blocking callers
+/// (dedicated connection threads, benches writing into a `Vec`) drive
+/// the same source in a loop via [`Response::write_to_opts`], using
+/// `wait` between `Pending` steps.
+pub trait TailSource: Send {
+    /// Advance the tail. `now` is passed in so deadline checks and the
+    /// reactor's sweep clock agree.
+    fn step(&mut self, now: std::time::Instant) -> TailStep;
+    /// Absolute time at which the tail must finish (bookmark or
+    /// timeout response).
+    fn deadline(&self) -> std::time::Instant;
+    /// Block the calling thread until new data may be available, at
+    /// most `max`. Only used by blocking drivers; the reactor relies
+    /// on its wakeup pump instead.
+    fn wait(&self, max: std::time::Duration);
+}
+
+/// Interior slot for a [`TailSource`] so `Response` keeps its
+/// by-reference write API (the source is taken once, by whichever
+/// driver ends up owning the tail).
+pub struct TailBody {
+    pub source: std::sync::Mutex<Option<Box<dyn TailSource>>>,
+    /// `true`: chunked-transfer stream, connection closes at the end.
+    /// `false`: long-poll — the tail resolves into one framed
+    /// response and keep-alive is preserved.
+    pub chunked: bool,
+}
+
+/// Append one HTTP/1.1 chunked-transfer frame for `data` to `out`.
+/// Empty chunks are skipped — an empty chunk would terminate the
+/// stream early.
+pub fn chunk_frame_into(out: &mut Vec<u8>, data: &[u8]) {
+    if data.is_empty() {
+        return;
+    }
+    let _ = write!(out, "{:x}\r\n", data.len());
+    out.extend_from_slice(data);
+    out.extend_from_slice(b"\r\n");
+}
+
+/// The terminal chunk that ends a chunked-transfer body.
+pub const CHUNK_TERMINAL: &[u8] = b"0\r\n\r\n";
+
 /// An HTTP response.
 pub struct Response {
     pub status: u16,
@@ -244,6 +305,10 @@ pub struct Response {
     /// chunked transfer-encoding and the connection closes after the
     /// stream ends; `body` is ignored.
     pub stream: Option<StreamBody>,
+    /// When set, the response completes via a resumable [`TailSource`]
+    /// (watch streams and long polls); `body` is ignored for chunked
+    /// tails and replaced by the resolved response for poll tails.
+    pub tail: Option<TailBody>,
     /// Advertised `Content-Length` when the body is intentionally not
     /// materialized (the HEAD fast path over a cached encoded body).
     /// `None` means "length of `body`".
@@ -258,6 +323,7 @@ impl std::fmt::Debug for Response {
             .field("body_len", &self.body.len())
             .field("headers", &self.headers)
             .field("stream", &self.stream.is_some())
+            .field("tail", &self.tail.is_some())
             .finish()
     }
 }
@@ -282,6 +348,7 @@ impl Response {
             body,
             headers: Vec::new(),
             stream: None,
+            tail: None,
             declared_len: None,
         }
     }
@@ -300,6 +367,7 @@ impl Response {
             body: Vec::new(),
             headers: Vec::new(),
             stream: None,
+            tail: None,
             declared_len: Some(len),
         }
     }
@@ -316,12 +384,78 @@ impl Response {
             body: Vec::new(),
             headers: Vec::new(),
             stream: Some(StreamBody::new(producer)),
+            tail: None,
+            declared_len: None,
+        }
+    }
+
+    /// A chunked-transfer streaming response driven by a resumable
+    /// [`TailSource`]. The reactor parks these as cheap per-connection
+    /// entries; blocking drivers step the source in place.
+    pub fn tail_stream(
+        status: u16,
+        content_type: &'static str,
+        source: Box<dyn TailSource>,
+    ) -> Response {
+        Response {
+            status,
+            content_type,
+            body: Vec::new(),
+            headers: Vec::new(),
+            stream: None,
+            tail: Some(TailBody {
+                source: std::sync::Mutex::new(Some(source)),
+                chunked: true,
+            }),
+            declared_len: None,
+        }
+    }
+
+    /// A deferred framed response (the long-poll watch path): the
+    /// source is stepped until it yields [`TailStep::Respond`], whose
+    /// response is then written with the normal framing — keep-alive
+    /// preserved.
+    pub fn tail_poll(source: Box<dyn TailSource>) -> Response {
+        Response {
+            status: 200,
+            content_type: "application/json",
+            body: Vec::new(),
+            headers: Vec::new(),
+            stream: None,
+            tail: Some(TailBody {
+                source: std::sync::Mutex::new(Some(source)),
+                chunked: false,
+            }),
             declared_len: None,
         }
     }
 
     pub fn is_stream(&self) -> bool {
         self.stream.is_some()
+    }
+
+    pub fn is_tail(&self) -> bool {
+        self.tail.is_some()
+    }
+
+    /// Take ownership of the tail source (at most one caller wins).
+    /// Returns the source and whether the tail is chunked.
+    pub fn take_tail(&self) -> Option<(Box<dyn TailSource>, bool)> {
+        let tail = self.tail.as_ref()?;
+        let src = tail
+            .source
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .take()?;
+        Some((src, tail.chunked))
+    }
+
+    /// True when the connection cannot be reused after this response:
+    /// chunked bodies (producer streams and chunked tails) always end
+    /// with `connection: close`.
+    pub fn closes_after(&self) -> bool {
+        self.stream.is_some()
+            || self.tail.as_ref().map(|t| t.chunked).unwrap_or(false)
     }
 
     pub fn ok(body: Json) -> Response {
@@ -389,24 +523,16 @@ impl Response {
         keep_alive: bool,
         head_only: bool,
     ) -> std::io::Result<()> {
+        if self.tail.is_some() {
+            return self.drive_tail(w, keep_alive, head_only);
+        }
         if let Some(stream) = &self.stream {
             // Chunked transfer: the body length is unknown up front
             // (watch events arrive over time). Streams always close
             // the connection when done — the producer may have ended
             // mid-event on error, so the socket can't be trusted for
             // another framed exchange.
-            write!(
-                w,
-                "HTTP/1.1 {} {}\r\ncontent-type: {}\r\n\
-                 transfer-encoding: chunked\r\n",
-                self.status,
-                self.reason(),
-                self.content_type,
-            )?;
-            for (k, v) in &self.headers {
-                write!(w, "{k}: {v}\r\n")?;
-            }
-            write!(w, "connection: close\r\n\r\n")?;
+            self.write_stream_head(&mut w)?;
             if !head_only {
                 // poison recovery: a panicked producer elsewhere must
                 // not kill every later streaming response
@@ -419,7 +545,7 @@ impl Response {
                     let mut sink = ChunkSink { w: &mut w };
                     producer(&mut sink)?;
                 }
-                w.write_all(b"0\r\n\r\n")?;
+                w.write_all(CHUNK_TERMINAL)?;
             }
             return w.flush();
         }
@@ -443,6 +569,103 @@ impl Response {
             w.write_all(&self.body)?;
         }
         w.flush()
+    }
+
+    /// Status line + headers for a chunked-transfer body. Shared by
+    /// the blocking stream paths and the reactor (which frames the
+    /// head into a connection's write buffer before parking the tail).
+    pub fn write_stream_head<W: Write>(
+        &self,
+        w: &mut W,
+    ) -> std::io::Result<()> {
+        write!(
+            w,
+            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\n\
+             transfer-encoding: chunked\r\n",
+            self.status,
+            self.reason(),
+            self.content_type,
+        )?;
+        for (k, v) in &self.headers {
+            write!(w, "{k}: {v}\r\n")?;
+        }
+        write!(w, "connection: close\r\n\r\n")
+    }
+
+    /// Blocking driver for tail responses, so callers that own their
+    /// socket (dedicated connection threads, tests, benches writing
+    /// into a `Vec`) produce byte-identical output to the reactor's
+    /// parked path.
+    fn drive_tail<W: Write>(
+        &self,
+        mut w: W,
+        keep_alive: bool,
+        head_only: bool,
+    ) -> std::io::Result<()> {
+        let taken = self.take_tail();
+        let Some((mut source, chunked)) = taken else {
+            // source already consumed elsewhere; emit a safe fallback
+            return Response::error(500, "response tail already taken")
+                .write_to_opts(w, false, head_only);
+        };
+        if chunked {
+            self.write_stream_head(&mut w)?;
+            if head_only {
+                return w.flush();
+            }
+            loop {
+                let now = std::time::Instant::now();
+                match source.step(now) {
+                    TailStep::Pending => {
+                        let max = source
+                            .deadline()
+                            .saturating_duration_since(now)
+                            .min(std::time::Duration::from_millis(250));
+                        source.wait(max);
+                    }
+                    TailStep::Data(bytes) => {
+                        w.write_all(&bytes)?;
+                        w.flush()?;
+                    }
+                    TailStep::End(bytes) => {
+                        w.write_all(&bytes)?;
+                        return w.flush();
+                    }
+                    TailStep::Respond(_) => {
+                        // a poll step misrouted into a chunked tail:
+                        // end the stream cleanly rather than corrupt
+                        // the framing
+                        w.write_all(CHUNK_TERMINAL)?;
+                        return w.flush();
+                    }
+                }
+            }
+        }
+        // Long poll: step until the source resolves into a framed
+        // response, then write it with the caller's connection
+        // semantics (keep-alive preserved).
+        loop {
+            let now = std::time::Instant::now();
+            match source.step(now) {
+                TailStep::Pending => {
+                    let max = source
+                        .deadline()
+                        .saturating_duration_since(now)
+                        .min(std::time::Duration::from_millis(250));
+                    source.wait(max);
+                }
+                TailStep::Respond(r) => {
+                    return r.write_to_opts(w, keep_alive, head_only);
+                }
+                TailStep::Data(_) | TailStep::End(_) => {
+                    return Response::error(
+                        500,
+                        "stream step from a long-poll tail",
+                    )
+                    .write_to_opts(w, keep_alive, head_only);
+                }
+            }
+        }
     }
 }
 
@@ -591,5 +814,101 @@ mod tests {
         let r = Request::synthetic("GET", "/api/v2/experiment?limit=3");
         assert_eq!(r.path, "/api/v2/experiment");
         assert_eq!(r.query["limit"], "3");
+    }
+
+    #[test]
+    fn chunk_framing_helper() {
+        let mut out = Vec::new();
+        chunk_frame_into(&mut out, b"hello\n");
+        chunk_frame_into(&mut out, b""); // skipped, not a terminator
+        chunk_frame_into(&mut out, b"world\n");
+        assert_eq!(&out, b"6\r\nhello\n\r\n6\r\nworld\n\r\n");
+    }
+
+    /// Scripted tail source: emits a fixed sequence of steps.
+    struct ScriptTail {
+        steps: Vec<TailStep>,
+        deadline: std::time::Instant,
+    }
+
+    impl TailSource for ScriptTail {
+        fn step(&mut self, _now: std::time::Instant) -> TailStep {
+            if self.steps.is_empty() {
+                TailStep::End(CHUNK_TERMINAL.to_vec())
+            } else {
+                self.steps.remove(0)
+            }
+        }
+        fn deadline(&self) -> std::time::Instant {
+            self.deadline
+        }
+        fn wait(&self, max: std::time::Duration) {
+            std::thread::sleep(max.min(std::time::Duration::from_millis(1)));
+        }
+    }
+
+    #[test]
+    fn chunked_tail_drives_to_completion_blocking() {
+        let mut a = Vec::new();
+        chunk_frame_into(&mut a, b"ev1\n");
+        let mut b = Vec::new();
+        chunk_frame_into(&mut b, b"ev2\n");
+        b.extend_from_slice(CHUNK_TERMINAL);
+        let r = Response::tail_stream(
+            200,
+            "application/x-json-stream",
+            Box::new(ScriptTail {
+                steps: vec![
+                    TailStep::Pending,
+                    TailStep::Data(a),
+                    TailStep::End(b),
+                ],
+                deadline: std::time::Instant::now()
+                    + std::time::Duration::from_secs(5),
+            }),
+        );
+        assert!(r.is_tail() && r.closes_after());
+        let mut buf = Vec::new();
+        r.write_to_opts(&mut buf, true, false).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.contains("transfer-encoding: chunked\r\n"));
+        assert!(text.contains("connection: close\r\n"));
+        assert!(text.contains("4\r\nev1\n\r\n"));
+        assert!(text.contains("4\r\nev2\n\r\n"));
+        assert!(text.ends_with("0\r\n\r\n"));
+    }
+
+    #[test]
+    fn poll_tail_resolves_to_framed_response() {
+        let inner = Response::ok_result(Json::Str("resolved".into()));
+        let r = Response::tail_poll(Box::new(ScriptTail {
+            steps: vec![
+                TailStep::Pending,
+                TailStep::Respond(Box::new(inner)),
+            ],
+            deadline: std::time::Instant::now()
+                + std::time::Duration::from_secs(5),
+        }));
+        assert!(r.is_tail() && !r.closes_after());
+        let mut buf = Vec::new();
+        r.write_to_opts(&mut buf, true, false).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("connection: keep-alive\r\n"));
+        assert!(text.contains("resolved"));
+    }
+
+    #[test]
+    fn take_tail_is_single_shot() {
+        let r = Response::tail_poll(Box::new(ScriptTail {
+            steps: vec![],
+            deadline: std::time::Instant::now(),
+        }));
+        assert!(r.take_tail().is_some());
+        assert!(r.take_tail().is_none());
+        // a consumed tail degrades to a 500, not a hang
+        let mut buf = Vec::new();
+        r.write_to_opts(&mut buf, true, false).unwrap();
+        assert!(String::from_utf8(buf).unwrap().contains("500"));
     }
 }

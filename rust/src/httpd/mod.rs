@@ -4,20 +4,24 @@
 //! for authentication.")
 //!
 //! A std-only HTTP/1.1 server (the offline registry lacks hyper/tokio):
-//! capped thread-per-connection accept loop with keep-alive, request
-//! parser, compiled segment-trie router ([`trie`]), typed handlers with
-//! extractors ([`handler`]), a composable middleware chain
-//! ([`middleware`]: auth, logging, per-route metrics, rate limiting),
-//! and versioned JSON envelopes ([`router`]).
+//! an epoll readiness reactor ([`reactor`]) drives per-connection
+//! state machines ([`conn`]) with keep-alive and parks watch/stream
+//! tails as cheap reactor entries; request parser, compiled
+//! segment-trie router ([`trie`]), typed handlers with extractors
+//! ([`handler`]), a composable middleware chain ([`middleware`]: auth,
+//! logging, per-route metrics, rate limiting), and versioned JSON
+//! envelopes ([`router`]).
 //!
 //! Routes ([`v2`]) serve Apache Submarine's surface under `/api/v2`
 //! (typed envelope, pagination, filtering) with `/api/v1` kept as a
 //! compat shim (`/api/v1/experiment`, `/api/v1/template`,
 //! `/api/v1/environment`, `/api/v1/model`, ...). See `docs/API.md`.
 
+pub mod conn;
 pub mod handler;
 pub mod http;
 pub mod middleware;
+pub mod reactor;
 pub mod resource;
 pub mod router;
 pub mod server;

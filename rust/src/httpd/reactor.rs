@@ -1,0 +1,1454 @@
+//! Epoll readiness reactor (ISSUE 7 tentpole).
+//!
+//! One reactor thread owns every connection: a nonblocking listener
+//! plus each accepted socket are registered with a raw epoll instance
+//! (`epoll_create1`/`epoll_ctl`/`epoll_wait` via direct FFI — the
+//! project keeps its zero-dependency property, so there is no libc or
+//! mio here). Readiness events drive the per-connection state machine
+//! in [`super::conn`]; complete requests are handed to a small worker
+//! pool over [`JobQueue`], responses come back over [`DoneQueue`] with
+//! an eventfd nudge, and watch/stream responses park as cheap
+//! [`TailState`] entries stepped by feed wakeups — 10k concurrent
+//! watchers cost 10k sockets and buffers, not 10k threads.
+//!
+//! Wakeup paths into the epoll wait:
+//! - socket readiness (the normal request/response flow),
+//! - the eventfd, written by workers on completion and by the feed
+//!   pump when the store publishes a revision (parked watch tails get
+//!   stepped),
+//! - a 25ms sweep tick for idle reaping, mid-request 408s, and tail
+//!   deadlines.
+//!
+//! The only dedicated-thread escape hatch left is the long synchronous
+//! `POST .../experiment/tune` handler (minutes of wall time that must
+//! not pin a pool worker), plus a safety hatch for legacy
+//! `Response::stream` producers, which own their socket until done.
+
+use super::conn::{
+    Conn, ConnState, ParseOutcome, ReadOutcome, WriteOutcome,
+    MAX_HEADER_BYTES,
+};
+use super::http::{Request, Response, TailSource, TailStep};
+use super::router::{envelope_of_path, error_json, Router};
+use super::server::{
+    shed_connection, ConnGuard, MAX_KEEPALIVE_REQUESTS,
+};
+use crate::analysis::lock_order::LockRank;
+use crate::analysis::tracker;
+use crate::storage::MetaStore;
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+// ------------------------------------------------------- raw syscalls
+
+/// Minimal FFI surface for the reactor. Declared privately instead of
+/// pulling in libc: these signatures are the stable Linux kernel ABI.
+mod sys {
+    /// `struct epoll_event`. x86_64 declares it packed; other Linux
+    /// targets use natural alignment.
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+
+    pub const EPOLL_CTL_ADD: i32 = 1;
+    pub const EPOLL_CTL_DEL: i32 = 2;
+    pub const EPOLL_CTL_MOD: i32 = 3;
+    pub const EPOLL_CLOEXEC: i32 = 0x80000;
+    pub const EFD_NONBLOCK: i32 = 0x800;
+    pub const RLIMIT_NOFILE: i32 = 7;
+    pub const SOL_SOCKET: i32 = 1;
+    pub const SO_RCVBUF: i32 = 8;
+
+    #[repr(C)]
+    pub struct Rlimit {
+        pub rlim_cur: u64,
+        pub rlim_max: u64,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: i32) -> i32;
+        pub fn epoll_ctl(
+            epfd: i32,
+            op: i32,
+            fd: i32,
+            event: *mut EpollEvent,
+        ) -> i32;
+        pub fn epoll_wait(
+            epfd: i32,
+            events: *mut EpollEvent,
+            maxevents: i32,
+            timeout_ms: i32,
+        ) -> i32;
+        pub fn eventfd(initval: u32, flags: i32) -> i32;
+        pub fn close(fd: i32) -> i32;
+        pub fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+        pub fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+        pub fn getrlimit(resource: i32, rlim: *mut Rlimit) -> i32;
+        pub fn setrlimit(resource: i32, rlim: *const Rlimit) -> i32;
+        pub fn setsockopt(
+            fd: i32,
+            level: i32,
+            optname: i32,
+            optval: *const u8,
+            optlen: u32,
+        ) -> i32;
+    }
+}
+
+/// Raise the process `RLIMIT_NOFILE` soft limit toward `want` (capped
+/// by the hard limit) and return the resulting soft limit. The 10k+
+/// watcher fan-out test calls this before opening its sockets.
+pub fn raise_nofile_limit(want: u64) -> u64 {
+    let mut rl = sys::Rlimit {
+        rlim_cur: 0,
+        rlim_max: 0,
+    };
+    if unsafe { sys::getrlimit(sys::RLIMIT_NOFILE, &mut rl) } != 0 {
+        return 1024;
+    }
+    if rl.rlim_cur >= want {
+        return rl.rlim_cur;
+    }
+    let target = want.min(rl.rlim_max);
+    let bumped = sys::Rlimit {
+        rlim_cur: target,
+        rlim_max: rl.rlim_max,
+    };
+    if unsafe { sys::setrlimit(sys::RLIMIT_NOFILE, &bumped) } == 0 {
+        target
+    } else {
+        rl.rlim_cur
+    }
+}
+
+/// Shrink a socket's kernel receive buffer (`SO_RCVBUF`). Tests use it
+/// to force mid-response `EAGAIN` on the server's write path with a
+/// realistically small amount of data.
+pub fn set_recv_buffer(stream: &TcpStream, bytes: usize) {
+    let v = bytes as i32;
+    let _ = unsafe {
+        sys::setsockopt(
+            stream.as_raw_fd(),
+            sys::SOL_SOCKET,
+            sys::SO_RCVBUF,
+            (&v as *const i32).cast(),
+            4,
+        )
+    };
+}
+
+/// Owned epoll instance.
+struct Epoll {
+    fd: RawFd,
+}
+
+impl Epoll {
+    fn new() -> std::io::Result<Epoll> {
+        let fd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+        if fd < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(Epoll { fd })
+    }
+
+    fn ctl(
+        &self,
+        op: i32,
+        fd: RawFd,
+        events: u32,
+        token: u64,
+    ) -> std::io::Result<()> {
+        let mut ev = sys::EpollEvent {
+            events,
+            data: token,
+        };
+        let rc = unsafe { sys::epoll_ctl(self.fd, op, fd, &mut ev) };
+        if rc < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    fn add(
+        &self,
+        fd: RawFd,
+        events: u32,
+        token: u64,
+    ) -> std::io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_ADD, fd, events, token)
+    }
+
+    fn modify(
+        &self,
+        fd: RawFd,
+        events: u32,
+        token: u64,
+    ) -> std::io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_MOD, fd, events, token)
+    }
+
+    fn del(&self, fd: RawFd) -> std::io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_DEL, fd, 0, 0)
+    }
+
+    /// Wait for readiness events. `EINTR` (and any other error) is
+    /// reported as zero events — the caller's loop just re-enters.
+    fn wait(
+        &self,
+        events: &mut [sys::EpollEvent],
+        timeout_ms: i32,
+    ) -> usize {
+        let rc = unsafe {
+            sys::epoll_wait(
+                self.fd,
+                events.as_mut_ptr(),
+                events.len() as i32,
+                timeout_ms,
+            )
+        };
+        if rc < 0 {
+            0
+        } else {
+            rc as usize
+        }
+    }
+}
+
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        unsafe {
+            sys::close(self.fd);
+        }
+    }
+}
+
+/// Nonblocking eventfd: the reactor's cross-thread doorbell. Workers
+/// and the feed pump `wake` it; the reactor `drain`s it on readiness.
+struct EventFd {
+    fd: RawFd,
+}
+
+impl EventFd {
+    fn new() -> std::io::Result<EventFd> {
+        let fd = unsafe { sys::eventfd(0, sys::EFD_NONBLOCK) };
+        if fd < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(EventFd { fd })
+    }
+
+    fn raw(&self) -> RawFd {
+        self.fd
+    }
+
+    fn wake(&self) {
+        let one: u64 = 1;
+        let _ = unsafe {
+            sys::write(self.fd, (&one as *const u64).cast(), 8)
+        };
+    }
+
+    fn drain(&self) {
+        let mut buf = [0u8; 8];
+        while unsafe { sys::read(self.fd, buf.as_mut_ptr(), 8) } == 8 {}
+    }
+}
+
+impl Drop for EventFd {
+    fn drop(&mut self) {
+        unsafe {
+            sys::close(self.fd);
+        }
+    }
+}
+
+// --------------------------------------------------- reactor <-> pool
+
+/// A parsed request in flight to the worker pool.
+struct Job {
+    token: u64,
+    req: Box<Request>,
+}
+
+/// Reactor → workers hand-off. Same rank as the old connection queue
+/// it replaces ([`LockRank::ConnQueue`]).
+struct JobQueue {
+    q: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    closed: AtomicBool,
+}
+
+impl JobQueue {
+    fn new() -> JobQueue {
+        JobQueue {
+            q: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            closed: AtomicBool::new(false),
+        }
+    }
+
+    fn push(&self, job: Job) {
+        let _held = tracker::acquired(LockRank::ConnQueue, 0);
+        let mut q = self.q.lock().unwrap_or_else(|e| e.into_inner());
+        q.push_back(job);
+        drop(q);
+        self.cv.notify_one();
+    }
+
+    fn pop(&self) -> Option<Job> {
+        let _held = tracker::acquired(LockRank::ConnQueue, 0);
+        let mut q = self.q.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if let Some(j) = q.pop_front() {
+                return Some(j);
+            }
+            if self.closed.load(Ordering::Acquire) {
+                return None;
+            }
+            q = self.cv.wait(q).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        self.cv.notify_all();
+    }
+}
+
+/// One finished handler invocation.
+struct Done {
+    token: u64,
+    resp: Box<Response>,
+    /// The request asked to keep the connection alive.
+    keep: bool,
+    /// The request was `HEAD` — suppress the body.
+    head: bool,
+}
+
+/// Workers → reactor completion queue ([`LockRank::ReactorDone`]).
+struct DoneQueue {
+    completions: Mutex<Vec<Done>>,
+}
+
+impl DoneQueue {
+    fn new() -> DoneQueue {
+        DoneQueue {
+            completions: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn push(&self, d: Done) {
+        let _held = tracker::acquired(LockRank::ReactorDone, 0);
+        let mut completions = self
+            .completions
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        completions.push(d);
+    }
+
+    /// Swap the accumulated completions into `into` (which must be
+    /// empty) without holding the lock while they are processed.
+    fn drain(&self, into: &mut Vec<Done>) {
+        let _held = tracker::acquired(LockRank::ReactorDone, 0);
+        let mut completions = self
+            .completions
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        std::mem::swap(into, &mut *completions);
+    }
+}
+
+fn worker_loop(
+    jobs: &Arc<JobQueue>,
+    done: &Arc<DoneQueue>,
+    router: &Arc<Router>,
+    wake: &Arc<EventFd>,
+) {
+    while let Some(job) = jobs.pop() {
+        let head = job.req.method.eq_ignore_ascii_case("HEAD");
+        let keep = job.req.wants_keep_alive();
+        let resp = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| router.dispatch(&job.req)),
+        )
+        .unwrap_or_else(|_| {
+            Response::error(500, "handler panicked")
+        });
+        done.push(Done {
+            token: job.token,
+            resp: Box::new(resp),
+            keep,
+            head,
+        });
+        wake.wake();
+    }
+}
+
+/// Wakes the reactor whenever the store publishes a revision, so
+/// parked watch tails are stepped promptly without one blocked thread
+/// per watcher.
+fn feed_pump(
+    store: &Arc<MetaStore>,
+    flag: &Arc<AtomicBool>,
+    wake: &Arc<EventFd>,
+    stop: &Arc<AtomicBool>,
+) {
+    let mut last = store.current_rev();
+    while !stop.load(Ordering::Acquire) {
+        let rev =
+            store.wait_rev_above(last, Duration::from_millis(250));
+        if rev > last {
+            last = rev;
+            flag.store(true, Ordering::Release);
+            wake.wake();
+        }
+    }
+}
+
+// ------------------------------------------------------------ reactor
+
+/// Token values reserved for non-connection fds.
+const TOKEN_LISTENER: u64 = u64::MAX;
+const TOKEN_WAKE: u64 = u64::MAX - 1;
+
+/// Sweep cadence: idle reaping, mid-request 408s, tail deadlines.
+const SWEEP_MS: i32 = 25;
+
+/// A parked watch/stream tail.
+struct TailState {
+    source: Box<dyn TailSource>,
+    chunked: bool,
+    head: bool,
+    /// The originating request's keep-alive wish (long polls resume
+    /// keep-alive after resolving).
+    keep: bool,
+    /// Chunked tail has queued its terminal bytes; close once drained.
+    finished: bool,
+}
+
+/// Slab entry: connection + generation (stale-token insurance) + any
+/// parked tail. Dropping the slot closes the socket and releases the
+/// live-connection count via `_guard`.
+struct Slot {
+    conn: Conn,
+    gen: u32,
+    tail: Option<TailState>,
+    _guard: ConnGuard,
+}
+
+fn token_of(gen: u32, idx: usize) -> u64 {
+    ((gen as u64) << 32) | idx as u64
+}
+
+pub(crate) struct Reactor {
+    epoll: Epoll,
+    wake: Arc<EventFd>,
+    listener: TcpListener,
+    router: Arc<Router>,
+    store: Arc<MetaStore>,
+    jobs: Arc<JobQueue>,
+    done: Arc<DoneQueue>,
+    feed_flag: Arc<AtomicBool>,
+    slots: Vec<Option<Slot>>,
+    free: Vec<usize>,
+    live: usize,
+    next_gen: u32,
+    active: Arc<AtomicUsize>,
+    stop: Arc<AtomicBool>,
+    workers: usize,
+    max_connections: usize,
+    idle_timeout: Duration,
+    wbuf_cap: usize,
+    done_batch: Vec<Done>,
+}
+
+/// Deferred per-slot decision computed under an immutable borrow.
+enum SweepAction {
+    Close,
+    Timeout408,
+    StepTail,
+}
+
+impl Reactor {
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn new(
+        listener: TcpListener,
+        router: Arc<Router>,
+        store: Arc<MetaStore>,
+        active: Arc<AtomicUsize>,
+        stop: Arc<AtomicBool>,
+        workers: usize,
+        max_connections: usize,
+        idle_timeout: Duration,
+        wbuf_cap: usize,
+    ) -> std::io::Result<Reactor> {
+        let epoll = Epoll::new()?;
+        let wake = Arc::new(EventFd::new()?);
+        listener.set_nonblocking(true)?;
+        epoll.add(
+            listener.as_raw_fd(),
+            sys::EPOLLIN,
+            TOKEN_LISTENER,
+        )?;
+        epoll.add(wake.raw(), sys::EPOLLIN, TOKEN_WAKE)?;
+        Ok(Reactor {
+            epoll,
+            wake,
+            listener,
+            router,
+            store,
+            jobs: Arc::new(JobQueue::new()),
+            done: Arc::new(DoneQueue::new()),
+            feed_flag: Arc::new(AtomicBool::new(false)),
+            slots: Vec::new(),
+            free: Vec::new(),
+            live: 0,
+            next_gen: 0,
+            active,
+            stop,
+            workers,
+            max_connections,
+            idle_timeout,
+            wbuf_cap,
+            done_batch: Vec::new(),
+        })
+    }
+
+    /// Run the event loop until the stop flag is set (and a dummy
+    /// connection or any event wakes the wait).
+    pub(crate) fn run(mut self) -> crate::Result<()> {
+        let mut pool = Vec::with_capacity(self.workers);
+        for i in 0..self.workers {
+            let jobs = Arc::clone(&self.jobs);
+            let done = Arc::clone(&self.done);
+            let router = Arc::clone(&self.router);
+            let wake = Arc::clone(&self.wake);
+            let spawned = std::thread::Builder::new()
+                .name(format!("submarine-worker-{i}"))
+                .spawn(move || {
+                    worker_loop(&jobs, &done, &router, &wake)
+                });
+            match spawned {
+                Ok(h) => pool.push(h),
+                Err(e) => {
+                    self.jobs.close();
+                    for h in pool {
+                        let _ = h.join();
+                    }
+                    return Err(crate::SubmarineError::Runtime(
+                        format!("spawning request worker {i}: {e}"),
+                    ));
+                }
+            }
+        }
+        let pump = {
+            let store = Arc::clone(&self.store);
+            let flag = Arc::clone(&self.feed_flag);
+            let wake = Arc::clone(&self.wake);
+            let stop = Arc::clone(&self.stop);
+            std::thread::Builder::new()
+                .name("submarine-feed-pump".into())
+                .spawn(move || feed_pump(&store, &flag, &wake, &stop))
+        };
+        let mut events =
+            vec![sys::EpollEvent { events: 0, data: 0 }; 1024];
+        let mut last_sweep = Instant::now();
+        loop {
+            if self.stop.load(Ordering::Acquire) {
+                break;
+            }
+            let timeout = if self.live > 0 { SWEEP_MS } else { 250 };
+            let n = self.epoll.wait(&mut events, timeout);
+            if self.stop.load(Ordering::Acquire) {
+                break;
+            }
+            let now = Instant::now();
+            self.dispatch_events(&events[..n], now);
+            self.drain_completions(now);
+            if self.feed_flag.swap(false, Ordering::AcqRel) {
+                self.step_tails(now);
+            }
+            if now.duration_since(last_sweep)
+                >= Duration::from_millis(SWEEP_MS as u64)
+            {
+                last_sweep = now;
+                self.sweep(now);
+            }
+        }
+        self.jobs.close();
+        for h in pool {
+            let _ = h.join();
+        }
+        if let Ok(h) = pump {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------ event dispatch
+
+    /// Fan readiness events out to their owners. Hot: runs once per
+    /// wakeup over the whole batch.
+    fn dispatch_events(
+        &mut self,
+        events: &[sys::EpollEvent],
+        now: Instant,
+    ) {
+        for ev in events {
+            let token = ev.data;
+            let bits = ev.events;
+            if token == TOKEN_LISTENER {
+                self.accept_ready(now);
+            } else if token == TOKEN_WAKE {
+                self.wake.drain();
+            } else {
+                self.conn_event(token, bits, now);
+            }
+        }
+    }
+
+    fn conn_event(&mut self, token: u64, bits: u32, now: Instant) {
+        let idx = (token & 0xffff_ffff) as usize;
+        let gen = (token >> 32) as u32;
+        match self.slots.get(idx).and_then(|s| s.as_ref()) {
+            Some(slot) if slot.gen == gen => {}
+            _ => return, // stale event for a recycled slot
+        }
+        if bits & (sys::EPOLLERR | sys::EPOLLHUP) != 0 {
+            self.close_conn(idx);
+            return;
+        }
+        if bits & sys::EPOLLOUT != 0 && self.on_writable(idx, now) {
+            self.close_conn(idx);
+            return;
+        }
+        if bits & (sys::EPOLLIN | sys::EPOLLRDHUP) != 0
+            && self.on_readable(idx, now)
+        {
+            self.close_conn(idx);
+            return;
+        }
+        self.rearm(idx);
+    }
+
+    fn accept_ready(&mut self, now: Instant) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => self.admit(stream, now),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    return;
+                }
+                Err(e)
+                    if e.kind()
+                        == std::io::ErrorKind::Interrupted => {}
+                Err(e) => {
+                    crate::warnlog!("httpd", "accept error: {e}");
+                    return;
+                }
+            }
+        }
+    }
+
+    fn admit(&mut self, stream: TcpStream, now: Instant) {
+        if self.active.load(Ordering::Relaxed) >= self.max_connections
+        {
+            // Shed instead of queueing: a prompt 503 beats an
+            // unbounded backlog. The lingering close runs on its own
+            // short-lived thread so a slow peer cannot stall the
+            // reactor at exactly the moment the server is overloaded.
+            let _ = std::thread::Builder::new()
+                .name("submarine-shed".into())
+                .spawn(move || shed_connection(stream));
+            return;
+        }
+        if stream.set_nonblocking(true).is_err() {
+            return;
+        }
+        let _ = stream.set_nodelay(true);
+        self.active.fetch_add(1, Ordering::Relaxed);
+        let guard = ConnGuard(Arc::clone(&self.active));
+        let mut conn = Conn::new(stream, now);
+        conn.interest = sys::EPOLLIN | sys::EPOLLRDHUP;
+        let fd = conn.stream.as_raw_fd();
+        let (idx, token) = self.alloc_slot(conn, guard);
+        let interest = sys::EPOLLIN | sys::EPOLLRDHUP;
+        if self.epoll.add(fd, interest, token).is_err() {
+            self.remove_slot(idx);
+        }
+    }
+
+    fn alloc_slot(
+        &mut self,
+        conn: Conn,
+        guard: ConnGuard,
+    ) -> (usize, u64) {
+        let idx = match self.free.pop() {
+            Some(i) => i,
+            None => {
+                self.slots.push(None);
+                self.slots.len() - 1
+            }
+        };
+        self.next_gen = self.next_gen.wrapping_add(1);
+        let gen = self.next_gen;
+        self.slots[idx] = Some(Slot {
+            conn,
+            gen,
+            tail: None,
+            _guard: guard,
+        });
+        self.live += 1;
+        (idx, token_of(gen, idx))
+    }
+
+    /// Drop a slot without touching epoll (used when registration
+    /// itself failed, and by the migration paths after `del`).
+    fn remove_slot(&mut self, idx: usize) -> Option<Slot> {
+        let slot = self.slots.get_mut(idx).and_then(|s| s.take())?;
+        self.free.push(idx);
+        self.live -= 1;
+        Some(slot)
+    }
+
+    fn close_conn(&mut self, idx: usize) {
+        if let Some(slot) = self.remove_slot(idx) {
+            let _ =
+                self.epoll.del(slot.conn.stream.as_raw_fd());
+            // socket closes when the slot drops; the guard releases
+            // the live-connection count
+        }
+    }
+
+    // ---------------------------------------------------- readiness
+
+    fn on_readable(&mut self, idx: usize, now: Instant) -> bool {
+        let mut saw_eof = false;
+        loop {
+            let Some(slot) =
+                self.slots.get_mut(idx).and_then(|s| s.as_mut())
+            else {
+                return false;
+            };
+            // bound buffering while a request is already in flight
+            if slot.conn.state == ConnState::Handle
+                && slot.conn.rbuf.len() - slot.conn.rpos
+                    > MAX_HEADER_BYTES
+            {
+                break;
+            }
+            match slot.conn.read_some() {
+                ReadOutcome::Progress => {
+                    if slot.conn.state == ConnState::Tail {
+                        // watch clients have nothing more to say;
+                        // discard so a chatty peer can't grow rbuf
+                        slot.conn.rbuf.clear();
+                        slot.conn.rpos = 0;
+                    }
+                }
+                ReadOutcome::WouldBlock => break,
+                ReadOutcome::Eof => {
+                    saw_eof = true;
+                    break;
+                }
+                ReadOutcome::Err => return true,
+            }
+        }
+        let Some(slot) =
+            self.slots.get_mut(idx).and_then(|s| s.as_mut())
+        else {
+            return false;
+        };
+        let state = slot.conn.state;
+        if saw_eof {
+            slot.conn.eof = true;
+            slot.conn.keep = false;
+            if state == ConnState::Tail {
+                return true; // peer gone; unpark and drop
+            }
+        }
+        match state {
+            ConnState::ReadHeaders
+            | ConnState::ReadBody
+            | ConnState::KeepAliveIdle => {
+                self.pump_requests(idx, now)
+            }
+            _ => false,
+        }
+    }
+
+    /// Try to parse and dispatch the next buffered request. Returns
+    /// `true` when the connection should close.
+    fn pump_requests(&mut self, idx: usize, now: Instant) -> bool {
+        let _ = now;
+        let Some(slot) =
+            self.slots.get_mut(idx).and_then(|s| s.as_mut())
+        else {
+            return false;
+        };
+        match slot.conn.state {
+            ConnState::ReadHeaders
+            | ConnState::ReadBody
+            | ConnState::KeepAliveIdle => {}
+            _ => return false,
+        }
+        if slot.conn.state == ConnState::KeepAliveIdle
+            && slot.conn.pending_in()
+        {
+            slot.conn.state = ConnState::ReadHeaders;
+        }
+        match slot.conn.try_parse() {
+            ParseOutcome::Partial { .. } => slot.conn.eof,
+            ParseOutcome::Complete(req) => {
+                slot.conn.state = ConnState::Handle;
+                let token = token_of(slot.gen, idx);
+                if is_tune(&req) {
+                    self.migrate_tune(idx, req);
+                    return false;
+                }
+                self.jobs.push(Job { token, req });
+                false
+            }
+            ParseOutcome::Bad(e) => {
+                let envelope = envelope_of_path(
+                    slot.conn.seen_path.as_deref().unwrap_or(""),
+                );
+                let resp = error_json(
+                    envelope,
+                    400,
+                    "InvalidSpec",
+                    &e.to_string(),
+                );
+                slot.conn.keep = false;
+                let _ = resp.write_to_opts(
+                    &mut slot.conn.wbuf,
+                    false,
+                    false,
+                );
+                slot.conn.state = ConnState::WriteResponse;
+                match slot.conn.flush_out() {
+                    WriteOutcome::Done | WriteOutcome::Err => true,
+                    WriteOutcome::Blocked => false,
+                }
+            }
+        }
+    }
+
+    fn on_writable(&mut self, idx: usize, now: Instant) -> bool {
+        let Some(slot) =
+            self.slots.get_mut(idx).and_then(|s| s.as_mut())
+        else {
+            return false;
+        };
+        match slot.conn.flush_out() {
+            WriteOutcome::Blocked => false,
+            WriteOutcome::Err => true,
+            WriteOutcome::Done => {
+                let state = slot.conn.state;
+                let tail_finished = slot
+                    .tail
+                    .as_ref()
+                    .map(|t| t.finished)
+                    .unwrap_or(false);
+                match state {
+                    ConnState::WriteResponse => {
+                        self.after_response_drained(idx, now);
+                        false
+                    }
+                    ConnState::Tail if tail_finished => true,
+                    _ => false,
+                }
+            }
+        }
+    }
+
+    /// A framed response fully hit the socket: either close, or reset
+    /// for the next keep-alive request (serving a pipelined one
+    /// immediately if it is already buffered).
+    fn after_response_drained(&mut self, idx: usize, now: Instant) {
+        let keep = match self.slots.get(idx).and_then(|s| s.as_ref())
+        {
+            Some(slot) => slot.conn.keep,
+            None => return,
+        };
+        if !keep {
+            self.close_conn(idx);
+            return;
+        }
+        if let Some(slot) =
+            self.slots.get_mut(idx).and_then(|s| s.as_mut())
+        {
+            slot.conn.await_next_request(now);
+        }
+        if self.pump_requests(idx, now) {
+            self.close_conn(idx);
+        } else {
+            self.rearm(idx);
+        }
+    }
+
+    /// Re-register epoll interest when the desired mask changed. Hot:
+    /// called after every state transition; the cached-mask check
+    /// keeps `epoll_ctl` off the per-event fast path.
+    fn rearm(&mut self, idx: usize) {
+        let Some(slot) =
+            self.slots.get_mut(idx).and_then(|s| s.as_mut())
+        else {
+            return;
+        };
+        let mut want = sys::EPOLLRDHUP;
+        match slot.conn.state {
+            ConnState::ReadHeaders
+            | ConnState::ReadBody
+            | ConnState::KeepAliveIdle => want |= sys::EPOLLIN,
+            ConnState::Handle => {}
+            ConnState::WriteResponse => want |= sys::EPOLLOUT,
+            ConnState::Tail => {
+                want |= sys::EPOLLIN;
+                if slot.conn.pending_out() > 0 {
+                    want |= sys::EPOLLOUT;
+                }
+            }
+        }
+        if slot.conn.interest == want {
+            return;
+        }
+        slot.conn.interest = want;
+        let fd = slot.conn.stream.as_raw_fd();
+        let token = token_of(slot.gen, idx);
+        let _ = self.epoll.modify(fd, want, token);
+    }
+
+    // -------------------------------------------------- completions
+
+    fn drain_completions(&mut self, now: Instant) {
+        let mut batch = std::mem::take(&mut self.done_batch);
+        self.done.drain(&mut batch);
+        for d in batch.drain(..) {
+            self.complete(d, now);
+        }
+        self.done_batch = batch;
+    }
+
+    fn complete(&mut self, d: Done, now: Instant) {
+        let idx = (d.token & 0xffff_ffff) as usize;
+        let gen = (d.token >> 32) as u32;
+        match self.slots.get(idx).and_then(|s| s.as_ref()) {
+            Some(slot)
+                if slot.gen == gen
+                    && slot.conn.state == ConnState::Handle => {}
+            _ => return, // connection died while the handler ran
+        }
+        if d.resp.is_stream() {
+            // legacy producer stream: owns its socket until done
+            self.migrate_stream(idx, d);
+            return;
+        }
+        if let Some((source, chunked)) = d.resp.take_tail() {
+            self.park_tail(idx, d, source, chunked, now);
+            return;
+        }
+        self.finish_framed(idx, d, now);
+    }
+
+    fn finish_framed(&mut self, idx: usize, d: Done, now: Instant) {
+        let Some(slot) =
+            self.slots.get_mut(idx).and_then(|s| s.as_mut())
+        else {
+            return;
+        };
+        slot.conn.served += 1;
+        let keep = d.keep
+            && !slot.conn.eof
+            && (slot.conn.served as usize) < MAX_KEEPALIVE_REQUESTS
+            && !d.resp.closes_after();
+        slot.conn.keep = keep;
+        let _ =
+            d.resp.write_to_opts(&mut slot.conn.wbuf, keep, d.head);
+        slot.conn.state = ConnState::WriteResponse;
+        match slot.conn.flush_out() {
+            WriteOutcome::Done => {
+                self.after_response_drained(idx, now)
+            }
+            WriteOutcome::Blocked => self.rearm(idx),
+            WriteOutcome::Err => self.close_conn(idx),
+        }
+    }
+
+    /// Park a tail response: queue the chunked head (or resolve HEAD
+    /// immediately), then hold the connection as a cheap reactor entry
+    /// stepped on feed wakeups and sweeps.
+    fn park_tail(
+        &mut self,
+        idx: usize,
+        d: Done,
+        source: Box<dyn TailSource>,
+        chunked: bool,
+        now: Instant,
+    ) {
+        let Some(slot) =
+            self.slots.get_mut(idx).and_then(|s| s.as_mut())
+        else {
+            return;
+        };
+        if chunked {
+            let _ = d.resp.write_stream_head(&mut slot.conn.wbuf);
+            if d.head {
+                // HEAD of a stream: headers only, then close
+                slot.conn.keep = false;
+                slot.conn.served += 1;
+                slot.conn.state = ConnState::WriteResponse;
+                match slot.conn.flush_out() {
+                    WriteOutcome::Done | WriteOutcome::Err => {
+                        self.close_conn(idx)
+                    }
+                    WriteOutcome::Blocked => self.rearm(idx),
+                }
+                return;
+            }
+        }
+        slot.tail = Some(TailState {
+            source,
+            chunked,
+            head: d.head,
+            keep: d.keep,
+            finished: false,
+        });
+        slot.conn.state = ConnState::Tail;
+        self.step_tail(idx, now);
+        self.rearm(idx);
+    }
+
+    fn step_tails(&mut self, now: Instant) {
+        for idx in 0..self.slots.len() {
+            let is_tail = matches!(
+                self.slots.get(idx).and_then(|s| s.as_ref()),
+                Some(slot) if slot.conn.state == ConnState::Tail
+            );
+            if is_tail {
+                self.step_tail(idx, now);
+                self.rearm(idx);
+            }
+        }
+    }
+
+    /// Advance one parked tail: emit whatever its source has ready
+    /// into the connection's write buffer and drain it. Hot: runs for
+    /// every parked watcher on every feed publish.
+    fn step_tail(&mut self, idx: usize, now: Instant) {
+        loop {
+            let Some(slot) =
+                self.slots.get_mut(idx).and_then(|s| s.as_mut())
+            else {
+                return;
+            };
+            if slot.conn.state != ConnState::Tail {
+                break;
+            }
+            if slot.conn.pending_out() > self.wbuf_cap {
+                // slow consumer: its kernel buffer and ours are both
+                // full — evict rather than buffer without bound
+                self.close_conn(idx);
+                return;
+            }
+            let Some(tail) = slot.tail.as_mut() else {
+                break;
+            };
+            if tail.finished {
+                break;
+            }
+            match tail.source.step(now) {
+                TailStep::Pending => break,
+                TailStep::Data(bytes) => {
+                    slot.conn.wbuf.extend_from_slice(&bytes);
+                }
+                TailStep::End(bytes) => {
+                    slot.conn.wbuf.extend_from_slice(&bytes);
+                    tail.finished = true;
+                    break;
+                }
+                TailStep::Respond(r) => {
+                    let keep = tail.keep
+                        && !slot.conn.eof
+                        && (slot.conn.served as usize) + 1
+                            < MAX_KEEPALIVE_REQUESTS
+                        && !r.closes_after();
+                    let head = tail.head;
+                    slot.conn.keep = keep;
+                    slot.conn.served += 1;
+                    let _ = r.write_to_opts(
+                        &mut slot.conn.wbuf,
+                        keep,
+                        head,
+                    );
+                    slot.tail = None;
+                    slot.conn.state = ConnState::WriteResponse;
+                    break;
+                }
+            }
+        }
+        let Some(slot) =
+            self.slots.get_mut(idx).and_then(|s| s.as_mut())
+        else {
+            return;
+        };
+        let state = slot.conn.state;
+        let finished = slot
+            .tail
+            .as_ref()
+            .map(|t| t.finished)
+            .unwrap_or(false);
+        match slot.conn.flush_out() {
+            WriteOutcome::Done => match state {
+                ConnState::Tail if finished => self.close_conn(idx),
+                ConnState::WriteResponse => {
+                    self.after_response_drained(idx, now)
+                }
+                _ => {}
+            },
+            WriteOutcome::Blocked => self.rearm(idx),
+            WriteOutcome::Err => self.close_conn(idx),
+        }
+    }
+
+    // ------------------------------------------------------- sweeps
+
+    /// Periodic housekeeping: reap idle keep-alive connections, 408
+    /// requests that stalled mid-arrival (slow loris), and push tail
+    /// deadlines over the line.
+    fn sweep(&mut self, now: Instant) {
+        for idx in 0..self.slots.len() {
+            let action = {
+                let Some(slot) =
+                    self.slots.get(idx).and_then(|s| s.as_ref())
+                else {
+                    continue;
+                };
+                match slot.conn.state {
+                    ConnState::ReadHeaders
+                    | ConnState::ReadBody
+                    | ConnState::KeepAliveIdle => {
+                        if let Some(start) = slot.conn.req_start {
+                            if now.duration_since(start)
+                                >= self.idle_timeout
+                            {
+                                Some(SweepAction::Timeout408)
+                            } else {
+                                None
+                            }
+                        } else if now
+                            .duration_since(slot.conn.idle_since)
+                            >= self.idle_timeout
+                        {
+                            // routine keep-alive expiry: close
+                            // silently
+                            Some(SweepAction::Close)
+                        } else {
+                            None
+                        }
+                    }
+                    ConnState::Tail => {
+                        let over_cap = slot.conn.pending_out()
+                            > self.wbuf_cap;
+                        let due = slot
+                            .tail
+                            .as_ref()
+                            .map(|t| now >= t.source.deadline())
+                            .unwrap_or(false);
+                        if over_cap {
+                            Some(SweepAction::Close)
+                        } else if due {
+                            Some(SweepAction::StepTail)
+                        } else {
+                            None
+                        }
+                    }
+                    _ => None,
+                }
+            };
+            match action {
+                None => {}
+                Some(SweepAction::Close) => self.close_conn(idx),
+                Some(SweepAction::Timeout408) => {
+                    self.answer_408(idx)
+                }
+                Some(SweepAction::StepTail) => {
+                    self.step_tail(idx, now);
+                    self.rearm(idx);
+                }
+            }
+        }
+    }
+
+    /// A request started arriving but stalled past the idle window:
+    /// answer 408 in the envelope the request line revealed, then
+    /// close.
+    fn answer_408(&mut self, idx: usize) {
+        let Some(slot) =
+            self.slots.get_mut(idx).and_then(|s| s.as_mut())
+        else {
+            return;
+        };
+        let envelope = envelope_of_path(
+            slot.conn.seen_path.as_deref().unwrap_or(""),
+        );
+        let resp =
+            error_json(envelope, 408, "Timeout", "request incomplete");
+        slot.conn.keep = false;
+        let _ = resp.write_to_opts(&mut slot.conn.wbuf, false, false);
+        slot.conn.state = ConnState::WriteResponse;
+        match slot.conn.flush_out() {
+            WriteOutcome::Done | WriteOutcome::Err => {
+                self.close_conn(idx)
+            }
+            WriteOutcome::Blocked => self.rearm(idx),
+        }
+    }
+
+    // ---------------------------------------------------- migration
+
+    /// Hand a tune request's connection to a dedicated blocking
+    /// thread — the one request shape whose handler legitimately runs
+    /// for minutes and must neither pin a pool worker nor sit in the
+    /// reactor.
+    fn migrate_tune(&mut self, idx: usize, first: Box<Request>) {
+        let Some(slot) = self.remove_slot(idx) else { return };
+        let _ = self.epoll.del(slot.conn.stream.as_raw_fd());
+        let router = Arc::clone(&self.router);
+        let idle = self.idle_timeout;
+        let Slot {
+            conn, _guard: guard, ..
+        } = slot;
+        let spawned = std::thread::Builder::new()
+            .name("submarine-tune".into())
+            .spawn(move || {
+                run_dedicated(conn, first, &router, guard, idle)
+            });
+        if spawned.is_err() {
+            // the closure never ran, so conn and guard are gone —
+            // the connection closed with them
+            crate::warnlog!(
+                "httpd",
+                "failed to spawn tune thread; dropping connection"
+            );
+        }
+    }
+
+    /// Safety hatch for legacy `Response::stream` producers, which
+    /// drive the socket themselves until the stream ends: give them a
+    /// blocking thread and let the connection close behind them.
+    fn migrate_stream(&mut self, idx: usize, d: Done) {
+        let Some(slot) = self.remove_slot(idx) else { return };
+        let _ = self.epoll.del(slot.conn.stream.as_raw_fd());
+        let Slot {
+            conn, _guard: guard, ..
+        } = slot;
+        let spawned = std::thread::Builder::new()
+            .name("submarine-stream".into())
+            .spawn(move || {
+                let _ = conn.stream.set_nonblocking(false);
+                let _ =
+                    d.resp.write_to_opts(&conn.stream, false, d.head);
+                let _ = conn
+                    .stream
+                    .shutdown(std::net::Shutdown::Both);
+                drop(guard);
+            });
+        if spawned.is_err() {
+            crate::warnlog!(
+                "httpd",
+                "failed to spawn stream thread; dropping connection"
+            );
+        }
+    }
+}
+
+/// Request shape that still gets a dedicated thread (see module docs).
+fn is_tune(req: &Request) -> bool {
+    req.method.eq_ignore_ascii_case("POST")
+        && req.path.ends_with("/experiment/tune")
+}
+
+/// Blocking serve loop for a migrated tune connection: dispatch the
+/// already-parsed first request, then keep serving whatever else
+/// arrives on the connection in place (including watches — the
+/// blocking tail driver in `Response::write_to_opts` handles them).
+fn run_dedicated(
+    conn: Conn,
+    first: Box<Request>,
+    router: &Arc<Router>,
+    guard: ConnGuard,
+    idle: Duration,
+) {
+    let _ = conn.stream.set_nonblocking(false);
+    let _ = conn.stream.set_read_timeout(Some(idle));
+    let leftover = conn.rbuf[conn.rpos..].to_vec();
+    let write_half = match conn.stream.try_clone() {
+        Ok(s) => s,
+        Err(e) => {
+            crate::warnlog!(
+                "httpd",
+                "tune hand-off failed to clone socket: {e}"
+            );
+            return; // conn + guard drop; the socket closes
+        }
+    };
+    let mut reader = BufReader::new(
+        std::io::Cursor::new(leftover).chain(conn.stream),
+    );
+    let mut served: usize = conn.served as usize;
+    let mut pending = Some(first);
+    loop {
+        let req = match pending.take() {
+            Some(r) => *r,
+            None => {
+                let mut seen_path: Option<String> = None;
+                match Request::read_next_tracked(
+                    &mut reader,
+                    &mut seen_path,
+                ) {
+                    Ok(Some(r)) => r,
+                    Ok(None) => break, // clean EOF
+                    Err(e) => {
+                        let timed_out = matches!(
+                            &e,
+                            crate::SubmarineError::Io(io) if matches!(
+                                io.kind(),
+                                std::io::ErrorKind::WouldBlock
+                                    | std::io::ErrorKind::TimedOut
+                            )
+                        );
+                        if timed_out && seen_path.is_none() {
+                            break; // idle expiry: close silently
+                        }
+                        let envelope = envelope_of_path(
+                            seen_path.as_deref().unwrap_or(""),
+                        );
+                        let resp = if timed_out {
+                            error_json(
+                                envelope,
+                                408,
+                                "Timeout",
+                                "request incomplete",
+                            )
+                        } else {
+                            error_json(
+                                envelope,
+                                400,
+                                "InvalidSpec",
+                                &e.to_string(),
+                            )
+                        };
+                        let _ = resp.write_to_opts(
+                            &write_half,
+                            false,
+                            false,
+                        );
+                        break;
+                    }
+                }
+            }
+        };
+        served += 1;
+        let head = req.method.eq_ignore_ascii_case("HEAD");
+        let resp = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| router.dispatch(&req)),
+        )
+        .unwrap_or_else(|_| Response::error(500, "handler panicked"));
+        let keep = req.wants_keep_alive()
+            && served < MAX_KEEPALIVE_REQUESTS
+            && !resp.closes_after()
+            && !resp.is_stream();
+        if resp.write_to_opts(&write_half, keep, head).is_err() {
+            break;
+        }
+        if !keep {
+            break;
+        }
+    }
+    let _ = write_half.shutdown(std::net::Shutdown::Both);
+    drop(guard);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eventfd_wakes_epoll_with_its_token() {
+        let ep = Epoll::new().unwrap();
+        let ev = EventFd::new().unwrap();
+        ep.add(ev.raw(), sys::EPOLLIN, 7).unwrap();
+        let mut events =
+            vec![sys::EpollEvent { events: 0, data: 0 }; 8];
+        assert_eq!(ep.wait(&mut events, 0), 0);
+        ev.wake();
+        ev.wake(); // coalesces into one readiness event
+        let n = ep.wait(&mut events, 1000);
+        assert_eq!(n, 1);
+        let token = events[0].data; // by-value read (packed struct)
+        assert_eq!(token, 7);
+        ev.drain();
+        assert_eq!(ep.wait(&mut events, 0), 0);
+    }
+
+    #[test]
+    fn epoll_mod_and_del_work() {
+        let ep = Epoll::new().unwrap();
+        let ev = EventFd::new().unwrap();
+        ep.add(ev.raw(), 0, 1).unwrap(); // no interest
+        ev.wake();
+        let mut events =
+            vec![sys::EpollEvent { events: 0, data: 0 }; 8];
+        assert_eq!(ep.wait(&mut events, 0), 0);
+        ep.modify(ev.raw(), sys::EPOLLIN, 2).unwrap();
+        assert_eq!(ep.wait(&mut events, 1000), 1);
+        let token = events[0].data;
+        assert_eq!(token, 2);
+        ep.del(ev.raw()).unwrap();
+        assert_eq!(ep.wait(&mut events, 0), 0);
+    }
+
+    #[test]
+    fn nofile_limit_is_queryable_and_monotonic() {
+        let cur = raise_nofile_limit(64);
+        assert!(cur >= 64);
+        // asking again for less never lowers the limit
+        assert!(raise_nofile_limit(1) >= cur.min(64));
+    }
+
+    #[test]
+    fn tune_detection_is_method_and_suffix() {
+        let post =
+            Request::synthetic("POST", "/api/v2/experiment/tune");
+        assert!(is_tune(&post));
+        let get =
+            Request::synthetic("GET", "/api/v2/experiment/tune");
+        assert!(!is_tune(&get));
+        let other = Request::synthetic("POST", "/api/v2/experiment");
+        assert!(!is_tune(&other));
+    }
+
+    #[test]
+    fn tokens_round_trip_gen_and_index() {
+        let t = token_of(0xABCD_1234, 77);
+        assert_eq!((t & 0xffff_ffff) as usize, 77);
+        assert_eq!((t >> 32) as u32, 0xABCD_1234);
+        assert!(t < TOKEN_WAKE);
+    }
+}

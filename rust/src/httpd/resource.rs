@@ -26,7 +26,10 @@
 //! [`ResourceKind::scope_index`].
 
 use super::handler::{typed, Ctx, Extract, Page};
-use super::http::{ChunkSink, Request, Response, StreamProducer};
+use super::http::{
+    chunk_frame_into, Request, Response, TailSource, TailStep,
+    CHUNK_TERMINAL,
+};
 use super::router::{
     v2_ok_head, v2_ok_raw, wrap_err, wrap_ok, Envelope, Router,
 };
@@ -725,100 +728,171 @@ fn change_line(kind: &dyn ResourceKind, c: &Change) -> Vec<u8> {
     line
 }
 
-/// Long-poll: block until at least one matching event lands past
-/// `since` (or the window closes), then answer one enveloped batch
-/// with the `resource_version` to resume from.
-fn watch_long_poll(
-    store: &MetaStore,
-    ns: &str,
-    prefix: Option<&str>,
-    kind: &dyn ResourceKind,
-    since: u64,
-    timeout: Duration,
-) -> crate::Result<Json> {
-    let deadline = Instant::now() + timeout;
-    let mut cursor = since;
-    let mut events: Vec<Json> = Vec::new();
-    loop {
-        let now = Instant::now();
-        let remaining = if now >= deadline {
-            Duration::from_millis(0)
-        } else {
-            deadline - now
-        };
-        let batch =
-            store.wait_changes(ns, cursor, remaining, WATCH_BATCH)?;
-        if batch.is_empty() {
-            break; // window closed
-        }
-        cursor = batch.last().map(|c| c.rev).unwrap_or(cursor);
-        for c in &batch {
-            if let Some(p) = prefix {
-                if !c.key.starts_with(p) {
-                    continue;
-                }
-            }
-            events.push(change_json(kind, c));
-        }
-        if !events.is_empty() || Instant::now() >= deadline {
-            break;
-        }
-    }
-    Ok(Json::obj()
-        .set("events", Json::Arr(events))
-        .set("resource_version", Json::Num(cursor as f64)))
+/// A watch parked in the reactor: both the long-poll and the chunked
+/// stream flavor are [`TailSource`]s stepped on feed publishes (never
+/// blocking the reactor), so 10k open watches cost 10k reactor slots,
+/// not 10k threads. On a dedicated (tune) connection the blocking
+/// driver in `Response::write_to_opts` steps the same source.
+struct WatchTail {
+    store: Arc<MetaStore>,
+    ns: &'static str,
+    prefix: Option<String>,
+    kind: Arc<dyn ResourceKind>,
+    cursor: u64,
+    deadline: Instant,
+    /// Chunked stream (`&stream=1`) vs. long-poll.
+    stream: bool,
+    /// Long-poll events accumulated across steps.
+    events: Vec<Json>,
 }
 
-/// Chunked stream: one JSON line per event as it happens, a terminal
-/// `BOOKMARK` line carrying the resume revision, and an `ERROR` line
-/// (e.g. 410 after feed compaction) if the feed position is lost
-/// mid-stream.
-fn stream_watch(
-    store: &MetaStore,
-    ns: &str,
-    prefix: Option<&str>,
-    kind: &dyn ResourceKind,
-    since: u64,
-    timeout: Duration,
-    sink: &mut ChunkSink<'_>,
-) -> std::io::Result<()> {
-    let deadline = Instant::now() + timeout;
-    let mut cursor = since;
-    loop {
-        let now = Instant::now();
-        if now >= deadline {
-            break;
-        }
-        match store.wait_changes(ns, cursor, deadline - now, WATCH_BATCH)
-        {
-            Err(e) => {
-                let j = Json::obj()
-                    .set("type", Json::Str("ERROR".into()))
-                    .set("code", Json::Num(e.http_status() as f64))
-                    .set("message", Json::Str(e.to_string()));
-                sink.chunk(format!("{}\n", j.dump()).as_bytes())?;
-                return Ok(());
-            }
-            Ok(batch) => {
-                if batch.is_empty() {
-                    break; // window closed
-                }
-                cursor = batch.last().map(|c| c.rev).unwrap_or(cursor);
-                for c in &batch {
-                    if let Some(p) = prefix {
-                        if !c.key.starts_with(p) {
-                            continue;
-                        }
-                    }
-                    sink.chunk(&change_line(kind, c))?;
-                }
-            }
+impl WatchTail {
+    fn matches(&self, key: &str) -> bool {
+        match &self.prefix {
+            Some(p) => key.starts_with(p.as_str()),
+            None => true,
         }
     }
-    let bookmark = Json::obj()
-        .set("type", Json::Str("BOOKMARK".into()))
-        .set("resource_version", Json::Num(cursor as f64));
-    sink.chunk(format!("{}\n", bookmark.dump()).as_bytes())
+
+    /// Stream mode: one framed JSON line per event as it happens, a
+    /// terminal `BOOKMARK` line carrying the resume revision, and an
+    /// `ERROR` line (e.g. 410 after feed compaction) if the feed
+    /// position is lost mid-stream.
+    fn step_stream(&mut self, now: Instant) -> TailStep {
+        let mut out: Vec<u8> = Vec::new();
+        loop {
+            let batch = match self.store.changes_since(
+                self.ns,
+                self.cursor,
+                WATCH_BATCH,
+            ) {
+                Ok(b) => b,
+                Err(e) => {
+                    let j = Json::obj()
+                        .set("type", Json::Str("ERROR".into()))
+                        .set(
+                            "code",
+                            Json::Num(e.http_status() as f64),
+                        )
+                        .set("message", Json::Str(e.to_string()));
+                    chunk_frame_into(
+                        &mut out,
+                        format!("{}\n", j.dump()).as_bytes(),
+                    );
+                    out.extend_from_slice(CHUNK_TERMINAL);
+                    return TailStep::End(out);
+                }
+            };
+            if batch.is_empty() {
+                break;
+            }
+            let full = batch.len() == WATCH_BATCH;
+            self.cursor =
+                batch.last().map(|c| c.rev).unwrap_or(self.cursor);
+            for c in &batch {
+                if self.matches(&c.key) {
+                    chunk_frame_into(
+                        &mut out,
+                        &change_line(&*self.kind, c),
+                    );
+                }
+            }
+            if !full {
+                break;
+            }
+        }
+        if now >= self.deadline {
+            let bookmark = Json::obj()
+                .set("type", Json::Str("BOOKMARK".into()))
+                .set(
+                    "resource_version",
+                    Json::Num(self.cursor as f64),
+                );
+            chunk_frame_into(
+                &mut out,
+                format!("{}\n", bookmark.dump()).as_bytes(),
+            );
+            out.extend_from_slice(CHUNK_TERMINAL);
+            return TailStep::End(out);
+        }
+        if out.is_empty() {
+            TailStep::Pending
+        } else {
+            TailStep::Data(out)
+        }
+    }
+
+    /// Long-poll mode: resolve into one enveloped batch as soon as at
+    /// least one matching event lands past `since` (or the window
+    /// closes), with the `resource_version` to resume from.
+    fn step_poll(&mut self, now: Instant) -> TailStep {
+        loop {
+            let batch = match self.store.changes_since(
+                self.ns,
+                self.cursor,
+                WATCH_BATCH,
+            ) {
+                Ok(b) => b,
+                Err(e) => {
+                    return TailStep::Respond(Box::new(wrap_err(
+                        Envelope::V2,
+                        &e,
+                    )))
+                }
+            };
+            if batch.is_empty() {
+                break;
+            }
+            let full = batch.len() == WATCH_BATCH;
+            self.cursor =
+                batch.last().map(|c| c.rev).unwrap_or(self.cursor);
+            for c in &batch {
+                if self.matches(&c.key) {
+                    self.events.push(change_json(&*self.kind, c));
+                }
+            }
+            if !self.events.is_empty() || !full {
+                break;
+            }
+        }
+        if !self.events.is_empty() || now >= self.deadline {
+            let events = std::mem::take(&mut self.events);
+            let result = Json::obj()
+                .set("events", Json::Arr(events))
+                .set(
+                    "resource_version",
+                    Json::Num(self.cursor as f64),
+                );
+            return TailStep::Respond(Box::new(wrap_ok(
+                Envelope::V2,
+                result,
+            )));
+        }
+        TailStep::Pending
+    }
+}
+
+impl TailSource for WatchTail {
+    fn step(&mut self, now: Instant) -> TailStep {
+        if self.stream {
+            self.step_stream(now)
+        } else {
+            self.step_poll(now)
+        }
+    }
+
+    fn deadline(&self) -> Instant {
+        self.deadline
+    }
+
+    fn wait(&self, max: Duration) {
+        let now = Instant::now();
+        let until_deadline =
+            self.deadline.saturating_duration_since(now);
+        let _ = self
+            .store
+            .wait_rev_above(self.cursor, max.min(until_deadline));
+    }
 }
 
 fn watch_response(
@@ -840,34 +914,23 @@ fn watch_response(
     };
     // default: only future events (the client just listed)
     let since = params.since.unwrap_or_else(|| s.store.current_rev());
+    let tail = WatchTail {
+        store: Arc::clone(&s.store),
+        ns: kind.ns(),
+        prefix,
+        kind: Arc::clone(kind),
+        cursor: since,
+        deadline: Instant::now() + params.timeout,
+        stream: params.stream,
+        events: Vec::new(),
+    };
     if params.stream {
-        let store = Arc::clone(&s.store);
-        let ns = kind.ns().to_string();
-        let k = Arc::clone(kind);
-        let timeout = params.timeout;
-        let producer: StreamProducer = Box::new(move |sink| {
-            stream_watch(
-                &store,
-                &ns,
-                prefix.as_deref(),
-                &*k,
-                since,
-                timeout,
-                sink,
-            )
-        });
-        Response::stream(200, "application/x-json-stream", producer)
+        Response::tail_stream(
+            200,
+            "application/x-json-stream",
+            Box::new(tail),
+        )
     } else {
-        match watch_long_poll(
-            &s.store,
-            kind.ns(),
-            prefix.as_deref(),
-            &**kind,
-            since,
-            params.timeout,
-        ) {
-            Ok(result) => wrap_ok(Envelope::V2, result),
-            Err(e) => wrap_err(Envelope::V2, &e),
-        }
+        Response::tail_poll(Box::new(tail))
     }
 }

@@ -1,26 +1,25 @@
 //! The Submarine server (paper Fig. 1 control plane): wires every core
-//! service behind the REST API and serves it from a **bounded worker
-//! pool** fed by the accept loop (ISSUE 5; the previous design spawned
-//! one OS thread per connection). Beyond [`MAX_CONNECTIONS`] live
+//! service behind the REST API and serves it from an **epoll readiness
+//! reactor** (ISSUE 7; previous designs spawned one OS thread per
+//! connection, then multiplexed a bounded pool over blocking sockets).
+//! A single reactor thread owns every connection and drives the
+//! per-connection state machine in [`super::conn`]; complete requests
+//! are executed on a small worker pool and written back on
+//! writability. Beyond [`ServerOptions::max_connections`] live
 //! connections, new ones are shed with 503 rather than queued.
 //!
-//! Connections are HTTP/1.1 keep-alive. A pool worker serves a
-//! connection's requests back-to-back while data keeps arriving; a
-//! connection that goes quiet is *parked* back onto the queue so the
-//! worker can serve others, and resumes on a later slice (workers
-//! multiplex idle connections instead of pinning a thread each). The
-//! two long-lived request shapes — `?watch=1` long-polls and
-//! `&stream=1` chunked streams — migrate off the pool onto dedicated
-//! threads the moment they are recognized, so parked watchers can
-//! never starve request workers. Each connection owns a reusable read
-//! buffer (its `BufReader`) and write buffer: a framed response is
-//! assembled once and hits the socket as a single `write`.
+//! Connections are HTTP/1.1 keep-alive with partial-read /
+//! partial-write resumption over reusable per-connection buffers.
+//! `?watch=1` long-polls and `&stream=1` chunked streams park in the
+//! reactor as cheap tail entries (no thread each); only the
+//! long-running synchronous `POST .../experiment/tune` handler still
+//! migrates to a dedicated thread. See [`super::reactor`] for the
+//! event-loop internals.
 
 use super::http::{Request, Response};
-use super::router::{envelope_of_path, error_json, Router};
+use super::reactor::Reactor;
+use super::router::Router;
 use super::v2::{build_api, ApiConfig};
-use crate::analysis::lock_order::LockRank;
-use crate::analysis::tracker;
 use crate::environment::EnvironmentManager;
 use crate::experiment::manager::ExperimentManager;
 use crate::experiment::monitor::ExperimentMonitor;
@@ -28,12 +27,10 @@ use crate::model::ModelRegistry;
 use crate::orchestrator::Submitter;
 use crate::storage::{MetaStore, MetricStore};
 use crate::template::TemplateManager;
-use std::collections::VecDeque;
-use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard};
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Duration;
 
 /// All core services (paper §3.2: "Submarine server consists of several
 /// core services"). Examples/tests may use this directly without HTTP.
@@ -128,24 +125,18 @@ impl Services {
 
 /// Hard cap on requests served per connection (bounds one client's hold
 /// on the pool).
-const MAX_KEEPALIVE_REQUESTS: usize = 1024;
+pub(crate) const MAX_KEEPALIVE_REQUESTS: usize = 1024;
 
-/// Default cap on concurrent connections; beyond it, new connections
-/// are shed immediately with 503 rather than queued behind busy ones.
-const MAX_CONNECTIONS: usize = 256;
-
-/// How long a keep-alive connection may sit idle between requests
-/// before the server reclaims it.
-const IDLE_TIMEOUT: Duration = Duration::from_secs(5);
-
-/// How long a worker lingers on a connection waiting for its next
-/// request before parking it back onto the queue. Small enough that a
-/// worker stuck behind quiet connections frees up quickly; large
-/// enough that a request/response client usually stays on one worker.
-const PARK_POLL: Duration = Duration::from_millis(20);
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(default)
+}
 
 /// Sizing and shedding knobs for [`Server`] (tests pin them; the CLI
-/// uses the defaults).
+/// maps flags onto them; the env defaults below cover everything else).
 #[derive(Debug, Clone)]
 pub struct ServerOptions {
     /// Request-worker pool size. `None` resolves `SUBMARINE_HTTP_WORKERS`
@@ -153,14 +144,37 @@ pub struct ServerOptions {
     /// few-core runners), then `available_parallelism`.
     pub workers: Option<usize>,
     /// Live-connection cap above which new connections get 503.
+    /// Default `SUBMARINE_HTTP_MAX_CONNS`, else 10240 — parked watch
+    /// streams are cheap reactor entries now, so the cap is an fd
+    /// budget, not a thread budget.
     pub max_connections: usize,
+    /// Idle window: keep-alive connections quiet this long are
+    /// reaped; a request trickling slower than this gets 408.
+    /// Default `SUBMARINE_HTTP_IDLE_MS`, else 5000.
+    pub idle_timeout: Duration,
+    /// Per-connection outbound buffer cap. A parked watch consumer
+    /// that stops reading while events accumulate past this many
+    /// buffered bytes is evicted. Default `SUBMARINE_HTTP_WBUF_CAP`,
+    /// else 1 MiB.
+    pub write_buf_cap: usize,
 }
 
 impl Default for ServerOptions {
     fn default() -> ServerOptions {
         ServerOptions {
             workers: None,
-            max_connections: MAX_CONNECTIONS,
+            max_connections: env_usize(
+                "SUBMARINE_HTTP_MAX_CONNS",
+                10_240,
+            ),
+            idle_timeout: Duration::from_millis(env_usize(
+                "SUBMARINE_HTTP_IDLE_MS",
+                5_000,
+            ) as u64),
+            write_buf_cap: env_usize(
+                "SUBMARINE_HTTP_WBUF_CAP",
+                1 << 20,
+            ),
         }
     }
 }
@@ -182,6 +196,7 @@ fn default_workers() -> usize {
 pub struct Server {
     router: Arc<Router>,
     listener: TcpListener,
+    store: Arc<MetaStore>,
     active: Arc<AtomicUsize>,
     stop: Arc<AtomicBool>,
     local_addr: std::net::SocketAddr,
@@ -189,7 +204,7 @@ pub struct Server {
 }
 
 /// Decrements the live-connection count even if a handler panics.
-struct ConnGuard(Arc<AtomicUsize>);
+pub(crate) struct ConnGuard(pub(crate) Arc<AtomicUsize>);
 
 impl Drop for ConnGuard {
     fn drop(&mut self) {
@@ -224,20 +239,25 @@ impl Server {
         Self::bind_with_options(services, port, cfg, ServerOptions::default())
     }
 
-    /// Bind with explicit pool sizing (saturation tests pin `workers`
-    /// and `max_connections` instead of relying on the machine shape).
+    /// Bind with explicit reactor sizing (saturation tests pin
+    /// `workers` and `max_connections` instead of relying on the
+    /// machine shape).
     pub fn bind_with_options(
         services: Arc<Services>,
         port: u16,
         cfg: &ApiConfig,
         opts: ServerOptions,
     ) -> crate::Result<Server> {
+        // the reactor's feed pump needs the store after `services`
+        // moves into the router
+        let store = Arc::clone(&services.store);
         let router = build_api(services, cfg);
         let listener = TcpListener::bind(("127.0.0.1", port))?;
         let local_addr = listener.local_addr()?;
         Ok(Server {
             router: Arc::new(router),
             listener,
+            store,
             active: Arc::new(AtomicUsize::new(0)),
             stop: Arc::new(AtomicBool::new(false)),
             local_addr,
@@ -249,77 +269,32 @@ impl Server {
         self.local_addr.port()
     }
 
-    /// Handle for stopping the accept loop from another thread.
+    /// Handle for stopping the reactor from another thread (set it,
+    /// then make one dummy connection to wake the epoll wait).
     pub fn stopper(&self) -> Arc<AtomicBool> {
         Arc::clone(&self.stop)
     }
 
-    /// Run the accept loop until stopped (blocking): spin up the worker
-    /// pool, then feed it accepted connections.
+    /// Run the reactor until stopped (blocking).
     pub fn serve(&self) -> crate::Result<()> {
         let workers = self.opts.workers.unwrap_or_else(default_workers);
         crate::info!(
             "httpd",
-            "listening on {} ({workers} request workers)",
+            "listening on {} (epoll reactor, {workers} request workers)",
             self.local_addr
         );
-        self.listener.set_nonblocking(false)?;
-        let queue = Arc::new(ConnQueue::default());
-        let mut pool = Vec::with_capacity(workers);
-        for i in 0..workers {
-            let worker_queue = Arc::clone(&queue);
-            let router = Arc::clone(&self.router);
-            let spawned = std::thread::Builder::new()
-                .name(format!("submarine-worker-{i}"))
-                .spawn(move || worker_loop(&router, &worker_queue));
-            match spawned {
-                Ok(h) => pool.push(h),
-                Err(e) => {
-                    // unwind the partial pool before reporting failure
-                    queue.close();
-                    for h in pool {
-                        let _ = h.join();
-                    }
-                    return Err(crate::SubmarineError::Runtime(
-                        format!("spawning request worker {i}: {e}"),
-                    ));
-                }
-            }
-        }
-        for conn in self.listener.incoming() {
-            if self.stop.load(Ordering::Relaxed) {
-                break;
-            }
-            match conn {
-                Ok(stream) => {
-                    if self.active.load(Ordering::Relaxed)
-                        >= self.opts.max_connections
-                    {
-                        // Shed instead of queueing behind busy
-                        // connections: a prompt 503 beats an unbounded
-                        // backlog. The lingering close runs on its own
-                        // short-lived thread so a slow peer cannot
-                        // stall the accept loop at exactly the moment
-                        // the server is overloaded.
-                        let _ = std::thread::Builder::new()
-                            .name("submarine-shed".into())
-                            .spawn(move || shed_connection(stream));
-                        continue;
-                    }
-                    self.active.fetch_add(1, Ordering::Relaxed);
-                    let guard = ConnGuard(Arc::clone(&self.active));
-                    queue.push(Conn::new(stream, guard));
-                }
-                Err(e) => {
-                    crate::warnlog!("httpd", "accept error: {e}");
-                }
-            }
-        }
-        queue.close();
-        for h in pool {
-            let _ = h.join();
-        }
-        Ok(())
+        let reactor = Reactor::new(
+            self.listener.try_clone()?,
+            Arc::clone(&self.router),
+            Arc::clone(&self.store),
+            Arc::clone(&self.active),
+            Arc::clone(&self.stop),
+            workers,
+            self.opts.max_connections,
+            self.opts.idle_timeout,
+            self.opts.write_buf_cap,
+        )?;
+        reactor.run()
     }
 
     /// Serve on a background thread; returns a join handle. Stop by
@@ -339,8 +314,11 @@ impl Server {
 /// sending RST over unread input, which would discard the 503 in
 /// flight. Transport-layer errors like this one use the flat v1 error
 /// envelope: the request is never parsed, so the path (and thus the
-/// API version) is unknown.
-fn shed_connection(stream: TcpStream) {
+/// API version) is unknown. Runs on a short-lived thread with the
+/// socket still in blocking mode (accepted sockets do not inherit the
+/// listener's nonblocking flag on Linux), so the read timeout below
+/// bounds the drain.
+pub(crate) fn shed_connection(stream: TcpStream) {
     use std::io::Read;
     let _ = stream.set_read_timeout(Some(
         std::time::Duration::from_millis(250),
@@ -357,351 +335,6 @@ fn shed_connection(stream: TcpStream) {
         }
     }
     let _ = stream.shutdown(std::net::Shutdown::Both);
-}
-
-// ------------------------------------------------------- connection pool
-
-/// Connections waiting for a worker, in two lanes: `fresh` holds
-/// connections with work expected *now* (new accepts, and conns that
-/// just finished a slice with data pending), `parked` holds quiet
-/// keep-alive connections being revisited round-robin. Workers drain
-/// `fresh` first, so a new request never queues behind the 20ms
-/// readiness polls of K idle connections — idle-conn polling only
-/// happens when there is nothing better to do.
-#[derive(Default)]
-struct Lanes {
-    fresh: VecDeque<Conn>,
-    parked: VecDeque<Conn>,
-}
-
-#[derive(Default)]
-struct ConnQueue {
-    q: Mutex<Lanes>,
-    cv: Condvar,
-    stopping: AtomicBool,
-}
-
-impl ConnQueue {
-    /// Lane guard + its lock-order token. Recovers from poisoning: a
-    /// worker panicking mid-push must not brick the whole pool.
-    fn lanes(&self) -> (MutexGuard<'_, Lanes>, tracker::Held) {
-        let held = tracker::acquired(LockRank::ConnQueue, 0);
-        (self.q.lock().unwrap_or_else(|e| e.into_inner()), held)
-    }
-
-    fn push(&self, conn: Conn) {
-        let (mut q, _held) = self.lanes();
-        q.fresh.push_back(conn);
-        drop(q);
-        self.cv.notify_one();
-    }
-
-    fn park(&self, conn: Conn) {
-        let (mut q, _held) = self.lanes();
-        q.parked.push_back(conn);
-        drop(q);
-        self.cv.notify_one();
-    }
-
-    fn pop(&self) -> Option<Conn> {
-        let (mut q, _held) = self.lanes();
-        loop {
-            if self.stopping.load(Ordering::Relaxed) {
-                // shutdown: drop whatever is still queued — the
-                // sockets close as the queue drains out of scope
-                q.fresh.clear();
-                q.parked.clear();
-                return None;
-            }
-            if let Some(c) = q.fresh.pop_front() {
-                return Some(c);
-            }
-            if let Some(c) = q.parked.pop_front() {
-                return Some(c);
-            }
-            q = self
-                .cv
-                .wait(q)
-                .unwrap_or_else(|e| e.into_inner());
-        }
-    }
-
-    fn close(&self) {
-        self.stopping.store(true, Ordering::Relaxed);
-        self.cv.notify_all();
-    }
-}
-
-/// One live connection and its reusable per-connection buffers: the
-/// `BufReader` (read buffer) spans the whole connection so pipelined
-/// read-ahead survives parking, and `wbuf` is the write buffer every
-/// framed response is assembled into before one `write_all`.
-struct Conn {
-    reader: BufReader<TcpStream>,
-    wbuf: Vec<u8>,
-    served: usize,
-    idle_since: Instant,
-    _guard: ConnGuard,
-}
-
-/// What a worker did with its current slice of a connection.
-enum Slice {
-    /// Connection finished (closed, errored, or request cap reached).
-    Done,
-    /// Quiet but alive: back onto the queue for a later slice.
-    Park(Conn),
-    /// Handed off to a dedicated watch thread.
-    Migrated,
-}
-
-impl Conn {
-    fn new(stream: TcpStream, guard: ConnGuard) -> Conn {
-        let _ = stream.set_nodelay(true);
-        Conn {
-            reader: BufReader::new(stream),
-            wbuf: Vec::with_capacity(1024),
-            served: 0,
-            idle_since: Instant::now(),
-            _guard: guard,
-        }
-    }
-
-    fn stream(&self) -> &TcpStream {
-        self.reader.get_ref()
-    }
-
-    /// Write one response: streams go straight to the socket (each
-    /// chunk must flush as it happens); framed responses are built in
-    /// the reusable write buffer and sent with a single `write_all`.
-    fn write_response(
-        &mut self,
-        resp: &Response,
-        keep: bool,
-        head_only: bool,
-    ) -> std::io::Result<()> {
-        if resp.is_stream() {
-            return resp.write_to_opts(self.reader.get_ref(), keep, head_only);
-        }
-        self.wbuf.clear();
-        resp.write_to_opts(&mut self.wbuf, keep, head_only)?;
-        let mut stream = self.reader.get_ref();
-        stream.write_all(&self.wbuf)
-    }
-
-    fn shutdown(&self) {
-        let _ = self.stream().shutdown(std::net::Shutdown::Both);
-    }
-}
-
-/// Request shapes that migrate off the worker pool to a dedicated
-/// thread: long-lived watches/streams, and the known-long synchronous
-/// handlers (a tune run submits and awaits whole child experiments —
-/// minutes of wall time that must not pin a pool worker and
-/// head-of-line block every other request).
-fn is_long_request(req: &Request) -> bool {
-    let flagged = |name: &str| {
-        matches!(
-            req.query.get(name).map(String::as_str),
-            Some("1") | Some("true")
-        )
-    };
-    flagged("watch")
-        || flagged("stream")
-        || (req.method.eq_ignore_ascii_case("POST")
-            && req.path.ends_with("/experiment/tune"))
-}
-
-fn worker_loop(router: &Arc<Router>, queue: &Arc<ConnQueue>) {
-    while let Some(conn) = queue.pop() {
-        match serve_slice(router, conn) {
-            Slice::Park(conn) => queue.park(conn),
-            Slice::Done | Slice::Migrated => {}
-        }
-    }
-}
-
-/// Serve one slice of a connection: requests back-to-back while data
-/// is ready, then park. The park/idle split preserves the previous
-/// semantics — "client sent nothing for IDLE_TIMEOUT" closes silently,
-/// a timeout *mid-request* answers 408.
-fn serve_slice(router: &Arc<Router>, mut conn: Conn) -> Slice {
-    // Readiness of the next request, decoupled from the `fill_buf`
-    // borrow so the connection itself stays usable in the outcomes.
-    enum Ready {
-        Eof,
-        Data,
-        Quiet,
-        Dead,
-    }
-    let _ = conn.stream().set_read_timeout(Some(PARK_POLL));
-    loop {
-        let ready = match conn.reader.fill_buf() {
-            Ok(buf) if buf.is_empty() => Ready::Eof, // clean EOF
-            Ok(_) => Ready::Data,
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    std::io::ErrorKind::WouldBlock
-                        | std::io::ErrorKind::TimedOut
-                ) =>
-            {
-                Ready::Quiet
-            }
-            Err(_) => Ready::Dead,
-        };
-        match ready {
-            Ready::Data => {}
-            Ready::Eof | Ready::Dead => {
-                conn.shutdown();
-                return Slice::Done;
-            }
-            Ready::Quiet => {
-                if conn.idle_since.elapsed() >= IDLE_TIMEOUT {
-                    // routine keep-alive expiry: close silently
-                    conn.shutdown();
-                    return Slice::Done;
-                }
-                return Slice::Park(conn);
-            }
-        }
-        // A request is arriving: from here reads may block up to the
-        // idle window so a trickled body times out into a 408, not a
-        // spurious park.
-        let _ = conn.stream().set_read_timeout(Some(IDLE_TIMEOUT));
-        match next_request(&mut conn, router) {
-            Next::Continue => {
-                conn.idle_since = Instant::now();
-                let _ = conn.stream().set_read_timeout(Some(PARK_POLL));
-            }
-            Next::Close => {
-                conn.shutdown();
-                return Slice::Done;
-            }
-            Next::Migrate(req) => {
-                let router = Arc::clone(router);
-                match std::thread::Builder::new()
-                    .name("submarine-watch".into())
-                    .spawn(move || watch_conn(&router, conn, req))
-                {
-                    Ok(_) => return Slice::Migrated,
-                    Err(_) => {
-                        // can't spawn: the closure never ran, so both
-                        // conn and req are gone — nothing safe to
-                        // recover; the connection closes with them
-                        crate::warnlog!(
-                            "httpd",
-                            "failed to spawn watch thread; dropping \
-                             connection"
-                        );
-                        return Slice::Done;
-                    }
-                }
-            }
-        }
-    }
-}
-
-enum Next {
-    /// Response written, keep-alive continues.
-    Continue,
-    /// Connection is finished (close requested, error, cap).
-    Close,
-    /// A watch/stream request: hand the connection to a dedicated
-    /// thread with this request still pending dispatch.
-    Migrate(Request),
-}
-
-/// Read and serve exactly one request off the connection.
-fn next_request(conn: &mut Conn, router: &Router) -> Next {
-    let mut seen_path: Option<String> = None;
-    match Request::read_next_tracked(&mut conn.reader, &mut seen_path) {
-        Ok(None) => Next::Close, // peer closed between requests
-        Ok(Some(req)) => {
-            if is_long_request(&req) {
-                return Next::Migrate(req);
-            }
-            dispatch_one(conn, router, &req)
-        }
-        Err(e) => {
-            // The request started arriving but didn't finish in time
-            // (trickled body) or didn't parse. The request line may
-            // already have revealed which API version the client
-            // speaks — answer in that envelope rather than defaulting
-            // to the flat v1 shape.
-            let timed_out = matches!(
-                &e,
-                crate::SubmarineError::Io(io) if matches!(
-                    io.kind(),
-                    std::io::ErrorKind::WouldBlock
-                        | std::io::ErrorKind::TimedOut
-                )
-            );
-            let envelope =
-                envelope_of_path(seen_path.as_deref().unwrap_or(""));
-            let resp = if timed_out {
-                error_json(envelope, 408, "Timeout", "request incomplete")
-            } else {
-                error_json(envelope, 400, "InvalidSpec", &e.to_string())
-            };
-            let _ = conn.write_response(&resp, false, false);
-            Next::Close
-        }
-    }
-}
-
-/// Dispatch one parsed request and write its response.
-fn dispatch_one(conn: &mut Conn, router: &Router, req: &Request) -> Next {
-    let resp = router.dispatch(req);
-    // A streaming response (watch) owns the socket until it ends and
-    // always closes — its length is unframed.
-    let keep = req.wants_keep_alive()
-        && conn.served + 1 < MAX_KEEPALIVE_REQUESTS
-        && !resp.is_stream();
-    let head_only = req.method.eq_ignore_ascii_case("HEAD");
-    conn.served += 1;
-    if conn.write_response(&resp, keep, head_only).is_err() || !keep {
-        return Next::Close;
-    }
-    Next::Continue
-}
-
-/// Dedicated lane for long requests (`?watch=1` / `&stream=1` /
-/// tune): the first (already parsed) long request dispatches here,
-/// and the connection then keeps its own thread for the rest of its
-/// life — long-lived parked watchers and long synchronous handlers
-/// never occupy a pool worker. Plain requests arriving later on the
-/// same connection are served here too.
-fn watch_conn(router: &Arc<Router>, mut conn: Conn, first: Request) {
-    let _ = conn.stream().set_read_timeout(Some(IDLE_TIMEOUT));
-    match dispatch_one(&mut conn, router, &first) {
-        Next::Close | Next::Migrate(_) => {
-            conn.shutdown();
-            return;
-        }
-        Next::Continue => {}
-    }
-    loop {
-        // Idle window first: separates "client sent nothing" (close
-        // silently) from a timeout mid-request (408 inside
-        // next_request).
-        match conn.reader.fill_buf() {
-            Ok(buf) if buf.is_empty() => break, // clean EOF
-            Ok(_) => {}
-            Err(_) => break, // idle timeout or dead socket
-        }
-        match next_request(&mut conn, router) {
-            Next::Continue => {}
-            Next::Close => break,
-            // already on a dedicated thread: dispatch in place
-            Next::Migrate(req) => {
-                match dispatch_one(&mut conn, router, &req) {
-                    Next::Continue => {}
-                    _ => break,
-                }
-            }
-        }
-    }
-    conn.shutdown();
 }
 
 /// Build the default-config router (v1 compat + v2). Kept for direct

@@ -1201,6 +1201,30 @@ impl MetaStore {
         }
     }
 
+    /// Block until the published revision rises above `rev` or `wait`
+    /// elapses; returns the current published revision either way.
+    /// This is the reactor's wakeup primitive: its feed pump sleeps
+    /// here and nudges the event loop whenever *any* namespace
+    /// publishes, instead of one blocked thread per parked watcher.
+    pub fn wait_rev_above(&self, rev: u64, wait: Duration) -> u64 {
+        let deadline = Instant::now() + wait;
+        let mut feed = self.feed_lock();
+        loop {
+            if feed.published > rev {
+                return feed.published;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return feed.published;
+            }
+            let (g, _) = self
+                .feed_cv
+                .wait_timeout(feed.guard, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            feed.guard = g;
+        }
+    }
+
     /// Record the WAL line while the shard lock is held (so per-key WAL
     /// order matches memory order). `None` means the store is volatile
     /// (the caller skipped serializing a record nobody would read).

@@ -92,6 +92,18 @@ pub fn bench(min_iters: usize, min_secs: f64, mut f: impl FnMut()) -> Stats {
 /// merge by `op`: bench binaries run sequentially and each read-
 /// modify-writes the shared file.
 pub fn record_result(op: &str, baseline_secs: f64, optimized_secs: f64) {
+    record_result_to("BENCH_5.json", op, baseline_secs, optimized_secs)
+}
+
+/// Like [`record_result`] but into an explicit results file — each PR's
+/// headline bench writes its own `BENCH_N.json`, and the CI bench gate
+/// globs `BENCH_*.json` so new files are picked up automatically.
+pub fn record_result_to(
+    file: &str,
+    op: &str,
+    baseline_secs: f64,
+    optimized_secs: f64,
+) {
     if !smoke() {
         return;
     }
@@ -100,7 +112,7 @@ pub fn record_result(op: &str, baseline_secs: f64, optimized_secs: f64) {
         .unwrap_or_else(|_| {
             std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..")
         })
-        .join("BENCH_5.json");
+        .join(file);
     let mut results: Vec<crate::util::json::Json> =
         match std::fs::read_to_string(&path)
             .ok()

@@ -1,7 +1,8 @@
-//! Integration tests for the serving hot path (ISSUE 5): worker-pool
-//! saturation behavior (parked watchers must not starve request
-//! workers; the 503 shed still triggers at the connection cap), the
-//! HEAD fast path over the cached encoded body, and the `Arc<Doc>`
+//! Integration tests for the serving hot path (ISSUE 5, reworked for
+//! the ISSUE 7 reactor): saturation behavior (parked watchers must not
+//! starve request workers; the 503 shed still triggers at the
+//! connection cap), C10k+ watch fan-out on the epoll reactor, the HEAD
+//! fast path over the cached encoded body, and the `Arc<Doc>`
 //! no-torn-reads guarantee under racing conditional writers.
 
 use std::io::{BufRead, BufReader, Read, Write};
@@ -112,6 +113,7 @@ fn parked_watchers_do_not_starve_request_workers() {
     let (port, stop, handle) = start_with(ServerOptions {
         workers: Some(2),
         max_connections: 32,
+        ..Default::default()
     });
 
     // 3 long-polls + 1 chunked stream, all parked for several seconds
@@ -142,6 +144,107 @@ fn parked_watchers_do_not_starve_request_workers() {
     shutdown(port, stop, handle);
 }
 
+/// The C10k claim, end to end: hold 10k concurrently open `?watch=1`
+/// chunked streams as parked reactor entries (no thread each), publish
+/// one event, and assert every watcher's stream carries it — while
+/// plain GETs keep being serviced by the 2-worker pool throughout.
+/// `SUBMARINE_FANOUT_WATCHERS` overrides the watcher count (the TSan
+/// job shrinks it); the count also self-caps to the fd budget
+/// `raise_nofile_limit` can actually obtain.
+#[test]
+fn fanout_10k_watchers_all_receive_event_and_gets_stay_serviced() {
+    let want: usize = std::env::var("SUBMARINE_FANOUT_WATCHERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10_000);
+    // each watcher costs two fds in this process (client + server end)
+    let effective = submarine::httpd::reactor::raise_nofile_limit(
+        (want as u64) * 2 + 1024,
+    );
+    let budget = ((effective.saturating_sub(1024)) / 2) as usize;
+    let n = want.min(budget).max(1);
+    if n < want {
+        eprintln!(
+            "fanout: fd limit {effective} caps watchers at {n} \
+             (wanted {want})"
+        );
+    }
+
+    let (port, stop, handle) = start_with(ServerOptions {
+        workers: Some(2),
+        max_connections: n + 64,
+        ..Default::default()
+    });
+
+    // `since=0` pins the cursor before any event, so a watcher
+    // registered after the POST still sees it — no startup race.
+    let mut watchers = Vec::with_capacity(n);
+    for _ in 0..n {
+        let stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .unwrap();
+        write!(
+            &stream,
+            "GET /api/v2/template?watch=1&stream=1&since=0&\
+             timeout_ms=30000 HTTP/1.1\r\nhost: x\r\n\r\n"
+        )
+        .unwrap();
+        watchers.push(stream);
+    }
+
+    // plain GETs answered while all watchers are parked
+    for _ in 0..10 {
+        let (status, _, _) = plain_get(port, "/api/v2/cluster");
+        assert_eq!(status, 200);
+    }
+
+    // one event, fanned out to every parked stream
+    let stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    let body = r#"{"name":"t-fan","experimentSpec":{"meta":{"name":"m"},
+        "spec":{"Worker":{"replicas":1,"resources":"cpu=1"}}}}"#;
+    write!(
+        &stream,
+        "POST /api/v2/template HTTP/1.1\r\nhost: x\r\n\
+         content-length: {}\r\nconnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    )
+    .unwrap();
+    let (status, _, _) = read_response(&stream);
+    assert_eq!(status, 200);
+
+    // plain GETs still answered while the fan-out is in flight
+    for _ in 0..10 {
+        let (status, _, _) = plain_get(port, "/api/v2/cluster");
+        assert_eq!(status, 200);
+    }
+
+    // every watcher's chunked stream carries the PUT event
+    for (i, w) in watchers.iter().enumerate() {
+        let mut reader = BufReader::with_capacity(1024, w);
+        let mut saw_event = false;
+        let mut line = String::new();
+        loop {
+            line.clear();
+            match reader.read_line(&mut line) {
+                Ok(0) => break,
+                Ok(_) => {
+                    if line.contains("\"t-fan\"") {
+                        saw_event = true;
+                        break;
+                    }
+                }
+                Err(e) => panic!("watcher {i}: read error: {e}"),
+            }
+        }
+        assert!(saw_event, "watcher {i} never saw the event");
+    }
+
+    drop(watchers);
+    shutdown(port, stop, handle);
+}
+
 /// Past `max_connections` live connections the server sheds with a
 /// prompt 503 instead of queueing.
 #[test]
@@ -149,6 +252,7 @@ fn shed_path_still_triggers_at_connection_cap() {
     let (port, stop, handle) = start_with(ServerOptions {
         workers: Some(2),
         max_connections: 6,
+        ..Default::default()
     });
 
     // fill the cap: 4 parked watchers + 2 idle keep-alive connections

@@ -1,0 +1,406 @@
+//! Integration tests for the epoll reactor's connection state machine
+//! (ISSUE 7): slow-loris partial headers answered 408, idle keep-alive
+//! reaping, pipelining, partial-write resumption on large framed
+//! responses, chunked watch streams under client backpressure, and
+//! slow-consumer eviction at the write-buffer cap.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use submarine::experiment::spec::ExperimentSpec;
+use submarine::httpd::reactor::set_recv_buffer;
+use submarine::httpd::server::{Server, ServerOptions, Services};
+use submarine::httpd::ApiConfig;
+use submarine::orchestrator::Submitter;
+use submarine::storage::MetaStore;
+use submarine::util::json::Json;
+
+struct NullSubmitter;
+impl Submitter for NullSubmitter {
+    fn name(&self) -> &'static str {
+        "null"
+    }
+    fn submit(&self, _: &str, _: &ExperimentSpec) -> submarine::Result<()> {
+        Ok(())
+    }
+    fn kill(&self, _: &str) -> submarine::Result<()> {
+        Ok(())
+    }
+}
+
+fn services() -> Arc<Services> {
+    Arc::new(Services::new(
+        Arc::new(MetaStore::in_memory()),
+        Arc::new(NullSubmitter),
+    ))
+}
+
+fn start_with(
+    opts: ServerOptions,
+) -> (u16, Arc<AtomicBool>, std::thread::JoinHandle<()>) {
+    let srv = Arc::new(
+        Server::bind_with_options(
+            services(),
+            0,
+            &ApiConfig::default(),
+            opts,
+        )
+        .unwrap(),
+    );
+    let port = srv.port();
+    let stop = srv.stopper();
+    let handle = srv.serve_background();
+    (port, stop, handle)
+}
+
+fn shutdown(
+    port: u16,
+    stop: Arc<AtomicBool>,
+    handle: std::thread::JoinHandle<()>,
+) {
+    stop.store(true, Ordering::Relaxed);
+    let _ = TcpStream::connect(("127.0.0.1", port));
+    handle.join().unwrap();
+}
+
+/// Read one content-length-framed response off a buffered reader
+/// (reusable across keep-alive requests on the same connection).
+fn read_response<R: BufRead>(reader: &mut R) -> (u16, String) {
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let status: u16 = line.split(' ').nth(1).unwrap().parse().unwrap();
+    let mut len = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).unwrap();
+        let h = h.trim_end().to_ascii_lowercase();
+        if h.is_empty() {
+            break;
+        }
+        if let Some(v) = h.strip_prefix("content-length:") {
+            len = v.trim().parse().unwrap();
+        }
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body).unwrap();
+    (status, String::from_utf8(body).unwrap())
+}
+
+fn post_template(port: u16, name: &str) {
+    let stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let body = format!(
+        "{{\"name\":\"{name}\",\"experimentSpec\":{{\
+         \"meta\":{{\"name\":\"m\"}},\"spec\":{{\"Worker\":{{\
+         \"replicas\":1,\"resources\":\"cpu=1\"}}}}}}}}"
+    );
+    write!(
+        &stream,
+        "POST /api/v2/template HTTP/1.1\r\nhost: x\r\n\
+         content-length: {}\r\nconnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    )
+    .unwrap();
+    let mut reader = BufReader::new(&stream);
+    let (status, body) = read_response(&mut reader);
+    assert_eq!(status, 200, "{body}");
+}
+
+/// A request that starts arriving but stalls mid-header (slow loris)
+/// is answered 408 in the idle window, not held forever.
+#[test]
+fn slow_loris_partial_header_gets_408() {
+    let (port, stop, handle) = start_with(ServerOptions {
+        workers: Some(2),
+        idle_timeout: Duration::from_millis(300),
+        ..Default::default()
+    });
+
+    let mut stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    // request line never completes
+    write!(stream, "GET /api/v2/clu").unwrap();
+    let started = Instant::now();
+    let mut buf = String::new();
+    stream.read_to_string(&mut buf).unwrap();
+    assert!(buf.contains("408"), "expected 408, got: {buf}");
+    assert!(buf.contains("Timeout"), "{buf}");
+    assert!(
+        started.elapsed() < Duration::from_secs(5),
+        "408 took {:?}",
+        started.elapsed()
+    );
+    shutdown(port, stop, handle);
+}
+
+/// A keep-alive connection that goes quiet past the idle window is
+/// closed silently — no error bytes, just EOF.
+#[test]
+fn idle_keep_alive_connection_is_reaped_silently() {
+    let (port, stop, handle) = start_with(ServerOptions {
+        workers: Some(2),
+        idle_timeout: Duration::from_millis(300),
+        ..Default::default()
+    });
+
+    let stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    write!(&stream, "GET /api/v2/cluster HTTP/1.1\r\nhost: x\r\n\r\n")
+        .unwrap();
+    let mut reader = BufReader::new(&stream);
+    let (status, _) = read_response(&mut reader);
+    assert_eq!(status, 200);
+    // now sit idle past the window: the server closes with no bytes
+    let mut rest = Vec::new();
+    reader.read_to_end(&mut rest).unwrap();
+    assert!(
+        rest.is_empty(),
+        "idle reap must be silent, got {} bytes",
+        rest.len()
+    );
+    shutdown(port, stop, handle);
+}
+
+/// Two requests written back-to-back in one burst are both served, in
+/// order, on the same connection.
+#[test]
+fn pipelined_requests_are_served_in_order() {
+    let (port, stop, handle) = start_with(ServerOptions {
+        workers: Some(2),
+        ..Default::default()
+    });
+
+    let stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    write!(
+        &stream,
+        "GET /api/v2/cluster HTTP/1.1\r\nhost: x\r\n\r\n\
+         GET /api/v2/template HTTP/1.1\r\nhost: x\r\n\
+         connection: close\r\n\r\n"
+    )
+    .unwrap();
+    let mut reader = BufReader::new(&stream);
+    let (s1, b1) = read_response(&mut reader);
+    assert_eq!(s1, 200);
+    assert!(b1.contains("RUNNING"), "{b1}");
+    let (s2, b2) = read_response(&mut reader);
+    assert_eq!(s2, 200);
+    assert!(b2.contains("items"), "{b2}");
+    shutdown(port, stop, handle);
+}
+
+/// A framed response much larger than the client's receive window is
+/// delivered completely: the reactor resumes the write on EPOLLOUT
+/// after every partial write / EAGAIN.
+#[test]
+fn large_framed_response_resumes_after_partial_writes() {
+    let (port, stop, handle) = start_with(ServerOptions {
+        workers: Some(2),
+        ..Default::default()
+    });
+    for i in 0..400 {
+        post_template(port, &format!("t-{i}"));
+    }
+
+    let stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    // shrink this end's receive window so the server cannot push the
+    // whole list in one write
+    set_recv_buffer(&stream, 4096);
+    write!(
+        &stream,
+        "GET /api/v2/template HTTP/1.1\r\nhost: x\r\n\
+         connection: close\r\n\r\n"
+    )
+    .unwrap();
+    // drip-read so the server keeps hitting a full socket
+    let mut reader = BufReader::with_capacity(1024, &stream);
+    let (status, body) = {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let status: u16 =
+            line.split(' ').nth(1).unwrap().parse().unwrap();
+        let mut len = 0usize;
+        loop {
+            let mut h = String::new();
+            reader.read_line(&mut h).unwrap();
+            let h = h.trim_end().to_ascii_lowercase();
+            if h.is_empty() {
+                break;
+            }
+            if let Some(v) = h.strip_prefix("content-length:") {
+                len = v.trim().parse().unwrap();
+            }
+        }
+        let mut body = vec![0u8; len];
+        let mut got = 0usize;
+        while got < len {
+            let step = (len - got).min(1024);
+            reader.read_exact(&mut body[got..got + step]).unwrap();
+            got += step;
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        (status, body)
+    };
+    assert_eq!(status, 200);
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(
+        j.at(&["result", "total"]).and_then(Json::as_f64),
+        Some(400.0),
+        "every item must arrive intact"
+    );
+    shutdown(port, stop, handle);
+}
+
+/// A chunked watch stream under client backpressure still delivers
+/// every event and the terminal BOOKMARK once the client catches up.
+#[test]
+fn stream_watcher_receives_all_events_through_backpressure() {
+    let (port, stop, handle) = start_with(ServerOptions {
+        workers: Some(2),
+        ..Default::default()
+    });
+
+    let stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    set_recv_buffer(&stream, 4096);
+    write!(
+        &stream,
+        "GET /api/v2/template?watch=1&stream=1&since=0&\
+         timeout_ms=8000 HTTP/1.1\r\nhost: x\r\n\r\n"
+    )
+    .unwrap();
+
+    // publish while the watcher is not reading
+    const EVENTS: usize = 500;
+    for i in 0..EVENTS {
+        post_template(port, &format!("bp-{i}"));
+    }
+
+    // now drain slowly and count
+    let mut reader = BufReader::with_capacity(1024, &stream);
+    let mut puts = 0usize;
+    let mut bookmark = false;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) => {
+                if line.contains("\"type\":\"PUT\"") {
+                    puts += 1;
+                }
+                if line.contains("\"type\":\"BOOKMARK\"") {
+                    bookmark = true;
+                }
+            }
+            Err(e) => panic!("watcher read error: {e}"),
+        }
+    }
+    assert_eq!(puts, EVENTS, "missing events");
+    assert!(bookmark, "stream must end with a BOOKMARK line");
+    shutdown(port, stop, handle);
+}
+
+/// A stream watcher that never reads while events pile up past the
+/// write-buffer cap is evicted instead of buffering without bound.
+#[test]
+fn slow_consumer_stream_watcher_is_evicted() {
+    let (port, stop, handle) = start_with(ServerOptions {
+        workers: Some(2),
+        write_buf_cap: 1024,
+        ..Default::default()
+    });
+
+    let stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .unwrap();
+    set_recv_buffer(&stream, 4096);
+    write!(
+        &stream,
+        "GET /api/v2/template?watch=1&stream=1&since=0&\
+         timeout_ms=60000 HTTP/1.1\r\nhost: x\r\n\r\n"
+    )
+    .unwrap();
+
+    // never read; flood until the server's buffers can't absorb it
+    for i in 0..1500 {
+        post_template(port, &format!("ev-{i}"));
+    }
+    std::thread::sleep(Duration::from_millis(300));
+
+    // the connection must terminate long before the 60s watch window,
+    // and without the orderly BOOKMARK ending
+    let started = Instant::now();
+    let mut reader = BufReader::new(&stream);
+    let mut bookmark = false;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) => {
+                if line.contains("\"type\":\"BOOKMARK\"") {
+                    bookmark = true;
+                }
+            }
+            Err(_) => break, // reset also counts as eviction
+        }
+    }
+    assert!(
+        started.elapsed() < Duration::from_secs(10),
+        "evicted stream should end promptly"
+    );
+    assert!(!bookmark, "evicted stream must not end with BOOKMARK");
+    shutdown(port, stop, handle);
+}
+
+/// A long-poll watch resolves at its window and the connection stays
+/// keep-alive for the next request.
+#[test]
+fn long_poll_resolves_and_connection_stays_usable() {
+    let (port, stop, handle) = start_with(ServerOptions {
+        workers: Some(2),
+        ..Default::default()
+    });
+
+    let stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let mut reader = BufReader::new(&stream);
+    write!(
+        &stream,
+        "GET /api/v2/template?watch=1&timeout_ms=300 HTTP/1.1\r\n\
+         host: x\r\n\r\n"
+    )
+    .unwrap();
+    let (status, body) = read_response(&mut reader);
+    assert_eq!(status, 200);
+    assert!(body.contains("\"events\""), "{body}");
+    assert!(body.contains("resource_version"), "{body}");
+
+    // same connection, next request
+    write!(&stream, "GET /api/v2/cluster HTTP/1.1\r\nhost: x\r\n\r\n")
+        .unwrap();
+    let (status, body) = read_response(&mut reader);
+    assert_eq!(status, 200);
+    assert!(body.contains("RUNNING"), "{body}");
+    shutdown(port, stop, handle);
+}
