@@ -1,0 +1,435 @@
+//! Rule 6: **atomics-ordering lint**.
+//!
+//! Every atomic in production code is registered in
+//! [`ATOMIC_REGISTRY`] with a declared *role*, and each role carries an
+//! allowed-orderings contract:
+//!
+//! | role            | load            | store           | rmw            | cas success          |
+//! |-----------------|-----------------|-----------------|----------------|----------------------|
+//! | `Counter`       | any             | any             | any            | any                  |
+//! | `Metrics`       | any             | any             | any            | any                  |
+//! | `CasLoop`       | any             | any             | any            | any                  |
+//! | `PublishFlag`   | Acquire/SeqCst  | Release/SeqCst  | AcqRel/SeqCst  | Release/AcqRel/SeqCst|
+//! | `Seqlock`       | Acquire/SeqCst  | Release/SeqCst  | AcqRel/SeqCst  | Release/AcqRel/SeqCst|
+//!
+//! plus two universal `compare_exchange` rules: the failure ordering
+//! must be one of Relaxed/Acquire/SeqCst, and must not be stronger
+//! than the success ordering.
+//!
+//! `Counter` is for values whose *magnitude* is the payload (revision
+//! numbers, pressure gauges): `Relaxed` is correct because no other
+//! memory is published through them. `PublishFlag` is a flag another
+//! thread observes to learn that *other* writes happened — those need
+//! the Release/Acquire pair or the flag is a self-inflicted data race.
+//! `Seqlock` covers the clock's `fetch_max` timeline. `CasLoop` is a
+//! packed word updated by compare-exchange where the word itself is
+//! the entire state (the PR-5 rate limiter).
+//!
+//! Unregistered atomics and out-of-contract orderings are blocking
+//! findings; `// lint: allow(atomics)` on the line is the reviewed
+//! escape hatch. A registry row whose file is scanned but matches no
+//! site produces a non-blocking staleness warning.
+
+use super::scanner::{ident_char, starts_at, Scan};
+use super::Finding;
+use std::collections::BTreeMap;
+
+/// Inline opt-out marker for an individually reviewed atomic site.
+pub const ALLOW_ATOMICS: &str = "lint: allow(atomics)";
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AtomicRole {
+    /// Monotonic or gauge counter: the value itself is the payload.
+    Counter,
+    /// Best-effort observability knob (log level, stats).
+    Metrics,
+    /// Publishes "other writes are visible" to another thread.
+    PublishFlag,
+    /// CAS retry loop over a packed word that is the whole state.
+    CasLoop,
+    /// Seqlock-style timeline (monotonic publish via fetch_max).
+    Seqlock,
+}
+
+impl AtomicRole {
+    pub fn name(self) -> &'static str {
+        match self {
+            AtomicRole::Counter => "counter",
+            AtomicRole::Metrics => "metrics",
+            AtomicRole::PublishFlag => "publish-flag",
+            AtomicRole::CasLoop => "cas-loop",
+            AtomicRole::Seqlock => "seqlock",
+        }
+    }
+}
+
+/// One registered atomic: the field/static identifier as it appears as
+/// a method receiver in `file`.
+pub struct AtomicSite {
+    pub file: &'static str,
+    pub name: &'static str,
+    pub role: AtomicRole,
+}
+
+const fn s(
+    file: &'static str,
+    name: &'static str,
+    role: AtomicRole,
+) -> AtomicSite {
+    AtomicSite { file, name, role }
+}
+
+/// Every production atomic in the tree. Test-only atomics
+/// (`#[cfg(test)]` spans) are exempt from the pass and deliberately
+/// not listed.
+pub const ATOMIC_REGISTRY: &[AtomicSite] = &[
+    // request ids / change-feed step counter
+    s("httpd/middleware.rs", "seq", AtomicRole::Counter),
+    // PR-5 packed rate-limiter word (tokens ‖ timestamp)
+    s("httpd/middleware.rs", "state", AtomicRole::CasLoop),
+    // reactor lifecycle + doorbell flags
+    s("httpd/reactor.rs", "closed", AtomicRole::PublishFlag),
+    s("httpd/reactor.rs", "stop", AtomicRole::PublishFlag),
+    s("httpd/reactor.rs", "flag", AtomicRole::PublishFlag),
+    s("httpd/reactor.rs", "feed_flag", AtomicRole::PublishFlag),
+    s("httpd/reactor.rs", "active", AtomicRole::Counter),
+    // the EventFd doorbell's persistent-failure counter
+    s("httpd/reactor.rs", "failures", AtomicRole::Counter),
+    s("httpd/server.rs", "active", AtomicRole::Counter),
+    // orchestrator shutdown + completion flags
+    s("orchestrator/engine.rs", "stop", AtomicRole::PublishFlag),
+    s("orchestrator/engine.rs", "loop_stop", AtomicRole::PublishFlag),
+    s("orchestrator/local.rs", "kill", AtomicRole::PublishFlag),
+    s("orchestrator/local.rs", "flag", AtomicRole::PublishFlag),
+    s(
+        "scheduler/queue.rs",
+        "unknown_resolutions",
+        AtomicRole::Counter,
+    ),
+    // storage: revision + compaction gauges (magnitude-only payloads;
+    // cross-thread visibility of the documents rides the shard locks)
+    s("storage/kv.rs", "next_rev", AtomicRole::Counter),
+    s("storage/kv.rs", "wal_pressure", AtomicRole::Counter),
+    s("storage/kv.rs", "compact_retry_at", AtomicRole::Counter),
+    s("storage/kv.rs", "compactions", AtomicRole::Counter),
+    s("util/clock.rs", "now_us", AtomicRole::Seqlock),
+    s("util/id.rs", "SEQ", AtomicRole::Counter),
+    s("util/log.rs", "MAX_LEVEL", AtomicRole::Metrics),
+];
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum OpClass {
+    Load,
+    Store,
+    Rmw,
+    Cas,
+}
+
+/// Atomic method tokens. A match only counts as an atomic op if its
+/// balanced argument list mentions `Ordering::` — that is what keeps
+/// `File::read(` / `Vec::swap(` and friends out.
+const OPS: &[(&str, OpClass)] = &[
+    (".compare_exchange_weak(", OpClass::Cas),
+    (".compare_exchange(", OpClass::Cas),
+    (".fetch_add(", OpClass::Rmw),
+    (".fetch_sub(", OpClass::Rmw),
+    (".fetch_max(", OpClass::Rmw),
+    (".fetch_min(", OpClass::Rmw),
+    (".fetch_or(", OpClass::Rmw),
+    (".fetch_and(", OpClass::Rmw),
+    (".fetch_xor(", OpClass::Rmw),
+    (".swap(", OpClass::Rmw),
+    (".load(", OpClass::Load),
+    (".store(", OpClass::Store),
+];
+
+fn strength(ord: &str) -> i32 {
+    match ord {
+        "Relaxed" => 0,
+        "Acquire" | "Release" => 1,
+        "AcqRel" => 2,
+        "SeqCst" => 3,
+        _ => -1,
+    }
+}
+
+/// The receiver identifier left of the `.` at `pos`, skipping
+/// whitespace (multi-line method chains) and one `[...]` index.
+fn receiver_before(chars: &[char], pos: usize) -> String {
+    let mut j = pos as i64 - 1;
+    while j >= 0 && chars[j as usize].is_whitespace() {
+        j -= 1;
+    }
+    if j >= 0 && chars[j as usize] == ']' {
+        let mut depth = 1;
+        j -= 1;
+        while j >= 0 && depth > 0 {
+            if chars[j as usize] == ']' {
+                depth += 1;
+            } else if chars[j as usize] == '[' {
+                depth -= 1;
+            }
+            j -= 1;
+        }
+    }
+    let end = (j + 1) as usize;
+    while j >= 0 && ident_char(chars[j as usize]) {
+        j -= 1;
+    }
+    chars[(j + 1) as usize..end].iter().collect()
+}
+
+/// `Ordering::X` names inside `args`, in source order.
+fn orderings(args: &str) -> Vec<String> {
+    let chars: Vec<char> = args.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < chars.len() {
+        if starts_at(&chars, i, "Ordering::")
+            && (i == 0 || !ident_char(chars[i - 1]))
+        {
+            let mut e = i + 10;
+            let s = e;
+            while e < chars.len() && ident_char(chars[e]) {
+                e += 1;
+            }
+            out.push(chars[s..e].iter().collect());
+            i = e;
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Result of the pass: blocking findings plus registry staleness
+/// warnings.
+pub struct AtomicsOutcome {
+    pub findings: Vec<Finding>,
+    pub warnings: Vec<Finding>,
+}
+
+pub fn check(scans: &BTreeMap<String, Scan>) -> AtomicsOutcome {
+    let mut findings = Vec::new();
+    let mut matched = vec![false; ATOMIC_REGISTRY.len()];
+
+    for (rel, sc) in scans {
+        check_file(rel, sc, &mut findings, &mut matched);
+    }
+
+    let warnings = ATOMIC_REGISTRY
+        .iter()
+        .enumerate()
+        .filter(|(idx, site)| {
+            !matched[*idx] && scans.contains_key(site.file)
+        })
+        .map(|(_, site)| Finding {
+            rule: "atomics",
+            file: site.file.to_string(),
+            line: 0,
+            message: format!(
+                "registry entry `{}` matched no atomic op (stale? \
+                 remove it or fix the receiver name)",
+                site.name
+            ),
+        })
+        .collect();
+
+    AtomicsOutcome { findings, warnings }
+}
+
+fn check_file(
+    rel: &str,
+    sc: &Scan,
+    findings: &mut Vec<Finding>,
+    matched: &mut [bool],
+) {
+    let blanked = sc.blanked();
+    let chars: Vec<char> = blanked.chars().collect();
+    let n = chars.len();
+    let mut i = 0usize;
+    let mut line = 1usize;
+
+    'walk: while i < n {
+        if chars[i] == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        for (tok, class) in OPS {
+            if !starts_at(&chars, i, tok) {
+                continue;
+            }
+            let tok_start = i;
+            // balanced argument list starting at the trailing `(`
+            let open = i + tok.chars().count() - 1;
+            let mut e = open;
+            let mut depth = 0i32;
+            let mut arg_lines = 0usize;
+            while e < n {
+                match chars[e] {
+                    '(' => depth += 1,
+                    ')' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    '\n' => arg_lines += 1,
+                    _ => {}
+                }
+                e += 1;
+            }
+            let args: String =
+                chars[open + 1..e.min(n)].iter().collect();
+            if !args.contains("Ordering::") {
+                break; // not an atomic op; no other token matches here
+            }
+            let ln = line;
+            line += arg_lines;
+            i = e;
+            if sc.in_test(ln)
+                || sc
+                    .orig_lines
+                    .get(ln - 1)
+                    .is_some_and(|o| o.contains(ALLOW_ATOMICS))
+            {
+                continue 'walk;
+            }
+            let recv = receiver_before(&chars, tok_start);
+            check_site(
+                rel, recv, *class, &args, ln, findings, matched,
+            );
+            continue 'walk;
+        }
+        i += 1;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn check_site(
+    rel: &str,
+    recv: String,
+    class: OpClass,
+    args: &str,
+    ln: usize,
+    findings: &mut Vec<Finding>,
+    matched: &mut [bool],
+) {
+    let entry = ATOMIC_REGISTRY.iter().enumerate().find(
+        |(_, site)| site.file == rel && site.name == recv,
+    );
+    let Some((idx, site)) = entry else {
+        findings.push(Finding {
+            rule: "atomics",
+            file: rel.to_string(),
+            line: ln,
+            message: format!(
+                "unregistered atomic `{recv}` — add it to \
+                 ATOMIC_REGISTRY with a role, or mark the site \
+                 `{ALLOW_ATOMICS}`"
+            ),
+        });
+        return;
+    };
+    matched[idx] = true;
+
+    let ords = orderings(args);
+    for o in &ords {
+        if strength(o) < 0 {
+            findings.push(Finding {
+                rule: "atomics",
+                file: rel.to_string(),
+                line: ln,
+                message: format!(
+                    "`{recv}`: unrecognized ordering `{o}`"
+                ),
+            });
+            return;
+        }
+    }
+    let strict = matches!(
+        site.role,
+        AtomicRole::PublishFlag | AtomicRole::Seqlock
+    );
+    let complain = |ord: &str, want: &str| Finding {
+        rule: "atomics",
+        file: rel.to_string(),
+        line: ln,
+        message: format!(
+            "`{recv}` is a {} but uses Ordering::{ord} (contract: \
+             {want}); fix the ordering or mark `{}`",
+            site.role.name(),
+            ALLOW_ATOMICS
+        ),
+    };
+    match class {
+        OpClass::Load => {
+            if let Some(o) = ords.first() {
+                if strict && o != "Acquire" && o != "SeqCst" {
+                    findings
+                        .push(complain(o, "Acquire or SeqCst load"));
+                }
+            }
+        }
+        OpClass::Store => {
+            if let Some(o) = ords.first() {
+                if strict && o != "Release" && o != "SeqCst" {
+                    findings
+                        .push(complain(o, "Release or SeqCst store"));
+                }
+            }
+        }
+        OpClass::Rmw => {
+            if let Some(o) = ords.first() {
+                if strict && o != "AcqRel" && o != "SeqCst" {
+                    findings
+                        .push(complain(o, "AcqRel or SeqCst rmw"));
+                }
+            }
+        }
+        OpClass::Cas => {
+            if ords.len() < 2 {
+                findings.push(Finding {
+                    rule: "atomics",
+                    file: rel.to_string(),
+                    line: ln,
+                    message: format!(
+                        "`{recv}`: compare_exchange needs explicit \
+                         success and failure orderings"
+                    ),
+                });
+                return;
+            }
+            let (succ, fail) = (&ords[0], &ords[1]);
+            if strict
+                && succ != "Release"
+                && succ != "AcqRel"
+                && succ != "SeqCst"
+            {
+                findings.push(complain(
+                    succ,
+                    "Release/AcqRel/SeqCst cas success",
+                ));
+            }
+            if fail != "Relaxed" && fail != "Acquire" && fail != "SeqCst"
+            {
+                findings.push(complain(
+                    fail,
+                    "Relaxed/Acquire/SeqCst cas failure",
+                ));
+            }
+            if strength(fail) > strength(succ) {
+                findings.push(Finding {
+                    rule: "atomics",
+                    file: rel.to_string(),
+                    line: ln,
+                    message: format!(
+                        "`{recv}`: cas failure ordering {fail} is \
+                         stronger than success ordering {succ}"
+                    ),
+                });
+            }
+        }
+    }
+}

@@ -1,8 +1,14 @@
-//! The unwrap/expect baseline ratchet.
+//! The one-way baseline ratchets (unwrap/expect and unsafe blocks).
 //!
-//! `baseline.json` grandfathers the `.unwrap()` / `.expect(` call
-//! sites that existed in `httpd/` and `orchestrator/` production code
-//! when the lint landed. The ratchet only turns one way:
+//! `baseline.json` grandfathers two per-file counts that existed when
+//! the respective lint landed:
+//!
+//! * `"unwrap"` — `.unwrap()` / `.expect(` call sites in `httpd/` and
+//!   `orchestrator/` production code (PR 6);
+//! * `"unsafe"` — `unsafe` blocks anywhere in `src/` (this PR; today
+//!   they all live in `httpd/reactor.rs::sys` and its callers).
+//!
+//! Both ratchets only turn one way:
 //!
 //! - a file whose count **exceeds** its baseline fails the lint (new
 //!   sites are rejected);
@@ -19,20 +25,28 @@ use std::collections::BTreeMap;
 /// no runtime file dependency.
 pub const BASELINE_JSON: &str = include_str!("baseline.json");
 
-/// Parse a baseline document (`{"unwrap": {"<file>": <count>}}`).
-pub fn parse(text: &str) -> Result<BTreeMap<String, u64>, String> {
-    let doc = Json::parse(text)
-        .map_err(|e| format!("baseline.json: {e}"))?;
-    let Some(Json::Obj(pairs)) = doc.get("unwrap") else {
-        return Err(
-            "baseline.json: missing `unwrap` object".to_string()
-        );
+/// Parsed `baseline.json`.
+pub struct Baseline {
+    /// `.unwrap()` / `.expect(` sites per file (the `"unwrap"` key).
+    pub unwrap: BTreeMap<String, u64>,
+    /// `unsafe` blocks per file (the `"unsafe"` key).
+    pub unsafe_blocks: BTreeMap<String, u64>,
+}
+
+fn section(
+    doc: &Json,
+    key: &str,
+) -> Result<BTreeMap<String, u64>, String> {
+    let Some(Json::Obj(pairs)) = doc.get(key) else {
+        return Err(format!(
+            "baseline.json: missing `{key}` object"
+        ));
     };
     let mut out = BTreeMap::new();
     for (file, v) in pairs {
         let Some(count) = v.as_u64() else {
             return Err(format!(
-                "baseline.json: non-integer count for {file}"
+                "baseline.json: non-integer {key} count for {file}"
             ));
         };
         out.insert(file.clone(), count);
@@ -40,15 +54,30 @@ pub fn parse(text: &str) -> Result<BTreeMap<String, u64>, String> {
     Ok(out)
 }
 
+/// Parse a baseline document
+/// (`{"unsafe": {"<file>": <n>}, "unwrap": {"<file>": <n>}}`).
+pub fn parse(text: &str) -> Result<Baseline, String> {
+    let doc = Json::parse(text)
+        .map_err(|e| format!("baseline.json: {e}"))?;
+    Ok(Baseline {
+        unwrap: section(&doc, "unwrap")?,
+        unsafe_blocks: section(&doc, "unsafe")?,
+    })
+}
+
 /// The checked-in baseline.
-pub fn load() -> Result<BTreeMap<String, u64>, String> {
+pub fn load() -> Result<Baseline, String> {
     parse(BASELINE_JSON)
 }
 
-/// Serialize a baseline document (stable key order, trailing newline —
-/// diff-friendly).
-pub fn render(counts: &BTreeMap<String, u64>) -> String {
-    let mut out = String::from("{\n  \"unwrap\": {\n");
+fn render_section(
+    out: &mut String,
+    key: &str,
+    counts: &BTreeMap<String, u64>,
+) {
+    out.push_str("  \"");
+    out.push_str(key);
+    out.push_str("\": {\n");
     let last = counts.len().saturating_sub(1);
     for (i, (file, count)) in counts.iter().enumerate() {
         out.push_str("    \"");
@@ -60,7 +89,20 @@ pub fn render(counts: &BTreeMap<String, u64>) -> String {
         }
         out.push('\n');
     }
-    out.push_str("  }\n}\n");
+    out.push_str("  }");
+}
+
+/// Serialize a baseline document (stable key order, trailing newline —
+/// diff-friendly).
+pub fn render(
+    unwrap: &BTreeMap<String, u64>,
+    unsafe_blocks: &BTreeMap<String, u64>,
+) -> String {
+    let mut out = String::from("{\n");
+    render_section(&mut out, "unsafe", unsafe_blocks);
+    out.push_str(",\n");
+    render_section(&mut out, "unwrap", unwrap);
+    out.push_str("\n}\n");
     out
 }
 
@@ -72,9 +114,15 @@ pub struct RatchetReport {
     pub warnings: Vec<Finding>,
 }
 
+/// Compare per-file counts against one baseline section. `rule` names
+/// the lint rule on findings, `what` describes the counted sites, and
+/// `advice` tells the author what to do instead of adding one.
 pub fn ratchet(
     current: &BTreeMap<String, u64>,
     baseline: &BTreeMap<String, u64>,
+    rule: &'static str,
+    what: &str,
+    advice: &str,
 ) -> RatchetReport {
     let mut rep = RatchetReport {
         errors: Vec::new(),
@@ -84,18 +132,17 @@ pub fn ratchet(
         let allowed = baseline.get(file).copied().unwrap_or(0);
         if count > allowed {
             rep.errors.push(Finding {
-                rule: "unwrap-ratchet",
+                rule,
                 file: file.clone(),
                 line: 0,
                 message: format!(
-                    "{count} unwrap/expect sites exceed the \
-                     grandfathered baseline of {allowed}; handle the \
-                     error (v2 envelope / poison recovery) instead"
+                    "{count} {what} exceed the grandfathered \
+                     baseline of {allowed}; {advice}"
                 ),
             });
         } else if count < allowed {
             rep.warnings.push(Finding {
-                rule: "unwrap-ratchet",
+                rule,
                 file: file.clone(),
                 line: 0,
                 message: format!(
@@ -108,13 +155,12 @@ pub fn ratchet(
     for (file, &allowed) in baseline {
         if allowed > 0 && !current.contains_key(file) {
             rep.warnings.push(Finding {
-                rule: "unwrap-ratchet",
+                rule,
                 file: file.clone(),
                 line: 0,
                 message: format!(
-                    "file has no unwrap/expect sites left (baseline \
-                     {allowed}) — shrink the baseline with \
-                     --write-baseline"
+                    "file has no {what} left (baseline {allowed}) — \
+                     shrink the baseline with --write-baseline"
                 ),
             });
         }
@@ -129,16 +175,23 @@ mod tests {
     #[test]
     fn checked_in_baseline_parses() {
         let b = load().expect("baseline.json must parse");
-        assert!(b.values().all(|&v| v > 0));
+        assert!(b.unwrap.values().all(|&v| v > 0));
+        assert!(b.unsafe_blocks.values().all(|&v| v > 0));
+        // the reactor's unsafe blocks are grandfathered here
+        assert!(b.unsafe_blocks.contains_key("httpd/reactor.rs"));
     }
 
     #[test]
     fn render_roundtrips() {
-        let mut counts = BTreeMap::new();
-        counts.insert("httpd/server.rs".to_string(), 1u64);
-        counts.insert("orchestrator/tony.rs".to_string(), 2u64);
-        let text = render(&counts);
-        assert_eq!(parse(&text).unwrap(), counts);
+        let mut unwrap = BTreeMap::new();
+        unwrap.insert("httpd/server.rs".to_string(), 1u64);
+        unwrap.insert("orchestrator/tony.rs".to_string(), 2u64);
+        let mut unsafe_blocks = BTreeMap::new();
+        unsafe_blocks.insert("httpd/reactor.rs".to_string(), 11u64);
+        let text = render(&unwrap, &unsafe_blocks);
+        let parsed = parse(&text).unwrap();
+        assert_eq!(parsed.unwrap, unwrap);
+        assert_eq!(parsed.unsafe_blocks, unsafe_blocks);
     }
 
     #[test]
@@ -146,22 +199,46 @@ mod tests {
         let mut baseline = BTreeMap::new();
         baseline.insert("httpd/a.rs".to_string(), 2u64);
         let mut current = baseline.clone();
-        let rep = ratchet(&current, &baseline);
+        let rep = ratchet(
+            &current, &baseline, "unwrap-ratchet", "sites", "fix",
+        );
         assert!(rep.errors.is_empty());
         assert!(rep.warnings.is_empty());
         current.insert("httpd/a.rs".to_string(), 3);
-        assert_eq!(ratchet(&current, &baseline).errors.len(), 1);
+        assert_eq!(
+            ratchet(
+                &current, &baseline, "unwrap-ratchet", "sites",
+                "fix",
+            )
+            .errors
+            .len(),
+            1
+        );
         // brand-new file with sites: also an error
         current.insert("httpd/a.rs".to_string(), 2);
         current.insert("httpd/b.rs".to_string(), 1);
-        assert_eq!(ratchet(&current, &baseline).errors.len(), 1);
+        assert_eq!(
+            ratchet(
+                &current, &baseline, "unwrap-ratchet", "sites",
+                "fix",
+            )
+            .errors
+            .len(),
+            1
+        );
     }
 
     #[test]
     fn ratchet_warns_on_stale_baseline() {
         let mut baseline = BTreeMap::new();
         baseline.insert("httpd/a.rs".to_string(), 2u64);
-        let rep = ratchet(&BTreeMap::new(), &baseline);
+        let rep = ratchet(
+            &BTreeMap::new(),
+            &baseline,
+            "unsafe-ratchet",
+            "unsafe blocks",
+            "fix",
+        );
         assert!(rep.errors.is_empty());
         assert_eq!(rep.warnings.len(), 1);
     }

@@ -1,0 +1,759 @@
+//! Rule 7: **connection state-machine checker**.
+//!
+//! The reactor's per-connection lifecycle
+//! (`httpd/conn.rs::ConnState`) is declared here as data — the legal
+//! transitions ([`CONN_TRANSITIONS`]) and each state's epoll interest
+//! ([`CONN_INTEREST`]) — and the pass verifies the code against the
+//! declaration:
+//!
+//! * every `match` over the state enum must be exhaustive *without
+//!   wildcard arms*, so adding a state forces every dispatch site to
+//!   be revisited (the compiler then enforces the rest);
+//! * every assignment to the state field must route through the
+//!   [`Conn::set_state`](crate::httpd::conn::Conn::set_state) funnel,
+//!   and every `set_state` call site must name a literal
+//!   `ConnState::` target;
+//! * the `rearm` interest computation in `httpd/reactor.rs` must
+//!   mention exactly the EPOLLIN/EPOLLOUT bits the table declares for
+//!   each state's arm;
+//! * the enum's variants and the contract tables must list the same
+//!   states (drift guard in both directions).
+//!
+//! The same [`CONN_TRANSITIONS`] table drives a debug-build runtime
+//! assert inside `Conn::set_state` (the PR-6 tracker pattern): any
+//! undeclared transition panics under `cargo test` and the nightly
+//! TSan job, and compiles to nothing in release builds.
+
+use super::scanner::{ident_char, starts_at, Scan};
+use super::Finding;
+use crate::httpd::conn::ConnState;
+use std::collections::BTreeMap;
+
+/// Canonical state names; must match the enum variant list.
+pub const STATE_NAMES: &[&str] = &[
+    "ReadHeaders",
+    "ReadBody",
+    "Handle",
+    "WriteResponse",
+    "KeepAliveIdle",
+    "Tail",
+];
+
+pub fn state_name(s: ConnState) -> &'static str {
+    match s {
+        ConnState::ReadHeaders => "ReadHeaders",
+        ConnState::ReadBody => "ReadBody",
+        ConnState::Handle => "Handle",
+        ConnState::WriteResponse => "WriteResponse",
+        ConnState::KeepAliveIdle => "KeepAliveIdle",
+        ConnState::Tail => "Tail",
+    }
+}
+
+/// The declared transition relation (self-loops are implicitly
+/// allowed — a re-assignment to the current state is a no-op).
+///
+/// Sources of each edge, for the reviewer:
+/// * `ReadHeaders → ReadBody` / back-edges into the read states:
+///   `Conn::try_parse` partial outcomes.
+/// * `ReadHeaders|ReadBody → Handle`: a complete request was parsed
+///   (`pump_requests`).
+/// * `ReadHeaders|ReadBody|KeepAliveIdle → WriteResponse`: a 400/408
+///   is answered directly from a read state (`pump_requests` bad
+///   parse, `answer_408`).
+/// * `KeepAliveIdle → ReadHeaders`: pipelined bytes already buffered.
+/// * `Handle → WriteResponse`: the worker's response is queued
+///   (`finish_framed`, `park_tail` HEAD short-circuit).
+/// * `Handle → Tail`: a watch/stream response parked (`park_tail`).
+/// * `Tail → WriteResponse`: a long-poll tail resolved into a framed
+///   response (`step_tail` / `TailStep::Respond`).
+/// * `WriteResponse → KeepAliveIdle`: response drained, connection
+///   kept (`await_next_request`).
+pub const CONN_TRANSITIONS: &[(ConnState, ConnState)] = &[
+    (ConnState::ReadHeaders, ConnState::ReadBody),
+    (ConnState::ReadHeaders, ConnState::Handle),
+    (ConnState::ReadHeaders, ConnState::WriteResponse),
+    (ConnState::ReadBody, ConnState::Handle),
+    (ConnState::ReadBody, ConnState::WriteResponse),
+    (ConnState::KeepAliveIdle, ConnState::ReadHeaders),
+    (ConnState::KeepAliveIdle, ConnState::WriteResponse),
+    (ConnState::Handle, ConnState::WriteResponse),
+    (ConnState::Handle, ConnState::Tail),
+    (ConnState::Tail, ConnState::WriteResponse),
+    (ConnState::WriteResponse, ConnState::KeepAliveIdle),
+];
+
+/// Per-state epoll interest: `(state, EPOLLIN, EPOLLOUT)`. `Tail` is
+/// `(true, true)` because the reactor watches for peer close
+/// (readable/EOF) and conditionally for writability while queued
+/// bytes remain — the rearm arm must mention both bits.
+pub const CONN_INTEREST: &[(ConnState, bool, bool)] = &[
+    (ConnState::ReadHeaders, true, false),
+    (ConnState::ReadBody, true, false),
+    (ConnState::Handle, false, false),
+    (ConnState::WriteResponse, false, true),
+    (ConnState::KeepAliveIdle, true, false),
+    (ConnState::Tail, true, true),
+];
+
+/// Whether `from → to` is declared (or a self-loop).
+pub fn transition_allowed(from: ConnState, to: ConnState) -> bool {
+    from == to
+        || CONN_TRANSITIONS
+            .iter()
+            .any(|&(f, t)| f == from && t == to)
+}
+
+/// Files the static checks run over.
+pub const CHECKED_FILES: &[&str] =
+    &["httpd/conn.rs", "httpd/reactor.rs"];
+
+/// Full pass over the scanned tree.
+pub fn check(scans: &BTreeMap<String, Scan>) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    match scans.get("httpd/conn.rs") {
+        None => findings.push(Finding {
+            rule: "conn-state",
+            file: "httpd/conn.rs".to_string(),
+            line: 0,
+            message: "httpd/conn.rs not found".to_string(),
+        }),
+        Some(sc) => enum_sync(sc, &mut findings),
+    }
+    for rel in CHECKED_FILES {
+        if let Some(sc) = scans.get(*rel) {
+            findings.extend(check_file(rel, sc));
+        }
+    }
+    if let Some(sc) = scans.get("httpd/reactor.rs") {
+        findings.extend(check_rearm("httpd/reactor.rs", sc));
+    }
+    findings
+}
+
+/// Enum ↔ contract drift guard: the `ConnState` variant list and
+/// [`STATE_NAMES`] must agree.
+fn enum_sync(sc: &Scan, findings: &mut Vec<Finding>) {
+    let blanked = sc.blanked();
+    let chars: Vec<char> = blanked.chars().collect();
+    let n = chars.len();
+    let mut variants: Vec<String> = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        if starts_at(&chars, i, "enum ConnState")
+            && (i == 0 || !ident_char(chars[i - 1]))
+        {
+            let mut k = i;
+            while k < n && chars[k] != '{' {
+                k += 1;
+            }
+            let mut depth = 1;
+            k += 1;
+            let mut prev_sig = '{';
+            while k < n && depth > 0 {
+                let c = chars[k];
+                if c == '{' || c == '(' {
+                    depth += 1;
+                } else if c == '}' || c == ')' {
+                    depth -= 1;
+                } else if ident_char(c) && depth == 1 {
+                    let s = k;
+                    while k < n && ident_char(chars[k]) {
+                        k += 1;
+                    }
+                    if prev_sig == '{' || prev_sig == ',' {
+                        variants
+                            .push(chars[s..k].iter().collect());
+                    }
+                    prev_sig = 'v';
+                    continue;
+                }
+                if !c.is_whitespace() {
+                    prev_sig = c;
+                }
+                k += 1;
+            }
+            break;
+        }
+        i += 1;
+    }
+    if variants.is_empty() {
+        findings.push(Finding {
+            rule: "conn-state",
+            file: "httpd/conn.rs".to_string(),
+            line: 0,
+            message: "enum ConnState not found".to_string(),
+        });
+        return;
+    }
+    for v in &variants {
+        if !STATE_NAMES.contains(&v.as_str()) {
+            findings.push(Finding {
+                rule: "conn-state",
+                file: "httpd/conn.rs".to_string(),
+                line: 0,
+                message: format!(
+                    "ConnState variant `{v}` is not declared in \
+                     conn_contract (add transitions + interest rows)"
+                ),
+            });
+        }
+    }
+    for nm in STATE_NAMES {
+        if !variants.iter().any(|v| v == nm) {
+            findings.push(Finding {
+                rule: "conn-state",
+                file: "httpd/conn.rs".to_string(),
+                line: 0,
+                message: format!(
+                    "conn_contract state `{nm}` does not exist on \
+                     enum ConnState (stale table row)"
+                ),
+            });
+        }
+    }
+}
+
+/// Per-file static checks: state-field assignment funnel, `set_state`
+/// literal targets, and wildcard-free exhaustive state matches.
+/// Public so fixture tests can drive it directly.
+pub fn check_file(rel: &str, sc: &Scan) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let blanked = sc.blanked();
+    let chars: Vec<char> = blanked.chars().collect();
+    let n = chars.len();
+
+    // (1) direct `.state = ...` assignments outside the funnel
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if starts_at(&chars, i, ".state")
+            && !ident_char(*chars.get(i + 6).unwrap_or(&' '))
+        {
+            let ln = line;
+            let mut k = i + 6;
+            while k < n && chars[k].is_whitespace() {
+                k += 1;
+            }
+            let is_assign = k < n
+                && chars[k] == '='
+                && chars.get(k + 1) != Some(&'=')
+                && chars.get(k + 1) != Some(&'>');
+            i += 6;
+            if !is_assign || sc.in_test(ln) {
+                continue;
+            }
+            if sc
+                .fn_at(ln)
+                .is_some_and(|f| f.name == "set_state")
+            {
+                continue; // the funnel's own store
+            }
+            findings.push(Finding {
+                rule: "conn-state",
+                file: rel.to_string(),
+                line: ln,
+                message: "direct `.state = ...` assignment; route \
+                          the transition through `Conn::set_state` \
+                          so the declared-transition assert sees it"
+                    .to_string(),
+            });
+            continue;
+        }
+        i += 1;
+    }
+
+    // (2) `set_state(` call sites must name a literal ConnState target
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < n {
+        if chars[i] == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if starts_at(&chars, i, "set_state(")
+            && (i == 0 || !ident_char(chars[i - 1]))
+        {
+            let ln = line;
+            // skip the definition itself (`fn set_state(`)
+            let mut b = i as i64 - 1;
+            while b >= 0 && chars[b as usize].is_whitespace() {
+                b -= 1;
+            }
+            let word_end = (b + 1) as usize;
+            while b >= 0 && ident_char(chars[b as usize]) {
+                b -= 1;
+            }
+            let prev_word: String =
+                chars[(b + 1) as usize..word_end].iter().collect();
+            // balanced args
+            let open = i + "set_state(".len() - 1;
+            let mut e = open;
+            let mut depth = 0i32;
+            let mut arg_lines = 0usize;
+            while e < n {
+                match chars[e] {
+                    '(' => depth += 1,
+                    ')' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    '\n' => arg_lines += 1,
+                    _ => {}
+                }
+                e += 1;
+            }
+            let args: String =
+                chars[open + 1..e.min(n)].iter().collect();
+            i = e;
+            line += arg_lines;
+            if prev_word == "fn" || sc.in_test(ln) {
+                continue;
+            }
+            let targets = conn_state_names(&args);
+            if targets.is_empty() {
+                findings.push(Finding {
+                    rule: "conn-state",
+                    file: rel.to_string(),
+                    line: ln,
+                    message: "set_state target is not a literal \
+                              `ConnState::` path — the checker \
+                              cannot audit the transition"
+                        .to_string(),
+                });
+                continue;
+            }
+            for t in targets {
+                if !STATE_NAMES.contains(&t.as_str()) {
+                    findings.push(Finding {
+                        rule: "conn-state",
+                        file: rel.to_string(),
+                        line: ln,
+                        message: format!(
+                            "set_state targets unknown conn state \
+                             `{t}`"
+                        ),
+                    });
+                }
+            }
+            continue;
+        }
+        i += 1;
+    }
+
+    // (3) matches over the state enum: exhaustive, no wildcard
+    findings.extend(state_matches(rel, sc, &chars));
+
+    findings
+}
+
+/// `ConnState::X` identifiers appearing in `text`.
+fn conn_state_names(text: &str) -> Vec<String> {
+    let chars: Vec<char> = text.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < chars.len() {
+        if starts_at(&chars, i, "ConnState::")
+            && (i == 0 || !ident_char(chars[i - 1]))
+        {
+            let mut e = i + 11;
+            let s = e;
+            while e < chars.len() && ident_char(chars[e]) {
+                e += 1;
+            }
+            out.push(chars[s..e].iter().collect());
+            i = e;
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Locate every `match <scrutinee ending in .state or named state>`
+/// and check its arms.
+fn state_matches(
+    rel: &str,
+    sc: &Scan,
+    chars: &[char],
+) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let n = chars.len();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < n {
+        if chars[i] == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if starts_at(chars, i, "match")
+            && (i == 0 || !ident_char(chars[i - 1]))
+            && !ident_char(*chars.get(i + 5).unwrap_or(&' '))
+        {
+            let ln = line;
+            let mut k = i + 5;
+            let scrut_start = k;
+            while k < n && chars[k] != '{' {
+                if chars[k] == '\n' {
+                    line += 1;
+                }
+                k += 1;
+            }
+            let scrutinee: String = chars[scrut_start..k.min(n)]
+                .iter()
+                .collect::<String>()
+                .trim()
+                .to_string();
+            i = k;
+            if !(scrutinee.ends_with(".state")
+                || scrutinee == "state")
+                || sc.in_test(ln)
+            {
+                continue;
+            }
+            // balanced match body
+            let mut depth = 0i32;
+            let mut e = k;
+            let mut body_lines = 0usize;
+            while e < n {
+                match chars[e] {
+                    '{' => depth += 1,
+                    '}' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    '\n' => body_lines += 1,
+                    _ => {}
+                }
+                e += 1;
+            }
+            let body: Vec<char> =
+                chars[k + 1..e.min(n)].to_vec();
+            i = e;
+            line += body_lines;
+
+            let body_text: String = body.iter().collect();
+            for nm in STATE_NAMES {
+                let pat = format!("ConnState::{nm}");
+                if !body_text.contains(&pat) {
+                    findings.push(Finding {
+                        rule: "conn-state",
+                        file: rel.to_string(),
+                        line: ln,
+                        message: format!(
+                            "match over conn state does not name \
+                             `{pat}` — spell every state out \
+                             instead of using a wildcard"
+                        ),
+                    });
+                }
+            }
+            if let Some(off) = wildcard_arm(&body) {
+                let wl = ln
+                    + body[..off]
+                        .iter()
+                        .filter(|c| **c == '\n')
+                        .count();
+                findings.push(Finding {
+                    rule: "conn-state",
+                    file: rel.to_string(),
+                    line: wl,
+                    message: "wildcard arm in a conn-state match; \
+                              new states must not fall through \
+                              silently"
+                        .to_string(),
+                });
+            }
+            continue;
+        }
+        i += 1;
+    }
+    findings
+}
+
+/// Offset of a top-level `_` arm pattern inside a match body, if any.
+fn wildcard_arm(body: &[char]) -> Option<usize> {
+    let n = body.len();
+    let mut depth = 0i32;
+    let mut i = 0usize;
+    while i < n {
+        let c = body[i];
+        if c == '{' || c == '(' || c == '[' {
+            depth += 1;
+        } else if c == '}' || c == ')' || c == ']' {
+            depth -= 1;
+        } else if c == '_'
+            && depth == 0
+            && (i == 0 || !ident_char(body[i - 1]))
+            && !ident_char(*body.get(i + 1).unwrap_or(&' '))
+        {
+            // previous significant char must start an arm pattern
+            let mut b = i as i64 - 1;
+            while b >= 0 && body[b as usize].is_whitespace() {
+                b -= 1;
+            }
+            let prev = if b < 0 { '{' } else { body[b as usize] };
+            // next significant text must be `=>` or a guard
+            let mut k = i + 1;
+            while k < n && body[k].is_whitespace() {
+                k += 1;
+            }
+            let arrow = starts_at(body, k, "=>")
+                || (starts_at(body, k, "if")
+                    && !ident_char(
+                        *body.get(k + 2).unwrap_or(&' '),
+                    ));
+            if (prev == '{' || prev == ',' || prev == '|') && arrow
+            {
+                return Some(i);
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Check `fn rearm`'s state match against [`CONN_INTEREST`]. Public
+/// so fixture tests can drive it directly.
+pub fn check_rearm(rel: &str, sc: &Scan) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let Some(f) = sc
+        .fns
+        .iter()
+        .find(|f| f.name == "rearm" && !sc.in_test(f.start))
+    else {
+        findings.push(Finding {
+            rule: "conn-state",
+            file: rel.to_string(),
+            line: 0,
+            message: "fn `rearm` not found (the interest table in \
+                      conn_contract expects it)"
+                .to_string(),
+        });
+        return findings;
+    };
+    let text = sc.fn_text(f);
+    let chars: Vec<char> = text.chars().collect();
+    let n = chars.len();
+    // locate the state match inside rearm
+    let mut i = 0usize;
+    let mut body: Option<(usize, Vec<char>)> = None;
+    let mut line = f.start;
+    while i < n {
+        if chars[i] == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if starts_at(&chars, i, "match")
+            && (i == 0 || !ident_char(chars[i - 1]))
+        {
+            let ln = line;
+            let mut k = i + 5;
+            let s = k;
+            while k < n && chars[k] != '{' {
+                if chars[k] == '\n' {
+                    line += 1;
+                }
+                k += 1;
+            }
+            let scrut: String = chars[s..k.min(n)]
+                .iter()
+                .collect::<String>()
+                .trim()
+                .to_string();
+            if scrut.ends_with(".state") || scrut == "state" {
+                let mut depth = 0i32;
+                let mut e = k;
+                while e < n {
+                    match chars[e] {
+                        '{' => depth += 1,
+                        '}' => {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    e += 1;
+                }
+                body =
+                    Some((ln, chars[k + 1..e.min(n)].to_vec()));
+                break;
+            }
+            i = k;
+            continue;
+        }
+        i += 1;
+    }
+    let Some((match_line, body)) = body else {
+        findings.push(Finding {
+            rule: "conn-state",
+            file: rel.to_string(),
+            line: f.start,
+            message: "fn `rearm` has no match over the conn state"
+                .to_string(),
+        });
+        return findings;
+    };
+    for (pattern, arm) in split_arms(&body) {
+        for nm in conn_state_names(&pattern) {
+            let Some(&(_, want_in, want_out)) =
+                CONN_INTEREST.iter().find(|(st, _, _)| {
+                    state_name(*st) == nm.as_str()
+                })
+            else {
+                continue; // unknown variant: check_file flags it
+            };
+            let has_in = arm.contains("EPOLLIN");
+            let has_out = arm.contains("EPOLLOUT");
+            if has_in != want_in || has_out != want_out {
+                findings.push(Finding {
+                    rule: "conn-state",
+                    file: rel.to_string(),
+                    line: match_line,
+                    message: format!(
+                        "rearm arm for ConnState::{nm} sets \
+                         (EPOLLIN={has_in}, EPOLLOUT={has_out}) \
+                         but the interest table declares \
+                         (EPOLLIN={want_in}, EPOLLOUT={want_out})"
+                    ),
+                });
+            }
+        }
+    }
+    findings
+}
+
+/// Split a match body into `(pattern, arm-body)` strings.
+fn split_arms(body: &[char]) -> Vec<(String, String)> {
+    let n = body.len();
+    let mut arms = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        // pattern: until `=>` at depth 0
+        let pat_start = i;
+        let mut depth = 0i32;
+        while i < n {
+            let c = body[i];
+            if c == '(' || c == '[' || c == '{' {
+                depth += 1;
+            } else if c == ')' || c == ']' || c == '}' {
+                depth -= 1;
+            } else if depth == 0 && starts_at(body, i, "=>") {
+                break;
+            }
+            i += 1;
+        }
+        if i >= n {
+            break;
+        }
+        let pattern: String =
+            body[pat_start..i].iter().collect();
+        i += 2; // past `=>`
+        while i < n && body[i].is_whitespace() {
+            i += 1;
+        }
+        let arm_start = i;
+        if i < n && body[i] == '{' {
+            let mut d = 0i32;
+            while i < n {
+                if body[i] == '{' {
+                    d += 1;
+                } else if body[i] == '}' {
+                    d -= 1;
+                    if d == 0 {
+                        i += 1;
+                        break;
+                    }
+                }
+                i += 1;
+            }
+        } else {
+            let mut d = 0i32;
+            while i < n {
+                let c = body[i];
+                if c == '(' || c == '[' || c == '{' {
+                    d += 1;
+                } else if c == ')' || c == ']' || c == '}' {
+                    d -= 1;
+                } else if c == ',' && d == 0 {
+                    break;
+                }
+                i += 1;
+            }
+        }
+        let arm: String = body[arm_start..i.min(n)].iter().collect();
+        arms.push((pattern, arm));
+        // past the separating comma, if any
+        while i < n && (body[i] == ',' || body[i].is_whitespace()) {
+            i += 1;
+        }
+    }
+    arms
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn declared_transitions_and_self_loops_allowed() {
+        assert!(transition_allowed(
+            ConnState::ReadHeaders,
+            ConnState::Handle
+        ));
+        assert!(transition_allowed(
+            ConnState::Tail,
+            ConnState::Tail
+        ));
+        assert!(transition_allowed(
+            ConnState::WriteResponse,
+            ConnState::KeepAliveIdle
+        ));
+    }
+
+    #[test]
+    fn undeclared_transitions_rejected() {
+        // a response cannot jump straight back into a body read
+        assert!(!transition_allowed(
+            ConnState::WriteResponse,
+            ConnState::ReadBody
+        ));
+        assert!(!transition_allowed(
+            ConnState::Tail,
+            ConnState::Handle
+        ));
+        assert!(!transition_allowed(
+            ConnState::ReadHeaders,
+            ConnState::KeepAliveIdle
+        ));
+    }
+
+    #[test]
+    fn tables_cover_every_state_once() {
+        for nm in STATE_NAMES {
+            assert_eq!(
+                CONN_INTEREST
+                    .iter()
+                    .filter(|(st, _, _)| state_name(*st) == *nm)
+                    .count(),
+                1,
+                "interest rows for {nm}"
+            );
+        }
+    }
+}

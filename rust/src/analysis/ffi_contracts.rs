@@ -1,0 +1,479 @@
+//! Rule 5: **unsafe/FFI audit**.
+//!
+//! Two layers, both built on the [`crate::analysis::scanner`] token
+//! stream:
+//!
+//! 1. Every `unsafe` token in production code must carry a `// SAFETY:`
+//!    justification on the same line or in the contiguous comment block
+//!    immediately above it. The per-file count of `unsafe` tokens is
+//!    also ratcheted one-way against `baseline.json` (section
+//!    `"unsafe"`), mirroring the unwrap ratchet.
+//! 2. A declarative contract registry ([`FFI_CONTRACTS`]) describes
+//!    each raw syscall wrapper the reactor declares in its `sys`
+//!    module: whether the return value must be checked, whether the
+//!    call must sit inside an EINTR retry loop, and whether it creates
+//!    or consumes a file descriptor. The pass walks every
+//!    `sys::name(..)` call site intra-procedurally and flags
+//!    out-of-contract uses. An extern fn with no contract is itself a
+//!    finding, so the registry cannot silently drift behind the `sys`
+//!    block.
+//!
+//! The checks are deliberately shape-based (like the lock pass): they
+//! recognize the discard forms this codebase actually writes
+//! (`let _ = ...`, a bare-statement call) rather than doing real
+//! dataflow. Fixtures in `tests/analysis.rs` pin both directions.
+
+use super::scanner::{ident_char, starts_at, Scan};
+use super::Finding;
+
+/// Inline opt-out marker for an individually reviewed FFI call site.
+pub const ALLOW_FFI: &str = "lint: allow(ffi)";
+
+/// Contract for one extern fn: how its return value and fds must be
+/// handled at every call site.
+pub struct FfiContract {
+    /// File (relative to `src/`) whose `sys` module declares the fn.
+    pub file: &'static str,
+    pub name: &'static str,
+    /// The return value must not be discarded (`let _ =` / bare
+    /// statement).
+    pub must_check: bool,
+    /// Every call site must sit in a loop that handles EINTR.
+    pub retry_eintr: bool,
+    /// Returns a new fd: the enclosing fn or its type's `Drop` must
+    /// reach a consuming call (`close`).
+    pub creates_fd: bool,
+    /// Consumes an fd (satisfies a `creates_fd` obligation).
+    pub consumes_fd: bool,
+}
+
+const fn c(
+    file: &'static str,
+    name: &'static str,
+    must_check: bool,
+    retry_eintr: bool,
+    creates_fd: bool,
+    consumes_fd: bool,
+) -> FfiContract {
+    FfiContract {
+        file,
+        name,
+        must_check,
+        retry_eintr,
+        creates_fd,
+        consumes_fd,
+    }
+}
+
+/// The registry. Ordering: (file, name, must_check, retry_eintr,
+/// creates_fd, consumes_fd). Rationale for the non-obvious rows:
+///
+/// * `close` is *not* must-check and *not* retried: POSIX leaves the fd
+///   state unspecified after `EINTR`, so retrying risks closing a
+///   reused descriptor — fire and forget is the correct idiom.
+/// * `read` on the eventfd is not retried: the reactor runs the epoll
+///   set level-triggered, so a reader interrupted by a signal simply
+///   sees the fd readable again on the next tick.
+/// * `epoll_wait` is must-check but not loop-retried here: the caller
+///   is itself the event loop; an `EINTR` wakeup just re-enters it.
+/// * `setsockopt` (SO_RCVBUF tuning) is best-effort by design.
+/// * `accept4` / `fcntl` have no extern declaration yet; their rows are
+///   forward contracts so the next reactor change inherits the rules.
+pub const FFI_CONTRACTS: &[FfiContract] = &[
+    c("httpd/reactor.rs", "epoll_create1", true, false, true, false),
+    c("httpd/reactor.rs", "epoll_ctl", true, false, false, false),
+    c("httpd/reactor.rs", "epoll_wait", true, false, false, false),
+    c("httpd/reactor.rs", "eventfd", true, false, true, false),
+    c("httpd/reactor.rs", "close", false, false, false, true),
+    c("httpd/reactor.rs", "read", true, false, false, false),
+    c("httpd/reactor.rs", "write", true, true, false, false),
+    c("httpd/reactor.rs", "getrlimit", true, false, false, false),
+    c("httpd/reactor.rs", "setrlimit", true, false, false, false),
+    c("httpd/reactor.rs", "setsockopt", false, false, false, false),
+    c("httpd/reactor.rs", "accept4", true, true, true, false),
+    c("httpd/reactor.rs", "fcntl", true, false, false, false),
+];
+
+/// Whether the `unsafe` token on 0-based line `idx` is justified: a
+/// `SAFETY:` marker on the same original line or anywhere in the
+/// contiguous `//` comment block directly above it.
+fn has_safety_comment(sc: &Scan, idx: usize) -> bool {
+    if sc
+        .orig_lines
+        .get(idx)
+        .is_some_and(|o| o.contains("SAFETY:"))
+    {
+        return true;
+    }
+    let mut k = idx;
+    while k > 0 {
+        k -= 1;
+        let trimmed = sc.orig_lines[k].trim_start();
+        if !trimmed.starts_with("//") {
+            return false;
+        }
+        if trimmed.contains("SAFETY:") {
+            return true;
+        }
+    }
+    false
+}
+
+/// Whether `text` contains a call `name(` with an identifier boundary
+/// before `name`.
+fn calls(text: &str, name: &str) -> bool {
+    let chars: Vec<char> = text.chars().collect();
+    let pat: Vec<char> = name.chars().collect();
+    if chars.len() <= pat.len() {
+        return false;
+    }
+    for i in 0..chars.len() - pat.len() {
+        if chars[i..i + pat.len()] != pat[..] {
+            continue;
+        }
+        let before_ok = i == 0 || !ident_char(chars[i - 1]);
+        if before_ok && chars[i + pat.len()] == '(' {
+            return true;
+        }
+    }
+    false
+}
+
+/// Classify what happens to the value of a call whose path expression
+/// ends just before char index `path_start` (scanning left): `true`
+/// means the value is discarded.
+fn discarded(chars: &[char], path_start: usize) -> bool {
+    let mut j = path_start as i64 - 1;
+    loop {
+        while j >= 0 && chars[j as usize].is_whitespace() {
+            j -= 1;
+        }
+        if j < 0 {
+            return true;
+        }
+        let c = chars[j as usize];
+        if c == '{' {
+            // `unsafe { sys::x(..) }` — the block forwards the value;
+            // classify what happens to the *block* instead.
+            let mut k = j - 1;
+            while k >= 0 && chars[k as usize].is_whitespace() {
+                k -= 1;
+            }
+            let end = (k + 1) as usize;
+            while k >= 0 && ident_char(chars[k as usize]) {
+                k -= 1;
+            }
+            let word: String =
+                chars[(k + 1) as usize..end].iter().collect();
+            if word == "unsafe" {
+                j = k;
+                continue;
+            }
+            // first expression of some other block → statement position
+            return true;
+        }
+        if c == ';' || c == '}' {
+            return true;
+        }
+        if c == '=' {
+            let prev = if j > 0 { chars[(j - 1) as usize] } else { ' ' };
+            if prev == '=' || prev == '!' || prev == '<' || prev == '>'
+            {
+                return false; // comparison operand
+            }
+            // assignment / let binding: `_` discards, a name checks
+            let mut k = j - 1;
+            while k >= 0 && chars[k as usize].is_whitespace() {
+                k -= 1;
+            }
+            let end = (k + 1) as usize;
+            while k >= 0 && ident_char(chars[k as usize]) {
+                k -= 1;
+            }
+            let word: String =
+                chars[(k + 1) as usize..end].iter().collect();
+            return word == "_";
+        }
+        // `(`, `,`, operators… — the value feeds an expression
+        return false;
+    }
+}
+
+/// Skip left over a `path::` prefix (e.g. `sys::` or `super::sys::`),
+/// returning the index of the first char of the whole path expression.
+fn path_start(chars: &[char], mut name_start: usize) -> usize {
+    loop {
+        if name_start >= 2
+            && chars[name_start - 1] == ':'
+            && chars[name_start - 2] == ':'
+        {
+            let mut j = name_start as i64 - 3;
+            while j >= 0 && ident_char(chars[j as usize]) {
+                j -= 1;
+            }
+            name_start = (j + 1) as usize;
+            continue;
+        }
+        return name_start;
+    }
+}
+
+/// The full unsafe/FFI audit for one file. Returns the findings plus
+/// the file's non-test `unsafe` token count (fed into the baseline
+/// ratchet by the caller).
+pub fn audit(rel: &str, sc: &Scan) -> (Vec<Finding>, u64) {
+    let mut findings = Vec::new();
+    let mut unsafe_count = 0u64;
+
+    // ---- layer 1: SAFETY comments + ratchet count (every file) ----
+    for (idx, text) in sc.lines.iter().enumerate() {
+        let ln = idx + 1;
+        if sc.in_test(ln) {
+            continue;
+        }
+        let chars: Vec<char> = text.chars().collect();
+        let mut seen_on_line = 0u64;
+        let mut i = 0usize;
+        while i < chars.len() {
+            if starts_at(&chars, i, "unsafe")
+                && (i == 0 || !ident_char(chars[i - 1]))
+                && (i + 6 >= chars.len() || !ident_char(chars[i + 6]))
+            {
+                seen_on_line += 1;
+                i += 6;
+                continue;
+            }
+            i += 1;
+        }
+        if seen_on_line == 0 {
+            continue;
+        }
+        unsafe_count += seen_on_line;
+        if !has_safety_comment(sc, idx) {
+            findings.push(Finding {
+                rule: "unsafe-ffi",
+                file: rel.to_string(),
+                line: ln,
+                message: "`unsafe` without a `// SAFETY:` comment on \
+                          the same line or the comment block above"
+                    .to_string(),
+            });
+        }
+    }
+
+    // ---- layer 2: contract checks (registered files only) ----
+    let contracts: Vec<&FfiContract> = FFI_CONTRACTS
+        .iter()
+        .filter(|ct| ct.file == rel)
+        .collect();
+    if contracts.is_empty() {
+        return (findings, unsafe_count);
+    }
+
+    let blanked = sc.blanked();
+    let chars: Vec<char> = blanked.chars().collect();
+    let n = chars.len();
+
+    // drift guard: every fn declared in an `extern` block needs a row
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < n {
+        if chars[i] == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if starts_at(&chars, i, "extern")
+            && (i == 0 || !ident_char(chars[i.wrapping_sub(1)]))
+            && !ident_char(*chars.get(i + 6).unwrap_or(&' '))
+        {
+            // find the block open (skip the blanked ABI string)
+            let mut k = i + 6;
+            while k < n && chars[k] != '{' && chars[k] != ';' {
+                if chars[k] == '\n' {
+                    line += 1;
+                }
+                k += 1;
+            }
+            if k >= n || chars[k] == ';' {
+                i = k + 1;
+                continue;
+            }
+            let mut depth = 1;
+            k += 1;
+            while k < n && depth > 0 {
+                if chars[k] == '\n' {
+                    line += 1;
+                } else if chars[k] == '{' {
+                    depth += 1;
+                } else if chars[k] == '}' {
+                    depth -= 1;
+                } else if starts_at(&chars, k, "fn")
+                    && !ident_char(chars[k.wrapping_sub(1)])
+                    && !ident_char(*chars.get(k + 2).unwrap_or(&' '))
+                {
+                    let mut e = k + 2;
+                    while e < n && chars[e].is_whitespace() {
+                        if chars[e] == '\n' {
+                            line += 1;
+                        }
+                        e += 1;
+                    }
+                    let s = e;
+                    while e < n && ident_char(chars[e]) {
+                        e += 1;
+                    }
+                    let name: String = chars[s..e].iter().collect();
+                    if !name.is_empty()
+                        && !contracts.iter().any(|ct| ct.name == name)
+                    {
+                        findings.push(Finding {
+                            rule: "unsafe-ffi",
+                            file: rel.to_string(),
+                            line,
+                            message: format!(
+                                "extern fn `{name}` has no entry in \
+                                 FFI_CONTRACTS (declare must_check / \
+                                 retry_eintr / fd behavior)"
+                            ),
+                        });
+                    }
+                    k = e;
+                    continue;
+                }
+                k += 1;
+            }
+            i = k;
+            continue;
+        }
+        i += 1;
+    }
+
+    // call-site walk: `path::name(` occurrences
+    for ct in &contracts {
+        let pat: Vec<char> = ct.name.chars().collect();
+        let mut i = 0usize;
+        while i + pat.len() < n {
+            if chars[i..i + pat.len()] != pat[..]
+                || chars[i + pat.len()] != '('
+                || i < 2
+                || chars[i - 1] != ':'
+                || chars[i - 2] != ':'
+            {
+                i += 1;
+                continue;
+            }
+            let ln =
+                chars[..i].iter().filter(|c| **c == '\n').count() + 1;
+            i += pat.len();
+            if sc.in_test(ln) {
+                continue;
+            }
+            if sc
+                .orig_lines
+                .get(ln - 1)
+                .is_some_and(|o| o.contains(ALLOW_FFI))
+            {
+                continue;
+            }
+            let start = path_start(&chars, i - pat.len());
+            if ct.must_check && discarded(&chars, start) {
+                findings.push(Finding {
+                    rule: "unsafe-ffi",
+                    file: rel.to_string(),
+                    line: ln,
+                    message: format!(
+                        "return value of `{}` is discarded but the \
+                         contract says must_check (bind and handle \
+                         it, or mark `{}`)",
+                        ct.name, ALLOW_FFI
+                    ),
+                });
+            }
+            let encl = sc.fn_at(ln);
+            if ct.retry_eintr {
+                let ok = encl.is_some_and(|f| {
+                    let body = sc.fn_text(f);
+                    (super::scanner::word_in(&body, "loop")
+                        || super::scanner::word_in(&body, "while"))
+                        && (body.contains("Interrupted")
+                            || body.contains("EINTR"))
+                });
+                if !ok {
+                    findings.push(Finding {
+                        rule: "unsafe-ffi",
+                        file: rel.to_string(),
+                        line: ln,
+                        message: format!(
+                            "`{}` call is not inside an EINTR retry \
+                             loop (contract retry_eintr; loop on \
+                             ErrorKind::Interrupted)",
+                            ct.name
+                        ),
+                    });
+                }
+            }
+            if ct.creates_fd {
+                let consumers: Vec<&str> = contracts
+                    .iter()
+                    .filter(|c2| c2.consumes_fd)
+                    .map(|c2| c2.name)
+                    .collect();
+                let in_fn = encl.is_some_and(|f| {
+                    let body = sc.fn_text(f);
+                    consumers.iter().any(|nm| calls(&body, nm))
+                });
+                let in_drop = !in_fn
+                    && sc.impl_at(ln).is_some_and(|im| {
+                        let ty = impl_type(&im.header);
+                        sc.impls.iter().any(|other| {
+                            is_drop_impl_for(&other.header, &ty) && {
+                                let body = sc.lines[other.start - 1
+                                    ..other.end.min(sc.lines.len())]
+                                    .join("\n");
+                                consumers
+                                    .iter()
+                                    .any(|nm| calls(&body, nm))
+                            }
+                        })
+                    });
+                if !in_fn && !in_drop {
+                    findings.push(Finding {
+                        rule: "unsafe-ffi",
+                        file: rel.to_string(),
+                        line: ln,
+                        message: format!(
+                            "`{}` creates an fd but neither this fn \
+                             nor the owning type's Drop reaches a \
+                             consuming call (fd leak)",
+                            ct.name
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    (findings, unsafe_count)
+}
+
+/// The implemented type name from an impl header, e.g. `Drop for
+/// EventFd` → `EventFd`, `EventFd` → `EventFd`.
+fn impl_type(header: &str) -> String {
+    let parts: Vec<&str> = header.split_whitespace().collect();
+    let tok = match parts.iter().position(|p| *p == "for") {
+        Some(pos) if pos + 1 < parts.len() => parts[pos + 1],
+        _ => parts.first().copied().unwrap_or(""),
+    };
+    tok.trim_end_matches(|c| c == '<' || c == '>').to_string()
+}
+
+/// Whether `header` is `Drop for <ty>` (an `impl Drop for X` header as
+/// the scanner normalizes it).
+fn is_drop_impl_for(header: &str, ty: &str) -> bool {
+    let parts: Vec<&str> = header.split_whitespace().collect();
+    parts.first() == Some(&"Drop")
+        && parts.iter().position(|p| *p == "for").is_some_and(|pos| {
+            parts.get(pos + 1).copied() == Some(ty)
+        })
+}

@@ -2,7 +2,7 @@
 //! platform's performance and liveness depend on.
 //!
 //! The module is dependency-free (like `util/json.rs`) and enforces
-//! four rules over a hand-rolled token scan of `src/`:
+//! seven rules over a hand-rolled token scan of `src/`:
 //!
 //! 1. lock acquisition order ([`lock_order`], [`rules::lock_order`]),
 //! 2. zero allocations in registered hot paths
@@ -10,18 +10,31 @@
 //! 3. a one-way `.unwrap()`/`.expect(` ratchet for request paths
 //!    ([`baseline`]),
 //! 4. resource-kind registration completeness
-//!    ([`rules::completeness`]).
+//!    ([`rules::completeness`]),
+//! 5. the unsafe/FFI audit — `// SAFETY:` comments, syscall return
+//!    contracts, fd lifecycles, and a one-way unsafe-block ratchet
+//!    ([`ffi_contracts`]),
+//! 6. the atomics-ordering contract — every atomic site registered
+//!    with a role and checked against its allowed orderings
+//!    ([`atomics`]),
+//! 7. the connection state-machine contract — declared transitions,
+//!    wildcard-free state matches, and epoll-interest agreement
+//!    ([`conn_contract`]).
 //!
 //! The same rank table also backs a debug-build runtime tracker
 //! ([`tracker`]) wired into `storage/kv.rs`, `storage/metrics.rs` and
-//! `httpd/server.rs`.
+//! `httpd/server.rs`; the conn transition table likewise drives a
+//! debug-build assert in `httpd/conn.rs::Conn::set_state`.
 //!
 //! Run it with `cargo run --bin submarine-lint`; CI runs it as a
 //! blocking step and uploads the `--report` JSON as an artifact. See
 //! `docs/ANALYSIS.md` for the workflow.
 
+pub mod atomics;
 pub mod baseline;
 pub mod benchgate;
+pub mod conn_contract;
+pub mod ffi_contracts;
 pub mod lock_order;
 pub mod rules;
 pub mod scanner;
@@ -32,6 +45,7 @@ use std::collections::BTreeMap;
 use std::fs;
 use std::io;
 use std::path::Path;
+use std::time::Instant;
 
 /// One diagnostic from any rule.
 #[derive(Debug, Clone)]
@@ -57,6 +71,16 @@ impl Finding {
     }
 }
 
+/// Per-pass bookkeeping surfaced in the JSON report so CI trends can
+/// spot a pass that suddenly explodes (findings or runtime).
+pub struct PassStat {
+    pub name: &'static str,
+    /// Blocking findings this pass contributed.
+    pub findings: usize,
+    /// Wall-clock duration of the pass, microseconds.
+    pub micros: u64,
+}
+
 /// Full result of a lint run over one source tree.
 pub struct Report {
     /// Blocking findings — any entry fails the run.
@@ -66,6 +90,11 @@ pub struct Report {
     /// Current unwrap/expect counts per in-scope file (the shape
     /// `--write-baseline` persists).
     pub unwrap_counts: BTreeMap<String, u64>,
+    /// Current unsafe-block counts per file (the other section
+    /// `--write-baseline` persists).
+    pub unsafe_counts: BTreeMap<String, u64>,
+    /// One entry per pass, in run order.
+    pub passes: Vec<PassStat>,
     /// Number of `.rs` files scanned.
     pub files_scanned: usize,
 }
@@ -94,10 +123,25 @@ impl Report {
                     .collect(),
             )
         }
-        let counts = Json::Obj(
-            self.unwrap_counts
+        fn counts(map: &BTreeMap<String, u64>) -> Json {
+            Json::Obj(
+                map.iter()
+                    .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                    .collect(),
+            )
+        }
+        let passes = Json::Arr(
+            self.passes
                 .iter()
-                .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                .map(|p| {
+                    Json::obj()
+                        .set("name", Json::Str(p.name.to_string()))
+                        .set(
+                            "findings",
+                            Json::Num(p.findings as f64),
+                        )
+                        .set("micros", Json::Num(p.micros as f64))
+                })
                 .collect(),
         );
         Json::obj()
@@ -108,7 +152,9 @@ impl Report {
             )
             .set("findings", arr(&self.findings))
             .set("warnings", arr(&self.warnings))
-            .set("unwrap_counts", counts)
+            .set("unwrap_counts", counts(&self.unwrap_counts))
+            .set("unsafe_counts", counts(&self.unsafe_counts))
+            .set("passes", passes)
     }
 }
 
@@ -156,26 +202,99 @@ pub fn run_all(crate_dir: &Path) -> Result<Report, String> {
         .map(|(rel, text)| (rel.clone(), scanner::scan(text)))
         .collect();
 
+    let base = baseline::load()?;
     let mut findings = Vec::new();
+    let mut warnings = Vec::new();
+    let mut passes = Vec::new();
+    // records one pass: appends its findings and timing, keeps the
+    // blocking/non-blocking split
+    let mut run_pass = |name: &'static str,
+                        found: Vec<Finding>,
+                        warned: Vec<Finding>,
+                        started: Instant| {
+        passes.push(PassStat {
+            name,
+            findings: found.len(),
+            micros: started.elapsed().as_micros() as u64,
+        });
+        findings.extend(found);
+        warnings.extend(warned);
+    };
+
+    let t = Instant::now();
+    let mut found = Vec::new();
+    for (rel, sc) in &scans {
+        found.extend(rules::lock_order(rel, sc));
+    }
+    run_pass("lock-order", found, Vec::new(), t);
+
+    let t = Instant::now();
+    let mut found = Vec::new();
+    for (rel, sc) in &scans {
+        found.extend(rules::hot_path(rel, sc));
+    }
+    run_pass("hot-path", found, Vec::new(), t);
+
+    let t = Instant::now();
     let mut unwrap_counts = BTreeMap::new();
     for (rel, sc) in &scans {
-        findings.extend(rules::lock_order(rel, sc));
-        findings.extend(rules::hot_path(rel, sc));
         let sites = rules::unwrap_sites(rel, sc);
         if !sites.is_empty() {
             unwrap_counts.insert(rel.clone(), sites.len() as u64);
         }
     }
-    findings.extend(rules::completeness(&scans));
+    let ratchet = baseline::ratchet(
+        &unwrap_counts,
+        &base.unwrap,
+        "unwrap-ratchet",
+        "unwrap/expect sites",
+        "handle the error (v2 envelope / poison recovery) instead",
+    );
+    run_pass("unwrap-ratchet", ratchet.errors, ratchet.warnings, t);
 
-    let base = baseline::load()?;
-    let ratchet = baseline::ratchet(&unwrap_counts, &base);
-    findings.extend(ratchet.errors);
+    let t = Instant::now();
+    run_pass(
+        "completeness",
+        rules::completeness(&scans),
+        Vec::new(),
+        t,
+    );
+
+    let t = Instant::now();
+    let mut found = Vec::new();
+    let mut unsafe_counts = BTreeMap::new();
+    for (rel, sc) in &scans {
+        let (file_findings, unsafe_blocks) =
+            ffi_contracts::audit(rel, sc);
+        found.extend(file_findings);
+        if unsafe_blocks > 0 {
+            unsafe_counts.insert(rel.clone(), unsafe_blocks);
+        }
+    }
+    let ratchet = baseline::ratchet(
+        &unsafe_counts,
+        &base.unsafe_blocks,
+        "unsafe-ratchet",
+        "unsafe blocks",
+        "use a safe wrapper, or move the syscall behind an audited \
+         helper in `reactor.rs::sys`",
+    );
+    found.extend(ratchet.errors);
+    run_pass("unsafe-ffi", found, ratchet.warnings, t);
+
+    let t = Instant::now();
+    let outcome = atomics::check(&scans);
+    run_pass("atomics", outcome.findings, outcome.warnings, t);
+
+    let t = Instant::now();
+    run_pass("conn-state", conn_contract::check(&scans), Vec::new(), t);
 
     Ok(Report {
         findings,
-        warnings: ratchet.warnings,
+        warnings,
         unwrap_counts,
+        unsafe_counts,
+        passes,
         files_scanned: scans.len(),
     })
 }
@@ -203,6 +322,22 @@ mod tests {
         assert!(report.files_scanned > 20);
         // the grandfathered sites really exist
         assert!(!report.unwrap_counts.is_empty());
+        assert!(!report.unsafe_counts.is_empty());
+        // all seven passes ran
+        let names: Vec<&str> =
+            report.passes.iter().map(|p| p.name).collect();
+        assert_eq!(
+            names,
+            [
+                "lock-order",
+                "hot-path",
+                "unwrap-ratchet",
+                "completeness",
+                "unsafe-ffi",
+                "atomics",
+                "conn-state",
+            ]
+        );
     }
 
     #[test]
@@ -216,6 +351,12 @@ mod tests {
             }],
             warnings: Vec::new(),
             unwrap_counts: BTreeMap::new(),
+            unsafe_counts: BTreeMap::new(),
+            passes: vec![PassStat {
+                name: "lock-order",
+                findings: 1,
+                micros: 42,
+            }],
             files_scanned: 1,
         };
         let j = rep.to_json();
@@ -226,5 +367,8 @@ mod tests {
         let dump = j.dump();
         assert!(dump.contains("\"lock-order\""));
         assert!(dump.contains("\"storage/kv.rs\""));
+        assert!(dump.contains("\"passes\""));
+        assert!(dump.contains("\"micros\""));
+        assert!(dump.contains("\"unsafe_counts\""));
     }
 }

@@ -61,6 +61,92 @@ impl Scan {
     pub fn blanked(&self) -> String {
         self.lines.join("\n")
     }
+
+    /// The innermost `fn` span containing `line`, if any.
+    pub fn fn_at(&self, line: usize) -> Option<&FnSpan> {
+        self.fns
+            .iter()
+            .filter(|f| f.start <= line && line <= f.end)
+            .min_by_key(|f| f.end - f.start)
+    }
+
+    /// The innermost `impl` span containing `line`, if any.
+    pub fn impl_at(&self, line: usize) -> Option<&ImplSpan> {
+        self.impls
+            .iter()
+            .filter(|i| i.start <= line && line <= i.end)
+            .min_by_key(|i| i.end - i.start)
+    }
+
+    /// The blanked text of one `fn` span (used by the FFI and conn
+    /// passes for whole-function token checks).
+    pub fn fn_text(&self, f: &FnSpan) -> String {
+        self.lines[f.start - 1..f.end.min(self.lines.len())].join("\n")
+    }
+}
+
+/// Identifier-character test shared by the rule modules.
+pub(crate) fn ident_char(c: char) -> bool {
+    is_ident(c)
+}
+
+/// Whether `chars[pos..]` starts with `pat`.
+pub(crate) fn starts_at(chars: &[char], pos: usize, pat: &str) -> bool {
+    let mut i = pos;
+    for pc in pat.chars() {
+        if i >= chars.len() || chars[i] != pc {
+            return false;
+        }
+        i += 1;
+    }
+    true
+}
+
+/// The identifier immediately left of `pos`, skipping one balanced
+/// `[...]` index expression — the same receiver resolution the lock
+/// pass uses, so `self.shards[shard_of(ns)].load(..)` resolves to
+/// `shards`.
+pub(crate) fn ident_before(chars: &[char], pos: usize) -> String {
+    let mut j = pos as i64 - 1;
+    if j >= 0 && chars[j as usize] == ']' {
+        let mut depth = 1;
+        j -= 1;
+        while j >= 0 && depth > 0 {
+            if chars[j as usize] == ']' {
+                depth += 1;
+            } else if chars[j as usize] == '[' {
+                depth -= 1;
+            }
+            j -= 1;
+        }
+    }
+    let end = (j + 1) as usize;
+    while j >= 0 && is_ident(chars[j as usize]) {
+        j -= 1;
+    }
+    chars[(j + 1) as usize..end].iter().collect()
+}
+
+/// Whether `word` occurs in `text` with identifier boundaries on both
+/// sides.
+pub(crate) fn word_in(text: &str, word: &str) -> bool {
+    let chars: Vec<char> = text.chars().collect();
+    let pat: Vec<char> = word.chars().collect();
+    if pat.is_empty() || chars.len() < pat.len() {
+        return false;
+    }
+    for i in 0..=chars.len() - pat.len() {
+        if chars[i..i + pat.len()] != pat[..] {
+            continue;
+        }
+        let before_ok = i == 0 || !is_ident(chars[i - 1]);
+        let after = i + pat.len();
+        let after_ok = after >= chars.len() || !is_ident(chars[after]);
+        if before_ok && after_ok {
+            return true;
+        }
+    }
+    false
 }
 
 fn is_ident(c: char) -> bool {

@@ -78,7 +78,10 @@ fn main() -> ExitCode {
             .join("src")
             .join("analysis")
             .join("baseline.json");
-        let text = analysis::baseline::render(&report.unwrap_counts);
+        let text = analysis::baseline::render(
+            &report.unwrap_counts,
+            &report.unsafe_counts,
+        );
         if let Err(e) = std::fs::write(&path, text) {
             eprintln!(
                 "submarine-lint: writing {}: {e}",
@@ -113,6 +116,12 @@ fn main() -> ExitCode {
         report.findings.len(),
         report.warnings.len()
     );
+    for p in &report.passes {
+        println!(
+            "  pass {:<14} {:>4} finding(s) {:>7} us",
+            p.name, p.findings, p.micros
+        );
+    }
     if report.ok() {
         ExitCode::SUCCESS
     } else {

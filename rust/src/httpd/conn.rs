@@ -215,11 +215,11 @@ impl Conn {
                 self.req_start = None;
             }
             ParseOutcome::Partial { in_body } => {
-                self.state = if *in_body {
+                self.set_state(if *in_body {
                     ConnState::ReadBody
                 } else {
                     ConnState::ReadHeaders
-                };
+                });
             }
             ParseOutcome::Bad(_) => {}
         }
@@ -228,7 +228,7 @@ impl Conn {
 
     /// Reset per-request bookkeeping after a response fully drains.
     pub fn await_next_request(&mut self, now: Instant) {
-        self.state = ConnState::KeepAliveIdle;
+        self.set_state(ConnState::KeepAliveIdle);
         self.req_start = None;
         self.seen_path = None;
         self.idle_since = now;
@@ -236,6 +236,28 @@ impl Conn {
             self.rbuf.clear();
             self.rpos = 0;
         }
+    }
+
+    /// The single funnel for state changes. The lint's conn-state pass
+    /// rejects direct `.state = ...` stores anywhere else, and debug
+    /// builds check every change against the declared transition table
+    /// in `analysis::conn_contract` — the same table the static pass
+    /// verifies the reactor against. Re-asserting the current state is
+    /// a no-op (self-loops are always legal).
+    pub fn set_state(&mut self, to: ConnState) {
+        if self.state == to {
+            return;
+        }
+        #[cfg(debug_assertions)]
+        assert!(
+            crate::analysis::conn_contract::transition_allowed(
+                self.state, to
+            ),
+            "undeclared conn state transition {:?} -> {:?}",
+            self.state,
+            to
+        );
+        self.state = to;
     }
 }
 
@@ -406,5 +428,45 @@ mod tests {
     fn bare_lf_line_endings_are_tolerated() {
         let (_, out) = parse(b"GET /x HTTP/1.1\nHost: a\n\n");
         assert!(matches!(out, ParseOutcome::Complete(_)));
+    }
+
+    fn test_conn() -> Conn {
+        let listener =
+            std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stream = std::net::TcpStream::connect(addr).unwrap();
+        let _accepted = listener.accept().unwrap();
+        Conn::new(stream, Instant::now())
+    }
+
+    #[test]
+    fn set_state_walks_the_declared_cycle() {
+        let mut c = test_conn();
+        assert_eq!(c.state, ConnState::ReadHeaders);
+        for to in [
+            ConnState::ReadBody,
+            ConnState::Handle,
+            ConnState::Tail,
+            ConnState::WriteResponse,
+            ConnState::KeepAliveIdle,
+            ConnState::ReadHeaders,
+        ] {
+            c.set_state(to);
+            assert_eq!(c.state, to);
+        }
+        // re-asserting the current state is always a no-op
+        c.set_state(ConnState::ReadHeaders);
+        assert_eq!(c.state, ConnState::ReadHeaders);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "undeclared conn state transition")]
+    fn set_state_rejects_undeclared_transition() {
+        let mut c = test_conn();
+        c.set_state(ConnState::Handle);
+        c.set_state(ConnState::WriteResponse);
+        // a drained response can never jump back into a body read
+        c.set_state(ConnState::ReadBody);
     }
 }

@@ -35,12 +35,14 @@ use super::server::{
 };
 use crate::analysis::lock_order::LockRank;
 use crate::analysis::tracker;
-use crate::storage::MetaStore;
+use crate::storage::{MetaStore, MetricStore};
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::os::unix::io::{AsRawFd, RawFd};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{
+    AtomicBool, AtomicU64, AtomicUsize, Ordering,
+};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -118,6 +120,9 @@ pub fn raise_nofile_limit(want: u64) -> u64 {
         rlim_cur: 0,
         rlim_max: 0,
     };
+    // SAFETY: `rl` is a live, properly-aligned `Rlimit` whose #[repr(C)]
+    // layout matches the kernel's struct rlimit (two u64s); the kernel
+    // writes at most that many bytes. Return value is checked.
     if unsafe { sys::getrlimit(sys::RLIMIT_NOFILE, &mut rl) } != 0 {
         return 1024;
     }
@@ -129,6 +134,9 @@ pub fn raise_nofile_limit(want: u64) -> u64 {
         rlim_cur: target,
         rlim_max: rl.rlim_max,
     };
+    // SAFETY: `bumped` is a valid #[repr(C)] Rlimit read (not written)
+    // by the kernel; rlim_cur <= rlim_max holds by construction above.
+    // Return value is checked — on failure the old limit is reported.
     if unsafe { sys::setrlimit(sys::RLIMIT_NOFILE, &bumped) } == 0 {
         target
     } else {
@@ -141,6 +149,11 @@ pub fn raise_nofile_limit(want: u64) -> u64 {
 /// realistically small amount of data.
 pub fn set_recv_buffer(stream: &TcpStream, bytes: usize) {
     let v = bytes as i32;
+    // SAFETY: the fd is live for the duration of the call (borrowed
+    // from `stream`); `optval` points at a stack i32 and `optlen` is
+    // exactly its 4-byte size. Best-effort test knob — the contract
+    // registry marks setsockopt as not-must-check, so the discarded
+    // return is deliberate.
     let _ = unsafe {
         sys::setsockopt(
             stream.as_raw_fd(),
@@ -159,6 +172,9 @@ struct Epoll {
 
 impl Epoll {
     fn new() -> std::io::Result<Epoll> {
+        // SAFETY: no pointers cross the boundary; the returned fd is
+        // checked and, when valid, owned by the new Epoll until Drop
+        // closes it.
         let fd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
         if fd < 0 {
             return Err(std::io::Error::last_os_error());
@@ -177,6 +193,9 @@ impl Epoll {
             events,
             data: token,
         };
+        // SAFETY: `self.fd` is the epoll fd this struct owns; `ev` is
+        // a live EpollEvent whose repr matches the kernel ABI (packed
+        // on x86_64), only read by the kernel. Return value checked.
         let rc = unsafe { sys::epoll_ctl(self.fd, op, fd, &mut ev) };
         if rc < 0 {
             return Err(std::io::Error::last_os_error());
@@ -213,6 +232,11 @@ impl Epoll {
         events: &mut [sys::EpollEvent],
         timeout_ms: i32,
     ) -> usize {
+        // SAFETY: `events` is a live mutable slice of ABI-compatible
+        // EpollEvent structs and `maxevents` is exactly its length, so
+        // the kernel never writes past it. `self.fd` is owned by this
+        // struct. rc is checked: negative (EINTR included) maps to
+        // zero events and the caller's loop re-enters the wait.
         let rc = unsafe {
             sys::epoll_wait(
                 self.fd,
@@ -231,6 +255,10 @@ impl Epoll {
 
 impl Drop for Epoll {
     fn drop(&mut self) {
+        // SAFETY: `self.fd` was returned by epoll_create1 and is
+        // closed exactly once, here. close is fire-and-forget: POSIX
+        // leaves the fd state unspecified after EINTR, so retrying
+        // could close an fd another thread just received.
         unsafe {
             sys::close(self.fd);
         }
@@ -241,36 +269,79 @@ impl Drop for Epoll {
 /// and the feed pump `wake` it; the reactor `drain`s it on readiness.
 struct EventFd {
     fd: RawFd,
+    /// Persistent `wake` failures (anything but success / EINTR /
+    /// EAGAIN). A lost doorbell write stalls completions, so the
+    /// reactor sweep publishes this into the metrics store instead of
+    /// letting the signal vanish silently.
+    failures: AtomicU64,
 }
 
 impl EventFd {
     fn new() -> std::io::Result<EventFd> {
+        // SAFETY: no pointers cross the boundary; the returned fd is
+        // checked and, when valid, owned by the new EventFd until
+        // Drop closes it.
         let fd = unsafe { sys::eventfd(0, sys::EFD_NONBLOCK) };
         if fd < 0 {
             return Err(std::io::Error::last_os_error());
         }
-        Ok(EventFd { fd })
+        Ok(EventFd {
+            fd,
+            failures: AtomicU64::new(0),
+        })
     }
 
     fn raw(&self) -> RawFd {
         self.fd
     }
 
+    /// Ring the doorbell. `EINTR` is retried; `EAGAIN` means the
+    /// 64-bit counter is saturated, i.e. a wakeup is already pending,
+    /// so the signal cannot be lost. Any other failure is counted for
+    /// the sweep to publish.
     fn wake(&self) {
         let one: u64 = 1;
-        let _ = unsafe {
-            sys::write(self.fd, (&one as *const u64).cast(), 8)
-        };
+        loop {
+            // SAFETY: `self.fd` is a live eventfd owned by this struct
+            // until Drop; the buffer is a stack u64 valid for exactly
+            // the 8 bytes the kernel reads. Return value is checked
+            // below (short writes cannot happen on an eventfd: the
+            // kernel accepts exactly 8 bytes or fails).
+            let rc = unsafe {
+                sys::write(self.fd, (&one as *const u64).cast(), 8)
+            };
+            if rc == 8 {
+                return;
+            }
+            match std::io::Error::last_os_error().kind() {
+                std::io::ErrorKind::Interrupted => continue,
+                // counter saturated — a wakeup is already pending
+                std::io::ErrorKind::WouldBlock => return,
+                _ => {
+                    self.failures.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+            }
+        }
     }
 
     fn drain(&self) {
         let mut buf = [0u8; 8];
+        // SAFETY: `self.fd` is the owned eventfd; `buf` is a live
+        // 8-byte stack buffer matching `count`. The return value is
+        // the loop condition: the eventfd is level-drained until it
+        // reports anything but a full 8-byte counter read (EAGAIN on
+        // empty; EINTR just means this wake is picked up by the next
+        // readiness event — the counter still holds the value).
         while unsafe { sys::read(self.fd, buf.as_mut_ptr(), 8) } == 8 {}
     }
 }
 
 impl Drop for EventFd {
     fn drop(&mut self) {
+        // SAFETY: `self.fd` was returned by eventfd and is closed
+        // exactly once, here. Fire-and-forget for the same POSIX
+        // EINTR reason as `Epoll`'s Drop.
         unsafe {
             sys::close(self.fd);
         }
@@ -474,6 +545,10 @@ pub(crate) struct Reactor {
     idle_timeout: Duration,
     wbuf_cap: usize,
     done_batch: Vec<Done>,
+    metrics: Arc<MetricStore>,
+    /// Doorbell failures already published to `metrics`; the sweep
+    /// only logs when the counter moves past this watermark.
+    wake_failures_seen: u64,
 }
 
 /// Deferred per-slot decision computed under an immutable borrow.
@@ -489,6 +564,7 @@ impl Reactor {
         listener: TcpListener,
         router: Arc<Router>,
         store: Arc<MetaStore>,
+        metrics: Arc<MetricStore>,
         active: Arc<AtomicUsize>,
         stop: Arc<AtomicBool>,
         workers: usize,
@@ -525,6 +601,8 @@ impl Reactor {
             idle_timeout,
             wbuf_cap,
             done_batch: Vec::new(),
+            metrics,
+            wake_failures_seen: 0,
         })
     }
 
@@ -682,7 +760,9 @@ impl Reactor {
         }
         let _ = stream.set_nodelay(true);
         self.active.fetch_add(1, Ordering::Relaxed);
-        let guard = ConnGuard(Arc::clone(&self.active));
+        let guard = ConnGuard {
+            active: Arc::clone(&self.active),
+        };
         let mut conn = Conn::new(stream, now);
         conn.interest = sys::EPOLLIN | sys::EPOLLRDHUP;
         let fd = conn.stream.as_raw_fd();
@@ -788,7 +868,9 @@ impl Reactor {
             | ConnState::KeepAliveIdle => {
                 self.pump_requests(idx, now)
             }
-            _ => false,
+            ConnState::Handle
+            | ConnState::WriteResponse
+            | ConnState::Tail => false,
         }
     }
 
@@ -805,17 +887,19 @@ impl Reactor {
             ConnState::ReadHeaders
             | ConnState::ReadBody
             | ConnState::KeepAliveIdle => {}
-            _ => return false,
+            ConnState::Handle
+            | ConnState::WriteResponse
+            | ConnState::Tail => return false,
         }
         if slot.conn.state == ConnState::KeepAliveIdle
             && slot.conn.pending_in()
         {
-            slot.conn.state = ConnState::ReadHeaders;
+            slot.conn.set_state(ConnState::ReadHeaders);
         }
         match slot.conn.try_parse() {
             ParseOutcome::Partial { .. } => slot.conn.eof,
             ParseOutcome::Complete(req) => {
-                slot.conn.state = ConnState::Handle;
+                slot.conn.set_state(ConnState::Handle);
                 let token = token_of(slot.gen, idx);
                 if is_tune(&req) {
                     self.migrate_tune(idx, req);
@@ -840,7 +924,7 @@ impl Reactor {
                     false,
                     false,
                 );
-                slot.conn.state = ConnState::WriteResponse;
+                slot.conn.set_state(ConnState::WriteResponse);
                 match slot.conn.flush_out() {
                     WriteOutcome::Done | WriteOutcome::Err => true,
                     WriteOutcome::Blocked => false,
@@ -870,8 +954,11 @@ impl Reactor {
                         self.after_response_drained(idx, now);
                         false
                     }
-                    ConnState::Tail if tail_finished => true,
-                    _ => false,
+                    ConnState::Tail => tail_finished,
+                    ConnState::ReadHeaders
+                    | ConnState::ReadBody
+                    | ConnState::Handle
+                    | ConnState::KeepAliveIdle => false,
                 }
             }
         }
@@ -980,7 +1067,7 @@ impl Reactor {
         slot.conn.keep = keep;
         let _ =
             d.resp.write_to_opts(&mut slot.conn.wbuf, keep, d.head);
-        slot.conn.state = ConnState::WriteResponse;
+        slot.conn.set_state(ConnState::WriteResponse);
         match slot.conn.flush_out() {
             WriteOutcome::Done => {
                 self.after_response_drained(idx, now)
@@ -1012,7 +1099,7 @@ impl Reactor {
                 // HEAD of a stream: headers only, then close
                 slot.conn.keep = false;
                 slot.conn.served += 1;
-                slot.conn.state = ConnState::WriteResponse;
+                slot.conn.set_state(ConnState::WriteResponse);
                 match slot.conn.flush_out() {
                     WriteOutcome::Done | WriteOutcome::Err => {
                         self.close_conn(idx)
@@ -1029,7 +1116,7 @@ impl Reactor {
             keep: d.keep,
             finished: false,
         });
-        slot.conn.state = ConnState::Tail;
+        slot.conn.set_state(ConnState::Tail);
         self.step_tail(idx, now);
         self.rearm(idx);
     }
@@ -1097,7 +1184,7 @@ impl Reactor {
                         head,
                     );
                     slot.tail = None;
-                    slot.conn.state = ConnState::WriteResponse;
+                    slot.conn.set_state(ConnState::WriteResponse);
                     break;
                 }
             }
@@ -1115,11 +1202,18 @@ impl Reactor {
             .unwrap_or(false);
         match slot.conn.flush_out() {
             WriteOutcome::Done => match state {
-                ConnState::Tail if finished => self.close_conn(idx),
+                ConnState::Tail => {
+                    if finished {
+                        self.close_conn(idx);
+                    }
+                }
                 ConnState::WriteResponse => {
                     self.after_response_drained(idx, now)
                 }
-                _ => {}
+                ConnState::ReadHeaders
+                | ConnState::ReadBody
+                | ConnState::Handle
+                | ConnState::KeepAliveIdle => {}
             },
             WriteOutcome::Blocked => self.rearm(idx),
             WriteOutcome::Err => self.close_conn(idx),
@@ -1132,6 +1226,20 @@ impl Reactor {
     /// requests that stalled mid-arrival (slow loris), and push tail
     /// deadlines over the line.
     fn sweep(&mut self, now: Instant) {
+        // surface doorbell write failures: a dead eventfd stalls
+        // completions, so persistent failures land in the shared
+        // metrics series instead of disappearing
+        let fails = self.wake.failures.load(Ordering::Relaxed);
+        if fails > self.wake_failures_seen {
+            self.wake_failures_seen = fails;
+            self.metrics.log_bounded(
+                super::middleware::HTTP_METRICS_KEY,
+                "eventfd_wake_failures",
+                fails,
+                fails as f64,
+                super::middleware::HTTP_METRICS_CAP,
+            );
+        }
         for idx in 0..self.slots.len() {
             let action = {
                 let Some(slot) =
@@ -1178,7 +1286,8 @@ impl Reactor {
                             None
                         }
                     }
-                    _ => None,
+                    ConnState::Handle
+                    | ConnState::WriteResponse => None,
                 }
             };
             match action {
@@ -1211,7 +1320,7 @@ impl Reactor {
             error_json(envelope, 408, "Timeout", "request incomplete");
         slot.conn.keep = false;
         let _ = resp.write_to_opts(&mut slot.conn.wbuf, false, false);
-        slot.conn.state = ConnState::WriteResponse;
+        slot.conn.set_state(ConnState::WriteResponse);
         match slot.conn.flush_out() {
             WriteOutcome::Done | WriteOutcome::Err => {
                 self.close_conn(idx)

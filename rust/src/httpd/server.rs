@@ -197,6 +197,7 @@ pub struct Server {
     router: Arc<Router>,
     listener: TcpListener,
     store: Arc<MetaStore>,
+    metrics: Arc<MetricStore>,
     active: Arc<AtomicUsize>,
     stop: Arc<AtomicBool>,
     local_addr: std::net::SocketAddr,
@@ -204,11 +205,13 @@ pub struct Server {
 }
 
 /// Decrements the live-connection count even if a handler panics.
-pub(crate) struct ConnGuard(pub(crate) Arc<AtomicUsize>);
+pub(crate) struct ConnGuard {
+    pub(crate) active: Arc<AtomicUsize>,
+}
 
 impl Drop for ConnGuard {
     fn drop(&mut self) {
-        self.0.fetch_sub(1, Ordering::Relaxed);
+        self.active.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
@@ -251,6 +254,8 @@ impl Server {
         // the reactor's feed pump needs the store after `services`
         // moves into the router
         let store = Arc::clone(&services.store);
+        // the reactor sweep publishes doorbell failures here
+        let metrics = Arc::clone(&services.metrics);
         let router = build_api(services, cfg);
         let listener = TcpListener::bind(("127.0.0.1", port))?;
         let local_addr = listener.local_addr()?;
@@ -258,6 +263,7 @@ impl Server {
             router: Arc::new(router),
             listener,
             store,
+            metrics,
             active: Arc::new(AtomicUsize::new(0)),
             stop: Arc::new(AtomicBool::new(false)),
             local_addr,
@@ -287,6 +293,7 @@ impl Server {
             self.listener.try_clone()?,
             Arc::clone(&self.router),
             Arc::clone(&self.store),
+            Arc::clone(&self.metrics),
             Arc::clone(&self.active),
             Arc::clone(&self.stop),
             workers,

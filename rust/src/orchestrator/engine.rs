@@ -58,7 +58,7 @@ impl ExecutionEngine {
         let handle = std::thread::Builder::new()
             .name("submarine-engine".into())
             .spawn(move || {
-                while !loop_stop.load(Ordering::Relaxed) {
+                while !loop_stop.load(Ordering::Acquire) {
                     // Only pump (and so advance simulated time) when a
                     // pass could do something: an idle server must not
                     // dilute gpu_utilization with idle sim time or burn
@@ -89,7 +89,9 @@ impl ExecutionEngine {
 
     /// Stop the loop and join the thread (idempotent).
     pub fn shutdown(&self) {
-        self.stop.store(true, Ordering::Relaxed);
+        // Release pairs with the loop's Acquire: work completed before
+        // shutdown is visible to whoever observes the stop.
+        self.stop.store(true, Ordering::Release);
         if let Some(h) = self
             .handle
             .lock()

@@ -111,7 +111,7 @@ impl Submitter for LocalSubmitter {
                     // the manifest initial params
                     let mut params: Option<Vec<Vec<f32>>> = None;
                     while done < cfg.steps {
-                        if kill.load(Ordering::Relaxed) {
+                        if kill.load(Ordering::Acquire) {
                             return Ok(());
                         }
                         cfg_chunk.steps = chunk.min(cfg.steps - done);
@@ -145,7 +145,7 @@ impl Submitter for LocalSubmitter {
                 };
                 match run() {
                     Ok(()) => {
-                        if kill.load(Ordering::Relaxed) {
+                        if kill.load(Ordering::Acquire) {
                             // monitor already has Killed from kill()
                         } else {
                             for c in 0..total {
@@ -186,7 +186,10 @@ impl Submitter for LocalSubmitter {
             .unwrap_or_else(|e| e.into_inner())
             .get(id)
         {
-            flag.store(true, Ordering::Relaxed);
+            // Release pairs with the runner's Acquire loads: the
+            // monitor's Killed event ordering stays consistent with
+            // the flag.
+            flag.store(true, Ordering::Release);
         }
         self.monitor.record(id, Event::Killed);
         Ok(())

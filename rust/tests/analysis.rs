@@ -1,14 +1,20 @@
-//! Integration tests for `submarine-lint` (ISSUE 6 satellites c + d).
+//! Integration tests for `submarine-lint` (ISSUE 6 satellites c + d,
+//! ISSUE 8 satellite c).
 //!
-//! Fixture snippets with a known lock inversion, a hot-path clone, and
-//! a fresh unwrap must flag; clean fixtures must pass. The runtime
-//! tracker's deterministic-interleaving regression runs in a subprocess
-//! (the inversion panics, and a panic must not take the test harness
-//! down with it).
+//! Fixture snippets with a known lock inversion, a hot-path clone, a
+//! fresh unwrap, an unchecked FFI return, a missing EINTR loop, an fd
+//! leak, an unregistered atomic, a Relaxed publish-flag, an undeclared
+//! conn-state transition, and a wildcard state match must all flag;
+//! clean and allow-marked fixtures must pass. The runtime tracker's
+//! deterministic-interleaving regression runs in a subprocess (the
+//! inversion panics, and a panic must not take the test harness down
+//! with it).
 
 use std::collections::BTreeMap;
-use submarine::analysis::scanner::scan;
-use submarine::analysis::{baseline, rules, run_all};
+use submarine::analysis::scanner::{scan, Scan};
+use submarine::analysis::{
+    atomics, baseline, conn_contract, ffi_contracts, rules, run_all,
+};
 
 // ------------------------------------------------ static-rule fixtures
 
@@ -122,7 +128,13 @@ fn fixture_fresh_unwrap_fails_ratchet() {
 
     let mut current = BTreeMap::new();
     current.insert("httpd/handler.rs".to_string(), sites.len() as u64);
-    let rep = baseline::ratchet(&current, &BTreeMap::new());
+    let rep = baseline::ratchet(
+        &current,
+        &BTreeMap::new(),
+        "unwrap-ratchet",
+        "unwrap/expect sites",
+        "handle the error instead",
+    );
     assert_eq!(rep.errors.len(), 1, "fresh unwrap must block");
     assert_eq!(rep.errors[0].rule, "unwrap-ratchet");
 }
@@ -147,21 +159,63 @@ fn fixture_unwrap_exemptions_pass() {
 /// (stale baseline), increases fail.
 #[test]
 fn ratchet_is_one_way() {
+    let r = |cur: &BTreeMap<String, u64>, base: &BTreeMap<String, u64>| {
+        baseline::ratchet(
+            cur,
+            base,
+            "unwrap-ratchet",
+            "unwrap/expect sites",
+            "handle the error instead",
+        )
+    };
     let mut base = BTreeMap::new();
     base.insert("httpd/server.rs".to_string(), 2u64);
 
-    let rep = baseline::ratchet(&base, &base);
+    let rep = r(&base, &base);
     assert!(rep.errors.is_empty() && rep.warnings.is_empty());
 
     let mut fewer = base.clone();
     fewer.insert("httpd/server.rs".to_string(), 1);
-    let rep = baseline::ratchet(&fewer, &base);
+    let rep = r(&fewer, &base);
     assert!(rep.errors.is_empty());
     assert_eq!(rep.warnings.len(), 1);
 
     let mut more = base.clone();
     more.insert("httpd/server.rs".to_string(), 3);
-    assert_eq!(baseline::ratchet(&more, &base).errors.len(), 1);
+    assert_eq!(r(&more, &base).errors.len(), 1);
+}
+
+/// The unsafe-block count rides the same one-way ratchet under its own
+/// rule name: growth blocks, shrinkage only warns about a stale
+/// baseline.
+#[test]
+fn unsafe_ratchet_is_one_way() {
+    let r = |cur: &BTreeMap<String, u64>, base: &BTreeMap<String, u64>| {
+        baseline::ratchet(
+            cur,
+            base,
+            "unsafe-ratchet",
+            "unsafe blocks",
+            "use a safe wrapper",
+        )
+    };
+    let mut base = BTreeMap::new();
+    base.insert("httpd/reactor.rs".to_string(), 11u64);
+
+    assert!(r(&base, &base).errors.is_empty());
+
+    let mut more = base.clone();
+    more.insert("httpd/reactor.rs".to_string(), 12);
+    let rep = r(&more, &base);
+    assert_eq!(rep.errors.len(), 1, "new unsafe must block");
+    assert_eq!(rep.errors[0].rule, "unsafe-ratchet");
+    assert!(rep.errors[0].message.contains("unsafe blocks"));
+
+    let mut fewer = base.clone();
+    fewer.insert("httpd/reactor.rs".to_string(), 10);
+    let rep = r(&fewer, &base);
+    assert!(rep.errors.is_empty());
+    assert_eq!(rep.warnings.len(), 1, "shrink only warns");
 }
 
 /// The same invariant CI enforces: the lint is clean over its own tree.
@@ -179,6 +233,323 @@ fn lint_passes_over_own_tree() {
             .collect::<Vec<_>>()
             .join("\n")
     );
+}
+
+// ------------------------------------------- unsafe/FFI audit fixtures
+
+/// A must-check syscall whose return value is discarded in statement
+/// position flags; binding and using the value passes.
+#[test]
+fn fixture_unchecked_ffi_return_flags() {
+    let bad = "impl Epoll {\n\
+               \x20   fn arm(&self, fd: i32) {\n\
+               \x20       // SAFETY: epfd and fd are open descriptors.\n\
+               \x20       unsafe { sys::epoll_ctl(self.ep, 1, fd, p) };\n\
+               \x20   }\n\
+               }\n";
+    let (findings, count) =
+        ffi_contracts::audit("httpd/reactor.rs", &scan(bad));
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, "unsafe-ffi");
+    assert_eq!(findings[0].line, 4);
+    assert!(findings[0].message.contains("discarded"));
+    assert_eq!(count, 1);
+
+    let good = "impl Epoll {\n\
+                \x20   fn arm(&self, fd: i32) -> i32 {\n\
+                \x20       // SAFETY: epfd and fd are open descriptors.\n\
+                \x20       let rc = unsafe {\n\
+                \x20           sys::epoll_ctl(self.ep, 1, fd, p)\n\
+                \x20       };\n\
+                \x20       rc\n\
+                \x20   }\n\
+                }\n";
+    let (findings, count) =
+        ffi_contracts::audit("httpd/reactor.rs", &scan(good));
+    assert!(findings.is_empty(), "{findings:?}");
+    assert_eq!(count, 1);
+}
+
+/// A `write(2)` call whose enclosing fn has no EINTR retry loop flags.
+#[test]
+fn fixture_missing_eintr_retry_flags() {
+    let bad = "impl EventFd {\n\
+               \x20   fn wake(&self) -> isize {\n\
+               \x20       // SAFETY: valid eventfd and 8-byte buffer.\n\
+               \x20       let rc = unsafe { sys::write(self.fd, p, 8) };\n\
+               \x20       rc\n\
+               \x20   }\n\
+               }\n";
+    let (findings, _) =
+        ffi_contracts::audit("httpd/reactor.rs", &scan(bad));
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert!(findings[0].message.contains("EINTR"));
+
+    let good = "impl EventFd {\n\
+                \x20   fn wake(&self) {\n\
+                \x20       loop {\n\
+                \x20           // SAFETY: valid eventfd, 8-byte buffer.\n\
+                \x20           let rc =\n\
+                \x20               unsafe { sys::write(self.fd, p, 8) };\n\
+                \x20           if rc == 8 {\n\
+                \x20               return;\n\
+                \x20           }\n\
+                \x20           let k =\n\
+                \x20               std::io::Error::last_os_error().kind();\n\
+                \x20           if k != std::io::ErrorKind::Interrupted {\n\
+                \x20               return;\n\
+                \x20           }\n\
+                \x20       }\n\
+                \x20   }\n\
+                }\n";
+    let (findings, _) =
+        ffi_contracts::audit("httpd/reactor.rs", &scan(good));
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+/// An fd-creating syscall in a fn that neither closes it nor belongs
+/// to a type with a closing Drop flags as a leak; adding the Drop impl
+/// passes.
+#[test]
+fn fixture_fd_leak_on_error_path_flags() {
+    let bad = "impl Epoll {\n\
+               \x20   fn open() -> i32 {\n\
+               \x20       // SAFETY: CLOEXEC only; result checked.\n\
+               \x20       let fd = unsafe { sys::epoll_create1(flags) };\n\
+               \x20       fd\n\
+               \x20   }\n\
+               }\n";
+    let (findings, _) =
+        ffi_contracts::audit("httpd/reactor.rs", &scan(bad));
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert!(findings[0].message.contains("fd leak"));
+
+    let good = "impl Epoll {\n\
+                \x20   fn open() -> i32 {\n\
+                \x20       // SAFETY: CLOEXEC only; result checked.\n\
+                \x20       let fd = unsafe { sys::epoll_create1(flags) };\n\
+                \x20       fd\n\
+                \x20   }\n\
+                }\n\
+                impl Drop for Epoll {\n\
+                \x20   fn drop(&mut self) {\n\
+                \x20       // SAFETY: fd is ours; close is fire-and-forget.\n\
+                \x20       unsafe { sys::close(self.fd) };\n\
+                \x20   }\n\
+                }\n";
+    let (findings, _) =
+        ffi_contracts::audit("httpd/reactor.rs", &scan(good));
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+/// `unsafe` without a SAFETY comment flags in any file; a reviewed
+/// `lint: allow(ffi)` marker silences a contract finding.
+#[test]
+fn fixture_safety_comment_and_allow_marker() {
+    let bare = "fn peek() -> i32 {\n\
+                \x20   let v = unsafe { raw() };\n\
+                \x20   v\n\
+                }\n";
+    let (findings, count) =
+        ffi_contracts::audit("storage/kv.rs", &scan(bare));
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert!(findings[0].message.contains("SAFETY"));
+    assert_eq!(count, 1);
+
+    let allowed = "impl Epoll {\n\
+                   \x20   fn nudge(&self, fd: i32) {\n\
+                   \x20       // SAFETY: best-effort re-arm.\n\
+                   \x20       unsafe { sys::epoll_ctl(self.ep, 1, fd, p) }; \
+                   // lint: allow(ffi)\n\
+                   \x20   }\n\
+                   }\n";
+    let (findings, _) =
+        ffi_contracts::audit("httpd/reactor.rs", &scan(allowed));
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+// --------------------------------------- atomics-ordering fixtures
+
+fn one_file(rel: &str, src: &str) -> BTreeMap<String, Scan> {
+    let mut m = BTreeMap::new();
+    m.insert(rel.to_string(), scan(src));
+    m
+}
+
+/// An atomic receiver absent from ATOMIC_REGISTRY flags.
+#[test]
+fn fixture_unregistered_atomic_flags() {
+    let bad = "impl Pool {\n\
+               \x20   fn tick(&self) {\n\
+               \x20       self.mystery.fetch_add(1, Ordering::Relaxed);\n\
+               \x20   }\n\
+               }\n";
+    let out = atomics::check(&one_file("httpd/handler.rs", bad));
+    assert_eq!(out.findings.len(), 1, "{:?}", out.findings);
+    assert_eq!(out.findings[0].rule, "atomics");
+    assert!(out.findings[0].message.contains("unregistered"));
+    assert!(out.findings[0].message.contains("mystery"));
+}
+
+/// A registered publish-flag written with Relaxed flags; Release
+/// passes, and the allow marker silences a reviewed site.
+#[test]
+fn fixture_relaxed_publish_flag_flags() {
+    let bad = "impl R {\n\
+               \x20   fn shutdown(&self) {\n\
+               \x20       self.stop.store(true, Ordering::Relaxed);\n\
+               \x20   }\n\
+               }\n";
+    let out = atomics::check(&one_file("httpd/reactor.rs", bad));
+    assert_eq!(out.findings.len(), 1, "{:?}", out.findings);
+    assert!(out.findings[0].message.contains("publish-flag"));
+
+    let good = "impl R {\n\
+                \x20   fn shutdown(&self) {\n\
+                \x20       self.stop.store(true, Ordering::Release);\n\
+                \x20   }\n\
+                }\n";
+    let out = atomics::check(&one_file("httpd/reactor.rs", good));
+    assert!(out.findings.is_empty(), "{:?}", out.findings);
+
+    let allowed = "impl R {\n\
+                   \x20   fn shutdown(&self) {\n\
+                   \x20       self.stop.store(true, Ordering::Relaxed); \
+                   // lint: allow(atomics)\n\
+                   \x20   }\n\
+                   }\n";
+    let out = atomics::check(&one_file("httpd/reactor.rs", allowed));
+    assert!(out.findings.is_empty(), "{:?}", out.findings);
+}
+
+/// The universal compare_exchange rule: a failure ordering stronger
+/// than the success ordering flags even on a lenient role.
+#[test]
+fn fixture_cas_failure_stronger_than_success_flags() {
+    let bad = "impl Gate {\n\
+               \x20   fn try_take(&self) {\n\
+               \x20       let _ = self.state.compare_exchange(\n\
+               \x20           cur,\n\
+               \x20           next,\n\
+               \x20           Ordering::Relaxed,\n\
+               \x20           Ordering::Acquire,\n\
+               \x20       );\n\
+               \x20   }\n\
+               }\n";
+    let out = atomics::check(&one_file("httpd/middleware.rs", bad));
+    assert_eq!(out.findings.len(), 1, "{:?}", out.findings);
+    assert!(out.findings[0].message.contains("stronger"));
+}
+
+/// Registry rows whose file is scanned but never matched surface as
+/// non-blocking staleness warnings, not findings.
+#[test]
+fn fixture_stale_registry_row_warns() {
+    let src = "fn quiet() {}\n";
+    let out = atomics::check(&one_file("util/id.rs", src));
+    assert!(out.findings.is_empty(), "{:?}", out.findings);
+    assert_eq!(out.warnings.len(), 1, "{:?}", out.warnings);
+    assert!(out.warnings[0].message.contains("SEQ"));
+}
+
+// ------------------------------------- conn state-machine fixtures
+
+/// Direct `.state =` assignment outside `Conn::set_state` flags.
+#[test]
+fn fixture_direct_state_assignment_flags() {
+    let bad = "impl Conn {\n\
+               \x20   fn hack(&mut self) {\n\
+               \x20       self.state = ConnState::Handle;\n\
+               \x20   }\n\
+               }\n";
+    let findings = conn_contract::check_file("httpd/conn.rs", &scan(bad));
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, "conn-state");
+    assert!(findings[0].message.contains("set_state"));
+}
+
+/// A set_state call naming a state missing from the contract tables
+/// flags — the static half of the undeclared-transition guard (the
+/// dynamic half is the debug assert inside `Conn::set_state`).
+#[test]
+fn fixture_undeclared_conn_state_flags() {
+    let bad = "impl Conn {\n\
+               \x20   fn jump(&mut self) {\n\
+               \x20       self.set_state(ConnState::Zombie);\n\
+               \x20   }\n\
+               }\n";
+    let findings = conn_contract::check_file("httpd/conn.rs", &scan(bad));
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert!(findings[0].message.contains("Zombie"));
+
+    assert!(!conn_contract::transition_allowed(
+        submarine::httpd::conn::ConnState::WriteResponse,
+        submarine::httpd::conn::ConnState::ReadBody,
+    ));
+}
+
+/// A match over the conn state with a wildcard arm flags; spelling
+/// every state out passes.
+#[test]
+fn fixture_wildcard_state_match_flags() {
+    let bad = "impl Conn {\n\
+               \x20   fn ready(&self) -> bool {\n\
+               \x20       match self.state {\n\
+               \x20           ConnState::ReadHeaders => true,\n\
+               \x20           _ => false,\n\
+               \x20       }\n\
+               \x20   }\n\
+               }\n";
+    let findings = conn_contract::check_file("httpd/conn.rs", &scan(bad));
+    assert!(
+        findings.iter().any(|f| f.message.contains("wildcard arm")),
+        "{findings:?}"
+    );
+
+    let good = "impl Conn {\n\
+                \x20   fn reads(&self) -> bool {\n\
+                \x20       match self.state {\n\
+                \x20           ConnState::ReadHeaders => true,\n\
+                \x20           ConnState::ReadBody => true,\n\
+                \x20           ConnState::Handle => false,\n\
+                \x20           ConnState::WriteResponse => false,\n\
+                \x20           ConnState::KeepAliveIdle => true,\n\
+                \x20           ConnState::Tail => true,\n\
+                \x20       }\n\
+                \x20   }\n\
+                }\n";
+    let findings = conn_contract::check_file("httpd/conn.rs", &scan(good));
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+/// A rearm arm whose epoll interest disagrees with the declared
+/// interest table flags.
+#[test]
+fn fixture_rearm_interest_mismatch_flags() {
+    let bad = "impl Reactor {\n\
+               \x20   fn rearm(&self, idx: usize) {\n\
+               \x20       let mut want = sys::EPOLLRDHUP;\n\
+               \x20       match self.slots[idx].conn.state {\n\
+               \x20           ConnState::ReadHeaders\n\
+               \x20           | ConnState::ReadBody\n\
+               \x20           | ConnState::KeepAliveIdle => {\n\
+               \x20               want |= sys::EPOLLIN;\n\
+               \x20           }\n\
+               \x20           ConnState::Handle => {}\n\
+               \x20           ConnState::WriteResponse => {\n\
+               \x20               want |= sys::EPOLLIN;\n\
+               \x20           }\n\
+               \x20           ConnState::Tail => {\n\
+               \x20               want |= sys::EPOLLIN;\n\
+               \x20               want |= sys::EPOLLOUT;\n\
+               \x20           }\n\
+               \x20       }\n\
+               \x20   }\n\
+               }\n";
+    let findings =
+        conn_contract::check_rearm("httpd/reactor.rs", &scan(bad));
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert!(findings[0].message.contains("WriteResponse"));
 }
 
 // -------------------------------- runtime tracker (subprocess, debug)
