@@ -1,0 +1,155 @@
+//! E-SERVE — online inference micro-batching (ISSUE 9): per-row cost
+//! of scoring the CTR DeepFM through the serving tier's batched
+//! forward at batch 8 versus one row at a time, plus the overhead a
+//! 50/50 canary split adds by cutting one batch into two per-version
+//! groups.
+//!
+//! Records to `BENCH_8.json`:
+//!   - `serve.batch8_vs_batch1_per_row` (baseline = per-row seconds at
+//!     batch 1, optimized = per-row seconds at batch 8; the recorded
+//!     ratio is the batching speedup — the ISSUE 9 acceptance claim is
+//!     >= 3x on the CTR DeepFM),
+//!   - `serve.canary_split_overhead` (baseline = one 8-row batch on
+//!     one version, optimized = the same 8 rows split 4/4 across two
+//!     loaded versions — the price of a 50% canary).
+//!
+//! Run: `cargo bench --bench serving` (BENCH_SMOKE=1 shrinks it and
+//! records the JSON).
+
+use submarine::data::ctr::{CtrGen, FIELDS, VOCAB};
+use submarine::serving::{LoadedModel, Row};
+use submarine::util::bench::{bench, bench_params, fmt_secs, record_result_to, Table};
+
+const EMB_DIM: usize = 8;
+const HIDDEN: usize = 200;
+const BATCH8: usize = 8;
+
+/// Seeded CTR-shaped DeepFM parameter blobs (the registry layout:
+/// embedding, linear, global bias, then the 3-layer tower).
+fn deepfm_params(seed: u32) -> Vec<Vec<f32>> {
+    let d_in = FIELDS * EMB_DIM;
+    let mut k = seed;
+    let mut next = move || {
+        k = k.wrapping_mul(1_664_525).wrapping_add(1_013_904_223);
+        ((k >> 8) as f32 / (1u32 << 24) as f32 - 0.5) * 0.2
+    };
+    let gen = |n: usize, next: &mut dyn FnMut() -> f32| {
+        (0..n).map(|_| next()).collect::<Vec<f32>>()
+    };
+    vec![
+        gen(VOCAB * EMB_DIM, &mut next),
+        gen(VOCAB, &mut next),
+        vec![0.1],
+        gen(d_in * HIDDEN, &mut next),
+        gen(HIDDEN, &mut next),
+        gen(HIDDEN * HIDDEN, &mut next),
+        gen(HIDDEN, &mut next),
+        gen(HIDDEN, &mut next),
+        vec![0.05],
+    ]
+}
+
+fn ctr_rows(n: usize) -> Vec<Row> {
+    let mut gen = CtrGen::new(7);
+    let (ids, vals, _) = gen.batch();
+    (0..n)
+        .map(|r| Row {
+            ids: ids[r * FIELDS..(r + 1) * FIELDS]
+                .iter()
+                .map(|&id| id as usize)
+                .collect(),
+            vals: vals[r * FIELDS..(r + 1) * FIELDS].to_vec(),
+        })
+        .collect()
+}
+
+fn main() {
+    println!(
+        "E-SERVE: CTR DeepFM micro-batching \
+         ({FIELDS} fields, vocab {VOCAB}, {HIDDEN}-wide tower)"
+    );
+
+    let model =
+        LoadedModel::from_params(1, &deepfm_params(0x5EED)).unwrap();
+    let canary =
+        LoadedModel::from_params(2, &deepfm_params(0xCAFE)).unwrap();
+    let rows = ctr_rows(64);
+    let (iters, secs) = bench_params(30, 0.5);
+
+    // ---- batch 1: one forward per row ------------------------------
+    let mut off = 0usize;
+    let b1 = bench(iters, secs, || {
+        for i in 0..BATCH8 {
+            let r = &rows[(off + i) % rows.len()];
+            let out = model.forward_batch(&[r]).unwrap();
+            assert_eq!(out.len(), 1);
+        }
+        off = (off + BATCH8) % rows.len();
+    });
+    let b1_per_row = b1.mean / BATCH8 as f64;
+
+    // ---- batch 8: one batched forward ------------------------------
+    let mut off = 0usize;
+    let b8 = bench(iters, secs, || {
+        let batch: Vec<&Row> = (0..BATCH8)
+            .map(|i| &rows[(off + i) % rows.len()])
+            .collect();
+        let out = model.forward_batch(&batch).unwrap();
+        assert_eq!(out.len(), BATCH8);
+        off = (off + BATCH8) % rows.len();
+    });
+    let b8_per_row = b8.mean / BATCH8 as f64;
+
+    // ---- 50% canary: the same 8 rows as two 4-row groups -----------
+    let mut off = 0usize;
+    let split = bench(iters, secs, || {
+        let half = BATCH8 / 2;
+        let a: Vec<&Row> = (0..half)
+            .map(|i| &rows[(off + i) % rows.len()])
+            .collect();
+        let b: Vec<&Row> = (half..BATCH8)
+            .map(|i| &rows[(off + i) % rows.len()])
+            .collect();
+        let oa = model.forward_batch(&a).unwrap();
+        let ob = canary.forward_batch(&b).unwrap();
+        assert_eq!(oa.len() + ob.len(), BATCH8);
+        off = (off + BATCH8) % rows.len();
+    });
+
+    let mut t = Table::new(
+        "DeepFM serving forward (8 rows per iteration)",
+        &["path", "per 8 rows", "per row", "rows/s"],
+    );
+    for (label, stats) in [
+        ("batch=1 x8", &b1),
+        ("batch=8", &b8),
+        ("batch=4+4 (50% canary)", &split),
+    ] {
+        t.row(&[
+            label.into(),
+            fmt_secs(stats.mean),
+            fmt_secs(stats.mean / BATCH8 as f64),
+            format!("{:.0}", stats.throughput(BATCH8 as f64)),
+        ]);
+    }
+    t.print();
+    println!(
+        "batching speedup (per-row, batch 8 vs 1): {:.2}x; \
+         canary split overhead vs one batch: {:.2}x",
+        b1_per_row / b8_per_row.max(1e-12),
+        split.mean / b8.mean.max(1e-12),
+    );
+
+    record_result_to(
+        "BENCH_8.json",
+        "serve.batch8_vs_batch1_per_row",
+        b1_per_row,
+        b8_per_row,
+    );
+    record_result_to(
+        "BENCH_8.json",
+        "serve.canary_split_overhead",
+        b8.mean,
+        split.mean,
+    );
+}

@@ -106,6 +106,16 @@ pub const ATOMIC_REGISTRY: &[AtomicSite] = &[
         "unknown_resolutions",
         AtomicRole::Counter,
     ),
+    // serving tier: request/shed/batch tallies + metric step counter
+    s("serving/mod.rs", "requests", AtomicRole::Counter),
+    s("serving/mod.rs", "shed", AtomicRole::Counter),
+    s("serving/mod.rs", "batches", AtomicRole::Counter),
+    s("serving/mod.rs", "metric_step", AtomicRole::Counter),
+    // serving knobs: plain magnitude cells (set_knobs / env at init),
+    // no cross-field publish protocol rides on them
+    s("serving/mod.rs", "max_batch", AtomicRole::Metrics),
+    s("serving/mod.rs", "max_delay_ms", AtomicRole::Metrics),
+    s("serving/mod.rs", "max_queue", AtomicRole::Metrics),
     // storage: revision + compaction gauges (magnitude-only payloads;
     // cross-thread visibility of the documents rides the shard locks)
     s("storage/kv.rs", "next_rev", AtomicRole::Counter),

@@ -23,6 +23,9 @@
 //! | WalWriter | `Durability::writer` | compaction rotates the WAL while holding all shard read locks |
 //! | WalPending | `Durability::pending` | the group-commit leader drains pending under the writer lock |
 //! | Feed | `MetaStore::feed` | `current_rev()` runs under writer+shards during rotation |
+//! | ServeModels | `ServingLayer::serve_models` | per-model server map; params load from storage *before* it (get-or-create) |
+//! | ServeRoute | `ModelServer::route_cfg` | routing snapshot; swapped whole, never held across loads |
+//! | ServeBatch | `ModelServer::batchq` | batch queue; drained whole, forwards run after release |
 //! | Index | `MetaStore::defs` | declaration reads/writes; never held across shard/WAL work |
 //! | Metrics | `MetricStore::series` | leaf lock, logged to after storage work completes |
 //! | WalFlush | `Durability::flush` | durability waiters take it last (leader publishes seq under writer) |
@@ -48,6 +51,17 @@ pub enum LockRank {
     WalPending = 30,
     /// `MetaStore::feed` — change-feed ring + publish sequencer.
     Feed = 40,
+    /// `serving::ServingLayer::serve_models` — the per-model server
+    /// map. Model params load from storage *before* this is taken
+    /// (Shard ranks earlier), so the get-or-create path must release
+    /// it across the load.
+    ServeModels = 41,
+    /// `serving::ModelServer::route_cfg` — primary/canary routing
+    /// snapshot; swapped atomically on promote or canary PATCH.
+    ServeRoute = 42,
+    /// `serving::ModelServer::batchq` — the per-model micro-batch
+    /// queue; drained whole, the batched forward runs after release.
+    ServeBatch = 45,
     /// `MetaStore::defs` — secondary index declarations.
     Index = 50,
     /// `MetricStore::series` — metric time series.
@@ -69,6 +83,9 @@ impl LockRank {
             LockRank::WalWriter => "WalWriter",
             LockRank::WalPending => "WalPending",
             LockRank::Feed => "Feed",
+            LockRank::ServeModels => "ServeModels",
+            LockRank::ServeRoute => "ServeRoute",
+            LockRank::ServeBatch => "ServeBatch",
             LockRank::Index => "Index",
             LockRank::Metrics => "Metrics",
             LockRank::WalFlush => "WalFlush",
@@ -93,6 +110,9 @@ pub const RECEIVER_RANKS: &[(&str, LockRank)] = &[
     ("writer", LockRank::WalWriter),
     ("pending", LockRank::WalPending),
     ("feed", LockRank::Feed),
+    ("serve_models", LockRank::ServeModels),
+    ("route_cfg", LockRank::ServeRoute),
+    ("batchq", LockRank::ServeBatch),
     ("defs", LockRank::Index),
     ("series", LockRank::Metrics),
     ("flush", LockRank::WalFlush),
@@ -108,6 +128,9 @@ pub const CALL_RANKS: &[(&str, LockRank)] = &[
     ("shard_read", LockRank::Shard),
     ("shard_write", LockRank::Shard),
     ("series_lock", LockRank::Metrics),
+    ("map_lock", LockRank::ServeModels),
+    ("route_lock", LockRank::ServeRoute),
+    ("batch_lock", LockRank::ServeBatch),
 ];
 
 /// Ranks that must never be held across a file or socket write
@@ -128,6 +151,9 @@ mod tests {
             LockRank::WalWriter,
             LockRank::WalPending,
             LockRank::Feed,
+            LockRank::ServeModels,
+            LockRank::ServeRoute,
+            LockRank::ServeBatch,
             LockRank::Index,
             LockRank::Metrics,
             LockRank::WalFlush,

@@ -84,6 +84,12 @@ pub const HOT_REGISTRY: &[(&str, &str)] = &[
     ("httpd/reactor.rs", "rearm"),
     ("httpd/reactor.rs", "step_tail"),
     ("httpd/conn.rs", "flush_out"),
+    // serving tier: predict decode/encode + batch assembly/fan-out
+    // (per-request and per-batch paths under the BENCH_8 numbers)
+    ("serving/mod.rs", "decode_rows"),
+    ("serving/mod.rs", "encode_response"),
+    ("serving/mod.rs", "assemble"),
+    ("serving/mod.rs", "fan_out"),
     // json.rs dump paths
     ("util/json.rs", "dump_into"),
     ("util/json.rs", "write"),

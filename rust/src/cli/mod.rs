@@ -504,10 +504,71 @@ fn dispatch(argv: &[String]) -> crate::Result<String> {
                 crate::resource::resource_version(&doc)
             ))
         }
+        "serve" => {
+            // online inference tier (v2 only): status + one-shot predict
+            let sub = argv.get(1).map(String::as_str).unwrap_or("status");
+            let args = Args::parse(argv.get(2..).unwrap_or(&[]))?;
+            if args.flag("api") == Some("v1") {
+                return Err(bad("serve needs --api v2"));
+            }
+            let model = args
+                .flag("model")
+                .ok_or_else(|| bad("serve needs --model NAME"))?
+                .to_string();
+            let client = client_from_flags(&args)?;
+            match sub {
+                "status" => {
+                    Ok(client.serving_status(&model)?.pretty())
+                }
+                "predict" => {
+                    use crate::util::json::Json;
+                    let mut row = Json::obj();
+                    if let Some(ids) = args.flag("ids") {
+                        row = row
+                            .set("ids", parse_num_list(ids, "ids")?);
+                    }
+                    if let Some(vals) = args.flag("vals") {
+                        row = row
+                            .set("vals", parse_num_list(vals, "vals")?);
+                    }
+                    if row.as_obj().map(|o| o.is_empty()).unwrap_or(true)
+                    {
+                        return Err(bad(
+                            "serve predict needs --ids and/or --vals \
+                             (comma-separated)",
+                        ));
+                    }
+                    let rows = Json::Arr(vec![row]);
+                    Ok(client.predict(&model, &rows)?.pretty())
+                }
+                other => Err(bad(&format!(
+                    "unknown serve subcommand {other:?}; \
+                     try status | predict"
+                ))),
+            }
+        }
         other => Err(bad(&format!(
             "unknown command {other:?}; try `submarine help`"
         ))),
     }
+}
+
+/// `"1,2,3"` / `"0.5,1.0"` -> JSON number array (for `serve predict`).
+fn parse_num_list(
+    csv: &str,
+    flag: &str,
+) -> crate::Result<crate::util::json::Json> {
+    let mut out = Vec::new();
+    for term in csv.split(',') {
+        let n: f64 = term.trim().parse().map_err(|_| {
+            bad(&format!("bad --{flag} entry {term:?}"))
+        })?;
+        out.push(crate::util::json::Json::Num(n));
+    }
+    if out.is_empty() {
+        return Err(bad(&format!("--{flag} is empty")));
+    }
+    Ok(crate::util::json::Json::Arr(out))
 }
 
 /// `-P key=log:lo:hi | uniform:lo:hi | choice:a|b|c` -> search-space
@@ -996,6 +1057,10 @@ fn usage() -> String {
        watch       <kind> [--since REV] [--once]  (long-poll change feed;\n\
                    auto-relists after a 410 Gone compaction)\n\
        label       <kind> <name> key=value ... key-   (merge-patch labels)\n\
+       serve       status  --model M            [--server host:port]\n\
+                   | predict --model M --ids 1,2,3 [--vals 0.5,1.0,2.0]\n\
+                   (online inference against the Production version;\n\
+                    canary weights via PATCH /api/v2/serve/<model>)\n\
        storage     stats | compact --data-dir DIR\n\
                    (stats is read-only; compact needs the server stopped)\n\
        version\n\

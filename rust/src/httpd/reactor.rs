@@ -565,6 +565,7 @@ impl Reactor {
         router: Arc<Router>,
         store: Arc<MetaStore>,
         metrics: Arc<MetricStore>,
+        serving: Arc<crate::serving::ServingLayer>,
         active: Arc<AtomicUsize>,
         stop: Arc<AtomicBool>,
         workers: usize,
@@ -581,6 +582,19 @@ impl Reactor {
             TOKEN_LISTENER,
         )?;
         epoll.add(wake.raw(), sys::EPOLLIN, TOKEN_WAKE)?;
+        let feed_flag = Arc::new(AtomicBool::new(false));
+        // Serving doorbell: a batch fan-out behaves like a feed
+        // publish — set the step-tails flag and ring the eventfd so
+        // freshly filled predict slots are stepped on this wakeup, not
+        // at the next 25ms sweep.
+        {
+            let flag = Arc::clone(&feed_flag);
+            let bell = Arc::clone(&wake);
+            serving.set_waker(Arc::new(move || {
+                flag.store(true, Ordering::Release);
+                bell.wake();
+            }));
+        }
         Ok(Reactor {
             epoll,
             wake,
@@ -589,7 +603,7 @@ impl Reactor {
             store,
             jobs: Arc::new(JobQueue::new()),
             done: Arc::new(DoneQueue::new()),
-            feed_flag: Arc::new(AtomicBool::new(false)),
+            feed_flag,
             slots: Vec::new(),
             free: Vec::new(),
             live: 0,

@@ -42,6 +42,9 @@ pub struct Services {
     pub templates: Arc<TemplateManager>,
     pub environments: Arc<EnvironmentManager>,
     pub models: Arc<ModelRegistry>,
+    /// Online inference tier over the registry: per-model micro-batch
+    /// queues, canary routing, `/api/v2/serve` handlers.
+    pub serving: Arc<crate::serving::ServingLayer>,
     /// Background scheduler loop, present when the stack was assembled
     /// over the simulated YARN/K8s pipeline (`with_sim_executor`). Feeds
     /// the extended `GET /cluster` payload; dropping `Services` stops
@@ -82,12 +85,19 @@ impl Services {
                 st,
             )
         }));
+        let models = Arc::new(ModelRegistry::new(Arc::clone(&store)));
+        let serving = Arc::new(crate::serving::ServingLayer::new(
+            Arc::clone(&store),
+            Arc::clone(&metrics),
+            Arc::clone(&models),
+        ));
         Services {
             templates: Arc::new(TemplateManager::new(Arc::clone(&store))),
             environments: Arc::new(EnvironmentManager::new(Arc::clone(
                 &store,
             ))),
-            models: Arc::new(ModelRegistry::new(Arc::clone(&store))),
+            models,
+            serving,
             experiments,
             monitor,
             metrics,
@@ -198,6 +208,7 @@ pub struct Server {
     listener: TcpListener,
     store: Arc<MetaStore>,
     metrics: Arc<MetricStore>,
+    serving: Arc<crate::serving::ServingLayer>,
     active: Arc<AtomicUsize>,
     stop: Arc<AtomicBool>,
     local_addr: std::net::SocketAddr,
@@ -256,6 +267,9 @@ impl Server {
         let store = Arc::clone(&services.store);
         // the reactor sweep publishes doorbell failures here
         let metrics = Arc::clone(&services.metrics);
+        // the reactor installs its doorbell into the serving tier so
+        // batch fan-outs step freshly resolved predict tails promptly
+        let serving = Arc::clone(&services.serving);
         let router = build_api(services, cfg);
         let listener = TcpListener::bind(("127.0.0.1", port))?;
         let local_addr = listener.local_addr()?;
@@ -264,6 +278,7 @@ impl Server {
             listener,
             store,
             metrics,
+            serving,
             active: Arc::new(AtomicUsize::new(0)),
             stop: Arc::new(AtomicBool::new(false)),
             local_addr,
@@ -294,6 +309,7 @@ impl Server {
             Arc::clone(&self.router),
             Arc::clone(&self.store),
             Arc::clone(&self.metrics),
+            Arc::clone(&self.serving),
             Arc::clone(&self.active),
             Arc::clone(&self.stop),
             workers,

@@ -363,6 +363,12 @@ impl ResourceKind for ModelKind {
                 )?;
             }
         }
+        // any stage change can alter what the serving tier should run
+        // (promote = hot-swap, archive = unload); rebuild its route
+        // snapshot. In-flight batches drain against the old snapshot.
+        if let Some(name) = doc.str_field("name") {
+            s.serving.refresh(name);
+        }
         Ok(())
     }
 }
@@ -518,6 +524,42 @@ fn register_routes(r: &mut Router, s: Arc<Services>) {
                     Ok(Json::obj().set("experimentId", Json::Str(id)))
                 },
             )),
+        );
+    }
+
+    // ---- online inference serving (ISSUE 9) ------------------------
+    // v2-only: the serving tier speaks the v2 envelope and rides the
+    // reactor's tail mechanism for micro-batching, so the predict
+    // route bypasses the typed-handler layer entirely (a typed handler
+    // must produce its Json before returning; a parked tail must not).
+    {
+        let s = Arc::clone(&s);
+        r.route_raw(
+            "POST",
+            "/api/v2/serve/:model",
+            Arc::new(move |ctx: &Ctx<'_>| s.serving.predict(ctx)),
+        );
+    }
+    {
+        let s = Arc::clone(&s);
+        r.route(
+            "GET",
+            "/api/v2/serve/:model",
+            Envelope::V2,
+            typed(move |ctx: &Ctx<'_>, _: ()| {
+                s.serving.status(ctx.param("model")?)
+            }),
+        );
+    }
+    {
+        let s = Arc::clone(&s);
+        r.route(
+            "PATCH",
+            "/api/v2/serve/:model",
+            Envelope::V2,
+            typed(move |ctx: &Ctx<'_>, body: Json| {
+                s.serving.patch_config(ctx.param("model")?, &body)
+            }),
         );
     }
 

@@ -9,7 +9,8 @@
 //! - **L3 (this crate)**: the Submarine server — REST API ([`httpd`]),
 //!   experiment manager/submitter/monitor ([`experiment`],
 //!   [`orchestrator`]), predefined templates ([`template`]), environments
-//!   ([`environment`]), model registry ([`model`]), metadata store
+//!   ([`environment`]), model registry ([`model`]), online inference
+//!   serving tier ([`serving`]), metadata store
 //!   ([`storage`]), and the cluster-simulator substrate ([`cluster`],
 //!   [`scheduler`]) with YARN-like and Kubernetes-like orchestrators.
 //! - **L2**: JAX models (DeepFM, MNIST MLP, tiny transformer) AOT-lowered
@@ -42,6 +43,7 @@ pub mod model;
 pub mod orchestrator;
 pub mod platform;
 pub mod runtime;
+pub mod serving;
 pub mod template;
 
 pub mod cli;

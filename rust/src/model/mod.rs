@@ -272,6 +272,17 @@ impl ModelRegistry {
     }
 
     /// Move a version between stages (checked transition).
+    ///
+    /// The stage check and the stamped write are one CAS
+    /// ([`crate::storage::MetaStore::update_rev`] runs the closure
+    /// under the shard write lock), so two racing transitions cannot
+    /// both observe the pre-race stage — the loser re-reads the
+    /// winner's write and fails `can_transition` honestly. The
+    /// single-Production demotion runs *after* our own write commits,
+    /// keyed by our committed `resource_version`: of two racing
+    /// promotions the later (higher-rev) archives the earlier, and the
+    /// earlier skips the later (see [`Self::demote_other_production`]),
+    /// so exactly one Production version survives.
     pub fn transition(
         &self,
         name: &str,
@@ -279,37 +290,47 @@ impl ModelRegistry {
         to: Stage,
     ) -> crate::Result<()> {
         let key = Self::doc_key(name, version);
-        let doc = self.store.get(NS, &key).ok_or_else(|| {
-            crate::SubmarineError::NotFound(format!(
-                "model {name} v{version}"
-            ))
-        })?;
-        let from = doc
-            .str_field("stage")
-            .and_then(Stage::parse)
-            .unwrap_or(Stage::None);
-        if !from.can_transition(to) {
-            return Err(crate::SubmarineError::InvalidSpec(format!(
-                "illegal stage transition {} -> {}",
-                from.as_str(),
-                to.as_str()
-            )));
-        }
-        // Only one Production version per model: demote the current one
-        // (name ∩ stage index intersection instead of a namespace scan).
-        if to == Stage::Production {
-            self.demote_other_production(name, &key, u64::MAX)?;
-        }
-        let doc = doc.json().clone();
-        self.store.put_rev(NS, &key, |rev| {
-            crate::resource::stamp_update(
-                doc.set("stage", Json::Str(to.as_str().into())),
+        let mut illegal_from = None;
+        let outcome = self.store.update_rev(NS, &key, |d, rev| {
+            let from = d
+                .str_field("stage")
+                .and_then(Stage::parse)
+                .unwrap_or(Stage::None);
+            if !from.can_transition(to) {
+                illegal_from = Some(from);
+                return Ok(None);
+            }
+            Ok(Some(crate::resource::stamp_update(
+                d.clone().set("stage", Json::Str(to.as_str().into())),
                 &Self::display_name(&key),
                 rev,
                 false,
-            )
+            )))
         })?;
-        Ok(())
+        match outcome {
+            crate::storage::UpdateRev::Missing => {
+                Err(crate::SubmarineError::NotFound(format!(
+                    "model {name} v{version}"
+                )))
+            }
+            crate::storage::UpdateRev::Unchanged => {
+                let from = illegal_from.unwrap_or(Stage::None);
+                Err(crate::SubmarineError::InvalidSpec(format!(
+                    "illegal stage transition {} -> {}",
+                    from.as_str(),
+                    to.as_str()
+                )))
+            }
+            crate::storage::UpdateRev::Written(rev) => {
+                // Only one Production version per model: demote the
+                // previous one (name ∩ stage index intersection
+                // instead of a namespace scan).
+                if to == Stage::Production {
+                    self.demote_other_production(name, &key, rev)?;
+                }
+                Ok(())
+            }
+        }
     }
 
     /// Archive every Production version of `name` except `keep_key`
@@ -499,6 +520,47 @@ mod tests {
             r.production_version("m").unwrap().version,
             v2
         );
+    }
+
+    #[test]
+    fn concurrent_promotions_leave_one_production() {
+        // Regression (ISSUE 9): transition() used to read the stage,
+        // demote others with keep_rv = u64::MAX, then blind-put. Two
+        // racing promotes could each demote-before-write and then both
+        // commit Production. Now the check+write is a CAS and the
+        // demotion runs post-commit keyed by the committed rev, so one
+        // side always archives the other.
+        for _ in 0..8 {
+            let r = Arc::new(reg());
+            let v1 = r.register("m", "e", &params(), &[]).unwrap();
+            let v2 = r.register("m", "e", &params(), &[]).unwrap();
+            for v in [v1, v2] {
+                r.transition("m", v, Stage::Staging).unwrap();
+            }
+            let threads: Vec<_> = [v1, v2]
+                .into_iter()
+                .map(|v| {
+                    let r = Arc::clone(&r);
+                    std::thread::spawn(move || {
+                        r.transition("m", v, Stage::Production)
+                    })
+                })
+                .collect();
+            for t in threads {
+                // Each promote is legal from Staging; races resolve
+                // via demotion, not transition errors.
+                t.join().unwrap().unwrap();
+            }
+            let prod = r.versions_by_stage("m", "Production");
+            assert_eq!(
+                prod.len(),
+                1,
+                "exactly one Production must survive"
+            );
+            let winner = prod[0].version;
+            let loser = if winner == v1 { v2 } else { v1 };
+            assert_eq!(r.get("m", loser).unwrap().stage, Stage::Archived);
+        }
     }
 
     #[test]

@@ -663,6 +663,39 @@ impl ExperimentClient {
         self.expect_ok(r)
     }
 
+    /// Online inference (v2 only): score `rows` against the serving
+    /// tier's Production (or canary) version of `model`. `rows` is the
+    /// JSON array the server expects —
+    /// `[{"ids": [...], "vals": [...]}, ...]` — and the reply carries
+    /// `model`, `version` (which copy actually scored; canary routing
+    /// makes this observable), and `predictions`. A full queue
+    /// surfaces as [`crate::SubmarineError::ResourcesUnavailable`]
+    /// (HTTP 503): back off and retry.
+    pub fn predict(
+        &self,
+        model: &str,
+        rows: &Json,
+    ) -> crate::Result<Json> {
+        let body = Json::obj().set("rows", rows.clone());
+        let r = self.request(
+            "POST",
+            &format!("{}/serve/{model}", self.base),
+            Some(&body),
+        )?;
+        self.expect_ok(r)
+    }
+
+    /// Serving-tier status for `model`: loaded version(s), canary
+    /// weight, queue depth, and latency/QPS/batch-occupancy counters.
+    pub fn serving_status(&self, model: &str) -> crate::Result<Json> {
+        let r = self.request(
+            "GET",
+            &format!("{}/serve/{model}", self.base),
+            None,
+        )?;
+        self.expect_ok(r)
+    }
+
     /// One long-poll watch request: events past `since` (empty on
     /// timeout) plus the revision to resume from. A compacted `since`
     /// surfaces as [`crate::SubmarineError::Gone`] — relist, then

@@ -1,0 +1,1697 @@
+//! Online inference serving tier (ISSUE 9 tentpole): `/api/v2/serve`.
+//!
+//! The registry manages versions and stage transitions; this module is
+//! what consumes them — the NSML-style serving half of the platform
+//! (arXiv:1712.05902): a [`ModelServer`] loads the Production-stage
+//! version of a registered model as xla-stub host literals and answers
+//! `POST /api/v2/serve/:model` (predict) and `GET` (serving status).
+//!
+//! **Micro-batching rides the reactor.** A predict request decodes its
+//! rows, picks a route (primary or canary), and parks in the per-model
+//! bounded batch queue; the response is a [`Response::tail_poll`] tail,
+//! so the connection costs one reactor slot, not a thread. The batch
+//! flushes when `max_batch` rows are queued (the enqueueing worker
+//! flushes inline) or when the oldest entry's `max_delay_ms` deadline
+//! expires (the reactor's 25ms idle sweep steps past-deadline tails;
+//! [`PredictTail::step`] flushes on its own deadline, so the blocking
+//! fallback driver works too). One batched affine chain runs through
+//! [`xla::affine_batched`], and the fan-out fills each request's slot
+//! and rings the reactor's feed doorbell — batch formation costs zero
+//! dedicated threads.
+//!
+//! **Canary routing.** A serving config doc (`serving/{model}` in the
+//! meta store, PATCHable over the API) names a canary version and a
+//! 0..=100 weight; requests split by a stride pattern that honors the
+//! weight exactly per 100 consecutive requests. A Production promote
+//! calls [`ServingLayer::refresh`], which atomically hot-swaps the
+//! route snapshot; in-flight entries keep the `Arc` of the version
+//! they were routed to, so a swap never drops or re-routes them.
+//!
+//! **Shedding.** When a model's queued rows would exceed `max_queue`,
+//! the request is shed with a 503 `ResourcesUnavailable` v2 envelope
+//! and counted, bounding both memory and tail latency under overload.
+//!
+//! Knobs (env, overridable per-layer via [`ServingLayer::set_knobs`]):
+//! `SUBMARINE_SERVE_MAX_BATCH` (8), `SUBMARINE_SERVE_MAX_DELAY_MS`
+//! (25), `SUBMARINE_SERVE_MAX_QUEUE` (256). See `docs/SERVING.md`.
+
+use crate::analysis::lock_order::LockRank;
+use crate::analysis::tracker;
+use crate::httpd::handler::Ctx;
+use crate::httpd::http::{Response, TailSource, TailStep};
+use crate::httpd::router::{error_json, wrap_err, wrap_ok, Envelope};
+use crate::model::ModelRegistry;
+use crate::storage::{MetaStore, MetricStore};
+use crate::util::json::Json;
+use crate::SubmarineError;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Rows per batched forward (`data/ctr.rs::BATCH`-compatible shapes;
+/// 8 is the BENCH_8 headline point).
+pub const DEFAULT_MAX_BATCH: usize = 8;
+/// Oldest queued entry flushes after this many milliseconds even if
+/// the batch is partial (one reactor sweep tick).
+pub const DEFAULT_MAX_DELAY_MS: u64 = 25;
+/// Queued-row bound per model; beyond it requests shed with a 503.
+pub const DEFAULT_MAX_QUEUE: usize = 256;
+/// Meta-store namespace of the per-model serving config docs.
+pub const CONFIG_NS: &str = "serving";
+/// Retained samples per operational metric series (`log_bounded`).
+const METRIC_CAP: usize = 512;
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+// --------------------------------------------------------- model nets
+
+/// One dense layer held as xla-stub host literals.
+struct AffineLayer {
+    w: xla::Literal,
+    b: xla::Literal,
+    n_in: usize,
+    n_out: usize,
+}
+
+impl AffineLayer {
+    fn new(w: Vec<f32>, b: Vec<f32>) -> crate::Result<AffineLayer> {
+        let n_out = b.len();
+        if n_out == 0 || w.len() % n_out != 0 {
+            return Err(SubmarineError::InvalidSpec(format!(
+                "affine layer shape mismatch: |w|={} |b|={}",
+                w.len(),
+                n_out
+            )));
+        }
+        let n_in = w.len() / n_out;
+        Ok(AffineLayer {
+            w: xla::Literal::F32 {
+                data: w,
+                dims: vec![n_out as i64, n_in as i64],
+            },
+            b: xla::Literal::F32 {
+                data: b,
+                dims: vec![n_out as i64],
+            },
+            n_in,
+            n_out,
+        })
+    }
+}
+
+/// Run `xs` (batch-minor `[n_in][batch]`) through the affine chain
+/// with ReLU between layers, no activation after the last.
+fn run_layers(
+    layers: &[AffineLayer],
+    xt: Vec<f32>,
+    batch: usize,
+) -> crate::Result<Vec<f32>> {
+    let mut h = xla::Literal::F32 {
+        data: xt,
+        dims: vec![layers[0].n_in as i64, batch as i64],
+    };
+    for (li, layer) in layers.iter().enumerate() {
+        h = xla::affine_batched(&layer.w, &layer.b, &h, batch)?;
+        if li + 1 < layers.len() {
+            if let xla::Literal::F32 { data, .. } = &mut h {
+                for v in data.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+        }
+    }
+    match h {
+        xla::Literal::F32 { data, .. } => Ok(data),
+        _ => Err(SubmarineError::Runtime(
+            "affine chain produced a non-F32 literal".to_string(),
+        )),
+    }
+}
+
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// DeepFM inference net, mirroring `python/compile/models/deepfm.py`
+/// and the `data/ctr.rs` request shapes: per-field embeddings feed an
+/// FM second-order term and an MLP tower; plus a linear term and a
+/// global bias.
+struct DeepFm {
+    fields: usize,
+    emb_dim: usize,
+    vocab: usize,
+    emb: Vec<f32>,
+    lin: Vec<f32>,
+    b0: f32,
+    layers: Vec<AffineLayer>,
+}
+
+/// Plain MLP over a dense (or sparse-indexed) input vector.
+struct Mlp {
+    d_in: usize,
+    layers: Vec<AffineLayer>,
+}
+
+enum Net {
+    DeepFm(DeepFm),
+    Mlp(Mlp),
+}
+
+/// An immutable loaded model version. Requests hold an `Arc` of the
+/// version they were routed to, so hot-swaps never invalidate
+/// in-flight work.
+pub struct LoadedModel {
+    pub version: u32,
+    net: Net,
+}
+
+/// One predict row: sparse ids and/or dense values.
+pub struct Row {
+    pub ids: Vec<usize>,
+    pub vals: Vec<f32>,
+}
+
+impl LoadedModel {
+    /// Materialize registry params. A 9-blob layout matching the CTR
+    /// DeepFM shape (embedding table divisible by the linear table,
+    /// scalar global bias, 3-layer tower) loads as DeepFM; otherwise
+    /// alternating `(w, b)` pairs load as a generic MLP scorer.
+    pub fn from_params(
+        version: u32,
+        params: &[Vec<f32>],
+    ) -> crate::Result<LoadedModel> {
+        if let Some(fm) = Self::try_deepfm(params)? {
+            return Ok(LoadedModel {
+                version,
+                net: Net::DeepFm(fm),
+            });
+        }
+        Self::mlp(params).map(|m| LoadedModel {
+            version,
+            net: Net::Mlp(m),
+        })
+    }
+
+    fn try_deepfm(
+        params: &[Vec<f32>],
+    ) -> crate::Result<Option<DeepFm>> {
+        if params.len() != 9
+            || params[2].len() != 1
+            || params[1].is_empty()
+            || params[0].len() % params[1].len() != 0
+        {
+            return Ok(None);
+        }
+        let vocab = params[1].len();
+        let emb_dim = params[0].len() / vocab;
+        if emb_dim == 0 || params[4].is_empty() {
+            return Ok(None);
+        }
+        let d_in = params[3].len() / params[4].len();
+        if d_in == 0 || d_in % emb_dim != 0 {
+            return Ok(None);
+        }
+        let fields = d_in / emb_dim;
+        let mut layers = Vec::with_capacity(3);
+        for pair in [(3usize, 4usize), (5, 6), (7, 8)] {
+            layers.push(AffineLayer::new(
+                params[pair.0].clone(),
+                params[pair.1].clone(),
+            )?);
+        }
+        if layers[0].n_in != d_in || layers[2].n_out != 1 {
+            return Ok(None);
+        }
+        Ok(Some(DeepFm {
+            fields,
+            emb_dim,
+            vocab,
+            emb: params[0].clone(),
+            lin: params[1].clone(),
+            b0: params[2][0],
+            layers,
+        }))
+    }
+
+    fn mlp(params: &[Vec<f32>]) -> crate::Result<Mlp> {
+        if params.is_empty() || params.len() % 2 != 0 {
+            return Err(SubmarineError::InvalidSpec(format!(
+                "cannot serve a {}-blob parameter layout (expected \
+                 DeepFM's 9 blobs or alternating w/b pairs)",
+                params.len()
+            )));
+        }
+        let mut layers = Vec::with_capacity(params.len() / 2);
+        for pair in params.chunks(2) {
+            layers.push(AffineLayer::new(
+                pair[0].clone(),
+                pair[1].clone(),
+            )?);
+        }
+        for w in layers.windows(2) {
+            if w[0].n_out != w[1].n_in {
+                return Err(SubmarineError::InvalidSpec(format!(
+                    "MLP layer chain mismatch: {} -> {}",
+                    w[0].n_out, w[1].n_in
+                )));
+            }
+        }
+        let last = layers.last().map_or(0, |l| l.n_out);
+        if last != 1 {
+            return Err(SubmarineError::InvalidSpec(format!(
+                "serving needs a scalar scorer; final layer emits \
+                 {last} outputs"
+            )));
+        }
+        let d_in = layers[0].n_in;
+        Ok(Mlp { d_in, layers })
+    }
+
+    /// Validate one request row against this net's input contract.
+    fn check_row(&self, row: &Row) -> crate::Result<()> {
+        match &self.net {
+            Net::DeepFm(fm) => {
+                if row.ids.len() != fm.fields {
+                    return Err(SubmarineError::InvalidSpec(format!(
+                        "DeepFM row needs {} field ids, got {}",
+                        fm.fields,
+                        row.ids.len()
+                    )));
+                }
+                if !row.vals.is_empty()
+                    && row.vals.len() != fm.fields
+                {
+                    return Err(SubmarineError::InvalidSpec(format!(
+                        "DeepFM row vals must be empty or {} long, \
+                         got {}",
+                        fm.fields,
+                        row.vals.len()
+                    )));
+                }
+                if let Some(&id) =
+                    row.ids.iter().find(|&&id| id >= fm.vocab)
+                {
+                    return Err(SubmarineError::InvalidSpec(format!(
+                        "feature id {id} out of vocab {}",
+                        fm.vocab
+                    )));
+                }
+                Ok(())
+            }
+            Net::Mlp(m) => {
+                if row.ids.is_empty() {
+                    if row.vals.len() != m.d_in {
+                        return Err(SubmarineError::InvalidSpec(
+                            format!(
+                                "dense row needs {} vals, got {}",
+                                m.d_in,
+                                row.vals.len()
+                            ),
+                        ));
+                    }
+                    return Ok(());
+                }
+                if !row.vals.is_empty()
+                    && row.vals.len() != row.ids.len()
+                {
+                    return Err(SubmarineError::InvalidSpec(format!(
+                        "sparse row vals must be empty or match ids \
+                         ({} vs {})",
+                        row.vals.len(),
+                        row.ids.len()
+                    )));
+                }
+                if let Some(&id) =
+                    row.ids.iter().find(|&&id| id >= m.d_in)
+                {
+                    return Err(SubmarineError::InvalidSpec(format!(
+                        "feature id {id} out of input dim {}",
+                        m.d_in
+                    )));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Score a batch of validated rows. One batched affine chain per
+    /// call — this is the matmul the micro-batcher amortizes.
+    pub fn forward_batch(
+        &self,
+        rows: &[&Row],
+    ) -> crate::Result<Vec<f32>> {
+        let batch = rows.len();
+        if batch == 0 {
+            return Ok(Vec::new());
+        }
+        match &self.net {
+            Net::DeepFm(fm) => fm.forward(rows, batch),
+            Net::Mlp(m) => m.forward(rows, batch),
+        }
+    }
+}
+
+impl DeepFm {
+    fn forward(
+        &self,
+        rows: &[&Row],
+        batch: usize,
+    ) -> crate::Result<Vec<f32>> {
+        let d_in = self.fields * self.emb_dim;
+        // Batch-minor tower input: xt[(f*emb_dim+k)*batch + r].
+        let mut xt = vec![0.0f32; d_in * batch];
+        let mut wide = vec![0.0f32; batch];
+        for (r, row) in rows.iter().enumerate() {
+            let mut sum = vec![0.0f32; self.emb_dim];
+            let mut sumsq = vec![0.0f32; self.emb_dim];
+            let mut lin = 0.0f32;
+            for (f, &id) in row.ids.iter().enumerate() {
+                let val =
+                    row.vals.get(f).copied().unwrap_or(1.0);
+                lin += self.lin[id] * val;
+                let e = &self.emb
+                    [id * self.emb_dim..(id + 1) * self.emb_dim];
+                for (k, &ek) in e.iter().enumerate() {
+                    let x = ek * val;
+                    sum[k] += x;
+                    sumsq[k] += x * x;
+                    xt[(f * self.emb_dim + k) * batch + r] = x;
+                }
+            }
+            let mut fm2 = 0.0f32;
+            for k in 0..self.emb_dim {
+                fm2 += sum[k] * sum[k] - sumsq[k];
+            }
+            wide[r] = self.b0 + lin + 0.5 * fm2;
+        }
+        let deep = run_layers(&self.layers, xt, batch)?;
+        Ok((0..batch)
+            .map(|r| sigmoid(wide[r] + deep[r]))
+            .collect())
+    }
+}
+
+impl Mlp {
+    fn forward(
+        &self,
+        rows: &[&Row],
+        batch: usize,
+    ) -> crate::Result<Vec<f32>> {
+        let mut xt = vec![0.0f32; self.d_in * batch];
+        for (r, row) in rows.iter().enumerate() {
+            if row.ids.is_empty() {
+                for (i, &v) in row.vals.iter().enumerate() {
+                    xt[i * batch + r] = v;
+                }
+            } else {
+                for (f, &id) in row.ids.iter().enumerate() {
+                    xt[id * batch + r] +=
+                        row.vals.get(f).copied().unwrap_or(1.0);
+                }
+            }
+        }
+        let out = run_layers(&self.layers, xt, batch)?;
+        Ok(out.into_iter().map(sigmoid).collect())
+    }
+}
+
+// ----------------------------------------------------- request slots
+
+/// What a batched forward produced for one request.
+enum PredictOutcome {
+    Scored { version: u32, scores: Vec<f32> },
+    Failed(String),
+}
+
+/// One-shot rendezvous between the flusher and the parked request
+/// tail. Unranked leaf mutex: held only to move the outcome, never
+/// while acquiring anything else.
+struct PredictSlot {
+    cell: Mutex<Option<PredictOutcome>>,
+    cv: Condvar,
+}
+
+impl PredictSlot {
+    fn new() -> PredictSlot {
+        PredictSlot {
+            cell: Mutex::new(None),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn fill(&self, out: PredictOutcome) {
+        let mut cell =
+            self.cell.lock().unwrap_or_else(|e| e.into_inner());
+        if cell.is_none() {
+            *cell = Some(out);
+        }
+        self.cv.notify_all();
+    }
+
+    fn take(&self) -> Option<PredictOutcome> {
+        self.cell
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .take()
+    }
+
+    fn wait(&self, max: Duration) {
+        let cell =
+            self.cell.lock().unwrap_or_else(|e| e.into_inner());
+        if cell.is_none() {
+            let _ = self
+                .cv
+                .wait_timeout(cell, max)
+                .map_err(|e| e.into_inner());
+        }
+    }
+}
+
+/// Reactor doorbell installed by the server at bind time: rings the
+/// feed wakeup so freshly filled slots are stepped promptly.
+#[derive(Default)]
+pub struct WakerCell {
+    cell: Mutex<Option<Arc<dyn Fn() + Send + Sync>>>,
+}
+
+impl WakerCell {
+    fn ring(&self) {
+        let waker = {
+            let cell =
+                self.cell.lock().unwrap_or_else(|e| e.into_inner());
+            cell.as_ref().map(Arc::clone)
+        };
+        if let Some(w) = waker {
+            w();
+        }
+    }
+
+    fn install(&self, f: Arc<dyn Fn() + Send + Sync>) {
+        let mut cell =
+            self.cell.lock().unwrap_or_else(|e| e.into_inner());
+        *cell = Some(f);
+    }
+}
+
+// ------------------------------------------------------- model server
+
+/// Routing snapshot, swapped atomically on promote / canary PATCH.
+struct RouteState {
+    primary: Arc<LoadedModel>,
+    canary: Option<Arc<LoadedModel>>,
+    canary_pct: u32,
+}
+
+/// One queued predict request, pinned to the version it was routed to.
+struct Entry {
+    slot: Arc<PredictSlot>,
+    model: Arc<LoadedModel>,
+    rows: Vec<Row>,
+    enqueued: Instant,
+}
+
+struct BatchState {
+    entries: Vec<Entry>,
+    queued_rows: usize,
+}
+
+/// Per-model serving state: route snapshot + bounded batch queue +
+/// counters.
+pub struct ModelServer {
+    name: String,
+    /// Metric series key, precomputed so the fan-out stays zero-alloc.
+    metric_key: String,
+    metrics: Arc<MetricStore>,
+    waker: Arc<WakerCell>,
+    route_cfg: Mutex<RouteState>,
+    batchq: Mutex<BatchState>,
+    requests: AtomicU64,
+    shed: AtomicU64,
+    batches: AtomicU64,
+    metric_step: AtomicU64,
+    started: Instant,
+}
+
+impl ModelServer {
+    fn new(
+        name: &str,
+        primary: Arc<LoadedModel>,
+        canary: Option<Arc<LoadedModel>>,
+        canary_pct: u32,
+        metrics: Arc<MetricStore>,
+        waker: Arc<WakerCell>,
+    ) -> ModelServer {
+        ModelServer {
+            name: String::from(name),
+            metric_key: format!("serve:{name}"),
+            metrics,
+            waker,
+            route_cfg: Mutex::new(RouteState {
+                primary,
+                canary,
+                canary_pct,
+            }),
+            batchq: Mutex::new(BatchState {
+                entries: Vec::new(),
+                queued_rows: 0,
+            }),
+            requests: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            metric_step: AtomicU64::new(0),
+            started: Instant::now(),
+        }
+    }
+
+    fn route_lock(
+        &self,
+    ) -> (MutexGuard<'_, RouteState>, tracker::Held) {
+        let held = tracker::acquired(LockRank::ServeRoute, 0);
+        (
+            self.route_cfg
+                .lock()
+                .unwrap_or_else(|e| e.into_inner()),
+            held,
+        )
+    }
+
+    fn batch_lock(
+        &self,
+    ) -> (MutexGuard<'_, BatchState>, tracker::Held) {
+        let held = tracker::acquired(LockRank::ServeBatch, 0);
+        (
+            self.batchq.lock().unwrap_or_else(|e| e.into_inner()),
+            held,
+        )
+    }
+
+    /// Atomic hot-swap of the routing snapshot (Production promote or
+    /// canary PATCH). Queued entries keep their pinned version.
+    fn install(
+        &self,
+        primary: Arc<LoadedModel>,
+        canary: Option<Arc<LoadedModel>>,
+        canary_pct: u32,
+    ) {
+        let (mut cfg, _held) = self.route_lock();
+        *cfg = RouteState {
+            primary,
+            canary,
+            canary_pct,
+        };
+    }
+
+    /// Weighted route pick. The stride pattern (37 is coprime to 100)
+    /// hands the canary exactly `pct` of every 100 consecutive
+    /// requests, interleaved rather than front-loaded.
+    fn pick_route(&self) -> Arc<LoadedModel> {
+        let n = self.requests.fetch_add(1, Ordering::Relaxed);
+        let (cfg, _held) = self.route_lock();
+        match &cfg.canary {
+            Some(c)
+                if cfg.canary_pct > 0
+                    && n.wrapping_mul(37) % 100
+                        < u64::from(cfg.canary_pct) =>
+            {
+                Arc::clone(c)
+            }
+            _ => Arc::clone(&cfg.primary),
+        }
+    }
+
+    /// Validate, route and park one request. Returns the slot to wait
+    /// on plus whether the queue just reached a full batch.
+    fn enqueue(
+        &self,
+        rows: Vec<Row>,
+        now: Instant,
+        max_batch: usize,
+        max_queue: usize,
+    ) -> crate::Result<(Arc<PredictSlot>, bool)> {
+        let model = self.pick_route();
+        for row in &rows {
+            model.check_row(row)?;
+        }
+        let slot = Arc::new(PredictSlot::new());
+        let entry = Entry {
+            slot: Arc::clone(&slot),
+            model,
+            rows,
+            enqueued: now,
+        };
+        let (mut q, _held) = self.batch_lock();
+        if q.queued_rows + entry.rows.len() > max_queue {
+            drop(q);
+            self.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmarineError::ResourcesUnavailable(
+                format!(
+                    "serving queue for model {} is full \
+                     ({max_queue} rows); retry later",
+                    self.name
+                ),
+            ));
+        }
+        q.queued_rows += entry.rows.len();
+        q.entries.push(entry);
+        let full = q.queued_rows >= max_batch;
+        Ok((slot, full))
+    }
+
+    /// Drain the queue and run one batched forward per distinct
+    /// routed version, fanning outcomes back to the parked slots.
+    /// Called inline by the worker that filled the batch and by the
+    /// oldest tail's deadline step — never from a dedicated thread.
+    pub fn flush(&self, now: Instant) {
+        let drained: Vec<Entry> = {
+            let (mut q, _held) = self.batch_lock();
+            q.queued_rows = 0;
+            std::mem::take(&mut q.entries)
+        };
+        if drained.is_empty() {
+            return;
+        }
+        // Group entry indices by routed version (2 groups max in
+        // practice: primary + canary).
+        let mut groups: Vec<(Arc<LoadedModel>, Vec<usize>)> =
+            Vec::with_capacity(2);
+        for (i, e) in drained.iter().enumerate() {
+            match groups
+                .iter_mut()
+                .find(|(m, _)| m.version == e.model.version)
+            {
+                Some((_, idxs)) => idxs.push(i),
+                None => groups
+                    .push((Arc::clone(&e.model), vec![i])),
+            }
+        }
+        let mut total_rows = 0usize;
+        for (model, idxs) in &groups {
+            let rows = assemble(&drained, idxs);
+            total_rows += rows.len();
+            match model.forward_batch(&rows) {
+                Ok(scores) => fan_out(
+                    self,
+                    &drained,
+                    idxs,
+                    model.version,
+                    &scores,
+                    now,
+                ),
+                Err(e) => {
+                    let msg = e.to_string();
+                    for &i in idxs {
+                        drained[i].slot.fill(
+                            PredictOutcome::Failed(msg.clone()),
+                        );
+                    }
+                }
+            }
+        }
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        let step =
+            self.metric_step.fetch_add(1, Ordering::Relaxed);
+        self.metrics.log_bounded(
+            &self.metric_key,
+            "batch_rows",
+            step,
+            total_rows as f64,
+            METRIC_CAP,
+        );
+        // Freshly filled slots belong to parked reactor tails; ring
+        // the feed doorbell so they are stepped now, not at the next
+        // sweep tick.
+        self.waker.ring();
+    }
+
+    /// Oldest queued entry's enqueue time, if any (deadline basis).
+    fn oldest(&self) -> Option<Instant> {
+        let (q, _held) = self.batch_lock();
+        q.entries.first().map(|e| e.enqueued)
+    }
+
+    /// Serving status document for `GET /api/v2/serve/:model`.
+    fn status_json(&self) -> Json {
+        let (primary_version, canary) = {
+            let (cfg, _held) = self.route_lock();
+            (
+                cfg.primary.version,
+                cfg.canary
+                    .as_ref()
+                    .map(|c| (c.version, cfg.canary_pct)),
+            )
+        };
+        let mut lat: Vec<f64> = self
+            .metrics
+            .series(&self.metric_key, "latency_ms")
+            .iter()
+            .map(|p| p.value)
+            .collect();
+        lat.sort_by(f64::total_cmp);
+        let requests = self.requests.load(Ordering::Relaxed);
+        let uptime =
+            self.started.elapsed().as_secs_f64().max(1e-9);
+        let mut j = Json::obj()
+            .set("model", Json::Str(self.name.clone()))
+            .set("loaded", Json::Bool(true))
+            .set(
+                "primary_version",
+                Json::Num(f64::from(primary_version)),
+            )
+            .set("requests", Json::Num(requests as f64))
+            .set(
+                "shed",
+                Json::Num(
+                    self.shed.load(Ordering::Relaxed) as f64
+                ),
+            )
+            .set(
+                "batches",
+                Json::Num(
+                    self.batches.load(Ordering::Relaxed) as f64,
+                ),
+            )
+            .set("qps", Json::Num(requests as f64 / uptime));
+        match canary {
+            Some((v, pct)) => {
+                j = j
+                    .set(
+                        "canary_version",
+                        Json::Num(f64::from(v)),
+                    )
+                    .set(
+                        "canary_weight",
+                        Json::Num(f64::from(pct)),
+                    );
+            }
+            None => {
+                j = j.set("canary_weight", Json::Num(0.0));
+            }
+        }
+        if !lat.is_empty() {
+            j = j
+                .set(
+                    "latency_ms_p50",
+                    Json::Num(percentile(&lat, 0.50)),
+                )
+                .set(
+                    "latency_ms_p99",
+                    Json::Num(percentile(&lat, 0.99)),
+                );
+        }
+        if let Some((_, mean, _)) =
+            self.metrics.summary(&self.metric_key, "batch_rows")
+        {
+            j = j.set("batch_occupancy_mean", Json::Num(mean));
+        }
+        j
+    }
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice.
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    let idx = ((sorted.len() as f64 * p).ceil() as usize)
+        .saturating_sub(1)
+        .min(sorted.len() - 1);
+    sorted[idx]
+}
+
+/// Hot: batch assembly — gather one version-group's rows by reference
+/// (payloads stay in their entries; nothing is copied).
+fn assemble<'a>(
+    drained: &'a [Entry],
+    idxs: &[usize],
+) -> Vec<&'a Row> {
+    let mut cap = 0usize;
+    for &i in idxs {
+        cap += drained[i].rows.len();
+    }
+    let mut rows = Vec::with_capacity(cap);
+    for &i in idxs {
+        for r in &drained[i].rows {
+            rows.push(r);
+        }
+    }
+    rows
+}
+
+/// Hot: response fan-out — slice each entry's scores out of the
+/// batched result, fill its slot, log its queue-to-score latency.
+fn fan_out(
+    server: &ModelServer,
+    drained: &[Entry],
+    idxs: &[usize],
+    version: u32,
+    scores: &[f32],
+    now: Instant,
+) {
+    let mut off = 0usize;
+    for &i in idxs {
+        let e = &drained[i];
+        let n = e.rows.len();
+        let mut s = Vec::with_capacity(n);
+        s.extend_from_slice(&scores[off..off + n]);
+        off += n;
+        let ms =
+            now.duration_since(e.enqueued).as_secs_f64() * 1e3;
+        let step =
+            server.metric_step.fetch_add(1, Ordering::Relaxed);
+        server.metrics.log_bounded(
+            &server.metric_key,
+            "latency_ms",
+            step,
+            ms,
+            METRIC_CAP,
+        );
+        e.slot.fill(PredictOutcome::Scored { version, scores: s });
+    }
+}
+
+fn bad_rows() -> SubmarineError {
+    SubmarineError::InvalidSpec(String::from(
+        "body must be {\"rows\": [{\"ids\": [..], \"vals\": \
+         [..]}, ..]} with non-negative integer ids and numeric vals",
+    ))
+}
+
+/// Hot: predict request decode — the CTR request encoding
+/// (`{"rows": [{"ids": [..], "vals": [..]}, ..]}`).
+fn decode_rows(body: &Json) -> crate::Result<Vec<Row>> {
+    let rows = body
+        .get("rows")
+        .and_then(Json::as_arr)
+        .ok_or_else(bad_rows)?;
+    if rows.is_empty() {
+        return Err(bad_rows());
+    }
+    let mut out = Vec::with_capacity(rows.len());
+    for row in rows {
+        let ids_j = row.get("ids").and_then(Json::as_arr);
+        let vals_j = row.get("vals").and_then(Json::as_arr);
+        let mut ids =
+            Vec::with_capacity(ids_j.map_or(0, <[Json]>::len));
+        if let Some(arr) = ids_j {
+            for v in arr {
+                let f = v.as_f64().ok_or_else(bad_rows)?;
+                if !(f >= 0.0 && f.fract() == 0.0) {
+                    return Err(bad_rows());
+                }
+                ids.push(f as usize);
+            }
+        }
+        let mut vals =
+            Vec::with_capacity(vals_j.map_or(0, <[Json]>::len));
+        if let Some(arr) = vals_j {
+            for v in arr {
+                vals.push(
+                    v.as_f64().ok_or_else(bad_rows)? as f32
+                );
+            }
+        }
+        if ids.is_empty() && vals.is_empty() {
+            return Err(bad_rows());
+        }
+        out.push(Row { ids, vals });
+    }
+    Ok(out)
+}
+
+/// Hot: predict response encode — one fanned-out outcome into the v2
+/// envelope.
+fn encode_response(model: &str, out: PredictOutcome) -> Response {
+    match out {
+        PredictOutcome::Scored { version, scores } => {
+            let mut preds = Vec::with_capacity(scores.len());
+            for s in scores {
+                preds.push(Json::Num(f64::from(s)));
+            }
+            wrap_ok(
+                Envelope::V2,
+                Json::obj()
+                    .set("model", Json::Str(String::from(model)))
+                    .set("version", Json::Num(f64::from(version)))
+                    .set("predictions", Json::Arr(preds)),
+            )
+        }
+        PredictOutcome::Failed(msg) => {
+            error_json(Envelope::V2, 500, "Runtime", &msg)
+        }
+    }
+}
+
+// ------------------------------------------------------ predict tail
+
+/// The parked half of a predict request: a reactor tail entry that
+/// resolves once its slot is filled, and flushes the batch itself when
+/// its own deadline expires (so the 25ms sweep — or the blocking
+/// fallback driver — bounds partial-batch latency with no timer
+/// thread).
+struct PredictTail {
+    server: Arc<ModelServer>,
+    slot: Arc<PredictSlot>,
+    deadline: Instant,
+}
+
+impl TailSource for PredictTail {
+    fn step(&mut self, now: Instant) -> TailStep {
+        if let Some(out) = self.slot.take() {
+            return TailStep::Respond(Box::new(encode_response(
+                &self.server.name,
+                out,
+            )));
+        }
+        if now >= self.deadline {
+            // Deadline reached with the batch still partial: flush
+            // whatever is queued (ours included, unless a concurrent
+            // flusher already took it — then the next step resolves).
+            if self
+                .server
+                .oldest()
+                .is_some_and(|t| t <= self.deadline)
+            {
+                self.server.flush(now);
+            }
+            if let Some(out) = self.slot.take() {
+                return TailStep::Respond(Box::new(
+                    encode_response(&self.server.name, out),
+                ));
+            }
+        }
+        TailStep::Pending
+    }
+
+    fn deadline(&self) -> Instant {
+        self.deadline
+    }
+
+    fn wait(&self, max: Duration) {
+        self.slot.wait(max);
+    }
+}
+
+// ------------------------------------------------------ serving layer
+
+/// The serving tier: per-model servers over the registry, built
+/// lazily on first predict/status and refreshed on stage transitions.
+pub struct ServingLayer {
+    store: Arc<MetaStore>,
+    metrics: Arc<MetricStore>,
+    models: Arc<ModelRegistry>,
+    serve_models: Mutex<HashMap<String, Arc<ModelServer>>>,
+    waker: Arc<WakerCell>,
+    max_batch: AtomicUsize,
+    max_delay_ms: AtomicU64,
+    max_queue: AtomicUsize,
+}
+
+impl ServingLayer {
+    pub fn new(
+        store: Arc<MetaStore>,
+        metrics: Arc<MetricStore>,
+        models: Arc<ModelRegistry>,
+    ) -> ServingLayer {
+        ServingLayer {
+            store,
+            metrics,
+            models,
+            serve_models: Mutex::new(HashMap::new()),
+            waker: Arc::new(WakerCell::default()),
+            max_batch: AtomicUsize::new(env_u64(
+                "SUBMARINE_SERVE_MAX_BATCH",
+                DEFAULT_MAX_BATCH as u64,
+            )
+                as usize),
+            max_delay_ms: AtomicU64::new(env_u64(
+                "SUBMARINE_SERVE_MAX_DELAY_MS",
+                DEFAULT_MAX_DELAY_MS,
+            )),
+            max_queue: AtomicUsize::new(env_u64(
+                "SUBMARINE_SERVE_MAX_QUEUE",
+                DEFAULT_MAX_QUEUE as u64,
+            )
+                as usize),
+        }
+    }
+
+    /// Install the reactor doorbell (called once at bind time).
+    pub fn set_waker(&self, f: Arc<dyn Fn() + Send + Sync>) {
+        self.waker.install(f);
+    }
+
+    /// Override the batching knobs (tests / CI pin these instead of
+    /// racing on process env).
+    pub fn set_knobs(
+        &self,
+        max_batch: usize,
+        max_delay_ms: u64,
+        max_queue: usize,
+    ) {
+        self.max_batch
+            .store(max_batch.max(1), Ordering::Relaxed);
+        self.max_delay_ms.store(max_delay_ms, Ordering::Relaxed);
+        self.max_queue
+            .store(max_queue.max(1), Ordering::Relaxed);
+    }
+
+    fn map_lock(
+        &self,
+    ) -> (
+        MutexGuard<'_, HashMap<String, Arc<ModelServer>>>,
+        tracker::Held,
+    ) {
+        let held = tracker::acquired(LockRank::ServeModels, 0);
+        (
+            self.serve_models
+                .lock()
+                .unwrap_or_else(|e| e.into_inner()),
+            held,
+        )
+    }
+
+    /// Load one registry version as an immutable serving snapshot.
+    fn load(
+        &self,
+        name: &str,
+        version: u32,
+    ) -> crate::Result<Arc<LoadedModel>> {
+        let params = self.models.load_params(name, version)?;
+        LoadedModel::from_params(version, &params).map(Arc::new)
+    }
+
+    /// Current route for `name`: `None` when no version is in
+    /// Production. The canary config is dropped silently if its
+    /// version no longer loads (e.g. archived then compacted away).
+    fn build_route(
+        &self,
+        name: &str,
+    ) -> crate::Result<
+        Option<(Arc<LoadedModel>, Option<Arc<LoadedModel>>, u32)>,
+    > {
+        let Some(prod) = self.models.production_version(name)
+        else {
+            return Ok(None);
+        };
+        let primary = self.load(name, prod.version)?;
+        let (canary, pct) = match self.canary_cfg(name) {
+            Some((v, pct)) if v != prod.version && pct > 0 => {
+                match self.load(name, v) {
+                    Ok(m) => (Some(m), pct),
+                    Err(_) => (None, 0),
+                }
+            }
+            _ => (None, 0),
+        };
+        Ok(Some((primary, canary, pct)))
+    }
+
+    /// `(canary_version, canary_weight)` from the serving config doc.
+    fn canary_cfg(&self, name: &str) -> Option<(u32, u32)> {
+        let doc = self.store.get(CONFIG_NS, name)?;
+        let v = doc.get("canary_version").and_then(Json::as_u64)?;
+        let w = doc
+            .get("canary_weight")
+            .and_then(Json::as_u64)
+            .unwrap_or(0);
+        Some((v as u32, w.min(100) as u32))
+    }
+
+    /// Get-or-create the per-model server. Model params load from
+    /// storage *outside* the map lock (Shard ranks before ServeModels;
+    /// holding the map across the load would invert the order and
+    /// serialize every model's first request behind it).
+    fn server_for(
+        &self,
+        name: &str,
+    ) -> crate::Result<Arc<ModelServer>> {
+        {
+            let (map, _held) = self.map_lock();
+            if let Some(s) = map.get(name) {
+                return Ok(Arc::clone(s));
+            }
+        }
+        let (primary, canary, pct) =
+            self.build_route(name)?.ok_or_else(|| {
+                SubmarineError::NotFound(format!(
+                    "model {name} has no Production version to \
+                     serve (promote one first)"
+                ))
+            })?;
+        let built = Arc::new(ModelServer::new(
+            name,
+            primary,
+            canary,
+            pct,
+            Arc::clone(&self.metrics),
+            Arc::clone(&self.waker),
+        ));
+        let (mut map, _held) = self.map_lock();
+        Ok(Arc::clone(
+            map.entry(String::from(name)).or_insert(built),
+        ))
+    }
+
+    /// Re-resolve the route for `name` after a stage transition or
+    /// canary PATCH: an atomic hot-swap for a loaded server, a no-op
+    /// for a model nobody is serving yet. In-flight entries finish on
+    /// the version they were routed to.
+    pub fn refresh(&self, name: &str) {
+        let existing = {
+            let (map, _held) = self.map_lock();
+            map.get(name).map(Arc::clone)
+        };
+        let Some(server) = existing else {
+            return;
+        };
+        match self.build_route(name) {
+            Ok(Some((primary, canary, pct))) => {
+                server.install(primary, canary, pct);
+            }
+            Ok(None) => {
+                // Production was vacated (archive/demote): stop
+                // routing new requests; queued ones still drain.
+                server.flush(Instant::now());
+                let (mut map, _held) = self.map_lock();
+                map.remove(name);
+            }
+            Err(_) => {
+                // Keep serving the previous snapshot rather than
+                // flapping on a transient storage error.
+            }
+        }
+    }
+
+    /// `POST /api/v2/serve/:model` — decode, route, park; responds
+    /// via the reactor tail once the batch it joined is scored.
+    pub fn predict(&self, ctx: &Ctx<'_>) -> Response {
+        match self.predict_inner(ctx) {
+            Ok(resp) => resp,
+            Err(e) => wrap_err(Envelope::V2, &e),
+        }
+    }
+
+    fn predict_inner(
+        &self,
+        ctx: &Ctx<'_>,
+    ) -> crate::Result<Response> {
+        let name = ctx.param("model")?;
+        let body = ctx.json_body()?;
+        let rows = decode_rows(&body)?;
+        let server = self.server_for(name)?;
+        let now = Instant::now();
+        let max_batch =
+            self.max_batch.load(Ordering::Relaxed).max(1);
+        let max_queue =
+            self.max_queue.load(Ordering::Relaxed).max(1);
+        let max_delay = Duration::from_millis(
+            self.max_delay_ms.load(Ordering::Relaxed),
+        );
+        let (slot, full) =
+            server.enqueue(rows, now, max_batch, max_queue)?;
+        if full {
+            // The enqueueing worker runs the batched forward inline:
+            // under load the flush cost amortizes across max_batch
+            // requests and no batch-formation thread exists to wake.
+            server.flush(now);
+        }
+        Ok(Response::tail_poll(Box::new(PredictTail {
+            server,
+            slot,
+            deadline: now + max_delay,
+        })))
+    }
+
+    /// `GET /api/v2/serve/:model` — live counters for a loaded
+    /// server, or a cold `loaded: false` document naming the
+    /// Production version that a first predict would load.
+    pub fn status(&self, name: &str) -> crate::Result<Json> {
+        let server = {
+            let (map, _held) = self.map_lock();
+            map.get(name).map(Arc::clone)
+        };
+        if let Some(s) = server {
+            return Ok(s.status_json());
+        }
+        let prod = self
+            .models
+            .production_version(name)
+            .ok_or_else(|| {
+                SubmarineError::NotFound(format!(
+                    "model {name} has no Production version to \
+                     serve"
+                ))
+            })?;
+        Ok(Json::obj()
+            .set("model", Json::Str(String::from(name)))
+            .set("loaded", Json::Bool(false))
+            .set(
+                "primary_version",
+                Json::Num(f64::from(prod.version)),
+            )
+            .set("canary_weight", Json::Num(0.0)))
+    }
+
+    /// `PATCH /api/v2/serve/:model` — set the canary target:
+    /// `{"canary_version": v, "canary_weight": 0..=100}`. Weight 0
+    /// clears the canary. The named version must load *now*, so the
+    /// route can never point at an unloadable version later.
+    pub fn patch_config(
+        &self,
+        name: &str,
+        body: &Json,
+    ) -> crate::Result<Json> {
+        let weight = body
+            .get("canary_weight")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| {
+                SubmarineError::InvalidSpec(String::from(
+                    "canary_weight (0..=100) is required",
+                ))
+            })?;
+        if weight > 100 {
+            return Err(SubmarineError::InvalidSpec(format!(
+                "canary_weight {weight} out of range 0..=100"
+            )));
+        }
+        let version =
+            body.get("canary_version").and_then(Json::as_u64);
+        if weight > 0 {
+            let v = version.ok_or_else(|| {
+                SubmarineError::InvalidSpec(String::from(
+                    "canary_version is required when \
+                     canary_weight > 0",
+                ))
+            })?;
+            // Fail the PATCH, not a future predict.
+            self.load(name, v as u32)?;
+        }
+        let doc = Json::obj()
+            .set(
+                "canary_version",
+                version.map_or(Json::Null, |v| {
+                    Json::Num(v as f64)
+                }),
+            )
+            .set("canary_weight", Json::Num(weight as f64));
+        self.store.put(CONFIG_NS, name, doc.clone())?;
+        self.refresh(name);
+        Ok(doc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::MetaStore;
+
+    fn deepfm_params(
+        fields: usize,
+        emb_dim: usize,
+        vocab: usize,
+        h: usize,
+    ) -> Vec<Vec<f32>> {
+        let d_in = fields * emb_dim;
+        let mut k = 0u32;
+        let mut next = move || {
+            k = k.wrapping_mul(1664525).wrapping_add(1013904223);
+            ((k >> 8) as f32 / (1 << 24) as f32 - 0.5) * 0.2
+        };
+        let gen = |n: usize, next: &mut dyn FnMut() -> f32| {
+            (0..n).map(|_| next()).collect::<Vec<f32>>()
+        };
+        vec![
+            gen(vocab * emb_dim, &mut next),
+            gen(vocab, &mut next),
+            vec![0.1],
+            gen(d_in * h, &mut next),
+            gen(h, &mut next),
+            gen(h * h, &mut next),
+            gen(h, &mut next),
+            gen(h, &mut next),
+            vec![0.05],
+        ]
+    }
+
+    fn row(fields: usize, seed: usize) -> Row {
+        Row {
+            ids: (0..fields)
+                .map(|f| (seed * 7 + f * 3) % 11)
+                .collect(),
+            vals: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn deepfm_shape_detection_and_batch_equivalence() {
+        let params = deepfm_params(4, 3, 11, 5);
+        let m = LoadedModel::from_params(2, &params).unwrap();
+        assert!(matches!(m.net, Net::DeepFm(_)));
+        let rows: Vec<Row> = (0..6).map(|i| row(4, i)).collect();
+        let refs: Vec<&Row> = rows.iter().collect();
+        let batched = m.forward_batch(&refs).unwrap();
+        assert_eq!(batched.len(), 6);
+        for (i, r) in refs.iter().enumerate() {
+            let single = m.forward_batch(&[r]).unwrap();
+            assert!(
+                (single[0] - batched[i]).abs() < 1e-5,
+                "row {i}: {} vs {}",
+                single[0],
+                batched[i]
+            );
+            assert!(batched[i] > 0.0 && batched[i] < 1.0);
+        }
+    }
+
+    #[test]
+    fn mlp_dense_and_sparse_rows() {
+        // 3 -> 2 -> 1, deterministic weights.
+        let params = vec![
+            vec![1.0, 0.0, -1.0, 0.5, 0.5, 0.5],
+            vec![0.0, 0.1],
+            vec![1.0, -1.0],
+            vec![0.2],
+        ];
+        let m = LoadedModel::from_params(1, &params).unwrap();
+        let dense = Row {
+            ids: vec![],
+            vals: vec![1.0, 2.0, 3.0],
+        };
+        let sparse = Row {
+            ids: vec![0, 1, 2],
+            vals: vec![1.0, 2.0, 3.0],
+        };
+        let d = m.forward_batch(&[&dense]).unwrap()[0];
+        let s = m.forward_batch(&[&sparse]).unwrap()[0];
+        assert!((d - s).abs() < 1e-6);
+        // hand computation: h = relu([1-3+0, 0.5+1+1.5+0.1]) =
+        // [0, 3.1]; out = 0*1 + 3.1*-1 + 0.2 = -2.9
+        assert!((d - sigmoid(-2.9)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn row_validation_rejects_bad_shapes() {
+        let params = deepfm_params(4, 3, 11, 5);
+        let m = LoadedModel::from_params(1, &params).unwrap();
+        assert!(m
+            .check_row(&Row {
+                ids: vec![1, 2],
+                vals: vec![]
+            })
+            .is_err());
+        assert!(m
+            .check_row(&Row {
+                ids: vec![1, 2, 3, 99],
+                vals: vec![]
+            })
+            .is_err());
+        assert!(m
+            .check_row(&Row {
+                ids: vec![1, 2, 3, 4],
+                vals: vec![]
+            })
+            .is_ok());
+    }
+
+    #[test]
+    fn decode_rows_contract() {
+        let body = Json::parse(
+            r#"{"rows":[{"ids":[1,2],"vals":[0.5,1.5]},{"ids":[3,4]}]}"#,
+        )
+        .unwrap();
+        let rows = decode_rows(&body).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].ids, vec![1, 2]);
+        assert_eq!(rows[0].vals, vec![0.5, 1.5]);
+        assert!(rows[1].vals.is_empty());
+        for bad in [
+            r#"{}"#,
+            r#"{"rows":[]}"#,
+            r#"{"rows":[{"ids":[-1]}]}"#,
+            r#"{"rows":[{"ids":[1.5]}]}"#,
+            r#"{"rows":[{}]}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(decode_rows(&j).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn canary_stride_honors_weight_per_hundred() {
+        for pct in [0u32, 10, 50, 90, 100] {
+            let hits = (0u64..100)
+                .filter(|n| {
+                    n.wrapping_mul(37) % 100 < u64::from(pct)
+                })
+                .count() as u32;
+            assert_eq!(hits, pct, "pct={pct}");
+        }
+        // interleaved, not front-loaded: any 10-window at pct=50
+        // sees both routes
+        for start in 0u64..90 {
+            let hits = (start..start + 10)
+                .filter(|n| n.wrapping_mul(37) % 100 < 50)
+                .count();
+            assert!((2..=8).contains(&hits), "start={start}");
+        }
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(f64::from).collect();
+        assert_eq!(percentile(&v, 0.50), 50.0);
+        assert_eq!(percentile(&v, 0.99), 99.0);
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+    }
+
+    fn layer_with_model() -> (ServingLayer, Arc<ModelRegistry>) {
+        let store = Arc::new(MetaStore::in_memory());
+        let metrics = Arc::new(MetricStore::new());
+        let models =
+            Arc::new(ModelRegistry::new(Arc::clone(&store)));
+        let layer = ServingLayer::new(
+            store,
+            metrics,
+            Arc::clone(&models),
+        );
+        (layer, models)
+    }
+
+    fn register_mlp(
+        models: &ModelRegistry,
+        bias: f32,
+    ) -> u32 {
+        // 2 -> 1 net: score = sigmoid(x0 - x1 + bias)
+        let params =
+            vec![vec![1.0, -1.0], vec![bias]];
+        let v = models
+            .register("ctr", "exp-1", &params, &[])
+            .unwrap();
+        models
+            .transition("ctr", v, crate::model::Stage::Staging)
+            .unwrap();
+        models
+            .transition(
+                "ctr",
+                v,
+                crate::model::Stage::Production,
+            )
+            .unwrap();
+        v
+    }
+
+    #[test]
+    fn enqueue_flush_roundtrip_and_shed() {
+        let (layer, models) = layer_with_model();
+        register_mlp(&models, 0.0);
+        let server = layer.server_for("ctr").unwrap();
+        let now = Instant::now();
+        let (slot, full) = server
+            .enqueue(
+                vec![Row {
+                    ids: vec![],
+                    vals: vec![2.0, 1.0],
+                }],
+                now,
+                8,
+                4,
+            )
+            .unwrap();
+        assert!(!full);
+        assert!(slot.take().is_none());
+        server.flush(now);
+        match slot.take() {
+            Some(PredictOutcome::Scored { scores, .. }) => {
+                assert!((scores[0] - sigmoid(1.0)).abs() < 1e-6);
+            }
+            other => panic!(
+                "expected scored outcome, got {:?}",
+                other.is_some()
+            ),
+        }
+        // queue bound: 4-row cap sheds a 5th row
+        let big = |n: usize| {
+            (0..n)
+                .map(|_| Row {
+                    ids: vec![],
+                    vals: vec![0.0, 0.0],
+                })
+                .collect::<Vec<_>>()
+        };
+        let (_s1, _) =
+            server.enqueue(big(4), now, 8, 4).unwrap();
+        let err =
+            server.enqueue(big(1), now, 8, 4).unwrap_err();
+        assert_eq!(err.http_status(), 503);
+        assert_eq!(server.shed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn refresh_hot_swaps_primary() {
+        let (layer, models) = layer_with_model();
+        let v1 = register_mlp(&models, 0.0);
+        let server = layer.server_for("ctr").unwrap();
+        {
+            let (cfg, _held) = server.route_lock();
+            assert_eq!(cfg.primary.version, v1);
+        }
+        let v2 = register_mlp(&models, 1.0);
+        layer.refresh("ctr");
+        let (cfg, _held) = server.route_lock();
+        assert_eq!(cfg.primary.version, v2);
+    }
+
+    #[test]
+    fn patch_config_validates_and_applies() {
+        let (layer, models) = layer_with_model();
+        let v1 = register_mlp(&models, 0.0);
+        let v2 = {
+            let params = vec![vec![1.0, -1.0], vec![0.5]];
+            models.register("ctr", "exp-2", &params, &[]).unwrap()
+        };
+        assert!(layer
+            .patch_config(
+                "ctr",
+                &Json::parse(r#"{"canary_weight":200}"#).unwrap()
+            )
+            .is_err());
+        assert!(layer
+            .patch_config(
+                "ctr",
+                &Json::parse(r#"{"canary_weight":10}"#).unwrap()
+            )
+            .is_err());
+        assert!(layer
+            .patch_config(
+                "ctr",
+                &Json::parse(
+                    r#"{"canary_version":99,"canary_weight":10}"#
+                )
+                .unwrap()
+            )
+            .is_err());
+        layer
+            .patch_config(
+                "ctr",
+                &Json::parse(&format!(
+                    r#"{{"canary_version":{v2},"canary_weight":25}}"#
+                ))
+                .unwrap(),
+            )
+            .unwrap();
+        let server = layer.server_for("ctr").unwrap();
+        let (cfg, _held) = server.route_lock();
+        assert_eq!(cfg.primary.version, v1);
+        assert_eq!(
+            cfg.canary.as_ref().map(|c| c.version),
+            Some(v2)
+        );
+        assert_eq!(cfg.canary_pct, 25);
+    }
+
+    #[test]
+    fn status_cold_and_warm() {
+        let (layer, models) = layer_with_model();
+        assert!(layer.status("ctr").is_err());
+        let v = register_mlp(&models, 0.0);
+        let cold = layer.status("ctr").unwrap();
+        assert_eq!(
+            cold.get("loaded").and_then(Json::as_bool),
+            Some(false)
+        );
+        let server = layer.server_for("ctr").unwrap();
+        let now = Instant::now();
+        let (slot, _) = server
+            .enqueue(
+                vec![Row {
+                    ids: vec![],
+                    vals: vec![1.0, 0.0],
+                }],
+                now,
+                8,
+                64,
+            )
+            .unwrap();
+        server.flush(now);
+        assert!(slot.take().is_some());
+        let warm = layer.status("ctr").unwrap();
+        assert_eq!(
+            warm.get("loaded").and_then(Json::as_bool),
+            Some(true)
+        );
+        assert_eq!(
+            warm.get("primary_version").and_then(Json::as_u64),
+            Some(u64::from(v))
+        );
+        assert_eq!(
+            warm.get("requests").and_then(Json::as_u64),
+            Some(1)
+        );
+        assert!(warm.get("latency_ms_p50").is_some());
+        assert!(warm.get("latency_ms_p99").is_some());
+        assert_eq!(
+            warm.get("batch_occupancy_mean")
+                .and_then(Json::as_f64),
+            Some(1.0)
+        );
+    }
+
+    #[test]
+    fn predict_tail_resolves_on_deadline_step() {
+        let (layer, models) = layer_with_model();
+        register_mlp(&models, 0.0);
+        let server = layer.server_for("ctr").unwrap();
+        let now = Instant::now();
+        let (slot, full) = server
+            .enqueue(
+                vec![Row {
+                    ids: vec![],
+                    vals: vec![0.0, 0.0],
+                }],
+                now,
+                8,
+                64,
+            )
+            .unwrap();
+        assert!(!full);
+        let mut tail = PredictTail {
+            server: Arc::clone(&server),
+            slot,
+            deadline: now + Duration::from_millis(5),
+        };
+        // before the deadline: still pending
+        assert!(matches!(tail.step(now), TailStep::Pending));
+        // past the deadline: the tail flushes and responds
+        match tail.step(now + Duration::from_millis(6)) {
+            TailStep::Respond(resp) => {
+                assert_eq!(resp.status, 200);
+            }
+            _ => panic!("expected Respond after deadline"),
+        }
+    }
+}

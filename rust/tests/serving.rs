@@ -1,0 +1,309 @@
+//! Integration tests for the online inference serving tier (ISSUE 9):
+//! micro-batching over the epoll reactor (deadline flush of a partial
+//! batch, inline full-batch flush under concurrent load), weighted
+//! canary routing, 503 queue shedding in the v2 envelope, and stage
+//! promotion hot-swapping the served version without dropping
+//! in-flight requests.
+
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use submarine::experiment::spec::ExperimentSpec;
+use submarine::httpd::http::Request;
+use submarine::httpd::server::{build_router, Server, Services};
+use submarine::model::Stage;
+use submarine::orchestrator::Submitter;
+use submarine::sdk::ExperimentClient;
+use submarine::storage::MetaStore;
+use submarine::util::json::Json;
+
+struct NullSubmitter;
+impl Submitter for NullSubmitter {
+    fn name(&self) -> &'static str {
+        "null"
+    }
+    fn submit(&self, _: &str, _: &ExperimentSpec) -> submarine::Result<()> {
+        Ok(())
+    }
+    fn kill(&self, _: &str) -> submarine::Result<()> {
+        Ok(())
+    }
+}
+
+fn services() -> Arc<Services> {
+    Arc::new(Services::new(
+        Arc::new(MetaStore::in_memory()),
+        Arc::new(NullSubmitter),
+    ))
+}
+
+/// Register a 2-input / 1-output MLP (`sigmoid(w·x + b)`) and walk it
+/// to the requested stage. Returns the registered version number.
+fn register_mlp(s: &Services, bias: f32, stage: Stage) -> u32 {
+    let params = vec![vec![1.0, -1.0], vec![bias]];
+    let v = s.models.register("ctr", "exp-1", &params, &[]).unwrap();
+    if stage == Stage::Staging || stage == Stage::Production {
+        s.models.transition("ctr", v, Stage::Staging).unwrap();
+    }
+    if stage == Stage::Production {
+        s.models.transition("ctr", v, Stage::Production).unwrap();
+    }
+    v
+}
+
+struct TestServer {
+    port: u16,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TestServer {
+    fn start(svcs: Arc<Services>) -> TestServer {
+        let server =
+            Arc::new(Server::bind(svcs, 0, None).unwrap());
+        let port = server.port();
+        let stop = server.stopper();
+        let handle = Arc::clone(&server).serve_background();
+        TestServer {
+            port,
+            stop,
+            handle: Some(handle),
+        }
+    }
+
+    fn client(&self) -> ExperimentClient {
+        ExperimentClient::v2("127.0.0.1", self.port)
+    }
+}
+
+impl Drop for TestServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(("127.0.0.1", self.port));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn one_row_vals(a: f64, b: f64) -> Json {
+    Json::Arr(vec![Json::obj().set(
+        "vals",
+        Json::Arr(vec![Json::Num(a), Json::Num(b)]),
+    )])
+}
+
+// --------------------------------------------------- deadline flush
+
+#[test]
+fn deadline_flush_completes_a_partial_batch() {
+    let svcs = services();
+    register_mlp(&svcs, 0.25, Stage::Production);
+    // batch of 8 never fills with one request; only the 50ms deadline
+    // (driven by the reactor sweep stepping the parked tail) flushes it
+    svcs.serving.set_knobs(8, 50, 256);
+    let srv = TestServer::start(Arc::clone(&svcs));
+    let client = srv.client();
+
+    let res = client.predict("ctr", &one_row_vals(1.0, 0.0)).unwrap();
+    assert_eq!(res.str_field("model"), Some("ctr"));
+    assert_eq!(res.num_field("version"), Some(1.0));
+    let preds = res.get("predictions").and_then(Json::as_arr).unwrap();
+    assert_eq!(preds.len(), 1);
+    // sigmoid(1*1 - 1*0 + 0.25) = sigmoid(1.25)
+    let p = preds[0].as_f64().unwrap();
+    assert!((p - 0.777_3).abs() < 1e-3, "{p}");
+
+    let st = client.serving_status("ctr").unwrap();
+    assert_eq!(st.get("loaded").and_then(Json::as_bool), Some(true));
+    assert_eq!(st.num_field("primary_version"), Some(1.0));
+    assert!(st.num_field("requests").unwrap() >= 1.0);
+    assert!(st.num_field("batches").unwrap() >= 1.0);
+}
+
+// ------------------------------------------------- full-batch flush
+
+#[test]
+fn full_batch_flushes_inline_under_load() {
+    let svcs = services();
+    register_mlp(&svcs, 0.0, Stage::Production);
+    // deadline is far away (10s): only the fourth arrival filling the
+    // batch can complete these requests quickly
+    svcs.serving.set_knobs(4, 10_000, 256);
+    let srv = TestServer::start(Arc::clone(&svcs));
+    let port = srv.port;
+
+    let begin = Instant::now();
+    let threads: Vec<_> = (0..4)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let client = ExperimentClient::v2("127.0.0.1", port);
+                client
+                    .predict("ctr", &one_row_vals(f64::from(i), 1.0))
+                    .unwrap()
+            })
+        })
+        .collect();
+    for t in threads {
+        let res = t.join().unwrap();
+        let preds =
+            res.get("predictions").and_then(Json::as_arr).unwrap();
+        assert_eq!(preds.len(), 1);
+    }
+    // well under the 10s deadline: the batch flushed on fullness
+    assert!(
+        begin.elapsed() < Duration::from_secs(5),
+        "batch did not flush inline: {:?}",
+        begin.elapsed()
+    );
+
+    let st = srv.client().serving_status("ctr").unwrap();
+    assert_eq!(st.num_field("requests"), Some(4.0));
+    // all four rows went through one (or, under extreme scheduling
+    // skew, at most a few) batched forward(s)
+    assert!(st.num_field("batches").unwrap() <= 4.0);
+}
+
+// ---------------------------------------------------- canary routing
+
+#[test]
+fn canary_split_is_statistically_honored() {
+    let svcs = services();
+    register_mlp(&svcs, 0.25, Stage::Production); // v1
+    register_mlp(&svcs, -0.25, Stage::Staging); // v2 (canary)
+    svcs.serving.set_knobs(8, 10, 256);
+    let srv = TestServer::start(Arc::clone(&svcs));
+    let client = srv.client();
+
+    // PATCH /api/v2/serve/ctr — 50/50 split between v1 and v2
+    let cfg = client
+        .patch_resource(
+            "serve",
+            "ctr",
+            &Json::obj()
+                .set("canary_version", Json::Num(2.0))
+                .set("canary_weight", Json::Num(50.0)),
+        )
+        .unwrap();
+    assert_eq!(cfg.num_field("canary_weight"), Some(50.0));
+
+    let mut by_version = [0u32; 3];
+    for _ in 0..40 {
+        let res =
+            client.predict("ctr", &one_row_vals(1.0, 0.0)).unwrap();
+        let v = res.num_field("version").unwrap() as usize;
+        assert!(v == 1 || v == 2, "unexpected version {v}");
+        by_version[v] += 1;
+    }
+    // the stride router hands the canary exactly 50 of every 100
+    // consecutive requests, interleaved; over 40 the split is 19/21
+    assert_eq!(by_version[1] + by_version[2], 40);
+    assert!(
+        by_version[1] >= 15 && by_version[2] >= 15,
+        "lopsided split: v1={} v2={}",
+        by_version[1],
+        by_version[2]
+    );
+
+    let st = client.serving_status("ctr").unwrap();
+    assert_eq!(st.num_field("canary_version"), Some(2.0));
+    assert_eq!(st.num_field("canary_weight"), Some(50.0));
+}
+
+// -------------------------------------------------------- shedding
+
+#[test]
+fn full_queue_sheds_503_in_v2_envelope() {
+    let svcs = services();
+    register_mlp(&svcs, 0.0, Stage::Production);
+    // queue bound of 4 rows; a 5-row request cannot ever fit
+    svcs.serving.set_knobs(8, 5_000, 4);
+
+    // envelope shape, checked at the router level
+    let router = build_router(Arc::clone(&svcs));
+    let rows: Vec<Json> = (0..5)
+        .map(|_| {
+            Json::obj().set(
+                "vals",
+                Json::Arr(vec![Json::Num(1.0), Json::Num(0.0)]),
+            )
+        })
+        .collect();
+    let body = Json::obj().set("rows", Json::Arr(rows)).dump();
+    let mut req = Request::synthetic("POST", "/api/v2/serve/ctr");
+    req.body = body.clone().into_bytes();
+    let resp = router.dispatch(&req);
+    assert_eq!(resp.status, 503);
+    let j = Json::parse(std::str::from_utf8(&resp.body).unwrap())
+        .unwrap();
+    assert_eq!(j.str_field("status"), Some("ERROR"));
+    assert_eq!(j.num_field("code"), Some(503.0));
+    assert_eq!(
+        j.at(&["error", "type"]).and_then(Json::as_str),
+        Some("ResourcesUnavailable")
+    );
+
+    // and end-to-end over TCP through the SDK
+    let srv = TestServer::start(Arc::clone(&svcs));
+    let rows_j = Json::parse(&body).unwrap();
+    let err = srv
+        .client()
+        .predict("ctr", rows_j.get("rows").unwrap())
+        .unwrap_err();
+    assert!(err.to_string().contains("503"), "{err}");
+
+    let st = srv.client().serving_status("ctr").unwrap();
+    assert!(st.num_field("shed").unwrap() >= 1.0);
+}
+
+// -------------------------------------------------------- hot swap
+
+#[test]
+fn promotion_hot_swaps_without_dropping_inflight() {
+    let svcs = services();
+    register_mlp(&svcs, 0.25, Stage::Production); // v1
+    register_mlp(&svcs, -0.25, Stage::Staging); // v2
+    // long deadline so the first request is still parked when the
+    // promotion lands mid-flight
+    svcs.serving.set_knobs(8, 1_200, 256);
+    let srv = TestServer::start(Arc::clone(&svcs));
+    let port = srv.port;
+
+    let parked = std::thread::spawn(move || {
+        let client = ExperimentClient::v2("127.0.0.1", port);
+        client.predict("ctr", &one_row_vals(1.0, 0.0)).unwrap()
+    });
+    // let the first request enqueue, then promote v2 over the API
+    std::thread::sleep(Duration::from_millis(250));
+    let client = srv.client();
+    let doc = client
+        .patch_resource(
+            "model",
+            "ctr/2",
+            &Json::obj().set("stage", Json::Str("Production".into())),
+        )
+        .unwrap();
+    assert_eq!(
+        doc.str_field("stage"),
+        Some("Production"),
+        "{doc:?}"
+    );
+
+    // the in-flight request finishes on the version it was routed to
+    let first = parked.join().unwrap();
+    assert_eq!(first.num_field("version"), Some(1.0), "{first:?}");
+
+    // new requests score on the promoted version
+    let second =
+        client.predict("ctr", &one_row_vals(1.0, 0.0)).unwrap();
+    assert_eq!(second.num_field("version"), Some(2.0), "{second:?}");
+
+    // the old Production version was archived by the promotion
+    assert_eq!(s_stage(&svcs, 1), Stage::Archived);
+    assert_eq!(s_stage(&svcs, 2), Stage::Production);
+}
+
+fn s_stage(svcs: &Services, version: u32) -> Stage {
+    svcs.models.get("ctr", version).unwrap().stage
+}

@@ -177,6 +177,65 @@ impl Literal {
     }
 }
 
+/// Host-side batched affine transform: `out = W · X + b` with `W` a
+/// `[n_out, n_in]` row-major literal, `b` a `[n_out]` literal and `X`
+/// a *batch-minor* `[n_in, batch]` literal (`x[k*batch + r]` is
+/// feature `k` of row `r`). Returns `[n_out, batch]`, also
+/// batch-minor.
+///
+/// This is the one dense op the serving tier batches through: the
+/// batch-minor layout keeps the inner accumulation loop contiguous so
+/// a `batch`-wide call amortizes the weight traversal that dominates
+/// `batch` separate matvecs. `batch == 1` degenerates to the plain
+/// matvec. On the deployment image the same contraction lowers to a
+/// real XLA dot; the stub computes it on the host.
+pub fn affine_batched(
+    w: &Literal,
+    b: &Literal,
+    x: &Literal,
+    batch: usize,
+) -> Result<Literal> {
+    let (Literal::F32 { data: w, .. }, Literal::F32 { data: b, .. }) =
+        (w, b)
+    else {
+        return Err(Error::new("affine_batched: w/b must be f32"));
+    };
+    let Literal::F32 { data: x, .. } = x else {
+        return Err(Error::new("affine_batched: x must be f32"));
+    };
+    let n_out = b.len();
+    if batch == 0 || n_out == 0 || w.len() % n_out != 0 {
+        return Err(Error::new(format!(
+            "affine_batched: |w|={} not divisible by |b|={n_out} \
+             (or empty batch)",
+            w.len()
+        )));
+    }
+    let n_in = w.len() / n_out;
+    if x.len() != n_in * batch {
+        return Err(Error::new(format!(
+            "affine_batched: |x|={} != n_in({n_in}) * batch({batch})",
+            x.len()
+        )));
+    }
+    let mut out = vec![0.0f32; n_out * batch];
+    for i in 0..n_out {
+        let row = &w[i * n_in..(i + 1) * n_in];
+        let o = &mut out[i * batch..(i + 1) * batch];
+        o.fill(b[i]);
+        for (k, &wv) in row.iter().enumerate() {
+            let xs = &x[k * batch..(k + 1) * batch];
+            for (ov, &xv) in o.iter_mut().zip(xs) {
+                *ov += wv * xv;
+            }
+        }
+    }
+    Ok(Literal::F32 {
+        data: out,
+        dims: vec![n_out as i64, batch as i64],
+    })
+}
+
 /// Marker for types accepted by [`PjRtLoadedExecutable::execute`]
 /// (owned or borrowed literals, like the real generic bound).
 pub trait ExecuteInput {}
@@ -273,6 +332,67 @@ mod tests {
         assert_eq!(t.to_tuple().unwrap().len(), 2);
         // non-tuples decompose to a single leaf
         assert_eq!(Literal::scalar(1i32).to_tuple().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn affine_batched_matches_naive() {
+        // 2x3 weights, batch of 4, hand-checkable values
+        let w = Literal::vec1(&[1.0f32, 2.0, 3.0, -1.0, 0.5, 0.0])
+            .reshape(&[2, 3])
+            .unwrap();
+        let b = Literal::vec1(&[0.1f32, -0.2]);
+        let x_rows: [[f32; 3]; 4] = [
+            [1.0, 0.0, 0.0],
+            [0.0, 1.0, 0.0],
+            [1.0, 1.0, 1.0],
+            [2.0, -1.0, 0.5],
+        ];
+        // batch-minor: x[k*batch + r]
+        let mut xt = vec![0.0f32; 3 * 4];
+        for (r, row) in x_rows.iter().enumerate() {
+            for (k, &v) in row.iter().enumerate() {
+                xt[k * 4 + r] = v;
+            }
+        }
+        let x = Literal::F32 {
+            data: xt,
+            dims: vec![3, 4],
+        };
+        let out = affine_batched(&w, &b, &x, 4).unwrap();
+        let got = out.to_vec::<f32>().unwrap();
+        for (r, row) in x_rows.iter().enumerate() {
+            for i in 0..2 {
+                let wrow = [[1.0f32, 2.0, 3.0], [-1.0, 0.5, 0.0]][i];
+                let bias = [0.1f32, -0.2][i];
+                let want: f32 = bias
+                    + wrow.iter().zip(row).map(|(a, c)| a * c).sum::<f32>();
+                assert!(
+                    (got[i * 4 + r] - want).abs() < 1e-6,
+                    "out[{i}][{r}] = {} want {want}",
+                    got[i * 4 + r]
+                );
+            }
+        }
+        // batch == 1 degenerates to the plain matvec
+        let x1 = Literal::vec1(&[1.0f32, 1.0, 1.0]);
+        let o1 = affine_batched(&w, &b, &x1, 1).unwrap();
+        let v1 = o1.to_vec::<f32>().unwrap();
+        assert!((v1[0] - 6.1).abs() < 1e-6 && (v1[1] + 0.7).abs() < 1e-6);
+    }
+
+    #[test]
+    fn affine_batched_shape_errors() {
+        let w = Literal::vec1(&[1.0f32, 2.0]);
+        let b = Literal::vec1(&[0.0f32]);
+        let x = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(affine_batched(&w, &b, &x, 1).is_ok());
+        // wrong x length for the batch
+        assert!(affine_batched(&w, &b, &x, 3).is_err());
+        // zero batch
+        assert!(affine_batched(&w, &b, &x, 0).is_err());
+        // non-f32 input
+        let xi = Literal::vec1(&[1i32, 2]);
+        assert!(affine_batched(&w, &b, &xi, 1).is_err());
     }
 
     #[test]
