@@ -1,0 +1,209 @@
+//! E-LIST — cursor pagination and the streamed drain (ISSUE 10): the
+//! cost of walking an entire large namespace page by page with offset
+//! paging (every page re-walks the tree from the root: O(N) per page,
+//! O(N²/limit) for the drain) versus revision-anchored cursors (each
+//! page seeks the B-tree once: O(log n + limit) per page, O(N) for
+//! the drain), plus the HTTP-level comparison of a cursor-paged drain
+//! against the one-request `?stream=1` chunked drain.
+//!
+//! Records to `BENCH_9.json`:
+//!   - `list.drain_cursor_vs_offset` (baseline = full offset-paged
+//!     drain of the namespace, optimized = the same drain by cursor
+//!     seeks — the ISSUE 10 acceptance claim is >= 10x at 1M docs),
+//!   - `list.deep_page_cursor_vs_offset` (baseline = one page at the
+//!     deep end by offset, optimized = the same page by cursor seek —
+//!     per-page cost must stay flat as depth grows),
+//!   - `list.stream_vs_paged_drain` (baseline = SDK cursor-paged
+//!     drain over HTTP, optimized = one `?stream=1` chunked response
+//!     splicing cached encodings).
+//!
+//! Run: `cargo bench --bench list_drain` (BENCH_SMOKE=1 shrinks it
+//! and records the JSON).
+
+use std::sync::Arc;
+use submarine::experiment::spec::ExperimentSpec;
+use submarine::httpd::server::{Server, Services};
+use submarine::orchestrator::Submitter;
+use submarine::sdk::ExperimentClient;
+use submarine::storage::MetaStore;
+use submarine::util::bench::{
+    bench, fmt_secs, record_result_to, scaled, Table,
+};
+use submarine::util::json::Json;
+
+struct NullSubmitter;
+impl Submitter for NullSubmitter {
+    fn name(&self) -> &'static str {
+        "null"
+    }
+    fn submit(&self, _: &str, _: &ExperimentSpec) -> submarine::Result<()> {
+        Ok(())
+    }
+    fn kill(&self, _: &str) -> submarine::Result<()> {
+        Ok(())
+    }
+}
+
+const NS: &str = "environment";
+const PAGE: usize = 1000;
+
+fn seed(store: &MetaStore, n: usize) {
+    for i in 0..n {
+        let doc = Json::obj()
+            .set("name", Json::Str(format!("d{i:07}")))
+            .set("image", Json::Str("img".into()))
+            .set("dependencies", Json::Arr(Vec::new()));
+        store.put(NS, &format!("d{i:07}"), doc).unwrap();
+    }
+}
+
+/// Full drain by offset paging: every page restarts the walk from the
+/// tree root and skips everything before the window (the seed design).
+fn drain_offset(store: &MetaStore, n: usize) -> usize {
+    let mut seen = 0usize;
+    let mut offset = 0usize;
+    loop {
+        let (rows, _) = store.page(NS, offset, Some(PAGE));
+        if rows.is_empty() {
+            break;
+        }
+        seen += rows.len();
+        offset += rows.len();
+        if seen >= n {
+            break;
+        }
+    }
+    seen
+}
+
+/// Full drain by cursor seeks: each page resumes exactly after the
+/// previous page's last key.
+fn drain_cursor(store: &MetaStore, n: usize) -> usize {
+    let mut seen = 0usize;
+    let mut after: Option<String> = None;
+    loop {
+        let (rows, _) = store.page_after(NS, after.as_deref(), PAGE);
+        if rows.is_empty() {
+            break;
+        }
+        seen += rows.len();
+        after = rows.last().map(|(k, _)| k.clone());
+        if seen >= n {
+            break;
+        }
+    }
+    seen
+}
+
+fn main() {
+    let n = scaled(1_000_000);
+    println!("E-LIST: {n}-doc namespace drain, page size {PAGE}");
+
+    let store = MetaStore::in_memory();
+    seed(&store, n);
+
+    // ---- full-namespace drain: offset vs cursor --------------------
+    let off_drain = bench(2, 0.5, || {
+        assert_eq!(drain_offset(&store, n), n);
+    });
+    let cur_drain = bench(2, 0.5, || {
+        assert_eq!(drain_cursor(&store, n), n);
+    });
+
+    // ---- one deep page: offset vs cursor ---------------------------
+    let deep = n.saturating_sub(PAGE);
+    let deep_key = format!("d{:07}", deep.saturating_sub(1));
+    let off_deep = bench(10, 0.3, || {
+        let (rows, _) = store.page(NS, deep, Some(PAGE));
+        assert_eq!(rows.len(), PAGE.min(n));
+    });
+    let cur_deep = bench(10, 0.3, || {
+        let (rows, _) =
+            store.page_after(NS, Some(deep_key.as_str()), PAGE);
+        assert_eq!(rows.len(), PAGE.min(n));
+    });
+    // flatness probe (printed, not gated): a first page by cursor
+    let cur_first = bench(10, 0.3, || {
+        let (rows, _) = store.page_after(NS, None, PAGE);
+        assert_eq!(rows.len(), PAGE.min(n));
+    });
+
+    // ---- HTTP: cursor-paged drain vs ?stream=1 ---------------------
+    // a smaller corpus: this measures transport framing, not the tree
+    let hn = scaled(100_000);
+    let hstore = Arc::new(MetaStore::in_memory());
+    seed(&hstore, hn);
+    let services =
+        Arc::new(Services::new(Arc::clone(&hstore), Arc::new(NullSubmitter)));
+    let server = Arc::new(Server::bind(services, 0, None).unwrap());
+    let port = server.port();
+    let stop = server.stopper();
+    let handle = Arc::clone(&server).serve_background();
+    let client = ExperimentClient::v2("127.0.0.1", port);
+
+    let paged_http = bench(2, 0.5, || {
+        let (items, _) = client.list_all(NS, "", PAGE).unwrap();
+        assert_eq!(items.len(), hn);
+    });
+    let streamed_http = bench(2, 0.5, || {
+        let mut count = 0usize;
+        let done = client
+            .stream_list(NS, "", &mut |_k, _obj| count += 1)
+            .unwrap();
+        assert_eq!(count, hn);
+        assert_eq!(done.num_field("count"), Some(hn as f64));
+    });
+
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let _ = std::net::TcpStream::connect(("127.0.0.1", port));
+    handle.join().unwrap();
+
+    let mut t = Table::new(
+        "namespace drain and deep-page cost",
+        &["path", "mean", "docs/s"],
+    );
+    for (label, stats, docs) in [
+        ("drain by offset pages", &off_drain, n),
+        ("drain by cursor seeks", &cur_drain, n),
+        ("one deep page, offset", &off_deep, PAGE),
+        ("one deep page, cursor", &cur_deep, PAGE),
+        ("first page, cursor", &cur_first, PAGE),
+        ("HTTP drain, cursor pages", &paged_http, hn),
+        ("HTTP drain, ?stream=1", &streamed_http, hn),
+    ] {
+        t.row(&[
+            label.into(),
+            fmt_secs(stats.mean),
+            format!("{:.0}", stats.throughput(docs as f64)),
+        ]);
+    }
+    t.print();
+    println!(
+        "drain speedup (cursor vs offset): {:.1}x; deep-page speedup: \
+         {:.1}x; cursor page depth cost (deep/first): {:.2}x; \
+         stream vs paged HTTP drain: {:.2}x",
+        off_drain.mean / cur_drain.mean.max(1e-12),
+        off_deep.mean / cur_deep.mean.max(1e-12),
+        cur_deep.mean / cur_first.mean.max(1e-12),
+        paged_http.mean / streamed_http.mean.max(1e-12),
+    );
+
+    record_result_to(
+        "BENCH_9.json",
+        "list.drain_cursor_vs_offset",
+        off_drain.mean,
+        cur_drain.mean,
+    );
+    record_result_to(
+        "BENCH_9.json",
+        "list.deep_page_cursor_vs_offset",
+        off_deep.mean,
+        cur_deep.mean,
+    );
+    record_result_to(
+        "BENCH_9.json",
+        "list.stream_vs_paged_drain",
+        paged_http.mean,
+        streamed_http.mean,
+    );
+}

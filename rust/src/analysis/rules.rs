@@ -75,9 +75,16 @@ pub const HOT_REGISTRY: &[(&str, &str)] = &[
     ("storage/kv.rs", "keys_page"),
     ("storage/kv.rs", "index_page"),
     ("storage/kv.rs", "wal_record"),
-    // resource.rs cached-GET/HEAD + watch serialization
+    // ISSUE 10 cursor continuations + the streamed-drain chunk walk
+    ("storage/kv.rs", "page_after"),
+    ("storage/kv.rs", "keys_page_after"),
+    ("storage/kv.rs", "index_page_after"),
+    ("storage/kv.rs", "scan_chunk"),
+    ("storage/index.rs", "lookup_after"),
+    // resource.rs cached-GET/HEAD + watch serialization + list drain
     ("httpd/resource.rs", "get_item"),
     ("httpd/resource.rs", "change_line"),
+    ("httpd/resource.rs", "step_drain"),
     // reactor hot loops: event dispatch, readiness re-arm, parked-tail
     // stepping, and the connection write-buffer drain
     ("httpd/reactor.rs", "dispatch_events"),

@@ -48,7 +48,10 @@ impl Args {
                 if let Some((k, v)) = name.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
                     i += 1;
-                } else if matches!(name, "insecure" | "verbose" | "once") {
+                } else if matches!(
+                    name,
+                    "insecure" | "verbose" | "once" | "all" | "stream"
+                ) {
                     out.flags.insert(name.to_string(), "true".into());
                     i += 1;
                 } else {
@@ -68,6 +71,11 @@ impl Args {
 
     pub fn flag(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(String::as_str)
+    }
+
+    /// True when a boolean flag (`--all`, `--stream`, ...) was given.
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
     }
 
     pub fn server(&self) -> (String, u16) {
@@ -218,6 +226,104 @@ fn dispatch(argv: &[String]) -> crate::Result<String> {
             let client = client_from_flags(&args)?;
             match sub {
                 "list" => {
+                    if args.has_flag("stream") {
+                        // one-request full drain over ?stream=1; the
+                        // server forbids composing it with filters or
+                        // paging, so reject those combinations here
+                        // with a CLI-shaped message
+                        if args.flag("api") == Some("v1") {
+                            return Err(bad("--stream needs --api v2"));
+                        }
+                        if args.has_flag("all") {
+                            return Err(bad(
+                                "--stream and --all are mutually \
+                                 exclusive drain modes",
+                            ));
+                        }
+                        for f in
+                            ["selector", "status", "limit", "offset"]
+                        {
+                            if args.flag(f).is_some() {
+                                return Err(bad(&format!(
+                                    "--stream drains everything; \
+                                     --{f} does not compose with it \
+                                     (use --all for filtered drains)"
+                                )));
+                            }
+                        }
+                        let mut out = String::new();
+                        let done = client.stream_list(
+                            "experiment",
+                            "",
+                            &mut |key, obj| {
+                                let state = obj
+                                    .str_field("status")
+                                    .unwrap_or("-");
+                                out.push_str(&format!(
+                                    "{key}\t{state}\n"
+                                ));
+                            },
+                        )?;
+                        out.push_str(&format!(
+                            "({} experiments @ resource_version {})\n",
+                            done.num_field("count").unwrap_or(0.0),
+                            done.num_field("resource_version")
+                                .unwrap_or(0.0),
+                        ));
+                        return Ok(out);
+                    }
+                    if args.has_flag("all") {
+                        // cursor-paged full drain; composes with
+                        // --selector/--status, and --limit becomes the
+                        // page size instead of a result cap
+                        if args.flag("api") == Some("v1") {
+                            return Err(bad("--all needs --api v2"));
+                        }
+                        if args.flag("offset").is_some() {
+                            return Err(bad(
+                                "--all walks by cursor; --offset does \
+                                 not compose with it",
+                            ));
+                        }
+                        let page_size = match args.flag("limit") {
+                            Some(v) => v.parse().map_err(|_| {
+                                bad(&format!("bad --limit {v:?}"))
+                            })?,
+                            None => 500,
+                        };
+                        let mut query = String::new();
+                        if let Some(sel) = args.flag("selector") {
+                            query.push_str(&format!("label={sel}"));
+                        }
+                        if let Some(st) = args.flag("status") {
+                            if !query.is_empty() {
+                                query.push('&');
+                            }
+                            query.push_str(&format!("status={st}"));
+                        }
+                        let (items, rv) = client.list_all(
+                            "experiment",
+                            &query,
+                            page_size,
+                        )?;
+                        let mut out = String::new();
+                        for obj in &items {
+                            let name = obj
+                                .str_field("experimentId")
+                                .unwrap_or("?");
+                            let state = obj
+                                .str_field("status")
+                                .unwrap_or("-");
+                            out.push_str(&format!(
+                                "{name}\t{state}\n"
+                            ));
+                        }
+                        out.push_str(&format!(
+                            "({} experiments @ resource_version {rv})\n",
+                            items.len()
+                        ));
+                        return Ok(out);
+                    }
                     if let Some(sel) = args.flag("selector") {
                         // label selectors are a v2 resource feature;
                         // --status/--limit/--offset compose with them
@@ -1044,6 +1150,9 @@ fn usage() -> String {
                    [--server host:port]\n\
        experiment  list [--limit N] [--offset N] [--status S]\n\
                    [--selector k=v,k2=v2]\n\
+                   [--all]     (drain every page by cursor; --limit\n\
+                                becomes the page size)\n\
+                   [--stream]  (one-request streamed drain; no filters)\n\
                    | get <id> | kill <id> | events <id>\n\
                    | tune [--template T] [--strategy random_search|successive_halving]\n\
                           [--trials N] [--budget B] [--min-budget B] [--max-budget B]\n\
@@ -1235,6 +1344,43 @@ mod tests {
             "a=b",
             "--api",
             "v1"
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn drain_flags_validate_before_any_network_call() {
+        // --all and --stream are boolean flags: no value consumed
+        let args =
+            Args::parse(&argv(&["--all", "--limit", "2"])).unwrap();
+        assert!(args.has_flag("all"));
+        assert_eq!(args.flag("limit"), Some("2"));
+        // the v1 surface has neither cursors nor streamed drains
+        assert!(dispatch(&argv(&[
+            "experiment", "list", "--all", "--api", "v1"
+        ]))
+        .is_err());
+        assert!(dispatch(&argv(&[
+            "experiment", "list", "--stream", "--api", "v1"
+        ]))
+        .is_err());
+        // a cursor walk cannot compose with offset paging
+        assert!(dispatch(&argv(&[
+            "experiment", "list", "--all", "--offset", "3"
+        ]))
+        .is_err());
+        // --stream drains everything: filters, paging, and --all are
+        // rejected before any connection is opened
+        assert!(dispatch(&argv(&[
+            "experiment", "list", "--stream", "--selector", "a=b"
+        ]))
+        .is_err());
+        assert!(dispatch(&argv(&[
+            "experiment", "list", "--stream", "--limit", "5"
+        ]))
+        .is_err());
+        assert!(dispatch(&argv(&[
+            "experiment", "list", "--stream", "--all"
         ]))
         .is_err());
     }

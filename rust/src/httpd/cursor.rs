@@ -1,0 +1,228 @@
+//! Opaque revision-anchored list cursors (ISSUE 10).
+//!
+//! Offset paging re-walks everything before the requested window, so
+//! draining a namespace is quadratic and a page's contents shift
+//! whenever a concurrent write lands before the offset. A cursor
+//! instead remembers the **last key** a page delivered; the
+//! continuation seeks `BTreeMap::range(Excluded(last_key)..)` in
+//! O(log n) and is stable under interleaved writes and deletes — a key
+//! inserted before the cursor is simply outside the remaining window,
+//! one deleted at the cursor still seeks to its successor.
+//!
+//! The token also pins:
+//!
+//! - the **anchor revision** — the store's global revision when page 1
+//!   was served. It rides along unchanged so clients (and the relist
+//!   protocol) know which bookmark the walk started from; a token whose
+//!   anchor is *ahead* of the serving store came from another timeline
+//!   (a restarted server) and answers `410 Gone`.
+//! - a **query fingerprint** — FNV-1a over the namespace, scope, index
+//!   filters, and selector the cursor was minted for. Continuing a walk
+//!   with different query parameters would silently skip or duplicate
+//!   rows; a fingerprint mismatch answers `410 Gone`, and the client
+//!   recovers with the watch protocol's existing relist rule: re-issue
+//!   the list without a cursor.
+//!
+//! Tokens are opaque to clients: `c1.<rev>.<fingerprint>.<hex(key)>`,
+//! all hex. The key is hex-encoded so arbitrary key bytes can never
+//! collide with the separator. Malformed tokens are a client error
+//! (`400`), not `410` — only a *well-formed* token can be stale.
+
+use crate::SubmarineError;
+
+/// Decoded continuation state of one list walk.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Cursor {
+    /// Global store revision when the walk started (page 1's bookmark).
+    pub rev: u64,
+    /// Fingerprint of the query shape the token was minted for.
+    pub fingerprint: u64,
+    /// Last key the previous page delivered; the next page starts
+    /// strictly after it.
+    pub last_key: String,
+}
+
+const PREFIX: &str = "c1";
+
+impl Cursor {
+    /// Serialize to the opaque wire token.
+    pub fn encode(&self) -> String {
+        let mut out = String::with_capacity(
+            PREFIX.len() + 2 * self.last_key.len() + 36,
+        );
+        out.push_str(PREFIX);
+        out.push('.');
+        push_hex_u64(&mut out, self.rev);
+        out.push('.');
+        push_hex_u64(&mut out, self.fingerprint);
+        out.push('.');
+        for b in self.last_key.as_bytes() {
+            push_hex_byte(&mut out, *b);
+        }
+        out
+    }
+
+    /// Parse a wire token. Any structural defect is `InvalidSpec`
+    /// (400): a malformed token was never minted by this server, so
+    /// answering `410` would send clients into relist loops for what
+    /// is a caller bug.
+    pub fn decode(raw: &str) -> crate::Result<Cursor> {
+        let bad = || {
+            SubmarineError::InvalidSpec(format!(
+                "malformed cursor token {raw:?}"
+            ))
+        };
+        let mut parts = raw.split('.');
+        if parts.next() != Some(PREFIX) {
+            return Err(bad());
+        }
+        let rev = parts.next().and_then(parse_hex_u64).ok_or_else(bad)?;
+        let fingerprint =
+            parts.next().and_then(parse_hex_u64).ok_or_else(bad)?;
+        let key_hex = parts.next().ok_or_else(bad)?;
+        if parts.next().is_some() || key_hex.is_empty() {
+            return Err(bad());
+        }
+        let bytes = parse_hex_bytes(key_hex).ok_or_else(bad)?;
+        let last_key = String::from_utf8(bytes).map_err(|_| bad())?;
+        Ok(Cursor {
+            rev,
+            fingerprint,
+            last_key,
+        })
+    }
+}
+
+/// FNV-1a over the ordered query-shape parts (same constants as the
+/// store's shard hash). Order matters and each part is terminated, so
+/// `["ab","c"]` and `["a","bc"]` fingerprint differently.
+pub fn fingerprint<S: AsRef<str>>(parts: &[S]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for p in parts {
+        for b in p.as_ref().as_bytes() {
+            h ^= u64::from(*b);
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        h ^= 0xff;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+fn push_hex_byte(out: &mut String, b: u8) {
+    const HEX: &[u8; 16] = b"0123456789abcdef";
+    out.push(HEX[(b >> 4) as usize] as char);
+    out.push(HEX[(b & 0xf) as usize] as char);
+}
+
+fn push_hex_u64(out: &mut String, mut v: u64) {
+    if v == 0 {
+        out.push('0');
+        return;
+    }
+    let mut buf = [0u8; 16];
+    let mut i = buf.len();
+    const HEX: &[u8; 16] = b"0123456789abcdef";
+    while v > 0 {
+        i -= 1;
+        buf[i] = HEX[(v & 0xf) as usize];
+        v >>= 4;
+    }
+    for b in &buf[i..] {
+        out.push(*b as char);
+    }
+}
+
+fn parse_hex_u64(s: &str) -> Option<u64> {
+    if s.is_empty() || s.len() > 16 {
+        return None;
+    }
+    let mut v: u64 = 0;
+    for c in s.bytes() {
+        v = (v << 4) | u64::from(hex_val(c)?);
+    }
+    Some(v)
+}
+
+fn parse_hex_bytes(s: &str) -> Option<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        return None;
+    }
+    let b = s.as_bytes();
+    let mut out = Vec::with_capacity(b.len() / 2);
+    for pair in b.chunks_exact(2) {
+        out.push((hex_val(pair[0])? << 4) | hex_val(pair[1])?);
+    }
+    Some(out)
+}
+
+fn hex_val(c: u8) -> Option<u8> {
+    match c {
+        b'0'..=b'9' => Some(c - b'0'),
+        b'a'..=b'f' => Some(c - b'a' + 10),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrips_arbitrary_keys() {
+        for key in [
+            "e1",
+            "model@mnist/3",
+            "k.with.dots",
+            "spaces and ünïcode ✓",
+            ".",
+        ] {
+            let c = Cursor {
+                rev: 123_456,
+                fingerprint: u64::MAX,
+                last_key: key.to_string(),
+            };
+            let token = c.encode();
+            assert_eq!(Cursor::decode(&token).unwrap(), c);
+            // tokens are URL-safe as-is: hex + dots only
+            assert!(token
+                .bytes()
+                .all(|b| b.is_ascii_hexdigit() || b == b'.'));
+        }
+    }
+
+    #[test]
+    fn malformed_tokens_are_invalid_spec_not_gone() {
+        for raw in [
+            "",
+            "c1",
+            "c1.10.20",          // missing key
+            "c1.10.20.",         // empty key
+            "c1.10.20.abc",      // odd-length hex
+            "c1.10.20.zz",       // not hex
+            "c2.10.20.6162",     // unknown version
+            "c1.xx.20.6162",     // bad rev
+            "c1.10.20.6162.99",  // trailing part
+            "c1.10000000000000000.20.6162", // rev overflows u64
+        ] {
+            let err = Cursor::decode(raw).unwrap_err();
+            assert_eq!(err.http_status(), 400, "{raw:?}");
+        }
+    }
+
+    #[test]
+    fn fingerprint_is_order_and_boundary_sensitive() {
+        assert_ne!(
+            fingerprint(&["a", "b"]),
+            fingerprint(&["b", "a"])
+        );
+        assert_ne!(
+            fingerprint(&["ab", "c"]),
+            fingerprint(&["a", "bc"])
+        );
+        assert_eq!(
+            fingerprint(&["ns", "scope=x"]),
+            fingerprint(&["ns", "scope=x"])
+        );
+    }
+}

@@ -160,6 +160,12 @@ impl<T: FromBody> Extract for Body<T> {
     }
 }
 
+/// Largest page any v2 list endpoint hands out for an explicit
+/// `?limit=` (larger asks are clamped, not rejected — the clamp is
+/// visible in the echoed `limit` field). Full drains belong to the
+/// cursor loop or `?stream=1`, not to one giant page.
+pub const MAX_LIST_LIMIT: usize = 1000;
+
 /// Pagination + status filter, from `limit` / `offset` / `status` query
 /// params (v2 list endpoints).
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -209,8 +215,20 @@ impl Page {
 
 impl Extract for Page {
     fn extract(ctx: &Ctx<'_>) -> crate::Result<Page> {
+        let limit = match ctx.query_usize("limit")? {
+            // `limit=0` used to silently mean "no limit" through the
+            // `unwrap_or(usize::MAX)` windows below; an explicit empty
+            // page is never what a caller wants, so it is now loud
+            Some(0) => {
+                return Err(crate::SubmarineError::InvalidSpec(
+                    "limit must be at least 1".into(),
+                ))
+            }
+            Some(l) => Some(l.min(MAX_LIST_LIMIT)),
+            None => None,
+        };
         Ok(Page {
-            limit: ctx.query_usize("limit")?,
+            limit,
             offset: ctx.query_usize("offset")?.unwrap_or(0),
             status: ctx.query("status").map(str::to_string),
         })
@@ -311,6 +329,26 @@ mod tests {
         let params = BTreeMap::new();
         let err = Page::extract(&ctx_of(&req, &params)).unwrap_err();
         assert_eq!(err.http_status(), 400);
+    }
+
+    #[test]
+    fn zero_limit_is_invalid_spec() {
+        let req = Request::synthetic("GET", "/e?limit=0");
+        let params = BTreeMap::new();
+        let err = Page::extract(&ctx_of(&req, &params)).unwrap_err();
+        assert_eq!(err.http_status(), 400);
+    }
+
+    #[test]
+    fn oversized_limit_is_clamped_to_max() {
+        let req = Request::synthetic("GET", "/e?limit=999999");
+        let params = BTreeMap::new();
+        let page = Page::extract(&ctx_of(&req, &params)).unwrap();
+        assert_eq!(page.limit, Some(MAX_LIST_LIMIT));
+        // no limit still means unlimited (compat)
+        let req = Request::synthetic("GET", "/e");
+        let page = Page::extract(&ctx_of(&req, &params)).unwrap();
+        assert_eq!(page.limit, None);
     }
 
     #[test]

@@ -18,6 +18,7 @@
 //! `/api/v1/environment`, `/api/v1/model`, ...). See `docs/API.md`.
 
 pub mod conn;
+pub mod cursor;
 pub mod handler;
 pub mod http;
 pub mod middleware;

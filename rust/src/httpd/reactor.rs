@@ -968,7 +968,18 @@ impl Reactor {
                         self.after_response_drained(idx, now);
                         false
                     }
-                    ConnState::Tail => tail_finished,
+                    ConnState::Tail => {
+                        if tail_finished {
+                            true
+                        } else {
+                            // the buffer drained but the tail is not
+                            // done: an eager source (list drain) has
+                            // the next chunk ready now — step it
+                            // instead of waiting for a publish/sweep
+                            self.step_tail(idx, now);
+                            false
+                        }
+                    }
                     ConnState::ReadHeaders
                     | ConnState::ReadBody
                     | ConnState::Handle
@@ -1177,6 +1188,22 @@ impl Reactor {
                 TailStep::Pending => break,
                 TailStep::Data(bytes) => {
                     slot.conn.wbuf.extend_from_slice(&bytes);
+                    // flush between data steps: an eager source (a
+                    // list drain emitting chunk after chunk) must be
+                    // paced by the socket, not accumulated — the
+                    // buffer never holds more than one chunk beyond
+                    // what the kernel already accepted
+                    match slot.conn.flush_out() {
+                        WriteOutcome::Done => {}
+                        WriteOutcome::Blocked => {
+                            self.rearm(idx);
+                            return;
+                        }
+                        WriteOutcome::Err => {
+                            self.close_conn(idx);
+                            return;
+                        }
+                    }
                 }
                 TailStep::End(bytes) => {
                     slot.conn.wbuf.extend_from_slice(&bytes);

@@ -6,10 +6,15 @@
 //! exposes) and [`register_kind`] serves the whole declarative surface
 //! for it:
 //!
-//! - `GET /api/v2/{kind}` — list with pagination, indexed filters
-//!   (`?status=`, `?stage=`), label selectors (`?label=k=v,k2=v2`
-//!   walking the `meta.labels` index), and a `resource_version`
-//!   bookmark for starting watches;
+//! - `GET /api/v2/{kind}` — list with pagination (offset, or opaque
+//!   revision-anchored `?cursor=` tokens that seek the tree in
+//!   O(log n + limit) per page and answer `410 Gone` + relist when the
+//!   anchor goes stale), indexed filters (`?status=`, `?stage=`), label
+//!   selectors (`?label=k=v,k2=v2` walking the `meta.labels` index),
+//!   and a `resource_version` bookmark for starting watches;
+//! - `GET /api/v2/{kind}?stream=1` — one-request full-namespace drain:
+//!   a chunked stream splicing cached document encodings in bounded
+//!   chunks, re-acquiring the shard lock between chunks;
 //! - `GET /api/v2/{kind}?watch=1&since=REV` — long-poll (default) or
 //!   chunked-stream (`&stream=1`) change feed, `410 Gone` + relist
 //!   guidance when `since` has been compacted out of the feed;
@@ -25,7 +30,8 @@
 //! Scoped kinds (model versions live under `/model/:name`) plug in via
 //! [`ResourceKind::scope_index`].
 
-use super::handler::{typed, Ctx, Extract, Page};
+use super::cursor::{fingerprint, Cursor};
+use super::handler::{typed, Ctx, Extract, Page, MAX_LIST_LIMIT};
 use super::http::{
     chunk_frame_into, Request, Response, TailSource, TailStep,
     CHUNK_TERMINAL,
@@ -49,6 +55,12 @@ const DEFAULT_WATCH_MS: u64 = 30_000;
 const MAX_WATCH_MS: u64 = 300_000;
 /// Max feed records pulled per wait round.
 const WATCH_BATCH: usize = 256;
+/// Max documents one streamed-list chunk visits under the shard lock.
+const LIST_CHUNK_DOCS: usize = 512;
+/// Soft byte budget of one streamed-list chunk; the chunk closes at
+/// the first document that crosses it, so the reactor's write buffer
+/// holds at most one chunk (plus that document) at a time.
+const LIST_CHUNK_BYTES: usize = 64 * 1024;
 
 /// One indexed query filter a kind exposes on its list endpoint.
 #[derive(Debug)]
@@ -279,8 +291,15 @@ pub fn register_kind(
                     ctx.query("watch"),
                     Some("1") | Some("true")
                 );
+                let streaming = matches!(
+                    ctx.query("stream"),
+                    Some("1") | Some("true")
+                );
                 if watching {
                     watch_response(&s, &k, ctx)
+                } else if streaming {
+                    // `?stream=1` without `watch`: chunked full drain
+                    stream_list_response(&s, &k, ctx)
                 } else {
                     match list(&s, &k, ctx) {
                         Ok(j) => wrap_ok(Envelope::V2, j),
@@ -381,6 +400,20 @@ fn intersect(a: Vec<String>, b: Vec<String>) -> Vec<String> {
 /// Generic list: candidate keys come from the scope / filter / selector
 /// indexes (intersected, all key-ordered); only the requested window
 /// of documents is ever materialized.
+///
+/// Two continuation modes share this path:
+///
+/// - **offset** (`?offset=N&limit=M`, the pre-ISSUE-10 shape): page N
+///   re-walks everything before it — kept for compatibility.
+/// - **cursor** (`?cursor=<token>`): the token pins the last key the
+///   previous page delivered plus a fingerprint of the query shape;
+///   the continuation *seeks* (`BTreeMap::range`) so every page costs
+///   O(log n + limit) no matter how deep the walk is, and delivered
+///   keys are never revisited or skipped under concurrent writes. A
+///   full page carries `next_cursor` in its envelope; its absence
+///   means the walk is complete. A token minted for a different query
+///   shape, or by a different server timeline, answers `410 Gone` —
+///   recover by relisting without the cursor (same rule as watch).
 fn list(
     s: &Services,
     kind: &Arc<dyn ResourceKind>,
@@ -416,74 +449,208 @@ fn list(
     // again in a watch started from the bookmark (at-least-once), it
     // can never fall silently between list and watch.
     let bookmark = s.store.current_rev();
-    let mut candidates: Option<Vec<String>> = None;
-    if let Some(scope_field) = kind.scope_index() {
-        let scope = ctx.param("name")?;
-        let keys = s.store.index_lookup(ns, scope_field, scope)?;
-        if keys.is_empty() && kind.missing_scope_is_404() {
-            return Err(crate::SubmarineError::NotFound(format!(
-                "{} {scope}",
-                kind.kind()
-            )));
-        }
-        candidates = Some(keys);
+
+    // The query shape this request describes — continuing someone
+    // else's walk with different parameters would silently skip or
+    // duplicate rows, so the cursor token is fingerprint-checked.
+    let scope: Option<&str> = match kind.scope_index() {
+        Some(_) => Some(ctx.param("name")?),
+        None => None,
+    };
+    let mut fp_parts: Vec<String> = Vec::with_capacity(4);
+    fp_parts.push(ns.to_string());
+    if let Some(sc) = scope {
+        fp_parts.push(format!("scope={sc}"));
     }
     for (f, v) in &active {
-        let keys = s.store.index_lookup(ns, f.index_field, v)?;
-        candidates = Some(match candidates {
-            None => keys,
-            Some(prev) => intersect(prev, keys),
-        });
+        fp_parts.push(format!("{}={v}", f.query));
     }
     if !selector.is_empty() {
-        // first pair narrows via the meta.labels index; remaining
-        // pairs are verified on the candidate docs below
-        let tokens = selector.tokens();
-        let keys =
-            s.store.index_lookup(ns, "meta.labels", &tokens[0])?;
-        candidates = Some(match candidates {
-            None => keys,
-            Some(prev) => intersect(prev, keys),
-        });
+        fp_parts.push(format!("label={}", selector.tokens().join(",")));
     }
-    let (rows, total): (Vec<(String, Arc<Doc>)>, usize) = match candidates
+    let fp = fingerprint(&fp_parts);
+    let cursor = match ctx.query("cursor") {
+        None => None,
+        Some(raw) => {
+            let c = Cursor::decode(raw)?;
+            if c.fingerprint != fp {
+                return Err(crate::SubmarineError::Gone(
+                    "cursor was minted for a different query shape; \
+                     relist without it"
+                        .into(),
+                ));
+            }
+            if c.rev > bookmark {
+                return Err(crate::SubmarineError::Gone(
+                    "cursor anchor revision is ahead of this server \
+                     (restarted?); relist without it"
+                        .into(),
+                ));
+            }
+            if page.offset != 0 {
+                return Err(invalid(
+                    "cursor and offset are mutually exclusive".into(),
+                ));
+            }
+            Some(c)
+        }
+    };
+    let after: Option<&str> =
+        cursor.as_ref().map(|c| c.last_key.as_str());
+    // every cursor page is bounded even when the client names no limit
+    let eff_limit = page.limit.unwrap_or(MAX_LIST_LIMIT);
+
+    // How many index constraints narrow the candidate set. Exactly one
+    // (and no multi-pair selector verification) walks the posting list
+    // directly; several intersect materialized key lists as before.
+    let n_constraints = usize::from(scope.is_some())
+        + active.len()
+        + usize::from(!selector.is_empty());
+    let single = (n_constraints, selector.pairs.len());
+
+    let (rows, total): (Vec<(String, Arc<Doc>)>, usize) = if n_constraints
+        == 0
     {
         // unfiltered: page the primary map inside the store
-        None => s.store.page(ns, page.offset, page.limit),
-        Some(keys) => {
-            if selector.pairs.len() > 1 {
-                let mut matched: Vec<(String, Arc<Doc>)> = Vec::new();
-                for k in keys {
-                    if let Some(d) = s.store.get(ns, &k) {
-                        if selector.matches(&d) {
-                            matched.push((k, d));
-                        }
+        match cursor {
+            Some(_) => s.store.page_after(ns, after, eff_limit),
+            None => s.store.page(ns, page.offset, page.limit),
+        }
+    } else if matches!(single, (1, 0) | (1, 1)) {
+        // one constraint: the posting set pages/seeks itself
+        let sel_tokens = selector.tokens();
+        let (field, value): (&str, &str) =
+            if let Some(scope_field) = kind.scope_index() {
+                (scope_field, scope.unwrap_or_default())
+            } else if let Some((f, v)) = active.first() {
+                (f.index_field, v.as_str())
+            } else {
+                ("meta.labels", &sel_tokens[0])
+            };
+        let (win, total) = match cursor {
+            Some(_) => s
+                .store
+                .index_page_after(ns, field, value, after, eff_limit)?,
+            None => s.store.index_page(
+                ns,
+                field,
+                value,
+                page.offset,
+                page.limit,
+            )?,
+        };
+        if total == 0 && scope.is_some() && kind.missing_scope_is_404()
+        {
+            return Err(crate::SubmarineError::NotFound(format!(
+                "{} {}",
+                kind.kind(),
+                scope.unwrap_or_default()
+            )));
+        }
+        (win, total)
+    } else {
+        // several constraints: intersect key-ordered index lookups
+        let mut candidates: Option<Vec<String>> = None;
+        if let Some(scope_field) = kind.scope_index() {
+            let sc = scope.unwrap_or_default();
+            let keys = s.store.index_lookup(ns, scope_field, sc)?;
+            if keys.is_empty() && kind.missing_scope_is_404() {
+                return Err(crate::SubmarineError::NotFound(format!(
+                    "{} {sc}",
+                    kind.kind()
+                )));
+            }
+            candidates = Some(keys);
+        }
+        for (f, v) in &active {
+            let keys = s.store.index_lookup(ns, f.index_field, v)?;
+            candidates = Some(match candidates {
+                None => keys,
+                Some(prev) => intersect(prev, keys),
+            });
+        }
+        if !selector.is_empty() {
+            // first pair narrows via the meta.labels index; remaining
+            // pairs are verified on the candidate docs below
+            let tokens = selector.tokens();
+            let keys =
+                s.store.index_lookup(ns, "meta.labels", &tokens[0])?;
+            candidates = Some(match candidates {
+                None => keys,
+                Some(prev) => intersect(prev, keys),
+            });
+        }
+        let keys = candidates.unwrap_or_default();
+        if selector.pairs.len() > 1 {
+            let mut matched: Vec<(String, Arc<Doc>)> = Vec::new();
+            for k in keys {
+                if let Some(d) = s.store.get(ns, &k) {
+                    if selector.matches(&d) {
+                        matched.push((k, d));
                     }
                 }
-                let total = matched.len();
-                page.window(matched.into_iter(), total)
-            } else {
-                // page the key list; fetch only the window's docs
-                let total = keys.len();
-                let (win, _) = page.window(keys.into_iter(), total);
-                (
-                    win.into_iter()
-                        .filter_map(|k| {
-                            s.store.get(ns, &k).map(|d| (k, d))
-                        })
-                        .collect(),
-                    total,
-                )
             }
+            let total = matched.len();
+            match after {
+                // `matched` is key-ordered, so the continuation is a
+                // binary-search seek over the verified rows
+                Some(a) => {
+                    let start = matched
+                        .partition_point(|(k, _)| k.as_str() <= a);
+                    let end = (start + eff_limit).min(matched.len());
+                    (matched[start..end].to_vec(), total)
+                }
+                None => page.window(matched.into_iter(), total),
+            }
+        } else {
+            // page the key list; fetch only the window's docs
+            let total = keys.len();
+            let win: Vec<String> = match after {
+                Some(a) => {
+                    let start =
+                        keys.partition_point(|k| k.as_str() <= a);
+                    let end = (start + eff_limit).min(keys.len());
+                    keys[start..end].to_vec()
+                }
+                None => page.window(keys.into_iter(), total).0,
+            };
+            (
+                win.into_iter()
+                    .filter_map(|k| {
+                        s.store.get(ns, &k).map(|d| (k, d))
+                    })
+                    .collect(),
+                total,
+            )
         }
     };
     let items: Vec<Json> = rows
         .iter()
         .map(|(k, d)| kind.render_row(s, k, d))
         .collect();
-    Ok(page
+    let mut out = page
         .envelope(items, total)
-        .set("resource_version", Json::Num(bookmark as f64)))
+        .set("resource_version", Json::Num(bookmark as f64));
+    // a full page gets a continuation token; its absence means done.
+    // The anchor revision of page 1 rides through every continuation.
+    let page_size = match &cursor {
+        Some(_) => Some(eff_limit),
+        None => page.limit,
+    };
+    if let (Some(psize), Some((last_key, _))) =
+        (page_size, rows.last())
+    {
+        if rows.len() == psize {
+            let token = Cursor {
+                rev: cursor.as_ref().map(|c| c.rev).unwrap_or(bookmark),
+                fingerprint: fp,
+                last_key: last_key.clone(),
+            }
+            .encode();
+            out = out.set("next_cursor", Json::Str(token));
+        }
+    }
+    Ok(out)
 }
 
 /// How often a write retries validation when concurrent writers keep
@@ -933,4 +1100,245 @@ fn watch_response(
     } else {
         Response::tail_poll(Box::new(tail))
     }
+}
+
+// ----------------------------------------------------------- stream list
+
+/// A full-namespace drain parked in the reactor (`?stream=1` without
+/// `watch`): one chunked JSON line per document, spliced from the
+/// revision-keyed encoded-body cache. Each step re-acquires the shard
+/// lock for one bounded chunk and resumes from the last emitted key
+/// (`MetaStore::scan_chunk`), so a 1M-doc drain never holds a lock
+/// longer than one chunk, never re-walks delivered entries, and — with
+/// the reactor flushing between chunks — never buffers more than one
+/// chunk per connection.
+struct ListTail {
+    store: Arc<MetaStore>,
+    ns: &'static str,
+    /// Scoped kinds drain only their scope's key range.
+    prefix: Option<String>,
+    /// Resume point: last key emitted (or the scope prefix at start).
+    after: Option<String>,
+    /// Fingerprint + anchor for the resumable cut cursor.
+    fingerprint: u64,
+    anchor: u64,
+    count: usize,
+    deadline: Instant,
+    done: bool,
+}
+
+impl ListTail {
+    /// Terminal line of a completed drain. The `resource_version` is
+    /// the bookmark captured before the first chunk — start a watch
+    /// there for at-least-once continuity with the drained state.
+    fn end_line(&self) -> Vec<u8> {
+        format!(
+            "{{\"done\":true,\"count\":{},\"resource_version\":{}}}\n",
+            self.count, self.anchor
+        )
+        .into_bytes()
+    }
+
+    /// Terminal line of a drain cut at its deadline (consumer slower
+    /// than the window): carries a cursor token to resume from.
+    fn cut_line(&self) -> Vec<u8> {
+        let token = match &self.after {
+            Some(k) => Cursor {
+                rev: self.anchor,
+                fingerprint: self.fingerprint,
+                last_key: k.clone(),
+            }
+            .encode(),
+            None => String::new(),
+        };
+        format!(
+            "{{\"type\":\"ERROR\",\"code\":408,\"message\":\
+             \"drain window closed before completion\",\
+             \"cursor\":\"{token}\",\"count\":{}}}\n",
+            self.count
+        )
+        .into_bytes()
+    }
+
+    /// One drain step: emit one bounded chunk of
+    /// `{"key":K,"object":<cached encoding>}` lines. Hot: the only
+    /// per-document work is three shell splices and one
+    /// `extend_from_slice` of the document's cached bytes — no
+    /// per-document allocation, parse, or render.
+    fn step_drain(&mut self, now: Instant) -> TailStep {
+        if self.done {
+            // defensive: a finished tail re-stepped emits nothing
+            return TailStep::End(Vec::with_capacity(0));
+        }
+        if now >= self.deadline {
+            self.done = true;
+            let cut = self.cut_line();
+            let mut out = Vec::with_capacity(cut.len() + 32);
+            chunk_frame_into(&mut out, &cut);
+            out.extend_from_slice(CHUNK_TERMINAL);
+            return TailStep::End(out);
+        }
+        let mut body =
+            Vec::with_capacity(LIST_CHUNK_BYTES + 4 * 1024);
+        let mut emitted = 0usize;
+        let mut past_scope = false;
+        let prefix = &self.prefix;
+        let mut emit = |k: &str, d: &Arc<Doc>| -> bool {
+            if let Some(p) = prefix {
+                if !k.starts_with(p.as_str()) {
+                    past_scope = true;
+                    return false;
+                }
+            }
+            body.extend_from_slice(b"{\"key\":");
+            write_json_string(&mut body, k);
+            body.extend_from_slice(b",\"object\":");
+            body.extend_from_slice(&d.encoded());
+            body.extend_from_slice(b"}\n");
+            emitted += 1;
+            body.len() < LIST_CHUNK_BYTES
+        };
+        let resume = self.store.scan_chunk(
+            self.ns,
+            self.after.as_deref(),
+            LIST_CHUNK_DOCS,
+            &mut emit,
+        );
+        self.count += emitted;
+        match resume {
+            Some(k) if !past_scope => {
+                self.after = Some(k);
+                let mut out = Vec::with_capacity(body.len() + 16);
+                chunk_frame_into(&mut out, &body);
+                TailStep::Data(out)
+            }
+            _ => {
+                self.done = true;
+                let end = self.end_line();
+                let mut out =
+                    Vec::with_capacity(body.len() + end.len() + 48);
+                chunk_frame_into(&mut out, &body);
+                chunk_frame_into(&mut out, &end);
+                out.extend_from_slice(CHUNK_TERMINAL);
+                TailStep::End(out)
+            }
+        }
+    }
+}
+
+impl TailSource for ListTail {
+    fn step(&mut self, now: Instant) -> TailStep {
+        self.step_drain(now)
+    }
+
+    fn deadline(&self) -> Instant {
+        self.deadline
+    }
+
+    fn wait(&self, max: Duration) {
+        // a drain never reports Pending (there is always either a
+        // chunk or the end line), so a blocking driver never actually
+        // waits; bound the sleep defensively all the same
+        std::thread::sleep(max.min(Duration::from_millis(10)));
+    }
+}
+
+/// `GET /api/v2/{kind}?stream=1`: drain the collection as a chunked
+/// stream. Drains serve bulk export/replication bootstrap, so the
+/// narrowing parameters of the paged list (filters, selectors,
+/// offset/limit) are rejected — a narrowed walk belongs to the cursor
+/// loop. `?cursor=` resumes a previously cut drain.
+fn stream_list_response(
+    s: &Arc<Services>,
+    kind: &Arc<dyn ResourceKind>,
+    ctx: &Ctx<'_>,
+) -> Response {
+    match stream_list_tail(s, kind, ctx) {
+        Ok(tail) => Response::tail_stream(
+            200,
+            "application/x-json-stream",
+            Box::new(tail),
+        ),
+        Err(e) => wrap_err(Envelope::V2, &e),
+    }
+}
+
+fn stream_list_tail(
+    s: &Arc<Services>,
+    kind: &Arc<dyn ResourceKind>,
+    ctx: &Ctx<'_>,
+) -> crate::Result<ListTail> {
+    for p in ["label", "limit", "offset", "status"] {
+        if ctx.query(p).is_some() {
+            return Err(invalid(format!(
+                "{p} does not compose with stream=1; use cursor \
+                 pagination for narrowed lists"
+            )));
+        }
+    }
+    for f in kind.filters() {
+        if ctx.query(f.query).is_some() {
+            return Err(invalid(format!(
+                "{} does not compose with stream=1; use cursor \
+                 pagination for narrowed lists",
+                f.query
+            )));
+        }
+    }
+    let timeout_ms = match ctx.query("timeout_ms") {
+        None => MAX_WATCH_MS,
+        Some(v) => v
+            .parse::<u64>()
+            .map_err(|_| {
+                invalid("timeout_ms must be a positive integer".into())
+            })?
+            .clamp(1, MAX_WATCH_MS),
+    };
+    let ns = kind.ns();
+    let mut fp_parts: Vec<String> = Vec::with_capacity(2);
+    fp_parts.push(ns.to_string());
+    let prefix = match kind.scope_index() {
+        Some(_) => {
+            let scope = ctx.param("name")?;
+            fp_parts.push(format!("scope={scope}"));
+            Some(kind.scope_prefix(scope))
+        }
+        None => None,
+    };
+    let fp = fingerprint(&fp_parts);
+    let bookmark = s.store.current_rev();
+    // a scope's keys all sort strictly after the bare prefix, so the
+    // prefix itself is the scoped drain's seek origin
+    let (after, anchor) = match ctx.query("cursor") {
+        None => (prefix.clone(), bookmark),
+        Some(raw) => {
+            let c = Cursor::decode(raw)?;
+            if c.fingerprint != fp {
+                return Err(crate::SubmarineError::Gone(
+                    "cursor was minted for a different query shape; \
+                     restart the drain without it"
+                        .into(),
+                ));
+            }
+            if c.rev > bookmark {
+                return Err(crate::SubmarineError::Gone(
+                    "cursor anchor revision is ahead of this server \
+                     (restarted?); restart the drain without it"
+                        .into(),
+                ));
+            }
+            (Some(c.last_key), c.rev)
+        }
+    };
+    Ok(ListTail {
+        store: Arc::clone(&s.store),
+        ns,
+        prefix,
+        after,
+        fingerprint: fp,
+        anchor,
+        count: 0,
+        deadline: Instant::now() + Duration::from_millis(timeout_ms),
+        done: false,
+    })
 }

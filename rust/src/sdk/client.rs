@@ -619,6 +619,241 @@ impl ExperimentClient {
         self.expect_ok(r)
     }
 
+    /// Drain a whole collection through cursor pagination: issue
+    /// `limit=<page_size>` pages and follow each page's `next_cursor`
+    /// until the server stops minting one. Every page after the first
+    /// seeks from the previous page's last key (O(log n) server-side),
+    /// so the walk is flat-cost per page and stable under concurrent
+    /// writes — a key inserted behind the cursor is simply not
+    /// revisited. Returns the accumulated items plus the first page's
+    /// `resource_version` bookmark (the anchor the walk is pinned to —
+    /// feed it to [`Self::watch`] to observe everything after the
+    /// drain). A 410 mid-walk (server restarted, or the cursor was
+    /// minted for a different query shape) restarts the drain from
+    /// scratch — the same resync protocol the watch stream uses.
+    pub fn list_all(
+        &self,
+        kind: &str,
+        query: &str,
+        page_size: usize,
+    ) -> crate::Result<(Vec<Json>, u64)> {
+        'restart: loop {
+            let mut items: Vec<Json> = Vec::new();
+            let mut bookmark = 0u64;
+            let mut cursor: Option<String> = None;
+            loop {
+                let mut path =
+                    format!("{}/{kind}?limit={page_size}", self.base);
+                if !query.is_empty() {
+                    path.push('&');
+                    path.push_str(query);
+                }
+                if let Some(c) = &cursor {
+                    path.push_str("&cursor=");
+                    path.push_str(c);
+                }
+                // `expect_ok` folds every non-2xx into a generic
+                // runtime error, so the 410 resync signal must be
+                // checked on the raw status (same pattern as
+                // `watch_once`).
+                let (status, j) = self.request("GET", &path, None)?;
+                if status == 410 {
+                    continue 'restart;
+                }
+                let page = self.expect_ok((status, j))?;
+                if cursor.is_none() {
+                    bookmark = page
+                        .num_field("resource_version")
+                        .unwrap_or(0.0)
+                        as u64;
+                }
+                if let Some(batch) =
+                    page.get("items").and_then(Json::as_arr)
+                {
+                    items.extend(batch.iter().cloned());
+                }
+                match page.str_field("next_cursor") {
+                    Some(c) => cursor = Some(c.to_string()),
+                    None => return Ok((items, bookmark)),
+                }
+            }
+        }
+    }
+
+    /// Streamed full-namespace drain (`?stream=1`): one request, the
+    /// server walks the whole collection in bounded chunks and this
+    /// client hands each `{"key", "object"}` line to `on_item` as it
+    /// arrives — no page boundaries, no accumulated buffer. Returns
+    /// the terminal `done` line (`count`, `resource_version`). A
+    /// deadline cut mid-drain carries a resume cursor; the drain
+    /// resumes from it transparently on a fresh request, and a 410
+    /// (stale resume cursor after a server restart) restarts from the
+    /// top. The response is chunked-framed, which the pooled
+    /// [`Self::request`] path cannot parse, so this opens a dedicated
+    /// connection.
+    pub fn stream_list(
+        &self,
+        kind: &str,
+        query: &str,
+        on_item: &mut dyn FnMut(&str, &Json),
+    ) -> crate::Result<Json> {
+        let mut cursor: Option<String> = None;
+        'drain: loop {
+            let mut path = format!("{}/{kind}?stream=1", self.base);
+            if !query.is_empty() {
+                path.push('&');
+                path.push_str(query);
+            }
+            if let Some(c) = &cursor {
+                path.push_str("&cursor=");
+                path.push_str(c);
+            }
+            let stream = self.connect()?;
+            let mut req = format!(
+                "GET {path} HTTP/1.1\r\nhost: {}\r\n",
+                self.host
+            );
+            if let Some(t) = &self.token {
+                req.push_str(&format!(
+                    "authorization: Bearer {t}\r\n"
+                ));
+            }
+            req.push_str("\r\n");
+            (&stream).write_all(req.as_bytes())?;
+            let mut reader = BufReader::new(&stream);
+            let mut line = String::new();
+            reader.read_line(&mut line)?;
+            let status: u16 = line
+                .split(' ')
+                .nth(1)
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| {
+                    runtime("bad http response".into())
+                })?;
+            let mut chunked = false;
+            let mut content_length: Option<usize> = None;
+            loop {
+                let mut h = String::new();
+                if reader.read_line(&mut h)? == 0 {
+                    return Err(runtime(
+                        "truncated response headers".into(),
+                    ));
+                }
+                let h = h.trim_end();
+                if h.is_empty() {
+                    break;
+                }
+                if let Some((k, v)) = h.split_once(':') {
+                    let k = k.trim().to_ascii_lowercase();
+                    let v = v.trim();
+                    if k == "transfer-encoding"
+                        && v.eq_ignore_ascii_case("chunked")
+                    {
+                        chunked = true;
+                    } else if k == "content-length" {
+                        content_length = v.parse().ok();
+                    }
+                }
+            }
+            if status == 410 {
+                // resume cursor outlived the server: restart the
+                // drain from the top of the keyspace
+                cursor = None;
+                continue 'drain;
+            }
+            if status != 200 {
+                let mut b =
+                    vec![0u8; content_length.unwrap_or(0)];
+                reader.read_exact(&mut b)?;
+                let text = String::from_utf8_lossy(&b);
+                return Err(runtime(format!(
+                    "stream list failed (status {status}): {}",
+                    text.trim()
+                )));
+            }
+            if !chunked {
+                return Err(runtime(
+                    "stream list response was not chunk-framed"
+                        .into(),
+                ));
+            }
+            // De-chunk into newline-delimited JSON lines. Chunk and
+            // line boundaries are independent: a frame may carry many
+            // lines, and (defensively) a line may span frames.
+            let mut buf: Vec<u8> = Vec::new();
+            loop {
+                let mut size_line = String::new();
+                if reader.read_line(&mut size_line)? == 0 {
+                    return Err(runtime(
+                        "stream list truncated mid-drain".into(),
+                    ));
+                }
+                let size = usize::from_str_radix(
+                    size_line.trim(),
+                    16,
+                )
+                .map_err(|_| {
+                    runtime(
+                        "bad chunk size in stream list".into(),
+                    )
+                })?;
+                if size == 0 {
+                    return Err(runtime(
+                        "stream list ended without a done line"
+                            .into(),
+                    ));
+                }
+                let mut data = vec![0u8; size];
+                reader.read_exact(&mut data)?;
+                let mut crlf = [0u8; 2];
+                reader.read_exact(&mut crlf)?;
+                buf.extend_from_slice(&data);
+                while let Some(pos) =
+                    buf.iter().position(|&b| b == b'\n')
+                {
+                    let line_bytes: Vec<u8> =
+                        buf.drain(..=pos).collect();
+                    let text =
+                        String::from_utf8_lossy(&line_bytes);
+                    let t = text.trim();
+                    if t.is_empty() {
+                        continue;
+                    }
+                    let j = Json::parse(t).map_err(|e| {
+                        runtime(format!(
+                            "bad stream list line: {e}"
+                        ))
+                    })?;
+                    if j.get("done").is_some() {
+                        return Ok(j);
+                    }
+                    if j.str_field("type") == Some("ERROR") {
+                        match j.str_field("cursor") {
+                            // deadline cut: resume where the
+                            // server stopped
+                            Some(c) => {
+                                cursor = Some(c.to_string());
+                                continue 'drain;
+                            }
+                            None => {
+                                return Err(runtime(format!(
+                                    "stream list aborted: {}",
+                                    j.str_field("message")
+                                        .unwrap_or("unknown error")
+                                )))
+                            }
+                        }
+                    }
+                    if let (Some(k), Some(obj)) =
+                        (j.str_field("key"), j.get("object"))
+                    {
+                        on_item(k, obj);
+                    }
+                }
+            }
+        }
+    }
+
     /// Conditional replace: `PUT` with `If-Match: "<expect_rv>"`. A
     /// concurrent writer who got there first surfaces as
     /// [`crate::SubmarineError::PreconditionFailed`] — re-read, rebase,

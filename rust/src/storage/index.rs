@@ -128,6 +128,32 @@ impl FieldIndex {
             .unwrap_or_default()
     }
 
+    /// Up to `limit` keys posted under `value` that sort strictly
+    /// after `after` (`None` starts at the beginning). Postings are a
+    /// sorted set, so a cursor that remembers the last key it saw
+    /// resumes in O(log n) and never re-walks delivered keys — the
+    /// index-path counterpart of `MetaStore::page_after`.
+    pub fn lookup_after(
+        &self,
+        value: &str,
+        after: Option<&str>,
+        limit: usize,
+    ) -> Vec<String> {
+        use std::ops::Bound;
+        let Some(set) = self.postings.get(&self.normalize(value))
+        else {
+            return Vec::new();
+        };
+        let lo = match after {
+            Some(a) => Bound::Excluded(a),
+            None => Bound::Unbounded,
+        };
+        set.range::<str, _>((lo, Bound::Unbounded))
+            .take(limit)
+            .cloned()
+            .collect()
+    }
+
     /// Number of keys posted under `value` (for stats / pagination
     /// totals without materializing the key list).
     pub fn cardinality(&self, value: &str) -> usize {
@@ -169,6 +195,30 @@ mod tests {
         assert!(idx.lookup("Running").is_empty());
         // empty posting sets are pruned
         assert_eq!(idx.histogram().len(), 1);
+    }
+
+    #[test]
+    fn lookup_after_resumes_in_key_order() {
+        let mut idx = FieldIndex::new(IndexDef::new("status", true));
+        for k in ["e1", "e2", "e3", "e4"] {
+            idx.add(k, &doc("Running"));
+        }
+        assert_eq!(
+            idx.lookup_after("running", None, 2),
+            vec!["e1", "e2"]
+        );
+        assert_eq!(
+            idx.lookup_after("running", Some("e2"), 2),
+            vec!["e3", "e4"]
+        );
+        assert!(idx.lookup_after("running", Some("e4"), 2).is_empty());
+        // an `after` that was deleted meanwhile still seeks correctly
+        idx.remove("e3", &doc("Running"));
+        assert_eq!(
+            idx.lookup_after("running", Some("e2"), 2),
+            vec!["e4"]
+        );
+        assert!(idx.lookup_after("failed", None, 2).is_empty());
     }
 
     #[test]

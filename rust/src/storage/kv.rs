@@ -1466,6 +1466,112 @@ impl MetaStore {
         }
     }
 
+    /// The seek bound for a cursor continuation: strictly after the
+    /// last key a previous page delivered, or from the start.
+    fn after_bound(
+        after: Option<&str>,
+    ) -> (std::ops::Bound<&str>, std::ops::Bound<&str>) {
+        use std::ops::Bound;
+        let lo = match after {
+            Some(a) => Bound::Excluded(a),
+            None => Bound::Unbounded,
+        };
+        (lo, Bound::Unbounded)
+    }
+
+    /// Cursor continuation of [`page`](Self::page): up to `limit`
+    /// key-ordered `(key, doc)` pairs strictly after `after`, plus the
+    /// live total. The `BTreeMap::range` seek makes every page
+    /// O(log n + limit) regardless of how deep into the namespace the
+    /// cursor is — offset paging re-walks all skipped entries.
+    pub fn page_after(
+        &self,
+        ns: &str,
+        after: Option<&str>,
+        limit: usize,
+    ) -> (Vec<(String, Arc<Doc>)>, usize) {
+        let (shard, _held) = self.shard_read(ns);
+        match shard.spaces.get(ns) {
+            None => (Vec::new(), 0), // lint: allow(hot)
+            Some(space) => {
+                let total = space.docs.len();
+                let page = space
+                    .docs
+                    .range::<str, _>(Self::after_bound(after))
+                    .take(limit)
+                    // keys must leave the lock as owned strings
+                    .map(|(k, v)| (k.clone(), Arc::clone(v))) // lint: allow(hot)
+                    .collect();
+                (page, total)
+            }
+        }
+    }
+
+    /// Cursor continuation of [`keys_page`](Self::keys_page).
+    pub fn keys_page_after(
+        &self,
+        ns: &str,
+        after: Option<&str>,
+        limit: usize,
+    ) -> (Vec<String>, usize) {
+        let (shard, _held) = self.shard_read(ns);
+        match shard.spaces.get(ns) {
+            None => (Vec::new(), 0), // lint: allow(hot)
+            Some(space) => {
+                let total = space.docs.len();
+                let page = space
+                    .docs
+                    .range::<str, _>(Self::after_bound(after))
+                    .take(limit)
+                    .map(|(k, _)| k.clone()) // lint: allow(hot)
+                    .collect();
+                (page, total)
+            }
+        }
+    }
+
+    /// One bounded chunk of a namespace drain: visit `(key, doc)`
+    /// pairs strictly after `after` in key order, calling `emit` for
+    /// each, under a single shard read lock. Visiting stops after
+    /// `max` documents or when `emit` returns `false`; the return
+    /// value is `Some(last_visited_key)` when the walk stopped early
+    /// (the caller's resume point) and `None` when the namespace is
+    /// exhausted. Re-seeking from the returned key costs O(log n), so
+    /// a full drain never re-walks delivered entries and never holds
+    /// the lock longer than one chunk.
+    pub fn scan_chunk(
+        &self,
+        ns: &str,
+        after: Option<&str>,
+        max: usize,
+        emit: &mut dyn FnMut(&str, &Arc<Doc>) -> bool,
+    ) -> Option<String> {
+        let (shard, _held) = self.shard_read(ns);
+        let space = shard.spaces.get(ns)?;
+        let mut visited = 0usize;
+        let mut last: Option<&str> = None;
+        for (k, doc) in space.docs.range::<str, _>(Self::after_bound(after))
+        {
+            visited += 1;
+            last = Some(k.as_str());
+            if !emit(k, doc) || visited >= max {
+                // stopped early: only a resume point if anything
+                // actually remains past this key
+                return if space
+                    .docs
+                    .range::<str, _>(Self::after_bound(last))
+                    .next()
+                    .is_some()
+                {
+                    last.map(str::to_string) // lint: allow(hot)
+                } else {
+                    None
+                };
+            }
+        }
+        None
+    }
+
     // ----------------------------------------------------------- indexes
 
     /// Declare a secondary index on a top-level document field. Existing
@@ -1547,7 +1653,45 @@ impl MetaStore {
             .skip(offset)
             .take(limit.unwrap_or(usize::MAX))
             .filter_map(|k| {
-                space.docs.get(&k).map(|d| (k.clone(), Arc::clone(d))) // lint: allow(hot)
+                // `lookup` already materialized the key as an owned
+                // String; move it into the row instead of cloning it
+                // a second time
+                let d = Arc::clone(space.docs.get(&k)?);
+                Some((k, d))
+            })
+            .collect();
+        Ok((page, total))
+    }
+
+    /// Cursor continuation of [`index_page`](Self::index_page): up to
+    /// `limit` matches whose keys sort strictly after `after`. The
+    /// posting set is ordered, so the continuation seeks instead of
+    /// re-walking delivered postings.
+    pub fn index_page_after(
+        &self,
+        ns: &str,
+        field: &str,
+        value: &str,
+        after: Option<&str>,
+        limit: usize,
+    ) -> crate::Result<(Vec<(String, Arc<Doc>)>, usize)> {
+        if !self.index_defined(ns, field) {
+            return Err(Self::no_index(ns, field));
+        }
+        let (shard, _held) = self.shard_read(ns);
+        let Some(space) = shard.spaces.get(ns) else {
+            return Ok((Vec::new(), 0)); // lint: allow(hot)
+        };
+        let Some(idx) = space.index(field) else {
+            return Ok((Vec::new(), 0)); // lint: allow(hot)
+        };
+        let total = idx.cardinality(value);
+        let page = idx
+            .lookup_after(value, after, limit)
+            .into_iter()
+            .filter_map(|k| {
+                let d = Arc::clone(space.docs.get(&k)?);
+                Some((k, d))
             })
             .collect();
         Ok((page, total))
@@ -1946,6 +2090,72 @@ mod tests {
     }
 
     #[test]
+    fn page_after_seeks_and_survives_interleaved_writes() {
+        let s = MetaStore::in_memory();
+        for i in 0..10 {
+            s.put("ns", &format!("k{i:02}"), Json::Num(i as f64))
+                .unwrap();
+        }
+        let (page, total) = s.page_after("ns", None, 3);
+        assert_eq!(total, 10);
+        let keys: Vec<_> =
+            page.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, ["k00", "k01", "k02"]);
+        // a write landing before the cursor and a delete of the
+        // cursor key itself don't shift the continuation
+        s.put("ns", "k000", Json::Null).unwrap();
+        s.delete("ns", "k02").unwrap();
+        let (page, _) = s.page_after("ns", Some("k02"), 3);
+        let keys: Vec<_> =
+            page.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, ["k03", "k04", "k05"]);
+        // keys-only continuation agrees
+        let (keys, _) = s.keys_page_after("ns", Some("k08"), 10);
+        assert_eq!(keys, ["k09"]);
+        assert!(s.page_after("ns", Some("k09"), 3).0.is_empty());
+        assert_eq!(s.page_after("nowhere", None, 3).1, 0);
+    }
+
+    #[test]
+    fn scan_chunk_drains_in_bounded_chunks() {
+        let s = MetaStore::in_memory();
+        for i in 0..10 {
+            s.put("ns", &format!("k{i:02}"), Json::Num(i as f64))
+                .unwrap();
+        }
+        let mut seen = Vec::new();
+        let mut after: Option<String> = None;
+        let mut chunks = 0;
+        loop {
+            let resume = s.scan_chunk(
+                "ns",
+                after.as_deref(),
+                4,
+                &mut |k, _| {
+                    seen.push(k.to_string());
+                    true
+                },
+            );
+            chunks += 1;
+            match resume {
+                Some(k) => after = Some(k),
+                None => break,
+            }
+        }
+        assert_eq!(seen.len(), 10);
+        assert_eq!(chunks, 3); // 4 + 4 + 2
+        assert!(seen.windows(2).all(|w| w[0] < w[1]));
+        // emit returning false stops the chunk early with a resume key
+        let resume = s.scan_chunk("ns", None, 100, &mut |_, _| false);
+        assert_eq!(resume.as_deref(), Some("k00"));
+        // a chunk that exactly exhausts the namespace reports done
+        let resume =
+            s.scan_chunk("ns", Some("k05"), 4, &mut |_, _| true);
+        assert!(resume.is_none());
+        assert!(s.scan_chunk("nowhere", None, 4, &mut |_, _| true).is_none());
+    }
+
+    #[test]
     fn update_is_atomic_and_respects_absence() {
         let s = MetaStore::in_memory();
         assert!(!s.update("ns", "k", |_| None).unwrap());
@@ -2233,6 +2443,38 @@ mod tests {
         assert_eq!(page[0].0, "e1");
         // undeclared index is loud, not silently empty
         assert!(s.index_lookup("exp", "nope", "x").is_err());
+    }
+
+    #[test]
+    fn index_page_after_resumes_deterministically() {
+        let s = MetaStore::in_memory();
+        s.define_index("exp", "status", true);
+        let doc = |st: &str| {
+            Json::obj().set("status", Json::Str(st.to_string()))
+        };
+        for i in 0..6 {
+            s.put("exp", &format!("e{i}"), doc("Running")).unwrap();
+        }
+        s.put("exp", "zz", doc("Failed")).unwrap();
+        let (page, total) = s
+            .index_page_after("exp", "status", "running", None, 2)
+            .unwrap();
+        assert_eq!(total, 6);
+        let keys: Vec<_> =
+            page.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, ["e0", "e1"]);
+        // the continuation seeks past delivered postings even after
+        // the anchor key changed status (left the posting set)
+        s.put("exp", "e1", doc("Failed")).unwrap();
+        let (page, _) = s
+            .index_page_after("exp", "status", "running", Some("e1"), 2)
+            .unwrap();
+        let keys: Vec<_> =
+            page.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, ["e2", "e3"]);
+        assert!(s
+            .index_page_after("exp", "nope", "x", None, 2)
+            .is_err());
     }
 
     #[test]

@@ -404,3 +404,114 @@ fn long_poll_resolves_and_connection_stays_usable() {
     assert!(body.contains("RUNNING"), "{body}");
     shutdown(port, stop, handle);
 }
+
+/// A `?stream=1` full-namespace drain delivers every document exactly
+/// once through client backpressure, ends with a `done` line whose
+/// count matches, and closes cleanly. The drip-read keeps the server
+/// re-acquiring the shard lock chunk by chunk instead of pushing one
+/// giant response.
+#[test]
+fn streamed_list_drain_is_complete_under_backpressure() {
+    let (port, stop, handle) = start_with(ServerOptions {
+        workers: Some(2),
+        ..Default::default()
+    });
+    const DOCS: usize = 400;
+    for i in 0..DOCS {
+        post_template(port, &format!("d-{i:04}"));
+    }
+
+    let stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    set_recv_buffer(&stream, 4096);
+    write!(
+        &stream,
+        "GET /api/v2/template?stream=1 HTTP/1.1\r\nhost: x\r\n\r\n"
+    )
+    .unwrap();
+
+    let mut reader = BufReader::with_capacity(1024, &stream);
+    let mut keys = 0usize;
+    let mut done: Option<Json> = None;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) => {
+                let t = line.trim();
+                if t.starts_with("{\"key\":") {
+                    keys += 1;
+                } else if t.starts_with("{\"done\":") {
+                    done = Some(Json::parse(t).unwrap());
+                }
+                // pace the reads so the server keeps hitting a full
+                // socket and must resume chunk by chunk
+                if keys % 50 == 0 {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+            Err(e) => panic!("drain read error: {e}"),
+        }
+    }
+    assert_eq!(keys, DOCS, "every document must arrive exactly once");
+    let done = done.expect("drain must end with a done line");
+    assert_eq!(done.num_field("count"), Some(DOCS as f64));
+    assert!(done.num_field("resource_version").unwrap_or(0.0) > 0.0);
+    shutdown(port, stop, handle);
+}
+
+/// A streamed list consumer that never reads is evicted at the
+/// write-buffer cap — the drain must not buffer an entire namespace
+/// for a dead client, and the orderly `done` line never arrives.
+#[test]
+fn slow_consumer_streamed_list_is_evicted() {
+    let (port, stop, handle) = start_with(ServerOptions {
+        workers: Some(2),
+        write_buf_cap: 1024,
+        ..Default::default()
+    });
+    for i in 0..600 {
+        post_template(port, &format!("s-{i:04}"));
+    }
+
+    let stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .unwrap();
+    set_recv_buffer(&stream, 4096);
+    write!(
+        &stream,
+        "GET /api/v2/template?stream=1&timeout_ms=60000 \
+         HTTP/1.1\r\nhost: x\r\n\r\n"
+    )
+    .unwrap();
+
+    // never read; the namespace is far larger than the 1 KiB cap
+    std::thread::sleep(Duration::from_millis(300));
+
+    let started = Instant::now();
+    let mut reader = BufReader::new(&stream);
+    let mut done = false;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) => {
+                if line.trim().starts_with("{\"done\":") {
+                    done = true;
+                }
+            }
+            Err(_) => break, // reset also counts as eviction
+        }
+    }
+    assert!(
+        started.elapsed() < Duration::from_secs(10),
+        "evicted drain should end promptly"
+    );
+    assert!(!done, "evicted drain must not end with a done line");
+    shutdown(port, stop, handle);
+}

@@ -622,3 +622,241 @@ fn watcher_sees_engine_driven_transition_without_polling() {
     let _ = TcpStream::connect(("127.0.0.1", port));
     handle.join().unwrap();
 }
+
+// ---------------------------------------------------------------- cursors
+
+fn env_body(name: &str) -> String {
+    format!(r#"{{"name":"{name}","image":"i","dependencies":[]}}"#)
+}
+
+fn env_names(j: &Json) -> Vec<String> {
+    j.at(&["result", "items"])
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|i| i.as_str().unwrap().to_string())
+        .collect()
+}
+
+/// Tentpole acceptance: a cursor walk never skips or duplicates a
+/// surviving key, even with deletes of already-returned keys and
+/// inserts on both sides of the cursor position between pages.
+/// Environments key by name, which makes the expected page boundaries
+/// exact.
+#[test]
+fn cursor_walk_is_stable_under_interleaved_writes() {
+    let r = api(Arc::new(MetaStore::in_memory()));
+    for i in 0..9 {
+        let (st, j) = dispatch(
+            &r,
+            "POST",
+            "/api/v2/environment",
+            &env_body(&format!("e0{i}")),
+        );
+        assert_eq!(st, 200, "{j:?}");
+    }
+
+    let (st, j) = dispatch(&r, "GET", "/api/v2/environment?limit=3", "");
+    assert_eq!(st, 200, "{j:?}");
+    assert_eq!(env_names(&j), ["e00", "e01", "e02"]);
+    let cur1 = j
+        .at(&["result", "next_cursor"])
+        .and_then(Json::as_str)
+        .expect("full page mints a continuation cursor")
+        .to_string();
+
+    // interleave: delete an already-returned key, insert one key on
+    // each side of the cursor position ("e015" < "e02" < "e025")
+    let (st, _) =
+        dispatch(&r, "DELETE", "/api/v2/environment/e01", "");
+    assert_eq!(st, 200);
+    for name in ["e015", "e025"] {
+        let (st, _) = dispatch(
+            &r,
+            "POST",
+            "/api/v2/environment",
+            &env_body(name),
+        );
+        assert_eq!(st, 200);
+    }
+
+    // page 2 seeks past the cursor key: the insert behind the cursor
+    // is not revisited, the insert ahead of it appears in order
+    let (st, j) = dispatch(
+        &r,
+        "GET",
+        &format!("/api/v2/environment?limit=3&cursor={cur1}"),
+        "",
+    );
+    assert_eq!(st, 200, "{j:?}");
+    assert_eq!(env_names(&j), ["e025", "e03", "e04"]);
+    let cur2 = j
+        .at(&["result", "next_cursor"])
+        .and_then(Json::as_str)
+        .unwrap()
+        .to_string();
+
+    let (st, j) = dispatch(
+        &r,
+        "GET",
+        &format!("/api/v2/environment?limit=3&cursor={cur2}"),
+        "",
+    );
+    assert_eq!(st, 200, "{j:?}");
+    assert_eq!(env_names(&j), ["e05", "e06", "e07"]);
+    let cur3 = j
+        .at(&["result", "next_cursor"])
+        .and_then(Json::as_str)
+        .unwrap()
+        .to_string();
+
+    // final page is short, so no further cursor is minted
+    let (st, j) = dispatch(
+        &r,
+        "GET",
+        &format!("/api/v2/environment?limit=3&cursor={cur3}"),
+        "",
+    );
+    assert_eq!(st, 200, "{j:?}");
+    assert_eq!(env_names(&j), ["e08"]);
+    assert!(j.at(&["result", "next_cursor"]).is_none());
+}
+
+#[test]
+fn cursor_misuse_answers_410_or_400() {
+    use submarine::httpd::cursor::{fingerprint, Cursor};
+    let r = api(Arc::new(MetaStore::in_memory()));
+    for name in ["a", "b", "c"] {
+        let (st, _) = dispatch(
+            &r,
+            "POST",
+            "/api/v2/environment",
+            &env_body(name),
+        );
+        assert_eq!(st, 200);
+    }
+    let (st, j) =
+        dispatch(&r, "GET", "/api/v2/environment?limit=2", "");
+    assert_eq!(st, 200);
+    let cur = j
+        .at(&["result", "next_cursor"])
+        .and_then(Json::as_str)
+        .unwrap()
+        .to_string();
+
+    // reusing a cursor under a different query shape: the fingerprint
+    // no longer matches, and the answer is the watch-style 410 relist
+    // signal, not silently wrong pages
+    let (st, j) = dispatch(
+        &r,
+        "GET",
+        &format!("/api/v2/environment?limit=2&label=x=1&cursor={cur}"),
+        "",
+    );
+    assert_eq!(st, 410, "{j:?}");
+
+    // an anchor revision from the future (server restarted and lost
+    // revisions) is also 410: the walk cannot be consistent
+    let ahead = Cursor {
+        rev: u64::MAX,
+        fingerprint: fingerprint(&["environment"]),
+        last_key: "a".into(),
+    }
+    .encode();
+    let (st, j) = dispatch(
+        &r,
+        "GET",
+        &format!("/api/v2/environment?limit=2&cursor={ahead}"),
+        "",
+    );
+    assert_eq!(st, 410, "{j:?}");
+
+    // malformed tokens were never minted by this server: 400, because
+    // answering 410 would send well-behaved clients into relist loops
+    let (st, _) = dispatch(
+        &r,
+        "GET",
+        "/api/v2/environment?limit=2&cursor=garbage",
+        "",
+    );
+    assert_eq!(st, 400);
+
+    // cursor and offset are rival positioning schemes
+    let (st, _) = dispatch(
+        &r,
+        "GET",
+        &format!("/api/v2/environment?offset=1&cursor={cur}"),
+        "",
+    );
+    assert_eq!(st, 400);
+
+    // limit=0 historically meant "unlimited"; it is now rejected so
+    // the cap is explicit
+    let (st, _) =
+        dispatch(&r, "GET", "/api/v2/environment?limit=0", "");
+    assert_eq!(st, 400);
+
+    // oversized limits clamp to the documented max instead of erroring
+    let (st, _) =
+        dispatch(&r, "GET", "/api/v2/environment?limit=999999", "");
+    assert_eq!(st, 200);
+}
+
+/// SDK drain helpers against a live server: `list_all` follows
+/// `next_cursor` to the end, and `stream_list` consumes the chunked
+/// `?stream=1` drain — both must agree with each other and with the
+/// seeded keys.
+#[test]
+fn sdk_list_all_and_stream_list_drain_everything() {
+    let services = services_over(Arc::new(MetaStore::in_memory()));
+    let server = Arc::new(
+        Server::bind_with_config(services, 0, &ApiConfig::default())
+            .unwrap(),
+    );
+    let port = server.port();
+    let stop = server.stopper();
+    let handle = Arc::clone(&server).serve_background();
+
+    let client = ExperimentClient::v2("127.0.0.1", port);
+    let mut want: Vec<String> = Vec::new();
+    for i in 0..23 {
+        let name = format!("env-{i:03}");
+        let body = Json::parse(&env_body(&name)).unwrap();
+        let (st, _) = client
+            .request("POST", "/api/v2/environment", Some(&body))
+            .unwrap();
+        assert_eq!(st, 200);
+        want.push(name);
+    }
+
+    // cursor drain: page size 5 forces 5 pages; items arrive in key
+    // order with nothing lost or repeated
+    let (items, rv) =
+        client.list_all("environment", "", 5).unwrap();
+    let got: Vec<String> = items
+        .iter()
+        .map(|i| i.as_str().unwrap().to_string())
+        .collect();
+    assert_eq!(got, want);
+    assert!(rv > 0);
+
+    // streamed drain: one request, every key exactly once, and the
+    // done line's count agrees
+    let mut streamed: Vec<String> = Vec::new();
+    let done = client
+        .stream_list("environment", "", &mut |key, _obj| {
+            streamed.push(key.to_string());
+        })
+        .unwrap();
+    assert_eq!(streamed, want);
+    assert_eq!(
+        done.num_field("count"),
+        Some(want.len() as f64),
+        "{done:?}"
+    );
+    assert!(done.num_field("resource_version").unwrap_or(0.0) > 0.0);
+
+    stop.store(true, Ordering::Relaxed);
+    let _ = TcpStream::connect(("127.0.0.1", port));
+    handle.join().unwrap();
+}
